@@ -1,0 +1,202 @@
+//! END-TO-END DRIVER: the full disaggregated CogSim system on one
+//! real workload — all three layers composing.
+//!
+//! What runs:
+//! 1. the **server** (Layer 3): PJRT engine with 8 per-material Hermit
+//!    instances + MIR, dynamic batcher, threaded TCP front-end — the
+//!    DataScale-node role;
+//! 2. N **MPI-rank clients** over real TCP replaying a Hydra
+//!    in-the-loop trace (2–3 inferences/zone across 8 materials) in
+//!    latency mode, then a throughput phase with pipelined submission
+//!    (mini-batch n+1 in flight before n returns, §V-A);
+//! 3. reports per-rank latency (mean/p95/p99), end-to-end throughput,
+//!    batching effectiveness, and the local-vs-remote overhead — the
+//!    paper's Figs. 15/16 measured on *this* testbed.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! cargo run --release --example disaggregated_serving -- [ranks] [timesteps] [zones]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use cogsim_disagg::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Registry};
+use cogsim_disagg::metrics::LatencyRecorder;
+use cogsim_disagg::net::{Client, Server};
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+use cogsim_disagg::util::stats;
+use cogsim_disagg::workload::HydraWorkload;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let ranks: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let timesteps: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let zones: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(400);
+
+    // ---------------- server side (the "DataScale node") ----------------
+    println!("[server] loading artifacts + compiling executables ...");
+    let engine = Engine::load("artifacts", Some(&["hermit", "mir"]))?;
+    let mut registry = Registry::new();
+    registry.register_materials("hermit", 8);
+    registry.register("mir", "mir");
+    let coordinator = Arc::new(Coordinator::start(
+        engine,
+        registry,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                target_batch: 256,
+                max_wait: std::time::Duration::from_micros(300),
+            deferred_max_wait: std::time::Duration::from_millis(50),
+                max_batch: 1024,
+            },
+            workers: 1,
+        },
+    )?);
+    let server = Server::serve(Arc::clone(&coordinator), "127.0.0.1:0")?;
+    let addr = server.addr();
+    println!("[server] serving 9 instances on {addr}");
+
+    // --------------- phase 1: in-the-loop latency (per rank) ------------
+    let workload = HydraWorkload {
+        ranks,
+        zones_per_rank: zones,
+        materials: 8,
+        inferences_per_zone: (2, 3),
+        seed: 42,
+    };
+    println!(
+        "\n[phase 1] {ranks} ranks x {timesteps} timesteps x {zones} zones (latency mode)"
+    );
+    let t_phase1 = Instant::now();
+    let handles: Vec<_> = (0..ranks)
+        .map(|rank| {
+            let workload = workload.clone();
+            std::thread::spawn(move || -> Result<(LatencyRecorder, usize)> {
+                let client = Client::connect(addr)?;
+                let mut rng = Rng::new(1000 + rank as u64);
+                let mut latency = LatencyRecorder::new();
+                let mut samples = 0usize;
+                for t in 0..timesteps {
+                    for req in workload
+                        .timestep(t)
+                        .into_iter()
+                        .filter(|r| r.rank == rank)
+                    {
+                        let x = rng.normal_vec(req.samples * 42);
+                        let t0 = Instant::now();
+                        let rows = client.infer(&req.model, req.samples, &x)?;
+                        latency.record(t0.elapsed());
+                        assert_eq!(rows.len(), req.samples * 30);
+                        samples += req.samples;
+                    }
+                }
+                Ok((latency, samples))
+            })
+        })
+        .collect();
+
+    let mut total_samples = 0usize;
+    let mut rank_means = Vec::new();
+    for (rank, h) in handles.into_iter().enumerate() {
+        let (latency, samples) = h.join().expect("rank thread")?;
+        total_samples += samples;
+        rank_means.push(latency.mean_s());
+        println!(
+            "  rank {rank}: {samples} samples, request latency mean {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
+            latency.mean_s() * 1e3,
+            latency.p95_s() * 1e3,
+            latency.p99_s() * 1e3,
+        );
+    }
+    let wall1 = t_phase1.elapsed();
+    println!(
+        "  phase-1 aggregate: {total_samples} samples in {wall1:?} ({:.0} samples/s), \
+         mean-of-rank-means {:.3} ms",
+        total_samples as f64 / wall1.as_secs_f64(),
+        stats::mean(&rank_means) * 1e3
+    );
+
+    // --------------- phase 2: pipelined throughput ----------------------
+    println!("\n[phase 2] pipelined throughput (mini-batch 256, depth 4, 1 rank/conn)");
+    let t_phase2 = Instant::now();
+    let per_rank: Vec<_> = (0..ranks)
+        .map(|rank| {
+            std::thread::spawn(move || -> Result<usize> {
+                let client = Client::connect(addr)?;
+                let mut rng = Rng::new(2000 + rank as u64);
+                let batch = 256usize;
+                let n_batches = 24usize;
+                let payload = rng.normal_vec(batch * 42);
+                let model = format!("hermit/mat{}", rank % 8);
+
+                let mut inflight = std::collections::VecDeque::new();
+                for _ in 0..n_batches {
+                    while inflight.len() >= 4 {
+                        let rx = inflight.pop_front().unwrap();
+                        client.recv(rx)?;
+                    }
+                    inflight.push_back(client.submit(&model, batch, &payload)?);
+                }
+                for rx in inflight {
+                    client.recv(rx)?;
+                }
+                Ok(batch * n_batches)
+            })
+        })
+        .collect();
+    let phase2_samples: usize = per_rank
+        .into_iter()
+        .map(|h| h.join().expect("rank thread").expect("phase 2"))
+        .sum();
+    let wall2 = t_phase2.elapsed();
+    println!(
+        "  {} samples in {:?} -> {:.0} samples/s aggregate",
+        phase2_samples,
+        wall2,
+        phase2_samples as f64 / wall2.as_secs_f64()
+    );
+
+    // --------------- local vs remote overhead (Fig. 15 analogue) --------
+    println!("\n[phase 3] local vs remote single-request overhead (batch 4)");
+    let client = Client::connect(addr)?;
+    let mut rng = Rng::new(3000);
+    let x = rng.normal_vec(4 * 42);
+    let reps = 50;
+    // warm-up
+    for _ in 0..10 {
+        let _ = client.infer("hermit/mat0", 4, &x)?;
+        let _ = coordinator.infer("hermit/mat0", x.clone())?;
+    }
+    let mut remote = LatencyRecorder::new();
+    let mut local = LatencyRecorder::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let _ = client.infer("hermit/mat0", 4, &x)?;
+        remote.record(t0.elapsed());
+        let t1 = Instant::now();
+        let _ = coordinator.infer("hermit/mat0", x.clone())?;
+        local.record(t1.elapsed());
+    }
+    println!(
+        "  local (in-process)  mean {:.3} ms   remote (TCP) mean {:.3} ms   overhead {:.3} ms",
+        local.mean_s() * 1e3,
+        remote.mean_s() * 1e3,
+        (remote.mean_s() - local.mean_s()) * 1e3
+    );
+
+    // --------------- server-side accounting ----------------------------
+    let stats = &coordinator.stats;
+    use std::sync::atomic::Ordering::Relaxed;
+    println!("\n--- server stats ---");
+    println!("requests        {}", stats.requests.load(Relaxed));
+    println!("engine batches  {} ({:.1} samples/batch)", stats.batches.load(Relaxed), stats.samples_per_batch());
+    println!("errors          {}", stats.errors.load(Relaxed));
+    println!("connections     {}", server.connections_accepted());
+
+    server.shutdown();
+    Ok(())
+}

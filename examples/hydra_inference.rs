@@ -1,0 +1,110 @@
+//! In-the-loop Hermit inference, Hydra-style (paper §IV-A).
+//!
+//! Simulates the paper's workload: several MPI ranks, each owning
+//! zones spread over 5–10 materials, issuing 2–3 inference requests
+//! per zone per timestep against per-material Hermit instances.  The
+//! coordinator batches per material; we report per-timestep latency,
+//! batching effectiveness, and whether inference would bottleneck the
+//! simulation loop.
+//!
+//! ```bash
+//! cargo run --release --example hydra_inference -- [timesteps] [zones_per_rank]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use cogsim_disagg::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Registry};
+use cogsim_disagg::metrics::LatencyRecorder;
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+use cogsim_disagg::workload::HydraWorkload;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let timesteps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(5);
+    let zones: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(500);
+
+    let workload = HydraWorkload {
+        ranks: 4,
+        zones_per_rank: zones,
+        materials: 8,
+        inferences_per_zone: (2, 3),
+        seed: 42,
+    };
+    println!(
+        "hydra workload: {} ranks x {} zones, {} materials, ~{} inferences/timestep",
+        workload.ranks,
+        workload.zones_per_rank,
+        workload.materials,
+        workload.expected_inferences_per_timestep()
+    );
+
+    let engine = Engine::load("artifacts", Some(&["hermit"]))?;
+    let mut registry = Registry::new();
+    registry.register_materials("hermit", workload.materials);
+    let coordinator = Arc::new(Coordinator::start(
+        engine,
+        registry,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                target_batch: 256,
+                max_wait: std::time::Duration::from_micros(300),
+            deferred_max_wait: std::time::Duration::from_millis(50),
+                max_batch: 1024,
+            },
+            workers: 1,
+        },
+    )?);
+
+    let mut rng = Rng::new(7);
+    let mut request_latency = LatencyRecorder::new();
+
+    for t in 0..timesteps {
+        let t_start = Instant::now();
+        let requests = workload.timestep(t);
+        let mut total_samples = 0usize;
+
+        // Every (rank, material) issues its request concurrently —
+        // this is what the batcher sees from real MPI ranks.
+        let pending: Vec<_> = requests
+            .iter()
+            .map(|req| {
+                total_samples += req.samples;
+                let x = rng.normal_vec(req.samples * 42);
+                let submitted = Instant::now();
+                let rx = coordinator.submit(&req.model, x).unwrap();
+                (req, submitted, rx)
+            })
+            .collect();
+
+        for (req, submitted, rx) in pending {
+            let rows = rx.recv().expect("coordinator alive").expect("inference ok");
+            assert_eq!(rows.len(), req.samples * 30);
+            request_latency.record(submitted.elapsed());
+        }
+
+        let wall = t_start.elapsed();
+        println!(
+            "timestep {t}: {} requests, {total_samples} samples in {:?} ({:.0} samples/s)",
+            requests.len(),
+            wall,
+            total_samples as f64 / wall.as_secs_f64()
+        );
+    }
+
+    let stats = &coordinator.stats;
+    let requests = stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    let batches = stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    let padded = stats.padded_samples.load(std::sync::atomic::Ordering::Relaxed);
+    let samples = stats.samples.load(std::sync::atomic::Ordering::Relaxed);
+    println!("\n--- summary ---");
+    println!("requests               {requests}");
+    println!("engine batches         {batches} ({:.1} samples/batch)", stats.samples_per_batch());
+    println!("padding overhead       {:.1}%", 100.0 * padded as f64 / samples as f64);
+    println!("request latency mean   {:.3} ms", request_latency.mean_s() * 1e3);
+    println!("request latency p95    {:.3} ms", request_latency.p95_s() * 1e3);
+    println!("request latency p99    {:.3} ms", request_latency.p99_s() * 1e3);
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load the AOT artifacts, run one Hermit and one MIR
+//! inference through the PJRT engine, print the timing breakdown.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. Load the engine: compiles every (model, batch) artifact once
+    //    and uploads the weights to device buffers.
+    let engine = Engine::load("artifacts", None)?;
+    println!("loaded models: {:?}", engine.model_names());
+
+    // 2. Hermit: a 42-value NLTE state vector -> 30 opacity bins.
+    let mut rng = Rng::new(0);
+    let x = rng.normal_vec(42);
+    let (opacities, timing) = engine.execute("hermit", 1, &x)?;
+    println!("\nhermit batch=1:");
+    println!("  output ({} bins): {:?} ...", opacities.len(), &opacities[..4]);
+    println!(
+        "  upload {:?}  execute {:?}  fetch {:?}",
+        timing.upload, timing.execute, timing.fetch
+    );
+
+    // 3. MIR: a 48x48 volume-fraction image -> reconstructed interface.
+    let image: Vec<f32> = (0..48 * 48)
+        .map(|i| {
+            let (y, x) = (i / 48, i % 48);
+            if y + x > 48 { 1.0 } else { 0.0 } // diagonal material interface
+        })
+        .collect();
+    let (recon, timing) = engine.execute("mir", 1, &image)?;
+    let mean: f32 = recon.iter().sum::<f32>() / recon.len() as f32;
+    println!("\nmir batch=1:");
+    println!("  reconstruction mean volume fraction: {mean:.3}");
+    println!(
+        "  upload {:?}  execute {:?}  fetch {:?}",
+        timing.upload, timing.execute, timing.fetch
+    );
+
+    // 4. Batched execution pads to the compiled ladder automatically.
+    let xs = rng.normal_vec(5 * 42);
+    let (out, _) = engine.execute_padded("hermit", &xs)?;
+    println!("\nhermit batch=5 (padded to ladder): {} rows", out.len() / 30);
+    println!(
+        "  padding waste at n=5: {:.0}%",
+        engine.padding_waste("hermit", 5)? * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,8 @@
+"""Build-time Python for the cogsim-disagg reproduction.
+
+This package is only ever executed by ``make artifacts`` (and pytest).
+It authors the surrogate models (Layer 2, JAX) and their compute
+kernels (Layer 1, Pallas), and AOT-lowers every (model, batch-size)
+pair to HLO text that the Rust coordinator loads via PJRT.  Nothing in
+here runs on the request path.
+"""

@@ -1,0 +1,148 @@
+"""AOT lowering: every (model, mini-batch) pair -> HLO text + weights.
+
+Run once by ``make artifacts``.  Outputs, per model:
+
+  artifacts/<model>_b<batch>.hlo.txt   -- HLO text, signature
+                                          (x, p000, p001, ...) -> (y,)
+  artifacts/<model>.weights.npz        -- named parameter arrays
+  artifacts/manifest.json              -- shapes, dtypes, batch ladder,
+                                          param order, sha256 of weights
+
+The weights are *arguments*, not baked constants: the Rust runtime
+uploads them to device buffers once (``PjRtBuffer::read_npz_by_name``)
+and reuses them across every request via ``execute_b`` -- Python never
+appears on the request path.
+
+The mini-batch ladder mirrors the paper's tested sizes (powers of 4
+from 1) capped per model: the CPU PJRT backend executes these for real,
+so MIR's conv stack gets a shorter ladder than Hermit's FC stack.  The
+device performance models in rust/src/devices cover the paper's full
+1..32K range analytically.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hlo import lowered_to_hlo_text
+from .models import REGISTRY
+from .models.common import flat_arrays
+
+# Default mini-batch ladders (real CPU execution -- keep tractable).
+# Hermit gets a dense powers-of-2 ladder: the Hydra request mix is
+# dominated by small odd-sized requests and the ablation bench showed
+# a powers-of-4 ladder wasting 69% of executed samples as padding vs
+# 38% for powers-of-2 (EXPERIMENTS.md SPerf).  Executables are cheap
+# (one PJRT compile each at build time).
+DEFAULT_BATCHES = {
+    "hermit": [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024],
+    "mir": [1, 4, 16, 64],
+    "mir_noln": [1, 4, 16, 64],
+}
+
+DTYPE = "f32"  # CPU PJRT has no fp16 kernels; see DESIGN.md substitutions.
+
+
+def _sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def lower_model(model_name: str, batches, out_dir: Path, seed: int = 0) -> dict:
+    """Lower one model at every batch size; write artifacts; return its
+    manifest entry."""
+    model = REGISTRY[model_name]
+    params = model.init_params(seed)
+    flat = flat_arrays(params)
+
+    # ---- weights.npz (arrays keyed by calling-convention name) ----
+    weights_path = out_dir / f"{model_name}.weights.npz"
+    np.savez(weights_path, **{name: arr for name, arr in params})
+
+    entry = {
+        "input_shape": list(model.INPUT_SHAPE),
+        "output_shape": list(model.OUTPUT_SHAPE),
+        "dtype": DTYPE,
+        "params": [
+            {"name": name, "shape": list(arr.shape)} for name, arr in params
+        ],
+        "weights_file": weights_path.name,
+        "weights_sha256": _sha256(weights_path),
+        "batches": [],
+        "param_count": int(sum(a.size for a in flat)),
+        "selfcheck": None,  # filled in below
+    }
+
+    # ---- golden self-check vectors (cross-language numerics test) ----
+    # rust/tests/runtime.rs executes the artifacts and compares against
+    # these exact outputs computed by the Python (Pallas) forward.
+    check_batch = min(batches)
+    x_check = model.sample_input(check_batch, seed=2024)
+    y_check = np.asarray(
+        model.forward(jnp.asarray(x_check), *[jnp.asarray(a) for a in flat])
+    )
+    check_path = out_dir / f"{model_name}.selfcheck.npz"
+    np.savez(check_path, x=x_check, y=y_check)
+    entry["selfcheck"] = {"file": check_path.name, "batch": check_batch}
+
+    param_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in flat]
+    for batch in batches:
+        t0 = time.time()
+        x_spec = jax.ShapeDtypeStruct((batch, *model.INPUT_SHAPE), jnp.float32)
+        lowered = jax.jit(model.forward).lower(x_spec, *param_specs)
+        text = lowered_to_hlo_text(lowered)
+        hlo_path = out_dir / f"{model_name}_b{batch}.hlo.txt"
+        hlo_path.write_text(text)
+        entry["batches"].append(
+            {"batch": batch, "hlo_file": hlo_path.name, "hlo_bytes": len(text)}
+        )
+        print(
+            f"  {model_name} b={batch:<5d} -> {hlo_path.name} "
+            f"({len(text) / 1e6:.1f} MB, {time.time() - t0:.1f}s)",
+            file=sys.stderr,
+        )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--models", nargs="*", default=list(DEFAULT_BATCHES), help="models to lower"
+    )
+    ap.add_argument(
+        "--max-batch", type=int, default=None,
+        help="truncate every ladder at this mini-batch size",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"dtype": DTYPE, "seed": args.seed, "models": {}}
+    for name in args.models:
+        batches = DEFAULT_BATCHES[name]
+        if args.max_batch is not None:
+            batches = [b for b in batches if b <= args.max_batch]
+        print(f"lowering {name} at batches {batches}", file=sys.stderr)
+        manifest["models"][name] = lower_model(name, batches, out_dir, args.seed)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""StableHLO -> HLO-text conversion helper.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format
+between the JAX compile path and the Rust runtime: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects with
+``proto.id() <= INT_MAX``.  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+from jax._src.lib import xla_client as xc
+
+
+def lowered_to_hlo_text(lowered) -> str:
+    """Convert ``jax.jit(f).lower(...)`` output to XLA HLO text.
+
+    Lowered with ``return_tuple=True`` -- the Rust side unwraps the
+    1-tuple with ``Literal::to_tuple1``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

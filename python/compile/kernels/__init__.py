@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the CogSim surrogate models.
+
+Every kernel here is written for TPU-style hardware (VMEM scratchpad +
+MXU systolic array) but lowered with ``interpret=True`` so the
+resulting HLO runs on any PJRT backend, including the Rust CPU client
+on the request path.  See DESIGN.md §Hardware-Adaptation for how the
+paper's GPU/RDU concepts (TensorRT fusion, CUDA Graphs launch elision,
+RDU micro-batches) map onto these kernels.
+
+Kernels:
+  - :mod:`fused_linear`  -- matmul + bias + activation in one kernel.
+  - :mod:`djinn_block`   -- a fused *chain* of fully-connected layers
+    (one HBM round-trip for the whole Hermit DJINN trunk).
+  - :mod:`conv2d`        -- 3x3 SAME convolution as 9 shifted MXU matmuls.
+  - :mod:`layernorm`     -- row-parallel two-pass layer normalisation.
+  - :mod:`ref`           -- pure-jnp oracles used by pytest.
+"""
+
+from . import conv2d, djinn_block, fused_linear, layernorm, ref  # noqa: F401

@@ -1,0 +1,135 @@
+"""Fused chain of fully-connected layers in one Pallas kernel.
+
+The Hermit model's DJINN trunk is 11 narrow-to-wide FC layers.  Run
+naively ("naive PyTorch" in the paper), every layer is a separate
+kernel launch and every intermediate activation round-trips through
+HBM -- exactly the overhead that makes small-mini-batch latency
+CPU-bound in the paper's Figure 4.  This kernel is the CUDA-Graphs +
+TensorRT analogue for TPU hardware: the *entire chain* is one kernel,
+weights are staged into VMEM once per batch tile, and intermediate
+activations live only in registers/VMEM.
+
+VMEM budget: the sum of all DJINN weights is ~2.8 M f32 = 11.2 MB,
+which fits a 16 MB VMEM alongside one (8..128, 2050) activation tile.
+The chain builder checks the estimate and refuses to fuse beyond the
+budget (callers then fall back to per-layer ``fused_linear``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import _apply_activation, _ceil_to, pick_block_m
+
+# Conservative single-core VMEM budget (bytes) used by the fusion
+# planner.  Real TPUv4 VMEM is 16 MiB/core; we leave headroom for the
+# activation tile and double-buffering.
+VMEM_BUDGET_BYTES = 14 * 1024 * 1024
+
+
+def _chain_kernel(*refs, n_layers: int, activations: Tuple[Optional[str], ...]):
+    """Kernel body: h = act_i(h @ w_i + b_i) for i in 0..n_layers.
+
+    ``refs`` layout: (x_ref, w_0, b_0, w_1, b_1, ..., o_ref).
+    All weight blocks are whole arrays (the chain is only fused when
+    they fit VMEM together); only the batch dimension is tiled.
+    """
+    x_ref = refs[0]
+    o_ref = refs[-1]
+    h = x_ref[...]
+    for i in range(n_layers):
+        w = refs[1 + 2 * i][...]
+        b = refs[2 + 2 * i][...]
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32)
+        h = _apply_activation(h + b[None, :], activations[i])
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+def chain_vmem_bytes(
+    widths: Sequence[int], *, block_m: int, dtype_bytes: int = 4
+) -> int:
+    """VMEM estimate for a fused chain: all weights + widest activation."""
+    weights = sum(widths[i] * widths[i + 1] + widths[i + 1] for i in range(len(widths) - 1))
+    act = block_m * max(widths)
+    return dtype_bytes * (weights + 2 * act)
+
+
+def fits_vmem(widths: Sequence[int], *, block_m: int = 128) -> bool:
+    """True when the whole chain can be fused within the VMEM budget."""
+    return chain_vmem_bytes(widths, block_m=block_m) <= VMEM_BUDGET_BYTES
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activations", "block_m", "interpret")
+)
+def djinn_chain(
+    x: jnp.ndarray,
+    params: Tuple[jnp.ndarray, ...],
+    *,
+    activations: Tuple[Optional[str], ...],
+    block_m: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Run a fused FC chain ``act_i(h @ w_i + b_i)`` over batch tiles.
+
+    Args:
+      x: ``(M, d0)`` input activations.
+      params: flat tuple ``(w_0, b_0, w_1, b_1, ...)`` with
+        ``w_i: (d_i, d_{i+1})``, ``b_i: (d_{i+1},)``.
+      activations: one name (or None) per layer.
+      block_m: batch tile (default MXU-aligned via ``pick_block_m``).
+      interpret: keep True for CPU-PJRT (see module docstring).
+
+    Returns:
+      ``(M, d_last)`` output.
+    """
+    if len(params) % 2 != 0:
+        raise ValueError("params must be (w, b) pairs")
+    n_layers = len(params) // 2
+    if len(activations) != n_layers:
+        raise ValueError(f"{len(activations)} activations for {n_layers} layers")
+
+    widths = [x.shape[1]]
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        if w.shape[0] != widths[-1]:
+            raise ValueError(f"layer {i}: w{w.shape} does not chain from {widths[-1]}")
+        if b.shape != (w.shape[1],):
+            raise ValueError(f"layer {i}: bias {b.shape} != ({w.shape[1]},)")
+        widths.append(w.shape[1])
+
+    m = x.shape[0]
+    bm = block_m or pick_block_m(m)
+    if not fits_vmem(widths, block_m=bm):
+        raise ValueError(
+            f"chain widths {widths} exceed VMEM budget "
+            f"({chain_vmem_bytes(widths, block_m=bm)} > {VMEM_BUDGET_BYTES} B); "
+            "split the chain or use per-layer fused_linear"
+        )
+
+    mp = _ceil_to(m, bm)
+    x_p = jnp.pad(x, ((0, mp - m), (0, 0)))
+
+    in_specs = [pl.BlockSpec((bm, widths[0]), lambda i: (i, 0))]
+    for li in range(n_layers):
+        d_in, d_out = widths[li], widths[li + 1]
+        # Whole-array blocks: weights are broadcast to every batch tile.
+        in_specs.append(pl.BlockSpec((d_in, d_out), lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec((d_out,), lambda i: (0,)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _chain_kernel, n_layers=n_layers, activations=tuple(activations)
+        ),
+        grid=(mp // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, widths[-1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, widths[-1]), x.dtype),
+        interpret=interpret,
+    )(x_p, *params)
+    return out[:m]

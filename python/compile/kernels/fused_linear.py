@@ -1,0 +1,150 @@
+"""Fused linear layer: ``act(x @ w + b)`` as a single Pallas kernel.
+
+This is the TensorRT-fusion analogue from the paper (DESIGN.md
+§Hardware-Adaptation): on the GPU the vendor toolchain fuses the GEMM,
+bias-add and activation into one kernel to cut launch overhead; here
+the fusion is explicit.  The kernel is tiled for the MXU: the grid
+walks (M/bm, N/bn) output tiles, the full contraction dimension K is
+staged into VMEM per tile (all CogSim-surrogate layers have K <= 4608,
+i.e. <= 2.4 MB per 128-wide tile at f32 -- well inside VMEM).
+
+VMEM footprint per grid step (f32):
+    bm*K (activations) + K*bn (weights) + bm*bn (output tile)
+For the largest Hermit layer (K=1024, N=2050, bm=bn=128):
+    128*1024*4 + 1024*128*4 + 128*128*4  ~= 1.1 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes.  The systolic array is 128x128; the
+# VPU lane structure is (8, 128).  bm is allowed to shrink to 8 for
+# latency-bound small batches (the paper's key regime).
+BM_DEFAULT = 128
+BN_DEFAULT = 128
+
+
+def _apply_activation(h: jnp.ndarray, activation: Optional[str]) -> jnp.ndarray:
+    """Apply a named activation inside the kernel (fused epilogue)."""
+    if activation is None or activation == "linear":
+        return h
+    if activation == "relu":
+        return jnp.maximum(h, 0.0)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(h)
+    if activation == "tanh":
+        return jnp.tanh(h)
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: Optional[str]):
+    """One (bm, bn) output tile: full-K matmul + bias + activation.
+
+    ``preferred_element_type=f32`` keeps the MXU accumulator at full
+    precision even when inputs are bf16 (the paper runs BF16 on the
+    RDU and FP16 on the GPUs; accumulation is always f32).
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = _apply_activation(acc, activation).astype(o_ref.dtype)
+
+
+def _ceil_to(value: int, multiple: int) -> int:
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def pick_block_m(m: int) -> int:
+    """Batch-block size: the exact row count, capped at 128.
+
+    §Perf note: an earlier revision rounded up to the 8-row VPU
+    sublane, but on the CPU-PJRT execution path the padded rows are
+    *real* compute — at batch 1 that made the whole Hermit forward
+    1.74x slower than the pure-jnp reference (EXPERIMENTS.md §Perf).
+    Exact-size blocks recover parity; on a real TPU, Mosaic pads
+    sub-sublane tiles in-register, so nothing is lost there either.
+    """
+    return min(BM_DEFAULT, max(1, m))
+
+
+def pick_block_n(n: int) -> int:
+    """Output-feature block: multiple of the 128 MXU lane, capped at 128."""
+    return min(BN_DEFAULT, _ceil_to(n, 128))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "interpret")
+)
+def fused_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    activation: Optional[str] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Compute ``act(x @ w + b)`` with a tiled Pallas kernel.
+
+    Args:
+      x: ``(M, K)`` activations.
+      w: ``(K, N)`` weights.
+      b: ``(N,)`` bias.
+      activation: one of ``None | "relu" | "sigmoid" | "tanh"``.
+      block_m / block_n: tile overrides (defaults are MXU-aligned).
+      interpret: must stay True for CPU-PJRT execution (Mosaic
+        custom-calls cannot run on the CPU plugin).
+
+    Returns:
+      ``(M, N)`` output, same dtype as ``x``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x{x.shape} @ w{w.shape}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+    if m == 0:
+        # A fully-drained batcher can legally issue an empty batch.
+        return jnp.zeros((0, n), dtype=x.dtype)
+
+    bm = block_m or pick_block_m(m)
+    bn = block_n or pick_block_n(n)
+
+    # Zero-pad M and N up to tile multiples; K is staged whole.  The
+    # zero rows/cols are sliced off below, so they never alias output.
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    x_p = jnp.pad(x, ((0, mp - m), (0, 0)))
+    w_p = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    b_p = jnp.pad(b, (0, np_ - n))
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_fused_linear_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(x_p, w_p, b_p)
+    return out[:m, :n]
+
+
+def vmem_bytes(m: int, k: int, n: int, *, dtype_bytes: int = 4,
+               block_m: Optional[int] = None, block_n: Optional[int] = None) -> int:
+    """Estimated VMEM footprint of one grid step (for §Perf reporting)."""
+    bm = block_m or pick_block_m(m)
+    bn = block_n or pick_block_n(n)
+    return dtype_bytes * (bm * k + k * bn + bm * bn + bn)

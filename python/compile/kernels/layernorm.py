@@ -1,0 +1,78 @@
+"""Layer normalisation over the trailing axis as a Pallas kernel.
+
+The MIR model applies layernorm after every convolution -- the paper's
+§IV-C notes batchnorm was *replaced* by layernorm specifically to map
+the model onto the dataflow architecture (batchnorm's cross-batch
+reduction breaks a spatial pipeline; layernorm reduces within a single
+sample).  The same property makes it trivially tileable here: the grid
+walks batch-row tiles and each tile normalises independently.
+
+Figure 10's TensorRT penalty comes from torch2trt's *unoptimised*
+layernorm; fusing scale/shift into the normalisation pass is exactly
+what this kernel does.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import _ceil_to, pick_block_m
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    """Normalise each row of the (bm, D) tile over D, then scale+shift."""
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    norm = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (norm * g_ref[...][None, :] + b_ref[...][None, :]).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_m", "interpret"))
+def layernorm(
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    eps: float = 1e-5,
+    block_m: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """LayerNorm over the last axis of a 2-D or N-D input.
+
+    N-D inputs are flattened to ``(rows, D)``, normalised over ``D``
+    (the channel axis for NHWC conv outputs), and reshaped back.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    if gamma.shape != (d,) or beta.shape != (d,):
+        raise ValueError(f"gamma/beta must be ({d},); got {gamma.shape}/{beta.shape}")
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+
+    bm = block_m or pick_block_m(rows)
+    mp = _ceil_to(rows, bm)
+    x_p = jnp.pad(x2, ((0, mp - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, d), x.dtype),
+        interpret=interpret,
+    )(x_p, gamma, beta)
+    return out[:rows].reshape(orig_shape)

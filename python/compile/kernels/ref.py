@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for pytest: each kernel in this package must
+match its oracle to ~1e-5 (f32).  They are also the "naive" compute
+path used to cross-check the full models (models/*.py build both a
+Pallas forward and a ref forward from the same parameters).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_activation(h: jnp.ndarray, activation: Optional[str]) -> jnp.ndarray:
+    if activation is None or activation == "linear":
+        return h
+    if activation == "relu":
+        return jnp.maximum(h, 0.0)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(h)
+    if activation == "tanh":
+        return jnp.tanh(h)
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+def linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    activation: Optional[str] = None,
+) -> jnp.ndarray:
+    """Oracle for :func:`fused_linear.fused_linear`."""
+    return apply_activation(x @ w + b[None, :], activation)
+
+
+def chain(
+    x: jnp.ndarray,
+    params: Sequence[jnp.ndarray],
+    activations: Sequence[Optional[str]],
+) -> jnp.ndarray:
+    """Oracle for :func:`djinn_block.djinn_chain`."""
+    h = x
+    for i, act in enumerate(activations):
+        h = linear(h, params[2 * i], params[2 * i + 1], act)
+    return h
+
+
+def conv2d_same(
+    x: jnp.ndarray,
+    kernel: jnp.ndarray,
+    bias: jnp.ndarray,
+    activation: Optional[str] = None,
+) -> jnp.ndarray:
+    """Oracle for :func:`conv2d.conv2d_same` via lax.conv_general_dilated."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        kernel,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return apply_activation(out + bias[None, None, None, :], activation)
+
+
+def conv2d_transpose_tied(
+    x: jnp.ndarray,
+    kernel: jnp.ndarray,
+    bias: jnp.ndarray,
+    stride: int = 2,
+    activation: Optional[str] = None,
+) -> jnp.ndarray:
+    """Oracle for tied transposed conv: zero-stuff to (sH, sW), then a
+    SAME conv with the spatially-flipped, channel-swapped kernel.
+
+    The dilation is written with jnp indexing while the convolution
+    uses lax -- so the Pallas conv kernel is still checked against an
+    independent implementation.  ``kernel`` is the encoder's
+    (3,3,Cin,Cout); the transpose maps Cout -> Cin, matching
+    :func:`conv2d.conv2d_transpose_tied`.
+    """
+    b_, h, w, c = x.shape
+    if stride > 1:
+        dil = jnp.zeros((b_, h * stride, w * stride, c), dtype=x.dtype)
+        dil = dil.at[:, ::stride, ::stride, :].set(x)
+    else:
+        dil = x
+    k_t = jnp.flip(kernel, axis=(0, 1)).transpose(0, 1, 3, 2)
+    return conv2d_same(dil, k_t, bias, activation)
+
+
+def layernorm(
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Oracle for :func:`layernorm.layernorm` (normalise trailing axis)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for :func:`conv2d.maxpool2x2` via reduce_window."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

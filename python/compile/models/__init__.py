@@ -1,0 +1,18 @@
+"""Layer-2 JAX surrogate models (Hermit + MIR).
+
+Each model module exposes:
+  - ``init_params(seed) -> list[(name, np.ndarray)]`` deterministic,
+    ordered parameter list (the order is the AOT calling convention).
+  - ``forward(x, *flat) -> y``   Pallas-kernel forward (what we ship).
+  - ``forward_ref(x, *flat) -> y`` pure-jnp oracle (pytest only).
+  - ``INPUT_SHAPE / OUTPUT_SHAPE`` per-sample shapes.
+  - ``PARAM_COUNT_RANGE`` the paper's stated parameter budget.
+"""
+
+from . import hermit, mir  # noqa: F401
+
+REGISTRY = {
+    "hermit": hermit,
+    "mir": mir,
+    "mir_noln": mir.NOLN,
+}

@@ -1,0 +1,62 @@
+"""Shared parameter-initialisation utilities for the surrogate models.
+
+Parameters are created as *numpy* arrays (not jax) so aot.py can write
+them straight into ``artifacts/<model>.weights.npz`` with deterministic
+bytes; jax only sees them as traced arguments.  Names are zero-padded
+(``p000``, ``p001`` ...) so lexicographic order == calling convention,
+which is what the Rust loader relies on (`read_npz_by_name`).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+Param = Tuple[str, np.ndarray]
+
+
+class ParamBuilder:
+    """Accumulates named parameters in calling-convention order."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self.params: List[Param] = []
+
+    def _add(self, tag: str, arr: np.ndarray) -> np.ndarray:
+        name = f"p{len(self.params):03d}_{tag}"
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        self.params.append((name, arr))
+        return arr
+
+    def dense(self, tag: str, d_in: int, d_out: int) -> Tuple[np.ndarray, np.ndarray]:
+        """He-initialised (w, b) pair for a relu FC layer."""
+        scale = np.sqrt(2.0 / d_in)
+        w = self._add(f"{tag}_w", self.rng.normal(0.0, scale, size=(d_in, d_out)))
+        b = self._add(f"{tag}_b", np.zeros((d_out,)))
+        return w, b
+
+    def conv(self, tag: str, c_in: int, c_out: int, k: int = 3) -> Tuple[np.ndarray, np.ndarray]:
+        """He-initialised (kernel, bias) for a k x k conv."""
+        scale = np.sqrt(2.0 / (k * k * c_in))
+        w = self._add(f"{tag}_k", self.rng.normal(0.0, scale, size=(k, k, c_in, c_out)))
+        b = self._add(f"{tag}_b", np.zeros((c_out,)))
+        return w, b
+
+    def bias(self, tag: str, d: int) -> np.ndarray:
+        """A stand-alone bias (used by tied-weight decoder layers)."""
+        return self._add(f"{tag}_b", np.zeros((d,)))
+
+    def ln(self, tag: str, d: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Layernorm (gamma, beta)."""
+        g = self._add(f"{tag}_g", np.ones((d,)))
+        b = self._add(f"{tag}_b", np.zeros((d,)))
+        return g, b
+
+
+def param_count(params: List[Param]) -> int:
+    return sum(int(a.size) for _, a in params)
+
+
+def flat_arrays(params: List[Param]) -> List[np.ndarray]:
+    return [a for _, a in params]

@@ -1,0 +1,109 @@
+"""Hermit: the NLTE collisional-radiative atomic-physics surrogate.
+
+Paper §IV-A (after Kluth et al., "Deep learning for NLTE spectral
+opacities", PoP 2020): 21 fully-connected layers in three
+sub-structures --
+
+  * encoder : 4 layers, max hidden width 19, input 42 values;
+  * DJINN   : 11 layers widening to a maximum of 2050 neurons
+              (decision-tree-initialised trunk);
+  * decoder : 6 layers, max hidden width 27.
+
+Total ~2.8 M parameters.  ``tests/test_hermit.py`` asserts the layer
+count (21) and the parameter budget.
+
+The Pallas forward runs each sub-structure as ONE fused
+:func:`djinn_block.djinn_chain` kernel (three kernel launches per
+inference instead of 21 + 21 bias/activation launches -- the TPU-shaped
+version of the paper's TensorRT+CUDA-Graphs configuration).  The DJINN
+trunk's fused VMEM footprint is ~11.2 MB of weights + one activation
+tile, inside the 14 MB planner budget (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import djinn_block, ref
+from .common import Param, ParamBuilder
+
+INPUT_SIZE = 42
+OUTPUT_SIZE = 30  # spectral-opacity output bins
+
+# Layer widths per sub-structure (21 weight layers total: 4 + 11 + 6).
+ENCODER_WIDTHS = [INPUT_SIZE, 19, 17, 13, 10]
+DJINN_WIDTHS = [10, 12, 16, 24, 32, 48, 64, 128, 256, 512, 1024, 2050]
+DECODER_WIDTHS = [2050, 27, 27, 27, 27, 27, OUTPUT_SIZE]
+
+INPUT_SHAPE = (INPUT_SIZE,)
+OUTPUT_SHAPE = (OUTPUT_SIZE,)
+PARAM_COUNT_RANGE = (2_700_000, 3_000_000)  # "2.8M parameters"
+N_LAYERS = (len(ENCODER_WIDTHS) - 1) + (len(DJINN_WIDTHS) - 1) + (len(DECODER_WIDTHS) - 1)
+
+# relu everywhere except the final (regression) layer.
+_ENC_ACTS = ("relu",) * 4
+_DJINN_ACTS = ("relu",) * 11
+_DEC_ACTS = ("relu",) * 5 + (None,)
+
+
+def init_params(seed: int = 0) -> List[Param]:
+    """Deterministic He-initialised parameters, AOT calling order."""
+    pb = ParamBuilder(seed)
+    for i in range(len(ENCODER_WIDTHS) - 1):
+        pb.dense(f"enc{i}", ENCODER_WIDTHS[i], ENCODER_WIDTHS[i + 1])
+    for i in range(len(DJINN_WIDTHS) - 1):
+        pb.dense(f"djinn{i}", DJINN_WIDTHS[i], DJINN_WIDTHS[i + 1])
+    for i in range(len(DECODER_WIDTHS) - 1):
+        pb.dense(f"dec{i}", DECODER_WIDTHS[i], DECODER_WIDTHS[i + 1])
+    return pb.params
+
+
+def _split(flat: Tuple[jnp.ndarray, ...]) -> Tuple[tuple, tuple, tuple]:
+    """Split the flat (w, b, w, b, ...) list into the 3 sub-structures."""
+    n_enc = 2 * (len(ENCODER_WIDTHS) - 1)
+    n_djinn = 2 * (len(DJINN_WIDTHS) - 1)
+    enc = tuple(flat[:n_enc])
+    djinn = tuple(flat[n_enc : n_enc + n_djinn])
+    dec = tuple(flat[n_enc + n_djinn :])
+    return enc, djinn, dec
+
+
+_ALL_ACTS = _ENC_ACTS + _DJINN_ACTS + _DEC_ACTS
+_ALL_WIDTHS = ENCODER_WIDTHS + DJINN_WIDTHS[1:] + DECODER_WIDTHS[1:]
+
+
+def forward(x: jnp.ndarray, *flat: jnp.ndarray) -> jnp.ndarray:
+    """Pallas forward.
+
+    When the whole 21-layer parameter set fits the VMEM budget
+    (~13.6 MB — it does), the model runs as ONE fused-chain kernel:
+    a single launch per mini-batch tile, weights staged through VMEM
+    once, zero HBM round-trips between layers.  §Perf measured this
+    11 % faster than the three-chain split at batch 256 and equal to
+    the pure-jnp reference across the ladder.  Falls back to one
+    chain per sub-structure if a future variant outgrows VMEM.
+    """
+    if djinn_block.fits_vmem(_ALL_WIDTHS):
+        return djinn_block.djinn_chain(x, flat, activations=_ALL_ACTS)
+    enc, djinn, dec = _split(flat)
+    h = djinn_block.djinn_chain(x, enc, activations=_ENC_ACTS)
+    h = djinn_block.djinn_chain(h, djinn, activations=_DJINN_ACTS)
+    return djinn_block.djinn_chain(h, dec, activations=_DEC_ACTS)
+
+
+def forward_ref(x: jnp.ndarray, *flat: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle with identical parameters."""
+    enc, djinn, dec = _split(flat)
+    h = ref.chain(x, enc, _ENC_ACTS)
+    h = ref.chain(h, djinn, _DJINN_ACTS)
+    return ref.chain(h, dec, _DEC_ACTS)
+
+
+def sample_input(batch: int, seed: int = 1) -> np.ndarray:
+    """A synthetic NLTE state vector batch (temperature/density/field
+    features are O(1) after the usual log-normalisation)."""
+    rng = np.random.default_rng(seed)
+    return rng.normal(0.0, 1.0, size=(batch, INPUT_SIZE)).astype(np.float32)

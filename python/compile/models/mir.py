@@ -1,0 +1,186 @@
+"""MIR: the material-interface-reconstruction surrogate.
+
+Paper §IV-B: a convolutional autoencoder that reconstructs continuous
+material boundaries from per-zone volume-fraction images --
+
+  * 4 convolution layers with pooling, layernorm after every conv;
+  * 3 fully-connected layers, two of which touch 4608 neurons;
+  * transposed-convolution decoder whose weights are TIED to the
+    encoder convs (regularisation);
+  * ~700 K parameters total.
+
+§IV-C notes the model was re-shaped for the dataflow architecture
+(batchnorm -> layernorm, shrunken FC layers); we implement that final
+published shape.  Fig. 20 uses a no-layernorm variant so the model
+compiles optimally on both architectures -- exposed here as ``NOLN``.
+
+Concrete geometry (input 48x48 volume-fraction image):
+  enc: conv 1->16  +pool -> 24x24 | conv 16->32 +pool -> 12x12
+     | conv 32->64 +pool ->  6x6  | conv 64->128 (no pool)
+  flatten 6*6*128 = 4608  (the paper's FC width)
+  fc: 4608 -> 64 -> 64 -> 4608 (3 FC layers, two touching 4608)
+  dec: tied convT 128->64 (s1) | 64->32 (s2) | 32->16 (s2) | 16->1 (s2)
+  output 48x48 sigmoid (volume fraction in [0,1]).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import conv2d, fused_linear, layernorm, ref
+from .common import Param, ParamBuilder
+
+IMG = 48
+INPUT_SHAPE = (IMG, IMG, 1)
+OUTPUT_SHAPE = (IMG, IMG, 1)
+PARAM_COUNT_RANGE = (620_000, 780_000)  # "700K parameters"
+
+CHANNELS = [1, 16, 32, 64, 128]  # encoder conv channel progression
+POOLED = [True, True, True, False]  # pool after convs 1-3 only
+FLAT = 6 * 6 * 128  # == 4608, the paper's FC width
+BOTTLENECK = 64
+
+
+def init_params(seed: int = 0, *, use_layernorm: bool = True) -> List[Param]:
+    """Deterministic parameters in AOT calling order.
+
+    Order: 4x (conv k, conv b) [+ (ln g, ln b)], 3x (fc w, fc b),
+    4x decoder bias (kernels are tied to the encoder convs).
+    """
+    pb = ParamBuilder(seed)
+    for i in range(4):
+        pb.conv(f"conv{i}", CHANNELS[i], CHANNELS[i + 1])
+        if use_layernorm:
+            pb.ln(f"ln{i}", CHANNELS[i + 1])
+    pb.dense("fc0", FLAT, BOTTLENECK)
+    pb.dense("fc1", BOTTLENECK, BOTTLENECK)
+    pb.dense("fc2", BOTTLENECK, FLAT)
+    for i in reversed(range(4)):
+        pb.bias(f"dect{i}", CHANNELS[i])
+    return pb.params
+
+
+def _unpack(flat: Tuple[jnp.ndarray, ...], use_layernorm: bool):
+    """Split the flat argument list into structured pieces."""
+    i = 0
+    convs, lns = [], []
+    for _ in range(4):
+        convs.append((flat[i], flat[i + 1]))
+        i += 2
+        if use_layernorm:
+            lns.append((flat[i], flat[i + 1]))
+            i += 2
+    fcs = [(flat[i], flat[i + 1]), (flat[i + 2], flat[i + 3]), (flat[i + 4], flat[i + 5])]
+    i += 6
+    dec_biases = list(flat[i : i + 4])  # order: dect3, dect2, dect1, dect0
+    return convs, lns, fcs, dec_biases
+
+
+def _forward(
+    x: jnp.ndarray,
+    flat: Tuple[jnp.ndarray, ...],
+    *,
+    use_layernorm: bool,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    """Shared forward over the Pallas kernels or the jnp oracles."""
+    convs, lns, fcs, dec_biases = _unpack(flat, use_layernorm)
+    conv_f = conv2d.conv2d_same if use_pallas else ref.conv2d_same
+    convt_f = conv2d.conv2d_transpose_tied if use_pallas else ref.conv2d_transpose_tied
+    pool_f = conv2d.maxpool2x2 if use_pallas else ref.maxpool2x2
+    ln_f = layernorm.layernorm if use_pallas else ref.layernorm
+    lin_f = fused_linear.fused_linear if use_pallas else ref.linear
+
+    # ---- encoder ----
+    h = x
+    for i in range(4):
+        k, b = convs[i]
+        if use_pallas:
+            h = conv_f(h, k, b, activation="relu")
+        else:
+            h = conv_f(h, k, b, "relu")
+        if use_layernorm:
+            g, bb = lns[i]
+            h = ln_f(h, g, bb)
+        if POOLED[i]:
+            h = pool_f(h)
+
+    # ---- FC stack (4608 -> 64 -> 64 -> 4608) ----
+    batch = h.shape[0]
+    h = h.reshape(batch, FLAT)
+    for j, (w, b) in enumerate(fcs):
+        act = "relu"
+        if use_pallas:
+            h = lin_f(h, w, b, activation=act)
+        else:
+            h = lin_f(h, w, b, act)
+    h = h.reshape(batch, 6, 6, 128)
+
+    # ---- tied-weight transposed-conv decoder ----
+    # dec_biases order matches reversed(range(4)): conv3 first.
+    for idx, layer in enumerate(reversed(range(4))):
+        k, _ = convs[layer]
+        stride = 2 if POOLED[layer] else 1
+        act: Optional[str] = "relu" if layer != 0 else "sigmoid"
+        if use_pallas:
+            h = convt_f(h, k, dec_biases[idx], stride=stride, activation=act)
+        else:
+            h = convt_f(h, k, dec_biases[idx], stride, act)
+    return h
+
+
+def forward(x: jnp.ndarray, *flat: jnp.ndarray) -> jnp.ndarray:
+    """Pallas forward (layernorm variant)."""
+    return _forward(x, flat, use_layernorm=True, use_pallas=True)
+
+
+def forward_ref(x: jnp.ndarray, *flat: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle (layernorm variant)."""
+    return _forward(x, flat, use_layernorm=True, use_pallas=False)
+
+
+def sample_input(batch: int, seed: int = 1) -> np.ndarray:
+    """Synthetic volume-fraction images: a random half-plane interface
+    smoothed over the zone grid -- the same structure MIR sees from the
+    hydro code (mixed zones near a material boundary)."""
+    rng = np.random.default_rng(seed)
+    ys, xs = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    imgs = np.empty((batch, IMG, IMG, 1), dtype=np.float32)
+    for i in range(batch):
+        theta = rng.uniform(0, 2 * np.pi)
+        offset = rng.uniform(0.3, 0.7)
+        d = (np.cos(theta) * xs + np.sin(theta) * ys) - offset
+        imgs[i, :, :, 0] = 1.0 / (1.0 + np.exp(-d * rng.uniform(8, 24)))
+    return imgs
+
+
+class _NoLayernormVariant:
+    """Fig-20 variant: identical geometry, layernorm removed so the
+    model 'compiles optimally on both architectures' (paper §V-E)."""
+
+    __name__ = "mir_noln"
+    INPUT_SHAPE = INPUT_SHAPE
+    OUTPUT_SHAPE = OUTPUT_SHAPE
+    PARAM_COUNT_RANGE = (620_000, 780_000)
+
+    @staticmethod
+    def init_params(seed: int = 0) -> List[Param]:
+        return init_params(seed, use_layernorm=False)
+
+    @staticmethod
+    def forward(x: jnp.ndarray, *flat: jnp.ndarray) -> jnp.ndarray:
+        return _forward(x, flat, use_layernorm=False, use_pallas=True)
+
+    @staticmethod
+    def forward_ref(x: jnp.ndarray, *flat: jnp.ndarray) -> jnp.ndarray:
+        return _forward(x, flat, use_layernorm=False, use_pallas=False)
+
+    @staticmethod
+    def sample_input(batch: int, seed: int = 1) -> np.ndarray:
+        return sample_input(batch, seed)
+
+
+NOLN = _NoLayernormVariant()

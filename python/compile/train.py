@@ -1,0 +1,134 @@
+"""Train the MIR autoencoder on synthetic material interfaces.
+
+The paper's MIR model is a *trained* reconstruction network; random
+weights only validate plumbing.  This script trains it for a few
+hundred steps on the same synthetic volume-fraction interface
+distribution the workload generator emits, logs the loss curve, and
+(with ``--emit``) replaces the served weights + golden self-check so
+the Rust stack serves the trained model.
+
+Adam is implemented in-line (no optax in the build image).  Training
+differentiates the pure-jnp reference forward — it computes the same
+function as the Pallas forward (pytest asserts 1e-4 agreement), and
+lowering/serving still use the Pallas path.
+
+Usage:
+    python -m compile.train [--steps 300] [--batch 32] [--emit]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .models import mir
+from .models.common import flat_arrays
+
+
+def make_batch(rng: np.random.Generator, batch: int) -> np.ndarray:
+    """Synthetic interface images (same family as mir.sample_input)."""
+    seed = int(rng.integers(0, 2**31 - 1))
+    return mir.sample_input(batch, seed=seed)
+
+
+def loss_fn(params, x):
+    """Binary cross-entropy between reconstruction and input — the
+    natural loss for volume fractions in [0, 1]."""
+    recon = mir.forward_ref(x, *params)
+    eps = 1e-6
+    recon = jnp.clip(recon, eps, 1.0 - eps)
+    bce = -(x * jnp.log(recon) + (1.0 - x) * jnp.log(1.0 - recon))
+    return jnp.mean(bce)
+
+
+def adam_init(params):
+    return (
+        [jnp.zeros_like(p) for p in params],  # m
+        [jnp.zeros_like(p) for p in params],  # v
+    )
+
+
+@jax.jit
+def train_step(params, m, v, step, x, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x)
+    new_params, new_m, new_v = [], [], []
+    t = step + 1
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * jnp.square(g)
+        m_hat = mi / (1 - b1**t)
+        v_hat = vi / (1 - b2**t)
+        new_params.append(p - lr * m_hat / (jnp.sqrt(v_hat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, loss
+
+
+def train(steps: int = 300, batch: int = 32, seed: int = 0, log_every: int = 25):
+    """Run training; returns (trained flat params, loss curve)."""
+    rng = np.random.default_rng(seed)
+    named = mir.init_params(seed)
+    params = [jnp.asarray(a) for a in flat_arrays(named)]
+    m, v = adam_init(params)
+
+    curve = []
+    t0 = time.time()
+    for step in range(steps):
+        x = jnp.asarray(make_batch(rng, batch))
+        params, m, v, loss = train_step(params, m, v, step, x)
+        curve.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(
+                f"step {step:>4d}  bce {float(loss):.4f}  ({time.time() - t0:.1f}s)",
+                file=sys.stderr,
+            )
+    names = [n for n, _ in named]
+    return names, params, curve
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--emit",
+        action="store_true",
+        help="overwrite the served mir weights + golden self-check",
+    )
+    args = ap.parse_args()
+
+    names, params, curve = train(args.steps, args.batch, args.seed)
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    # loss curve (EXPERIMENTS.md §Training)
+    csv = "step,bce\n" + "\n".join(f"{i},{l}" for i, l in enumerate(curve))
+    (out / "mir_training_loss.csv").write_text(csv)
+    print(f"wrote {out / 'mir_training_loss.csv'}", file=sys.stderr)
+
+    np_params = [np.asarray(p) for p in params]
+    np.savez(out / "mir_trained.weights.npz", **dict(zip(names, np_params)))
+    print(f"wrote {out / 'mir_trained.weights.npz'}", file=sys.stderr)
+
+    if args.emit:
+        # serve the trained weights: weights are runtime arguments, so
+        # only the npz and the golden vectors change — no re-lowering.
+        np.savez(out / "mir.weights.npz", **dict(zip(names, np_params)))
+        x_check = mir.sample_input(1, seed=2024)
+        y_check = np.asarray(mir.forward(jnp.asarray(x_check), *params))
+        np.savez(out / "mir.selfcheck.npz", x=x_check, y=y_check)
+        print("emitted trained weights into mir.weights.npz (+selfcheck)", file=sys.stderr)
+
+    print(f"final bce: {curve[-1]:.4f} (from {curve[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Shared fixtures for the kernel/model test suite."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def assert_close(actual, expected, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(
+        np.asarray(actual), np.asarray(expected), rtol=rtol, atol=atol
+    )

@@ -1,0 +1,97 @@
+"""conv2d / transposed-conv / maxpool kernels vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conv2d as cv
+from compile.kernels import ref
+
+from .conftest import assert_close
+
+
+def _data(b, h, w, cin, cout, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, h, w, cin)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 0.3, size=(3, 3, cin, cout)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(cout,)) * 0.1, jnp.float32)
+    return x, k, bias
+
+
+@pytest.mark.parametrize(
+    "b,h,w,cin,cout",
+    [
+        (1, 48, 48, 1, 16),   # MIR first conv at batch 1
+        (2, 24, 24, 16, 32),  # MIR second conv
+        (3, 6, 6, 64, 128),   # MIR deepest conv
+        (9, 8, 8, 4, 4),      # batch not a multiple of the tile
+        (1, 4, 4, 1, 1),      # minimal
+    ],
+)
+def test_conv_shapes(b, h, w, cin, cout):
+    x, k, bias = _data(b, h, w, cin, cout, seed=b + h)
+    out = cv.conv2d_same(x, k, bias, activation="relu")
+    assert_close(out, ref.conv2d_same(x, k, bias, "relu"))
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "sigmoid"])
+def test_conv_activations(activation):
+    x, k, bias = _data(2, 8, 8, 3, 5)
+    out = cv.conv2d_same(x, k, bias, activation=activation)
+    assert_close(out, ref.conv2d_same(x, k, bias, activation))
+
+
+def test_conv_kernel_mismatch_raises():
+    x, k, bias = _data(1, 8, 8, 3, 5)
+    with pytest.raises(ValueError, match="does not match input"):
+        cv.conv2d_same(x, k[:, :, :2], bias)
+
+
+def test_conv_bias_mismatch_raises():
+    x, k, _ = _data(1, 8, 8, 3, 5)
+    with pytest.raises(ValueError, match="bias"):
+        cv.conv2d_same(x, k, jnp.zeros((4,), jnp.float32))
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_transpose_tied(stride):
+    x, k, _ = _data(2, 6, 6, 4, 8, seed=3)
+    # tied transpose maps Cout(8) back to Cin(4)
+    up = jnp.asarray(np.random.default_rng(5).normal(size=(2, 6, 6, 8)), jnp.float32)
+    bias = jnp.zeros((4,), jnp.float32)
+    out = cv.conv2d_transpose_tied(up, k, bias, stride=stride, activation="relu")
+    rout = ref.conv2d_transpose_tied(up, k, bias, stride, "relu")
+    assert out.shape == (2, 6 * stride, 6 * stride, 4)
+    assert_close(out, rout)
+
+
+def test_transpose_channel_mismatch_raises():
+    x, k, _ = _data(1, 6, 6, 4, 8)
+    bad = jnp.ones((1, 6, 6, 5), jnp.float32)
+    with pytest.raises(ValueError, match="tied kernel"):
+        cv.conv2d_transpose_tied(bad, k, jnp.zeros((4,), jnp.float32))
+
+
+def test_maxpool():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 8, 8, 5)), jnp.float32)
+    assert_close(cv.maxpool2x2(x), ref.maxpool2x2(x))
+
+
+def test_maxpool_odd_raises():
+    with pytest.raises(ValueError, match="even"):
+        cv.maxpool2x2(jnp.ones((1, 7, 8, 1), jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 10),
+    hw=st.sampled_from([4, 6, 8, 12]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+)
+def test_hypothesis_conv(b, hw, cin, cout):
+    x, k, bias = _data(b, hw, hw, cin, cout, seed=b * 13 + cin)
+    out = cv.conv2d_same(x, k, bias)
+    assert_close(out, ref.conv2d_same(x, k, bias))

@@ -1,0 +1,111 @@
+"""djinn_chain fused-chain kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import djinn_block as db
+from compile.kernels import ref
+
+from .conftest import assert_close
+
+
+def _make_chain(widths, seed=0):
+    rng = np.random.default_rng(seed)
+    params = []
+    for i in range(len(widths) - 1):
+        params.append(
+            jnp.asarray(
+                rng.normal(0, 1 / np.sqrt(widths[i]), size=(widths[i], widths[i + 1])),
+                jnp.float32,
+            )
+        )
+        params.append(jnp.asarray(rng.normal(size=(widths[i + 1],)) * 0.1, jnp.float32))
+    return tuple(params)
+
+
+def _run(m, widths, activations, seed=0):
+    rng = np.random.default_rng(seed + 99)
+    x = jnp.asarray(rng.normal(size=(m, widths[0])), jnp.float32)
+    params = _make_chain(widths, seed)
+    out = db.djinn_chain(x, params, activations=tuple(activations))
+    assert_close(out, ref.chain(x, params, activations), rtol=3e-4, atol=3e-4)
+
+
+def test_single_layer():
+    _run(4, [10, 20], ["relu"])
+
+
+def test_hermit_encoder_shape():
+    _run(1, [42, 19, 17, 13, 10], ["relu"] * 4)
+
+
+def test_hermit_decoder_shape():
+    _run(7, [2050, 27, 27, 27, 27, 27, 30], ["relu"] * 5 + [None])
+
+
+def test_hermit_djinn_trunk_batch1():
+    # The full 11-layer trunk at the paper's critical batch size.
+    _run(1, [10, 12, 16, 24, 32, 48, 64, 128, 256, 512, 1024, 2050], ["relu"] * 11)
+
+
+def test_mixed_activations():
+    _run(5, [8, 16, 8], ["tanh", "sigmoid"])
+
+
+def test_batch_tiling_boundary():
+    # 129 rows with the default 128 tile exercises the padded tail.
+    _run(129, [16, 32, 8], ["relu", None])
+
+
+def test_param_arity_validation():
+    x = jnp.ones((2, 4), jnp.float32)
+    with pytest.raises(ValueError, match=r"\(w, b\) pairs"):
+        db.djinn_chain(x, (jnp.ones((4, 4), jnp.float32),), activations=("relu",))
+
+
+def test_activation_count_validation():
+    x = jnp.ones((2, 4), jnp.float32)
+    params = _make_chain([4, 4])
+    with pytest.raises(ValueError, match="activations for"):
+        db.djinn_chain(x, params, activations=("relu", "relu"))
+
+
+def test_chain_shape_validation():
+    x = jnp.ones((2, 4), jnp.float32)
+    rng = np.random.default_rng(0)
+    params = (
+        jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+        jnp.zeros((8,), jnp.float32),
+        jnp.asarray(rng.normal(size=(9, 4)), jnp.float32),  # does not chain
+        jnp.zeros((4,), jnp.float32),
+    )
+    with pytest.raises(ValueError, match="does not chain"):
+        db.djinn_chain(x, params, activations=("relu", None))
+
+
+def test_vmem_budget_enforced():
+    # A chain too fat to fuse must be rejected, not silently spilled.
+    widths = [4096, 4096, 4096]
+    assert not db.fits_vmem(widths)
+    x = jnp.ones((2, 4096), jnp.float32)
+    params = _make_chain(widths)
+    with pytest.raises(ValueError, match="VMEM budget"):
+        db.djinn_chain(x, params, activations=("relu", None))
+
+
+def test_hermit_trunk_fits_vmem():
+    # The design claim: the whole DJINN trunk fuses within budget.
+    assert db.fits_vmem([10, 12, 16, 24, 32, 48, 64, 128, 256, 512, 1024, 2050])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    widths=st.lists(st.integers(1, 64), min_size=2, max_size=5),
+    act=st.sampled_from(["relu", "tanh", None]),
+)
+def test_hypothesis_chains(m, widths, act):
+    _run(m, widths, [act] * (len(widths) - 1), seed=sum(widths) + m)

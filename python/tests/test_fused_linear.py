@@ -1,0 +1,107 @@
+"""fused_linear kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps the (M, K, N, activation) space the CogSim models
+actually visit -- odd small batches (the latency-bound regime from the
+paper), MXU-misaligned widths, and every fused activation.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fused_linear as fl
+from compile.kernels import ref
+
+from .conftest import assert_close
+
+
+def _run(m, k, n, activation, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1 / np.sqrt(k), size=(k, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    out = fl.fused_linear(x, w, b, activation=activation)
+    assert_close(out, ref.linear(x, w, b, activation))
+    return out
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "sigmoid", "tanh"])
+def test_activations(activation):
+    _run(8, 42, 19, activation)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 42, 19),      # Hermit encoder entry at batch 1 (latency regime)
+        (1, 1024, 2050),  # Hermit's widest layer at batch 1
+        (4, 4608, 64),    # MIR FC entry
+        (64, 64, 4608),   # MIR FC exit
+        (256, 42, 19),    # batched encoder
+        (3, 7, 5),        # nothing aligned
+        (128, 128, 128),  # exactly one tile
+        (129, 128, 129),  # one row/col over a tile
+    ],
+)
+def test_shapes(m, k, n):
+    _run(m, k, n, "relu")
+
+
+def test_block_overrides():
+    _run_block = fl.fused_linear(
+        jnp.ones((10, 20), jnp.float32),
+        jnp.ones((20, 30), jnp.float32),
+        jnp.zeros((30,), jnp.float32),
+        block_m=8,
+        block_n=128,
+    )
+    assert_close(_run_block, np.full((10, 30), 20.0))
+
+
+def test_shape_mismatch_raises():
+    x = jnp.ones((4, 5), jnp.float32)
+    w = jnp.ones((6, 7), jnp.float32)
+    b = jnp.zeros((7,), jnp.float32)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        fl.fused_linear(x, w, b)
+
+
+def test_bias_mismatch_raises():
+    x = jnp.ones((4, 5), jnp.float32)
+    w = jnp.ones((5, 7), jnp.float32)
+    with pytest.raises(ValueError, match="bias shape"):
+        fl.fused_linear(x, w, jnp.zeros((6,), jnp.float32))
+
+
+def test_dtype_preserved():
+    out = _run(5, 11, 13, "relu")
+    assert out.dtype == jnp.float32
+
+
+def test_zero_batch_edgecase():
+    # M=0 is legal for a drained batcher; result must be (0, N).
+    x = jnp.zeros((0, 8), jnp.float32)
+    w = jnp.ones((8, 3), jnp.float32)
+    b = jnp.zeros((3,), jnp.float32)
+    out = fl.fused_linear(x, w, b)
+    assert out.shape == (0, 3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 96),
+    n=st.integers(1, 160),
+    activation=st.sampled_from([None, "relu", "sigmoid", "tanh"]),
+)
+def test_hypothesis_sweep(m, k, n, activation):
+    _run(m, k, n, activation, seed=m * 7 + k * 3 + n)
+
+
+def test_vmem_estimate_within_budget():
+    # The largest Hermit layer tile must fit VMEM comfortably.
+    assert fl.vmem_bytes(128, 1024, 2050) < 4 * 1024 * 1024
+    # And the MIR FC layers.
+    assert fl.vmem_bytes(128, 4608, 64) < 8 * 1024 * 1024

@@ -1,0 +1,64 @@
+"""layernorm kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import layernorm as ln
+from compile.kernels import ref
+
+from .conftest import assert_close
+
+
+def _data(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(2.0, 3.0, size=shape), jnp.float32)
+    g = jnp.asarray(rng.normal(1.0, 0.2, size=(shape[-1],)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(shape[-1],)) * 0.5, jnp.float32)
+    return x, g, b
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [
+        (1, 16),            # single row
+        (7, 128),           # MXU-aligned channels
+        (4, 24, 24, 16),    # MIR post-conv NHWC
+        (2, 6, 6, 128),     # MIR deepest feature map
+        (130, 5),           # batch crosses the 128 tile
+    ],
+)
+def test_shapes(shape):
+    x, g, b = _data(shape, seed=sum(shape))
+    assert_close(ln.layernorm(x, g, b), ref.layernorm(x, g, b))
+
+
+def test_normalisation_property():
+    # With gamma=1, beta=0 each row must be ~zero-mean unit-variance.
+    x, _, _ = _data((32, 64), seed=9)
+    out = ln.layernorm(x, jnp.ones((64,)), jnp.zeros((64,)))
+    assert np.allclose(np.mean(out, axis=-1), 0.0, atol=1e-5)
+    assert np.allclose(np.std(out, axis=-1), 1.0, atol=1e-3)
+
+
+def test_constant_row_stability():
+    # A constant row has zero variance; eps must keep it finite.
+    x = jnp.full((3, 10), 5.0, jnp.float32)
+    out = ln.layernorm(x, jnp.ones((10,)), jnp.zeros((10,)))
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert_close(out, np.zeros((3, 10)), atol=1e-3)
+
+
+def test_param_shape_validation():
+    x = jnp.ones((2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="gamma/beta"):
+        ln.layernorm(x, jnp.ones((7,)), jnp.zeros((8,)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 64), d=st.integers(2, 96))
+def test_hypothesis_sweep(rows, d):
+    x, g, b = _data((rows, d), seed=rows * 31 + d)
+    assert_close(ln.layernorm(x, g, b), ref.layernorm(x, g, b))

@@ -1,0 +1,129 @@
+"""Hermit + MIR model-level checks: paper geometry, Pallas vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import REGISTRY, hermit, mir
+from compile.models.common import flat_arrays, param_count
+
+from .conftest import assert_close
+
+
+def _flat(model, seed=0):
+    return [jnp.asarray(a) for a in flat_arrays(model.init_params(seed))]
+
+
+# ---------------------------------------------------------------- hermit
+class TestHermit:
+    def test_layer_count_matches_paper(self):
+        # "consists of 21 fully connected layers across 3 sub-structures"
+        assert hermit.N_LAYERS == 21
+
+    def test_substructure_geometry(self):
+        # encoder: 4 layers, max hidden width 19
+        assert len(hermit.ENCODER_WIDTHS) - 1 == 4
+        assert max(hermit.ENCODER_WIDTHS[1:]) == 19
+        # DJINN: 11 layers, max width 2050
+        assert len(hermit.DJINN_WIDTHS) - 1 == 11
+        assert max(hermit.DJINN_WIDTHS) == 2050
+        # decoder: 6 layers, max hidden width 27
+        assert len(hermit.DECODER_WIDTHS) - 1 == 6
+        assert max(hermit.DECODER_WIDTHS[1:-1]) == 27
+        # input: 42 values per sample
+        assert hermit.INPUT_SIZE == 42
+
+    def test_param_budget(self):
+        n = param_count(hermit.init_params(0))
+        lo, hi = hermit.PARAM_COUNT_RANGE
+        assert lo <= n <= hi, f"{n} outside paper budget (~2.8M)"
+
+    def test_param_init_deterministic(self):
+        a = hermit.init_params(0)
+        b = hermit.init_params(0)
+        for (na, pa), (nb, pb) in zip(a, b):
+            assert na == nb
+            np.testing.assert_array_equal(pa, pb)
+
+    @pytest.mark.parametrize("batch", [1, 4, 16])
+    def test_forward_matches_ref(self, batch):
+        flat = _flat(hermit)
+        x = jnp.asarray(hermit.sample_input(batch))
+        assert_close(
+            hermit.forward(x, *flat),
+            hermit.forward_ref(x, *flat),
+            rtol=3e-4,
+            atol=3e-4,
+        )
+
+    def test_output_shape(self):
+        flat = _flat(hermit)
+        x = jnp.asarray(hermit.sample_input(3))
+        assert hermit.forward(x, *flat).shape == (3, hermit.OUTPUT_SIZE)
+
+    def test_forward_deterministic(self):
+        flat = _flat(hermit)
+        x = jnp.asarray(hermit.sample_input(2))
+        np.testing.assert_array_equal(
+            hermit.forward(x, *flat), hermit.forward(x, *flat)
+        )
+
+
+# ------------------------------------------------------------------- mir
+class TestMIR:
+    def test_param_budget(self):
+        n = param_count(mir.init_params(0))
+        lo, hi = mir.PARAM_COUNT_RANGE
+        assert lo <= n <= hi, f"{n} outside paper budget (~700K)"
+
+    def test_fc_width_matches_paper(self):
+        # "3 fully connected layers, two of which with 4608 neurons each"
+        assert mir.FLAT == 4608
+
+    def test_conv_count(self):
+        # "4 convolution layers with pooling, layernorm after every conv"
+        assert len(mir.CHANNELS) - 1 == 4
+
+    @pytest.mark.parametrize("batch", [1, 3])
+    def test_forward_matches_ref(self, batch):
+        flat = _flat(mir)
+        x = jnp.asarray(mir.sample_input(batch))
+        assert_close(
+            mir.forward(x, *flat), mir.forward_ref(x, *flat), rtol=3e-4, atol=3e-4
+        )
+
+    def test_autoencoder_shape_roundtrip(self):
+        flat = _flat(mir)
+        x = jnp.asarray(mir.sample_input(2))
+        y = mir.forward(x, *flat)
+        assert y.shape == x.shape
+
+    def test_output_is_volume_fraction(self):
+        # sigmoid output: every zone prediction in [0, 1]
+        flat = _flat(mir)
+        y = np.asarray(mir.forward(jnp.asarray(mir.sample_input(2)), *flat))
+        assert y.min() >= 0.0 and y.max() <= 1.0
+
+    def test_noln_variant_matches_ref(self):
+        flat = _flat(mir.NOLN)
+        x = jnp.asarray(mir.sample_input(2))
+        assert_close(
+            mir.NOLN.forward(x, *flat),
+            mir.NOLN.forward_ref(x, *flat),
+            rtol=3e-4,
+            atol=3e-4,
+        )
+
+    def test_noln_has_fewer_params(self):
+        assert param_count(mir.NOLN.init_params(0)) < param_count(mir.init_params(0))
+
+    def test_sample_input_is_volume_fraction(self):
+        x = mir.sample_input(4)
+        assert x.shape == (4, mir.IMG, mir.IMG, 1)
+        assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_registry_complete():
+    assert set(REGISTRY) == {"hermit", "mir", "mir_noln"}
+    for name, model in REGISTRY.items():
+        assert hasattr(model, "forward") and hasattr(model, "init_params"), name

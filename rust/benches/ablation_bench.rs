@@ -1,0 +1,146 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Batcher policy** (target batch × deadline) on the measured
+//!    CPU stack: in-the-loop request latency vs engine batches — the
+//!    latency/efficiency trade the paper's small-batch regime forces.
+//! 2. **Padding ladder**: request-size distribution vs padding waste
+//!    for different compiled-batch ladders.
+//! 3. **RDU micro-batch policy**: swept-optimal micro vs fixed-micro
+//!    heuristics on the calibrated model (what Fig. 11/12's sweep
+//!    buys over naive policies).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cogsim_disagg::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Registry};
+use cogsim_disagg::devices::profiles;
+use cogsim_disagg::metrics::LatencyRecorder;
+use cogsim_disagg::rdu::{RduApi, RduModel};
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+use cogsim_disagg::workload::HydraWorkload;
+
+fn main() {
+    ablation_rdu_micro_policy();
+    ablation_padding_ladder();
+    ablation_batcher_policy();
+}
+
+/// 3. micro-batch policy on the calibrated RDU model (no hardware
+/// needed — pure model evaluation).
+fn ablation_rdu_micro_policy() {
+    println!("== ablation: RDU micro-batch policy (Hermit, 1 RDU, C++ opt) ==");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>14}",
+        "mini", "swept (ms)", "micro=1 (ms)", "micro=mini", "micro=64"
+    );
+    let m = RduModel::new(profiles::hermit(), 4, RduApi::CppOptimized);
+    for mini in [64usize, 1024, 8192, 32768] {
+        let swept = m.latency_best_s(mini) * 1e3;
+        let one = m.latency_s(mini, 1) * 1e3;
+        let full = m.latency_s(mini, mini) * 1e3;
+        let fixed = m.latency_s(mini, 64.min(mini)) * 1e3;
+        println!("{mini:>10} {swept:>14.3} {one:>14.3} {full:>14.3} {fixed:>14.3}");
+    }
+    println!();
+}
+
+/// 2. padding waste vs ladder shape for the Hydra request-size mix.
+fn ablation_padding_ladder() {
+    println!("== ablation: compiled-batch ladder vs padding waste ==");
+    let ladders: [(&str, Vec<usize>); 3] = [
+        ("powers of 4 (1,4,16,64,256,1024)", vec![1, 4, 16, 64, 256, 1024]),
+        ("powers of 2 (1..1024)", vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]),
+        ("single 1024", vec![1024]),
+    ];
+    // Hydra request sizes: per-(rank, material) samples
+    let w = HydraWorkload::default();
+    let sizes: Vec<usize> = (0..5).flat_map(|t| w.timestep(t)).map(|r| r.samples).collect();
+
+    for (name, ladder) in &ladders {
+        let mut executed = 0usize;
+        let mut real = 0usize;
+        for &n in &sizes {
+            let mut left = n;
+            let max = *ladder.last().unwrap();
+            while left > 0 {
+                let chunk = left.min(max);
+                let slot = ladder.iter().copied().find(|&b| b >= chunk).unwrap_or(max);
+                executed += slot;
+                real += chunk;
+                left -= chunk;
+            }
+        }
+        println!(
+            "  {name:<38} waste {:>5.1}%  ({} compiled variants)",
+            100.0 * (1.0 - real as f64 / executed as f64),
+            ladder.len()
+        );
+    }
+    println!();
+}
+
+/// 1. batcher policy on the real engine (needs artifacts).
+fn ablation_batcher_policy() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts/ — skipping batcher-policy ablation");
+        return;
+    }
+    println!("== ablation: batcher policy (measured, hermit, 64 concurrent 2-sample reqs) ==");
+    println!(
+        "{:>28} {:>12} {:>12} {:>10}",
+        "policy", "mean (ms)", "p95 (ms)", "batches"
+    );
+    for (label, target, wait_us) in [
+        ("target 16, wait 50us", 16usize, 50u64),
+        ("target 64, wait 200us", 64, 200),
+        ("target 256, wait 300us", 256, 300),
+        ("target 256, wait 2ms", 256, 2000),
+        ("no batching (target 1)", 1, 0),
+    ] {
+        let engine = Engine::load(&dir, Some(&["hermit"])).unwrap();
+        let mut registry = Registry::new();
+        registry.register_materials("hermit", 1);
+        let c = Arc::new(
+            Coordinator::start(
+                engine,
+                registry,
+                CoordinatorConfig {
+                    batcher: BatcherConfig {
+                        target_batch: target,
+                        max_wait: Duration::from_micros(wait_us),
+                        deferred_max_wait: Duration::from_millis(20),
+                        max_batch: 1024,
+                    },
+                    workers: 1,
+                },
+            )
+            .unwrap(),
+        );
+        let mut rng = Rng::new(0);
+        // warm
+        for _ in 0..5 {
+            let _ = c.infer("hermit/mat0", rng.normal_vec(2 * 42)).unwrap();
+        }
+        let mut lat = LatencyRecorder::new();
+        for _round in 0..6 {
+            let pending: Vec<_> = (0..64)
+                .map(|_| {
+                    let x = rng.normal_vec(2 * 42);
+                    (Instant::now(), c.submit("hermit/mat0", x).unwrap())
+                })
+                .collect();
+            for (t0, rx) in pending {
+                rx.recv().unwrap().unwrap();
+                lat.record(t0.elapsed());
+            }
+        }
+        let batches = c.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "{label:>28} {:>12.3} {:>12.3} {batches:>10}",
+            lat.mean_s() * 1e3,
+            lat.p95_s() * 1e3
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! Coordinator hot-path micro-benchmarks (the §Perf L3 targets):
+//!
+//! * wire-protocol encode/decode bandwidth,
+//! * dynamic-batcher enqueue/drain cost,
+//! * end-to-end TCP loopback request latency vs in-process submit
+//!   (the coordinator + transport overhead on top of PJRT execute).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cogsim_disagg::coordinator::batcher::{BatcherConfig, DynamicBatcher, PendingRequest, Priority};
+use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
+use cogsim_disagg::net::protocol::{self, Request};
+use cogsim_disagg::net::{Client, Server};
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::bench::Bencher;
+use cogsim_disagg::util::rng::Rng;
+
+fn main() {
+    let bencher = Bencher::default();
+    let mut rng = Rng::new(0);
+
+    // ---------------- protocol codec ----------------
+    println!("== wire protocol ==");
+    for &n in &[4usize, 256, 16384] {
+        let payload = rng.normal_vec(n * 42);
+        let req = Request {
+            id: 7,
+            model: "hermit/mat0".into(),
+            priority: 0,
+            n_samples: n as u32,
+            payload: payload.clone(),
+        };
+        let bytes = protocol::encode_request(&req);
+        let mb = bytes.len() as f64 / 1e6;
+        let enc = bencher.run(&format!("encode_request b={n}"), || {
+            let _ = std::hint::black_box(protocol::encode_request(&req));
+        });
+        println!("{enc}   -> {:>8.0} MB/s", mb / enc.mean_secs());
+        let dec = bencher.run(&format!("decode_request b={n}"), || {
+            let _ = std::hint::black_box(
+                protocol::read_request(&mut &bytes[..]).unwrap().unwrap(),
+            );
+        });
+        println!("{dec}   -> {:>8.0} MB/s", mb / dec.mean_secs());
+    }
+
+    // ---------------- batcher ----------------
+    println!("\n== dynamic batcher ==");
+    let r = bencher.run("enqueue+drain 64 reqs x 4 samples", || {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 256,
+            max_wait: Duration::ZERO,
+            deferred_max_wait: std::time::Duration::from_millis(50),
+            max_batch: 1024,
+        });
+        for id in 0..64u64 {
+            b.enqueue(
+                "m",
+                PendingRequest { id, input: vec![0.0; 4 * 42], samples: 4, arrived: t0, priority: Priority::Critical },
+            );
+        }
+        while !b.drain_ready(t0).is_empty() {}
+    });
+    println!("{r}");
+
+    // ---------------- end-to-end ----------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts/ — skipping end-to-end benches");
+        return;
+    }
+    println!("\n== end-to-end (hermit, warm) ==");
+    let engine = Engine::load(&dir, Some(&["hermit"])).expect("engine");
+    let mut registry = Registry::new();
+    registry.register_materials("hermit", 8);
+    let coordinator = Arc::new(
+        Coordinator::start(engine, registry, CoordinatorConfig::default()).unwrap(),
+    );
+    let server = Server::serve(Arc::clone(&coordinator), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+
+    for &batch in &[1usize, 4, 64, 256] {
+        let x = rng.normal_vec(batch * 42);
+        // warm-up: 10 mini-batches (paper protocol)
+        for _ in 0..10 {
+            let _ = client.infer("hermit/mat0", batch, &x).unwrap();
+        }
+        let local = bencher.run(&format!("in-process submit b={batch}"), || {
+            let _ = coordinator.infer("hermit/mat0", x.clone()).unwrap();
+        });
+        println!("{local}");
+        let remote = bencher.run(&format!("TCP loopback infer  b={batch}"), || {
+            let _ = client.infer("hermit/mat0", batch, &x).unwrap();
+        });
+        println!(
+            "{remote}   (+{:.1}% vs in-process)",
+            100.0 * (remote.mean_secs() - local.mean_secs()) / local.mean_secs()
+        );
+    }
+    server.shutdown();
+}

@@ -1,0 +1,64 @@
+//! Measured engine performance on THIS testbed (CPU PJRT): latency +
+//! throughput per (model, mini-batch) following the paper's protocol
+//! (§V-A: 10-mini-batch warm-up, mean across mini-batches).
+//!
+//! These are the "this-testbed" numbers recorded in EXPERIMENTS.md —
+//! the absolute values live on a CPU, so they are compared against
+//! the pure-jnp reference and the coordinator overhead, not against
+//! the paper's A100/RDU numbers (those come from the calibrated
+//! models in `cargo bench --bench figures_bench`).
+
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::bench::Bencher;
+use cogsim_disagg::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts/ — run `make artifacts` first; skipping");
+        return;
+    }
+    let engine = Engine::load(&dir, None).expect("engine");
+    let bencher = Bencher::default();
+    let mut rng = Rng::new(0);
+
+    println!("== engine execute() latency/throughput (CPU PJRT testbed) ==");
+    for model in engine.model_names() {
+        let spec = engine.spec(&model).unwrap().clone();
+        for batch in spec.batch_ladder() {
+            let x = rng.normal_vec(batch * spec.input_elems());
+            let r = bencher.run(&format!("{model} b={batch}"), || {
+                let _ = engine.execute(&model, batch, &x).unwrap();
+            });
+            println!(
+                "{r}   -> {:>12.0} samples/s",
+                r.throughput(batch)
+            );
+        }
+    }
+
+    println!("\n== execute() phase breakdown (hermit, warm) ==");
+    for batch in engine.spec("hermit").unwrap().batch_ladder() {
+        let x = rng.normal_vec(batch * 42);
+        // warm
+        for _ in 0..5 {
+            let _ = engine.execute("hermit", batch, &x).unwrap();
+        }
+        let mut up = std::time::Duration::ZERO;
+        let mut ex = std::time::Duration::ZERO;
+        let mut fe = std::time::Duration::ZERO;
+        let n = 20;
+        for _ in 0..n {
+            let (_, t) = engine.execute("hermit", batch, &x).unwrap();
+            up += t.upload;
+            ex += t.execute;
+            fe += t.fetch;
+        }
+        println!(
+            "b={batch:<6} upload {:>10.3?}  execute {:>10.3?}  fetch {:>10.3?}",
+            up / n,
+            ex / n,
+            fe / n
+        );
+    }
+}

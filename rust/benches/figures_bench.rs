@@ -1,0 +1,31 @@
+//! The paper-figure regeneration harness as a bench target: rebuilds
+//! every evaluation figure (4–20) from the calibrated device models
+//! and prints the series — `cargo bench --bench figures_bench` is the
+//! one-command reproduction of the paper's evaluation section.
+//!
+//! CSVs additionally land in `results/` (same as `repro repro all`).
+
+use cogsim_disagg::harness::{run_figure, FIGURES};
+
+fn main() {
+    std::fs::create_dir_all("results").ok();
+    let t0 = std::time::Instant::now();
+    for id in FIGURES {
+        let fig = run_figure(id).expect(id);
+        println!("================ {} — {}", fig.id, fig.caption);
+        for (i, table) in fig.tables.iter().enumerate() {
+            println!("{}", table.render());
+            let suffix = if fig.tables.len() > 1 {
+                format!("{}_{}", fig.id, (b'a' + i as u8) as char)
+            } else {
+                fig.id.to_string()
+            };
+            std::fs::write(format!("results/{suffix}.csv"), table.to_csv()).ok();
+        }
+    }
+    println!(
+        "regenerated {} figures in {:?} (CSVs in results/)",
+        FIGURES.len(),
+        t0.elapsed()
+    );
+}

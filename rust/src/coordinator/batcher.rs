@@ -1,0 +1,418 @@
+//! Dynamic batching for the in-the-loop regime.
+//!
+//! The paper's workload grain is tiny: each (rank, material) pair
+//! contributes a handful of samples per timestep, and latency budgets
+//! are tight because inference sits on the simulation's critical path
+//! (§IV).  The batcher coalesces concurrent requests *per instance*
+//! under two triggers:
+//!
+//! * **size**: a queue reaching `target_batch` samples is ready
+//!   immediately;
+//! * **deadline**: otherwise a queue becomes ready `max_wait` after
+//!   its oldest request arrived (bounded added latency).
+//!
+//! This is pure data-structure logic — no threads, no clocks — so it
+//! is exhaustively testable; [`super::core`] adds the time source and
+//! worker threads around it.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Request urgency class (paper §II-B, Fig. 1).
+///
+/// * [`Priority::Critical`] — **in-the-loop**: the simulation's
+///   timestep is blocked on the answer; tight deadline.
+/// * [`Priority::Deferred`] — **on-the-loop / around-the-loop**:
+///   "updating these models is not urgent" — the result is consumed
+///   several timesteps later, so these may wait much longer for
+///   co-batching and never pre-empt critical traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    #[default]
+    Critical,
+    Deferred,
+}
+
+/// One queued request: samples for one instance plus the demux key.
+#[derive(Debug)]
+pub struct PendingRequest {
+    /// Opaque id the caller uses to match the response.
+    pub id: u64,
+    /// Flattened f32 input, `samples × input_elems`.
+    pub input: Vec<f32>,
+    /// Number of samples in `input`.
+    pub samples: usize,
+    /// Arrival time (deadline bookkeeping).
+    pub arrived: Instant,
+    /// Urgency class (in-the-loop vs on-the-loop).
+    pub priority: Priority,
+}
+
+/// A ready-to-execute batch for one instance.
+#[derive(Debug)]
+pub struct Batch {
+    pub instance: String,
+    pub requests: Vec<PendingRequest>,
+    pub total_samples: usize,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Sample count that makes a queue immediately ready.  Usually the
+    /// top of the compiled batch ladder.
+    pub target_batch: usize,
+    /// Maximum time a *critical* request may wait for co-batching.
+    pub max_wait: Duration,
+    /// Maximum time a *deferred* request may wait (on-the-loop
+    /// traffic; typically orders of magnitude longer).
+    pub deferred_max_wait: Duration,
+    /// Hard cap on samples drained into one batch (≥ target_batch).
+    pub max_batch: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            target_batch: 256,
+            max_wait: Duration::from_micros(200),
+            deferred_max_wait: Duration::from_millis(20),
+            max_batch: 1024,
+        }
+    }
+}
+
+impl BatcherConfig {
+    fn wait_for(&self, p: Priority) -> Duration {
+        match p {
+            Priority::Critical => self.max_wait,
+            Priority::Deferred => self.deferred_max_wait,
+        }
+    }
+}
+
+/// Per-instance FIFO queues with size/deadline readiness.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    config: BatcherConfig,
+    queues: BTreeMap<String, VecDeque<PendingRequest>>,
+    queued_samples: BTreeMap<String, usize>,
+}
+
+impl DynamicBatcher {
+    pub fn new(config: BatcherConfig) -> Self {
+        assert!(config.max_batch >= config.target_batch);
+        DynamicBatcher { config, queues: BTreeMap::new(), queued_samples: BTreeMap::new() }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.config
+    }
+
+    /// Queue a request for `instance`.
+    pub fn enqueue(&mut self, instance: &str, req: PendingRequest) {
+        *self.queued_samples.entry(instance.to_string()).or_insert(0) += req.samples;
+        self.queues
+            .entry(instance.to_string())
+            .or_default()
+            .push_back(req);
+    }
+
+    /// Total queued samples for an instance.
+    pub fn queued(&self, instance: &str) -> usize {
+        self.queued_samples.get(instance).copied().unwrap_or(0)
+    }
+
+    /// Total queued samples across all instances.
+    pub fn queued_total(&self) -> usize {
+        self.queued_samples.values().sum()
+    }
+
+    /// Is any queue ready at `now`?
+    pub fn has_ready(&self, now: Instant) -> bool {
+        self.queues.iter().any(|(inst, q)| self.queue_ready(inst, q, now))
+    }
+
+    /// A queue's earliest deadline: each request expires `wait_for`
+    /// its priority class after arrival (critical requests can be
+    /// queued *behind* deferred ones and still fire the queue early).
+    fn queue_deadline(&self, q: &VecDeque<PendingRequest>) -> Option<Instant> {
+        q.iter().map(|r| r.arrived + self.config.wait_for(r.priority)).min()
+    }
+
+    fn queue_ready(&self, instance: &str, q: &VecDeque<PendingRequest>, now: Instant) -> bool {
+        if q.is_empty() {
+            return false;
+        }
+        if self.queued(instance) >= self.config.target_batch {
+            return true;
+        }
+        self.queue_deadline(q).is_some_and(|d| now >= d)
+    }
+
+    /// Earliest future instant at which some queue becomes
+    /// deadline-ready (for worker sleep timing); `None` when idle or
+    /// something is already ready.
+    pub fn next_deadline(&self, now: Instant) -> Option<Instant> {
+        if self.has_ready(now) {
+            return None;
+        }
+        self.queues.values().filter_map(|q| self.queue_deadline(q)).min()
+    }
+
+    /// Drain every ready queue into batches.  Queues holding critical
+    /// (in-the-loop) requests are drained before deferred-only queues;
+    /// ties break by instance name for determinism.  A drain takes
+    /// whole requests up to `max_batch` samples; remaining requests
+    /// stay queued with their original arrival times.
+    pub fn drain_ready(&mut self, now: Instant) -> Vec<Batch> {
+        let mut ready: Vec<(bool, String)> = self
+            .queues
+            .iter()
+            .filter(|(inst, q)| self.queue_ready(inst, q, now))
+            .map(|(inst, q)| {
+                let has_critical =
+                    q.iter().any(|r| r.priority == Priority::Critical);
+                (!has_critical, inst.clone()) // false < true: critical first
+            })
+            .collect();
+        ready.sort();
+
+        ready
+            .into_iter()
+            .map(|(_, instance)| self.drain_instance(&instance))
+            .collect()
+    }
+
+    fn drain_instance(&mut self, instance: &str) -> Batch {
+        let q = self.queues.get_mut(instance).expect("ready queue exists");
+        let mut requests = Vec::new();
+        let mut total = 0usize;
+        while let Some(front) = q.front() {
+            // Always take at least one request, even if it alone
+            // exceeds max_batch (the engine chunks internally).
+            if !requests.is_empty() && total + front.samples > self.config.max_batch {
+                break;
+            }
+            let req = q.pop_front().unwrap();
+            total += req.samples;
+            requests.push(req);
+        }
+        *self.queued_samples.get_mut(instance).unwrap() -= total;
+        Batch { instance: instance.to_string(), requests, total_samples: total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, samples: usize, arrived: Instant) -> PendingRequest {
+        PendingRequest {
+            id,
+            input: vec![0.0; samples * 2],
+            samples,
+            arrived,
+            priority: Priority::Critical,
+        }
+    }
+
+    fn batcher(target: usize, wait_us: u64) -> DynamicBatcher {
+        DynamicBatcher::new(BatcherConfig {
+            target_batch: target,
+            max_wait: Duration::from_micros(wait_us),
+            deferred_max_wait: Duration::from_millis(50),
+            max_batch: target * 4,
+        })
+    }
+
+    #[test]
+    fn size_trigger() {
+        let t0 = Instant::now();
+        let mut b = batcher(8, 1_000_000);
+        b.enqueue("m", req(1, 4, t0));
+        assert!(!b.has_ready(t0));
+        b.enqueue("m", req(2, 4, t0));
+        assert!(b.has_ready(t0)); // 8 samples == target
+        let batches = b.drain_ready(t0);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].total_samples, 8);
+        assert_eq!(batches[0].requests.len(), 2);
+        assert_eq!(b.queued("m"), 0);
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let t0 = Instant::now();
+        let mut b = batcher(1024, 100);
+        b.enqueue("m", req(1, 2, t0));
+        assert!(!b.has_ready(t0));
+        let later = t0 + Duration::from_micros(150);
+        assert!(b.has_ready(later));
+        let batches = b.drain_ready(later);
+        assert_eq!(batches[0].requests[0].id, 1);
+    }
+
+    #[test]
+    fn next_deadline_is_oldest_plus_wait() {
+        let t0 = Instant::now();
+        let mut b = batcher(1024, 100);
+        b.enqueue("a", req(1, 1, t0 + Duration::from_micros(50)));
+        b.enqueue("b", req(2, 1, t0));
+        assert_eq!(b.next_deadline(t0), Some(t0 + Duration::from_micros(100)));
+        // ready queues -> None (caller should drain, not sleep)
+        let later = t0 + Duration::from_micros(500);
+        assert_eq!(b.next_deadline(later), None);
+    }
+
+    #[test]
+    fn instances_batch_independently() {
+        // The paper's requirement: independent per-material models,
+        // concurrent execution — one material's queue never blocks or
+        // joins another's.
+        let t0 = Instant::now();
+        let mut b = batcher(4, 1_000_000);
+        b.enqueue("hermit/mat0", req(1, 4, t0));
+        b.enqueue("hermit/mat1", req(2, 2, t0));
+        let batches = b.drain_ready(t0);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].instance, "hermit/mat0");
+        assert_eq!(b.queued("hermit/mat1"), 2);
+    }
+
+    #[test]
+    fn max_batch_respected_across_requests() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 4,
+            max_wait: Duration::ZERO,
+            deferred_max_wait: Duration::ZERO,
+            max_batch: 10,
+        });
+        for i in 0..5 {
+            b.enqueue("m", req(i, 4, t0));
+        }
+        let batches = b.drain_ready(t0);
+        // 4+4 fits, +4 would exceed 10 -> batch of 8
+        assert_eq!(batches[0].total_samples, 8);
+        assert_eq!(b.queued("m"), 12);
+    }
+
+    #[test]
+    fn oversized_single_request_still_drains() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 4,
+            max_wait: Duration::ZERO,
+            deferred_max_wait: Duration::ZERO,
+            max_batch: 8,
+        });
+        b.enqueue("m", req(1, 100, t0));
+        let batches = b.drain_ready(t0);
+        assert_eq!(batches[0].total_samples, 100);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let t0 = Instant::now();
+        let mut b = batcher(2, 0);
+        for i in 0..6 {
+            b.enqueue("m", req(i, 1, t0));
+        }
+        let ids: Vec<u64> = b
+            .drain_ready(t0)
+            .pop()
+            .unwrap()
+            .requests
+            .iter()
+            .map(|r| r.id)
+            .collect();
+        // max_batch = target*4 = 8 >= 6, so one drain takes all six in
+        // arrival order.
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(b.queued("m"), 0);
+    }
+
+    #[test]
+    fn drain_is_deterministic_by_instance_name() {
+        let t0 = Instant::now();
+        let mut b = batcher(1, 0);
+        b.enqueue("z", req(1, 1, t0));
+        b.enqueue("a", req(2, 1, t0));
+        let batches = b.drain_ready(t0);
+        assert_eq!(batches[0].instance, "a");
+        assert_eq!(batches[1].instance, "z");
+    }
+
+    fn deferred_req(id: u64, samples: usize, arrived: Instant) -> PendingRequest {
+        PendingRequest {
+            id,
+            input: vec![0.0; samples * 2],
+            samples,
+            arrived,
+            priority: Priority::Deferred,
+        }
+    }
+
+    #[test]
+    fn deferred_requests_wait_longer() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 1_000_000,
+            max_wait: Duration::from_micros(100),
+            deferred_max_wait: Duration::from_millis(10),
+            max_batch: 1_000_000,
+        });
+        b.enqueue("m", deferred_req(1, 2, t0));
+        // past the critical deadline but before the deferred one
+        let mid = t0 + Duration::from_micros(500);
+        assert!(!b.has_ready(mid), "deferred must keep waiting");
+        assert_eq!(b.next_deadline(mid), Some(t0 + Duration::from_millis(10)));
+        assert!(b.has_ready(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn critical_arrival_fires_queue_with_deferred_head() {
+        // a critical request behind a deferred one must still get the
+        // critical deadline
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 1_000_000,
+            max_wait: Duration::from_micros(100),
+            deferred_max_wait: Duration::from_millis(10),
+            max_batch: 1_000_000,
+        });
+        b.enqueue("m", deferred_req(1, 2, t0));
+        b.enqueue("m", req(2, 2, t0 + Duration::from_micros(50)));
+        let at = t0 + Duration::from_micros(150); // critical deadline passed
+        assert!(b.has_ready(at));
+        // the drain carries both (co-batching the deferred for free)
+        let batch = b.drain_ready(at).pop().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+    }
+
+    #[test]
+    fn critical_queues_drain_before_deferred_only_queues() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 1,
+            max_wait: Duration::ZERO,
+            deferred_max_wait: Duration::ZERO,
+            max_batch: 16,
+        });
+        b.enqueue("a_deferred", deferred_req(1, 1, t0));
+        b.enqueue("z_critical", req(2, 1, t0));
+        let batches = b.drain_ready(t0);
+        assert_eq!(batches[0].instance, "z_critical");
+        assert_eq!(batches[1].instance, "a_deferred");
+    }
+
+    #[test]
+    fn empty_batcher_idle() {
+        let b = batcher(4, 100);
+        let now = Instant::now();
+        assert!(!b.has_ready(now));
+        assert_eq!(b.next_deadline(now), None);
+        assert_eq!(b.queued_total(), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving core — the paper's missing system piece (§VI: "a
+//! generalized application for remote inference … which supports
+//! remote inference to multiple, independent models").
+//!
+//! * [`registry`] — maps logical model *instances* (one Hermit per
+//!   material, "an MPI rank might typically require results for 5-10
+//!   different materials", §IV-A) onto loaded engine models.
+//! * [`batcher`]  — the dynamic batcher: in-the-loop requests arrive
+//!   as a few samples per (rank, material); the batcher coalesces
+//!   them per instance under a latency deadline, padding to the
+//!   compiled mini-batch ladder.
+//! * [`core`]     — [`Coordinator`]: worker threads pull ready
+//!   batches, execute them on the PJRT engine, and demultiplex the
+//!   per-request responses.
+
+pub mod batcher;
+pub mod core;
+pub mod registry;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
+pub use core::{Coordinator, CoordinatorConfig, CoordinatorStats};
+pub use registry::Registry;

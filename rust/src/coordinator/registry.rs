@@ -1,0 +1,106 @@
+//! Multi-model instance registry.
+//!
+//! A logical *instance* is what clients address: `hermit/mat3`,
+//! `mir`, …  Each instance resolves to a loaded engine model.  In the
+//! paper's deployment every material has its own trained Hermit
+//! weights; here all materials share the reproduction's single weight
+//! set (per-material `.weights.npz` files drop in without code
+//! changes — the registry is the only mapping layer), which preserves
+//! the serving behaviour the paper studies: independent queues,
+//! independent batches, concurrent execution targets.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Instance table: logical name -> engine model name.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    instances: BTreeMap<String, String>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one instance.  Re-registering a name replaces it.
+    pub fn register(&mut self, instance: impl Into<String>, engine_model: impl Into<String>) {
+        self.instances.insert(instance.into(), engine_model.into());
+    }
+
+    /// Register `n` per-material Hermit instances (`hermit/mat0` …),
+    /// the paper's multi-material deployment shape.
+    pub fn register_materials(&mut self, engine_model: &str, n: usize) {
+        for m in 0..n {
+            self.register(format!("{engine_model}/mat{m}"), engine_model);
+        }
+    }
+
+    /// Resolve an instance to its engine model.
+    pub fn resolve(&self, instance: &str) -> Result<&str> {
+        self.instances
+            .get(instance)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("unknown model instance {instance:?} (registered: {:?})",
+                self.instance_names()))
+    }
+
+    pub fn contains(&self, instance: &str) -> bool {
+        self.instances.contains_key(instance)
+    }
+
+    pub fn instance_names(&self) -> Vec<String> {
+        self.instances.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_resolve() {
+        let mut r = Registry::new();
+        r.register("mir", "mir");
+        r.register("hermit/mat0", "hermit");
+        assert_eq!(r.resolve("hermit/mat0").unwrap(), "hermit");
+        assert_eq!(r.resolve("mir").unwrap(), "mir");
+        assert!(r.resolve("nope").is_err());
+    }
+
+    #[test]
+    fn material_fanout() {
+        let mut r = Registry::new();
+        r.register_materials("hermit", 8);
+        assert_eq!(r.len(), 8);
+        for m in 0..8 {
+            assert_eq!(r.resolve(&format!("hermit/mat{m}")).unwrap(), "hermit");
+        }
+    }
+
+    #[test]
+    fn reregistration_replaces() {
+        let mut r = Registry::new();
+        r.register("x", "hermit");
+        r.register("x", "mir");
+        assert_eq!(r.resolve("x").unwrap(), "mir");
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn names_sorted_deterministic() {
+        let mut r = Registry::new();
+        r.register("b", "hermit");
+        r.register("a", "hermit");
+        assert_eq!(r.instance_names(), vec!["a".to_string(), "b".to_string()]);
+    }
+}

@@ -1,0 +1,45 @@
+//! Calibrated analytic performance models for every accelerator/API
+//! configuration in the paper's evaluation (§V).
+//!
+//! We have none of the paper's hardware (P100/V100/A100, MI50/MI100,
+//! SambaNova SN10-8), so each device is modelled as
+//!
+//! ```text
+//! latency(batch) = host_overhead(api, model)
+//!                + max(compute_time(batch), memory_time(batch))
+//! ```
+//!
+//! with per-device constants (peak half-precision FLOPs, memory
+//! bandwidth, per-kernel-launch host cost, utilisation ramp) tuned so
+//! the paper's *anchor numbers* come out within tolerance — e.g. the
+//! A100's 0.65 ms naive single-sample latency and 3.92 ms at 32K
+//! (Fig. 4), or 0.12 ms / 1.52 ms under TensorRT+CUDA-Graphs (Fig. 8).
+//! `rust/tests/paper_shapes.rs` asserts both the anchors and the
+//! figure-level shape invariants (who wins, where the crossovers sit).
+//!
+//! The analytic form is what gives the model its predictive shape:
+//! small mini-batches are *host-bound* (launch count × launch cost —
+//! why naive PyTorch on a Power9 V100 node is slower than on an x86
+//! P100 node, Fig. 4 left), large mini-batches are *device-bound*
+//! (roofline: compute vs. memory), and the API configurations differ
+//! only in how many host launches they need and how well they fuse.
+//!
+//! Submodules:
+//! * [`profiles`] — per-model compute profiles (FLOPs/sample, bytes
+//!   moved, layer/kernel counts) derived from the actual Hermit/MIR
+//!   architectures in `python/compile/models/`.
+//! * [`gpu`]      — the GPU latency/throughput model + the five API
+//!   configurations of Figs. 8–10.
+//!
+//! The RDU dataflow model lives in [`crate::rdu`] (it has different
+//! physics: spatial pipeline + micro-batches, not kernel launches).
+
+pub mod gpu;
+pub mod profiles;
+
+pub use gpu::{Api, Gpu, GpuModel};
+pub use profiles::ModelProfile;
+
+/// Paper batch ladder (§V-A): 1, 4, 16, 64, 256, 1K, 2K, 4K, 8K, 16K, 32K.
+pub const PAPER_BATCHES: [usize; 11] =
+    [1, 4, 16, 64, 256, 1024, 2048, 4096, 8192, 16384, 32768];

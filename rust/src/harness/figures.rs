@@ -1,0 +1,601 @@
+//! One regenerator per evaluation figure (Figs. 4–20).
+//!
+//! Each function rebuilds the figure's series from the calibrated
+//! device models ([`crate::devices`], [`crate::rdu`],
+//! [`crate::netsim`]) over the paper's mini-batch ladder and returns
+//! them as [`Table`]s.  Shape invariants for every figure are pinned
+//! in `rust/tests/paper_shapes.rs`; EXPERIMENTS.md records
+//! paper-vs-reproduced numbers.
+
+use anyhow::{bail, Result};
+
+use crate::devices::{profiles, Api, Gpu, GpuModel, PAPER_BATCHES};
+use crate::netsim::{payload_bytes, Link};
+use crate::rdu::{RduApi, RduModel};
+
+use super::table::Table;
+
+/// All regenerable figure ids.
+pub const FIGURES: [&str; 17] = [
+    "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
+];
+
+/// A regenerated figure: one or more tables.
+#[derive(Debug)]
+pub struct FigureResult {
+    pub id: &'static str,
+    pub caption: &'static str,
+    pub tables: Vec<Table>,
+}
+
+/// Regenerate one figure by id.
+pub fn run_figure(id: &str) -> Result<FigureResult> {
+    match id {
+        "fig4" => Ok(fig4()),
+        "fig5" => Ok(fig5()),
+        "fig6" => Ok(fig6()),
+        "fig7" => Ok(fig7()),
+        "fig8" => Ok(fig8()),
+        "fig9" => Ok(fig9()),
+        "fig10" => Ok(fig10()),
+        "fig11" => Ok(fig11()),
+        "fig12" => Ok(fig12()),
+        "fig13" => Ok(fig13()),
+        "fig14" => Ok(fig14()),
+        "fig15" => Ok(fig15()),
+        "fig16" => Ok(fig16()),
+        "fig17" => Ok(fig17()),
+        "fig18" => Ok(fig18()),
+        "fig19" => Ok(fig19()),
+        "fig20" => Ok(fig20()),
+        other => bail!("unknown figure {other:?}; have {FIGURES:?}"),
+    }
+}
+
+fn batches() -> Vec<usize> {
+    PAPER_BATCHES.to_vec()
+}
+
+fn gpu_model(gpu: Gpu, api: Api) -> GpuModel {
+    GpuModel::new(gpu, api, profiles::hermit())
+}
+
+fn latency_ms_series(m: &GpuModel) -> Vec<f64> {
+    batches().iter().map(|&b| m.latency_s(b) * 1e3).collect()
+}
+
+fn throughput_series(m: &GpuModel) -> Vec<f64> {
+    batches().iter().map(|&b| m.throughput(b)).collect()
+}
+
+// --------------------------------------------------------- Figs 4-7
+
+fn fig4() -> FigureResult {
+    let mut t = Table::new(
+        "Fig 4: Hermit inference latency (ms), Nvidia GPUs, naive PyTorch",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for name in Gpu::ALL_NVIDIA {
+        let m = gpu_model(Gpu::by_name(name).unwrap(), Api::NaivePyTorch);
+        t.add_series(name, latency_ms_series(&m));
+    }
+    FigureResult {
+        id: "fig4",
+        caption: "Hermit latency on P100/V100/A100 (PyTorch Python API)",
+        tables: vec![t],
+    }
+}
+
+fn fig5() -> FigureResult {
+    let mut t = Table::new(
+        "Fig 5: Hermit inference throughput (samples/s), Nvidia GPUs, naive PyTorch",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for name in Gpu::ALL_NVIDIA {
+        let m = gpu_model(Gpu::by_name(name).unwrap(), Api::NaivePyTorch);
+        t.add_series(name, throughput_series(&m));
+    }
+    FigureResult {
+        id: "fig5",
+        caption: "Hermit throughput on P100/V100/A100 (PyTorch Python API)",
+        tables: vec![t],
+    }
+}
+
+fn fig6() -> FigureResult {
+    let mut t = Table::new(
+        "Fig 6: Hermit inference latency (ms), AMD GPUs, naive PyTorch",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for name in Gpu::ALL_AMD {
+        let m = gpu_model(Gpu::by_name(name).unwrap(), Api::NaivePyTorch);
+        t.add_series(name, latency_ms_series(&m));
+    }
+    FigureResult {
+        id: "fig6",
+        caption: "Hermit latency on MI50/MI100 (PyTorch/ROCm)",
+        tables: vec![t],
+    }
+}
+
+fn fig7() -> FigureResult {
+    let a100 = gpu_model(Gpu::a100(), Api::NaivePyTorch);
+    let mi100 = gpu_model(Gpu::mi100(), Api::NaivePyTorch);
+
+    let mut lat = Table::new("Fig 7a: Hermit latency (ms), A100 vs MI100", "mini_batch");
+    lat.set_x(batches());
+    lat.add_series("A100", latency_ms_series(&a100));
+    lat.add_series("MI100", latency_ms_series(&mi100));
+
+    let mut thr = Table::new(
+        "Fig 7b: Hermit throughput (samples/s), A100 vs MI100 (+TDP-normalised)",
+        "mini_batch",
+    );
+    thr.set_x(batches());
+    thr.add_series("A100", throughput_series(&a100));
+    thr.add_series("MI100", throughput_series(&mi100));
+    thr.add_series(
+        "MI100_tdp_norm",
+        batches()
+            .iter()
+            .map(|&b| mi100.throughput_tdp_normalised(b, a100.gpu.tdp_w))
+            .collect(),
+    );
+    FigureResult {
+        id: "fig7",
+        caption: "A100 vs MI100 latency and TDP-normalised throughput",
+        tables: vec![lat, thr],
+    }
+}
+
+// -------------------------------------------------------- Figs 8-10
+
+fn fig8() -> FigureResult {
+    let mut t = Table::new(
+        "Fig 8: Hermit latency (ms) on A100 across API configurations",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for api in Api::ALL {
+        t.add_series(api.label(), latency_ms_series(&gpu_model(Gpu::a100(), api)));
+    }
+    FigureResult {
+        id: "fig8",
+        caption: "A100 Hermit latency: PyTorch / TensorRT / CUDA Graphs combos",
+        tables: vec![t],
+    }
+}
+
+fn fig9() -> FigureResult {
+    let mut t = Table::new(
+        "Fig 9: Hermit throughput (samples/s) on A100 across API configurations",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for api in Api::ALL {
+        t.add_series(api.label(), throughput_series(&gpu_model(Gpu::a100(), api)));
+    }
+    FigureResult {
+        id: "fig9",
+        caption: "A100 Hermit throughput: PyTorch / TensorRT / CUDA Graphs combos",
+        tables: vec![t],
+    }
+}
+
+fn fig10() -> FigureResult {
+    // The paper shows 4 configurations for MIR (no C++ TensorRT).
+    let mut t = Table::new(
+        "Fig 10: MIR throughput (samples/s) on A100 across API configurations",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for api in [Api::NaivePyTorch, Api::TensorRt, Api::CudaGraphs, Api::TrtCudaGraphs] {
+        let m = GpuModel::new(Gpu::a100(), api, profiles::mir());
+        t.add_series(api.label(), throughput_series(&m));
+    }
+    FigureResult {
+        id: "fig10",
+        caption: "MIR throughput on A100 (torch2trt layernorm penalty visible on TRT paths)",
+        tables: vec![t],
+    }
+}
+
+// ------------------------------------------------------- Figs 11-14
+
+fn heatmap(tiles: usize, id: &'static str, caption: &'static str) -> FigureResult {
+    // Rows: micro-batch; columns: mini-batch.  Invalid cells
+    // (micro > mini) are NaN, rendered blank in CSV consumers —
+    // mirroring the paper's white squares.
+    let m = RduModel::new(profiles::hermit(), tiles, RduApi::Python);
+    let minis = batches();
+    let micros = batches();
+    let mut t = Table::new(
+        format!("{caption} — latency (ms), rows = micro-batch"),
+        "micro\\mini",
+    );
+    t.set_x(micros.clone());
+    for &mini in &minis {
+        let col: Vec<f64> = micros
+            .iter()
+            .map(|&micro| {
+                if m.config_valid(mini, micro) {
+                    m.latency_s(mini, micro) * 1e3
+                } else {
+                    f64::NAN
+                }
+            })
+            .collect();
+        t.add_series(format!("mini_{mini}"), col);
+    }
+    FigureResult { id, caption, tables: vec![t] }
+}
+
+fn fig11() -> FigureResult {
+    heatmap(1, "fig11", "Fig 11: Hermit latency on 1/4 RDU (1 tile), mini x micro sweep")
+}
+
+fn fig12() -> FigureResult {
+    heatmap(4, "fig12", "Fig 12: Hermit latency on 1 RDU (4 tiles), mini x micro sweep")
+}
+
+/// The four Fig-13/14 configurations.
+fn rdu_configs() -> Vec<(&'static str, RduModel)> {
+    vec![
+        ("Python (naive)", RduModel::new(profiles::hermit(), 4, RduApi::Python)),
+        (
+            "Python (optimized)",
+            RduModel::new(profiles::hermit(), 4, RduApi::PythonOptimized),
+        ),
+        (
+            "C++ (optimized)",
+            RduModel::new(profiles::hermit(), 4, RduApi::CppOptimized),
+        ),
+        (
+            "C++ (optimized, preferred MB)",
+            RduModel::new(profiles::hermit(), 4, RduApi::CppOptimized).with_preferred_mb(),
+        ),
+    ]
+}
+
+/// "Preferred MB": the paper makes *small adjustments* to the
+/// mini-batch so it becomes a multiple of 6 (§V-C) — a power-of-2
+/// mini-batch is never divisible by 6, so the hardware bonus needs
+/// the adjusted size (e.g. 64 -> 66, 256 -> 258).
+fn preferred_mini(b: usize) -> usize {
+    (b.div_ceil(6)).max(1) * 6
+}
+
+fn fig13() -> FigureResult {
+    let mut t = Table::new(
+        "Fig 13: Hermit latency (ms) on 1 RDU, optimisation methods",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for (label, m) in rdu_configs() {
+        if m.preferred_mb {
+            t.add_series(
+                label,
+                batches()
+                    .iter()
+                    .map(|&b| m.latency_best_s(preferred_mini(b)) * 1e3)
+                    .collect(),
+            );
+        } else {
+            t.add_series(
+                label,
+                batches().iter().map(|&b| m.latency_best_s(b) * 1e3).collect(),
+            );
+        }
+    }
+    FigureResult {
+        id: "fig13",
+        caption: "RDU Hermit latency: Python naive / optimized placement / C++ / preferred-MB",
+        tables: vec![t],
+    }
+}
+
+fn fig14() -> FigureResult {
+    let mut t = Table::new(
+        "Fig 14: Hermit throughput (samples/s) on 1 RDU, optimisation methods",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    for (label, m) in rdu_configs() {
+        if m.preferred_mb {
+            t.add_series(
+                label,
+                batches()
+                    .iter()
+                    .map(|&b| m.throughput_best(preferred_mini(b)))
+                    .collect(),
+            );
+        } else {
+            t.add_series(
+                label,
+                batches().iter().map(|&b| m.throughput_best(b)).collect(),
+            );
+        }
+    }
+    FigureResult {
+        id: "fig14",
+        caption: "RDU Hermit throughput under the Fig-13 configurations",
+        tables: vec![t],
+    }
+}
+
+// ------------------------------------------------------- Figs 15-16
+
+fn remote_latency_s(m: &RduModel, link: &Link, b: usize) -> f64 {
+    let p = &m.profile;
+    link.remote_latency_s(m.latency_best_s(b), payload_bytes(p.input_elems, p.output_elems, b))
+}
+
+fn remote_throughput(m: &RduModel, link: &Link, b: usize) -> f64 {
+    let p = &m.profile;
+    link.remote_throughput(
+        m.latency_best_s(b),
+        payload_bytes(p.input_elems, p.output_elems, b),
+        b,
+    )
+}
+
+fn fig15() -> FigureResult {
+    let py = RduModel::new(profiles::hermit(), 4, RduApi::PythonOptimized);
+    let cpp = RduModel::new(profiles::hermit(), 4, RduApi::CppOptimized);
+    let link = Link::infiniband_cx6();
+
+    let mut t = Table::new(
+        "Fig 15: Hermit latency (ms) on 1 RDU — local vs remote",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    t.add_series(
+        "local Python",
+        batches().iter().map(|&b| py.latency_best_s(b) * 1e3).collect(),
+    );
+    t.add_series(
+        "local C++",
+        batches().iter().map(|&b| cpp.latency_best_s(b) * 1e3).collect(),
+    );
+    t.add_series(
+        "remote C++",
+        batches().iter().map(|&b| remote_latency_s(&cpp, &link, b) * 1e3).collect(),
+    );
+    FigureResult {
+        id: "fig15",
+        caption: "RDU local vs remote latency (hand-optimised placement)",
+        tables: vec![t],
+    }
+}
+
+fn fig16() -> FigureResult {
+    let py = RduModel::new(profiles::hermit(), 4, RduApi::PythonOptimized);
+    let cpp = RduModel::new(profiles::hermit(), 4, RduApi::CppOptimized);
+    let link = Link::infiniband_cx6();
+
+    let mut t = Table::new(
+        "Fig 16: Hermit throughput (samples/s) on 1 RDU — local vs remote",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    t.add_series(
+        "local Python",
+        batches().iter().map(|&b| py.throughput_best(b)).collect(),
+    );
+    t.add_series(
+        "local C++",
+        batches().iter().map(|&b| cpp.throughput_best(b)).collect(),
+    );
+    t.add_series(
+        "remote C++",
+        batches().iter().map(|&b| remote_throughput(&cpp, &link, b)).collect(),
+    );
+    FigureResult {
+        id: "fig16",
+        caption: "RDU local vs remote throughput (async double-buffered client)",
+        tables: vec![t],
+    }
+}
+
+// ------------------------------------------------------- Figs 17-19
+
+/// The Fig-17/18 configuration set.
+struct Comparison {
+    a100_naive: GpuModel,
+    a100_best: GpuModel,
+    rdu_naive: RduModel,
+    rdu_best: RduModel,
+    link: Link,
+}
+
+impl Comparison {
+    fn new() -> Comparison {
+        Comparison {
+            a100_naive: gpu_model(Gpu::a100(), Api::NaivePyTorch),
+            a100_best: gpu_model(Gpu::a100(), Api::TrtCudaGraphs),
+            rdu_naive: RduModel::new(profiles::hermit(), 4, RduApi::Python),
+            rdu_best: RduModel::new(profiles::hermit(), 4, RduApi::CppOptimized),
+            link: Link::infiniband_cx6(),
+        }
+    }
+}
+
+fn fig17() -> FigureResult {
+    let c = Comparison::new();
+    let mut t = Table::new(
+        "Fig 17: Hermit latency (ms) — A100 vs 1 RDU configurations",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    t.add_series("A100 naive", latency_ms_series(&c.a100_naive));
+    t.add_series("A100 TRT+Graphs", latency_ms_series(&c.a100_best));
+    t.add_series(
+        "RDU local C++",
+        batches().iter().map(|&b| c.rdu_best.latency_best_s(b) * 1e3).collect(),
+    );
+    t.add_series(
+        "RDU remote C++",
+        batches()
+            .iter()
+            .map(|&b| remote_latency_s(&c.rdu_best, &c.link, b) * 1e3)
+            .collect(),
+    );
+    FigureResult {
+        id: "fig17",
+        caption: "Latency comparison: node-local A100 vs local/remote RDU",
+        tables: vec![t],
+    }
+}
+
+fn fig18() -> FigureResult {
+    let c = Comparison::new();
+    let mut t = Table::new(
+        "Fig 18: Hermit throughput (samples/s) — A100 vs 1 RDU configurations",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    t.add_series("A100 naive", throughput_series(&c.a100_naive));
+    t.add_series("A100 TRT+Graphs", throughput_series(&c.a100_best));
+    t.add_series(
+        "RDU local C++",
+        batches().iter().map(|&b| c.rdu_best.throughput_best(b)).collect(),
+    );
+    t.add_series(
+        "RDU remote C++",
+        batches()
+            .iter()
+            .map(|&b| remote_throughput(&c.rdu_best, &c.link, b))
+            .collect(),
+    );
+    FigureResult {
+        id: "fig18",
+        caption: "Throughput comparison: node-local A100 vs local/remote RDU",
+        tables: vec![t],
+    }
+}
+
+fn fig19() -> FigureResult {
+    let c = Comparison::new();
+    let mut t = Table::new(
+        "Fig 19: RDU-over-A100 throughput speedup (>1 favours the DataScale)",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    t.add_series(
+        "naive vs naive",
+        batches()
+            .iter()
+            .map(|&b| c.rdu_naive.throughput_best(b) / c.a100_naive.throughput(b))
+            .collect(),
+    );
+    t.add_series(
+        "optimized local vs optimized local",
+        batches()
+            .iter()
+            .map(|&b| c.rdu_best.throughput_best(b) / c.a100_best.throughput(b))
+            .collect(),
+    );
+    t.add_series(
+        "remote RDU vs optimized A100 (CogSim)",
+        batches()
+            .iter()
+            .map(|&b| remote_throughput(&c.rdu_best, &c.link, b) / c.a100_best.throughput(b))
+            .collect(),
+    );
+    // "we normalize the DataScale throughput by transistor count.
+    // The A100 has 1.3x the transistor count of the DataScale RDU."
+    let norm = c.a100_best.gpu.transistors_b / RduModel::TRANSISTORS_B;
+    t.add_series(
+        "remote RDU vs optimized A100, transistor-normalised",
+        batches()
+            .iter()
+            .map(|&b| {
+                norm * remote_throughput(&c.rdu_best, &c.link, b) / c.a100_best.throughput(b)
+            })
+            .collect(),
+    );
+    FigureResult {
+        id: "fig19",
+        caption: "Speedup factors for the three configuration pairs + transistor normalisation",
+        tables: vec![t],
+    }
+}
+
+// ------------------------------------------------------------ Fig 20
+
+fn fig20() -> FigureResult {
+    // "This comparison is done on a version of the MIR model without
+    // layernorm to ensure the model would compile optimally on both
+    // architectures."
+    let profile = profiles::mir_noln();
+    let a100_naive = GpuModel::new(Gpu::a100(), Api::NaivePyTorch, profile.clone());
+    let a100_graphs = GpuModel::new(Gpu::a100(), Api::CudaGraphs, profile.clone());
+    let rdu = RduModel::new(profile, 4, RduApi::CppOptimized);
+
+    let mut t = Table::new(
+        "Fig 20: MIR (no layernorm) throughput (samples/s) — A100 vs 1 RDU",
+        "mini_batch",
+    );
+    t.set_x(batches());
+    t.add_series("A100 naive", throughput_series(&a100_naive));
+    t.add_series("A100 CUDA Graphs", throughput_series(&a100_graphs));
+    t.add_series(
+        "RDU local C++",
+        batches().iter().map(|&b| rdu.throughput_best(b)).collect(),
+    );
+    t.add_series(
+        "target (100K/s per rank)",
+        vec![crate::workload::MirWorkload::TARGET_SAMPLES_PER_SEC_PER_RANK; batches().len()],
+    );
+    FigureResult {
+        id: "fig20",
+        caption: "MIR throughput vs the 100K samples/s/rank target",
+        tables: vec![t],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_figure_runs() {
+        for id in FIGURES {
+            let fig = run_figure(id).unwrap();
+            assert_eq!(fig.id, id);
+            assert!(!fig.tables.is_empty(), "{id}");
+            for t in &fig.tables {
+                assert!(!t.x.is_empty(), "{id}");
+                assert!(!t.series.is_empty(), "{id}");
+            }
+        }
+        assert!(run_figure("fig99").is_err());
+    }
+
+    #[test]
+    fn heatmaps_mask_invalid_cells() {
+        let fig = run_figure("fig11").unwrap();
+        let t = &fig.tables[0];
+        // micro=4 (row index 1), mini=1 (column "mini_1") is invalid.
+        let col = t.series("mini_1").unwrap();
+        assert!(col[1].is_nan()); // micro 4 > mini 1
+        assert!(!col[0].is_nan()); // micro 1 <= mini 1
+    }
+
+    #[test]
+    fn fig19_has_four_ratio_series() {
+        let fig = run_figure("fig19").unwrap();
+        assert_eq!(fig.tables[0].series.len(), 4);
+    }
+
+    #[test]
+    fn fig20_includes_target_line() {
+        let fig = run_figure("fig20").unwrap();
+        let target = fig.tables[0].series("target (100K/s per rank)").unwrap();
+        assert!(target.iter().all(|&v| v == 100_000.0));
+    }
+}

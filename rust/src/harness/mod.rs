@@ -1,0 +1,13 @@
+//! Figure regenerators: one function per figure in the paper's
+//! evaluation (§V, Figs. 4–20), each returning the figure's series as
+//! structured rows and rendering them as an aligned table + CSV.
+//!
+//! `repro <figN>` on the CLI calls into here; `repro all` regenerates
+//! the complete evaluation into `results/`.
+
+pub mod figures;
+pub mod scaling;
+pub mod table;
+
+pub use figures::{run_figure, FigureResult, FIGURES};
+pub use table::Table;

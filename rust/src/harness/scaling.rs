@@ -1,0 +1,193 @@
+//! Scaling analysis — the paper's §VI future-work question made
+//! concrete: **how many MPI ranks can one disaggregated DataScale
+//! node absorb** before (a) the tile allocation overloads, (b) the
+//! Infiniband software path saturates, or (c) the in-the-loop latency
+//! SLO breaks?
+//!
+//! Scenario (per the paper's stated rates, §IV-A): each rank runs
+//! 10 000 zones with Hermit ⇒ 20–30 K inferences per timestep spread
+//! over 8 material models; a physics timestep budget of `step_s`
+//! seconds turns that into an offered load in samples/s.  Requests
+//! ride the 100 Gb/s link at the operating mini-batch.
+
+use std::collections::BTreeMap;
+
+use crate::netsim::{payload_bytes, Link};
+use crate::rdu::allocator::{allocate, Demand, NodeGeometry};
+use crate::rdu::{RduApi, RduModel};
+
+use super::table::Table;
+
+/// Scenario knobs.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Inferences per rank per timestep (paper: 20–30 K at 10 K zones).
+    pub inferences_per_rank_per_step: f64,
+    /// Physics timestep wall budget, seconds.
+    pub step_s: f64,
+    /// Per-material request mini-batch at the accelerator.
+    pub mini_batch: usize,
+    /// Material models per rank.
+    pub materials: usize,
+    /// Remote in-the-loop latency SLO, seconds.
+    pub latency_slo_s: f64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            inferences_per_rank_per_step: 25_000.0,
+            step_s: 0.1,
+            mini_batch: 64,
+            materials: 8,
+            latency_slo_s: 1e-3,
+        }
+    }
+}
+
+/// One row of the scaling table.
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub ranks: usize,
+    pub offered_load: f64,
+    pub worst_model_utilisation: f64,
+    pub link_utilisation: f64,
+    pub remote_latency_s: f64,
+    pub slo_ok: bool,
+}
+
+/// Evaluate one rank count.
+pub fn evaluate(scenario: &Scenario, ranks: usize) -> ScalingRow {
+    let geometry = NodeGeometry::sn10_8();
+    let api = RduApi::CppOptimized;
+    let link = Link::infiniband_cx6();
+
+    let per_rank_load = scenario.inferences_per_rank_per_step / scenario.step_s;
+    let offered = per_rank_load * ranks as f64;
+    let per_material = offered / scenario.materials as f64;
+
+    // allocate the whole node for this demand set
+    let demands: BTreeMap<String, Demand> = (0..scenario.materials)
+        .map(|m| {
+            (
+                format!("hermit/mat{m}"),
+                Demand {
+                    profile: crate::devices::profiles::hermit(),
+                    load: per_material,
+                    mini_batch: scenario.mini_batch,
+                },
+            )
+        })
+        .collect();
+    let alloc = allocate(geometry, &demands, api).expect("allocation");
+    let worst = demands
+        .iter()
+        .map(|(m, d)| alloc.utilisation(m, d, api))
+        .fold(0.0f64, f64::max);
+
+    // link: every sample crosses twice (in + out) through the shared
+    // software path
+    let profile = crate::devices::profiles::hermit();
+    let bytes_per_s =
+        offered * payload_bytes(profile.input_elems, profile.output_elems, 1);
+    let link_util = bytes_per_s / link.eff_bandwidth;
+
+    // remote latency at the operating batch on the *largest* deployment
+    // of the busiest model, queueing approximated by M/D/1 inflation
+    let best_tiles = alloc
+        .deployments
+        .iter()
+        .map(|d| d.tiles)
+        .max()
+        .unwrap_or(1);
+    let rdu = RduModel::new(profile.clone(), best_tiles, api);
+    let base = link.remote_latency_s(
+        rdu.latency_best_s(scenario.mini_batch),
+        payload_bytes(profile.input_elems, profile.output_elems, scenario.mini_batch),
+    );
+    // utilisation-dependent queueing inflation: 1/(1-rho) on the
+    // dominant resource (capped for display)
+    let rho = worst.max(link_util).min(0.999);
+    let latency = base / (1.0 - rho);
+
+    ScalingRow {
+        ranks,
+        offered_load: offered,
+        worst_model_utilisation: worst,
+        link_utilisation: link_util,
+        remote_latency_s: latency,
+        slo_ok: worst < 1.0 && link_util < 1.0 && latency <= scenario.latency_slo_s,
+    }
+}
+
+/// Sweep rank counts; returns the table and the max SLO-feasible ranks.
+pub fn sweep(scenario: &Scenario, rank_counts: &[usize]) -> (Table, Option<usize>) {
+    let mut t = Table::new(
+        format!(
+            "Scaling: MPI ranks vs one SN10-8 node ({} inf/rank/step, {} ms step, SLO {} ms)",
+            scenario.inferences_per_rank_per_step,
+            scenario.step_s * 1e3,
+            scenario.latency_slo_s * 1e3
+        ),
+        "ranks",
+    );
+    t.set_x(rank_counts.to_vec());
+    let rows: Vec<ScalingRow> =
+        rank_counts.iter().map(|&r| evaluate(scenario, r)).collect();
+    t.add_series("offered_samples_per_s", rows.iter().map(|r| r.offered_load).collect());
+    t.add_series(
+        "worst_model_utilisation",
+        rows.iter().map(|r| r.worst_model_utilisation).collect(),
+    );
+    t.add_series("link_utilisation", rows.iter().map(|r| r.link_utilisation).collect());
+    t.add_series(
+        "remote_latency_ms",
+        rows.iter().map(|r| r.remote_latency_s * 1e3).collect(),
+    );
+    t.add_series(
+        "slo_ok",
+        rows.iter().map(|r| if r.slo_ok { 1.0 } else { 0.0 }).collect(),
+    );
+    let max_ok = rows.iter().filter(|r| r.slo_ok).map(|r| r.ranks).max();
+    (t, max_ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_comfortable() {
+        let row = evaluate(&Scenario::default(), 1);
+        assert!(row.slo_ok, "{row:?}");
+        assert!(row.worst_model_utilisation < 0.3);
+        assert!(row.link_utilisation < 0.1);
+    }
+
+    #[test]
+    fn saturation_eventually() {
+        let s = Scenario::default();
+        let row = evaluate(&s, 512);
+        assert!(!row.slo_ok, "{row:?}");
+    }
+
+    #[test]
+    fn monotone_in_ranks() {
+        let s = Scenario::default();
+        let mut prev_util = 0.0;
+        for ranks in [1usize, 4, 16, 64] {
+            let row = evaluate(&s, ranks);
+            assert!(row.worst_model_utilisation >= prev_util);
+            prev_util = row.worst_model_utilisation;
+        }
+    }
+
+    #[test]
+    fn sweep_reports_feasible_frontier() {
+        let (table, max_ok) = sweep(&Scenario::default(), &[1, 2, 4, 8, 16, 32, 64, 128]);
+        assert_eq!(table.x.len(), 8);
+        let max_ok = max_ok.expect("at least one feasible point");
+        assert!(max_ok >= 4, "a DataScale should absorb several ranks: {max_ok}");
+        assert!(max_ok < 128, "must saturate within the sweep: {max_ok}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Aligned-table + CSV rendering for figure series.
+
+/// A simple column-oriented table: one label column (the x axis,
+/// e.g. mini-batch size) and named numeric series.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<String>,
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>) -> Table {
+        Table {
+            title: title.into(),
+            x_label: x_label.into(),
+            x: Vec::new(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn set_x<T: ToString>(&mut self, xs: impl IntoIterator<Item = T>) {
+        self.x = xs.into_iter().map(|x| x.to_string()).collect();
+    }
+
+    pub fn add_series(&mut self, name: impl Into<String>, ys: Vec<f64>) {
+        let name = name.into();
+        assert_eq!(
+            ys.len(),
+            self.x.len(),
+            "series {name:?} length != x length"
+        );
+        self.series.push((name, ys));
+    }
+
+    /// Fetch a series by name (for shape tests).
+    pub fn series(&self, name: &str) -> Option<&[f64]> {
+        self.series
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, ys)| ys.as_slice())
+    }
+
+    /// Render as an aligned text table (the `repro` CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.title));
+        let mut widths = vec![self.x_label.len()];
+        for (name, _) in &self.series {
+            widths.push(name.len().max(12));
+        }
+        for (i, x) in self.x.iter().enumerate() {
+            widths[0] = widths[0].max(x.len());
+            let _ = i;
+        }
+        // header
+        out.push_str(&format!("{:>w$}", self.x_label, w = widths[0]));
+        for (j, (name, _)) in self.series.iter().enumerate() {
+            out.push_str(&format!("  {:>w$}", name, w = widths[j + 1]));
+        }
+        out.push('\n');
+        // rows
+        for (i, x) in self.x.iter().enumerate() {
+            out.push_str(&format!("{:>w$}", x, w = widths[0]));
+            for (j, (_, ys)) in self.series.iter().enumerate() {
+                out.push_str(&format!("  {:>w$}", format_sig(ys[i]), w = widths[j + 1]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (the `results/` artifact).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.x_label.replace(',', ";"));
+        for (name, _) in &self.series {
+            out.push(',');
+            out.push_str(&name.replace(',', ";"));
+        }
+        out.push('\n');
+        for (i, x) in self.x.iter().enumerate() {
+            out.push_str(x);
+            for (_, ys) in &self.series {
+                out.push_str(&format!(",{}", ys[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// 4-significant-digit engineering formatting.
+fn format_sig(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if a >= 1e6 {
+        format!("{:.3}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.3}K", v / 1e3)
+    } else if a >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Fig X", "batch");
+        t.set_x([1usize, 4, 16]);
+        t.add_series("a100_ms", vec![0.65, 0.66, 0.67]);
+        t.add_series("rdu_ms", vec![0.04, 0.045, 0.05]);
+        t
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let s = sample().render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("a100_ms"));
+        assert!(s.contains("0.65"));
+        assert_eq!(s.lines().count(), 1 + 1 + 3);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "batch,a100_ms,rdu_ms");
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].starts_with("1,0.65,"));
+    }
+
+    #[test]
+    fn series_lookup() {
+        let t = sample();
+        assert_eq!(t.series("rdu_ms").unwrap()[0], 0.04);
+        assert!(t.series("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "length")]
+    fn mismatched_series_panics() {
+        let mut t = Table::new("t", "x");
+        t.set_x([1, 2]);
+        t.add_series("bad", vec![1.0]);
+    }
+
+    #[test]
+    fn sig_formatting() {
+        assert_eq!(format_sig(8_350_000.0), "8.350M");
+        assert_eq!(format_sig(1534.0), "1.534K");
+        assert_eq!(format_sig(0.00065), "0.00065");
+        assert_eq!(format_sig(0.0), "0");
+    }
+}

@@ -1,0 +1,55 @@
+//! # cogsim-disagg
+//!
+//! A disaggregated in-the-loop inference system for HPC cognitive
+//! simulation (CogSim), reproducing *"Is Disaggregation possible for
+//! HPC Cognitive Simulation?"* (Wyatt et al., CS.DC 2021).
+//!
+//! The paper asks whether surrogate-model inference that sits **inside
+//! the timestep loop** of a multi-physics code (Hydra at LLNL) can be
+//! offloaded from node-local GPUs to a network-attached AI accelerator
+//! (a SambaNova DataScale on 100 Gb/s Infiniband).  Its §VI names the
+//! missing system piece — "a generalized application for remote
+//! inference … to multiple, independent models" — which is exactly
+//! what this crate builds:
+//!
+//! * [`runtime`] — loads the AOT-compiled surrogate models (JAX →
+//!   Pallas → HLO text) and executes them on a PJRT device.  Python is
+//!   never on the request path.
+//! * [`coordinator`] — the serving core: a multi-model registry
+//!   (per-material Hermit instances + MIR), a request router, and a
+//!   dynamic batcher tuned for the paper's small-mini-batch regime.
+//! * [`net`] — the wire protocol and threaded TCP server/client (the
+//!   paper's "prototype C++ API and library" equivalent) with
+//!   asynchronous double-buffering (client sends mini-batch *n+1*
+//!   before results for *n* return — the paper's throughput trick).
+//! * [`devices`] — calibrated analytic performance models for every
+//!   accelerator/API configuration in the paper's evaluation (P100,
+//!   V100, A100, MI50, MI100 × PyTorch/TensorRT/CUDA-Graphs/C++).
+//! * [`rdu`] — a dataflow-accelerator simulator: tiles, micro-batch
+//!   pipelining, config-validity rules, preferred multiple-of-6 sizes.
+//! * [`netsim`] — the Infiniband link model (100 Gb/s, 1 µs).
+//! * [`workload`] — Hydra/MIR request-trace generators.
+//! * [`metrics`] — the paper's measurement methodology (mean over
+//!   mini-batches, 5 replicates, 95 % confidence intervals).
+//! * [`harness`] — one regenerator per paper figure (4–20).
+//! * [`util`] — in-tree substrates for the offline build environment:
+//!   JSON parsing, a PCG-family RNG, statistics, and a micro-bench
+//!   harness (no serde/rand/criterion available).
+//!
+//! See DESIGN.md for the substitution table (what the paper ran on real
+//! hardware vs. what is simulated here and why the shape is preserved)
+//! and EXPERIMENTS.md for paper-vs-reproduced numbers per figure.
+
+pub mod coordinator;
+pub mod devices;
+pub mod harness;
+pub mod metrics;
+pub mod net;
+pub mod netsim;
+pub mod rdu;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use runtime::{Engine, Manifest};

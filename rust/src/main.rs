@@ -1,0 +1,304 @@
+//! `repro` — the cogsim-disagg command line.
+//!
+//! ```text
+//! repro serve  [--addr A] [--artifacts DIR] [--materials N] [--workers N]
+//! repro client --addr A --model M [--batch B] [--requests N] [--pipeline D]
+//! repro repro  <figN|all> [--out DIR]
+//! repro trace  [--timesteps N] [--ranks N] [--zones N]
+//! repro info   [--artifacts DIR]
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap in the offline build).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
+use cogsim_disagg::harness::{run_figure, FIGURES};
+use cogsim_disagg::metrics::LatencyRecorder;
+use cogsim_disagg::net::{Client, Server};
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+use cogsim_disagg::workload::HydraWorkload;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: positionals + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let value = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), value.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "repro" => cmd_repro(&args),
+        "scaling" => cmd_scaling(&args),
+        "trace" => cmd_trace(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `repro help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — disaggregated CogSim inference (Wyatt et al., CS.DC 2021 reproduction)
+
+USAGE:
+  repro serve  [--addr 127.0.0.1:7471] [--artifacts artifacts] [--materials 8] [--workers 1]
+  repro client --addr 127.0.0.1:7471 [--model hermit/mat0] [--batch 4]
+               [--requests 100] [--pipeline 1]
+  repro repro  <fig4..fig20|all> [--out results]
+  repro scaling [--max-ranks 128] [--step-ms 100] [--slo-ms 1]
+  repro trace  [--timesteps 3] [--ranks 4] [--zones 1000]
+  repro info   [--artifacts artifacts]"
+    );
+}
+
+/// Start the disaggregated inference server.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let addr = args.get("addr", "127.0.0.1:7471");
+    let materials = args.get_usize("materials", 8)?;
+    let workers = args.get_usize("workers", 1)?;
+
+    eprintln!("loading artifacts from {artifacts}/ ...");
+    let engine = Engine::load(&artifacts, None)?;
+    let mut registry = Registry::new();
+    registry.register_materials("hermit", materials);
+    registry.register("mir", "mir");
+    registry.register("mir_noln", "mir_noln");
+
+    let config = CoordinatorConfig {
+        workers,
+        ..Default::default()
+    };
+    let coordinator = Arc::new(Coordinator::start(engine, registry, config)?);
+    let server = Server::serve(Arc::clone(&coordinator), &addr)?;
+    eprintln!(
+        "serving {} instances on {} ({} workers)",
+        coordinator.registry().len(),
+        server.addr(),
+        workers
+    );
+    eprintln!("instances: {:?}", coordinator.registry().instance_names());
+
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Drive a server like one MPI rank.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7471");
+    let model = args.get("model", "hermit/mat0");
+    let batch = args.get_usize("batch", 4)?;
+    let requests = args.get_usize("requests", 100)?;
+    let pipeline = args.get_usize("pipeline", 1)?.max(1);
+
+    let client = Client::connect(addr.as_str())?;
+    let input_elems = if model.starts_with("mir") { 48 * 48 } else { 42 };
+    let mut rng = Rng::new(7);
+    let payload = rng.normal_vec(batch * input_elems);
+
+    // warm-up (paper: 10 mini-batches)
+    for _ in 0..10 {
+        client.infer(&model, batch, &payload)?;
+    }
+
+    let mut latency = LatencyRecorder::new();
+    let started = Instant::now();
+    if pipeline == 1 {
+        for _ in 0..requests {
+            let t0 = Instant::now();
+            client.infer(&model, batch, &payload)?;
+            latency.record(t0.elapsed());
+        }
+    } else {
+        // pipelined: keep `pipeline` requests in flight (paper §V-A)
+        let mut inflight = std::collections::VecDeque::new();
+        for _ in 0..requests {
+            while inflight.len() >= pipeline {
+                let (t0, rx): (Instant, _) = inflight.pop_front().unwrap();
+                client.recv(rx)?;
+                latency.record(t0.elapsed());
+            }
+            inflight.push_back((Instant::now(), client.submit(&model, batch, &payload)?));
+        }
+        for (t0, rx) in inflight {
+            client.recv(rx)?;
+            latency.record(t0.elapsed());
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+
+    println!("model            {model}");
+    println!("mini-batch       {batch}");
+    println!("requests         {requests} (pipeline depth {pipeline})");
+    println!("mean latency     {:.3} ms", latency.mean_s() * 1e3);
+    println!(
+        "p50/p95/p99      {:.3} / {:.3} / {:.3} ms",
+        latency.p50_s() * 1e3,
+        latency.p95_s() * 1e3,
+        latency.p99_s() * 1e3
+    );
+    println!(
+        "throughput       {:.0} samples/s",
+        (requests * batch) as f64 / wall
+    );
+    Ok(())
+}
+
+/// Regenerate paper figures.
+fn cmd_repro(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let out_dir = args.get("out", "results");
+    std::fs::create_dir_all(&out_dir)?;
+
+    let ids: Vec<&str> = if which == "all" {
+        FIGURES.to_vec()
+    } else {
+        vec![which]
+    };
+    for id in ids {
+        let fig = run_figure(id)?;
+        println!("================ {} — {}", fig.id, fig.caption);
+        for (i, table) in fig.tables.iter().enumerate() {
+            println!("{}", table.render());
+            let suffix = if fig.tables.len() > 1 {
+                format!("{}_{}", fig.id, (b'a' + i as u8) as char)
+            } else {
+                fig.id.to_string()
+            };
+            let path = format!("{out_dir}/{suffix}.csv");
+            std::fs::write(&path, table.to_csv())?;
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Scaling analysis: ranks-per-DataScale frontier (paper SVI).
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let max_ranks = args.get_usize("max-ranks", 128)?;
+    let step_ms = args.get_usize("step-ms", 100)?;
+    let slo_ms = args.get_usize("slo-ms", 1)?;
+    let scenario = cogsim_disagg::harness::scaling::Scenario {
+        step_s: step_ms as f64 / 1e3,
+        latency_slo_s: slo_ms as f64 / 1e3,
+        ..Default::default()
+    };
+    let mut counts = Vec::new();
+    let mut r = 1usize;
+    while r <= max_ranks {
+        counts.push(r);
+        r *= 2;
+    }
+    let (table, max_ok) = cogsim_disagg::harness::scaling::sweep(&scenario, &counts);
+    println!("{}", table.render());
+    match max_ok {
+        Some(n) => println!("max SLO-feasible ranks on one SN10-8 node: {n}"),
+        None => println!("no feasible rank count under this SLO"),
+    }
+    Ok(())
+}
+
+/// Print a Hydra-like request trace (workload inspection).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let timesteps = args.get_usize("timesteps", 3)?;
+    let ranks = args.get_usize("ranks", 4)?;
+    let zones = args.get_usize("zones", 1000)?;
+    let w = HydraWorkload { ranks, zones_per_rank: zones, ..Default::default() };
+    println!(
+        "hydra workload: {ranks} ranks x {zones} zones, {} materials, ~{} inferences/timestep",
+        w.materials,
+        w.expected_inferences_per_timestep()
+    );
+    for t in 0..timesteps {
+        let reqs = w.timestep(t);
+        let total: usize = reqs.iter().map(|r| r.samples).sum();
+        println!("timestep {t}: {} requests, {total} samples", reqs.len());
+        for r in reqs.iter().take(6) {
+            println!("  rank {} -> {:<14} {} samples", r.rank, r.model, r.samples);
+        }
+        if reqs.len() > 6 {
+            println!("  ... {} more", reqs.len() - 6);
+        }
+    }
+    Ok(())
+}
+
+/// Show manifest/runtime info.
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let manifest = cogsim_disagg::runtime::Manifest::load(&artifacts)?;
+    println!("artifacts: {}", manifest.dir.display());
+    println!("dtype {}  seed {}", manifest.dtype, manifest.seed);
+    for (name, spec) in &manifest.models {
+        println!(
+            "  {name:<10} params {:>9}  in {:?} out {:?}  batches {:?}",
+            spec.param_count,
+            spec.input_shape,
+            spec.output_shape,
+            spec.batch_ladder()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Measurement infrastructure following the paper's methodology
+//! (§V-A): warm-up, per-mini-batch latency means, throughput over all
+//! samples, 5 replicates, 95 % confidence intervals.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{self, Replicated};
+
+/// Records per-request latencies and exposes the paper's summary
+/// statistics.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_s: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_s.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples_s.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_s.is_empty()
+    }
+
+    /// Mean latency across all recorded mini-batches (the paper's
+    /// latency metric).
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 50.0)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 95.0)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 99.0)
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.samples_s.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn clear(&mut self) {
+        self.samples_s.clear();
+    }
+}
+
+/// Counts samples over a wall-clock window -> samples/s.
+#[derive(Debug, Clone)]
+pub struct ThroughputCounter {
+    start: Instant,
+    samples: u64,
+}
+
+impl Default for ThroughputCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputCounter {
+    pub fn new() -> Self {
+        ThroughputCounter { start: Instant::now(), samples: 0 }
+    }
+
+    pub fn add(&mut self, n: usize) {
+        self.samples += n as u64;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.samples as f64 / secs
+        }
+    }
+}
+
+/// Run a measurement closure `replicates` times (paper: 5) and return
+/// mean ± 95 % CI — the exact plotting convention of every figure.
+pub fn replicate<F: FnMut() -> f64>(replicates: usize, mut f: F) -> Replicated {
+    let samples: Vec<f64> = (0..replicates).map(|_| f()).collect();
+    Replicated::from_samples(&samples)
+}
+
+/// The paper's replicate count.
+pub const PAPER_REPLICATES: usize = 5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_recorder_stats() {
+        let mut r = LatencyRecorder::new();
+        for ms in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            r.record_secs(ms * 1e-3);
+        }
+        assert_eq!(r.len(), 5);
+        assert!((r.mean_s() - 0.022).abs() < 1e-9);
+        assert!((r.p50_s() - 0.003).abs() < 1e-9);
+        assert!(r.p99_s() > r.p50_s());
+        assert!((r.max_s() - 0.1).abs() < 1e-12);
+        r.clear();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn throughput_counter() {
+        let mut c = ThroughputCounter::new();
+        c.add(100);
+        c.add(50);
+        assert_eq!(c.samples(), 150);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(c.per_second() > 0.0);
+    }
+
+    #[test]
+    fn replicate_five() {
+        let mut i = 0.0;
+        let rep = replicate(PAPER_REPLICATES, || {
+            i += 1.0;
+            i
+        });
+        assert_eq!(rep.n, 5);
+        assert!((rep.mean - 3.0).abs() < 1e-12);
+        assert!(rep.ci95 > 0.0);
+    }
+}

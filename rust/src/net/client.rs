@@ -1,0 +1,151 @@
+//! The remote-inference client library (the MPI-rank side of the
+//! paper's prototype API).
+//!
+//! Two usage patterns, matching the paper's two measurements (§V-A):
+//!
+//! * **latency**: [`Client::infer`] — synchronous request/response
+//!   round trip, what an in-the-loop Hydra zone calculation does.
+//! * **throughput**: [`Client::submit`] + [`Client::recv`] — the
+//!   pipelined mode: "Throughput was maximized in these tests by
+//!   allowing asynchronous communication … The client sends
+//!   mini-batch n+1 to the server before inference results for
+//!   mini-batch n are returned."
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::protocol::{self, Request, Response};
+
+/// A connection to the disaggregated inference server.
+pub struct Client {
+    write: Mutex<TcpStream>,
+    next_id: AtomicU64,
+    /// Completions parked by the reader thread, keyed by request id.
+    pending: Arc<Mutex<HashMap<u64, std::sync::mpsc::Sender<Response>>>>,
+    reader_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Client {
+    /// Connect to the server.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
+        stream.set_nodelay(true)?;
+        let read_stream = stream.try_clone()?;
+
+        let pending: Arc<Mutex<HashMap<u64, std::sync::mpsc::Sender<Response>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let reader_pending = Arc::clone(&pending);
+        let reader_thread = std::thread::Builder::new()
+            .name("cogsim-client-reader".into())
+            .spawn(move || {
+                let mut r = BufReader::new(read_stream);
+                loop {
+                    match protocol::read_response(&mut r) {
+                        Ok(Some(resp)) => {
+                            let tx = reader_pending.lock().unwrap().remove(&resp.id);
+                            if let Some(tx) = tx {
+                                let _ = tx.send(resp);
+                            }
+                        }
+                        Ok(None) | Err(_) => return, // server closed
+                    }
+                }
+            })?;
+
+        Ok(Client {
+            write: Mutex::new(stream),
+            next_id: AtomicU64::new(1),
+            pending,
+            reader_thread: Some(reader_thread),
+        })
+    }
+
+    /// Submit a mini-batch without waiting (pipelined mode).  Returns
+    /// a receiver for this request's response.
+    pub fn submit(
+        &self,
+        model: &str,
+        n_samples: usize,
+        payload: &[f32],
+    ) -> Result<Receiver<Response>> {
+        self.submit_with_priority(model, n_samples, payload, 0)
+    }
+
+    /// Submit at deferred (on-the-loop) priority: the server may hold
+    /// the request much longer for co-batching and never lets it
+    /// pre-empt critical in-the-loop traffic (paper SII-B).
+    pub fn submit_deferred(
+        &self,
+        model: &str,
+        n_samples: usize,
+        payload: &[f32],
+    ) -> Result<Receiver<Response>> {
+        self.submit_with_priority(model, n_samples, payload, 1)
+    }
+
+    fn submit_with_priority(
+        &self,
+        model: &str,
+        n_samples: usize,
+        payload: &[f32],
+        priority: u8,
+    ) -> Result<Receiver<Response>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(id, tx);
+
+        let req = Request {
+            id,
+            model: model.to_string(),
+            priority,
+            n_samples: n_samples as u32,
+            payload: payload.to_vec(),
+        };
+        let mut w = self.write.lock().unwrap();
+        if let Err(e) = protocol::write_request(&mut *w, &req) {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        Ok(rx)
+    }
+
+    /// Wait for a submitted request's rows.
+    pub fn recv(&self, rx: Receiver<Response>) -> Result<Vec<f32>> {
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow!("connection closed before response"))?;
+        resp.rows()
+    }
+
+    /// Synchronous round trip: the latency-measurement path.
+    pub fn infer(&self, model: &str, n_samples: usize, payload: &[f32]) -> Result<Vec<f32>> {
+        if n_samples == 0 {
+            bail!("n_samples must be positive");
+        }
+        let rx = self.submit(model, n_samples, payload)?;
+        self.recv(rx)
+    }
+
+    /// In-flight request count (diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        // closing the write half unblocks the reader thread
+        if let Ok(w) = self.write.lock() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(t) = self.reader_thread.take() {
+            let _ = t.join();
+        }
+    }
+}

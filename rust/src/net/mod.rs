@@ -1,0 +1,26 @@
+//! The remote-inference transport — the reproduction of the paper's
+//! "prototype C++ API and library" (§V-A) that carried inference
+//! between Corona compute nodes and the DataScale over Infiniband.
+//!
+//! * [`protocol`] — a length-prefixed binary wire format (little
+//!   endian, f32 payloads at the precision boundary of the runtime).
+//! * [`server`]   — a threaded TCP server: one reader thread per
+//!   connection feeding the [`crate::coordinator::Coordinator`],
+//!   responses written back as they complete (out-of-order safe:
+//!   responses carry the request id).
+//! * [`client`]   — the client library: synchronous `infer`, plus the
+//!   pipelined `submit`/`recv` pair used for throughput runs ("The
+//!   client sends mini-batch n+1 to the server before inference
+//!   results for mini-batch n are returned", §V-A).
+//!
+//! No tokio in the offline build environment — plain `std::net` with
+//! a thread per connection, which for the paper's rank counts
+//! (tens of clients) is the honest equivalent of the prototype.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use protocol::{Request, Response, Status};
+pub use server::Server;

@@ -1,0 +1,344 @@
+//! Wire protocol: length-prefixed binary frames, little endian.
+//!
+//! ```text
+//! request  := MAGIC(4) op(1=Infer) id(8) model_len(2) model(...)
+//!             priority(1) n_samples(4) payload_len(4) payload(f32 LE ...)
+//! response := MAGIC(4) op(2=Result) id(8) status(1)
+//!             payload_len(4) payload(f32 LE ... | utf-8 error)
+//! ```
+//!
+//! The payload is `n_samples × input_elems` f32s on the way in and
+//! `n_samples × output_elems` f32s on the way out; the server knows
+//! the shapes from the model manifest, and validates both.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Frame magic: "CgSm".
+pub const MAGIC: [u8; 4] = *b"CgSm";
+
+/// Maximum accepted payload (64K samples of MIR ≈ 600 MB would be
+/// absurd; cap at 256 MiB).
+pub const MAX_PAYLOAD_BYTES: u32 = 256 * 1024 * 1024;
+
+const OP_INFER: u8 = 1;
+const OP_RESULT: u8 = 2;
+
+/// Response status byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    Error,
+}
+
+impl Status {
+    fn to_byte(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Error => 1,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<Status> {
+        match b {
+            0 => Ok(Status::Ok),
+            1 => Ok(Status::Error),
+            other => bail!("invalid status byte {other}"),
+        }
+    }
+}
+
+/// An inference request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    /// 0 = critical (in-the-loop), 1 = deferred (on-the-loop).
+    pub priority: u8,
+    pub n_samples: u32,
+    pub payload: Vec<f32>,
+}
+
+/// An inference response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub status: Status,
+    /// f32 rows when Ok; UTF-8 error message bytes (as f32-packed? no
+    /// — raw bytes) when Error.
+    pub payload: Vec<u8>,
+}
+
+impl Response {
+    pub fn ok(id: u64, rows: &[f32]) -> Response {
+        Response { id, status: Status::Ok, payload: f32s_to_bytes(rows) }
+    }
+
+    pub fn error(id: u64, message: &str) -> Response {
+        Response { id, status: Status::Error, payload: message.as_bytes().to_vec() }
+    }
+
+    pub fn rows(&self) -> Result<Vec<f32>> {
+        match self.status {
+            Status::Ok => bytes_to_f32s(&self.payload),
+            Status::Error => bail!(
+                "server error: {}",
+                String::from_utf8_lossy(&self.payload)
+            ),
+        }
+    }
+}
+
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("payload length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ------------------------------------------------------------ write
+
+/// Serialise a request into one contiguous buffer (a single write
+/// syscall keeps small-request latency down — see §Perf).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let model = req.model.as_bytes();
+    let payload_bytes = req.payload.len() * 4;
+    let mut buf = Vec::with_capacity(4 + 1 + 8 + 2 + model.len() + 4 + 4 + payload_bytes);
+    buf.extend_from_slice(&MAGIC);
+    buf.push(OP_INFER);
+    buf.extend_from_slice(&req.id.to_le_bytes());
+    buf.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    buf.extend_from_slice(model);
+    buf.push(req.priority);
+    buf.extend_from_slice(&req.n_samples.to_le_bytes());
+    buf.extend_from_slice(&(payload_bytes as u32).to_le_bytes());
+    for x in &req.payload {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    buf
+}
+
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> Result<()> {
+    w.write_all(&encode_request(req))?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + 1 + 8 + 1 + 4 + resp.payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(OP_RESULT);
+    buf.extend_from_slice(&resp.id.to_le_bytes());
+    buf.push(resp.status.to_byte());
+    buf.extend_from_slice(&(resp.payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&resp.payload);
+    buf
+}
+
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+    w.write_all(&encode_response(resp))?;
+    w.flush()?;
+    Ok(())
+}
+
+// ------------------------------------------------------------- read
+
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    // distinguish clean EOF (no frame) from a truncated frame
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-frame ({filled} bytes in)");
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+fn read_header<R: Read>(r: &mut R, expected_op: u8) -> Result<Option<u64>> {
+    let mut head = [0u8; 13];
+    if !read_exact_or_eof(r, &mut head)? {
+        return Ok(None);
+    }
+    if head[0..4] != MAGIC {
+        bail!("bad frame magic {:02x?}", &head[0..4]);
+    }
+    if head[4] != expected_op {
+        bail!("unexpected opcode {} (wanted {expected_op})", head[4]);
+    }
+    let id = u64::from_le_bytes(head[5..13].try_into().unwrap());
+    Ok(Some(id))
+}
+
+fn checked_len(len: u32) -> Result<usize> {
+    if len > MAX_PAYLOAD_BYTES {
+        bail!("payload {len} exceeds cap {MAX_PAYLOAD_BYTES}");
+    }
+    Ok(len as usize)
+}
+
+/// Read one request frame; `Ok(None)` on clean EOF.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Option<Request>> {
+    let Some(id) = read_header(r, OP_INFER)? else {
+        return Ok(None);
+    };
+    let mut len2 = [0u8; 2];
+    read_exact(r, &mut len2)?;
+    let model_len = u16::from_le_bytes(len2) as usize;
+    let mut model = vec![0u8; model_len];
+    read_exact(r, &mut model)?;
+    let mut prio = [0u8; 1];
+    read_exact(r, &mut prio)?;
+    if prio[0] > 1 {
+        bail!("invalid priority byte {}", prio[0]);
+    }
+    let mut word = [0u8; 4];
+    read_exact(r, &mut word)?;
+    let n_samples = u32::from_le_bytes(word);
+    read_exact(r, &mut word)?;
+    let payload_len = checked_len(u32::from_le_bytes(word))?;
+    let mut payload = vec![0u8; payload_len];
+    read_exact(r, &mut payload)?;
+    Ok(Some(Request {
+        id,
+        model: String::from_utf8(model).map_err(|e| anyhow!("model name: {e}"))?,
+        priority: prio[0],
+        n_samples,
+        payload: bytes_to_f32s(&payload)?,
+    }))
+}
+
+/// Read one response frame; `Ok(None)` on clean EOF.
+pub fn read_response<R: Read>(r: &mut R) -> Result<Option<Response>> {
+    let Some(id) = read_header(r, OP_RESULT)? else {
+        return Ok(None);
+    };
+    let mut status = [0u8; 1];
+    read_exact(r, &mut status)?;
+    let mut word = [0u8; 4];
+    read_exact(r, &mut word)?;
+    let payload_len = checked_len(u32::from_le_bytes(word))?;
+    let mut payload = vec![0u8; payload_len];
+    read_exact(r, &mut payload)?;
+    Ok(Some(Response { id, status: Status::from_byte(status[0])?, payload }))
+}
+
+fn read_exact<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<()> {
+    if !read_exact_or_eof(r, buf)? {
+        bail!("unexpected EOF");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request {
+            id: 42,
+            model: "hermit/mat3".into(),
+            priority: 0,
+            n_samples: 2,
+            payload: vec![1.0, -2.5, 3.25, 0.0],
+        };
+        let bytes = encode_request(&req);
+        let got = read_request(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got, req);
+    }
+
+    #[test]
+    fn response_roundtrip_ok() {
+        let resp = Response::ok(7, &[0.5, 1.5]);
+        let bytes = encode_response(&resp);
+        let got = read_response(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got.id, 7);
+        assert_eq!(got.rows().unwrap(), vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn response_roundtrip_error() {
+        let resp = Response::error(9, "no such model");
+        let bytes = encode_response(&resp);
+        let got = read_response(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got.status, Status::Error);
+        let err = got.rows().unwrap_err().to_string();
+        assert!(err.contains("no such model"), "{err}");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_request(&mut &empty[..]).unwrap().is_none());
+        assert!(read_response(&mut &empty[..]).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_error() {
+        let req = Request { id: 1, model: "m".into(), priority: 0, n_samples: 1, payload: vec![1.0] };
+        let bytes = encode_request(&req);
+        let cut = &bytes[..bytes.len() - 2];
+        assert!(read_request(&mut &cut[..]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode_request(&Request {
+            id: 1,
+            model: "m".into(),
+            priority: 0,
+            n_samples: 1,
+            payload: vec![1.0],
+        });
+        bytes[0] = b'X';
+        assert!(read_request(&mut &bytes[..]).is_err());
+    }
+
+    #[test]
+    fn wrong_opcode_rejected() {
+        let bytes = encode_response(&Response::ok(1, &[1.0]));
+        assert!(read_request(&mut &bytes[..]).is_err());
+    }
+
+    #[test]
+    fn oversized_payload_rejected() {
+        // hand-build a request header claiming a huge payload
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(1);
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'm');
+        buf.push(0); // priority
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(MAX_PAYLOAD_BYTES + 1).to_le_bytes());
+        assert!(read_request(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let xs = vec![f32::MIN, -0.0, 0.0, 1.5e-30, f32::MAX];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap(), xs);
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! The disaggregated inference server.
+//!
+//! One accept loop; per connection, a reader thread that parses
+//! request frames, submits them to the coordinator, and a small
+//! per-request completion thread-free path: the coordinator's
+//! response receiver is handed to a per-connection writer thread
+//! through a channel, so responses stream back as they complete
+//! (requests from one client may complete out of order across
+//! instances; frames carry ids).
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::Priority;
+use crate::coordinator::Coordinator;
+
+use super::protocol::{self, Response};
+
+/// Server handle: accepts connections until shut down.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    connections: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `coordinator`.
+    pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+
+        let accept_shutdown = Arc::clone(&shutdown);
+        let accept_connections = Arc::clone(&connections);
+        let accept_thread = std::thread::Builder::new()
+            .name("cogsim-accept".into())
+            .spawn(move || {
+                // Non-blocking accept so shutdown is prompt.
+                listener.set_nonblocking(true).expect("nonblocking listener");
+                loop {
+                    if accept_shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            accept_connections.fetch_add(1, Ordering::Relaxed);
+                            let coordinator = Arc::clone(&coordinator);
+                            let shutdown = Arc::clone(&accept_shutdown);
+                            std::thread::Builder::new()
+                                .name("cogsim-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_connection(stream, coordinator, shutdown);
+                                })
+                                .expect("spawn connection handler");
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(_) => return,
+                    }
+                }
+            })?;
+
+        Ok(Server {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            connections,
+        })
+    }
+
+    /// The bound address (use with "127.0.0.1:0" for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn connections_accepted(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting; existing connections drain on client close.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coordinator: Arc<Coordinator>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true)?; // latency-bound small frames
+    let write_stream = stream.try_clone()?;
+
+    // Writer thread: serialises responses back to the client in
+    // completion order.
+    let (resp_tx, resp_rx): (Sender<Response>, Receiver<Response>) = channel();
+    let writer = std::thread::Builder::new()
+        .name("cogsim-writer".into())
+        .spawn(move || {
+            let mut w = write_stream;
+            while let Ok(resp) = resp_rx.recv() {
+                if protocol::write_response(&mut w, &resp).is_err() {
+                    return;
+                }
+            }
+        })?;
+
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Some(req) = protocol::read_request(&mut reader)? else {
+            break; // clean client close
+        };
+        let id = req.id;
+
+        // validate sample count against payload
+        let submit = (|| -> Result<std::sync::mpsc::Receiver<_>> {
+            let model = coordinator.registry().resolve(&req.model)?;
+            let in_el = coordinator.engine().spec(model)?.input_elems();
+            if req.payload.len() != req.n_samples as usize * in_el {
+                anyhow::bail!(
+                    "payload {} != {} samples x {in_el}",
+                    req.payload.len(),
+                    req.n_samples
+                );
+            }
+            let priority = if req.priority == 1 { Priority::Deferred } else { Priority::Critical };
+            coordinator.submit_with_priority(&req.model, req.payload, priority)
+        })();
+
+        match submit {
+            Ok(rx) => {
+                // completion forwarder: tiny thread per in-flight
+                // request keeps responses out-of-order capable without
+                // an async runtime.  In-flight depth is bounded by the
+                // client's pipelining window.
+                let resp_tx = resp_tx.clone();
+                std::thread::Builder::new()
+                    .name("cogsim-complete".into())
+                    .spawn(move || {
+                        let resp = match rx.recv() {
+                            Ok(Ok(rows)) => Response::ok(id, &rows),
+                            Ok(Err(e)) => Response::error(id, &e),
+                            Err(_) => Response::error(id, "coordinator dropped request"),
+                        };
+                        let _ = resp_tx.send(resp);
+                    })?;
+            }
+            Err(e) => {
+                resp_tx.send(Response::error(id, &format!("{e:#}")))?;
+            }
+        }
+    }
+
+    drop(resp_tx);
+    let _ = writer.join();
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Analytic model of the disaggregation link: Mellanox Infiniband
+//! ConnectX-6, "up to 100Gb/s bandwidth and less than 1µs latency"
+//! (§II-A), driven through the paper's prototype C++ remote-inference
+//! API.
+//!
+//! The wire itself is fast; what the paper's remote measurements show
+//! (Fig. 15: +0.01 ms at mini-batch 4, +1.14 ms at 16K over local
+//! C++) is the *software* path: serialisation, the message rendezvous
+//! and a single-stream effective bandwidth well under line rate.  The
+//! model:
+//!
+//! ```text
+//! overhead(bytes) = 2·wire_latency + soft_per_msg + bytes/eff_bw
+//! ```
+//!
+//! For throughput the client double-buffers (sends mini-batch n+1
+//! before n returns, §V-A), overlapping roughly half of the transfer
+//! with device execution — calibrated to Fig. 16's 6.4 M samples/s at
+//! 16K remote vs 8.14 M local.
+
+/// Link + software-path constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Link {
+    /// One-way wire latency, seconds.
+    pub wire_latency_s: f64,
+    /// Software cost per request/response pair (serialisation, recv
+    /// wakeup, completion handling), seconds.
+    pub soft_per_msg_s: f64,
+    /// Effective single-stream bandwidth through the prototype API,
+    /// bytes/s.
+    pub eff_bandwidth: f64,
+    /// Raw line rate, bytes/s (reported, not the software bottleneck).
+    pub line_rate: f64,
+    /// Fraction of the transfer hidden behind device execution when
+    /// the client double-buffers.
+    pub async_overlap: f64,
+}
+
+impl Link {
+    /// The Corona <-> DataScale link from the paper.
+    pub fn infiniband_cx6() -> Link {
+        Link {
+            wire_latency_s: 1e-6,          // "less than 1µs latency"
+            soft_per_msg_s: 8e-6,          // prototype C++ API per-message cost
+            eff_bandwidth: 2.1e9,          // single-stream software path
+            line_rate: 100e9 / 8.0,        // "up to 100Gb/s"
+            async_overlap: 0.5,
+        }
+    }
+
+    /// An ideal link (zero everything) — the node-local limit.
+    pub fn local() -> Link {
+        Link {
+            wire_latency_s: 0.0,
+            soft_per_msg_s: 0.0,
+            eff_bandwidth: f64::INFINITY,
+            line_rate: f64::INFINITY,
+            async_overlap: 1.0,
+        }
+    }
+
+    /// Round-trip overhead added to one remote inference of
+    /// `bytes_total` (request payload + response payload), seconds.
+    pub fn rtt_overhead_s(&self, bytes_total: f64) -> f64 {
+        2.0 * self.wire_latency_s + self.soft_per_msg_s + bytes_total / self.eff_bandwidth
+    }
+
+    /// Remote latency given node-local latency and payload bytes.
+    pub fn remote_latency_s(&self, local_latency_s: f64, bytes_total: f64) -> f64 {
+        local_latency_s + self.rtt_overhead_s(bytes_total)
+    }
+
+    /// Effective period between completed mini-batches under async
+    /// double-buffering (the paper's remote-throughput trick).
+    pub fn remote_period_s(&self, local_latency_s: f64, bytes_total: f64) -> f64 {
+        local_latency_s + self.rtt_overhead_s(bytes_total) * (1.0 - self.async_overlap)
+    }
+
+    /// Remote throughput in samples/s for a mini-batch of `n` samples.
+    pub fn remote_throughput(
+        &self,
+        local_latency_s: f64,
+        bytes_total: f64,
+        n: usize,
+    ) -> f64 {
+        n as f64 / self.remote_period_s(local_latency_s, bytes_total)
+    }
+}
+
+/// Payload bytes for a Hermit/MIR inference round trip at half
+/// precision (input up, output back — the paper's remote tests move
+/// both directions, §V-A).
+pub fn payload_bytes(input_elems: usize, output_elems: usize, batch: usize) -> f64 {
+    2.0 * (input_elems + output_elems) as f64 * batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HERMIT_IN: usize = 42;
+    const HERMIT_OUT: usize = 30;
+
+    #[test]
+    fn calibration_anchor_small_batch_overhead() {
+        // Fig. 15: remote four-sample latency 0.05 ms vs the 0.04 ms
+        // local minimum -> ~0.01 ms added.
+        let link = Link::infiniband_cx6();
+        let over = link.rtt_overhead_s(payload_bytes(HERMIT_IN, HERMIT_OUT, 4));
+        assert!((8e-6..=14e-6).contains(&over), "{over}");
+    }
+
+    #[test]
+    fn calibration_anchor_16k_overhead() {
+        // Fig. 15: "At a mini-batch size of 16K … the largest
+        // difference … with the C++ API at 1.14ms".
+        let link = Link::infiniband_cx6();
+        let over = link.rtt_overhead_s(payload_bytes(HERMIT_IN, HERMIT_OUT, 16384));
+        assert!((over / 1.14e-3 - 1.0).abs() < 0.15, "{over}");
+    }
+
+    #[test]
+    fn calibration_anchor_remote_throughput_16k() {
+        // Fig. 16: "a maximum remote inference throughput of 6.4M
+        // samples/s" at 16K, against the 8.14M local.
+        let link = Link::infiniband_cx6();
+        let local = 16384.0 / 8.14e6; // paper's local latency at 16K
+        let thr = link.remote_throughput(
+            local,
+            payload_bytes(HERMIT_IN, HERMIT_OUT, 16384),
+            16384,
+        );
+        assert!((thr / 6.4e6 - 1.0).abs() < 0.15, "{thr}");
+    }
+
+    #[test]
+    fn remote_slower_than_local_always() {
+        let link = Link::infiniband_cx6();
+        for b in crate::devices::PAPER_BATCHES {
+            let local = 1e-3;
+            let bytes = payload_bytes(HERMIT_IN, HERMIT_OUT, b);
+            assert!(link.remote_latency_s(local, bytes) > local);
+            assert!(link.remote_period_s(local, bytes) <= link.remote_latency_s(local, bytes));
+        }
+    }
+
+    #[test]
+    fn local_link_is_free() {
+        let link = Link::local();
+        assert_eq!(link.rtt_overhead_s(1e9), 0.0);
+        assert_eq!(link.remote_latency_s(2e-3, 1e9), 2e-3);
+    }
+
+    #[test]
+    fn payload_accounting_fp16() {
+        // 4 samples of Hermit: (42 + 30) * 2 bytes * 4 = 576 bytes.
+        assert_eq!(payload_bytes(42, 30, 4), 576.0);
+    }
+
+    #[test]
+    fn software_path_is_the_bottleneck() {
+        // The effective single-stream bandwidth must be far below the
+        // line rate — the paper's remote penalty is software, not wire.
+        let link = Link::infiniband_cx6();
+        assert!(link.eff_bandwidth < 0.25 * link.line_rate);
+    }
+}

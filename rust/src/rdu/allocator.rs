@@ -1,0 +1,325 @@
+//! Tile allocation across a DataScale node.
+//!
+//! The paper's system has **8 SN10 RDUs × 4 tiles** (§II-A) and the
+//! in-the-loop use case needs **multiple independent models resident
+//! concurrently** (5–10 per-material Hermit instances per rank, plus
+//! MIR — §II-B "should support concurrent execution", §IV).  Their
+//! §VI names the multi-model serving application as ongoing work;
+//! this module is the resource-management half of it:
+//!
+//! * a model deployment occupies 1..=4 tiles of a *single* RDU (the
+//!   hardware's deployment granularity, §V-A);
+//! * a model may be **replicated** across RDUs for load;
+//! * the allocator distributes tiles greedily by marginal utility:
+//!   at each step the model whose load-to-capacity ratio is worst
+//!   gets its cheapest upgrade (grow a deployment within its RDU, or
+//!   add a replica on a free RDU).
+//!
+//! The result feeds the scaling analysis (`harness::scaling`): how
+//! many MPI ranks can one DataScale node absorb before latency SLOs
+//! or the Infiniband link give out.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::devices::profiles::ModelProfile;
+
+use super::{RduApi, RduModel};
+
+/// The DataScale node geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeGeometry {
+    pub rdus: usize,
+    pub tiles_per_rdu: usize,
+}
+
+impl NodeGeometry {
+    /// The paper's system: "The DataScale system houses 8 SambaNova
+    /// Reconfigurable Dataflow Units", each with 4 tiles.
+    pub fn sn10_8() -> NodeGeometry {
+        NodeGeometry { rdus: 8, tiles_per_rdu: 4 }
+    }
+
+    pub fn total_tiles(&self) -> usize {
+        self.rdus * self.tiles_per_rdu
+    }
+}
+
+/// A model's demand declaration.
+#[derive(Debug, Clone)]
+pub struct Demand {
+    pub profile: ModelProfile,
+    /// Expected offered load, samples/s.
+    pub load: f64,
+    /// Typical request mini-batch (sets the operating point).
+    pub mini_batch: usize,
+}
+
+/// One deployment: a model replica on `tiles` tiles of one RDU.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Deployment {
+    pub model: String,
+    pub rdu: usize,
+    pub tiles: usize,
+}
+
+/// The allocation result.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub geometry: NodeGeometry,
+    pub deployments: Vec<Deployment>,
+}
+
+impl Allocation {
+    /// Deployments of one model.
+    pub fn of_model(&self, model: &str) -> Vec<&Deployment> {
+        self.deployments.iter().filter(|d| d.model == model).collect()
+    }
+
+    /// Tiles used on one RDU.
+    pub fn tiles_used(&self, rdu: usize) -> usize {
+        self.deployments.iter().filter(|d| d.rdu == rdu).map(|d| d.tiles).sum()
+    }
+
+    /// Total tiles in use.
+    pub fn total_tiles_used(&self) -> usize {
+        self.deployments.iter().map(|d| d.tiles).sum()
+    }
+
+    /// Aggregate serving capacity of a model at its operating
+    /// mini-batch, samples/s (replicas sum; load is balanced).
+    pub fn capacity(&self, model: &str, demand: &Demand, api: RduApi) -> f64 {
+        self.of_model(model)
+            .iter()
+            .map(|d| {
+                RduModel::new(demand.profile.clone(), d.tiles, api)
+                    .throughput_best(demand.mini_batch)
+            })
+            .sum()
+    }
+
+    /// Load-to-capacity ratio (>1 ⇒ overload) for a model.
+    pub fn utilisation(&self, model: &str, demand: &Demand, api: RduApi) -> f64 {
+        let cap = self.capacity(model, demand, api);
+        if cap == 0.0 {
+            f64::INFINITY
+        } else {
+            demand.load / cap
+        }
+    }
+}
+
+/// Greedy marginal-utility allocator.  Every demanded model gets at
+/// least one tile; remaining tiles go to whichever model currently
+/// has the worst load/capacity ratio, preferring to grow an existing
+/// deployment (cheaper: no extra weight copy) over replicating.
+pub fn allocate(
+    geometry: NodeGeometry,
+    demands: &BTreeMap<String, Demand>,
+    api: RduApi,
+) -> Result<Allocation> {
+    if demands.is_empty() {
+        bail!("no demands");
+    }
+    if demands.len() > geometry.total_tiles() {
+        bail!(
+            "{} models exceed {} tiles (one tile minimum each)",
+            demands.len(),
+            geometry.total_tiles()
+        );
+    }
+
+    let mut alloc = Allocation { geometry, deployments: Vec::new() };
+    let mut rdu_free: Vec<usize> = vec![geometry.tiles_per_rdu; geometry.rdus];
+
+    // 1. seed: one tile per model, round-robin across RDUs so models
+    //    start spread out (independent queues, §II-B).
+    let mut rdu_cursor = 0usize;
+    for model in demands.keys() {
+        // find the next RDU with a free tile
+        let mut tries = 0;
+        while rdu_free[rdu_cursor] == 0 {
+            rdu_cursor = (rdu_cursor + 1) % geometry.rdus;
+            tries += 1;
+            if tries > geometry.rdus {
+                bail!("no free tiles during seeding");
+            }
+        }
+        alloc.deployments.push(Deployment {
+            model: model.clone(),
+            rdu: rdu_cursor,
+            tiles: 1,
+        });
+        rdu_free[rdu_cursor] -= 1;
+        rdu_cursor = (rdu_cursor + 1) % geometry.rdus;
+    }
+
+    // 2. greedy: hand out remaining tiles one at a time.
+    while rdu_free.iter().sum::<usize>() > 0 {
+        // most-overloaded model first
+        let (model, _) = match demands
+            .iter()
+            .map(|(m, d)| (m, alloc.utilisation(m, d, api)))
+            .filter(|(_, u)| *u > 0.0)
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+        {
+            Some(x) => x,
+            None => break,
+        };
+        let demand = &demands[model];
+
+        // stop when everything is comfortably provisioned
+        if alloc.utilisation(model, demand, api) < 0.5 {
+            break;
+        }
+
+        // (a) grow an existing deployment in place if its RDU has room
+        let mut grown = false;
+        let mut grow_idx: Option<usize> = None;
+        for (i, d) in alloc.deployments.iter().enumerate() {
+            if d.model == *model && d.tiles < geometry.tiles_per_rdu && rdu_free[d.rdu] > 0 {
+                grow_idx = Some(i);
+                break;
+            }
+        }
+        if let Some(i) = grow_idx {
+            let rdu = alloc.deployments[i].rdu;
+            alloc.deployments[i].tiles += 1;
+            rdu_free[rdu] -= 1;
+            grown = true;
+        }
+        // (b) otherwise replicate onto the emptiest RDU with space
+        if !grown {
+            let best_rdu = (0..geometry.rdus)
+                .filter(|&r| rdu_free[r] > 0)
+                .max_by_key(|&r| rdu_free[r]);
+            match best_rdu {
+                Some(r) => {
+                    alloc.deployments.push(Deployment {
+                        model: model.clone(),
+                        rdu: r,
+                        tiles: 1,
+                    });
+                    rdu_free[r] -= 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    Ok(alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::profiles;
+
+    fn demand(load: f64, mini: usize) -> Demand {
+        Demand { profile: profiles::hermit(), load, mini_batch: mini }
+    }
+
+    fn hermit_materials(n: usize, load: f64) -> BTreeMap<String, Demand> {
+        (0..n)
+            .map(|m| (format!("hermit/mat{m}"), demand(load, 64)))
+            .collect()
+    }
+
+    #[test]
+    fn every_model_gets_a_tile() {
+        let demands = hermit_materials(8, 100_000.0);
+        let alloc = allocate(NodeGeometry::sn10_8(), &demands, RduApi::CppOptimized).unwrap();
+        for m in demands.keys() {
+            assert!(!alloc.of_model(m).is_empty(), "{m}");
+        }
+    }
+
+    #[test]
+    fn deployments_respect_rdu_boundaries() {
+        let demands = hermit_materials(4, 5_000_000.0);
+        let geo = NodeGeometry::sn10_8();
+        let alloc = allocate(geo, &demands, RduApi::CppOptimized).unwrap();
+        for d in &alloc.deployments {
+            assert!(d.tiles >= 1 && d.tiles <= geo.tiles_per_rdu);
+            assert!(d.rdu < geo.rdus);
+        }
+        for r in 0..geo.rdus {
+            assert!(alloc.tiles_used(r) <= geo.tiles_per_rdu, "rdu {r}");
+        }
+    }
+
+    #[test]
+    fn hot_model_gets_more_tiles() {
+        let mut demands = hermit_materials(2, 50_000.0);
+        demands.insert("hermit/hot".into(), demand(6_000_000.0, 1024));
+        let alloc = allocate(NodeGeometry::sn10_8(), &demands, RduApi::CppOptimized).unwrap();
+        let hot: usize = alloc.of_model("hermit/hot").iter().map(|d| d.tiles).sum();
+        let cold: usize = alloc.of_model("hermit/mat0").iter().map(|d| d.tiles).sum();
+        assert!(hot > cold, "hot {hot} vs cold {cold}");
+    }
+
+    #[test]
+    fn replication_across_rdus_when_one_is_full() {
+        // demand that exceeds a single 4-tile RDU's capacity forces
+        // replicas on other RDUs
+        let mut demands = BTreeMap::new();
+        demands.insert("hermit/huge".into(), demand(40_000_000.0, 4096));
+        let alloc = allocate(NodeGeometry::sn10_8(), &demands, RduApi::CppOptimized).unwrap();
+        let deps = alloc.of_model("hermit/huge");
+        assert!(deps.len() > 1, "expected replicas, got {deps:?}");
+        let rdus: std::collections::BTreeSet<_> = deps.iter().map(|d| d.rdu).collect();
+        assert!(rdus.len() > 1);
+    }
+
+    #[test]
+    fn capacity_and_utilisation_accounting() {
+        let demands = hermit_materials(1, 1_000_000.0);
+        let alloc = allocate(NodeGeometry::sn10_8(), &demands, RduApi::CppOptimized).unwrap();
+        let d = &demands["hermit/mat0"];
+        let cap = alloc.capacity("hermit/mat0", d, RduApi::CppOptimized);
+        assert!(cap > 0.0);
+        let util = alloc.utilisation("hermit/mat0", d, RduApi::CppOptimized);
+        assert!((util - 1_000_000.0 / cap).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overload_is_visible_not_hidden() {
+        // one tiny geometry, big demand: utilisation must exceed 1
+        let geo = NodeGeometry { rdus: 1, tiles_per_rdu: 1 };
+        let demands = hermit_materials(1, 50_000_000.0);
+        let alloc = allocate(geo, &demands, RduApi::CppOptimized).unwrap();
+        let util = alloc.utilisation(
+            "hermit/mat0",
+            &demands["hermit/mat0"],
+            RduApi::CppOptimized,
+        );
+        assert!(util > 1.0, "{util}");
+    }
+
+    #[test]
+    fn too_many_models_rejected() {
+        let geo = NodeGeometry { rdus: 1, tiles_per_rdu: 4 };
+        let demands = hermit_materials(5, 1000.0);
+        assert!(allocate(geo, &demands, RduApi::CppOptimized).is_err());
+    }
+
+    #[test]
+    fn paper_deployment_shape_fits() {
+        // 8 per-material Hermit models + MIR on one SN10-8: fits with
+        // room to spare, nothing overloaded at paper-scale loads
+        // (20-30K inferences/timestep/rank * O(10) ranks).
+        let mut demands = hermit_materials(8, 300_000.0);
+        demands.insert(
+            "mir".into(),
+            Demand { profile: profiles::mir_noln(), load: 100_000.0, mini_batch: 256 },
+        );
+        let geo = NodeGeometry::sn10_8();
+        let alloc = allocate(geo, &demands, RduApi::CppOptimized).unwrap();
+        assert!(alloc.total_tiles_used() <= geo.total_tiles());
+        for (m, d) in &demands {
+            let u = alloc.utilisation(m, d, RduApi::CppOptimized);
+            assert!(u <= 1.0, "{m}: {u}");
+        }
+    }
+}

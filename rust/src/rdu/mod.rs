@@ -1,0 +1,428 @@
+//! Dataflow-accelerator (RDU) simulator.
+//!
+//! The SambaNova SN10 RDU is a spatial dataflow chip: the model is
+//! *placed* onto a fabric of compute/memory tiles and samples stream
+//! through a hardware pipeline — there are no per-kernel host
+//! launches.  Each RDU has 4 tiles; a model can be deployed on 1..4
+//! tiles (§V-A).  Two parameters the GPUs don't have:
+//!
+//! * **micro-batch**: the unit of data accumulated and sent across
+//!   the tiles during inference.  Must be ≤ the mini-batch.  Small
+//!   micro-batches under-fill the pipeline (per-micro overhead
+//!   dominates); big micro-batches overflow tile SRAM and spill
+//!   (Fig. 11/12's 10× spread at 32K).
+//! * **placement**: hand-optimised placement shortens the pipeline's
+//!   critical path (the paper's "optimized" configuration, Fig. 13).
+//!
+//! The model is a fill-drain pipeline:
+//!
+//! ```text
+//! latency(mini, micro) = host(api)
+//!                      + (depth - 1 + ceil(mini/micro)) · stage(micro)
+//! stage(micro) = t_stage_min + micro · t_sample(tiles) · spill(micro)
+//! ```
+//!
+//! calibrated to the paper's anchors: 0.04 ms minimum local latency
+//! (C++ API, Fig. 13), 8.14 M samples/s at 16K (Fig. 14), a 10×
+//! best-to-worst micro-batch spread at 32K on one RDU (Fig. 12), and
+//! the "preferred multiple-of-6" bonus (§V-C).
+
+pub mod allocator;
+
+use crate::devices::profiles::ModelProfile;
+
+/// Software stack used to drive the RDU (Fig. 13/14's three
+/// configurations plus the preferred-MB variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RduApi {
+    /// SambaFlow Python API, compiler-default placement ("naive").
+    Python,
+    /// Python API with hand-optimised model placement ("optimized").
+    PythonOptimized,
+    /// C++ API with hand-optimised placement (best; used for remote).
+    CppOptimized,
+}
+
+impl RduApi {
+    pub const ALL: [RduApi; 3] = [RduApi::Python, RduApi::PythonOptimized, RduApi::CppOptimized];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RduApi::Python => "Python (naive)",
+            RduApi::PythonOptimized => "Python (optimized placement)",
+            RduApi::CppOptimized => "C++ (optimized placement)",
+        }
+    }
+
+    /// Fixed host-side overhead per inference request, µs.  The C++
+    /// API "more than halve[s]" small-batch latency vs Python
+    /// (Fig. 13).
+    fn host_us(&self) -> f64 {
+        match self {
+            RduApi::Python => 75.0,
+            RduApi::PythonOptimized => 70.0,
+            RduApi::CppOptimized => 18.0,
+        }
+    }
+
+    /// Hand-optimised placement shortens the pipeline stages.
+    fn placement_speedup(&self) -> f64 {
+        match self {
+            RduApi::Python => 1.0,
+            RduApi::PythonOptimized | RduApi::CppOptimized => 1.55,
+        }
+    }
+
+    /// Per-micro-batch software cost.  The Python runtime's async
+    /// prefetcher amortises micro-batch handoffs better than the
+    /// prototype C++ API's synchronous enqueue — which is why the
+    /// paper sees Python edge out C++ at the two largest mini-batches
+    /// (Fig. 13) even though C++ wins everywhere else.
+    fn per_micro_us(&self) -> f64 {
+        match self {
+            RduApi::Python | RduApi::PythonOptimized => 0.55,
+            RduApi::CppOptimized => 1.2,
+        }
+    }
+}
+
+/// One deployed model on a tile allocation.
+#[derive(Debug, Clone)]
+pub struct RduModel {
+    pub profile: ModelProfile,
+    /// Tiles the model is placed on (1..=4; ¼ RDU to 1 RDU).
+    pub tiles: usize,
+    pub api: RduApi,
+    /// Round micro/mini batches to the hardware's preferred
+    /// multiple-of-6 sizes (§V-C "preferred MB").
+    pub preferred_mb: bool,
+}
+
+/// Per-tile SRAM available for streaming activations, bytes.
+const TILE_SRAM_BYTES: f64 = 8.0 * 1024.0 * 1024.0;
+
+/// Preferred multiple-of-6 sizes "exploit hardware properties of the
+/// DataScale" (§V-C): the fabric's vector lanes are 6-wide.
+const PREFERRED_MB_SPEEDUP: f64 = 0.88;
+
+impl RduModel {
+    pub fn new(profile: ModelProfile, tiles: usize, api: RduApi) -> Self {
+        assert!((1..=4).contains(&tiles), "an SN10 RDU has 4 tiles");
+        RduModel { profile, tiles, api, preferred_mb: false }
+    }
+
+    pub fn with_preferred_mb(mut self) -> Self {
+        self.preferred_mb = true;
+        self
+    }
+
+    /// Pipeline depth: how many spatial stages the placement cuts the
+    /// model into.  More tiles -> more fabric -> deeper pipeline but
+    /// proportionally faster stages.
+    pub fn depth(&self) -> usize {
+        // Hermit's 21 layers place onto ~2 stages per tile; MIR's
+        // conv pipeline is deeper per tile.
+        let per_tile = if self.profile.name.starts_with("mir") { 3 } else { 2 };
+        per_tile * self.tiles
+    }
+
+    /// Streaming throughput of the placed pipeline, seconds per
+    /// sample, once full (no spill).
+    fn t_sample_s(&self) -> f64 {
+        // Calibration: Hermit on 1 RDU (4 tiles), optimised placement,
+        // saturates around 8.14M samples/s incl. per-micro overheads
+        // (Fig. 14) => ~0.1 µs/sample streaming rate.  The fabric
+        // scales near-linearly with tiles for these small models
+        // (they fit even a single tile).
+        let full_rdu_rate = match self.profile.name {
+            "hermit" => 9.9e6,
+            // MIR's conv pipeline: >140K samples/s at 8K (Fig. 20).
+            _ => 0.148e6,
+        };
+        let rate = full_rdu_rate * self.tiles as f64 / 4.0 * self.api.placement_speedup() / 1.55;
+        1.0 / rate
+    }
+
+    /// Activation bytes a sample occupies while streaming tile-to-tile
+    /// (widest edge of the model at bf16).
+    fn stream_bytes_per_sample(&self) -> f64 {
+        if self.profile.name.starts_with("mir") {
+            // widest feature map: 48*48*16 at bf16
+            2.0 * 48.0 * 48.0 * 16.0
+        } else {
+            // widest FC edge: 2050 at bf16
+            2.0 * 2050.0
+        }
+    }
+
+    /// SRAM spill factor for a micro-batch: once the accumulated
+    /// micro-batch no longer fits tile SRAM, stages stall on fabric
+    /// DRAM (the right edge of Figs. 11/12).
+    fn spill_factor(&self, micro: usize) -> f64 {
+        let bytes = micro as f64 * self.stream_bytes_per_sample();
+        let sram = TILE_SRAM_BYTES * self.tiles as f64;
+        if bytes <= sram {
+            1.0
+        } else {
+            1.0 + 1.05 * (bytes / sram - 1.0).min(6.0)
+        }
+    }
+
+    /// Whether a (mini, micro) pair is valid on hardware: micro must
+    /// divide the work and fit the fabric queues (Figs. 11/12 mask
+    /// invalid/failed configs as white squares).
+    pub fn config_valid(&self, mini: usize, micro: usize) -> bool {
+        micro >= 1 && micro <= mini
+    }
+
+    /// Fixed per-micro-batch handoff cost, seconds.
+    fn t_min_s(&self) -> f64 {
+        0.45e-6 + self.api.per_micro_us() * 1e-6
+    }
+
+    /// Steady-state time between micro-batches once streaming
+    /// (includes the SRAM-spill penalty).
+    fn stage_s(&self, micro: usize) -> f64 {
+        self.t_min_s() + micro as f64 * self.t_sample_s() * self.spill_factor(micro)
+    }
+
+    /// Pipeline-fill time per stage for the *first* micro-batch
+    /// (spill does not apply while the fabric queues are still empty).
+    fn fill_stage_s(&self, micro: usize) -> f64 {
+        self.t_min_s() + micro as f64 * self.t_sample_s()
+    }
+
+    /// Node-local inference latency for (mini, micro), seconds:
+    /// `host + (depth-1)·fill + n_micro·stage`.
+    pub fn latency_s(&self, mini: usize, micro: usize) -> f64 {
+        assert!(self.config_valid(mini, micro), "invalid (mini={mini}, micro={micro})");
+        let n_micro = mini.div_ceil(micro) as f64;
+        let mut lat = self.api.host_us() * 1e-6
+            + (self.depth() - 1) as f64 * self.fill_stage_s(micro)
+            + n_micro * self.stage_s(micro);
+        if self.preferred_mb && micro % 6 == 0 && mini % micro == 0 {
+            lat *= PREFERRED_MB_SPEEDUP;
+        }
+        lat
+    }
+
+    /// The best micro-batch for a mini-batch (the paper "performed
+    /// parameter sweeps of the (mini-batch, micro-batch) landscape …
+    /// and report the maximum throughput and minimum latency", §V-C).
+    pub fn best_micro(&self, mini: usize) -> usize {
+        let mut best = (1usize, f64::INFINITY);
+        for micro in Self::micro_candidates(mini, self.preferred_mb) {
+            let l = self.latency_s(mini, micro);
+            if l < best.1 {
+                best = (micro, l);
+            }
+        }
+        best.0
+    }
+
+    /// Candidate micro-batch sizes for a sweep: powers of two up to
+    /// the mini-batch (the paper's Figs. 11/12 grid), plus
+    /// multiples-of-6 when preferred-MB is enabled.
+    pub fn micro_candidates(mini: usize, preferred: bool) -> Vec<usize> {
+        let mut v: Vec<usize> = std::iter::successors(Some(1usize), |&m| Some(m * 2))
+            .take_while(|&m| m <= mini)
+            .collect();
+        if preferred {
+            let mut m = 6;
+            while m <= mini {
+                if mini % m == 0 {
+                    v.push(m);
+                }
+                m += 6;
+            }
+            v.sort_unstable();
+            v.dedup();
+        }
+        v
+    }
+
+    /// Latency at the swept-optimal micro-batch.
+    pub fn latency_best_s(&self, mini: usize) -> f64 {
+        self.latency_s(mini, self.best_micro(mini))
+    }
+
+    /// Node-local throughput at the swept-optimal micro-batch
+    /// (synchronous request loop, like the paper's local tests).
+    pub fn throughput_best(&self, mini: usize) -> f64 {
+        mini as f64 / self.latency_best_s(mini)
+    }
+
+    /// SN10 RDU transistor count, billions.  The paper: "The A100 has
+    /// 1.3x the transistor count of the DataScale RDU" — 54.2/1.3.
+    pub const TRANSISTORS_B: f64 = 41.7;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::profiles;
+
+    fn rdu(api: RduApi) -> RduModel {
+        RduModel::new(profiles::hermit(), 4, api)
+    }
+
+    fn ms(s: f64) -> f64 {
+        s * 1e3
+    }
+
+    #[test]
+    fn calibration_anchor_min_latency() {
+        // Fig. 13: "At the smallest mini-batch sizes we observe a
+        // minimum latency of 0.04ms" (C++ optimised).
+        let m = rdu(RduApi::CppOptimized);
+        let l = ms(m.latency_best_s(1));
+        assert!((0.03..=0.055).contains(&l), "{l} ms");
+    }
+
+    #[test]
+    fn calibration_anchor_16k_throughput() {
+        // Fig. 14: "maximum throughput bandwidth of 8.14M samples/s at
+        // a mini-batch size of 16K" (C++ optimised).
+        let m = rdu(RduApi::CppOptimized);
+        let t = m.throughput_best(16384);
+        assert!((t / 8.14e6 - 1.0).abs() < 0.15, "{t}");
+    }
+
+    #[test]
+    fn cpp_more_than_halves_python_small_batch_latency() {
+        // Fig. 13: "inference latency is more than halved compared to
+        // the Python API" at the smallest mini-batches.
+        for mini in [1usize, 4] {
+            let py = rdu(RduApi::PythonOptimized).latency_best_s(mini);
+            let cpp = rdu(RduApi::CppOptimized).latency_best_s(mini);
+            assert!(py / cpp > 2.0, "mini={mini}: {}", py / cpp);
+        }
+        // still close to 2x at 16
+        let py = rdu(RduApi::PythonOptimized).latency_best_s(16);
+        let cpp = rdu(RduApi::CppOptimized).latency_best_s(16);
+        assert!(py / cpp > 1.8, "mini=16: {}", py / cpp);
+    }
+
+    #[test]
+    fn python_edges_out_cpp_at_largest_minibatches() {
+        // Fig. 13: "with the exception of the 2 largest mini-batch
+        // sizes, where the Python API provides slightly lower latency".
+        for mini in [16384usize, 32768] {
+            let py = rdu(RduApi::PythonOptimized).latency_best_s(mini);
+            let cpp = rdu(RduApi::CppOptimized).latency_best_s(mini);
+            assert!(py < cpp, "mini={mini}: {py} vs {cpp}");
+        }
+        // but not at mid-size batches
+        let py = rdu(RduApi::PythonOptimized).latency_best_s(256);
+        let cpp = rdu(RduApi::CppOptimized).latency_best_s(256);
+        assert!(cpp < py);
+    }
+
+    #[test]
+    fn optimized_placement_helps_especially_large_batches() {
+        // Fig. 13: "Hand-optimized model placement … provides benefits
+        // to the latency, especially at larger mini-batch sizes".
+        let naive = rdu(RduApi::Python);
+        let opt = rdu(RduApi::PythonOptimized);
+        let small_gain = naive.latency_best_s(4) / opt.latency_best_s(4);
+        let large_gain = naive.latency_best_s(32768) / opt.latency_best_s(32768);
+        assert!(large_gain > small_gain, "{small_gain} vs {large_gain}");
+        assert!(large_gain > 1.3);
+    }
+
+    #[test]
+    fn micro_batch_spread_is_10x_at_32k() {
+        // Fig. 12: "at a mini-batch size of 32K, the difference
+        // between the slowest and fastest micro-batch size is 10-fold".
+        let m = rdu(RduApi::PythonOptimized);
+        let lats: Vec<f64> = RduModel::micro_candidates(32768, false)
+            .into_iter()
+            .map(|micro| m.latency_s(32768, micro))
+            .collect();
+        let spread = lats.iter().cloned().fold(0.0f64, f64::max)
+            / lats.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((6.0..=16.0).contains(&spread), "spread {spread}");
+    }
+
+    #[test]
+    fn micro_batch_benign_at_small_mini() {
+        // Figs. 11/12: "at low mini-batch sizes, the micro-batch size
+        // has benign effects on performance".
+        let m = rdu(RduApi::PythonOptimized);
+        let lats: Vec<f64> = RduModel::micro_candidates(16, false)
+            .into_iter()
+            .map(|micro| m.latency_s(16, micro))
+            .collect();
+        let spread = lats.iter().cloned().fold(0.0f64, f64::max)
+            / lats.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread < 2.0, "spread {spread}");
+    }
+
+    #[test]
+    fn optimal_micro_is_interior_at_large_mini() {
+        // Figs. 11/12 highlight per-mini optimal micro sizes that are
+        // neither 1 nor the mini-batch itself at large mini.
+        let m = rdu(RduApi::PythonOptimized);
+        let best = m.best_micro(32768);
+        assert!(best > 1 && best < 32768, "best micro {best}");
+    }
+
+    #[test]
+    fn more_tiles_shift_the_optimum() {
+        // Fig. 12 vs Fig. 11: "providing more RDU tiles for model
+        // inference changes which mini-batch and micro-batch size
+        // combinations give optimal performance".
+        let one_tile = RduModel::new(profiles::hermit(), 1, RduApi::Python);
+        let four_tiles = RduModel::new(profiles::hermit(), 4, RduApi::Python);
+        assert_ne!(one_tile.best_micro(32768), four_tiles.best_micro(32768));
+    }
+
+    #[test]
+    fn more_tiles_is_faster() {
+        for mini in [256usize, 4096, 32768] {
+            let l1 = RduModel::new(profiles::hermit(), 1, RduApi::Python).latency_best_s(mini);
+            let l4 = RduModel::new(profiles::hermit(), 4, RduApi::Python).latency_best_s(mini);
+            assert!(l4 < l1, "mini {mini}");
+        }
+    }
+
+    #[test]
+    fn preferred_mb_improves_latency() {
+        // Fig. 13: "The 'preferred MB' optimization provides
+        // additional reduction in latency."
+        let base = rdu(RduApi::CppOptimized);
+        let pref = rdu(RduApi::CppOptimized).with_preferred_mb();
+        // 24 = 4·6 is both a power-of-2-adjacent size and a multiple
+        // of 6 that divides 96.
+        assert!(pref.latency_best_s(96) < base.latency_best_s(96));
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let m = rdu(RduApi::Python);
+        assert!(!m.config_valid(4, 8)); // micro > mini
+        assert!(m.config_valid(8, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "4 tiles")]
+    fn tile_count_bounds() {
+        RduModel::new(profiles::hermit(), 5, RduApi::Python);
+    }
+
+    #[test]
+    fn mir_hits_paper_throughput_targets() {
+        // Fig. 20: the DataScale reaches the 100K samples/s target at
+        // mini-batch 128 and exceeds 140K at 8K.
+        let m = RduModel::new(profiles::mir_noln(), 4, RduApi::CppOptimized);
+        assert!(m.throughput_best(128) >= 100_000.0, "{}", m.throughput_best(128));
+        assert!(m.throughput_best(8192) > 140_000.0, "{}", m.throughput_best(8192));
+    }
+
+    #[test]
+    fn transistor_ratio_matches_paper() {
+        // "The A100 has 1.3x the transistor count of the DataScale RDU."
+        let ratio = 54.2 / RduModel::TRANSISTORS_B;
+        assert!((ratio - 1.3).abs() < 0.01, "{ratio}");
+    }
+}

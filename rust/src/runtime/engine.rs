@@ -1,0 +1,267 @@
+//! The PJRT execution engine: compiled-executable cache + resident
+//! weight buffers.  This is the hot path of the serving system — one
+//! `execute_b` per mini-batch, zero Python, zero weight re-uploads.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+use xla::{FromRawBytes, HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{Manifest, ModelSpec};
+
+/// Wall-clock breakdown of one execution (feeds the §Perf analysis:
+/// the paper's GPU measurements exclude host<->device movement, the
+/// DataScale measurements include it — we report both pieces).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Host -> device input upload.
+    pub upload: Duration,
+    /// Device execution (incl. PJRT dispatch).
+    pub execute: Duration,
+    /// Device -> host result fetch.
+    pub fetch: Duration,
+}
+
+impl ExecTiming {
+    pub fn total(&self) -> Duration {
+        self.upload + self.execute + self.fetch
+    }
+
+    /// "Node-local GPU" accounting: the paper's GPU numbers exclude
+    /// data movement (simulation and model share the device).
+    pub fn compute_only(&self) -> Duration {
+        self.execute
+    }
+}
+
+/// One loaded model: resident weights + per-batch executables.
+struct LoadedModel {
+    spec: ModelSpec,
+    /// Weight buffers in calling-convention order, uploaded once.
+    weights: Vec<PjRtBuffer>,
+    /// batch size -> compiled executable.
+    exes: BTreeMap<usize, PjRtLoadedExecutable>,
+}
+
+/// The engine owns one PJRT client and every loaded model.
+///
+/// ## Thread-safety
+/// The `xla` crate's wrappers hold raw pointers and are `!Send`, but
+/// the underlying PJRT CPU client is thread-safe (its C++ API is
+/// documented thread-compatible and the CPU plugin serialises
+/// appropriately).  The coordinator keeps the engine behind a mutex
+/// (`coordinator::executor`) and only ever calls it from its executor
+/// threads, matching how a single physical accelerator serialises
+/// work in the paper's setup.
+pub struct Engine {
+    client: PjRtClient,
+    models: BTreeMap<String, LoadedModel>,
+    manifest: Manifest,
+}
+
+// SAFETY: PJRT CPU client/executable/buffer handles are usable from
+// any thread; the Rust wrappers are !Send only because they contain
+// raw pointers.  All mutation goes through &mut self or is internally
+// synchronised by PJRT.  See the struct docs for the usage contract.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU-PJRT engine and load `models` (all models in the
+    /// manifest when `None`).
+    pub fn load(artifacts_dir: impl AsRef<Path>, models: Option<&[&str]>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut engine = Engine { client, models: BTreeMap::new(), manifest };
+        let names: Vec<String> = match models {
+            Some(list) => list.iter().map(|s| s.to_string()).collect(),
+            None => engine.manifest.models.keys().cloned().collect(),
+        };
+        for name in names {
+            engine.load_model(&name)?;
+        }
+        Ok(engine)
+    }
+
+    fn load_model(&mut self, name: &str) -> Result<()> {
+        let spec = self.manifest.model(name)?.clone();
+
+        // --- weights: one upload, resident for the process lifetime ---
+        // NOTE: we read npz entries as Literals and upload via
+        // buffer_from_host_literal.  The direct
+        // PjRtBuffer::read_npz_by_name path mis-declares the element
+        // type (xla 0.1.6 passes ElementType where PJRT expects
+        // PrimitiveType, turning F32 arrays into F16 buffers).
+        let weights_path = self.manifest.weights_path(name)?;
+        let param_names: Vec<&str> = spec.params.iter().map(|p| p.name.as_str()).collect();
+        let literals =
+            xla::Literal::read_npz_by_name(&weights_path, &(), &param_names)
+                .map_err(|e| anyhow!("loading {weights_path:?}: {e}"))?;
+        let weights: Vec<PjRtBuffer> = literals
+            .iter()
+            .map(|lit| {
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("uploading weights: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        if weights.len() != spec.params.len() {
+            bail!("{name}: loaded {} weight buffers, expected {}", weights.len(), spec.params.len());
+        }
+
+        // --- executables: compile once per mini-batch size ---
+        let mut exes = BTreeMap::new();
+        for artifact in &spec.batches {
+            let path = self.manifest.hlo_path(name, artifact.batch)?;
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
+            exes.insert(artifact.batch, exe);
+        }
+
+        self.models.insert(name.to_string(), LoadedModel { spec, weights, exes });
+        Ok(())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        Ok(&self.model(model)?.spec)
+    }
+
+    fn model(&self, name: &str) -> Result<&LoadedModel> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not loaded (have {:?})", self.model_names()))
+    }
+
+    /// Execute one mini-batch at an exact compiled batch size.
+    ///
+    /// `input` must hold `batch * input_elems` f32s.  Returns
+    /// `batch * output_elems` f32s plus the timing breakdown.
+    pub fn execute(
+        &self,
+        model: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<(Vec<f32>, ExecTiming)> {
+        let loaded = self.model(model)?;
+        let spec = &loaded.spec;
+        let expected = batch * spec.input_elems();
+        if input.len() != expected {
+            bail!(
+                "{model}: input has {} elements, batch {batch} needs {expected}",
+                input.len()
+            );
+        }
+        let exe = loaded.exes.get(&batch).ok_or_else(|| {
+            anyhow!("{model}: no batch-{batch} executable (ladder {:?})", spec.batch_ladder())
+        })?;
+
+        let mut timing = ExecTiming::default();
+
+        // host -> device
+        let t0 = Instant::now();
+        let mut dims = vec![batch];
+        dims.extend_from_slice(&spec.input_shape);
+        let x_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(input, &dims, None)
+            .map_err(|e| anyhow!("upload: {e}"))?;
+        timing.upload = t0.elapsed();
+
+        // execute with resident weights (no weight copies!)
+        let t1 = Instant::now();
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(1 + loaded.weights.len());
+        args.push(&x_buf);
+        args.extend(loaded.weights.iter());
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("execute: {e}"))?;
+        timing.execute = t1.elapsed();
+
+        // device -> host
+        let t2 = Instant::now();
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e}"))?;
+        timing.fetch = t2.elapsed();
+
+        let expected_out = batch * spec.output_elems();
+        if out.len() != expected_out {
+            bail!("{model}: output has {} elements, expected {expected_out}", out.len());
+        }
+        Ok((out, timing))
+    }
+
+    /// Execute `n` samples by padding up to the smallest compiled
+    /// batch (or chunking through the largest).  This is what the
+    /// dynamic batcher calls; padding waste is the price of a fixed
+    /// executable ladder and is reported by [`padding_waste`].
+    pub fn execute_padded(&self, model: &str, input: &[f32]) -> Result<(Vec<f32>, ExecTiming)> {
+        let spec = &self.model(model)?.spec;
+        let in_el = spec.input_elems();
+        let out_el = spec.output_elems();
+        if input.len() % in_el != 0 {
+            bail!("{model}: input not a whole number of samples");
+        }
+        let n = input.len() / in_el;
+        if n == 0 {
+            return Ok((Vec::new(), ExecTiming::default()));
+        }
+        let ladder_max = *spec.batch_ladder().last().unwrap();
+
+        let mut out = Vec::with_capacity(n * out_el);
+        let mut timing = ExecTiming::default();
+        let mut done = 0usize;
+        while done < n {
+            let remaining = n - done;
+            let chunk = remaining.min(ladder_max);
+            let exe_batch = spec.batch_for(chunk);
+            let mut padded = vec![0f32; exe_batch * in_el];
+            padded[..chunk * in_el]
+                .copy_from_slice(&input[done * in_el..(done + chunk) * in_el]);
+            let (chunk_out, t) = self.execute(model, exe_batch, &padded)?;
+            out.extend_from_slice(&chunk_out[..chunk * out_el]);
+            timing.upload += t.upload;
+            timing.execute += t.execute;
+            timing.fetch += t.fetch;
+            done += chunk;
+        }
+        Ok((out, timing))
+    }
+
+    /// Fraction of executed samples that were padding for a request of
+    /// `n` samples (0.0 = perfect fit).
+    pub fn padding_waste(&self, model: &str, n: usize) -> Result<f64> {
+        let spec = &self.model(model)?.spec;
+        let ladder_max = *spec.batch_ladder().last().unwrap();
+        let mut executed = 0usize;
+        let mut done = 0usize;
+        while done < n {
+            let chunk = (n - done).min(ladder_max);
+            executed += spec.batch_for(chunk);
+            done += chunk;
+        }
+        if executed == 0 {
+            return Ok(0.0);
+        }
+        Ok(1.0 - n as f64 / executed as f64)
+    }
+}

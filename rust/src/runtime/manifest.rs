@@ -1,0 +1,299 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! Python compile path and this runtime.  Field layout mirrors
+//! `python/compile/aot.py::lower_model`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One named parameter in calling-convention order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered (model, mini-batch) artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchArtifact {
+    pub batch: usize,
+    pub hlo_file: String,
+}
+
+/// Everything the runtime needs to know about one model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Per-sample input shape (excludes the batch dimension).
+    pub input_shape: Vec<usize>,
+    /// Per-sample output shape (excludes the batch dimension).
+    pub output_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub weights_file: String,
+    pub weights_sha256: String,
+    pub batches: Vec<BatchArtifact>,
+    pub param_count: usize,
+}
+
+impl ModelSpec {
+    /// Elements per input sample.
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Elements per output sample.
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// The compiled mini-batch ladder, ascending.
+    pub fn batch_ladder(&self) -> Vec<usize> {
+        let mut ladder: Vec<usize> = self.batches.iter().map(|b| b.batch).collect();
+        ladder.sort_unstable();
+        ladder
+    }
+
+    /// The smallest compiled batch size that fits `n` samples, or the
+    /// largest available if `n` exceeds the ladder (caller then splits).
+    pub fn batch_for(&self, n: usize) -> usize {
+        let ladder = self.batch_ladder();
+        for &b in &ladder {
+            if b >= n {
+                return b;
+            }
+        }
+        *ladder.last().expect("model has no compiled batches")
+    }
+}
+
+/// The full artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dtype: String,
+    pub seed: u64,
+    pub models: BTreeMap<String, ModelSpec>,
+    /// Directory the manifest was loaded from (HLO/weights paths are
+    /// resolved relative to it).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let dtype = field_str(&root, "dtype")?.to_string();
+        if dtype != "f32" {
+            bail!("manifest dtype {dtype:?} unsupported (runtime executes f32)");
+        }
+        let seed = field_f64(&root, "seed")? as u64;
+
+        let mut models = BTreeMap::new();
+        let model_obj = root
+            .get("models")
+            .and_then(Value::as_object)
+            .ok_or_else(|| anyhow!("manifest missing models object"))?;
+        for (name, entry) in model_obj {
+            models.insert(name.clone(), parse_model(name, entry)?);
+        }
+        if models.is_empty() {
+            bail!("manifest contains no models");
+        }
+        Ok(Manifest { dtype, seed, models, dir })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of a model's HLO artifact for one batch size.
+    pub fn hlo_path(&self, model: &str, batch: usize) -> Result<PathBuf> {
+        let spec = self.model(model)?;
+        let artifact = spec
+            .batches
+            .iter()
+            .find(|b| b.batch == batch)
+            .ok_or_else(|| anyhow!("model {model:?} has no batch-{batch} artifact"))?;
+        Ok(self.dir.join(&artifact.hlo_file))
+    }
+
+    /// Absolute path of a model's weights npz.
+    pub fn weights_path(&self, model: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.model(model)?.weights_file))
+    }
+}
+
+fn field_str<'v>(v: &'v Value, key: &str) -> Result<&'v str> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("manifest missing string field {key:?}"))
+}
+
+fn field_f64(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("manifest missing numeric field {key:?}"))
+}
+
+fn shape_vec(v: &Value, key: &str) -> Result<Vec<usize>> {
+    v.get(key)
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("manifest missing array field {key:?}"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("non-integer dim in {key:?}")))
+        .collect()
+}
+
+fn parse_model(name: &str, entry: &Value) -> Result<ModelSpec> {
+    let params: Vec<ParamSpec> = entry
+        .get("params")
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("model {name:?}: missing params"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: field_str(p, "name")?.to_string(),
+                shape: shape_vec(p, "shape")?,
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    // Contract with aot.py: lexicographic name order == calling order.
+    let mut sorted = params.clone();
+    sorted.sort_by(|a, b| a.name.cmp(&b.name));
+    if sorted != params {
+        bail!("model {name:?}: param names not in calling order");
+    }
+
+    let batches: Vec<BatchArtifact> = entry
+        .get("batches")
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("model {name:?}: missing batches"))?
+        .iter()
+        .map(|b| {
+            Ok(BatchArtifact {
+                batch: b
+                    .get("batch")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow!("bad batch entry"))?,
+                hlo_file: field_str(b, "hlo_file")?.to_string(),
+            })
+        })
+        .collect::<Result<_>>()?;
+    if batches.is_empty() {
+        bail!("model {name:?}: empty batch ladder");
+    }
+
+    Ok(ModelSpec {
+        name: name.to_string(),
+        input_shape: shape_vec(entry, "input_shape")?,
+        output_shape: shape_vec(entry, "output_shape")?,
+        params,
+        weights_file: field_str(entry, "weights_file")?.to_string(),
+        weights_sha256: field_str(entry, "weights_sha256")?.to_string(),
+        batches,
+        param_count: field_f64(entry, "param_count")? as usize,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "dtype": "f32", "seed": 0,
+          "models": {
+            "toy": {
+              "input_shape": [42], "output_shape": [30],
+              "params": [
+                {"name": "p000_w", "shape": [42, 19]},
+                {"name": "p001_b", "shape": [19]}
+              ],
+              "weights_file": "toy.weights.npz",
+              "weights_sha256": "ab",
+              "batches": [
+                {"batch": 1, "hlo_file": "toy_b1.hlo.txt", "hlo_bytes": 10},
+                {"batch": 16, "hlo_file": "toy_b16.hlo.txt", "hlo_bytes": 10},
+                {"batch": 4, "hlo_file": "toy_b4.hlo.txt", "hlo_bytes": 10}
+              ],
+              "param_count": 817
+            }
+          }
+        }"#
+    }
+
+    fn load_sample() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("cogsim-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_model_spec() {
+        let m = load_sample();
+        let spec = m.model("toy").unwrap();
+        assert_eq!(spec.input_elems(), 42);
+        assert_eq!(spec.output_elems(), 30);
+        assert_eq!(spec.param_count, 817);
+        assert_eq!(spec.params[0].elements(), 42 * 19);
+    }
+
+    #[test]
+    fn ladder_sorted_and_batch_for() {
+        let m = load_sample();
+        let spec = m.model("toy").unwrap();
+        assert_eq!(spec.batch_ladder(), vec![1, 4, 16]);
+        assert_eq!(spec.batch_for(1), 1);
+        assert_eq!(spec.batch_for(3), 4);
+        assert_eq!(spec.batch_for(5), 16);
+        assert_eq!(spec.batch_for(99), 16); // caller must split
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = load_sample();
+        assert!(m.model("nope").is_err());
+        assert!(m.hlo_path("toy", 999).is_err());
+    }
+
+    #[test]
+    fn paths_are_resolved() {
+        let m = load_sample();
+        assert!(m.hlo_path("toy", 4).unwrap().ends_with("toy_b4.hlo.txt"));
+        assert!(m.weights_path("toy").unwrap().ends_with("toy.weights.npz"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Integration sanity: when `make artifacts` has run, the real
+        // manifest must parse and contain the paper's three models.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["hermit", "mir", "mir_noln"] {
+                assert!(m.models.contains_key(name), "missing {name}");
+            }
+            let hermit = m.model("hermit").unwrap();
+            assert_eq!(hermit.input_shape, vec![42]);
+            assert!(hermit.param_count > 2_700_000);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Layer-3 runtime: loads AOT artifacts and executes them via PJRT.
+//!
+//! The compile path (`make artifacts`) leaves three things in
+//! `artifacts/`: per-(model, batch) HLO text, a `.weights.npz` per
+//! model, and `manifest.json` describing shapes and calling
+//! conventions.  This module turns those into live PJRT executables:
+//!
+//! * [`manifest`] — typed view of `manifest.json` (parsed with the
+//!   in-tree JSON parser).
+//! * [`engine`]   — the [`Engine`]: one PJRT client, per-model weight
+//!   buffers uploaded **once** (`PjRtBuffer::read_npz_by_name`), one
+//!   compiled executable per (model, mini-batch) reused for every
+//!   request via `execute_b` — the request path never re-uploads
+//!   weights and never touches Python.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, ExecTiming};
+pub use manifest::{BatchArtifact, Manifest, ModelSpec, ParamSpec};

@@ -1,0 +1,133 @@
+//! A micro-benchmark harness (criterion replacement for the offline
+//! build).  Mirrors the paper's protocol (§V-A): warm up with 10
+//! mini-batches, then measure enough iterations that the wall-clock
+//! exceeds a target, reporting mean latency over all mini-batches.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// 95 % CI half-width over per-iteration samples.
+    pub ci95: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Throughput given work-items per iteration.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ±{:>8.3?}  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.ci95, self.iters
+        )
+    }
+}
+
+/// Benchmark runner with paper-style warmup and a time budget.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_duration: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // The paper warms up with 10 mini-batches and sizes runs to
+        // >10 s wall-clock; we default to a faster 0.5 s budget for CI
+        // and let `cargo bench` targets raise it.
+        Bencher { warmup_iters: 10, min_duration: Duration::from_millis(500), max_iters: 100_000 }
+    }
+}
+
+impl Bencher {
+    pub fn paper_protocol() -> Self {
+        Bencher { warmup_iters: 10, min_duration: Duration::from_secs(10), max_iters: 10_000_000 }
+    }
+
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 3, min_duration: Duration::from_millis(100), max_iters: 10_000 }
+    }
+
+    /// Run `f` repeatedly; returns timing statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_duration && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = stats::mean(&samples);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: Duration::from_secs_f64(mean),
+            p50: Duration::from_secs_f64(stats::percentile(&samples, 50.0)),
+            p95: Duration::from_secs_f64(stats::percentile(&samples, 95.0)),
+            min: Duration::from_secs_f64(
+                samples.iter().copied().fold(f64::INFINITY, f64::min),
+            ),
+            ci95: Duration::from_secs_f64(stats::ci95_halfwidth(&samples)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup_iters: 1, min_duration: Duration::from_millis(20), max_iters: 1000 };
+        let mut counter = 0u64;
+        let r = b.run("spin", || {
+            counter = counter.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.p95 >= r.p50);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bencher { warmup_iters: 0, min_duration: Duration::from_secs(5), max_iters: 50 };
+        let r = b.run("capped", || {});
+        assert_eq!(r.iters, 50);
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(10),
+            p50: Duration::from_millis(10),
+            p95: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+            ci95: Duration::ZERO,
+        };
+        // 100 items / 10 ms = 10_000 items/s
+        assert!((r.throughput(100) - 10_000.0).abs() < 1e-6);
+    }
+}

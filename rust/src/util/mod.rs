@@ -1,0 +1,20 @@
+//! In-tree substrates for the fully-offline build environment.
+//!
+//! The build image vendors only the `xla` PJRT bridge and its
+//! transitive dependencies — no serde, rand, criterion or proptest.
+//! Rather than stub those out, this module implements the small slice
+//! of each that the system needs:
+//!
+//! * [`json`]  — a recursive-descent JSON parser (for the AOT
+//!   manifest) and a writer (for results/ CSV-adjacent dumps).
+//! * [`rng`]   — SplitMix64 + xoshiro256** with normal/uniform/choice
+//!   sampling (workload generation, property tests).
+//! * [`stats`] — mean / stddev / percentiles / Student-t 95 % CI, the
+//!   paper's measurement methodology.
+//! * [`bench`] — a warmup+measure micro-benchmark harness used by the
+//!   `cargo bench` targets (criterion replacement).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

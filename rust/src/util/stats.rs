@@ -1,0 +1,139 @@
+//! Summary statistics matching the paper's measurement methodology:
+//! "All experiment measurements were replicated 5 times.  The figures
+//! … plot the mean of the 5 measurements with error bars indicating
+//! the 95% confidence interval."  (§V-A)
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Two-sided Student-t critical values at 95 % for small n (the paper
+/// replicates 5×, i.e. 4 degrees of freedom), falling back to the
+/// normal 1.96 beyond the table.
+fn t_critical_95(dof: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if dof == 0 {
+        return f64::INFINITY;
+    }
+    if dof <= TABLE.len() {
+        TABLE[dof - 1]
+    } else {
+        1.96
+    }
+}
+
+/// Half-width of the 95 % confidence interval on the mean.
+pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    t_critical_95(xs.len() - 1) * stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy
+/// (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// A replicated measurement: mean ± 95 % CI over n runs (the paper's
+/// plotting convention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Replicated {
+    pub mean: f64,
+    pub ci95: f64,
+    pub n: usize,
+}
+
+impl Replicated {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        Replicated { mean: mean(xs), ci95: ci95_halfwidth(xs), n: xs.len() }
+    }
+}
+
+impl std::fmt::Display for Replicated {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.6} ±{:.6}", self.mean, self.ci95)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[3.0]), 0.0);
+        assert_eq!(ci95_halfwidth(&[3.0]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn ci95_five_replicates_uses_t4() {
+        // n=5 -> dof=4 -> t = 2.776 (the paper's exact setting).
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let expect = 2.776 * stddev(&xs) / 5f64.sqrt();
+        assert!((ci95_halfwidth(&xs) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 75.0) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replicated_display() {
+        let r = Replicated::from_samples(&[1.0, 1.0, 1.0]);
+        assert_eq!(r.n, 3);
+        assert_eq!(r.ci95, 0.0);
+        assert!(format!("{r}").starts_with("1.0"));
+    }
+}

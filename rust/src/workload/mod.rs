@@ -1,0 +1,223 @@
+//! CogSim request-trace generators.
+//!
+//! The coordinator only ever observes a *request process*, which the
+//! paper specifies precisely enough to synthesise (§IV):
+//!
+//! * **Hydra + Hermit** (§IV-A): each MPI rank owns some zones; every
+//!   simulation timestep needs "two or three inference calculations
+//!   per zone", and requests from a rank are spread across *multiple
+//!   independent per-material Hermit models* ("an MPI rank might
+//!   typically require results for 5-10 different materials").  With
+//!   10 000 zones/GPU that is 20–30K inferences per timestep,
+//!   sharded over the material models — which is why small-batch
+//!   latency dominates.
+//! * **MIR** (§IV-B): each timestep processes the *mixed* zones —
+//!   "thousands to the hundreds of thousands" per GPU, varying over
+//!   the simulation — against a 100K samples/s/rank target.
+
+use crate::util::rng::Rng;
+
+/// One inference request as emitted by a simulation rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Simulation timestep the request belongs to.
+    pub timestep: usize,
+    /// Originating MPI rank.
+    pub rank: usize,
+    /// Target model instance (e.g. `hermit/mat3`).
+    pub model: String,
+    /// Number of samples in this request.
+    pub samples: usize,
+}
+
+/// Hydra-like in-the-loop Hermit workload.
+#[derive(Debug, Clone)]
+pub struct HydraWorkload {
+    /// MPI ranks issuing requests.
+    pub ranks: usize,
+    /// Zones per rank (paper: 100–1 000 for DCA, up to 10 000 with
+    /// Hermit).
+    pub zones_per_rank: usize,
+    /// Materials (= independent Hermit model instances) per rank,
+    /// paper: 5–10.
+    pub materials: usize,
+    /// Inference calculations per zone per timestep, paper: 2–3.
+    pub inferences_per_zone: (usize, usize),
+    pub seed: u64,
+}
+
+impl Default for HydraWorkload {
+    fn default() -> Self {
+        HydraWorkload {
+            ranks: 4,
+            zones_per_rank: 1000,
+            materials: 8,
+            inferences_per_zone: (2, 3),
+            seed: 0,
+        }
+    }
+}
+
+impl HydraWorkload {
+    /// Material-model name for an index (the registry key format).
+    pub fn material_model(material: usize) -> String {
+        format!("hermit/mat{material}")
+    }
+
+    /// Generate every request of one timestep.  Zones are assigned a
+    /// material (stable per zone via the per-timestep rng seed mix),
+    /// and each zone issues 2–3 single-sample inferences that the
+    /// coordinator may then batch — the paper's point is precisely
+    /// that the *natural* request grain is tiny.
+    pub fn timestep(&self, t: usize) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed ^ (t as u64).wrapping_mul(0x9E3779B9));
+        let mut reqs = Vec::new();
+        for rank in 0..self.ranks {
+            // per-rank per-material zone counts
+            let mut zones_of_material = vec![0usize; self.materials];
+            for _ in 0..self.zones_per_rank {
+                zones_of_material[rng.below(self.materials)] += 1;
+            }
+            for (mat, &zones) in zones_of_material.iter().enumerate() {
+                if zones == 0 {
+                    continue;
+                }
+                let (lo, hi) = self.inferences_per_zone;
+                let mut total = 0usize;
+                for _ in 0..zones {
+                    total += rng.range(lo, hi);
+                }
+                reqs.push(Request {
+                    timestep: t,
+                    rank,
+                    model: Self::material_model(mat),
+                    samples: total,
+                });
+            }
+        }
+        reqs
+    }
+
+    /// Total expected inferences per timestep (sanity/reporting).
+    pub fn expected_inferences_per_timestep(&self) -> usize {
+        let mean_ipz = (self.inferences_per_zone.0 + self.inferences_per_zone.1) as f64 / 2.0;
+        (self.ranks as f64 * self.zones_per_rank as f64 * mean_ipz) as usize
+    }
+}
+
+/// MIR mixed-zone workload: zone counts vary over the simulation
+/// ("The number of zones per timestep may vary throughout the
+/// simulation", §IV-B) — modelled as a slow sinusoidal drift around a
+/// base count with lognormal-ish jitter.
+#[derive(Debug, Clone)]
+pub struct MirWorkload {
+    pub ranks: usize,
+    /// Base mixed-zone count per rank per timestep.
+    pub base_zones: usize,
+    /// Peak-to-base variation over the simulation.
+    pub variation: f64,
+    pub seed: u64,
+}
+
+impl Default for MirWorkload {
+    fn default() -> Self {
+        MirWorkload { ranks: 2, base_zones: 4096, variation: 0.5, seed: 0 }
+    }
+}
+
+impl MirWorkload {
+    /// Mixed-zone requests for one timestep.
+    pub fn timestep(&self, t: usize) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed ^ (t as u64).wrapping_mul(0x51_7C_C1_B7));
+        let phase = (t as f64) / 50.0 * std::f64::consts::TAU;
+        (0..self.ranks)
+            .map(|rank| {
+                let drift = 1.0 + self.variation * phase.sin();
+                let jitter = (1.0 + 0.1 * rng.normal()).max(0.2);
+                let zones = ((self.base_zones as f64) * drift * jitter).max(1.0) as usize;
+                Request { timestep: t, rank, model: "mir".to_string(), samples: zones }
+            })
+            .collect()
+    }
+
+    /// The paper's MIR throughput target: "the target throughput of
+    /// the model is 100,000 samples per second per MPI rank".
+    pub const TARGET_SAMPLES_PER_SEC_PER_RANK: f64 = 100_000.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hydra_request_volume_matches_paper_rates() {
+        // 10K zones/GPU, 2-3 inferences/zone -> "20,000-30,000
+        // inference calculations … per timestep" (§IV-A), here per rank.
+        let w = HydraWorkload {
+            ranks: 1,
+            zones_per_rank: 10_000,
+            ..Default::default()
+        };
+        let total: usize = w.timestep(0).iter().map(|r| r.samples).sum();
+        assert!((20_000..=30_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn hydra_spreads_over_materials() {
+        let w = HydraWorkload::default();
+        let reqs = w.timestep(3);
+        let mats: std::collections::BTreeSet<_> =
+            reqs.iter().map(|r| r.model.clone()).collect();
+        assert_eq!(mats.len(), w.materials);
+        // every request targets a per-material hermit instance
+        assert!(reqs.iter().all(|r| r.model.starts_with("hermit/mat")));
+    }
+
+    #[test]
+    fn hydra_deterministic_per_seed() {
+        let w = HydraWorkload::default();
+        assert_eq!(w.timestep(7), w.timestep(7));
+        let w2 = HydraWorkload { seed: 1, ..Default::default() };
+        assert_ne!(w.timestep(7), w2.timestep(7));
+    }
+
+    #[test]
+    fn hydra_all_ranks_present() {
+        let w = HydraWorkload::default();
+        let ranks: std::collections::BTreeSet<_> =
+            w.timestep(0).iter().map(|r| r.rank).collect();
+        assert_eq!(ranks.len(), w.ranks);
+    }
+
+    #[test]
+    fn mir_zone_counts_vary_over_time() {
+        let w = MirWorkload::default();
+        let counts: Vec<usize> = (0..100)
+            .map(|t| w.timestep(t).iter().map(|r| r.samples).sum())
+            .collect();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min > 1.5, "variation too small: {min}..{max}");
+    }
+
+    #[test]
+    fn mir_volume_in_paper_range() {
+        // "from the thousands to the hundreds of thousands" per GPU.
+        let w = MirWorkload::default();
+        for t in 0..50 {
+            for r in w.timestep(t) {
+                assert!(r.samples >= 1_000, "{}", r.samples);
+                assert!(r.samples <= 200_000);
+            }
+        }
+    }
+
+    #[test]
+    fn expected_inference_count() {
+        let w = HydraWorkload::default();
+        let expect = w.expected_inferences_per_timestep();
+        let actual: usize = w.timestep(0).iter().map(|r| r.samples).sum();
+        let ratio = actual as f64 / expect as f64;
+        assert!((0.9..1.1).contains(&ratio), "{ratio}");
+    }
+}

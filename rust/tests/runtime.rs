@@ -1,0 +1,127 @@
+//! Integration tests: the Rust runtime executes the real AOT
+//! artifacts and reproduces the Python oracle's numerics.
+//!
+//! Requires `make artifacts` (skipped silently otherwise).
+
+use cogsim_disagg::runtime::Engine;
+use xla::FromRawBytes as _;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn engine_loads_and_executes_hermit() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, Some(&["hermit"])).unwrap();
+    let spec = engine.spec("hermit").unwrap();
+    assert_eq!(spec.input_elems(), 42);
+    assert_eq!(spec.output_elems(), 30);
+
+    let x = vec![0.1f32; 42];
+    let (out, t) = engine.execute("hermit", 1, &x).unwrap();
+    assert_eq!(out.len(), 30);
+    assert!(out.iter().all(|v| v.is_finite()));
+    assert!(t.execute.as_nanos() > 0);
+
+    // determinism
+    let (out2, _) = engine.execute("hermit", 1, &x).unwrap();
+    assert_eq!(out, out2);
+}
+
+#[test]
+fn engine_batch_consistency() {
+    // The same sample must produce the same output regardless of the
+    // compiled batch size it rides in (padding must not leak).
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, Some(&["hermit"])).unwrap();
+    let x: Vec<f32> = (0..42).map(|i| (i as f32) * 0.01 - 0.2).collect();
+
+    let (out1, _) = engine.execute("hermit", 1, &x).unwrap();
+    let mut x4 = vec![0f32; 4 * 42];
+    x4[..42].copy_from_slice(&x);
+    let (out4, _) = engine.execute("hermit", 4, &x4).unwrap();
+    for i in 0..30 {
+        assert!((out1[i] - out4[i]).abs() < 1e-4, "i={i} {} vs {}", out1[i], out4[i]);
+    }
+}
+
+#[test]
+fn execute_padded_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, Some(&["hermit"])).unwrap();
+    // 3 samples -> padded into the 4-batch executable
+    let x: Vec<f32> = (0..3 * 42).map(|i| (i % 17) as f32 * 0.05).collect();
+    let (out, _) = engine.execute_padded("hermit", &x).unwrap();
+    assert_eq!(out.len(), 3 * 30);
+
+    // each row matches its batch-1 execution
+    for s in 0..3 {
+        let (row, _) = engine.execute("hermit", 1, &x[s * 42..(s + 1) * 42]).unwrap();
+        for i in 0..30 {
+            assert!((row[i] - out[s * 30 + i]).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn padding_waste_accounting() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, Some(&["hermit"])).unwrap();
+    assert_eq!(engine.padding_waste("hermit", 1).unwrap(), 0.0);
+    assert_eq!(engine.padding_waste("hermit", 4).unwrap(), 0.0);
+    let w3 = engine.padding_waste("hermit", 3).unwrap();
+    assert!((w3 - 0.25).abs() < 1e-12, "3 of 4 -> 25% waste, got {w3}");
+}
+
+#[test]
+fn mir_executes_and_is_volume_fraction() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, Some(&["mir"])).unwrap();
+    let spec = engine.spec("mir").unwrap();
+    assert_eq!(spec.input_elems(), 48 * 48);
+    let x = vec![0.5f32; 48 * 48];
+    let (out, _) = engine.execute("mir", 1, &x).unwrap();
+    assert_eq!(out.len(), 48 * 48);
+    // sigmoid output: volume fractions
+    assert!(out.iter().all(|&v| (0.0..=1.0).contains(&v)));
+}
+
+#[test]
+fn wrong_input_sizes_are_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, Some(&["hermit"])).unwrap();
+    assert!(engine.execute("hermit", 1, &[0.0; 10]).is_err());
+    assert!(engine.execute("hermit", 3, &[0.0; 3 * 42]).is_err()); // 3 not in ladder
+    assert!(engine.execute("nope", 1, &[0.0; 42]).is_err());
+}
+
+#[test]
+fn cross_language_numerics_golden() {
+    // The authoritative three-layer check: Python's Pallas forward
+    // (saved at AOT time) must match Rust's PJRT execution bit-for-bit
+    // modulo f32 reassociation (1e-5).
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, None).unwrap();
+    for model in ["hermit", "mir", "mir_noln"] {
+        let check = xla::Literal::read_npz_by_name(
+            dir.join(format!("{model}.selfcheck.npz")),
+            &(),
+            &["x", "y"],
+        )
+        .unwrap();
+        let x: Vec<f32> = check[0].to_vec().unwrap();
+        let y: Vec<f32> = check[1].to_vec().unwrap();
+        let spec = engine.spec(model).unwrap();
+        let batch = x.len() / spec.input_elems();
+        let (out, _) = engine.execute(model, batch, &x).unwrap();
+        assert_eq!(out.len(), y.len(), "{model}");
+        let max_err = out
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-4, "{model}: max |rust - python| = {max_err}");
+    }
+}

@@ -1,0 +1,243 @@
+//! End-to-end serving tests: coordinator + TCP server/client over the
+//! real PJRT engine and AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped silently otherwise).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cogsim_disagg::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, Registry,
+};
+use cogsim_disagg::net::{Client, Server};
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn start_coordinator(materials: usize) -> Option<Arc<Coordinator>> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::load(&dir, Some(&["hermit", "mir"])).unwrap();
+    let mut registry = Registry::new();
+    registry.register_materials("hermit", materials);
+    registry.register("mir", "mir");
+    let config = CoordinatorConfig {
+        batcher: BatcherConfig {
+            target_batch: 64,
+            max_wait: Duration::from_micros(200),
+            deferred_max_wait: std::time::Duration::from_millis(50),
+            max_batch: 1024,
+        },
+        workers: 1,
+    };
+    Some(Arc::new(Coordinator::start(engine, registry, config).unwrap()))
+}
+
+#[test]
+fn coordinator_single_request() {
+    let Some(c) = start_coordinator(2) else { return };
+    let mut rng = Rng::new(1);
+    let out = c.infer("hermit/mat0", rng.normal_vec(42)).unwrap();
+    assert_eq!(out.len(), 30);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn coordinator_routes_by_instance() {
+    let Some(c) = start_coordinator(4) else { return };
+    let mut rng = Rng::new(2);
+    let x = rng.normal_vec(42);
+    // same engine model behind every material: outputs must agree,
+    // but every instance must be addressable.
+    let base = c.infer("hermit/mat0", x.clone()).unwrap();
+    for m in 1..4 {
+        let out = c.infer(&format!("hermit/mat{m}"), x.clone()).unwrap();
+        assert_eq!(out, base, "mat{m}");
+    }
+    assert!(c.infer("hermit/mat9", x).is_err(), "unregistered material");
+}
+
+#[test]
+fn coordinator_batches_concurrent_requests() {
+    let Some(c) = start_coordinator(1) else { return };
+    let mut rng = Rng::new(3);
+
+    // fire 32 single-sample requests without waiting: the batcher
+    // should coalesce them into far fewer engine executions.
+    let receivers: Vec<_> = (0..32)
+        .map(|_| {
+            let x = rng.normal_vec(42);
+            (x.clone(), c.submit("hermit/mat0", x).unwrap())
+        })
+        .collect();
+    for (x, rx) in receivers {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), 30);
+        // response must match a solo execution of the same sample
+        let solo = c.infer("hermit/mat0", x).unwrap();
+        for i in 0..30 {
+            assert!((out[i] - solo[i]).abs() < 1e-4);
+        }
+    }
+    let stats = &c.stats;
+    let batches = stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    let requests = stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(requests >= 64, "{requests}");
+    assert!(
+        batches < requests,
+        "batching never coalesced: {batches} batches for {requests} requests"
+    );
+}
+
+#[test]
+fn coordinator_rejects_bad_input() {
+    let Some(c) = start_coordinator(1) else { return };
+    assert!(c.infer("hermit/mat0", vec![0.0; 41]).is_err()); // not a multiple
+    assert!(c.infer("hermit/mat0", vec![]).is_err()); // empty
+    assert!(c.infer("unknown", vec![0.0; 42]).is_err());
+}
+
+#[test]
+fn coordinator_multi_model_concurrent() {
+    let Some(c) = start_coordinator(2) else { return };
+    let mut rng = Rng::new(5);
+    let hermit_x = rng.normal_vec(2 * 42);
+    let mir_x: Vec<f32> = (0..48 * 48).map(|i| (i % 7) as f32 / 7.0).collect();
+
+    let rx1 = c.submit("hermit/mat0", hermit_x).unwrap();
+    let rx2 = c.submit("mir", mir_x).unwrap();
+    let out1 = rx1.recv().unwrap().unwrap();
+    let out2 = rx2.recv().unwrap().unwrap();
+    assert_eq!(out1.len(), 2 * 30);
+    assert_eq!(out2.len(), 48 * 48);
+    assert!(out2.iter().all(|&v| (0.0..=1.0).contains(&v)), "mir sigmoid range");
+}
+
+// ------------------------------------------------------------ TCP path
+
+#[test]
+fn tcp_end_to_end_roundtrip() {
+    let Some(c) = start_coordinator(2) else { return };
+    let server = Server::serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+
+    let mut rng = Rng::new(7);
+    let x = rng.normal_vec(4 * 42);
+    let remote = client.infer("hermit/mat1", 4, &x).unwrap();
+    assert_eq!(remote.len(), 4 * 30);
+
+    // remote result == local coordinator result
+    let local = c.infer("hermit/mat1", x).unwrap();
+    assert_eq!(remote, local);
+    server.shutdown();
+}
+
+#[test]
+fn tcp_multiple_clients_parallel() {
+    let Some(c) = start_coordinator(4) else { return };
+    let server = Server::serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..4)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let client = Client::connect(addr).unwrap();
+                let mut rng = Rng::new(100 + rank as u64);
+                for i in 0..10 {
+                    let n = 1 + (i % 3);
+                    let x = rng.normal_vec(n * 42);
+                    let out = client
+                        .infer(&format!("hermit/mat{rank}"), n, &x)
+                        .unwrap();
+                    assert_eq!(out.len(), n * 30);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.connections_accepted(), 4);
+}
+
+#[test]
+fn tcp_pipelined_submission() {
+    // The paper's throughput mode: mini-batch n+1 in flight before n
+    // returns.
+    let Some(c) = start_coordinator(1) else { return };
+    let server = Server::serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+
+    let mut rng = Rng::new(9);
+    let x = rng.normal_vec(8 * 42);
+    let rxs: Vec<_> = (0..8)
+        .map(|_| client.submit("hermit/mat0", 8, &x).unwrap())
+        .collect();
+    assert!(client.in_flight() > 0);
+    for rx in rxs {
+        let rows = client.recv(rx).unwrap();
+        assert_eq!(rows.len(), 8 * 30);
+    }
+    assert_eq!(client.in_flight(), 0);
+}
+
+#[test]
+fn tcp_error_propagates_to_client() {
+    let Some(c) = start_coordinator(1) else { return };
+    let server = Server::serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+
+    let err = client.infer("no/such/model", 1, &[0.0; 42]).unwrap_err();
+    assert!(format!("{err:#}").contains("no/such/model"), "{err:#}");
+
+    // mismatched payload size
+    let err = client.infer("hermit/mat0", 2, &[0.0; 42]).unwrap_err();
+    assert!(format!("{err:#}").contains("samples"), "{err:#}");
+
+    // the connection must still work after errors
+    let ok = client.infer("hermit/mat0", 1, &[0.1; 42]).unwrap();
+    assert_eq!(ok.len(), 30);
+}
+
+#[test]
+fn tcp_out_of_order_completion_demuxes_correctly() {
+    // A big MIR request then a tiny Hermit request: the Hermit result
+    // usually lands first; ids must demux correctly either way.
+    let Some(c) = start_coordinator(1) else { return };
+    let server = Server::serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+
+    let mir_x = vec![0.25f32; 16 * 48 * 48];
+    let hermit_x = vec![0.5f32; 42];
+    let rx_big = client.submit("mir", 16, &mir_x).unwrap();
+    let rx_small = client.submit("hermit/mat0", 1, &hermit_x).unwrap();
+
+    let small = client.recv(rx_small).unwrap();
+    let big = client.recv(rx_big).unwrap();
+    assert_eq!(small.len(), 30);
+    assert_eq!(big.len(), 16 * 48 * 48);
+}
+
+#[test]
+fn deferred_priority_over_tcp() {
+    // On-the-loop traffic (paper §II-B): deferred requests complete
+    // correctly and never block critical ones.
+    let Some(c) = start_coordinator(2) else { return };
+    let server = Server::serve(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+
+    let mut rng = Rng::new(21);
+    let x = rng.normal_vec(2 * 42);
+    let rx_deferred = client.submit_deferred("hermit/mat1", 2, &x).unwrap();
+    // critical request on the other instance goes through promptly
+    let critical = client.infer("hermit/mat0", 2, &x).unwrap();
+    assert_eq!(critical.len(), 2 * 30);
+    // the deferred one completes too (within its longer deadline)
+    let deferred = client.recv(rx_deferred).unwrap();
+    assert_eq!(deferred.len(), 2 * 30);
+    // identical inputs, same weights -> same rows
+    assert_eq!(deferred, critical);
+}
