@@ -50,7 +50,7 @@ fn main() -> Result<()> {
             batcher: BatcherConfig {
                 target_batch: 256,
                 max_wait: std::time::Duration::from_micros(300),
-            deferred_max_wait: std::time::Duration::from_millis(50),
+                deferred_max_wait: std::time::Duration::from_millis(50),
                 max_batch: 1024,
             },
             workers: 1,

@@ -1,0 +1,238 @@
+//! The [`Backend`] trait: one uniform surface over every accelerator
+//! model in the crate — the analytic GPU model ([`crate::devices`]),
+//! the RDU dataflow model ([`crate::rdu`]) — with a
+//! [`crate::netsim::Link`] in front and virtual-time queue state.
+//!
+//! A backend answers three questions the router needs:
+//!
+//! * `latency_s(model, batch)` — how long one batch takes end to end
+//!   (link round trip + device execution, empty queue);
+//! * `throughput(model, batch)` — samples/s at that operating point;
+//! * `queue_s()` — how much virtual work is already waiting.
+//!
+//! Occupancy accounting follows the paper's async double-buffering:
+//! a remote batch holds the backend for its execute time plus only
+//! the *non-overlapped* fraction of the link overhead (`remote_period`
+//! semantics, Fig. 16), while the requester still waits the full
+//! round trip (Fig. 15).
+
+use crate::devices::{Api, Gpu, GpuModel, ModelProfile};
+use crate::netsim::{payload_bytes, Link};
+use crate::rdu::{RduApi, RduModel};
+
+/// A schedulable inference backend: device model + link + queue.
+pub trait Backend: Send {
+    /// Display/report name (e.g. `gpu/rank0`, `rdu/pool1`).
+    fn name(&self) -> &str;
+
+    /// The link requests traverse to reach this backend.
+    fn link(&self) -> &Link;
+
+    /// Pure device execution time for one batch, seconds.
+    fn execute_s(&self, model: &ModelProfile, batch: usize) -> f64;
+
+    /// Outstanding virtual work queued on this backend, seconds.
+    fn queue_s(&self) -> f64;
+
+    /// Add `s` seconds of work to the queue.
+    fn add_queue_s(&mut self, s: f64);
+
+    /// Let `dt` seconds of virtual time pass (the queue drains).
+    fn drain_queue_s(&mut self, dt: f64);
+
+    /// Link round-trip overhead for one batch, seconds.
+    fn link_overhead_s(&self, model: &ModelProfile, batch: usize) -> f64 {
+        self.link()
+            .rtt_overhead_s(payload_bytes(model.input_elems, model.output_elems, batch))
+    }
+
+    /// Empty-queue end-to-end latency: link round trip + execution.
+    fn latency_s(&self, model: &ModelProfile, batch: usize) -> f64 {
+        self.link_overhead_s(model, batch) + self.execute_s(model, batch)
+    }
+
+    /// Samples/s at this batch size (empty queue).
+    fn throughput(&self, model: &ModelProfile, batch: usize) -> f64 {
+        batch as f64 / self.latency_s(model, batch)
+    }
+
+    /// How long one batch occupies the backend: execution plus the
+    /// non-overlapped link share (double-buffered clients hide the
+    /// rest behind device execution — the paper's throughput trick).
+    fn occupancy_s(&self, model: &ModelProfile, batch: usize) -> f64 {
+        self.execute_s(model, batch)
+            + self.link_overhead_s(model, batch) * (1.0 - self.link().async_overlap)
+    }
+}
+
+/// A GPU behind an API configuration (node-local by default).
+#[derive(Debug, Clone)]
+pub struct GpuBackend {
+    name: String,
+    gpu: Gpu,
+    api: Api,
+    link: Link,
+    queue_s: f64,
+}
+
+impl GpuBackend {
+    /// A node-local GPU (zero-cost link, the paper's GPU convention).
+    pub fn node_local(name: impl Into<String>, gpu: Gpu, api: Api) -> GpuBackend {
+        GpuBackend { name: name.into(), gpu, api, link: Link::local(), queue_s: 0.0 }
+    }
+
+    /// A GPU reached over a link (a pooled GPU fleet).
+    pub fn remote(name: impl Into<String>, gpu: Gpu, api: Api, link: Link) -> GpuBackend {
+        GpuBackend { name: name.into(), gpu, api, link, queue_s: 0.0 }
+    }
+}
+
+impl Backend for GpuBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn link(&self) -> &Link {
+        &self.link
+    }
+
+    fn execute_s(&self, model: &ModelProfile, batch: usize) -> f64 {
+        GpuModel::new(self.gpu.clone(), self.api, model.clone()).latency_s(batch)
+    }
+
+    fn queue_s(&self) -> f64 {
+        self.queue_s
+    }
+
+    fn add_queue_s(&mut self, s: f64) {
+        self.queue_s += s;
+    }
+
+    fn drain_queue_s(&mut self, dt: f64) {
+        self.queue_s = (self.queue_s - dt).max(0.0);
+    }
+}
+
+/// An RDU tile group behind a SambaFlow API (remote by default — the
+/// disaggregated pool of the paper).
+#[derive(Debug, Clone)]
+pub struct RduBackend {
+    name: String,
+    tiles: usize,
+    api: RduApi,
+    link: Link,
+    queue_s: f64,
+}
+
+impl RduBackend {
+    /// An RDU tile group across the Infiniband link (the paper's
+    /// disaggregated configuration).
+    pub fn disaggregated(name: impl Into<String>, tiles: usize, api: RduApi) -> RduBackend {
+        Self::with_link(name, tiles, api, Link::infiniband_cx6())
+    }
+
+    /// A node-local RDU tile group (the paper's local baseline).
+    pub fn node_local(name: impl Into<String>, tiles: usize, api: RduApi) -> RduBackend {
+        Self::with_link(name, tiles, api, Link::local())
+    }
+
+    pub fn with_link(
+        name: impl Into<String>,
+        tiles: usize,
+        api: RduApi,
+        link: Link,
+    ) -> RduBackend {
+        assert!((1..=4).contains(&tiles), "an SN10 RDU has 4 tiles");
+        RduBackend { name: name.into(), tiles, api, link, queue_s: 0.0 }
+    }
+
+    pub fn tiles(&self) -> usize {
+        self.tiles
+    }
+}
+
+impl Backend for RduBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn link(&self) -> &Link {
+        &self.link
+    }
+
+    fn execute_s(&self, model: &ModelProfile, batch: usize) -> f64 {
+        RduModel::new(model.clone(), self.tiles, self.api).latency_best_s(batch)
+    }
+
+    fn queue_s(&self) -> f64 {
+        self.queue_s
+    }
+
+    fn add_queue_s(&mut self, s: f64) {
+        self.queue_s += s;
+    }
+
+    fn drain_queue_s(&mut self, dt: f64) {
+        self.queue_s = (self.queue_s - dt).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::profiles;
+
+    #[test]
+    fn local_gpu_has_no_link_overhead() {
+        let b = GpuBackend::node_local("gpu0", Gpu::a100(), Api::TrtCudaGraphs);
+        let p = profiles::hermit();
+        assert_eq!(b.link_overhead_s(&p, 256), 0.0);
+        assert_eq!(b.latency_s(&p, 256), b.execute_s(&p, 256));
+        assert_eq!(b.occupancy_s(&p, 256), b.execute_s(&p, 256));
+    }
+
+    #[test]
+    fn disaggregated_rdu_pays_the_link_but_hides_half() {
+        let b = RduBackend::disaggregated("rdu0", 4, RduApi::CppOptimized);
+        let p = profiles::hermit();
+        let overhead = b.link_overhead_s(&p, 1024);
+        assert!(overhead > 0.0);
+        assert!(b.latency_s(&p, 1024) > b.execute_s(&p, 1024));
+        // double buffering: occupancy strictly between execute-only
+        // and the full round trip
+        let occ = b.occupancy_s(&p, 1024);
+        assert!(occ > b.execute_s(&p, 1024));
+        assert!(occ < b.latency_s(&p, 1024));
+    }
+
+    #[test]
+    fn more_tiles_execute_faster() {
+        let p = profiles::hermit();
+        let small = RduBackend::disaggregated("rdu-2t", 2, RduApi::CppOptimized);
+        let big = RduBackend::disaggregated("rdu-4t", 4, RduApi::CppOptimized);
+        for batch in [64usize, 1024, 16384] {
+            assert!(big.execute_s(&p, batch) < small.execute_s(&p, batch), "{batch}");
+        }
+    }
+
+    #[test]
+    fn queue_accounting() {
+        let mut b = GpuBackend::node_local("gpu0", Gpu::a100(), Api::NaivePyTorch);
+        assert_eq!(b.queue_s(), 0.0);
+        b.add_queue_s(3e-3);
+        b.add_queue_s(1e-3);
+        assert!((b.queue_s() - 4e-3).abs() < 1e-15);
+        b.drain_queue_s(2.5e-3);
+        assert!((b.queue_s() - 1.5e-3).abs() < 1e-15);
+        b.drain_queue_s(10.0);
+        assert_eq!(b.queue_s(), 0.0); // never negative
+    }
+
+    #[test]
+    fn throughput_consistent_with_latency() {
+        let b = RduBackend::disaggregated("rdu0", 4, RduApi::CppOptimized);
+        let p = profiles::hermit();
+        let t = b.throughput(&p, 4096);
+        assert!((t - 4096.0 / b.latency_s(&p, 4096)).abs() < 1e-9);
+    }
+}

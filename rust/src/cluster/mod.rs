@@ -1,0 +1,361 @@
+//! The multi-backend cluster layer — the crate's answer to the
+//! paper's §VI scaling question, generalised: instead of *one* GPU
+//! **or** *one* disaggregated DataScale, compose **N heterogeneous
+//! backends** (analytic GPUs, RDU tile groups, each behind its own
+//! link model) and route a CogSim request stream across them under a
+//! pluggable policy.
+//!
+//! * [`backend`] — the [`Backend`] trait unifying
+//!   [`crate::devices::GpuModel`], [`crate::rdu::RduModel`] and
+//!   [`crate::netsim::Link`] behind `latency_s` / `throughput` /
+//!   `queue_s`, plus the [`GpuBackend`] / [`RduBackend`] impls.
+//! * [`policy`]  — four routing policies: round-robin,
+//!   least-outstanding-work, model-affinity (sticky per-instance) and
+//!   latency-aware (argmin of queue + link + execute).
+//! * [`Cluster`] — virtual-time router: requests arrive at the
+//!   cluster clock, wait behind the routed backend's queue, occupy it
+//!   for the double-buffered period, and report their end-to-end
+//!   latency.  Everything is deterministic — no wall clock — so
+//!   campaign sweeps ([`crate::harness::campaign`]) are byte-stable.
+//!
+//! The coordinator mirrors this layer on the serving path: registry
+//! replica sets + [`crate::coordinator::RoutingPolicy`] route real
+//! requests over real engine models the same way the cluster routes
+//! simulated ones over analytic backends.
+
+pub mod backend;
+pub mod policy;
+
+use std::collections::BTreeMap;
+
+use crate::devices::ModelProfile;
+
+pub use backend::{Backend, GpuBackend, RduBackend};
+pub use policy::Policy;
+
+/// Where one request went and what it cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Routed {
+    /// Index of the chosen backend.
+    pub backend: usize,
+    /// Time spent waiting behind earlier work, seconds.
+    pub wait_s: f64,
+    /// End-to-end request latency (wait + link + execute), seconds.
+    pub latency_s: f64,
+    /// The link round-trip share of the latency, seconds.
+    pub link_overhead_s: f64,
+}
+
+/// Per-backend accounting over a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendReport {
+    pub name: String,
+    pub requests: u64,
+    pub samples: u64,
+    /// Total seconds of occupancy routed to this backend.
+    pub busy_s: f64,
+    /// Queue depth at report time, seconds.
+    pub queue_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct BackendStats {
+    requests: u64,
+    samples: u64,
+    busy_s: f64,
+}
+
+/// N backends + a routing policy + a virtual clock.
+pub struct Cluster {
+    backends: Vec<Box<dyn Backend>>,
+    policy: Policy,
+    rr_cursor: usize,
+    affinity: BTreeMap<String, usize>,
+    stats: Vec<BackendStats>,
+    clock_s: f64,
+    last_completion_s: f64,
+}
+
+impl Cluster {
+    pub fn new(backends: Vec<Box<dyn Backend>>, policy: Policy) -> Cluster {
+        assert!(!backends.is_empty(), "a cluster needs at least one backend");
+        let stats = vec![BackendStats::default(); backends.len()];
+        Cluster {
+            backends,
+            policy,
+            rr_cursor: 0,
+            affinity: BTreeMap::new(),
+            stats,
+            clock_s: 0.0,
+            last_completion_s: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    pub fn backend_names(&self) -> Vec<String> {
+        self.backends.iter().map(|b| b.name().to_string()).collect()
+    }
+
+    /// Advance the virtual clock to `t_s` (monotone); queued work
+    /// drains by the elapsed interval on every backend.
+    pub fn advance_to(&mut self, t_s: f64) {
+        let dt = t_s - self.clock_s;
+        if dt <= 0.0 {
+            return;
+        }
+        for b in &mut self.backends {
+            b.drain_queue_s(dt);
+        }
+        self.clock_s = t_s;
+    }
+
+    /// Route one request (`samples` samples of `profile` for logical
+    /// `instance`) to any backend.
+    pub fn submit(&mut self, instance: &str, profile: &ModelProfile, samples: usize) -> Routed {
+        let all: Vec<usize> = (0..self.backends.len()).collect();
+        self.submit_among(&all, instance, profile, samples)
+    }
+
+    /// Route one request within a candidate subset (topologies use
+    /// this to pin a model class to a tier, e.g. MIR → local GPUs,
+    /// Hermit → the remote pool).
+    pub fn submit_among(
+        &mut self,
+        candidates: &[usize],
+        instance: &str,
+        profile: &ModelProfile,
+        samples: usize,
+    ) -> Routed {
+        let idx = policy::select(
+            self.policy,
+            &self.backends,
+            &mut self.rr_cursor,
+            &mut self.affinity,
+            candidates,
+            instance,
+            profile,
+            samples,
+        );
+        let backend = &mut self.backends[idx];
+        let wait_s = backend.queue_s();
+        let link_overhead_s = backend.link_overhead_s(profile, samples);
+        let latency_s = wait_s + backend.latency_s(profile, samples);
+        let occupancy = backend.occupancy_s(profile, samples);
+        backend.add_queue_s(occupancy);
+
+        let stat = &mut self.stats[idx];
+        stat.requests += 1;
+        stat.samples += samples as u64;
+        stat.busy_s += occupancy;
+        self.last_completion_s = self.last_completion_s.max(self.clock_s + latency_s);
+
+        Routed { backend: idx, wait_s, latency_s, link_overhead_s }
+    }
+
+    /// Total samples routed so far (conservation invariant: equals
+    /// the total submitted).
+    pub fn routed_samples(&self) -> u64 {
+        self.stats.iter().map(|s| s.samples).sum()
+    }
+
+    /// Total requests routed so far.
+    pub fn routed_requests(&self) -> u64 {
+        self.stats.iter().map(|s| s.requests).sum()
+    }
+
+    /// Virtual time at which the last routed request completes.
+    pub fn makespan_s(&self) -> f64 {
+        self.last_completion_s.max(self.clock_s)
+    }
+
+    /// Per-backend accounting snapshot.
+    pub fn report(&self) -> Vec<BackendReport> {
+        self.backends
+            .iter()
+            .zip(&self.stats)
+            .map(|(b, s)| BackendReport {
+                name: b.name().to_string(),
+                requests: s.requests,
+                samples: s.samples,
+                busy_s: s.busy_s,
+                queue_s: b.queue_s(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{profiles, Api, Gpu};
+    use crate::rdu::RduApi;
+
+    fn gpu_fleet(n: usize) -> Vec<Box<dyn Backend>> {
+        (0..n)
+            .map(|i| {
+                Box::new(GpuBackend::node_local(
+                    format!("gpu/rank{i}"),
+                    Gpu::a100(),
+                    Api::TrtCudaGraphs,
+                )) as Box<dyn Backend>
+            })
+            .collect()
+    }
+
+    fn mixed_pool() -> Vec<Box<dyn Backend>> {
+        vec![
+            Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+            Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::CppOptimized)),
+        ]
+    }
+
+    #[test]
+    fn round_robin_cycles_evenly() {
+        let mut c = Cluster::new(gpu_fleet(3), Policy::RoundRobin);
+        let p = profiles::hermit();
+        for i in 0..9 {
+            let r = c.submit("hermit/mat0", &p, 8);
+            assert_eq!(r.backend, i % 3);
+        }
+        for rep in c.report() {
+            assert_eq!(rep.requests, 3);
+        }
+    }
+
+    #[test]
+    fn conservation_of_samples_and_requests() {
+        let mut c = Cluster::new(mixed_pool(), Policy::LeastOutstanding);
+        let p = profiles::hermit();
+        let mut total = 0u64;
+        for i in 1..=40usize {
+            let samples = 1 + (i * 7) % 93;
+            c.submit(&format!("hermit/mat{}", i % 8), &p, samples);
+            total += samples as u64;
+        }
+        assert_eq!(c.routed_samples(), total);
+        assert_eq!(c.routed_requests(), 40);
+        let by_backend: u64 = c.report().iter().map(|r| r.samples).sum();
+        assert_eq!(by_backend, total);
+    }
+
+    #[test]
+    fn affinity_is_sticky_per_instance() {
+        let mut c = Cluster::new(gpu_fleet(4), Policy::ModelAffinity);
+        let p = profiles::hermit();
+        let first: Vec<usize> =
+            (0..6).map(|m| c.submit(&format!("hermit/mat{m}"), &p, 16).backend).collect();
+        // replay: every instance must revisit its backend
+        for (m, &expect) in first.iter().enumerate() {
+            let r = c.submit(&format!("hermit/mat{m}"), &p, 16);
+            assert_eq!(r.backend, expect, "mat{m}");
+        }
+        // and the 6 instances spread over all 4 backends (least-loaded
+        // first sighting)
+        let distinct: std::collections::BTreeSet<usize> = first.iter().copied().collect();
+        assert_eq!(distinct.len(), 4);
+    }
+
+    #[test]
+    fn latency_aware_prefers_the_faster_backend_when_idle() {
+        // heterogeneous pool: the 4-tile group executes faster than
+        // the 2-tile group, so an idle cluster routes there
+        let mut c = Cluster::new(mixed_pool(), Policy::LatencyAware);
+        let p = profiles::hermit();
+        let r = c.submit("hermit/mat0", &p, 256);
+        assert_eq!(c.backend_names()[r.backend], "rdu/pool0");
+        // ... until its queue makes the slower backend cheaper
+        let mut saw_pool1 = false;
+        for _ in 0..64 {
+            let r = c.submit("hermit/mat0", &p, 256);
+            if r.backend == 1 {
+                saw_pool1 = true;
+            }
+        }
+        assert!(saw_pool1, "queue pressure must spill to the slower backend");
+    }
+
+    #[test]
+    fn least_outstanding_balances_heterogeneous_sizes() {
+        let p = profiles::hermit();
+        let sizes: Vec<usize> = (0..32).map(|i| 1 + (i * 37) % 200).collect();
+
+        let mut rr = Cluster::new(mixed_pool(), Policy::RoundRobin);
+        let mut lo = Cluster::new(mixed_pool(), Policy::LeastOutstanding);
+        for &s in &sizes {
+            rr.submit("hermit/mat0", &p, s);
+            lo.submit("hermit/mat0", &p, s);
+        }
+        let max_q = |c: &Cluster| {
+            c.report().iter().map(|r| r.queue_s).fold(0.0f64, f64::max)
+        };
+        assert!(max_q(&lo) <= max_q(&rr) + 1e-12, "{} vs {}", max_q(&lo), max_q(&rr));
+    }
+
+    #[test]
+    fn waiting_behind_queue_raises_latency() {
+        let mut c = Cluster::new(gpu_fleet(1), Policy::RoundRobin);
+        let p = profiles::hermit();
+        let first = c.submit("hermit/mat0", &p, 64);
+        assert_eq!(first.wait_s, 0.0);
+        let second = c.submit("hermit/mat0", &p, 64);
+        assert!(second.wait_s > 0.0);
+        assert!(second.latency_s > first.latency_s);
+    }
+
+    #[test]
+    fn advance_drains_queues_and_clock_is_monotone() {
+        let mut c = Cluster::new(gpu_fleet(2), Policy::RoundRobin);
+        let p = profiles::hermit();
+        for _ in 0..8 {
+            c.submit("hermit/mat0", &p, 1024);
+        }
+        assert!(c.report().iter().any(|r| r.queue_s > 0.0));
+        let makespan = c.makespan_s();
+        c.advance_to(makespan + 1.0);
+        assert!(c.report().iter().all(|r| r.queue_s == 0.0));
+        // going backwards is a no-op
+        c.advance_to(0.0);
+        assert_eq!(c.clock_s(), makespan + 1.0);
+    }
+
+    #[test]
+    fn submit_among_respects_the_candidate_subset() {
+        let mut backends = gpu_fleet(2);
+        backends.extend(mixed_pool());
+        let mut c = Cluster::new(backends, Policy::LatencyAware);
+        let p = profiles::hermit();
+        for i in 0..10 {
+            let r = c.submit_among(&[2, 3], &format!("hermit/mat{i}"), &p, 64);
+            assert!(r.backend == 2 || r.backend == 3);
+        }
+        let rep = c.report();
+        assert_eq!(rep[0].requests + rep[1].requests, 0);
+        assert_eq!(rep[2].requests + rep[3].requests, 10);
+    }
+
+    #[test]
+    fn remote_backends_report_link_overhead() {
+        let mut c = Cluster::new(mixed_pool(), Policy::RoundRobin);
+        let p = profiles::hermit();
+        let r = c.submit("hermit/mat0", &p, 1024);
+        assert!(r.link_overhead_s > 0.0);
+        let mut local = Cluster::new(gpu_fleet(1), Policy::RoundRobin);
+        let r = local.submit("hermit/mat0", &p, 1024);
+        assert_eq!(r.link_overhead_s, 0.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Routing policies: how the [`super::Cluster`] picks a backend for
+//! each request.  Four policies span the design space the paper's §VI
+//! opens (one shared accelerator vs many heterogeneous ones):
+//!
+//! * **round-robin** — cycle the fleet, blind to state;
+//! * **least-outstanding-work** — argmin of queued seconds;
+//! * **model-affinity** — sticky per-instance routing (a material's
+//!   requests always revisit the backend that holds its weights —
+//!   exploits the registry/weight-residency structure);
+//! * **latency-aware** — argmin of `queue + link + execute` for this
+//!   exact (model, batch): the only policy that sees heterogeneity.
+
+use std::collections::BTreeMap;
+
+use crate::devices::ModelProfile;
+
+use super::backend::Backend;
+
+/// A pluggable routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    RoundRobin,
+    LeastOutstanding,
+    ModelAffinity,
+    LatencyAware,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 4] = [
+        Policy::RoundRobin,
+        Policy::LeastOutstanding,
+        Policy::ModelAffinity,
+        Policy::LatencyAware,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastOutstanding => "least-outstanding",
+            Policy::ModelAffinity => "model-affinity",
+            Policy::LatencyAware => "latency-aware",
+        }
+    }
+
+    /// Stable snake_case key for JSON artifacts.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round_robin",
+            Policy::LeastOutstanding => "least_outstanding",
+            Policy::ModelAffinity => "model_affinity",
+            Policy::LatencyAware => "latency_aware",
+        }
+    }
+}
+
+/// Pick a backend index (from `candidates`, indices into `backends`)
+/// for one request.  Deterministic: ties break on the lowest index.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn select(
+    policy: Policy,
+    backends: &[Box<dyn Backend>],
+    rr_cursor: &mut usize,
+    affinity: &mut BTreeMap<String, usize>,
+    candidates: &[usize],
+    instance: &str,
+    profile: &ModelProfile,
+    batch: usize,
+) -> usize {
+    assert!(!candidates.is_empty(), "route with no candidate backends");
+    match policy {
+        Policy::RoundRobin => {
+            // One shared dial for the whole cluster (classic L4
+            // balancer semantics): blind by design, including across
+            // candidate tiers.  State-aware spreading is what
+            // LeastOutstanding / LatencyAware are for.
+            let idx = candidates[*rr_cursor % candidates.len()];
+            *rr_cursor += 1;
+            idx
+        }
+        Policy::LeastOutstanding => least_queued(backends, candidates),
+        Policy::ModelAffinity => {
+            if let Some(&idx) = affinity.get(instance) {
+                if candidates.contains(&idx) {
+                    return idx;
+                }
+            }
+            // first sighting: park the instance on the least-loaded
+            // candidate and stick to it
+            let idx = least_queued(backends, candidates);
+            affinity.insert(instance.to_string(), idx);
+            idx
+        }
+        Policy::LatencyAware => {
+            let mut best = candidates[0];
+            let mut best_cost = f64::INFINITY;
+            for &idx in candidates {
+                let b = &backends[idx];
+                let cost = b.queue_s() + b.latency_s(profile, batch);
+                if cost < best_cost {
+                    best = idx;
+                    best_cost = cost;
+                }
+            }
+            best
+        }
+    }
+}
+
+fn least_queued(backends: &[Box<dyn Backend>], candidates: &[usize]) -> usize {
+    let mut best = candidates[0];
+    let mut best_queue = f64::INFINITY;
+    for &idx in candidates {
+        let q = backends[idx].queue_s();
+        if q < best_queue {
+            best = idx;
+            best_queue = q;
+        }
+    }
+    best
+}

@@ -1,18 +1,29 @@
-//! The [`Coordinator`]: request intake, batching workers, response
-//! demultiplexing.
+//! The [`Coordinator`]: request intake, replica routing, batching
+//! workers, response demultiplexing.
 //!
 //! Threading model: callers ([`crate::net::server`] connections or
-//! in-process examples) call [`Coordinator::submit`], which enqueues
-//! into the [`DynamicBatcher`] and returns a channel receiver.  A
-//! small pool of executor workers waits on a condvar, drains ready
-//! batches, runs them on the PJRT [`Engine`] (`execute_padded` — the
-//! ladder/padding policy lives in the runtime), splits the output
-//! rows back per request and completes each channel.
+//! in-process examples) call [`Coordinator::submit`], which routes the
+//! request to an engine-model replica (the [`RoutingPolicy`] hook),
+//! enqueues into the [`DynamicBatcher`] and returns a channel
+//! receiver.  A small pool of executor workers waits on a condvar,
+//! drains ready batches, runs them on the [`Engine`] (`execute_padded`
+//! — the ladder/padding policy lives in the runtime), splits the
+//! output rows back per request and completes each channel.
 //!
 //! One worker per physical accelerator queue matches the paper's
 //! setup (a single DataScale node serialises concurrent model
 //! executions per tile group); more workers only help when PJRT's
 //! intra-op parallelism is not already saturating the host.
+//!
+//! ## Replica routing
+//!
+//! When the [`Registry`] maps an instance to a replica set (one
+//! weight set deployed on several engine models — the coordinator's
+//! view of the `cluster` layer's multi-backend story), `submit` picks
+//! the replica per request: sticky-primary, round-robin, or
+//! least-outstanding-samples.  Requests for different replicas batch
+//! independently (the physical queues are independent), so the batch
+//! key carries the routed model.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -20,12 +31,31 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::Engine;
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest, Priority};
 use super::registry::Registry;
+
+/// Key separator between instance and routed replica in batcher
+/// queue keys (ASCII unit separator — never part of a model name).
+const ROUTE_SEP: char = '\u{1f}';
+
+/// How `submit` picks the engine-model replica for an instance whose
+/// registry entry names more than one (single-replica instances are
+/// unaffected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Always the first replica (the seed behaviour).
+    #[default]
+    Primary,
+    /// Cycle replicas per request.
+    RoundRobin,
+    /// The replica with the fewest samples currently in flight
+    /// (ties break on model name for determinism).
+    LeastOutstanding,
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -66,17 +96,32 @@ impl CoordinatorStats {
     }
 }
 
+/// Per-engine-model routing accounting.
+#[derive(Debug, Default)]
+struct RouteState {
+    /// Samples submitted but not yet executed, per engine model.
+    outstanding: BTreeMap<String, u64>,
+    /// Cumulative samples executed, per engine model.
+    routed: BTreeMap<String, u64>,
+    /// Round-robin cursor per *instance* (a shared cursor would let
+    /// regularly interleaved multi-instance traffic alias onto one
+    /// replica each).
+    rr_cursor: BTreeMap<String, u64>,
+}
+
 struct Shared {
     batcher: Mutex<DynamicBatcher>,
     ready: Condvar,
     shutdown: AtomicBool,
     completions: Mutex<BTreeMap<u64, SyncSender<InferenceResult>>>,
+    routes: Mutex<RouteState>,
 }
 
 /// The serving core.  See module docs.
 pub struct Coordinator {
     engine: Arc<Engine>,
     registry: Registry,
+    routing: RoutingPolicy,
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
@@ -84,16 +129,47 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start a coordinator over a loaded engine.  `registry` defines
-    /// the logical instances clients may address.
+    /// Start a coordinator over a loaded engine with the default
+    /// (primary) replica routing.  `registry` defines the logical
+    /// instances clients may address.
     pub fn start(engine: Engine, registry: Registry, config: CoordinatorConfig) -> Result<Self> {
+        Self::start_with_router(engine, registry, config, RoutingPolicy::Primary)
+    }
+
+    /// Start with an explicit replica-routing policy (the `submit`
+    /// routing hook).
+    pub fn start_with_router(
+        engine: Engine,
+        registry: Registry,
+        config: CoordinatorConfig,
+        routing: RoutingPolicy,
+    ) -> Result<Self> {
         if registry.is_empty() {
             return Err(anyhow!("registry has no instances"));
         }
-        // validate every instance resolves to a loaded model
+        // validate every replica resolves to a loaded model and that
+        // replica sets are shape-consistent (routing must be invisible
+        // to the caller)
         for inst in registry.instance_names() {
-            let model = registry.resolve(&inst)?;
-            engine.spec(model)?;
+            let replicas = registry.replicas(&inst)?;
+            if inst.contains(ROUTE_SEP) || replicas.iter().any(|m| m.contains(ROUTE_SEP)) {
+                bail!("instance {inst:?}: names must not contain U+001F (batch-key separator)");
+            }
+            let primary = engine.spec(&replicas[0])?;
+            let (in_el, out_el) = (primary.input_elems(), primary.output_elems());
+            for model in &replicas[1..] {
+                let spec = engine.spec(model)?;
+                if spec.input_elems() != in_el || spec.output_elems() != out_el {
+                    bail!(
+                        "instance {inst:?}: replica {model:?} shape \
+                         {}x{} != primary {}x{}",
+                        spec.input_elems(),
+                        spec.output_elems(),
+                        in_el,
+                        out_el
+                    );
+                }
+            }
         }
 
         let engine = Arc::new(engine);
@@ -102,6 +178,7 @@ impl Coordinator {
             ready: Condvar::new(),
             shutdown: AtomicBool::new(false),
             completions: Mutex::new(BTreeMap::new()),
+            routes: Mutex::new(RouteState::default()),
         });
         let stats = Arc::new(CoordinatorStats::default());
 
@@ -122,6 +199,7 @@ impl Coordinator {
         Ok(Coordinator {
             engine,
             registry,
+            routing,
             shared,
             workers,
             next_id: AtomicU64::new(1),
@@ -135,6 +213,46 @@ impl Coordinator {
 
     pub fn registry(&self) -> &Registry {
         &self.registry
+    }
+
+    pub fn routing(&self) -> RoutingPolicy {
+        self.routing
+    }
+
+    /// Cumulative samples executed per engine model (observability for
+    /// the routing hook; single-replica deployments see their primary
+    /// model only).
+    pub fn routed_samples(&self) -> BTreeMap<String, u64> {
+        self.shared.routes.lock().unwrap().routed.clone()
+    }
+
+    /// The routing hook: pick the engine-model replica for one
+    /// request of `samples` samples.  Selection and the in-flight
+    /// increment happen under one lock so concurrent submits cannot
+    /// all pick the same "least outstanding" replica.
+    fn route(&self, instance: &str, replicas: &[String], samples: usize) -> String {
+        if replicas.len() == 1 {
+            return replicas[0].clone();
+        }
+        let mut routes = self.shared.routes.lock().unwrap();
+        let chosen = match self.routing {
+            RoutingPolicy::Primary => replicas[0].clone(),
+            RoutingPolicy::RoundRobin => {
+                let cursor = routes.rr_cursor.entry(instance.to_string()).or_insert(0);
+                let i = *cursor as usize % replicas.len();
+                *cursor += 1;
+                replicas[i].clone()
+            }
+            RoutingPolicy::LeastOutstanding => replicas
+                .iter()
+                .min_by_key(|m| {
+                    (routes.outstanding.get(*m).copied().unwrap_or(0), m.as_str())
+                })
+                .expect("non-empty replica set")
+                .clone(),
+        };
+        *routes.outstanding.entry(chosen.clone()).or_insert(0) += samples as u64;
+        chosen
     }
 
     /// Submit `samples` flattened samples for `instance` at critical
@@ -152,8 +270,8 @@ impl Coordinator {
         input: Vec<f32>,
         priority: Priority,
     ) -> Result<Receiver<InferenceResult>> {
-        let model = self.registry.resolve(instance)?;
-        let spec = self.engine.spec(model)?;
+        let replicas = self.registry.replicas(instance)?;
+        let spec = self.engine.spec(&replicas[0])?;
         let in_el = spec.input_elems();
         if input.is_empty() || input.len() % in_el != 0 {
             return Err(anyhow!(
@@ -162,6 +280,16 @@ impl Coordinator {
             ));
         }
         let samples = input.len() / in_el;
+        let model = self.route(instance, replicas, samples);
+        // Single-replica instances keep the bare instance as the
+        // batch key (seed behaviour); replicated ones batch per
+        // (instance, replica) pair.
+        let key = if replicas.len() == 1 {
+            instance.to_string()
+        } else {
+            format!("{instance}{ROUTE_SEP}{model}")
+        };
+
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = sync_channel(1);
 
@@ -169,7 +297,7 @@ impl Coordinator {
         {
             let mut batcher = self.shared.batcher.lock().unwrap();
             batcher.enqueue(
-                instance,
+                &key,
                 PendingRequest { id, input, samples, arrived: Instant::now(), priority },
             );
         }
@@ -204,6 +332,14 @@ impl Drop for Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Split a batch key back into (instance, routed replica).
+fn split_key(key: &str) -> (&str, Option<&str>) {
+    match key.split_once(ROUTE_SEP) {
+        Some((instance, model)) => (instance, Some(model)),
+        None => (key, None),
     }
 }
 
@@ -272,8 +408,16 @@ fn execute_batch(
 ) {
     stats.batches.fetch_add(1, Ordering::Relaxed);
 
+    // the routed replica rides in the batch key; single-replica
+    // instances resolve through the registry as before
+    let (instance, routed) = split_key(&batch.instance);
+    let model: Result<String> = match routed {
+        Some(m) => Ok(m.to_string()),
+        None => registry.resolve(instance).map(String::from),
+    };
+
     let result: Result<Vec<f32>> = (|| {
-        let model = registry.resolve(&batch.instance)?;
+        let model = model.as_ref().map_err(|e| anyhow!("{e:#}"))?;
         // gather request inputs into one contiguous mini-batch
         let spec = engine.spec(model)?;
         let in_el = spec.input_elems();
@@ -290,11 +434,24 @@ fn execute_batch(
         Ok(out)
     })();
 
+    // -- routing accounting: the batch is no longer in flight either
+    // way; it only counts as *executed* when execution succeeded --
+    if let Ok(model) = &model {
+        let mut routes = shared.routes.lock().unwrap();
+        let n = batch.total_samples as u64;
+        if let Some(v) = routes.outstanding.get_mut(model) {
+            *v = v.saturating_sub(n);
+        }
+        if result.is_ok() {
+            *routes.routed.entry(model.clone()).or_insert(0) += n;
+        }
+    }
+
     // -- demux responses --
     let mut completions = shared.completions.lock().unwrap();
     match result {
         Ok(out) => {
-            let model = registry.resolve(&batch.instance).expect("validated");
+            let model = model.as_ref().expect("result Ok implies model Ok");
             let out_el = engine.spec(model).expect("validated").output_elems();
             let mut offset = 0usize;
             for req in &batch.requests {

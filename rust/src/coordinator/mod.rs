@@ -10,13 +10,15 @@
 //!   them per instance under a latency deadline, padding to the
 //!   compiled mini-batch ladder.
 //! * [`core`]     — [`Coordinator`]: worker threads pull ready
-//!   batches, execute them on the PJRT engine, and demultiplex the
-//!   per-request responses.
+//!   batches, execute them on the engine, and demultiplex the
+//!   per-request responses.  `submit` carries the replica routing
+//!   hook ([`RoutingPolicy`]) that picks which engine-model replica
+//!   serves each request when an instance is deployed more than once.
 
 pub mod batcher;
 pub mod core;
 pub mod registry;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
-pub use core::{Coordinator, CoordinatorConfig, CoordinatorStats};
+pub use core::{Coordinator, CoordinatorConfig, CoordinatorStats, RoutingPolicy};
 pub use registry::Registry;

@@ -1,22 +1,32 @@
 //! Multi-model instance registry.
 //!
 //! A logical *instance* is what clients address: `hermit/mat3`,
-//! `mir`, …  Each instance resolves to a loaded engine model.  In the
-//! paper's deployment every material has its own trained Hermit
-//! weights; here all materials share the reproduction's single weight
-//! set (per-material `.weights.npz` files drop in without code
-//! changes — the registry is the only mapping layer), which preserves
-//! the serving behaviour the paper studies: independent queues,
-//! independent batches, concurrent execution targets.
+//! `mir`, …  Each instance resolves to one or more loaded engine
+//! models — its **replica set**.  In the paper's deployment every
+//! material has its own trained Hermit weights; here all materials
+//! share the reproduction's single weight set (per-material
+//! `.weights.npz` files drop in without code changes — the registry
+//! is the only mapping layer), which preserves the serving behaviour
+//! the paper studies: independent queues, independent batches,
+//! concurrent execution targets.
+//!
+//! Replica sets are the coordinator-side half of the `cluster`
+//! story: when an instance maps to several engine models (e.g. one
+//! weight set deployed on two tile groups), the coordinator's routing
+//! hook ([`crate::coordinator::RoutingPolicy`]) picks which replica
+//! executes each request.  All replicas of an instance must share the
+//! instance's input/output shape — the coordinator validates this at
+//! startup.
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-/// Instance table: logical name -> engine model name.
+/// Instance table: logical name -> engine model replica set (the
+/// first entry is the *primary*).
 #[derive(Debug, Clone, Default)]
 pub struct Registry {
-    instances: BTreeMap<String, String>,
+    instances: BTreeMap<String, Vec<String>>,
 }
 
 impl Registry {
@@ -24,9 +34,25 @@ impl Registry {
         Self::default()
     }
 
-    /// Register one instance.  Re-registering a name replaces it.
+    /// Register one instance with a single engine model.
+    /// Re-registering a name replaces it.
     pub fn register(&mut self, instance: impl Into<String>, engine_model: impl Into<String>) {
-        self.instances.insert(instance.into(), engine_model.into());
+        self.instances.insert(instance.into(), vec![engine_model.into()]);
+    }
+
+    /// Register one instance with a replica set (first = primary).
+    /// Re-registering a name replaces it.
+    pub fn register_replicated(
+        &mut self,
+        instance: impl Into<String>,
+        engine_models: impl IntoIterator<Item = impl Into<String>>,
+    ) -> Result<()> {
+        let models: Vec<String> = engine_models.into_iter().map(Into::into).collect();
+        if models.is_empty() {
+            bail!("replica set for an instance cannot be empty");
+        }
+        self.instances.insert(instance.into(), models);
+        Ok(())
     }
 
     /// Register `n` per-material Hermit instances (`hermit/mat0` …),
@@ -37,11 +63,16 @@ impl Registry {
         }
     }
 
-    /// Resolve an instance to its engine model.
+    /// Resolve an instance to its primary engine model.
     pub fn resolve(&self, instance: &str) -> Result<&str> {
+        Ok(self.replicas(instance)?[0].as_str())
+    }
+
+    /// An instance's full replica set (primary first).
+    pub fn replicas(&self, instance: &str) -> Result<&[String]> {
         self.instances
             .get(instance)
-            .map(String::as_str)
+            .map(Vec::as_slice)
             .ok_or_else(|| anyhow!("unknown model instance {instance:?} (registered: {:?})",
                 self.instance_names()))
     }
@@ -102,5 +133,21 @@ mod tests {
         r.register("b", "hermit");
         r.register("a", "hermit");
         assert_eq!(r.instance_names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn replica_sets() {
+        let mut r = Registry::new();
+        r.register_replicated("hermit/mat0", ["hermit_a", "hermit_b"]).unwrap();
+        assert_eq!(r.resolve("hermit/mat0").unwrap(), "hermit_a"); // primary
+        assert_eq!(
+            r.replicas("hermit/mat0").unwrap(),
+            &["hermit_a".to_string(), "hermit_b".to_string()]
+        );
+        // single-model registration is a 1-replica set
+        r.register("mir", "mir");
+        assert_eq!(r.replicas("mir").unwrap().len(), 1);
+        // empty set rejected
+        assert!(r.register_replicated("bad", Vec::<String>::new()).is_err());
     }
 }

@@ -1,0 +1,506 @@
+//! Scenario campaigns: sweep Hydra/MIR request streams across
+//! cluster **topologies** × routing **policies** and emit a
+//! deterministic JSON summary (p50/p95/p99 latency, samples/s,
+//! backend utilisation) — the multi-accelerator extension of the
+//! paper's single-device evaluation.
+//!
+//! Three topologies span the §VI design space:
+//!
+//! * **local**  — per-rank node-local GPUs (the paper's GPU
+//!   convention: zero-cost link, Figs. 4–10);
+//! * **pooled** — one shared disaggregated RDU pool across the
+//!   Infiniband link (Figs. 15/16), heterogeneous tile groups
+//!   (4-tile + 2-tile, the allocator's natural shapes);
+//! * **hybrid** — the hot MIR model stays on per-rank local GPUs
+//!   while the long-tail per-material Hermit instances share the
+//!   remote pool ("local vs pooled vs hybrid" — the coupling-topology
+//!   axis of AI-coupled HPC workflows).
+//!
+//! Everything runs in virtual time on the calibrated analytic models,
+//! so a fixed seed yields a byte-stable summary
+//! (`rust/tests/campaign_golden.rs` pins it).  MIR uses the paper's
+//! no-layernorm variant (Fig. 20) so both architectures execute the
+//! same network.
+
+use crate::cluster::{Backend, BackendReport, Cluster, GpuBackend, Policy, RduBackend};
+use crate::devices::{profiles, Api, Gpu, ModelProfile};
+use crate::netsim::Link;
+use crate::rdu::RduApi;
+use crate::util::json::Value;
+use crate::util::stats;
+use crate::workload::{HydraWorkload, MirWorkload};
+
+use std::collections::BTreeMap;
+
+use super::table::Table;
+
+/// The three coupling topologies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    Local,
+    Pooled,
+    Hybrid,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 3] = [Topology::Local, Topology::Pooled, Topology::Hybrid];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Topology::Local => "per-rank local GPUs",
+            Topology::Pooled => "shared disaggregated RDU pool",
+            Topology::Hybrid => "hybrid (MIR local, Hermit pooled)",
+        }
+    }
+
+    /// Stable snake_case key for JSON artifacts.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Topology::Local => "local",
+            Topology::Pooled => "pooled",
+            Topology::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Campaign knobs (defaults sized so the full 3×4 sweep runs in
+/// milliseconds of wall time).
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// MPI ranks issuing requests.
+    pub ranks: usize,
+    /// Hydra zones per rank per timestep.
+    pub zones_per_rank: usize,
+    /// Per-material Hermit instances per rank.
+    pub materials: usize,
+    /// Simulated physics timesteps.
+    pub timesteps: usize,
+    /// Virtual seconds between timesteps (queues drain in between).
+    pub step_period_s: f64,
+    /// Base MIR mixed-zone count per rank per timestep.
+    pub mir_base_zones: usize,
+    /// Workload seed (fixed seed → byte-stable summary).
+    pub seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            ranks: 4,
+            zones_per_rank: 200,
+            materials: 8,
+            timesteps: 12,
+            step_period_s: 0.02,
+            mir_base_zones: 1024,
+            seed: 42,
+        }
+    }
+}
+
+/// Latency/throughput summary for one workload within a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSummary {
+    pub requests: u64,
+    pub samples: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_link_overhead_s: f64,
+    /// Samples over the scenario makespan.
+    pub samples_per_s: f64,
+}
+
+impl WorkloadSummary {
+    fn from_run(latencies: &[f64], link_overheads: &[f64], samples: u64, makespan_s: f64) -> Self {
+        WorkloadSummary {
+            requests: latencies.len() as u64,
+            samples,
+            mean_s: stats::mean(latencies),
+            p50_s: stats::percentile(latencies, 50.0),
+            p95_s: stats::percentile(latencies, 95.0),
+            p99_s: stats::percentile(latencies, 99.0),
+            mean_link_overhead_s: stats::mean(link_overheads),
+            samples_per_s: if makespan_s > 0.0 { samples as f64 / makespan_s } else { 0.0 },
+        }
+    }
+}
+
+/// One (topology, policy) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub topology: Topology,
+    pub policy: Policy,
+    pub hydra: WorkloadSummary,
+    pub mir: WorkloadSummary,
+    pub makespan_s: f64,
+    pub backends: Vec<BackendReport>,
+}
+
+/// The full sweep.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub config: CampaignConfig,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl CampaignResult {
+    /// Look up one cell.
+    pub fn scenario(&self, topology: Topology, policy: Policy) -> &ScenarioResult {
+        self.scenarios
+            .iter()
+            .find(|s| s.topology == topology && s.policy == policy)
+            .expect("campaign ran every (topology, policy) cell")
+    }
+
+    /// Deterministic JSON document (BTreeMap key order; values
+    /// rounded to fixed precision so the rendering is byte-stable).
+    pub fn to_json(&self) -> Value {
+        let mut root = BTreeMap::new();
+        root.insert("config".to_string(), config_json(&self.config));
+        root.insert(
+            "scenarios".to_string(),
+            Value::Array(self.scenarios.iter().map(scenario_json).collect()),
+        );
+        Value::Object(root)
+    }
+
+    /// One aligned table per topology (rows: policy; columns: key
+    /// latency/throughput figures).
+    pub fn tables(&self) -> Vec<Table> {
+        Topology::ALL
+            .iter()
+            .map(|&topo| {
+                let mut t = Table::new(
+                    format!("Campaign — {} ({})", topo.key(), topo.label()),
+                    "metric",
+                );
+                t.set_x([
+                    "hydra_p50_us",
+                    "hydra_p99_us",
+                    "hydra_Msamples_per_s",
+                    "mir_p50_us",
+                    "mir_p99_us",
+                ]);
+                for policy in Policy::ALL {
+                    let s = self.scenario(topo, policy);
+                    t.add_series(
+                        policy.key(),
+                        vec![
+                            s.hydra.p50_s * 1e6,
+                            s.hydra.p99_s * 1e6,
+                            s.hydra.samples_per_s / 1e6,
+                            s.mir.p50_s * 1e6,
+                            s.mir.p99_s * 1e6,
+                        ],
+                    );
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+/// Tiering: which backend indices serve which model class.
+struct Tiering {
+    hermit: Vec<usize>,
+    mir: Vec<usize>,
+}
+
+/// Build a topology's backend fleet + tiering.
+fn build_cluster(
+    topology: Topology,
+    ranks: usize,
+    policy: Policy,
+    pool_link: &Link,
+) -> (Cluster, Tiering) {
+    let local_gpu = |r: usize| -> Box<dyn Backend> {
+        Box::new(GpuBackend::node_local(
+            format!("gpu/rank{r}"),
+            Gpu::a100(),
+            Api::TrtCudaGraphs,
+        ))
+    };
+    // The pool is deliberately heterogeneous — a full 4-tile group on
+    // the optimised C++ stack next to a half-provisioned 2-tile group
+    // still on the naive Python stack (the allocator's natural
+    // shapes, Fig. 13's API spread): state-blind policies pay for not
+    // seeing the difference.
+    let pool = |start: usize| -> Vec<Box<dyn Backend>> {
+        vec![
+            Box::new(RduBackend::with_link(
+                format!("rdu/pool{start}"),
+                4,
+                RduApi::CppOptimized,
+                pool_link.clone(),
+            )),
+            Box::new(RduBackend::with_link(
+                format!("rdu/pool{}", start + 1),
+                2,
+                RduApi::Python,
+                pool_link.clone(),
+            )),
+        ]
+    };
+
+    match topology {
+        Topology::Local => {
+            let backends: Vec<Box<dyn Backend>> = (0..ranks).map(local_gpu).collect();
+            let all: Vec<usize> = (0..backends.len()).collect();
+            (Cluster::new(backends, policy), Tiering { hermit: all.clone(), mir: all })
+        }
+        Topology::Pooled => {
+            let backends = pool(0);
+            let all: Vec<usize> = (0..backends.len()).collect();
+            (Cluster::new(backends, policy), Tiering { hermit: all.clone(), mir: all })
+        }
+        Topology::Hybrid => {
+            let mut backends: Vec<Box<dyn Backend>> = (0..ranks).map(local_gpu).collect();
+            let gpu_idx: Vec<usize> = (0..backends.len()).collect();
+            backends.extend(pool(0));
+            let pool_idx: Vec<usize> = (gpu_idx.len()..backends.len()).collect();
+            (Cluster::new(backends, policy), Tiering { hermit: pool_idx, mir: gpu_idx })
+        }
+    }
+}
+
+/// Campaign model mapping: Hermit requests use the Hermit profile;
+/// MIR requests use the Fig-20 no-layernorm variant so GPU and RDU
+/// backends execute the same network.
+fn profile_for(model: &str) -> ModelProfile {
+    if model.starts_with("mir") {
+        profiles::mir_noln()
+    } else {
+        profiles::hermit()
+    }
+}
+
+/// Run one (topology, policy) scenario.
+pub fn run_scenario(topology: Topology, policy: Policy, cfg: &CampaignConfig) -> ScenarioResult {
+    run_scenario_with_link(topology, policy, cfg, &Link::infiniband_cx6())
+}
+
+/// As [`run_scenario`], with an explicit pool link — the link
+/// ablation behind the Fig-15/16 anchor test (swap the Infiniband
+/// model for [`Link::local`] to measure the pure remote overhead).
+pub fn run_scenario_with_link(
+    topology: Topology,
+    policy: Policy,
+    cfg: &CampaignConfig,
+    pool_link: &Link,
+) -> ScenarioResult {
+    let (mut cluster, tier) = build_cluster(topology, cfg.ranks, policy, pool_link);
+
+    let hydra = HydraWorkload {
+        ranks: cfg.ranks,
+        zones_per_rank: cfg.zones_per_rank,
+        materials: cfg.materials,
+        inferences_per_zone: (2, 3),
+        seed: cfg.seed,
+    };
+    let mir = MirWorkload {
+        ranks: cfg.ranks,
+        base_zones: cfg.mir_base_zones,
+        variation: 0.4,
+        seed: cfg.seed ^ 0x5EED,
+    };
+    let hermit_profile = profile_for("hermit");
+    let mir_profile = profile_for("mir");
+
+    let mut hydra_lat = Vec::new();
+    let mut hydra_link = Vec::new();
+    let mut hydra_samples = 0u64;
+    let mut mir_lat = Vec::new();
+    let mut mir_link = Vec::new();
+    let mut mir_samples = 0u64;
+
+    for t in 0..cfg.timesteps {
+        cluster.advance_to(t as f64 * cfg.step_period_s);
+        for req in hydra.timestep(t) {
+            let routed =
+                cluster.submit_among(&tier.hermit, &req.model, &hermit_profile, req.samples);
+            hydra_lat.push(routed.latency_s);
+            hydra_link.push(routed.link_overhead_s);
+            hydra_samples += req.samples as u64;
+        }
+        for req in mir.timestep(t) {
+            let routed = cluster.submit_among(&tier.mir, &req.model, &mir_profile, req.samples);
+            mir_lat.push(routed.latency_s);
+            mir_link.push(routed.link_overhead_s);
+            mir_samples += req.samples as u64;
+        }
+    }
+
+    let makespan_s = cluster.makespan_s();
+    ScenarioResult {
+        topology,
+        policy,
+        hydra: WorkloadSummary::from_run(&hydra_lat, &hydra_link, hydra_samples, makespan_s),
+        mir: WorkloadSummary::from_run(&mir_lat, &mir_link, mir_samples, makespan_s),
+        makespan_s,
+        backends: cluster.report(),
+    }
+}
+
+/// Run the full sweep: every topology under every routing policy.
+pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
+    let mut scenarios = Vec::new();
+    for topology in Topology::ALL {
+        for policy in Policy::ALL {
+            scenarios.push(run_scenario(topology, policy, cfg));
+        }
+    }
+    CampaignResult { config: cfg.clone(), scenarios }
+}
+
+// ------------------------------------------------------------- JSON
+
+/// Microseconds at fixed 3-decimal precision (byte-stable rendering).
+fn us(seconds: f64) -> Value {
+    Value::Number((seconds * 1e9).round() / 1e3)
+}
+
+/// A plain number at fixed 3-decimal precision.
+fn fixed3(v: f64) -> Value {
+    Value::Number((v * 1e3).round() / 1e3)
+}
+
+fn count(v: u64) -> Value {
+    Value::Number(v as f64)
+}
+
+fn config_json(cfg: &CampaignConfig) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ranks".to_string(), count(cfg.ranks as u64));
+    m.insert("zones_per_rank".to_string(), count(cfg.zones_per_rank as u64));
+    m.insert("materials".to_string(), count(cfg.materials as u64));
+    m.insert("timesteps".to_string(), count(cfg.timesteps as u64));
+    m.insert("step_period_us".to_string(), us(cfg.step_period_s));
+    m.insert("mir_base_zones".to_string(), count(cfg.mir_base_zones as u64));
+    m.insert("seed".to_string(), count(cfg.seed));
+    Value::Object(m)
+}
+
+fn workload_json(w: &WorkloadSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("requests".to_string(), count(w.requests));
+    m.insert("samples".to_string(), count(w.samples));
+    m.insert("mean_us".to_string(), us(w.mean_s));
+    m.insert("p50_us".to_string(), us(w.p50_s));
+    m.insert("p95_us".to_string(), us(w.p95_s));
+    m.insert("p99_us".to_string(), us(w.p99_s));
+    m.insert("mean_link_overhead_us".to_string(), us(w.mean_link_overhead_s));
+    m.insert("samples_per_s".to_string(), fixed3(w.samples_per_s));
+    Value::Object(m)
+}
+
+fn scenario_json(s: &ScenarioResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topology".to_string(), Value::String(s.topology.key().to_string()));
+    m.insert("policy".to_string(), Value::String(s.policy.key().to_string()));
+    m.insert("hydra".to_string(), workload_json(&s.hydra));
+    m.insert("mir".to_string(), workload_json(&s.mir));
+    m.insert("makespan_us".to_string(), us(s.makespan_s));
+    let makespan = s.makespan_s.max(f64::MIN_POSITIVE);
+    m.insert(
+        "backends".to_string(),
+        Value::Array(
+            s.backends
+                .iter()
+                .map(|b| {
+                    let mut bm = BTreeMap::new();
+                    bm.insert("name".to_string(), Value::String(b.name.clone()));
+                    bm.insert("requests".to_string(), count(b.requests));
+                    bm.insert("samples".to_string(), count(b.samples));
+                    bm.insert("busy_us".to_string(), us(b.busy_s));
+                    bm.insert(
+                        "utilization".to_string(),
+                        Value::Number((b.busy_s / makespan * 1e6).round() / 1e6),
+                    );
+                    Value::Object(bm)
+                })
+                .collect(),
+        ),
+    );
+    Value::Object(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> CampaignConfig {
+        CampaignConfig { timesteps: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn campaign_covers_every_cell() {
+        let result = run_campaign(&quick_cfg());
+        assert_eq!(result.scenarios.len(), Topology::ALL.len() * Policy::ALL.len());
+        for topo in Topology::ALL {
+            for policy in Policy::ALL {
+                let s = result.scenario(topo, policy);
+                assert!(s.hydra.requests > 0, "{topo:?}/{policy:?}");
+                assert!(s.mir.requests > 0, "{topo:?}/{policy:?}");
+                assert!(s.makespan_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scenarios_conserve_samples() {
+        // every scenario of a sweep sees the same workload; each must
+        // route exactly the submitted sample volume
+        let result = run_campaign(&quick_cfg());
+        let expect_hydra = result.scenarios[0].hydra.samples;
+        let expect_mir = result.scenarios[0].mir.samples;
+        assert!(expect_hydra > 0 && expect_mir > 0);
+        for s in &result.scenarios {
+            assert_eq!(s.hydra.samples, expect_hydra, "{:?}/{:?}", s.topology, s.policy);
+            assert_eq!(s.mir.samples, expect_mir);
+            let routed: u64 = s.backends.iter().map(|b| b.samples).sum();
+            assert_eq!(routed, expect_hydra + expect_mir);
+        }
+    }
+
+    #[test]
+    fn local_topology_has_zero_link_overhead() {
+        let s = run_scenario(Topology::Local, Policy::LatencyAware, &quick_cfg());
+        assert_eq!(s.hydra.mean_link_overhead_s, 0.0);
+        assert_eq!(s.mir.mean_link_overhead_s, 0.0);
+    }
+
+    #[test]
+    fn pooled_topology_pays_the_link() {
+        let s = run_scenario(Topology::Pooled, Policy::LatencyAware, &quick_cfg());
+        assert!(s.hydra.mean_link_overhead_s > 0.0);
+        // MIR payloads (2×2304 els/sample) dwarf Hermit's 42+30
+        assert!(s.mir.mean_link_overhead_s > s.hydra.mean_link_overhead_s);
+    }
+
+    #[test]
+    fn hybrid_keeps_mir_local() {
+        let s = run_scenario(Topology::Hybrid, Policy::LatencyAware, &quick_cfg());
+        assert_eq!(s.mir.mean_link_overhead_s, 0.0, "hot model must stay local");
+        assert!(s.hydra.mean_link_overhead_s > 0.0, "long tail rides the link");
+        // GPU backends saw only MIR traffic, the pool only Hermit
+        let gpu_requests: u64 = s
+            .backends
+            .iter()
+            .filter(|b| b.name.starts_with("gpu/"))
+            .map(|b| b.requests)
+            .sum();
+        assert_eq!(gpu_requests, s.mir.requests);
+    }
+
+    #[test]
+    fn json_is_deterministic() {
+        let cfg = quick_cfg();
+        let a = crate::util::json::write(&run_campaign(&cfg).to_json());
+        let b = crate::util::json::write(&run_campaign(&cfg).to_json());
+        assert_eq!(a, b);
+        // and parses back
+        assert!(crate::util::json::parse(&a).is_ok());
+        assert!(a.contains("\"topology\":\"hybrid\""), "{}", &a[..200.min(a.len())]);
+    }
+}

@@ -1,13 +1,20 @@
-//! Figure regenerators: one function per figure in the paper's
-//! evaluation (§V, Figs. 4–20), each returning the figure's series as
-//! structured rows and rendering them as an aligned table + CSV.
+//! Experiment harnesses:
 //!
-//! `repro <figN>` on the CLI calls into here; `repro all` regenerates
-//! the complete evaluation into `results/`.
+//! * [`figures`]  — one regenerator per paper figure (4–20), each
+//!   returning the figure's series as structured rows rendered as an
+//!   aligned table + CSV (`repro repro <figN>` / `repro repro all`);
+//! * [`scaling`]  — the ranks-per-DataScale feasibility frontier;
+//! * [`campaign`] — multi-backend scenario campaigns: Hydra/MIR
+//!   streams swept across cluster topologies (local / pooled /
+//!   hybrid) × routing policies, emitting deterministic JSON
+//!   (`repro campaign`);
+//! * [`table`]    — aligned-table + CSV rendering.
 
+pub mod campaign;
 pub mod figures;
 pub mod scaling;
 pub mod table;
 
+pub use campaign::{run_campaign, CampaignConfig, CampaignResult, Topology};
 pub use figures::{run_figure, FigureResult, FIGURES};
 pub use table::Table;

@@ -28,10 +28,17 @@
 //! * [`rdu`] — a dataflow-accelerator simulator: tiles, micro-batch
 //!   pipelining, config-validity rules, preferred multiple-of-6 sizes.
 //! * [`netsim`] — the Infiniband link model (100 Gb/s, 1 µs).
+//! * [`cluster`] — the multi-backend layer: a [`cluster::Backend`]
+//!   trait unifying the GPU/RDU device models behind `latency_s` /
+//!   `throughput` / `queue_s`, composed into a [`cluster::Cluster`]
+//!   with pluggable routing policies (round-robin, least-outstanding,
+//!   model-affinity, latency-aware).
 //! * [`workload`] — Hydra/MIR request-trace generators.
 //! * [`metrics`] — the paper's measurement methodology (mean over
 //!   mini-batches, 5 replicates, 95 % confidence intervals).
-//! * [`harness`] — one regenerator per paper figure (4–20).
+//! * [`harness`] — one regenerator per paper figure (4–20), the
+//!   scaling frontier, and the topology×policy scenario campaign
+//!   ([`harness::campaign`]).
 //! * [`util`] — in-tree substrates for the offline build environment:
 //!   JSON parsing, a PCG-family RNG, statistics, and a micro-bench
 //!   harness (no serde/rand/criterion available).
@@ -40,6 +47,7 @@
 //! hardware vs. what is simulated here and why the shape is preserved)
 //! and EXPERIMENTS.md for paper-vs-reproduced numbers per figure.
 
+pub mod cluster;
 pub mod coordinator;
 pub mod devices;
 pub mod harness;

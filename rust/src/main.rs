@@ -82,6 +82,7 @@ fn run() -> Result<()> {
         "client" => cmd_client(&args),
         "repro" => cmd_repro(&args),
         "scaling" => cmd_scaling(&args),
+        "campaign" => cmd_campaign(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -102,6 +103,7 @@ USAGE:
                [--requests 100] [--pipeline 1]
   repro repro  <fig4..fig20|all> [--out results]
   repro scaling [--max-ranks 128] [--step-ms 100] [--slo-ms 1]
+  repro campaign [--ranks 4] [--timesteps 12] [--zones 200] [--out results/campaign.json]
   repro trace  [--timesteps 3] [--ranks 4] [--zones 1000]
   repro info   [--artifacts artifacts]"
     );
@@ -114,8 +116,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let materials = args.get_usize("materials", 8)?;
     let workers = args.get_usize("workers", 1)?;
 
-    eprintln!("loading artifacts from {artifacts}/ ...");
-    let engine = Engine::load(&artifacts, None)?;
+    let engine = if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("loading artifacts from {artifacts}/ ...");
+        Engine::load(&artifacts, None)?
+    } else {
+        eprintln!(
+            "no {artifacts}/manifest.json — serving the deterministic \
+             simulated engine (run `make artifacts` for PJRT execution)"
+        );
+        Engine::sim_reference()
+    };
     let mut registry = Registry::new();
     registry.register_materials("hermit", materials);
     registry.register("mir", "mir");
@@ -257,6 +267,50 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         Some(n) => println!("max SLO-feasible ranks on one SN10-8 node: {n}"),
         None => println!("no feasible rank count under this SLO"),
     }
+    Ok(())
+}
+
+/// Multi-backend scenario campaign: topologies × routing policies.
+fn cmd_campaign(args: &Args) -> Result<()> {
+    use cogsim_disagg::cluster::Policy;
+    use cogsim_disagg::harness::campaign::{run_campaign, CampaignConfig, Topology};
+
+    let cfg = CampaignConfig {
+        ranks: args.get_usize("ranks", 4)?,
+        zones_per_rank: args.get_usize("zones", 200)?,
+        timesteps: args.get_usize("timesteps", 12)?,
+        ..Default::default()
+    };
+    let out = args.get("out", "results/campaign.json");
+
+    let result = run_campaign(&cfg);
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+
+    let json = cogsim_disagg::util::json::write(&result.to_json());
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
+    eprintln!("wrote {out}");
+
+    // The headline comparison: does state-aware routing beat blind
+    // round-robin on tail latency in the hybrid topology?
+    let la = result.scenario(Topology::Hybrid, Policy::LatencyAware);
+    let rr = result.scenario(Topology::Hybrid, Policy::RoundRobin);
+    println!(
+        "hybrid Hydra p99: latency-aware {:.1} us vs round-robin {:.1} us ({})",
+        la.hydra.p99_s * 1e6,
+        rr.hydra.p99_s * 1e6,
+        if la.hydra.p99_s < rr.hydra.p99_s {
+            "latency-aware wins"
+        } else {
+            "round-robin wins"
+        }
+    );
     Ok(())
 }
 

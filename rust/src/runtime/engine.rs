@@ -1,13 +1,36 @@
-//! The PJRT execution engine: compiled-executable cache + resident
-//! weight buffers.  This is the hot path of the serving system — one
-//! `execute_b` per mini-batch, zero Python, zero weight re-uploads.
+//! The execution engine behind the coordinator: compiled-executable
+//! cache + resident weight buffers on the PJRT path, or a
+//! deterministic pure-Rust reference executor on the simulated path.
+//!
+//! Two backends share one `Engine` API (the hot path of the serving
+//! system — one execution per mini-batch, zero Python, zero weight
+//! re-uploads):
+//!
+//! * **PJRT** ([`Engine::load`]) — executes the AOT artifacts
+//!   (`artifacts/manifest.json` + HLO text + npz weights) on a PJRT
+//!   device.  In the offline build the vendored `xla` crate is an API
+//!   stub, so this path compiles but reports at runtime that the real
+//!   bridge is required.
+//! * **Simulated** ([`Engine::simulated`] / [`Engine::sim_reference`])
+//!   — a seeded, shape-faithful reference executor: every output row
+//!   is a deterministic function of its own input row only, so
+//!   batching, padding and routing can be validated end-to-end (rows
+//!   must be identical no matter which mini-batch or replica carried
+//!   them).  Square (autoencoder-shaped) models squash outputs into
+//!   (0, 1), matching the real MIR sigmoid head; like the
+//!   coefficients, the decision derives from the shape alone so
+//!   identically-shaped replicas behave identically.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
-use xla::{FromRawBytes, HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{
+    FromRawBytes, HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation,
+};
+
+use crate::util::rng::Rng;
 
 use super::manifest::{Manifest, ModelSpec};
 
@@ -36,7 +59,7 @@ impl ExecTiming {
     }
 }
 
-/// One loaded model: resident weights + per-batch executables.
+/// One PJRT-loaded model: resident weights + per-batch executables.
 struct LoadedModel {
     spec: ModelSpec,
     /// Weight buffers in calling-convention order, uploaded once.
@@ -45,26 +68,81 @@ struct LoadedModel {
     exes: BTreeMap<usize, PjRtLoadedExecutable>,
 }
 
-/// The engine owns one PJRT client and every loaded model.
+/// One simulated model: the spec plus the seeded reference transform.
+struct SimModel {
+    spec: ModelSpec,
+    /// Per-output-element affine coefficients; seeded from the
+    /// manifest seed and the model's *shape* (not its name), so
+    /// identically-shaped replicas of one logical model produce
+    /// identical rows — the semantics replica routing relies on.
+    coeff_bias: Vec<f32>,
+    coeff_mean: Vec<f32>,
+    coeff_gather: Vec<f32>,
+    /// Squash outputs into (0, 1) (MIR's sigmoid head).  Derived from
+    /// the shape alone (square, autoencoder-like models squash) so
+    /// the replica-transparency guarantee above covers it too.
+    squash01: bool,
+}
+
+impl SimModel {
+    fn new(spec: ModelSpec, manifest_seed: u64) -> SimModel {
+        let in_el = spec.input_elems();
+        let out_el = spec.output_elems();
+        let seed = manifest_seed
+            ^ (in_el as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (out_el as u64).rotate_left(23);
+        let mut rng = Rng::new(seed);
+        let mut coeff = |_| (0..out_el).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let squash01 = in_el == out_el;
+        SimModel {
+            coeff_bias: coeff(0),
+            coeff_mean: coeff(1),
+            coeff_gather: coeff(2),
+            spec,
+            squash01,
+        }
+    }
+
+    /// Reference forward for one row; per-sample by construction so
+    /// padding in the same mini-batch cannot leak between rows.
+    fn forward_row(&self, x: &[f32], out: &mut Vec<f32>) {
+        let in_el = x.len();
+        let mean = x.iter().sum::<f32>() / in_el as f32;
+        for j in 0..self.spec.output_elems() {
+            let t = self.coeff_bias[j]
+                + self.coeff_mean[j] * mean
+                + self.coeff_gather[j] * x[j % in_el];
+            out.push(if self.squash01 { 1.0 / (1.0 + (-t).exp()) } else { t });
+        }
+    }
+}
+
+enum Exec {
+    Pjrt { client: PjRtClient, models: BTreeMap<String, LoadedModel> },
+    Sim { models: BTreeMap<String, SimModel> },
+}
+
+/// The engine owns one execution backend and every loaded model.
 ///
 /// ## Thread-safety
-/// The `xla` crate's wrappers hold raw pointers and are `!Send`, but
-/// the underlying PJRT CPU client is thread-safe (its C++ API is
+/// The real `xla` crate's wrappers hold raw pointers and are `!Send`,
+/// but the underlying PJRT CPU client is thread-safe (its C++ API is
 /// documented thread-compatible and the CPU plugin serialises
-/// appropriately).  The coordinator keeps the engine behind a mutex
-/// (`coordinator::executor`) and only ever calls it from its executor
-/// threads, matching how a single physical accelerator serialises
-/// work in the paper's setup.
+/// appropriately).  The coordinator keeps the engine behind worker
+/// threads that serialise executions, matching how a single physical
+/// accelerator serialises work in the paper's setup.  The simulated
+/// backend is plain data.
 pub struct Engine {
-    client: PjRtClient,
-    models: BTreeMap<String, LoadedModel>,
+    exec: Exec,
     manifest: Manifest,
 }
 
 // SAFETY: PJRT CPU client/executable/buffer handles are usable from
-// any thread; the Rust wrappers are !Send only because they contain
-// raw pointers.  All mutation goes through &mut self or is internally
-// synchronised by PJRT.  See the struct docs for the usage contract.
+// any thread; the real crate's Rust wrappers are !Send only because
+// they contain raw pointers.  All mutation goes through &mut self or
+// is internally synchronised by PJRT.  See the struct docs for the
+// usage contract.  (With the vendored stub these impls are redundant
+// but harmless.)
 unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 
@@ -74,15 +152,46 @@ impl Engine {
     pub fn load(artifacts_dir: impl AsRef<Path>, models: Option<&[&str]>) -> Result<Self> {
         let manifest = Manifest::load(&artifacts_dir)?;
         let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        let mut engine = Engine { client, models: BTreeMap::new(), manifest };
-        let names: Vec<String> = match models {
-            Some(list) => list.iter().map(|s| s.to_string()).collect(),
-            None => engine.manifest.models.keys().cloned().collect(),
+        let mut engine = Engine {
+            exec: Exec::Pjrt { client, models: BTreeMap::new() },
+            manifest,
         };
-        for name in names {
+        for name in engine.select_names(models) {
             engine.load_model(&name)?;
         }
         Ok(engine)
+    }
+
+    /// Create a simulated engine over `manifest` (no artifacts, no
+    /// PJRT): deterministic reference numerics with real shapes,
+    /// ladders and padding behaviour.
+    pub fn simulated(manifest: Manifest, models: Option<&[&str]>) -> Result<Self> {
+        let mut engine = Engine { exec: Exec::Sim { models: BTreeMap::new() }, manifest };
+        for name in engine.select_names(models) {
+            let spec = engine.manifest.model(&name)?.clone();
+            let seed = engine.manifest.seed;
+            let Exec::Sim { models } = &mut engine.exec else { unreachable!() };
+            models.insert(name.clone(), SimModel::new(spec, seed));
+        }
+        Ok(engine)
+    }
+
+    /// The default simulated engine: the paper's three models on the
+    /// synthetic manifest.  Never fails.
+    pub fn sim_reference() -> Engine {
+        Engine::simulated(Manifest::synthetic(), None).expect("synthetic manifest is valid")
+    }
+
+    /// Whether this engine runs the simulated reference executor.
+    pub fn is_simulated(&self) -> bool {
+        matches!(self.exec, Exec::Sim { .. })
+    }
+
+    fn select_names(&self, models: Option<&[&str]>) -> Vec<String> {
+        match models {
+            Some(list) => list.iter().map(|s| s.to_string()).collect(),
+            None => self.manifest.models.keys().cloned().collect(),
+        }
     }
 
     fn load_model(&mut self, name: &str) -> Result<()> {
@@ -96,19 +205,25 @@ impl Engine {
         // PrimitiveType, turning F32 arrays into F16 buffers).
         let weights_path = self.manifest.weights_path(name)?;
         let param_names: Vec<&str> = spec.params.iter().map(|p| p.name.as_str()).collect();
-        let literals =
-            xla::Literal::read_npz_by_name(&weights_path, &(), &param_names)
-                .map_err(|e| anyhow!("loading {weights_path:?}: {e}"))?;
+        let literals = xla::Literal::read_npz_by_name(&weights_path, &(), &param_names)
+            .map_err(|e| anyhow!("loading {weights_path:?}: {e}"))?;
+        let Exec::Pjrt { client, models } = &mut self.exec else {
+            bail!("load_model on a simulated engine");
+        };
         let weights: Vec<PjRtBuffer> = literals
             .iter()
             .map(|lit| {
-                self.client
+                client
                     .buffer_from_host_literal(None, lit)
                     .map_err(|e| anyhow!("uploading weights: {e}"))
             })
             .collect::<Result<_>>()?;
         if weights.len() != spec.params.len() {
-            bail!("{name}: loaded {} weight buffers, expected {}", weights.len(), spec.params.len());
+            bail!(
+                "{name}: loaded {} weight buffers, expected {}",
+                weights.len(),
+                spec.params.len()
+            );
         }
 
         // --- executables: compile once per mini-batch size ---
@@ -118,14 +233,13 @@ impl Engine {
             let proto = HloModuleProto::from_text_file(&path)
                 .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
             let comp = XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
+            let exe = client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
             exes.insert(artifact.batch, exe);
         }
 
-        self.models.insert(name.to_string(), LoadedModel { spec, weights, exes });
+        models.insert(name.to_string(), LoadedModel { spec, weights, exes });
         Ok(())
     }
 
@@ -134,17 +248,20 @@ impl Engine {
     }
 
     pub fn model_names(&self) -> Vec<String> {
-        self.models.keys().cloned().collect()
+        match &self.exec {
+            Exec::Pjrt { models, .. } => models.keys().cloned().collect(),
+            Exec::Sim { models } => models.keys().cloned().collect(),
+        }
     }
 
     pub fn spec(&self, model: &str) -> Result<&ModelSpec> {
-        Ok(&self.model(model)?.spec)
-    }
-
-    fn model(&self, name: &str) -> Result<&LoadedModel> {
-        self.models
-            .get(name)
-            .ok_or_else(|| anyhow!("model {name:?} not loaded (have {:?})", self.model_names()))
+        let spec = match &self.exec {
+            Exec::Pjrt { models, .. } => models.get(model).map(|m| &m.spec),
+            Exec::Sim { models } => models.get(model).map(|m| &m.spec),
+        };
+        spec.ok_or_else(|| {
+            anyhow!("model {model:?} not loaded (have {:?})", self.model_names())
+        })
     }
 
     /// Execute one mini-batch at an exact compiled batch size.
@@ -157,8 +274,7 @@ impl Engine {
         batch: usize,
         input: &[f32],
     ) -> Result<(Vec<f32>, ExecTiming)> {
-        let loaded = self.model(model)?;
-        let spec = &loaded.spec;
+        let spec = self.spec(model)?;
         let expected = batch * spec.input_elems();
         if input.len() != expected {
             bail!(
@@ -166,56 +282,27 @@ impl Engine {
                 input.len()
             );
         }
-        let exe = loaded.exes.get(&batch).ok_or_else(|| {
-            anyhow!("{model}: no batch-{batch} executable (ladder {:?})", spec.batch_ladder())
-        })?;
-
-        let mut timing = ExecTiming::default();
-
-        // host -> device
-        let t0 = Instant::now();
-        let mut dims = vec![batch];
-        dims.extend_from_slice(&spec.input_shape);
-        let x_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(input, &dims, None)
-            .map_err(|e| anyhow!("upload: {e}"))?;
-        timing.upload = t0.elapsed();
-
-        // execute with resident weights (no weight copies!)
-        let t1 = Instant::now();
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(1 + loaded.weights.len());
-        args.push(&x_buf);
-        args.extend(loaded.weights.iter());
-        let result = exe.execute_b(&args).map_err(|e| anyhow!("execute: {e}"))?;
-        timing.execute = t1.elapsed();
-
-        // device -> host
-        let t2 = Instant::now();
-        let literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?;
-        // aot.py lowers with return_tuple=True -> 1-tuple.
-        let out = literal
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple: {e}"))?
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("to_vec: {e}"))?;
-        timing.fetch = t2.elapsed();
-
-        let expected_out = batch * spec.output_elems();
-        if out.len() != expected_out {
-            bail!("{model}: output has {} elements, expected {expected_out}", out.len());
+        if !spec.batch_ladder().contains(&batch) {
+            bail!("{model}: no batch-{batch} executable (ladder {:?})", spec.batch_ladder());
         }
-        Ok((out, timing))
+        match &self.exec {
+            Exec::Pjrt { client, models } => {
+                let loaded = models.get(model).expect("spec() checked presence");
+                execute_pjrt(client, loaded, model, batch, input)
+            }
+            Exec::Sim { models } => {
+                let sim = models.get(model).expect("spec() checked presence");
+                execute_sim(sim, batch, input)
+            }
+        }
     }
 
     /// Execute `n` samples by padding up to the smallest compiled
     /// batch (or chunking through the largest).  This is what the
     /// dynamic batcher calls; padding waste is the price of a fixed
-    /// executable ladder and is reported by [`padding_waste`].
+    /// executable ladder and is reported by [`Engine::padding_waste`].
     pub fn execute_padded(&self, model: &str, input: &[f32]) -> Result<(Vec<f32>, ExecTiming)> {
-        let spec = &self.model(model)?.spec;
+        let spec = self.spec(model)?;
         let in_el = spec.input_elems();
         let out_el = spec.output_elems();
         if input.len() % in_el != 0 {
@@ -250,7 +337,7 @@ impl Engine {
     /// Fraction of executed samples that were padding for a request of
     /// `n` samples (0.0 = perfect fit).
     pub fn padding_waste(&self, model: &str, n: usize) -> Result<f64> {
-        let spec = &self.model(model)?.spec;
+        let spec = self.spec(model)?;
         let ladder_max = *spec.batch_ladder().last().unwrap();
         let mut executed = 0usize;
         let mut done = 0usize;
@@ -263,5 +350,174 @@ impl Engine {
             return Ok(0.0);
         }
         Ok(1.0 - n as f64 / executed as f64)
+    }
+}
+
+fn execute_pjrt(
+    client: &PjRtClient,
+    loaded: &LoadedModel,
+    model: &str,
+    batch: usize,
+    input: &[f32],
+) -> Result<(Vec<f32>, ExecTiming)> {
+    let spec = &loaded.spec;
+    let exe = loaded.exes.get(&batch).ok_or_else(|| {
+        anyhow!("{model}: no batch-{batch} executable (ladder {:?})", spec.batch_ladder())
+    })?;
+
+    let mut timing = ExecTiming::default();
+
+    // host -> device
+    let t0 = Instant::now();
+    let mut dims = vec![batch];
+    dims.extend_from_slice(&spec.input_shape);
+    let x_buf = client
+        .buffer_from_host_buffer::<f32>(input, &dims, None)
+        .map_err(|e| anyhow!("upload: {e}"))?;
+    timing.upload = t0.elapsed();
+
+    // execute with resident weights (no weight copies!)
+    let t1 = Instant::now();
+    let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(1 + loaded.weights.len());
+    args.push(&x_buf);
+    args.extend(loaded.weights.iter());
+    let result = exe.execute_b(&args).map_err(|e| anyhow!("execute: {e}"))?;
+    timing.execute = t1.elapsed();
+
+    // device -> host
+    let t2 = Instant::now();
+    let literal = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch: {e}"))?;
+    // aot.py lowers with return_tuple=True -> 1-tuple.
+    let out = literal
+        .to_tuple1()
+        .map_err(|e| anyhow!("untuple: {e}"))?
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("to_vec: {e}"))?;
+    timing.fetch = t2.elapsed();
+
+    let expected_out = batch * spec.output_elems();
+    if out.len() != expected_out {
+        bail!("{model}: output has {} elements, expected {expected_out}", out.len());
+    }
+    Ok((out, timing))
+}
+
+fn execute_sim(sim: &SimModel, batch: usize, input: &[f32]) -> Result<(Vec<f32>, ExecTiming)> {
+    let in_el = sim.spec.input_elems();
+    let out_el = sim.spec.output_elems();
+    let t0 = Instant::now();
+    let mut out = Vec::with_capacity(batch * out_el);
+    for row in input.chunks_exact(in_el) {
+        sim.forward_row(row, &mut out);
+    }
+    let timing = ExecTiming {
+        upload: Duration::ZERO,
+        execute: t0.elapsed().max(Duration::from_nanos(1)),
+        fetch: Duration::ZERO,
+    };
+    Ok((out, timing))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_reference_loads_paper_models() {
+        let e = Engine::sim_reference();
+        assert!(e.is_simulated());
+        assert_eq!(e.model_names(), vec!["hermit", "mir", "mir_noln"]);
+        assert_eq!(e.spec("hermit").unwrap().input_elems(), 42);
+        assert_eq!(e.spec("hermit").unwrap().output_elems(), 30);
+        assert!(e.spec("nope").is_err());
+    }
+
+    #[test]
+    fn sim_execute_is_deterministic_and_shaped() {
+        let e = Engine::sim_reference();
+        let x: Vec<f32> = (0..42).map(|i| (i as f32) * 0.01 - 0.2).collect();
+        let (out, t) = e.execute("hermit", 1, &x).unwrap();
+        assert_eq!(out.len(), 30);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert!(t.execute.as_nanos() > 0);
+        let (out2, _) = e.execute("hermit", 1, &x).unwrap();
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn sim_batch_consistency_padding_does_not_leak() {
+        let e = Engine::sim_reference();
+        let x: Vec<f32> = (0..42).map(|i| (i as f32) * 0.03 - 0.5).collect();
+        let (solo, _) = e.execute("hermit", 1, &x).unwrap();
+        let mut x4 = vec![0f32; 4 * 42];
+        x4[..42].copy_from_slice(&x);
+        let (padded, _) = e.execute("hermit", 4, &x4).unwrap();
+        assert_eq!(&padded[..30], &solo[..]);
+    }
+
+    #[test]
+    fn sim_execute_padded_roundtrip() {
+        let e = Engine::sim_reference();
+        let x: Vec<f32> = (0..5 * 42).map(|i| (i % 13) as f32 * 0.05).collect();
+        let (out, _) = e.execute_padded("hermit", &x).unwrap();
+        assert_eq!(out.len(), 5 * 30);
+        for s in 0..5 {
+            let (row, _) = e.execute("hermit", 1, &x[s * 42..(s + 1) * 42]).unwrap();
+            assert_eq!(&out[s * 30..(s + 1) * 30], &row[..]);
+        }
+    }
+
+    #[test]
+    fn sim_mir_outputs_are_volume_fractions() {
+        let e = Engine::sim_reference();
+        let x = vec![0.25f32; 48 * 48];
+        let (out, _) = e.execute("mir", 1, &x).unwrap();
+        assert_eq!(out.len(), 48 * 48);
+        assert!(out.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn sim_rejects_bad_inputs_like_pjrt_would() {
+        let e = Engine::sim_reference();
+        assert!(e.execute("hermit", 1, &[0.0; 10]).is_err());
+        assert!(e.execute("hermit", 3, &[0.0; 3 * 42]).is_err()); // 3 not in ladder
+        assert!(e.execute("nope", 1, &[0.0; 42]).is_err());
+    }
+
+    #[test]
+    fn sim_identically_shaped_replicas_agree() {
+        // Replica routing depends on this: two engine models with the
+        // same shape (stand-ins for two copies of one weight set)
+        // produce identical rows.
+        let m = Manifest::synthetic_named(&[("hermit_a", 42, 30), ("hermit_b", 42, 30)]);
+        let e = Engine::simulated(m, None).unwrap();
+        let x: Vec<f32> = (0..42).map(|i| (i as f32).sin()).collect();
+        let (a, _) = e.execute("hermit_a", 1, &x).unwrap();
+        let (b, _) = e.execute("hermit_b", 1, &x).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sim_padding_waste_matches_ladder() {
+        let e = Engine::sim_reference();
+        assert_eq!(e.padding_waste("hermit", 1).unwrap(), 0.0);
+        assert_eq!(e.padding_waste("hermit", 4).unwrap(), 0.0);
+        let w3 = e.padding_waste("hermit", 3).unwrap();
+        assert!((w3 - 0.25).abs() < 1e-12, "3 of 4 -> 25% waste, got {w3}");
+    }
+
+    #[test]
+    fn pjrt_path_reports_stub_clearly() {
+        // Engine::load without artifacts fails on the manifest; with a
+        // manifest it would fail on the stubbed PJRT client.  Either
+        // way the error is actionable.
+        let err = Engine::load("/nonexistent-artifacts", None).unwrap_err();
+        let rendered = format!("{err:#}");
+        assert!(
+            rendered.contains("manifest.json") || rendered.contains("artifacts"),
+            "{rendered}"
+        );
     }
 }

@@ -137,6 +137,55 @@ impl Manifest {
     pub fn weights_path(&self, model: &str) -> Result<PathBuf> {
         Ok(self.dir.join(&self.model(model)?.weights_file))
     }
+
+    /// An in-memory manifest with the paper's three models (Hermit
+    /// 42→30, MIR and MIR-no-layernorm 48×48→48×48) on the default
+    /// compiled-batch ladder — the contract the simulated engine
+    /// executes when no AOT artifacts are present.
+    pub fn synthetic() -> Manifest {
+        Self::synthetic_named(&[
+            ("hermit", 42, 30),
+            ("mir", 48 * 48, 48 * 48),
+            ("mir_noln", 48 * 48, 48 * 48),
+        ])
+    }
+
+    /// An in-memory manifest for arbitrary `(name, input_elems,
+    /// output_elems)` models (tests use this to shape replica sets).
+    pub fn synthetic_named(models: &[(&str, usize, usize)]) -> Manifest {
+        let mut map = BTreeMap::new();
+        for &(name, in_el, out_el) in models {
+            let batches: Vec<BatchArtifact> = [1usize, 4, 16, 64, 256, 1024]
+                .iter()
+                .map(|&batch| BatchArtifact {
+                    batch,
+                    hlo_file: format!("{name}_b{batch}.hlo.txt"),
+                })
+                .collect();
+            let param_count = crate::devices::profiles::by_name(name)
+                .map(|p| p.param_count)
+                .unwrap_or(0);
+            map.insert(
+                name.to_string(),
+                ModelSpec {
+                    name: name.to_string(),
+                    input_shape: vec![in_el],
+                    output_shape: vec![out_el],
+                    params: Vec::new(),
+                    weights_file: format!("{name}.weights.npz"),
+                    weights_sha256: String::new(),
+                    batches,
+                    param_count,
+                },
+            );
+        }
+        Manifest {
+            dtype: "f32".to_string(),
+            seed: 0,
+            models: map,
+            dir: PathBuf::from("<synthetic>"),
+        }
+    }
 }
 
 fn field_str<'v>(v: &'v Value, key: &str) -> Result<&'v str> {

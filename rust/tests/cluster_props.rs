@@ -1,0 +1,209 @@
+//! Property tests for the cluster layer, the RDU config landscape and
+//! the batch-ladder padding rules (in-tree proptest substitute:
+//! seeded random generation + many iterations + seed in the failure
+//! message).
+//!
+//! Invariants covered:
+//! * cluster routing — under ANY policy, total routed samples equals
+//!   total submitted samples (nothing lost, nothing duplicated),
+//!   queues never go negative, and advancing past the makespan
+//!   drains every backend;
+//! * RDU — every `config_valid` (mini, micro) combination yields a
+//!   positive, finite latency, monotone in the mini-batch at fixed
+//!   micro-batch;
+//! * padding — `batch_for` always picks the *smallest* ladder rung
+//!   that fits (padding never exceeds the next rung), and the padded
+//!   execution path returns exactly the requested rows.
+
+use cogsim_disagg::cluster::{Backend, Cluster, GpuBackend, Policy, RduBackend};
+use cogsim_disagg::devices::{profiles, Api, Gpu};
+use cogsim_disagg::rdu::{RduApi, RduModel};
+use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::rng::Rng;
+
+const CASES: u64 = 100;
+
+fn random_fleet(rng: &mut Rng) -> Vec<Box<dyn Backend>> {
+    let n = rng.range(1, 5);
+    (0..n)
+        .map(|i| -> Box<dyn Backend> {
+            if rng.below(2) == 0 {
+                let gpu = match rng.below(3) {
+                    0 => Gpu::a100(),
+                    1 => Gpu::v100(),
+                    _ => Gpu::mi100(),
+                };
+                let api = *rng.choice(&Api::ALL);
+                Box::new(GpuBackend::node_local(format!("gpu{i}"), gpu, api))
+            } else {
+                let tiles = rng.range(1, 4);
+                let api = *rng.choice(&RduApi::ALL);
+                Box::new(RduBackend::disaggregated(format!("rdu{i}"), tiles, api))
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cluster_conserves_samples_under_any_policy() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let policy = *rng.choice(&Policy::ALL);
+        let mut cluster = Cluster::new(random_fleet(&mut rng), policy);
+        let n_backends = cluster.len();
+
+        let profiles_pool = [profiles::hermit(), profiles::mir_noln()];
+        let mut submitted_samples = 0u64;
+        let n_requests = rng.range(1, 60);
+        for i in 0..n_requests {
+            let profile = rng.choice(&profiles_pool).clone();
+            let samples = rng.range(1, 300);
+            let instance = format!("inst{}", rng.below(6));
+            // occasionally advance virtual time mid-stream
+            if rng.below(5) == 0 {
+                let t = cluster.clock_s() + rng.uniform(0.0, 0.01);
+                cluster.advance_to(t);
+            }
+            let routed = cluster.submit(&instance, &profile, samples);
+            assert!(routed.backend < n_backends, "seed {seed} req {i}");
+            assert!(routed.latency_s > 0.0 && routed.latency_s.is_finite(), "seed {seed}");
+            assert!(routed.wait_s >= 0.0, "seed {seed}");
+            assert!(routed.latency_s >= routed.wait_s + routed.link_overhead_s, "seed {seed}");
+            submitted_samples += samples as u64;
+        }
+
+        assert_eq!(cluster.routed_samples(), submitted_samples, "seed {seed}: conservation");
+        assert_eq!(cluster.routed_requests(), n_requests as u64, "seed {seed}");
+        let report = cluster.report();
+        let by_backend: u64 = report.iter().map(|r| r.samples).sum();
+        assert_eq!(by_backend, submitted_samples, "seed {seed}: per-backend split");
+        for r in &report {
+            assert!(r.queue_s >= 0.0, "seed {seed}: negative queue on {}", r.name);
+        }
+
+        // draining past the makespan empties every queue
+        let makespan = cluster.makespan_s();
+        cluster.advance_to(makespan + 1.0);
+        for r in cluster.report() {
+            assert_eq!(r.queue_s, 0.0, "seed {seed}: {} not drained", r.name);
+        }
+    }
+}
+
+#[test]
+fn prop_affinity_is_sticky_under_random_traffic() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xAFF1);
+        let mut cluster = Cluster::new(random_fleet(&mut rng), Policy::ModelAffinity);
+        let p = profiles::hermit();
+        let mut first_choice: std::collections::BTreeMap<String, usize> =
+            std::collections::BTreeMap::new();
+        for _ in 0..rng.range(5, 40) {
+            let instance = format!("hermit/mat{}", rng.below(5));
+            let routed = cluster.submit(&instance, &p, rng.range(1, 64));
+            match first_choice.get(&instance) {
+                Some(&idx) => assert_eq!(routed.backend, idx, "seed {seed}: {instance}"),
+                None => {
+                    first_choice.insert(instance, routed.backend);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- RDU
+
+#[test]
+fn prop_rdu_valid_configs_never_negative_or_nonmonotone() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x0D0D);
+        let tiles = rng.range(1, 4);
+        let api = *rng.choice(&RduApi::ALL);
+        let profile = if rng.below(2) == 0 { profiles::hermit() } else { profiles::mir_noln() };
+        let m = RduModel::new(profile, tiles, api);
+
+        let micro = 1usize << rng.below(11);
+        let mut prev = 0.0f64;
+        for shift in 0..8 {
+            let mini = micro << shift;
+            assert!(m.config_valid(mini, micro), "seed {seed}");
+            let l = m.latency_s(mini, micro);
+            assert!(l > 0.0 && l.is_finite(), "seed {seed}: mini {mini} micro {micro} -> {l}");
+            assert!(l > prev, "seed {seed}: non-monotone at mini {mini} micro {micro}");
+            prev = l;
+        }
+        // invalid combinations are rejected, not silently computed
+        assert!(!m.config_valid(micro, micro * 2), "seed {seed}: micro > mini");
+        assert!(!m.config_valid(4, 0), "seed {seed}: zero micro");
+    }
+}
+
+// ------------------------------------------------------------ padding
+
+#[test]
+fn prop_batch_for_picks_smallest_fitting_rung() {
+    let engine = Engine::sim_reference();
+    let spec = engine.spec("hermit").unwrap().clone();
+    let ladder = spec.batch_ladder();
+    let max = *ladder.last().unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x9AD);
+        let n = rng.range(1, 3 * max);
+        let chunk = n.min(max);
+        let chosen = spec.batch_for(chunk);
+        // reference: linear scan for the smallest rung >= chunk
+        let reference = ladder
+            .iter()
+            .copied()
+            .find(|&b| b >= chunk)
+            .unwrap_or(max);
+        assert_eq!(chosen, reference, "seed {seed}: n {n}");
+        // padding never exceeds the next ladder rung
+        assert!(chosen >= chunk || chunk > max, "seed {seed}");
+        for &rung in &ladder {
+            if rung >= chunk {
+                assert!(chosen <= rung, "seed {seed}: overshot the next rung");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_padding_waste_is_bounded_by_ladder_geometry() {
+    let engine = Engine::sim_reference();
+    // ladder 1,4,16,64,256,1024: worst fit is rung/4 + 1 -> <75% waste
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x4AD);
+        let n = rng.range(1, 5000);
+        let waste = engine.padding_waste("hermit", n).unwrap();
+        assert!((0.0..0.75).contains(&waste), "seed {seed}: n {n} waste {waste}");
+    }
+    // exact fits are free
+    for n in [1usize, 4, 16, 64, 256, 1024, 2048] {
+        assert_eq!(engine.padding_waste("hermit", n).unwrap(), 0.0, "n {n}");
+    }
+}
+
+#[test]
+fn prop_execute_padded_returns_exactly_n_rows() {
+    let engine = Engine::sim_reference();
+    let spec = engine.spec("hermit").unwrap().clone();
+    let (in_el, out_el) = (spec.input_elems(), spec.output_elems());
+    for seed in 0..40 {
+        let mut rng = Rng::new(seed ^ 0xE0E);
+        let n = rng.range(1, 50);
+        let x = rng.normal_vec(n * in_el);
+        let (out, _) = engine.execute_padded("hermit", &x).unwrap();
+        assert_eq!(out.len(), n * out_el, "seed {seed}");
+        // each row matches its solo execution (padding never leaks)
+        let probe = rng.below(n);
+        let (row, _) = engine
+            .execute("hermit", 1, &x[probe * in_el..(probe + 1) * in_el])
+            .unwrap();
+        assert_eq!(
+            &out[probe * out_el..(probe + 1) * out_el],
+            &row[..],
+            "seed {seed} row {probe}"
+        );
+    }
+}

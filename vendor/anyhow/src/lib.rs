@@ -1,0 +1,187 @@
+//! Minimal in-tree implementation of the `anyhow` API surface this
+//! workspace uses.  The offline build image cannot fetch crates, so
+//! the error-context ergonomics (`anyhow!`, `bail!`, `Context`,
+//! `Result<T>`, `{err:#}` chain display) are provided here.
+//!
+//! Differences from real anyhow: the error holds a rendered message
+//! chain (`Vec<String>`) instead of a boxed source chain, so
+//! downcasting is not supported — nothing in this workspace downcasts.
+
+use std::fmt;
+
+/// A rendered error: the outermost message first, then each wrapped
+/// cause in order.  `{e}` prints only the outermost message; `{e:#}`
+/// prints the full chain separated by `: ` (anyhow's convention).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, message: impl fmt::Display) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// All messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's Debug: message plus a cause list.
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like anyhow: Error deliberately does NOT implement
+// std::error::Error, which frees up the blanket From below.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option` (subset of anyhow's
+/// `Context` trait: any `Display` error type is accepted).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        // `{:#}` keeps a wrapped anyhow::Error's own chain intact.
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        return Err($crate::anyhow!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        return Err($crate::anyhow!($err))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let name = "hermit";
+        let e = anyhow!("model {name:?} missing");
+        assert_eq!(format!("{e}"), "model \"hermit\" missing");
+        let s = String::from("plain message");
+        let e2 = anyhow!(s);
+        assert_eq!(format!("{e2}"), "plain message");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {}", flag);
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert!(format!("{:#}", f(true).unwrap_err()).contains("true"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = "abc".parse::<u32>()?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+}

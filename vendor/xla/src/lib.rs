@@ -1,0 +1,181 @@
+//! API-compatible **stub** of the `xla-rs` PJRT bridge.
+//!
+//! The offline build image has no PJRT plugin and no network access,
+//! so this crate provides exactly the type/method surface
+//! `cogsim_disagg::runtime::engine` compiles against, with every
+//! device-touching operation returning a descriptive [`Error`] at
+//! runtime.  Swapping in the real `xla` crate (same names, same
+//! signatures) re-enables execution of the AOT artifacts on hardware;
+//! nothing in the workspace needs to change.
+//!
+//! The serving stack does not depend on this path working: the
+//! runtime's simulated engine (`Engine::sim_reference`) provides a
+//! deterministic pure-Rust executor for tests, examples and the
+//! cluster campaign harness.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the reason the offline path cannot execute.
+#[derive(Debug, Clone)]
+pub struct Error {
+    message: String,
+}
+
+impl Error {
+    fn unsupported(what: &str) -> Error {
+        Error {
+            message: format!(
+                "{what} requires the real xla-rs PJRT bridge, which is unavailable \
+                 in this offline build (vendor/xla is an API stub); use the \
+                 simulated engine instead"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Types loadable from raw npz/npy bytes (trait shape mirrors xla-rs).
+pub trait FromRawBytes: Sized {
+    fn read_npz_by_name(
+        path: impl AsRef<Path>,
+        _context: &(),
+        names: &[&str],
+    ) -> Result<Vec<Self>>;
+}
+
+/// A host-side literal tensor.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unsupported("Literal::to_vec"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unsupported("Literal::to_tuple1"))
+    }
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz_by_name(
+        path: impl AsRef<Path>,
+        _context: &(),
+        _names: &[&str],
+    ) -> Result<Vec<Literal>> {
+        Err(Error::unsupported(&format!(
+            "reading {:?} as npz literals",
+            path.as_ref()
+        )))
+    }
+}
+
+/// Parsed HLO module text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::unsupported(&format!(
+            "parsing HLO text {:?}",
+            path.as_ref()
+        )))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unsupported("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unsupported("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A PJRT client (CPU plugin in the paper reproduction).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unsupported("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unsupported("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unsupported("PjRtClient::buffer_from_host_literal"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unsupported("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_paths_error_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("simulated engine"), "{err}");
+        let err =
+            Literal::read_npz_by_name("/tmp/nope.npz", &(), &["x"]).unwrap_err();
+        assert!(err.to_string().contains("offline build"), "{err}");
+    }
+}
