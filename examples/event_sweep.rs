@@ -1,0 +1,69 @@
+//! Event sweep: the discrete-event simulator end to end.
+//!
+//! Replays bursty 64-rank CogSim arrivals against the disaggregated
+//! RDU pool with and without a router-level dynamic-batching window —
+//! the queueing experiment the analytic cluster cannot run — then
+//! sweeps the full event campaign (topology × policy × rank count ×
+//! arrival process × window) and writes its deterministic JSON.
+//!
+//! ```bash
+//! cargo run --release --example event_sweep
+//! ```
+
+use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
+use cogsim_disagg::eventsim::{ArrivalProcess, Batching, EventSim, EventSimConfig};
+use cogsim_disagg::harness::campaign::{run_event_campaign, EventCampaignConfig};
+use cogsim_disagg::rdu::RduApi;
+use cogsim_disagg::util::json;
+
+fn pool() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn main() {
+    // ---- part 1: one bursty 64-rank scenario, batching on vs off ----
+    println!("bursty 64-rank arrivals on the shared RDU pool:\n");
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "batching", "requests", "batches", "p50 (us)", "p99 (us)", "p99.9 (us)"
+    );
+    for (label, batching) in [
+        ("off", Batching::Off),
+        ("window 200us", Batching::Window { window_s: 200e-6, max_batch: 256 }),
+    ] {
+        let cfg = EventSimConfig {
+            ranks: 64,
+            arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+            batching,
+            horizon_s: 0.1,
+            ..Default::default()
+        };
+        let mut sim = EventSim::new(pool(), Policy::LatencyAware, cfg);
+        sim.run_to_completion();
+        let s = sim.summary();
+        println!(
+            "{:<22} {:>10} {:>10} {:>10.1} {:>10.1} {:>10.1}",
+            label,
+            s.requests,
+            s.batches,
+            s.latency.p50_s * 1e6,
+            s.latency.p99_s * 1e6,
+            s.latency.p999_s * 1e6
+        );
+    }
+
+    // ---- part 2: the full event campaign ----
+    let cfg = EventCampaignConfig { horizon_s: 0.1, ..Default::default() };
+    let result = run_event_campaign(&cfg);
+    println!();
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+    let path = "results/event_sweep.json";
+    std::fs::create_dir_all("results").expect("mkdir results");
+    std::fs::write(path, json::write(&result.to_json())).expect("write json");
+    println!("wrote {path}");
+}

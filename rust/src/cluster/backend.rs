@@ -229,6 +229,28 @@ mod tests {
     }
 
     #[test]
+    fn zero_sample_requests_never_nan_the_transfer_math() {
+        // Regression for the Link::local() INFINITY bandwidth audit:
+        // a zero-sample request has a zero-byte payload; every
+        // latency/occupancy figure must stay finite (non-NaN) on both
+        // local and remote links.
+        let p = profiles::hermit();
+        let local = GpuBackend::node_local("gpu0", Gpu::a100(), Api::TrtCudaGraphs);
+        assert_eq!(local.link_overhead_s(&p, 0), 0.0);
+        assert!(local.latency_s(&p, 0).is_finite());
+        assert!(local.occupancy_s(&p, 0).is_finite());
+        let remote = GpuBackend::remote(
+            "gpu-far",
+            Gpu::a100(),
+            Api::TrtCudaGraphs,
+            crate::netsim::Link::infiniband_cx6(),
+        );
+        let over = remote.link_overhead_s(&p, 0);
+        assert!(over.is_finite() && over > 0.0, "fixed per-message cost remains");
+        assert!(remote.latency_s(&p, 0).is_finite());
+    }
+
+    #[test]
     fn throughput_consistent_with_latency() {
         let b = RduBackend::disaggregated("rdu0", 4, RduApi::CppOptimized);
         let p = profiles::hermit();

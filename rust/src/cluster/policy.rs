@@ -55,8 +55,11 @@ impl Policy {
 
 /// Pick a backend index (from `candidates`, indices into `backends`)
 /// for one request.  Deterministic: ties break on the lowest index.
+/// Crate-visible so the event simulator ([`crate::eventsim`]) routes
+/// its batches through *exactly* the same selection logic as the
+/// analytic [`super::Cluster`] — the differential test depends on it.
 #[allow(clippy::too_many_arguments)]
-pub(super) fn select(
+pub(crate) fn select(
     policy: Policy,
     backends: &[Box<dyn Backend>],
     rr_cursor: &mut usize,

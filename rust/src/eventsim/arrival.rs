@@ -1,0 +1,78 @@
+//! Arrival processes for the multi-rank CogSim request stream.
+//!
+//! The paper's in-the-loop workload is *bursty by construction*:
+//! every MPI rank reaches the inference point of its timestep at
+//! roughly the same moment and emits a handful of tiny per-material
+//! requests (§IV-A).  The event simulator models that directly, plus
+//! the two classical open-/closed-loop processes every queueing study
+//! needs for comparison:
+//!
+//! * [`ArrivalProcess::Synchronized`] — timestep-synchronised bursts:
+//!   at `t = k · period` every rank emits its per-material requests
+//!   (optionally spread over a small jitter window).  This is the
+//!   CogSim critical path and the regime where dynamic batching pays.
+//! * [`ArrivalProcess::Poisson`] — open-loop Poisson arrivals per
+//!   rank (exponential inter-arrival times).  Load keeps coming
+//!   whether or not the fleet keeps up — exposes saturation.
+//! * [`ArrivalProcess::ClosedLoop`] — each rank keeps exactly one
+//!   request in flight and thinks for `think_s` between completion
+//!   and the next submission — the contention-free limit the
+//!   differential test (`eventsim_vs_analytic`) pins against the
+//!   analytic [`crate::cluster::Cluster`].
+
+/// How requests enter the system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Timestep-synchronised bursts across all ranks.
+    Synchronized {
+        /// Virtual seconds between simulation timesteps.
+        period_s: f64,
+        /// Requests of one burst spread uniformly over `[t, t+jitter]`
+        /// (0 = perfectly synchronised, the worst case).
+        jitter_s: f64,
+    },
+    /// Open-loop Poisson arrivals, per rank.
+    Poisson {
+        /// Mean request rate per rank, requests/second.
+        rate_per_rank: f64,
+    },
+    /// Closed loop: one outstanding request per rank plus think time.
+    ClosedLoop {
+        /// Seconds between a completion and the rank's next request.
+        think_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Stable snake_case key for JSON artifacts.
+    pub fn key(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Synchronized { .. } => "synchronized",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::ClosedLoop { .. } => "closed_loop",
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Synchronized { .. } => "timestep-synchronized bursts",
+            ArrivalProcess::Poisson { .. } => "open-loop Poisson",
+            ArrivalProcess::ClosedLoop { .. } => "closed-loop with think time",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_stable() {
+        assert_eq!(
+            ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 }.key(),
+            "synchronized"
+        );
+        assert_eq!(ArrivalProcess::Poisson { rate_per_rank: 100.0 }.key(), "poisson");
+        assert_eq!(ArrivalProcess::ClosedLoop { think_s: 1e-3 }.key(), "closed_loop");
+    }
+}

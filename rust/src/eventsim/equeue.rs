@@ -1,0 +1,153 @@
+//! The deterministic event queue: a binary heap of `(time, seq)`
+//! keys.  Virtual time is `f64` seconds ordered by `total_cmp`; the
+//! insertion sequence number breaks ties, so two runs that push the
+//! same events in the same order always pop them in the same order —
+//! the foundation of the engine's byte-stable summaries.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap key: event time, then insertion order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EventKey {
+    pub time_s: f64,
+    pub seq: u64,
+}
+
+impl Eq for EventKey {}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time_s
+            .total_cmp(&other.time_s)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One queued event; ordered by key only (the payload need not be
+/// comparable).
+struct Entry<E> {
+    key: EventKey,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest key pops
+        // first.
+        other.key.cmp(&self.key)
+    }
+}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A min-heap of timestamped events with deterministic tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` at `time_s` (must be finite and >= 0).
+    pub fn push(&mut self, time_s: f64, event: E) {
+        assert!(time_s.is_finite() && time_s >= 0.0, "bad event time {time_s}");
+        let key = EventKey { time_s, seq: self.seq };
+        self.seq += 1;
+        self.heap.push(Entry { key, event });
+    }
+
+    /// Pop the earliest event (ties in insertion order).
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| (e.key.time_s, e.event))
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.key.time_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..16 {
+            q.push(0.5, i);
+        }
+        let popped: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(popped, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_sorted() {
+        let mut q = EventQueue::new();
+        q.push(5.0, 5);
+        q.push(1.0, 1);
+        assert_eq!(q.pop(), Some((1.0, 1)));
+        q.push(3.0, 3);
+        q.push(2.0, 2);
+        assert_eq!(q.pop(), Some((2.0, 2)));
+        assert_eq!(q.pop(), Some((3.0, 3)));
+        assert_eq!(q.pop(), Some((5.0, 5)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event time")]
+    fn rejects_nan_times() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+}

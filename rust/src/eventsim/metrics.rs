@@ -1,0 +1,119 @@
+//! Full latency-distribution metrics for event-sim runs: the analytic
+//! campaign reports means and a few percentiles; queueing phenomena
+//! live in the tail, so the event simulator reports
+//! p50/p90/p99/p99.9, a log-spaced histogram, and per-rank slowdown
+//! (the paper's in-the-loop SLO is per *rank*: one slow rank stalls
+//! the whole MPI timestep).
+
+use crate::util::stats;
+
+/// Log-spaced (1-2-5 series) histogram bucket upper bounds, µs.
+pub const HIST_EDGES_US: [f64; 19] = [
+    1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3, 1e4, 2e4, 5e4,
+    1e5, 2e5, 5e5, 1e6,
+];
+
+/// A latency distribution: summary percentiles + histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyDist {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    pub max_s: f64,
+    /// `(upper_bound_us, count)` per bucket of [`HIST_EDGES_US`].
+    pub histogram: Vec<(f64, u64)>,
+    /// Latencies above the last bucket edge.
+    pub overflow: u64,
+}
+
+impl LatencyDist {
+    pub fn from_latencies(xs: &[f64]) -> LatencyDist {
+        let mut histogram: Vec<(f64, u64)> =
+            HIST_EDGES_US.iter().map(|&e| (e, 0u64)).collect();
+        let mut overflow = 0u64;
+        for &x in xs {
+            let us = x * 1e6;
+            match histogram.iter_mut().find(|(edge, _)| us <= *edge) {
+                Some((_, count)) => *count += 1,
+                None => overflow += 1,
+            }
+        }
+        LatencyDist {
+            count: xs.len() as u64,
+            mean_s: stats::mean(xs),
+            p50_s: stats::percentile(xs, 50.0),
+            p90_s: stats::percentile(xs, 90.0),
+            p99_s: stats::percentile(xs, 99.0),
+            p999_s: stats::percentile(xs, 99.9),
+            max_s: xs.iter().copied().fold(0.0, f64::max),
+            histogram,
+            overflow,
+        }
+    }
+}
+
+/// Everything one event-sim run reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventSummary {
+    /// Requests completed.
+    pub requests: u64,
+    /// Samples across those requests.
+    pub samples: u64,
+    /// Batches dispatched to backends (= requests when batching off).
+    pub batches: u64,
+    /// Mean samples per dispatched batch.
+    pub mean_batch_samples: f64,
+    /// End-to-end (arrival → completion) latency distribution.
+    pub latency: LatencyDist,
+    /// Mean link round-trip share of request latency, seconds.
+    pub mean_link_overhead_s: f64,
+    /// Mean latency per originating rank (index = rank).
+    pub per_rank_mean_s: Vec<f64>,
+    /// Worst rank mean over best rank mean (1.0 = perfectly fair).
+    pub slowdown_max: f64,
+    /// Virtual time of the last completion.
+    pub makespan_s: f64,
+    /// Samples over the makespan.
+    pub samples_per_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_percentiles_and_histogram() {
+        // 1..=1000 µs uniformly
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 1e-6).collect();
+        let d = LatencyDist::from_latencies(&xs);
+        assert_eq!(d.count, 1000);
+        assert!((d.p50_s * 1e6 - 500.5).abs() < 1e-6);
+        assert!((d.p999_s * 1e6 - 999.001).abs() < 1e-3);
+        assert!((d.max_s * 1e6 - 1000.0).abs() < 1e-9);
+        // buckets partition the population
+        let total: u64 = d.histogram.iter().map(|(_, c)| c).sum::<u64>() + d.overflow;
+        assert_eq!(total, 1000);
+        // first bucket (<= 1us) holds exactly the 1us sample
+        assert_eq!(d.histogram[0], (1.0, 1));
+        assert_eq!(d.overflow, 0);
+    }
+
+    #[test]
+    fn overflow_counted() {
+        let d = LatencyDist::from_latencies(&[0.5e-6, 2.0, 5.0]);
+        assert_eq!(d.overflow, 2); // 2s and 5s exceed the 1s top edge
+        assert_eq!(d.histogram[0].1, 1);
+    }
+
+    #[test]
+    fn empty_distribution_is_zeroed() {
+        let d = LatencyDist::from_latencies(&[]);
+        assert_eq!(d.count, 0);
+        assert_eq!(d.mean_s, 0.0);
+        assert_eq!(d.max_s, 0.0);
+        assert_eq!(d.overflow, 0);
+    }
+}

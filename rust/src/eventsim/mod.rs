@@ -1,0 +1,782 @@
+//! Deterministic discrete-event simulation of a multi-rank CogSim
+//! inference cluster — the queueing-level companion to the closed-form
+//! virtual-time [`crate::cluster::Cluster`].
+//!
+//! The analytic cluster answers "what does one request cost given the
+//! queue it finds"; it cannot express *when* requests find those
+//! queues.  The paper's hard regime is exactly a timing phenomenon:
+//! every MPI rank hits the inference point of its timestep at once
+//! and emits a burst of tiny per-material requests whose latency sits
+//! on the simulation's critical path (§IV-A).  This module replays
+//! that workload event by event:
+//!
+//! * **events** — a binary-heap [`equeue::EventQueue`] ordered by
+//!   `(virtual time, insertion seq)`: arrivals, batching-window
+//!   deadlines, completions, and the generator events that produce
+//!   the arrival stream;
+//! * **arrivals** — three [`arrival::ArrivalProcess`]es: synchronised
+//!   per-timestep bursts, open-loop Poisson, closed-loop think time;
+//! * **batching** — an optional router-level stage that coalesces
+//!   same-instance requests within a window/max-batch, *reusing* the
+//!   serving stack's [`crate::coordinator::batcher::DynamicBatcher`]
+//!   (virtual time is mapped onto its `Instant` API via a fixed
+//!   epoch);
+//! * **service** — each batch is routed through the *same*
+//!   [`crate::cluster::Policy`] selection the analytic cluster uses,
+//!   waits behind the chosen backend's FIFO queue, pays the
+//!   [`crate::netsim::Link`] round trip, and occupies the backend for
+//!   the paper's double-buffered period;
+//! * **metrics** — full latency distributions
+//!   (p50/p90/p99/p99.9, histogram, per-rank slowdown) instead of
+//!   means only ([`metrics::LatencyDist`]).
+//!
+//! Everything is seeded from [`crate::util::rng::Rng`] and ordered
+//! deterministically, so identical configs produce byte-identical
+//! summaries — `rust/tests/eventsim_props.rs` pins that, and
+//! `rust/tests/eventsim_vs_analytic.rs` proves the engine degrades to
+//! the analytic model in the contention-free limit.
+
+pub mod arrival;
+pub mod equeue;
+pub mod metrics;
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{policy, Backend, Policy};
+use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, PendingRequest, Priority};
+use crate::devices::{profiles, ModelProfile};
+use crate::util::rng::Rng;
+use crate::workload::HydraWorkload;
+
+pub use arrival::ArrivalProcess;
+pub use equeue::EventQueue;
+pub use metrics::{EventSummary, LatencyDist};
+
+/// Safety margin added when scheduling a batching-deadline event:
+/// the batcher's `Instant` clock has nanosecond resolution, so the
+/// wake-up lands strictly *after* the deadline it serves (a wake-up
+/// that rounds 1 ns early would find nothing ready and reschedule
+/// itself forever).
+const DEADLINE_EPS_S: f64 = 2e-9;
+
+/// Router-level dynamic batching configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Batching {
+    /// Every request dispatches alone, immediately (the analytic
+    /// cluster's behaviour).
+    Off,
+    /// Coalesce same-instance requests arriving within `window_s`,
+    /// capped at `max_batch` samples per dispatched batch.
+    Window { window_s: f64, max_batch: usize },
+}
+
+/// One event-sim run's knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EventSimConfig {
+    /// MPI ranks issuing requests.
+    pub ranks: usize,
+    /// Per-material Hermit instances the ranks spread requests over.
+    pub materials: usize,
+    /// Samples per request, uniform inclusive (paper: 2–3 per zone).
+    pub samples_per_request: (usize, usize),
+    /// Synchronized mode: requests per rank per timestep burst.
+    pub requests_per_burst: usize,
+    /// Synchronized mode: every `mir_every`-th burst each rank also
+    /// emits one MIR mixed-zone request (0 = never).
+    pub mir_every: usize,
+    /// Samples in each MIR request.
+    pub mir_samples: usize,
+    pub arrival: ArrivalProcess,
+    pub batching: Batching,
+    /// Arrival generators stop at the horizon; in-flight work drains.
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+impl Default for EventSimConfig {
+    fn default() -> Self {
+        EventSimConfig {
+            ranks: 4,
+            materials: 8,
+            samples_per_request: (2, 3),
+            requests_per_burst: 6,
+            mir_every: 0,
+            mir_samples: 512,
+            arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+            batching: Batching::Off,
+            horizon_s: 0.2,
+            seed: 42,
+        }
+    }
+}
+
+/// The full story of one completed request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub rank: usize,
+    pub model: String,
+    pub samples: usize,
+    /// When the rank emitted the request.
+    pub arrival_s: f64,
+    /// When the router dispatched the (possibly coalesced) batch.
+    pub dispatch_s: f64,
+    /// When the result returned to the rank.
+    pub complete_s: f64,
+    /// Backend index the batch was routed to.
+    pub backend: usize,
+    /// Total samples in the dispatched batch this request rode in.
+    pub batch_samples: usize,
+    /// Link round-trip share of the service time, seconds.
+    pub link_overhead_s: f64,
+}
+
+impl RequestRecord {
+    /// End-to-end latency as the rank observes it.
+    pub fn latency_s(&self) -> f64 {
+        self.complete_s - self.arrival_s
+    }
+
+    /// Time spent coalescing in the batching window.
+    pub fn batch_wait_s(&self) -> f64 {
+        self.dispatch_s - self.arrival_s
+    }
+}
+
+#[derive(Debug, Clone)]
+struct PendingMeta {
+    rank: usize,
+    model: String,
+    samples: usize,
+    arrival_s: f64,
+}
+
+#[derive(Debug, Clone)]
+enum Event {
+    /// Synchronized-mode generator: emit burst `step`, schedule the next.
+    Burst { step: usize },
+    /// One request entering the router.
+    Arrival { rank: usize, model: String, samples: usize },
+    /// Poisson generator tick for one rank.
+    PoissonArrival { rank: usize },
+    /// Closed-loop rank ready to submit again.
+    ClosedArrival { rank: usize },
+    /// Re-check the batcher's deadline-ready queues.
+    BatchDeadline,
+    /// A dispatched batch finished; ids index the request metadata.
+    Completion { ids: Vec<usize> },
+}
+
+/// The engine: backends + policy + event queue + optional batcher.
+pub struct EventSim {
+    cfg: EventSimConfig,
+    backends: Vec<Box<dyn Backend>>,
+    policy: Policy,
+    hermit_tier: Vec<usize>,
+    mir_tier: Vec<usize>,
+    hermit_profile: ModelProfile,
+    mir_profile: ModelProfile,
+    rr_cursor: usize,
+    affinity: BTreeMap<String, usize>,
+    clock_s: f64,
+    events: EventQueue<Event>,
+    batcher: Option<DynamicBatcher>,
+    /// Virtual-time anchor for the batcher's `Instant` API.
+    epoch: Instant,
+    rngs: Vec<Rng>,
+    pending: Vec<PendingMeta>,
+    records: Vec<RequestRecord>,
+    submitted: u64,
+    dispatched: u64,
+    completed: u64,
+    batcher_pending: u64,
+    batches: u64,
+}
+
+impl EventSim {
+    /// All backends serve all model classes.
+    pub fn new(backends: Vec<Box<dyn Backend>>, policy: Policy, cfg: EventSimConfig) -> EventSim {
+        let all: Vec<usize> = (0..backends.len()).collect();
+        Self::with_tiers(backends, policy, cfg, all.clone(), all)
+    }
+
+    /// Tiered fleet: `hermit_tier`/`mir_tier` are candidate backend
+    /// indices per model class (the campaign's hybrid topology pins
+    /// MIR to local GPUs and Hermit to the remote pool).
+    pub fn with_tiers(
+        backends: Vec<Box<dyn Backend>>,
+        policy: Policy,
+        cfg: EventSimConfig,
+        hermit_tier: Vec<usize>,
+        mir_tier: Vec<usize>,
+    ) -> EventSim {
+        assert!(!backends.is_empty(), "event sim needs at least one backend");
+        assert!(cfg.ranks >= 1 && cfg.materials >= 1);
+        assert!(cfg.samples_per_request.0 >= 1);
+        assert!(cfg.samples_per_request.0 <= cfg.samples_per_request.1);
+        assert!(cfg.horizon_s > 0.0 && cfg.horizon_s.is_finite());
+        assert!(!hermit_tier.is_empty(), "hermit tier must not be empty");
+        assert!(
+            cfg.mir_every == 0 || !mir_tier.is_empty(),
+            "mir_every > 0 needs a non-empty mir tier"
+        );
+        assert!(hermit_tier.iter().chain(&mir_tier).all(|&i| i < backends.len()));
+
+        let batcher = match cfg.batching {
+            Batching::Off => None,
+            Batching::Window { window_s, max_batch } => {
+                assert!(window_s >= 0.0 && window_s.is_finite());
+                assert!(max_batch >= 1);
+                let window = Duration::from_secs_f64(window_s);
+                Some(DynamicBatcher::new(BatcherConfig {
+                    // size trigger = the cap: a window's queue fires
+                    // early only once it can fill a whole batch
+                    target_batch: max_batch,
+                    max_wait: window,
+                    deferred_max_wait: window,
+                    max_batch,
+                }))
+            }
+        };
+        let rngs = (0..cfg.ranks)
+            .map(|r| Rng::new(cfg.seed ^ (r as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)))
+            .collect();
+
+        let mut sim = EventSim {
+            cfg,
+            backends,
+            policy,
+            hermit_tier,
+            mir_tier,
+            hermit_profile: profiles::hermit(),
+            mir_profile: profiles::mir_noln(),
+            rr_cursor: 0,
+            affinity: BTreeMap::new(),
+            clock_s: 0.0,
+            events: EventQueue::new(),
+            batcher,
+            epoch: Instant::now(),
+            rngs,
+            pending: Vec::new(),
+            records: Vec::new(),
+            submitted: 0,
+            dispatched: 0,
+            completed: 0,
+            batcher_pending: 0,
+            batches: 0,
+        };
+        sim.seed_generators();
+        sim
+    }
+
+    fn seed_generators(&mut self) {
+        match self.cfg.arrival {
+            ArrivalProcess::Synchronized { .. } => {
+                self.events.push(0.0, Event::Burst { step: 0 });
+            }
+            ArrivalProcess::Poisson { rate_per_rank } => {
+                assert!(rate_per_rank > 0.0);
+                for rank in 0..self.cfg.ranks {
+                    let t = self.rngs[rank].exponential(rate_per_rank);
+                    if t <= self.cfg.horizon_s {
+                        self.events.push(t, Event::PoissonArrival { rank });
+                    }
+                }
+            }
+            ArrivalProcess::ClosedLoop { think_s } => {
+                assert!(think_s >= 0.0);
+                for rank in 0..self.cfg.ranks {
+                    // small deterministic stagger so ranks do not all
+                    // submit at t=0 in lockstep
+                    let t = self.rngs[rank].uniform(0.0, think_s.max(1e-6));
+                    if t <= self.cfg.horizon_s {
+                        self.events.push(t, Event::ClosedArrival { rank });
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------ run loop
+
+    /// Process one event; false when the queue is empty.
+    fn step(&mut self) -> bool {
+        let Some((t, event)) = self.events.pop() else {
+            return false;
+        };
+        self.advance_clock(t);
+        self.handle(event);
+        true
+    }
+
+    /// Process every event with time <= `t_s` (for mid-run
+    /// conservation checks); later events stay queued.
+    pub fn run_until(&mut self, t_s: f64) {
+        while self.events.peek_time().is_some_and(|t| t <= t_s) {
+            self.step();
+        }
+    }
+
+    /// Drain the event queue completely.  Arrival generators stop at
+    /// the horizon, so this terminates with every request completed.
+    pub fn run_to_completion(&mut self) {
+        while self.step() {}
+    }
+
+    fn advance_clock(&mut self, t_s: f64) {
+        let dt = t_s - self.clock_s;
+        if dt <= 0.0 {
+            return;
+        }
+        for b in &mut self.backends {
+            b.drain_queue_s(dt);
+        }
+        self.clock_s = t_s;
+    }
+
+    fn handle(&mut self, event: Event) {
+        match event {
+            Event::Burst { step } => self.on_burst(step),
+            Event::Arrival { rank, model, samples } => self.on_request(rank, model, samples),
+            Event::PoissonArrival { rank } => self.on_poisson(rank),
+            Event::ClosedArrival { rank } => self.on_closed(rank),
+            Event::BatchDeadline => self.pump_batcher(),
+            Event::Completion { ids } => self.on_completion(ids),
+        }
+    }
+
+    // ---------------------------------------------------- generators
+
+    fn gen_hermit(&mut self, rank: usize) -> (String, usize) {
+        let materials = self.cfg.materials;
+        let (lo, hi) = self.cfg.samples_per_request;
+        let rng = &mut self.rngs[rank];
+        let model = HydraWorkload::material_model(rng.below(materials));
+        let samples = rng.range(lo, hi);
+        (model, samples)
+    }
+
+    fn on_burst(&mut self, step: usize) {
+        let ArrivalProcess::Synchronized { period_s, jitter_s } = self.cfg.arrival else {
+            unreachable!("burst event outside synchronized mode");
+        };
+        let t0 = step as f64 * period_s;
+        for rank in 0..self.cfg.ranks {
+            for _ in 0..self.cfg.requests_per_burst {
+                let (model, samples) = self.gen_hermit(rank);
+                let jitter =
+                    if jitter_s > 0.0 { self.rngs[rank].uniform(0.0, jitter_s) } else { 0.0 };
+                let t = t0 + jitter;
+                if t <= self.cfg.horizon_s {
+                    self.events.push(t, Event::Arrival { rank, model, samples });
+                }
+            }
+            if self.cfg.mir_every > 0 && step % self.cfg.mir_every == 0 {
+                let samples = self.cfg.mir_samples;
+                self.events.push(t0, Event::Arrival { rank, model: "mir".to_string(), samples });
+            }
+        }
+        let next = (step + 1) as f64 * period_s;
+        if next <= self.cfg.horizon_s {
+            self.events.push(next, Event::Burst { step: step + 1 });
+        }
+    }
+
+    fn on_poisson(&mut self, rank: usize) {
+        let ArrivalProcess::Poisson { rate_per_rank } = self.cfg.arrival else {
+            unreachable!("poisson event outside poisson mode");
+        };
+        let (model, samples) = self.gen_hermit(rank);
+        let next = self.clock_s + self.rngs[rank].exponential(rate_per_rank);
+        if next <= self.cfg.horizon_s {
+            self.events.push(next, Event::PoissonArrival { rank });
+        }
+        self.on_request(rank, model, samples);
+    }
+
+    fn on_closed(&mut self, rank: usize) {
+        let (model, samples) = self.gen_hermit(rank);
+        self.on_request(rank, model, samples);
+    }
+
+    // ------------------------------------------------------- routing
+
+    fn inst(&self, t_s: f64) -> Instant {
+        self.epoch + Duration::from_secs_f64(t_s)
+    }
+
+    fn on_request(&mut self, rank: usize, model: String, samples: usize) {
+        self.submitted += 1;
+        let id = self.pending.len();
+        self.pending.push(PendingMeta {
+            rank,
+            model: model.clone(),
+            samples,
+            arrival_s: self.clock_s,
+        });
+        if self.batcher.is_some() {
+            let arrived = self.inst(self.clock_s);
+            self.batcher.as_mut().unwrap().enqueue(
+                &model,
+                PendingRequest {
+                    id: id as u64,
+                    input: Vec::new(),
+                    samples,
+                    arrived,
+                    priority: Priority::Critical,
+                },
+            );
+            self.batcher_pending += 1;
+            self.pump_batcher();
+        } else {
+            self.dispatch(vec![id]);
+        }
+    }
+
+    /// Drain every ready batcher queue at the current virtual time,
+    /// then arm a wake-up for the earliest future deadline.
+    fn pump_batcher(&mut self) {
+        let now = self.inst(self.clock_s);
+        loop {
+            if !self.batcher.as_ref().unwrap().has_ready(now) {
+                break;
+            }
+            let batches = self.batcher.as_mut().unwrap().drain_ready(now);
+            for batch in batches {
+                self.batcher_pending -= batch.requests.len() as u64;
+                let ids: Vec<usize> = batch.requests.iter().map(|r| r.id as usize).collect();
+                self.dispatch(ids);
+            }
+        }
+        if let Some(deadline) = self.batcher.as_ref().unwrap().next_deadline(now) {
+            let t = deadline.duration_since(self.epoch).as_secs_f64() + DEADLINE_EPS_S;
+            self.events.push(t.max(self.clock_s), Event::BatchDeadline);
+        }
+    }
+
+    /// Route one batch (same-instance request ids) exactly as the
+    /// analytic cluster would: policy selection over the candidate
+    /// tier, wait behind the backend's queued seconds, pay link +
+    /// execute, occupy the backend for the double-buffered period.
+    fn dispatch(&mut self, ids: Vec<usize>) {
+        debug_assert!(!ids.is_empty());
+        let model = self.pending[ids[0]].model.clone();
+        let total: usize = ids.iter().map(|&i| self.pending[i].samples).sum();
+        let is_mir = model.starts_with("mir");
+        let profile =
+            if is_mir { self.mir_profile.clone() } else { self.hermit_profile.clone() };
+        let candidates: &[usize] = if is_mir { &self.mir_tier } else { &self.hermit_tier };
+        let idx = policy::select(
+            self.policy,
+            &self.backends,
+            &mut self.rr_cursor,
+            &mut self.affinity,
+            candidates,
+            &model,
+            &profile,
+            total,
+        );
+        let backend = &mut self.backends[idx];
+        let wait_s = backend.queue_s();
+        let link_overhead_s = backend.link_overhead_s(&profile, total);
+        let latency_s = wait_s + backend.latency_s(&profile, total);
+        let occupancy = backend.occupancy_s(&profile, total);
+        backend.add_queue_s(occupancy);
+
+        let complete_s = self.clock_s + latency_s;
+        for &id in &ids {
+            let meta = &self.pending[id];
+            self.records.push(RequestRecord {
+                id: id as u64,
+                rank: meta.rank,
+                model: meta.model.clone(),
+                samples: meta.samples,
+                arrival_s: meta.arrival_s,
+                dispatch_s: self.clock_s,
+                complete_s,
+                backend: idx,
+                batch_samples: total,
+                link_overhead_s,
+            });
+        }
+        self.dispatched += ids.len() as u64;
+        self.batches += 1;
+        self.events.push(complete_s, Event::Completion { ids });
+    }
+
+    fn on_completion(&mut self, ids: Vec<usize>) {
+        self.completed += ids.len() as u64;
+        if let ArrivalProcess::ClosedLoop { think_s } = self.cfg.arrival {
+            for &id in &ids {
+                let rank = self.pending[id].rank;
+                let t = self.clock_s + think_s;
+                if t <= self.cfg.horizon_s {
+                    self.events.push(t, Event::ClosedArrival { rank });
+                }
+            }
+        }
+    }
+
+    // ----------------------------------------------------- accessors
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Requests that have entered the router.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Requests dispatched to a backend (inside some batch).
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Requests whose completion event has fired.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Dispatched but not yet completed.
+    pub fn in_flight(&self) -> u64 {
+        self.dispatched - self.completed
+    }
+
+    /// Requests waiting in the batching window.
+    pub fn batcher_pending(&self) -> u64 {
+        self.batcher_pending
+    }
+
+    /// Batches dispatched so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Per-request records, in dispatch order.  A record exists from
+    /// the moment its batch is dispatched (its completion time is
+    /// already determined then).
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Summarise the run (intended after [`Self::run_to_completion`]).
+    pub fn summary(&self) -> EventSummary {
+        let latencies: Vec<f64> = self.records.iter().map(|r| r.latency_s()).collect();
+        let samples: u64 = self.records.iter().map(|r| r.samples as u64).sum();
+        let makespan_s = self.records.iter().map(|r| r.complete_s).fold(0.0, f64::max);
+
+        let mut rank_sum = vec![0.0f64; self.cfg.ranks];
+        let mut rank_n = vec![0u64; self.cfg.ranks];
+        let mut link_sum = 0.0;
+        for r in &self.records {
+            rank_sum[r.rank] += r.latency_s();
+            rank_n[r.rank] += 1;
+            link_sum += r.link_overhead_s;
+        }
+        let per_rank_mean_s: Vec<f64> = rank_sum
+            .iter()
+            .zip(&rank_n)
+            .map(|(&s, &n)| if n > 0 { s / n as f64 } else { 0.0 })
+            .collect();
+        let active: Vec<f64> = per_rank_mean_s
+            .iter()
+            .zip(&rank_n)
+            .filter(|(_, &n)| n > 0)
+            .map(|(&m, _)| m)
+            .collect();
+        let slowdown_max = match (
+            active.iter().copied().fold(f64::INFINITY, f64::min),
+            active.iter().copied().fold(0.0f64, f64::max),
+        ) {
+            (min, max) if min > 0.0 && min.is_finite() => max / min,
+            _ => 1.0,
+        };
+
+        EventSummary {
+            requests: self.records.len() as u64,
+            samples,
+            batches: self.batches,
+            mean_batch_samples: if self.batches > 0 {
+                samples as f64 / self.batches as f64
+            } else {
+                0.0
+            },
+            latency: LatencyDist::from_latencies(&latencies),
+            mean_link_overhead_s: if self.records.is_empty() {
+                0.0
+            } else {
+                link_sum / self.records.len() as f64
+            },
+            per_rank_mean_s,
+            slowdown_max,
+            makespan_s,
+            samples_per_s: if makespan_s > 0.0 { samples as f64 / makespan_s } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuBackend, RduBackend};
+    use crate::devices::{Api, Gpu};
+    use crate::rdu::RduApi;
+
+    fn gpu_fleet(n: usize) -> Vec<Box<dyn Backend>> {
+        (0..n)
+            .map(|i| {
+                Box::new(GpuBackend::node_local(
+                    format!("gpu/rank{i}"),
+                    Gpu::a100(),
+                    Api::TrtCudaGraphs,
+                )) as Box<dyn Backend>
+            })
+            .collect()
+    }
+
+    fn pool() -> Vec<Box<dyn Backend>> {
+        vec![
+            Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+            Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+        ]
+    }
+
+    #[test]
+    fn synchronized_run_completes_everything() {
+        // horizon strictly between the 4th and 5th burst so float
+        // rounding of k * period cannot flip the burst count
+        let cfg = EventSimConfig { ranks: 8, horizon_s: 0.065, ..Default::default() };
+        let mut sim = EventSim::new(gpu_fleet(4), Policy::LeastOutstanding, cfg);
+        sim.run_to_completion();
+        // 4 bursts (t = 0, 0.02, 0.04, 0.06) x 8 ranks x 6 requests
+        assert_eq!(sim.submitted(), 4 * 8 * 6);
+        assert_eq!(sim.completed(), sim.submitted());
+        assert_eq!(sim.in_flight(), 0);
+        assert_eq!(sim.batcher_pending(), 0);
+        assert_eq!(sim.records().len() as u64, sim.submitted());
+    }
+
+    #[test]
+    fn batching_off_is_one_request_per_batch() {
+        let cfg = EventSimConfig { horizon_s: 0.04, ..Default::default() };
+        let mut sim = EventSim::new(pool(), Policy::LatencyAware, cfg);
+        sim.run_to_completion();
+        assert_eq!(sim.batches(), sim.submitted());
+        assert!(sim.records().iter().all(|r| r.batch_samples == r.samples));
+    }
+
+    #[test]
+    fn batching_window_coalesces_bursts() {
+        let cfg = EventSimConfig {
+            ranks: 16,
+            horizon_s: 0.04,
+            batching: Batching::Window { window_s: 200e-6, max_batch: 256 },
+            ..Default::default()
+        };
+        let mut sim = EventSim::new(pool(), Policy::LatencyAware, cfg);
+        sim.run_to_completion();
+        assert_eq!(sim.completed(), sim.submitted());
+        // 16 ranks x 6 requests per burst over 8 materials must
+        // coalesce well below one-batch-per-request
+        assert!(
+            sim.batches() * 4 <= sim.submitted(),
+            "{} batches for {} requests",
+            sim.batches(),
+            sim.submitted()
+        );
+        // batch membership recorded
+        assert!(sim.records().iter().any(|r| r.batch_samples > r.samples));
+    }
+
+    #[test]
+    fn mir_requests_ride_their_tier() {
+        let cfg = EventSimConfig {
+            ranks: 2,
+            mir_every: 1,
+            mir_samples: 128,
+            horizon_s: 0.04,
+            ..Default::default()
+        };
+        let mut fleet = gpu_fleet(2);
+        fleet.extend(pool());
+        // MIR pinned to the GPUs (0, 1), Hermit to the pool (2, 3)
+        let mut sim =
+            EventSim::with_tiers(fleet, Policy::LatencyAware, cfg, vec![2, 3], vec![0, 1]);
+        sim.run_to_completion();
+        for r in sim.records() {
+            if r.model.starts_with("mir") {
+                assert!(r.backend < 2, "mir routed to {}", r.backend);
+            } else {
+                assert!(r.backend >= 2, "hermit routed to {}", r.backend);
+            }
+        }
+        assert!(sim.records().iter().any(|r| r.model == "mir"));
+    }
+
+    #[test]
+    fn closed_loop_keeps_one_in_flight_per_rank() {
+        let cfg = EventSimConfig {
+            ranks: 3,
+            arrival: ArrivalProcess::ClosedLoop { think_s: 1e-3 },
+            horizon_s: 0.05,
+            ..Default::default()
+        };
+        let mut sim = EventSim::new(gpu_fleet(1), Policy::RoundRobin, cfg);
+        sim.run_to_completion();
+        assert!(sim.submitted() > 0);
+        assert_eq!(sim.completed(), sim.submitted());
+        // a rank never has two requests overlapping in flight
+        for rank in 0..3 {
+            let mut recs: Vec<&RequestRecord> =
+                sim.records().iter().filter(|r| r.rank == rank).collect();
+            recs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+            for pair in recs.windows(2) {
+                assert!(
+                    pair[1].arrival_s >= pair[0].complete_s - 1e-12,
+                    "rank {rank} overlapped"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_generates_within_horizon() {
+        let cfg = EventSimConfig {
+            ranks: 4,
+            arrival: ArrivalProcess::Poisson { rate_per_rank: 2000.0 },
+            horizon_s: 0.05,
+            ..Default::default()
+        };
+        let mut sim = EventSim::new(gpu_fleet(2), Policy::LeastOutstanding, cfg);
+        sim.run_to_completion();
+        // ~ 4 ranks x 2000/s x 0.05s = 400 expected
+        assert!(sim.submitted() > 200, "{}", sim.submitted());
+        assert!(sim.records().iter().all(|r| r.arrival_s <= 0.05));
+        assert_eq!(sim.completed(), sim.submitted());
+    }
+
+    #[test]
+    fn summary_accounts_everything() {
+        let cfg = EventSimConfig { ranks: 4, horizon_s: 0.04, ..Default::default() };
+        let mut sim = EventSim::new(pool(), Policy::LatencyAware, cfg);
+        sim.run_to_completion();
+        let s = sim.summary();
+        assert_eq!(s.requests, sim.submitted());
+        assert_eq!(s.batches, sim.batches());
+        assert!(s.latency.p50_s > 0.0);
+        assert!(s.latency.p999_s >= s.latency.p99_s);
+        assert!(s.latency.p99_s >= s.latency.p50_s);
+        assert!(s.makespan_s > 0.0);
+        assert!(s.slowdown_max >= 1.0);
+        assert_eq!(s.per_rank_mean_s.len(), 4);
+        let hist_total: u64 =
+            s.latency.histogram.iter().map(|(_, c)| c).sum::<u64>() + s.latency.overflow;
+        assert_eq!(hist_total, s.requests);
+    }
+}

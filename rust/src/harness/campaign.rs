@@ -21,9 +21,17 @@
 //! (`rust/tests/campaign_golden.rs` pins it).  MIR uses the paper's
 //! no-layernorm variant (Fig. 20) so both architectures execute the
 //! same network.
+//!
+//! Besides the analytic sweep there is an **event mode**
+//! ([`run_event_campaign`]): the same topology fleets driven by the
+//! discrete-event simulator ([`crate::eventsim`]) across rank count ×
+//! arrival process × dynamic-batching window, reporting full latency
+//! distributions (p50/p99/p99.9, histograms, per-rank slowdown) —
+//! `repro eventsim` on the command line.
 
 use crate::cluster::{Backend, BackendReport, Cluster, GpuBackend, Policy, RduBackend};
 use crate::devices::{profiles, Api, Gpu, ModelProfile};
+use crate::eventsim::{ArrivalProcess, Batching, EventSim, EventSimConfig, EventSummary};
 use crate::netsim::Link;
 use crate::rdu::RduApi;
 use crate::util::json::Value;
@@ -207,13 +215,9 @@ struct Tiering {
     mir: Vec<usize>,
 }
 
-/// Build a topology's backend fleet + tiering.
-fn build_cluster(
-    topology: Topology,
-    ranks: usize,
-    policy: Policy,
-    pool_link: &Link,
-) -> (Cluster, Tiering) {
+/// Build a topology's backend fleet + tiering (shared by the analytic
+/// cluster sweep and the event-sim mode).
+fn build_fleet(topology: Topology, ranks: usize, pool_link: &Link) -> (Vec<Box<dyn Backend>>, Tiering) {
     let local_gpu = |r: usize| -> Box<dyn Backend> {
         Box::new(GpuBackend::node_local(
             format!("gpu/rank{r}"),
@@ -247,21 +251,32 @@ fn build_cluster(
         Topology::Local => {
             let backends: Vec<Box<dyn Backend>> = (0..ranks).map(local_gpu).collect();
             let all: Vec<usize> = (0..backends.len()).collect();
-            (Cluster::new(backends, policy), Tiering { hermit: all.clone(), mir: all })
+            (backends, Tiering { hermit: all.clone(), mir: all })
         }
         Topology::Pooled => {
             let backends = pool(0);
             let all: Vec<usize> = (0..backends.len()).collect();
-            (Cluster::new(backends, policy), Tiering { hermit: all.clone(), mir: all })
+            (backends, Tiering { hermit: all.clone(), mir: all })
         }
         Topology::Hybrid => {
             let mut backends: Vec<Box<dyn Backend>> = (0..ranks).map(local_gpu).collect();
             let gpu_idx: Vec<usize> = (0..backends.len()).collect();
             backends.extend(pool(0));
             let pool_idx: Vec<usize> = (gpu_idx.len()..backends.len()).collect();
-            (Cluster::new(backends, policy), Tiering { hermit: pool_idx, mir: gpu_idx })
+            (backends, Tiering { hermit: pool_idx, mir: gpu_idx })
         }
     }
+}
+
+/// Build a topology's routed cluster + tiering.
+fn build_cluster(
+    topology: Topology,
+    ranks: usize,
+    policy: Policy,
+    pool_link: &Link,
+) -> (Cluster, Tiering) {
+    let (backends, tier) = build_fleet(topology, ranks, pool_link);
+    (Cluster::new(backends, policy), tier)
 }
 
 /// Campaign model mapping: Hermit requests use the Hermit profile;
@@ -353,6 +368,213 @@ pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
     CampaignResult { config: cfg.clone(), scenarios }
 }
 
+// ------------------------------------------------------- event mode
+
+/// Event-mode campaign knobs: the discrete-event simulator
+/// ([`crate::eventsim`]) swept over topology × policy × rank count ×
+/// arrival process × batching window.  Unlike the analytic sweep,
+/// this resolves *when* requests collide — the queueing behaviour of
+/// bursty multi-rank arrivals that the closed-form cluster cannot
+/// express.
+#[derive(Debug, Clone)]
+pub struct EventCampaignConfig {
+    pub topologies: Vec<Topology>,
+    pub policies: Vec<Policy>,
+    /// MPI rank counts to sweep (local topology gets one GPU per rank).
+    pub rank_counts: Vec<usize>,
+    pub arrivals: Vec<ArrivalProcess>,
+    /// Dynamic-batching windows, µs; `0` disables batching.
+    pub windows_us: Vec<f64>,
+    /// Sample cap per coalesced batch.
+    pub max_batch: usize,
+    /// Per-material Hermit instances.
+    pub materials: usize,
+    /// Samples per request, uniform inclusive (paper: 2–3 per zone).
+    pub samples_per_request: (usize, usize),
+    /// Synchronized mode: requests per rank per burst.
+    pub requests_per_burst: usize,
+    /// Synchronized mode: emit one MIR request per rank every k-th
+    /// burst (0 = hermit-only).
+    pub mir_every: usize,
+    pub mir_samples: usize,
+    /// Arrival generators stop here; in-flight work drains.
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+impl Default for EventCampaignConfig {
+    fn default() -> Self {
+        EventCampaignConfig {
+            // Hybrid needs MIR traffic to differ from Pooled; the
+            // default event sweep studies the bursty in-the-loop
+            // Hermit regime, so it covers the two endpoints.
+            topologies: vec![Topology::Local, Topology::Pooled],
+            policies: vec![Policy::RoundRobin, Policy::LatencyAware],
+            rank_counts: vec![4, 64],
+            arrivals: vec![
+                ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+                ArrivalProcess::Poisson { rate_per_rank: 800.0 },
+                ArrivalProcess::ClosedLoop { think_s: 2e-3 },
+            ],
+            windows_us: vec![0.0, 200.0],
+            max_batch: 256,
+            materials: 8,
+            samples_per_request: (2, 3),
+            requests_per_burst: 6,
+            mir_every: 0,
+            mir_samples: 512,
+            horizon_s: 0.2,
+            seed: 42,
+        }
+    }
+}
+
+/// One (topology, policy, arrival, ranks, window) cell.
+#[derive(Debug, Clone)]
+pub struct EventScenarioResult {
+    pub topology: Topology,
+    pub policy: Policy,
+    pub arrival: ArrivalProcess,
+    pub ranks: usize,
+    pub window_us: f64,
+    pub summary: EventSummary,
+}
+
+/// The full event-mode sweep.
+#[derive(Debug, Clone)]
+pub struct EventCampaignResult {
+    pub config: EventCampaignConfig,
+    pub scenarios: Vec<EventScenarioResult>,
+}
+
+impl EventCampaignResult {
+    /// Look up one cell (`arrival_key` as in [`ArrivalProcess::key`]).
+    pub fn scenario(
+        &self,
+        topology: Topology,
+        policy: Policy,
+        arrival_key: &str,
+        ranks: usize,
+        window_us: f64,
+    ) -> Option<&EventScenarioResult> {
+        self.scenarios.iter().find(|s| {
+            s.topology == topology
+                && s.policy == policy
+                && s.arrival.key() == arrival_key
+                && s.ranks == ranks
+                && s.window_us == window_us
+        })
+    }
+
+    /// Deterministic JSON document (BTreeMap key order; fixed
+    /// precision), golden-pinned by `rust/tests/campaign_golden.rs`.
+    pub fn to_json(&self) -> Value {
+        let mut root = BTreeMap::new();
+        root.insert("config".to_string(), event_config_json(&self.config));
+        root.insert(
+            "scenarios".to_string(),
+            Value::Array(self.scenarios.iter().map(event_scenario_json).collect()),
+        );
+        Value::Object(root)
+    }
+
+    /// One aligned table per topology; one row per swept cell.
+    pub fn tables(&self) -> Vec<Table> {
+        self.config
+            .topologies
+            .iter()
+            .map(|&topo| {
+                let cells: Vec<&EventScenarioResult> =
+                    self.scenarios.iter().filter(|s| s.topology == topo).collect();
+                let mut t = Table::new(
+                    format!("Event campaign — {} ({})", topo.key(), topo.label()),
+                    "cell",
+                );
+                t.set_x(cells.iter().map(|s| {
+                    format!(
+                        "{}/{}/r{}/w{}",
+                        s.policy.key(),
+                        s.arrival.key(),
+                        s.ranks,
+                        s.window_us
+                    )
+                }));
+                t.add_series(
+                    "p50_us",
+                    cells.iter().map(|s| s.summary.latency.p50_s * 1e6).collect(),
+                );
+                t.add_series(
+                    "p99_us",
+                    cells.iter().map(|s| s.summary.latency.p99_s * 1e6).collect(),
+                );
+                t.add_series(
+                    "p999_us",
+                    cells.iter().map(|s| s.summary.latency.p999_s * 1e6).collect(),
+                );
+                t.add_series(
+                    "mean_batch",
+                    cells.iter().map(|s| s.summary.mean_batch_samples).collect(),
+                );
+                t.add_series(
+                    "slowdown",
+                    cells.iter().map(|s| s.summary.slowdown_max).collect(),
+                );
+                t
+            })
+            .collect()
+    }
+}
+
+/// Run one event-mode cell.
+pub fn run_event_scenario(
+    topology: Topology,
+    policy: Policy,
+    arrival: ArrivalProcess,
+    ranks: usize,
+    window_us: f64,
+    cfg: &EventCampaignConfig,
+) -> EventScenarioResult {
+    let (backends, tier) = build_fleet(topology, ranks, &Link::infiniband_cx6());
+    let sim_cfg = EventSimConfig {
+        ranks,
+        materials: cfg.materials,
+        samples_per_request: cfg.samples_per_request,
+        requests_per_burst: cfg.requests_per_burst,
+        mir_every: cfg.mir_every,
+        mir_samples: cfg.mir_samples,
+        arrival,
+        batching: if window_us > 0.0 {
+            Batching::Window { window_s: window_us * 1e-6, max_batch: cfg.max_batch }
+        } else {
+            Batching::Off
+        },
+        horizon_s: cfg.horizon_s,
+        seed: cfg.seed,
+    };
+    let mut sim = EventSim::with_tiers(backends, policy, sim_cfg, tier.hermit, tier.mir);
+    sim.run_to_completion();
+    EventScenarioResult { topology, policy, arrival, ranks, window_us, summary: sim.summary() }
+}
+
+/// Run the full event-mode sweep.
+pub fn run_event_campaign(cfg: &EventCampaignConfig) -> EventCampaignResult {
+    let mut scenarios = Vec::new();
+    for &topology in &cfg.topologies {
+        for &policy in &cfg.policies {
+            for &ranks in &cfg.rank_counts {
+                for &arrival in &cfg.arrivals {
+                    for &window_us in &cfg.windows_us {
+                        scenarios.push(run_event_scenario(
+                            topology, policy, arrival, ranks, window_us, cfg,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    EventCampaignResult { config: cfg.clone(), scenarios }
+}
+
 // ------------------------------------------------------------- JSON
 
 /// Microseconds at fixed 3-decimal precision (byte-stable rendering).
@@ -422,6 +644,119 @@ fn scenario_json(s: &ScenarioResult) -> Value {
                 .collect(),
         ),
     );
+    Value::Object(m)
+}
+
+// -------------------------------------------------- event-mode JSON
+
+fn arrival_json(a: &ArrivalProcess) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Value::String(a.key().to_string()));
+    match *a {
+        ArrivalProcess::Synchronized { period_s, jitter_s } => {
+            m.insert("period_us".to_string(), us(period_s));
+            m.insert("jitter_us".to_string(), us(jitter_s));
+        }
+        ArrivalProcess::Poisson { rate_per_rank } => {
+            m.insert("rate_per_rank".to_string(), fixed3(rate_per_rank));
+        }
+        ArrivalProcess::ClosedLoop { think_s } => {
+            m.insert("think_us".to_string(), us(think_s));
+        }
+    }
+    Value::Object(m)
+}
+
+fn event_config_json(cfg: &EventCampaignConfig) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "topologies".to_string(),
+        Value::Array(
+            cfg.topologies
+                .iter()
+                .map(|t| Value::String(t.key().to_string()))
+                .collect(),
+        ),
+    );
+    m.insert(
+        "policies".to_string(),
+        Value::Array(
+            cfg.policies.iter().map(|p| Value::String(p.key().to_string())).collect(),
+        ),
+    );
+    m.insert(
+        "rank_counts".to_string(),
+        Value::Array(cfg.rank_counts.iter().map(|&r| count(r as u64)).collect()),
+    );
+    m.insert(
+        "arrivals".to_string(),
+        Value::Array(cfg.arrivals.iter().map(arrival_json).collect()),
+    );
+    m.insert(
+        "windows_us".to_string(),
+        Value::Array(cfg.windows_us.iter().map(|&w| fixed3(w)).collect()),
+    );
+    m.insert("max_batch".to_string(), count(cfg.max_batch as u64));
+    m.insert("materials".to_string(), count(cfg.materials as u64));
+    m.insert(
+        "samples_per_request".to_string(),
+        Value::Array(vec![
+            count(cfg.samples_per_request.0 as u64),
+            count(cfg.samples_per_request.1 as u64),
+        ]),
+    );
+    m.insert("requests_per_burst".to_string(), count(cfg.requests_per_burst as u64));
+    m.insert("mir_every".to_string(), count(cfg.mir_every as u64));
+    m.insert("mir_samples".to_string(), count(cfg.mir_samples as u64));
+    m.insert("horizon_us".to_string(), us(cfg.horizon_s));
+    m.insert("seed".to_string(), count(cfg.seed));
+    Value::Object(m)
+}
+
+fn event_summary_json(s: &EventSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("requests".to_string(), count(s.requests));
+    m.insert("samples".to_string(), count(s.samples));
+    m.insert("batches".to_string(), count(s.batches));
+    m.insert("mean_batch_samples".to_string(), fixed3(s.mean_batch_samples));
+    m.insert("mean_us".to_string(), us(s.latency.mean_s));
+    m.insert("p50_us".to_string(), us(s.latency.p50_s));
+    m.insert("p90_us".to_string(), us(s.latency.p90_s));
+    m.insert("p99_us".to_string(), us(s.latency.p99_s));
+    m.insert("p999_us".to_string(), us(s.latency.p999_s));
+    m.insert("max_us".to_string(), us(s.latency.max_s));
+    m.insert("mean_link_overhead_us".to_string(), us(s.mean_link_overhead_s));
+    m.insert("samples_per_s".to_string(), fixed3(s.samples_per_s));
+    m.insert("makespan_us".to_string(), us(s.makespan_s));
+    m.insert("slowdown_max".to_string(), fixed3(s.slowdown_max));
+    m.insert(
+        "histogram".to_string(),
+        Value::Array(
+            s.latency
+                .histogram
+                .iter()
+                .filter(|(_, c)| *c > 0)
+                .map(|&(le_us, c)| {
+                    let mut bm = BTreeMap::new();
+                    bm.insert("le_us".to_string(), Value::Number(le_us));
+                    bm.insert("count".to_string(), count(c));
+                    Value::Object(bm)
+                })
+                .collect(),
+        ),
+    );
+    m.insert("overflow".to_string(), count(s.latency.overflow));
+    Value::Object(m)
+}
+
+fn event_scenario_json(s: &EventScenarioResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topology".to_string(), Value::String(s.topology.key().to_string()));
+    m.insert("policy".to_string(), Value::String(s.policy.key().to_string()));
+    m.insert("arrival".to_string(), Value::String(s.arrival.key().to_string()));
+    m.insert("ranks".to_string(), count(s.ranks as u64));
+    m.insert("window_us".to_string(), fixed3(s.window_us));
+    m.insert("summary".to_string(), event_summary_json(&s.summary));
     Value::Object(m)
 }
 
@@ -502,5 +837,94 @@ mod tests {
         // and parses back
         assert!(crate::util::json::parse(&a).is_ok());
         assert!(a.contains("\"topology\":\"hybrid\""), "{}", &a[..200.min(a.len())]);
+    }
+
+    // ------------------------------------------------- event mode
+
+    fn quick_event_cfg() -> EventCampaignConfig {
+        EventCampaignConfig {
+            rank_counts: vec![4],
+            horizon_s: 0.05,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn event_campaign_covers_every_cell() {
+        let cfg = quick_event_cfg();
+        let result = run_event_campaign(&cfg);
+        let cells = cfg.topologies.len()
+            * cfg.policies.len()
+            * cfg.rank_counts.len()
+            * cfg.arrivals.len()
+            * cfg.windows_us.len();
+        assert_eq!(result.scenarios.len(), cells);
+        for s in &result.scenarios {
+            assert!(s.summary.requests > 0, "{:?}/{:?}", s.topology, s.policy);
+            assert!(s.summary.latency.p50_s > 0.0);
+            assert!(s.summary.latency.p999_s >= s.summary.latency.p99_s);
+        }
+        // lookup works for an arbitrary cell
+        assert!(result
+            .scenario(Topology::Pooled, Policy::LatencyAware, "poisson", 4, 200.0)
+            .is_some());
+        assert!(result
+            .scenario(Topology::Hybrid, Policy::LatencyAware, "poisson", 4, 200.0)
+            .is_none());
+    }
+
+    #[test]
+    fn event_workload_identical_across_cells_of_one_arrival() {
+        // Open-loop arrivals do not depend on service times, so every
+        // (topology, policy, window) cell of a given arrival process
+        // and rank count must see the same submitted request volume.
+        let result = run_event_campaign(&quick_event_cfg());
+        for key in ["synchronized", "poisson"] {
+            let volumes: Vec<u64> = result
+                .scenarios
+                .iter()
+                .filter(|s| s.arrival.key() == key && s.ranks == 4)
+                .map(|s| s.summary.requests)
+                .collect();
+            assert!(!volumes.is_empty());
+            assert!(
+                volumes.iter().all(|&v| v == volumes[0]),
+                "{key}: {volumes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn event_json_is_deterministic_and_parses() {
+        let cfg = quick_event_cfg();
+        let a = crate::util::json::write(&run_event_campaign(&cfg).to_json());
+        let b = crate::util::json::write(&run_event_campaign(&cfg).to_json());
+        assert_eq!(a, b);
+        let doc = crate::util::json::parse(&a).unwrap();
+        let scenarios = doc.get("scenarios").unwrap().as_array().unwrap();
+        for s in scenarios {
+            for field in ["topology", "policy", "arrival", "ranks", "window_us", "summary"] {
+                assert!(s.get(field).is_some(), "missing {field}");
+            }
+            let sum = s.get("summary").unwrap();
+            for field in ["p50_us", "p99_us", "p999_us", "histogram", "slowdown_max"] {
+                assert!(sum.get(field).is_some(), "missing summary.{field}");
+            }
+        }
+    }
+
+    #[test]
+    fn event_tables_cover_the_sweep() {
+        let cfg = quick_event_cfg();
+        let result = run_event_campaign(&cfg);
+        let tables = result.tables();
+        assert_eq!(tables.len(), cfg.topologies.len());
+        for t in &tables {
+            assert_eq!(
+                t.x.len(),
+                cfg.policies.len() * cfg.arrivals.len() * cfg.windows_us.len()
+            );
+            assert!(t.series("p999_us").is_some());
+        }
     }
 }

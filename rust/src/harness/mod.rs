@@ -7,7 +7,8 @@
 //! * [`campaign`] — multi-backend scenario campaigns: Hydra/MIR
 //!   streams swept across cluster topologies (local / pooled /
 //!   hybrid) × routing policies, emitting deterministic JSON
-//!   (`repro campaign`);
+//!   (`repro campaign`), plus the event-sim mode sweeping rank count
+//!   × arrival process × batching window (`repro eventsim`);
 //! * [`table`]    — aligned-table + CSV rendering.
 
 pub mod campaign;
@@ -15,6 +16,9 @@ pub mod figures;
 pub mod scaling;
 pub mod table;
 
-pub use campaign::{run_campaign, CampaignConfig, CampaignResult, Topology};
+pub use campaign::{
+    run_campaign, run_event_campaign, CampaignConfig, CampaignResult, EventCampaignConfig,
+    EventCampaignResult, Topology,
+};
 pub use figures::{run_figure, FigureResult, FIGURES};
 pub use table::Table;

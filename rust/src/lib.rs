@@ -33,6 +33,14 @@
 //!   `throughput` / `queue_s`, composed into a [`cluster::Cluster`]
 //!   with pluggable routing policies (round-robin, least-outstanding,
 //!   model-affinity, latency-aware).
+//! * [`eventsim`] — deterministic discrete-event simulator: binary-heap
+//!   event queue, multi-rank arrival processes (timestep-synchronised
+//!   bursts, open-loop Poisson, closed-loop think time), a router-level
+//!   dynamic-batching stage reusing [`coordinator::batcher`], FIFO
+//!   service through [`cluster::Policy`] routing, and full latency
+//!   distributions (p50/p99/p99.9, histograms, per-rank slowdown).
+//!   Degrades provably to the analytic [`cluster::Cluster`] in the
+//!   contention-free limit (`rust/tests/eventsim_vs_analytic.rs`).
 //! * [`workload`] — Hydra/MIR request-trace generators.
 //! * [`metrics`] — the paper's measurement methodology (mean over
 //!   mini-batches, 5 replicates, 95 % confidence intervals).
@@ -50,6 +58,7 @@
 pub mod cluster;
 pub mod coordinator;
 pub mod devices;
+pub mod eventsim;
 pub mod harness;
 pub mod metrics;
 pub mod net;

@@ -61,8 +61,19 @@ impl Link {
 
     /// Round-trip overhead added to one remote inference of
     /// `bytes_total` (request payload + response payload), seconds.
+    ///
+    /// The transfer term is guarded: [`Link::local`] models an ideal
+    /// link with `eff_bandwidth = ∞`, and a zero-byte payload (a
+    /// metadata-only request, or a degenerate batch) would otherwise
+    /// evaluate `0/0`-adjacent expressions — `∞/∞` is NaN, and a NaN
+    /// here poisons every queue/latency figure downstream.
     pub fn rtt_overhead_s(&self, bytes_total: f64) -> f64 {
-        2.0 * self.wire_latency_s + self.soft_per_msg_s + bytes_total / self.eff_bandwidth
+        let transfer_s = if bytes_total > 0.0 && self.eff_bandwidth.is_finite() {
+            bytes_total / self.eff_bandwidth
+        } else {
+            0.0
+        };
+        2.0 * self.wire_latency_s + self.soft_per_msg_s + transfer_s
     }
 
     /// Remote latency given node-local latency and payload bytes.
@@ -155,6 +166,29 @@ mod tests {
     fn payload_accounting_fp16() {
         // 4 samples of Hermit: (42 + 30) * 2 bytes * 4 = 576 bytes.
         assert_eq!(payload_bytes(42, 30, 4), 576.0);
+    }
+
+    #[test]
+    fn zero_byte_and_infinite_bandwidth_never_nan() {
+        // Regression: Link::local() uses eff_bandwidth = INFINITY;
+        // the transfer term must stay exactly 0 (never NaN) for
+        // zero-byte, huge, and even infinite payloads, and the
+        // Infiniband link must charge only its fixed per-message cost
+        // on an empty payload.
+        let local = Link::local();
+        for bytes in [0.0, 1.0, 1e18, f64::INFINITY] {
+            let over = local.rtt_overhead_s(bytes);
+            assert_eq!(over, 0.0, "local link, {bytes} bytes");
+            assert!(local.remote_latency_s(1e-3, bytes).is_finite());
+            assert!(local.remote_period_s(1e-3, bytes).is_finite());
+        }
+        let ib = Link::infiniband_cx6();
+        let over = ib.rtt_overhead_s(0.0);
+        assert!(over.is_finite() && !over.is_nan());
+        assert_eq!(over, 2.0 * ib.wire_latency_s + ib.soft_per_msg_s);
+        // zero-batch payload sizing composes with the guard
+        assert_eq!(payload_bytes(42, 30, 0), 0.0);
+        assert!(ib.rtt_overhead_s(payload_bytes(42, 30, 0)).is_finite());
     }
 
     #[test]

@@ -3,30 +3,66 @@
 //!
 //! The campaign runs entirely in virtual time on the calibrated
 //! analytic models, so a fixed seed must produce a **byte-stable**
-//! JSON summary.  The golden file lives at
-//! `rust/tests/golden/campaign_summary.json`; on first run (fresh
-//! checkout without the file) the test writes it, afterwards every
-//! run must reproduce it byte for byte.
+//! JSON summary.  The golden files live at
+//! `rust/tests/golden/campaign_summary.json` (analytic sweep) and
+//! `rust/tests/golden/event_summary.json` (event-sim sweep); on first
+//! run (fresh checkout without a file) the test writes it, afterwards
+//! every run must reproduce it byte for byte.  The event mode also
+//! pins the queueing headline the analytic sweep cannot express:
+//! dynamic batching shrinks p99 under bursty 64-rank arrivals on the
+//! pooled topology.
 
 use std::path::PathBuf;
 
 use cogsim_disagg::cluster::Policy;
+use cogsim_disagg::eventsim::ArrivalProcess;
 use cogsim_disagg::harness::campaign::{
-    run_campaign, run_scenario_with_link, CampaignConfig, Topology,
+    run_campaign, run_event_campaign, run_event_scenario, run_scenario_with_link,
+    CampaignConfig, EventCampaignConfig, Topology,
 };
 use cogsim_disagg::netsim::Link;
 use cogsim_disagg::util::json;
 
-fn golden_path() -> PathBuf {
+fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("rust")
         .join("tests")
         .join("golden")
-        .join("campaign_summary.json")
+}
+
+fn golden_path() -> PathBuf {
+    golden_dir().join("campaign_summary.json")
+}
+
+fn event_golden_path() -> PathBuf {
+    golden_dir().join("event_summary.json")
 }
 
 fn campaign_json() -> String {
     json::write(&run_campaign(&CampaignConfig::default()).to_json())
+}
+
+fn event_campaign_json() -> String {
+    json::write(&run_event_campaign(&EventCampaignConfig::default()).to_json())
+}
+
+/// Shared golden-file protocol: bootstrap on first run, byte-compare
+/// afterwards.
+fn assert_golden(actual: &str, path: &PathBuf, regen: impl Fn() -> String) {
+    if path.exists() {
+        let golden = std::fs::read_to_string(path).unwrap();
+        assert_eq!(
+            actual, &golden,
+            "summary drifted from {path:?}; if the change is intentional, \
+             delete the golden file and rerun to regenerate"
+        );
+    } else {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, actual).unwrap();
+        // bootstrap run: regenerate and confirm stability against the
+        // file we just wrote
+        assert_eq!(regen(), std::fs::read_to_string(path).unwrap());
+    }
 }
 
 #[test]
@@ -34,22 +70,49 @@ fn fixed_seed_summary_is_byte_stable() {
     let a = campaign_json();
     let b = campaign_json();
     assert_eq!(a, b, "two identical runs must serialise identically");
+    assert_golden(&a, &golden_path(), campaign_json);
+}
 
-    let path = golden_path();
-    if path.exists() {
-        let golden = std::fs::read_to_string(&path).unwrap();
-        assert_eq!(
-            a, golden,
-            "campaign summary drifted from {path:?}; if the change is \
-             intentional, delete the golden file and rerun to regenerate"
+#[test]
+fn fixed_seed_event_summary_is_byte_stable() {
+    let a = event_campaign_json();
+    let b = event_campaign_json();
+    assert_eq!(a, b, "two identical event runs must serialise identically");
+    assert_golden(&a, &event_golden_path(), event_campaign_json);
+}
+
+#[test]
+fn batching_window_shrinks_p99_under_bursty_64_rank_arrivals_on_the_pool() {
+    // The event-mode headline: 64 ranks hit the shared RDU pool with
+    // perfectly synchronised per-timestep bursts of tiny per-material
+    // requests.  Without batching, every request pays its own
+    // per-message software path and host overhead and the queue
+    // explodes; a 200 us coalescing window collapses each burst into a
+    // handful of per-material batches and wins the tail outright.
+    // Run just the four cells the headline needs — not the full
+    // default sweep the byte-stability test already runs twice.
+    let cfg = EventCampaignConfig::default();
+    let bursty = ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 };
+    let cell = |policy, window_us| {
+        run_event_scenario(Topology::Pooled, policy, bursty, 64, window_us, &cfg)
+    };
+    for policy in [Policy::RoundRobin, Policy::LatencyAware] {
+        let off = cell(policy, 0.0);
+        let on = cell(policy, 200.0);
+        assert!(
+            on.summary.latency.p99_s < off.summary.latency.p99_s,
+            "{policy:?}: batched p99 {:.1}us must beat unbatched {:.1}us",
+            on.summary.latency.p99_s * 1e6,
+            off.summary.latency.p99_s * 1e6
         );
-    } else {
-        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-        std::fs::write(&path, &a).unwrap();
-        // bootstrap run: regenerate and confirm stability against the
-        // file we just wrote
-        assert_eq!(campaign_json(), std::fs::read_to_string(&path).unwrap());
+        // the mechanism: far fewer, much larger batches
+        assert!(on.summary.batches < off.summary.batches / 4);
+        assert!(on.summary.mean_batch_samples > 4.0 * off.summary.mean_batch_samples);
     }
+    // and the distribution is genuinely a tail: p99.9 >= p99 >= p50
+    let on = cell(Policy::LatencyAware, 200.0);
+    assert!(on.summary.latency.p999_s >= on.summary.latency.p99_s);
+    assert!(on.summary.latency.p99_s >= on.summary.latency.p50_s);
 }
 
 #[test]

@@ -1,0 +1,205 @@
+//! Property tests for the discrete-event simulator: the invariants
+//! that must hold for *every* seed, arrival process, and batching
+//! configuration — event-time monotonicity, request conservation,
+//! batching-window/max-batch bounds, and bit-identical determinism.
+
+use cogsim_disagg::cluster::{Backend, GpuBackend, Policy, RduBackend};
+use cogsim_disagg::devices::{Api, Gpu};
+use cogsim_disagg::eventsim::{ArrivalProcess, Batching, EventSim, EventSimConfig};
+use cogsim_disagg::harness::campaign::{run_event_campaign, EventCampaignConfig};
+use cogsim_disagg::rdu::RduApi;
+use cogsim_disagg::util::json;
+
+fn mixed_fleet() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(GpuBackend::node_local("gpu/rank0", Gpu::a100(), Api::TrtCudaGraphs)),
+        Box::new(GpuBackend::node_local("gpu/rank1", Gpu::a100(), Api::NaivePyTorch)),
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn arrivals() -> [ArrivalProcess; 3] {
+    [
+        ArrivalProcess::Synchronized { period_s: 0.01, jitter_s: 50e-6 },
+        ArrivalProcess::Poisson { rate_per_rank: 1500.0 },
+        ArrivalProcess::ClosedLoop { think_s: 1e-3 },
+    ]
+}
+
+fn batchings() -> [Batching; 2] {
+    [Batching::Off, Batching::Window { window_s: 100e-6, max_batch: 64 }]
+}
+
+#[test]
+fn event_time_monotonicity() {
+    // dispatch times are non-decreasing in dispatch order, and every
+    // record keeps arrival <= dispatch < completion
+    for arrival in arrivals() {
+        for batching in batchings() {
+            for seed in [1u64, 99] {
+                let cfg = EventSimConfig {
+                    ranks: 12,
+                    arrival,
+                    batching,
+                    horizon_s: 0.05,
+                    seed,
+                    ..Default::default()
+                };
+                let mut sim = EventSim::new(mixed_fleet(), Policy::LeastOutstanding, cfg);
+                sim.run_to_completion();
+                let recs = sim.records();
+                assert!(!recs.is_empty(), "{arrival:?}/{batching:?}");
+                for pair in recs.windows(2) {
+                    assert!(
+                        pair[1].dispatch_s >= pair[0].dispatch_s,
+                        "{arrival:?}/{batching:?}: dispatch went backwards"
+                    );
+                }
+                for r in recs {
+                    assert!(r.arrival_s <= r.dispatch_s, "waited negative time");
+                    assert!(r.complete_s > r.dispatch_s, "zero/negative service");
+                    assert!(r.latency_s() > 0.0 && r.latency_s().is_finite());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn request_conservation_at_the_horizon_and_at_drain() {
+    for arrival in arrivals() {
+        for batching in batchings() {
+            let cfg = EventSimConfig {
+                ranks: 16,
+                arrival,
+                batching,
+                horizon_s: 0.06,
+                seed: 3,
+                ..Default::default()
+            };
+            let mut sim = EventSim::new(mixed_fleet(), Policy::LatencyAware, cfg);
+            // stop mid-run: submitted splits exactly into completed,
+            // in flight on a backend, and waiting in the batcher
+            sim.run_until(0.03);
+            assert_eq!(
+                sim.submitted(),
+                sim.completed() + sim.in_flight() + sim.batcher_pending(),
+                "{arrival:?}/{batching:?} mid-run"
+            );
+            // drain: everything submitted must complete
+            sim.run_to_completion();
+            assert!(sim.submitted() > 0);
+            assert_eq!(sim.completed(), sim.submitted(), "{arrival:?}/{batching:?}");
+            assert_eq!(sim.in_flight(), 0);
+            assert_eq!(sim.batcher_pending(), 0);
+            assert_eq!(sim.records().len() as u64, sim.submitted());
+        }
+    }
+}
+
+#[test]
+fn batches_respect_max_batch_and_window() {
+    const WINDOW_S: f64 = 100e-6;
+    const MAX_BATCH: usize = 64;
+    for arrival in arrivals() {
+        let cfg = EventSimConfig {
+            ranks: 24,
+            samples_per_request: (1, 3),
+            arrival,
+            batching: Batching::Window { window_s: WINDOW_S, max_batch: MAX_BATCH },
+            horizon_s: 0.05,
+            seed: 11,
+            ..Default::default()
+        };
+        let mut sim = EventSim::new(mixed_fleet(), Policy::LeastOutstanding, cfg);
+        sim.run_to_completion();
+        let mut coalesced = false;
+        for r in sim.records() {
+            // every request is smaller than max_batch, so no batch may
+            // ever exceed the cap
+            assert!(
+                r.batch_samples <= MAX_BATCH,
+                "{arrival:?}: batch of {} samples",
+                r.batch_samples
+            );
+            // the window bound: dispatched within window of arrival
+            // (+5 ns slack for the ns-quantised deadline wake-up)
+            assert!(
+                r.batch_wait_s() <= WINDOW_S + 5e-9,
+                "{arrival:?}: request held {}s past its window",
+                r.batch_wait_s() - WINDOW_S
+            );
+            coalesced |= r.batch_samples > r.samples;
+        }
+        assert!(coalesced, "{arrival:?}: 24 ranks must co-batch at least once");
+    }
+}
+
+#[test]
+fn identical_seeds_give_byte_identical_summaries() {
+    let cfg = EventCampaignConfig {
+        rank_counts: vec![8],
+        horizon_s: 0.04,
+        ..Default::default()
+    };
+    let a = json::write(&run_event_campaign(&cfg).to_json());
+    let b = json::write(&run_event_campaign(&cfg).to_json());
+    assert_eq!(a, b, "same seed must serialise identically");
+
+    let different = EventCampaignConfig { seed: 43, ..cfg };
+    let c = json::write(&run_event_campaign(&different).to_json());
+    assert_ne!(a, c, "a different seed must change the summary");
+}
+
+#[test]
+fn backends_see_only_their_tier() {
+    // hermit pinned to the pool (2, 3), mir to the GPUs (0, 1)
+    let cfg = EventSimConfig {
+        ranks: 4,
+        mir_every: 2,
+        mir_samples: 64,
+        horizon_s: 0.05,
+        batching: Batching::Window { window_s: 50e-6, max_batch: 128 },
+        ..Default::default()
+    };
+    let mut sim =
+        EventSim::with_tiers(mixed_fleet(), Policy::LatencyAware, cfg, vec![2, 3], vec![0, 1]);
+    sim.run_to_completion();
+    assert!(sim.records().iter().any(|r| r.model == "mir"));
+    for r in sim.records() {
+        if r.model.starts_with("mir") {
+            assert!(r.backend < 2);
+        } else {
+            assert!(r.backend >= 2);
+        }
+    }
+}
+
+#[test]
+fn open_loop_volume_is_service_independent() {
+    // Poisson and synchronized arrivals are open loop: the submitted
+    // count must not depend on policy, batching, or fleet speed.
+    for arrival in [
+        ArrivalProcess::Synchronized { period_s: 0.01, jitter_s: 0.0 },
+        ArrivalProcess::Poisson { rate_per_rank: 1000.0 },
+    ] {
+        let mut volumes = Vec::new();
+        for policy in [Policy::RoundRobin, Policy::LatencyAware] {
+            for batching in batchings() {
+                let cfg = EventSimConfig {
+                    ranks: 6,
+                    arrival,
+                    batching,
+                    horizon_s: 0.05,
+                    seed: 5,
+                    ..Default::default()
+                };
+                let mut sim = EventSim::new(mixed_fleet(), policy, cfg);
+                sim.run_to_completion();
+                volumes.push(sim.submitted());
+            }
+        }
+        assert!(volumes.iter().all(|&v| v == volumes[0]), "{arrival:?}: {volumes:?}");
+    }
+}
