@@ -1,0 +1,81 @@
+//! CogSim sweep: the coupled timestep/inference application model
+//! end to end.
+//!
+//! Part 1 runs one coupled scenario directly — 16 ranks stalling each
+//! bulk-synchronous timestep on a burst of per-material requests
+//! against the shared RDU pool — and prints the per-timestep
+//! critical-path breakdown under free vs expensive model swaps.
+//! Part 2 sweeps the full cogsim campaign (topology × policy × swap ×
+//! overlap) and writes its deterministic JSON.
+//!
+//! ```bash
+//! cargo run --release --example cogsim_sweep
+//! ```
+
+use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
+use cogsim_disagg::eventsim::{CogSim, CogSimConfig};
+use cogsim_disagg::harness::campaign::{run_cog_campaign, CogCampaignConfig};
+use cogsim_disagg::rdu::RduApi;
+use cogsim_disagg::util::json;
+
+fn pool() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn main() {
+    // ---- part 1: one coupled run, swap cost on vs off --------------
+    println!("16 ranks x 8 timesteps on the shared RDU pool (model-affinity):\n");
+    for (label, swap_s) in [("swaps free", 0.0), ("swap 2 ms", 2e-3)] {
+        let cfg = CogSimConfig {
+            ranks: 16,
+            timesteps: 8,
+            swap_s,
+            ..Default::default()
+        };
+        let mut sim = CogSim::new(pool(), Policy::ModelAffinity, cfg);
+        sim.run_to_completion();
+        let s = sim.summary();
+        println!(
+            "{label:<12} TTS {:>8.2} ms  (compute {:.2} / queue {:.2} / swap {:.2} / \
+             net {:.2} / service {:.2} ms, {} swaps)",
+            s.time_to_solution_s * 1e3,
+            s.total_compute_s * 1e3,
+            s.total_queue_s * 1e3,
+            s.total_swap_s * 1e3,
+            s.total_network_s * 1e3,
+            s.total_service_s * 1e3,
+            s.swaps
+        );
+        println!("             per-step critical path (ms):");
+        for st in s.steps.iter().take(3) {
+            println!(
+                "               step {}: dur {:.3} = compute {:.3} + queue {:.3} + swap {:.3} \
+                 + net {:.3} + service {:.3}  (straggler rank {}, spread {:.3})",
+                st.step,
+                st.duration_s() * 1e3,
+                st.compute_s * 1e3,
+                st.queue_s * 1e3,
+                st.swap_s * 1e3,
+                st.network_s * 1e3,
+                st.service_s * 1e3,
+                st.straggler,
+                st.spread_s * 1e3
+            );
+        }
+    }
+
+    // ---- part 2: the full cogsim campaign --------------------------
+    let cfg = CogCampaignConfig::default();
+    let result = run_cog_campaign(&cfg);
+    println!();
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+    let path = "results/cogsim_sweep.json";
+    std::fs::create_dir_all("results").expect("mkdir results");
+    std::fs::write(path, json::write(&result.to_json())).expect("write json");
+    println!("wrote {path}");
+}

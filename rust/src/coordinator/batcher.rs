@@ -128,9 +128,22 @@ impl DynamicBatcher {
         self.queued_samples.values().sum()
     }
 
-    /// Is any queue ready at `now`?
+    /// Is any queue ready at `now`?  A queue whose deadline equals
+    /// `now` *exactly* counts as ready (`now >= deadline`) — virtual
+    /// -time callers schedule wake-ups at the precise deadline instant
+    /// and rely on this boundary.
     pub fn has_ready(&self, now: Instant) -> bool {
         self.queues.iter().any(|(inst, q)| self.queue_ready(inst, q, now))
+    }
+
+    /// Is any queue ready on the **size trigger alone** (a full batch
+    /// can dispatch without consulting any deadline)?  Event-driven
+    /// callers use this on the arrival path so that a queue whose
+    /// deadline expires at the very instant new requests arrive is
+    /// *not* closed mid-burst — the deadline wake-up (ordered after
+    /// all same-instant arrivals) closes it with everyone aboard.
+    pub fn has_size_ready(&self) -> bool {
+        self.queues.iter().any(|(inst, q)| self.queue_size_ready(inst, q))
     }
 
     /// A queue's earliest deadline: each request expires `wait_for`
@@ -140,11 +153,12 @@ impl DynamicBatcher {
         q.iter().map(|r| r.arrived + self.config.wait_for(r.priority)).min()
     }
 
+    fn queue_size_ready(&self, instance: &str, q: &VecDeque<PendingRequest>) -> bool {
+        !q.is_empty() && self.queued(instance) >= self.config.target_batch
+    }
+
     fn queue_ready(&self, instance: &str, q: &VecDeque<PendingRequest>, now: Instant) -> bool {
-        if q.is_empty() {
-            return false;
-        }
-        if self.queued(instance) >= self.config.target_batch {
+        if self.queue_size_ready(instance, q) {
             return true;
         }
         self.queue_deadline(q).is_some_and(|d| now >= d)
@@ -166,19 +180,34 @@ impl DynamicBatcher {
     /// whole requests up to `max_batch` samples; remaining requests
     /// stay queued with their original arrival times.
     pub fn drain_ready(&mut self, now: Instant) -> Vec<Batch> {
-        let mut ready: Vec<(bool, String)> = self
+        self.drain_picked(Some(now))
+    }
+
+    /// Drain only the size-ready queues (see [`Self::has_size_ready`]);
+    /// deadline-expired queues stay put for their scheduled wake-up.
+    pub fn drain_size_ready(&mut self) -> Vec<Batch> {
+        self.drain_picked(None)
+    }
+
+    /// `now = Some(_)`: full readiness (size or deadline);
+    /// `now = None`: size trigger only.
+    fn drain_picked(&mut self, now: Option<Instant>) -> Vec<Batch> {
+        let mut picked: Vec<(bool, String)> = self
             .queues
             .iter()
-            .filter(|(inst, q)| self.queue_ready(inst, q, now))
+            .filter(|(inst, q)| match now {
+                Some(n) => self.queue_ready(inst, q, n),
+                None => self.queue_size_ready(inst, q),
+            })
             .map(|(inst, q)| {
                 let has_critical =
                     q.iter().any(|r| r.priority == Priority::Critical);
                 (!has_critical, inst.clone()) // false < true: critical first
             })
             .collect();
-        ready.sort();
+        picked.sort();
 
-        ready
+        picked
             .into_iter()
             .map(|(_, instance)| self.drain_instance(&instance))
             .collect()
@@ -405,6 +434,58 @@ mod tests {
         let batches = b.drain_ready(t0);
         assert_eq!(batches[0].instance, "z_critical");
         assert_eq!(batches[1].instance, "a_deferred");
+    }
+
+    #[test]
+    fn ready_exactly_at_the_deadline_instant() {
+        // Regression: virtual-time callers (eventsim/cogsim) schedule
+        // wake-ups at the *precise* deadline instant; `now == deadline`
+        // must count as expired, one nanosecond earlier must not.
+        let t0 = Instant::now();
+        let mut b = batcher(1024, 100);
+        b.enqueue("m", req(1, 2, t0));
+        let deadline = t0 + Duration::from_micros(100);
+        assert!(!b.has_ready(deadline - Duration::from_nanos(1)));
+        assert!(b.has_ready(deadline));
+        assert_eq!(b.drain_ready(deadline).len(), 1);
+    }
+
+    #[test]
+    fn equal_deadlines_across_queues_drain_together_in_name_order() {
+        // Two instances whose deadlines coincide exactly: one drain
+        // call at that instant takes both, ordered by instance name.
+        let t0 = Instant::now();
+        let mut b = batcher(1024, 100);
+        b.enqueue("z", req(1, 2, t0));
+        b.enqueue("a", req(2, 2, t0));
+        let deadline = t0 + Duration::from_micros(100);
+        assert_eq!(b.next_deadline(t0), Some(deadline));
+        let batches = b.drain_ready(deadline);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].instance, "a");
+        assert_eq!(batches[1].instance, "z");
+        assert_eq!(b.queued_total(), 0);
+    }
+
+    #[test]
+    fn size_ready_ignores_expired_deadlines() {
+        // The arrival-path drain: a deadline-expired queue is NOT
+        // size-ready; a target-full queue is, regardless of time.
+        let t0 = Instant::now();
+        let mut b = batcher(8, 100);
+        b.enqueue("expired", req(1, 2, t0));
+        let late = t0 + Duration::from_millis(5);
+        assert!(b.has_ready(late), "deadline long past");
+        assert!(!b.has_size_ready(), "2 < 8 samples: not size-ready");
+        assert!(b.drain_size_ready().is_empty());
+        assert_eq!(b.queued("expired"), 2, "stays for its wake-up");
+
+        b.enqueue("full", req(2, 8, late));
+        assert!(b.has_size_ready());
+        let batches = b.drain_size_ready();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].instance, "full");
+        assert_eq!(b.queued("expired"), 2, "expired queue untouched");
     }
 
     #[test]

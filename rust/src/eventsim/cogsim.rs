@@ -1,0 +1,944 @@
+//! The coupled CogSim application model: inference **inside** the
+//! timestep loop.
+//!
+//! The open-/closed-loop arrival processes of [`super::EventSim`]
+//! drive request streams that are decoupled from simulation progress,
+//! so they can report latency distributions but not the paper's real
+//! figure of merit — **time-to-solution** (§IV: "the time spent
+//! performing inference … directly impacts total simulation time").
+//! This module closes the loop:
+//!
+//! * **N ranks** run **T bulk-synchronous timesteps**.  Every step,
+//!   each rank performs `compute_s` of physics, emits `K`
+//!   per-material inference requests (each tagged with one of `M`
+//!   target models drawn from the rank's mix, plus an optional MIR
+//!   mixed-zone request every `mir_every`-th step), and may only
+//!   advance once **all** of them complete.  A barrier holds the next
+//!   step until the slowest rank is done — one straggling rank stalls
+//!   the whole machine, the paper's in-the-loop SLO.
+//! * **Overlap**: `overlap ∈ [0, 1]` is the fraction of the physics
+//!   compute the rank can keep doing *while* its inference requests
+//!   are in flight (requests are emitted `(1-overlap)·compute_s` into
+//!   the step; the rank finishes at
+//!   `max(compute done, last completion)`).  `overlap = 0` is the
+//!   fully serial coupling, `overlap = 1` hides inference entirely
+//!   behind compute when the fleet keeps up.
+//! * **Model residency**: each backend holds at most
+//!   `residency_slots` models (LRU).  Dispatching a batch for a model
+//!   the backend does not currently hold charges `swap_s` seconds to
+//!   both the requester and the backend's queue — the cost of
+//!   swapping weights onto a shared accelerator, and the regime where
+//!   [`Policy::ModelAffinity`] routing finally earns its keep over
+//!   state-blind policies.
+//! * **Critical path**: every step records a
+//!   [`StepBreakdown`] — compute / queue / swap / network / service
+//!   along the straggler rank's longest chain, summing to the step
+//!   duration — so `time_to_solution` decomposes into *where the time
+//!   went* ([`CogSummary`]).
+//!
+//! Routing, queueing, link, and batching semantics are **identical**
+//! to [`super::EventSim`] (same [`policy::select`], same
+//! [`Backend`] occupancy accounting, same shared
+//! [`super::BatchStage`]), so in the contention-free limit
+//! (1 rank, 1 model, zero swap, zero overlap, batching off) each
+//! timestep degrades to `compute_s` plus the analytic
+//! [`crate::cluster::Cluster`] latency for the same K requests —
+//! `rust/tests/cogsim_vs_analytic.rs` pins that to 1e-9.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{policy, Backend, Policy};
+use crate::devices::{profiles, ModelProfile};
+use crate::util::rng::Rng;
+use crate::workload::HydraWorkload;
+
+use super::equeue::{EventQueue, CLASS_ARRIVAL, CLASS_COMPLETION, CLASS_DEADLINE};
+use super::metrics::{CogSummary, LatencyDist, StepBreakdown};
+use super::{BatchStage, Batching};
+
+/// One coupled run's knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CogSimConfig {
+    /// MPI ranks advancing in lockstep.
+    pub ranks: usize,
+    /// Bulk-synchronous timesteps to run.
+    pub timesteps: usize,
+    /// Physics compute per rank per timestep, seconds.
+    pub compute_s: f64,
+    /// Per-rank uniform compute jitter in `[0, jitter)` seconds
+    /// (load imbalance; 0 = perfectly balanced ranks).
+    pub compute_jitter_s: f64,
+    /// In-the-loop inference requests per rank per timestep (K).
+    pub requests_per_step: usize,
+    /// Target models in the mix (M per-material Hermit instances);
+    /// each request draws one uniformly.
+    pub models: usize,
+    /// Samples per request, uniform inclusive (paper: 2–3 per zone).
+    pub samples_per_request: (usize, usize),
+    /// Every `mir_every`-th step each rank also emits one MIR
+    /// mixed-zone request (0 = never).
+    pub mir_every: usize,
+    /// Samples in each MIR request.
+    pub mir_samples: usize,
+    /// Fraction of compute overlappable with in-flight inference.
+    pub overlap: f64,
+    /// Seconds charged when a backend serves a model it doesn't hold.
+    pub swap_s: f64,
+    /// Models resident per backend (LRU eviction).
+    pub residency_slots: usize,
+    pub batching: Batching,
+    pub seed: u64,
+}
+
+impl Default for CogSimConfig {
+    fn default() -> Self {
+        CogSimConfig {
+            ranks: 4,
+            timesteps: 8,
+            compute_s: 2e-3,
+            compute_jitter_s: 0.0,
+            requests_per_step: 6,
+            models: 8,
+            samples_per_request: (2, 3),
+            mir_every: 0,
+            mir_samples: 512,
+            overlap: 0.0,
+            swap_s: 0.0,
+            residency_slots: 4,
+            batching: Batching::Off,
+            seed: 42,
+        }
+    }
+}
+
+/// The full story of one completed in-the-loop request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CogRecord {
+    pub id: u64,
+    /// Timestep the request belongs to.
+    pub step: usize,
+    pub rank: usize,
+    pub model: String,
+    pub samples: usize,
+    /// When the rank emitted the request.
+    pub emit_s: f64,
+    /// When the router dispatched the (possibly coalesced) batch.
+    pub dispatch_s: f64,
+    /// When the result returned to the rank.
+    pub complete_s: f64,
+    /// Backend index the batch was routed to.
+    pub backend: usize,
+    /// Total samples in the dispatched batch this request rode in.
+    pub batch_samples: usize,
+    /// Backend queue the batch waited behind, seconds.
+    pub wait_s: f64,
+    /// Residency-swap charge paid by the batch, seconds.
+    pub swap_s: f64,
+    /// Link round-trip share of the service, seconds.
+    pub link_s: f64,
+    /// Device execution share of the service, seconds.
+    pub exec_s: f64,
+}
+
+impl CogRecord {
+    /// End-to-end latency as the rank observes it.
+    pub fn latency_s(&self) -> f64 {
+        self.complete_s - self.emit_s
+    }
+
+    /// Time spent coalescing in the batching window.
+    pub fn batch_wait_s(&self) -> f64 {
+        self.dispatch_s - self.emit_s
+    }
+}
+
+/// Per-backend LRU model residency (most recently used last).
+#[derive(Debug, Clone, Default)]
+struct Residency {
+    slots: usize,
+    held: Vec<String>,
+}
+
+impl Residency {
+    fn new(slots: usize) -> Residency {
+        Residency { slots, held: Vec::new() }
+    }
+
+    /// Record a dispatch of `model`; returns true on a residency
+    /// miss (the swap is charged), false on a hit.
+    fn touch(&mut self, model: &str) -> bool {
+        if let Some(pos) = self.held.iter().position(|m| m == model) {
+            let m = self.held.remove(pos);
+            self.held.push(m);
+            return false;
+        }
+        self.held.push(model.to_string());
+        if self.held.len() > self.slots {
+            self.held.remove(0);
+        }
+        true
+    }
+}
+
+#[derive(Debug, Clone)]
+struct PendingMeta {
+    step: usize,
+    rank: usize,
+    model: String,
+    samples: usize,
+    emit_s: f64,
+    /// Index into `records` once the batch carrying it dispatched.
+    record: Option<usize>,
+}
+
+/// Per-rank progress through the current timestep.
+#[derive(Debug, Clone)]
+struct RankState {
+    /// When this rank's physics compute ends.
+    compute_end_s: f64,
+    /// When this rank emits its inference burst.
+    emit_s: f64,
+    /// Requests still in flight this step.
+    outstanding: usize,
+    compute_done: bool,
+    finished: bool,
+    finish_s: f64,
+    /// Record index of the rank's latest completion this step.
+    last_record: Option<usize>,
+}
+
+impl RankState {
+    fn idle() -> RankState {
+        RankState {
+            compute_end_s: 0.0,
+            emit_s: 0.0,
+            outstanding: 0,
+            compute_done: false,
+            finished: false,
+            finish_s: 0.0,
+            last_record: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Event {
+    /// Barrier release: all ranks begin timestep `step`.
+    StepStart { step: usize },
+    /// One request entering the router.
+    Arrival { rank: usize, model: String, samples: usize },
+    /// A rank's physics compute for the current step finished.
+    ComputeDone { rank: usize },
+    /// Re-check the batcher's deadline-ready queues.
+    BatchDeadline,
+    /// A dispatched batch finished; ids index the request metadata.
+    Completion { ids: Vec<usize> },
+}
+
+/// The coupled engine: backends + policy + residency + barrier.
+pub struct CogSim {
+    cfg: CogSimConfig,
+    backends: Vec<Box<dyn Backend>>,
+    policy: Policy,
+    hermit_tier: Vec<usize>,
+    mir_tier: Vec<usize>,
+    hermit_profile: ModelProfile,
+    mir_profile: ModelProfile,
+    rr_cursor: usize,
+    affinity: BTreeMap<String, usize>,
+    residency: Vec<Residency>,
+    clock_s: f64,
+    events: EventQueue<Event>,
+    batcher: Option<BatchStage>,
+    rngs: Vec<Rng>,
+    ranks: Vec<RankState>,
+    step_start_s: f64,
+    current_step: usize,
+    finished_ranks: usize,
+    pending: Vec<PendingMeta>,
+    records: Vec<CogRecord>,
+    steps: Vec<StepBreakdown>,
+    submitted: u64,
+    dispatched: u64,
+    completed: u64,
+    batches: u64,
+    swaps: u64,
+    swap_time_s: f64,
+}
+
+impl CogSim {
+    /// All backends serve all model classes.
+    pub fn new(backends: Vec<Box<dyn Backend>>, policy: Policy, cfg: CogSimConfig) -> CogSim {
+        let all: Vec<usize> = (0..backends.len()).collect();
+        Self::with_tiers(backends, policy, cfg, all.clone(), all)
+    }
+
+    /// Tiered fleet: `hermit_tier`/`mir_tier` are candidate backend
+    /// indices per model class (the hybrid topology pins MIR to local
+    /// GPUs and the Hermit ladder to the remote pool).
+    pub fn with_tiers(
+        backends: Vec<Box<dyn Backend>>,
+        policy: Policy,
+        cfg: CogSimConfig,
+        hermit_tier: Vec<usize>,
+        mir_tier: Vec<usize>,
+    ) -> CogSim {
+        assert!(!backends.is_empty(), "cogsim needs at least one backend");
+        assert!(cfg.ranks >= 1 && cfg.timesteps >= 1);
+        assert!(cfg.requests_per_step >= 1 && cfg.models >= 1);
+        assert!(cfg.compute_s >= 0.0 && cfg.compute_s.is_finite());
+        assert!(cfg.compute_jitter_s >= 0.0 && cfg.compute_jitter_s.is_finite());
+        assert!(cfg.samples_per_request.0 >= 1);
+        assert!(cfg.samples_per_request.0 <= cfg.samples_per_request.1);
+        assert!((0.0..=1.0).contains(&cfg.overlap), "overlap must be in [0, 1]");
+        assert!(cfg.swap_s >= 0.0 && cfg.swap_s.is_finite());
+        assert!(cfg.residency_slots >= 1);
+        assert!(!hermit_tier.is_empty(), "hermit tier must not be empty");
+        assert!(
+            cfg.mir_every == 0 || !mir_tier.is_empty(),
+            "mir_every > 0 needs a non-empty mir tier"
+        );
+        assert!(hermit_tier.iter().chain(&mir_tier).all(|&i| i < backends.len()));
+
+        let batcher = BatchStage::from_config(cfg.batching);
+        let rngs = (0..cfg.ranks)
+            .map(|r| Rng::new(cfg.seed ^ (r as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)))
+            .collect();
+        let residency = backends.iter().map(|_| Residency::new(cfg.residency_slots)).collect();
+
+        let mut sim = CogSim {
+            cfg,
+            backends,
+            policy,
+            hermit_tier,
+            mir_tier,
+            hermit_profile: profiles::hermit(),
+            mir_profile: profiles::mir_noln(),
+            rr_cursor: 0,
+            affinity: BTreeMap::new(),
+            residency,
+            clock_s: 0.0,
+            events: EventQueue::new(),
+            batcher,
+            rngs,
+            ranks: (0..cfg.ranks).map(|_| RankState::idle()).collect(),
+            step_start_s: 0.0,
+            current_step: 0,
+            finished_ranks: 0,
+            pending: Vec::new(),
+            records: Vec::new(),
+            steps: Vec::new(),
+            submitted: 0,
+            dispatched: 0,
+            completed: 0,
+            batches: 0,
+            swaps: 0,
+            swap_time_s: 0.0,
+        };
+        sim.events.push_class(0.0, CLASS_ARRIVAL, Event::StepStart { step: 0 });
+        sim
+    }
+
+    // ------------------------------------------------------ run loop
+
+    fn pump(&mut self) -> bool {
+        let Some((t, event)) = self.events.pop() else {
+            return false;
+        };
+        self.advance_clock(t);
+        self.handle(event);
+        true
+    }
+
+    /// Drain the event queue completely: all T timesteps of all N
+    /// ranks run to their final barrier.
+    pub fn run_to_completion(&mut self) {
+        while self.pump() {}
+    }
+
+    fn advance_clock(&mut self, t_s: f64) {
+        let dt = t_s - self.clock_s;
+        if dt <= 0.0 {
+            return;
+        }
+        for b in &mut self.backends {
+            b.drain_queue_s(dt);
+        }
+        self.clock_s = t_s;
+    }
+
+    fn handle(&mut self, event: Event) {
+        match event {
+            Event::StepStart { step } => self.on_step_start(step),
+            Event::Arrival { rank, model, samples } => self.on_request(rank, model, samples),
+            Event::ComputeDone { rank } => self.on_compute_done(rank),
+            Event::BatchDeadline => self.pump_batcher(),
+            Event::Completion { ids } => self.on_completion(ids),
+        }
+    }
+
+    // ------------------------------------------------- timestep loop
+
+    /// Barrier release: every rank starts its physics compute, and
+    /// this step's inference burst is scheduled at each rank's
+    /// emission point.  Request draws happen here, in rank order, so
+    /// a rank's stream is independent of the total rank count.
+    fn on_step_start(&mut self, step: usize) {
+        self.step_start_s = self.clock_s;
+        self.current_step = step;
+        self.finished_ranks = 0;
+        let (lo, hi) = self.cfg.samples_per_request;
+        for rank in 0..self.cfg.ranks {
+            let jitter = if self.cfg.compute_jitter_s > 0.0 {
+                self.rngs[rank].uniform(0.0, self.cfg.compute_jitter_s)
+            } else {
+                0.0
+            };
+            let compute = self.cfg.compute_s + jitter;
+            let emit_s = self.clock_s + (1.0 - self.cfg.overlap) * compute;
+            let compute_end_s = self.clock_s + compute;
+            let mut outstanding = 0usize;
+            for _ in 0..self.cfg.requests_per_step {
+                let model = HydraWorkload::material_model(self.rngs[rank].below(self.cfg.models));
+                let samples = self.rngs[rank].range(lo, hi);
+                self.events.push_class(emit_s, CLASS_ARRIVAL, Event::Arrival {
+                    rank,
+                    model,
+                    samples,
+                });
+                outstanding += 1;
+            }
+            if self.cfg.mir_every > 0 && step % self.cfg.mir_every == 0 {
+                self.events.push_class(emit_s, CLASS_ARRIVAL, Event::Arrival {
+                    rank,
+                    model: "mir".to_string(),
+                    samples: self.cfg.mir_samples,
+                });
+                outstanding += 1;
+            }
+            self.ranks[rank] = RankState {
+                compute_end_s,
+                emit_s,
+                outstanding,
+                compute_done: false,
+                finished: false,
+                finish_s: 0.0,
+                last_record: None,
+            };
+            self.events.push_class(compute_end_s, CLASS_ARRIVAL, Event::ComputeDone { rank });
+        }
+    }
+
+    fn on_compute_done(&mut self, rank: usize) {
+        self.ranks[rank].compute_done = true;
+        self.try_finish(rank);
+    }
+
+    fn try_finish(&mut self, rank: usize) {
+        let st = &mut self.ranks[rank];
+        if st.finished || !st.compute_done || st.outstanding > 0 {
+            return;
+        }
+        st.finished = true;
+        st.finish_s = self.clock_s;
+        self.finished_ranks += 1;
+        if self.finished_ranks == self.cfg.ranks {
+            self.end_step();
+        }
+    }
+
+    /// All ranks reached the barrier: record the step's critical-path
+    /// breakdown and release the next step (at this very instant —
+    /// the barrier itself is free).
+    fn end_step(&mut self) {
+        let start = self.step_start_s;
+        let end = self.clock_s;
+        let step = self.current_step;
+        let mut straggler = 0usize;
+        for r in 1..self.cfg.ranks {
+            if self.ranks[r].finish_s > self.ranks[straggler].finish_s {
+                straggler = r;
+            }
+        }
+        let min_finish =
+            self.ranks.iter().map(|r| r.finish_s).fold(f64::INFINITY, f64::min);
+        let st = &self.ranks[straggler];
+        // Compute-bound: the straggler's physics outlasted its last
+        // completion (or it had nothing in flight), so the whole step
+        // is compute.  Otherwise the chain is: non-overlapped compute
+        // until emission, then the critical (= last-completing)
+        // request's batching wait, backend queue, swap, link, execute.
+        let compute_bound = match st.last_record {
+            None => true,
+            Some(idx) => self.records[idx].complete_s <= st.compute_end_s,
+        };
+        let breakdown = if compute_bound {
+            StepBreakdown {
+                step,
+                start_s: start,
+                end_s: end,
+                straggler,
+                compute_s: end - start,
+                queue_s: 0.0,
+                swap_s: 0.0,
+                network_s: 0.0,
+                service_s: 0.0,
+                spread_s: end - min_finish,
+            }
+        } else {
+            let crit = &self.records[st.last_record.expect("inference-bound step has a record")];
+            StepBreakdown {
+                step,
+                start_s: start,
+                end_s: end,
+                straggler,
+                compute_s: crit.emit_s - start,
+                queue_s: (crit.dispatch_s - crit.emit_s) + crit.wait_s,
+                swap_s: crit.swap_s,
+                network_s: crit.link_s,
+                service_s: crit.exec_s,
+                spread_s: end - min_finish,
+            }
+        };
+        self.steps.push(breakdown);
+        let next = step + 1;
+        if next < self.cfg.timesteps {
+            self.events.push_class(self.clock_s, CLASS_ARRIVAL, Event::StepStart { step: next });
+        }
+    }
+
+    // ------------------------------------------------------- routing
+
+    fn on_request(&mut self, rank: usize, model: String, samples: usize) {
+        self.submitted += 1;
+        let id = self.pending.len();
+        self.pending.push(PendingMeta {
+            step: self.current_step,
+            rank,
+            model: model.clone(),
+            samples,
+            emit_s: self.clock_s,
+            record: None,
+        });
+        if self.batcher.is_some() {
+            let stage = self.batcher.as_mut().unwrap();
+            stage.enqueue(&model, id as u64, samples, self.clock_s);
+            // Arrival path: dispatch only queues the *size* trigger
+            // filled; deadline-expired queues close via their wake-up,
+            // after every same-instant arrival (see
+            // [`super::BatchStage`]).
+            let ready = stage.drain_size_ready();
+            self.dispatch_batches(ready);
+            self.arm_batch_wakeup();
+        } else {
+            self.dispatch(vec![id]);
+        }
+    }
+
+    fn dispatch_batches(&mut self, batches: Vec<Vec<usize>>) {
+        for ids in batches {
+            self.dispatch(ids);
+        }
+    }
+
+    /// Schedule the next batch-close wake-up [`super::BatchStage`]
+    /// asks for.
+    fn arm_batch_wakeup(&mut self) {
+        if let Some(t) = self.batcher.as_ref().unwrap().wakeup_at(self.clock_s) {
+            self.events.push_class(t, CLASS_DEADLINE, Event::BatchDeadline);
+        }
+    }
+
+    /// Deadline wake-up: drain every ready batcher queue at the
+    /// current virtual time, then arm the next future deadline.
+    fn pump_batcher(&mut self) {
+        let ready = self.batcher.as_mut().unwrap().drain_ready(self.clock_s);
+        self.dispatch_batches(ready);
+        self.arm_batch_wakeup();
+    }
+
+    /// Route one batch exactly as the analytic cluster would — policy
+    /// selection over the candidate tier, wait behind the backend's
+    /// queued seconds, link + execute — plus the residency stage: a
+    /// backend serving a model it doesn't hold charges `swap_s` to
+    /// the requester *and* occupies the backend for it.
+    fn dispatch(&mut self, ids: Vec<usize>) {
+        debug_assert!(!ids.is_empty());
+        let model = self.pending[ids[0]].model.clone();
+        let total: usize = ids.iter().map(|&i| self.pending[i].samples).sum();
+        let is_mir = model.starts_with("mir");
+        let profile =
+            if is_mir { self.mir_profile.clone() } else { self.hermit_profile.clone() };
+        let candidates: &[usize] = if is_mir { &self.mir_tier } else { &self.hermit_tier };
+        let idx = policy::select(
+            self.policy,
+            &self.backends,
+            &mut self.rr_cursor,
+            &mut self.affinity,
+            candidates,
+            &model,
+            &profile,
+            total,
+        );
+        let miss = self.residency[idx].touch(&model);
+        let swap_s = if miss { self.cfg.swap_s } else { 0.0 };
+        if miss {
+            self.swaps += 1;
+            self.swap_time_s += swap_s;
+        }
+        let backend = &mut self.backends[idx];
+        let wait_s = backend.queue_s();
+        let link_s = backend.link_overhead_s(&profile, total);
+        let exec_s = backend.execute_s(&profile, total);
+        let latency_s = wait_s + swap_s + (link_s + exec_s);
+        let occupancy = backend.occupancy_s(&profile, total) + swap_s;
+        backend.add_queue_s(occupancy);
+
+        let complete_s = self.clock_s + latency_s;
+        for &id in &ids {
+            let meta = &mut self.pending[id];
+            meta.record = Some(self.records.len());
+            let record = CogRecord {
+                id: id as u64,
+                step: meta.step,
+                rank: meta.rank,
+                model: meta.model.clone(),
+                samples: meta.samples,
+                emit_s: meta.emit_s,
+                dispatch_s: self.clock_s,
+                complete_s,
+                backend: idx,
+                batch_samples: total,
+                wait_s,
+                swap_s,
+                link_s,
+                exec_s,
+            };
+            self.records.push(record);
+        }
+        self.dispatched += ids.len() as u64;
+        self.batches += 1;
+        self.events.push_class(complete_s, CLASS_COMPLETION, Event::Completion { ids });
+    }
+
+    fn on_completion(&mut self, ids: Vec<usize>) {
+        self.completed += ids.len() as u64;
+        for &id in &ids {
+            let rank = self.pending[id].rank;
+            let record = self.pending[id].record;
+            let st = &mut self.ranks[rank];
+            debug_assert!(st.outstanding > 0, "completion for an idle rank");
+            st.outstanding -= 1;
+            // completions pop in time order, so the last one processed
+            // is the rank's latest (ties: latest dispatched wins —
+            // deterministic)
+            st.last_record = record;
+            self.try_finish(rank);
+        }
+    }
+
+    // ----------------------------------------------------- accessors
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Requests that have entered the router.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Requests whose completion event has fired.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Dispatched but not yet completed.
+    pub fn in_flight(&self) -> u64 {
+        self.dispatched - self.completed
+    }
+
+    /// Requests waiting in the batching window.
+    pub fn batcher_pending(&self) -> u64 {
+        self.batcher.as_ref().map_or(0, BatchStage::pending)
+    }
+
+    /// Batches dispatched so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Residency misses so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Per-request records, in dispatch order.
+    pub fn records(&self) -> &[CogRecord] {
+        &self.records
+    }
+
+    /// Completed per-timestep breakdowns, in step order.
+    pub fn steps(&self) -> &[StepBreakdown] {
+        &self.steps
+    }
+
+    /// Virtual time of the last barrier (defined after
+    /// [`Self::run_to_completion`]).
+    pub fn time_to_solution_s(&self) -> f64 {
+        self.steps.last().map_or(0.0, |s| s.end_s)
+    }
+
+    /// Summarise the run (intended after [`Self::run_to_completion`]).
+    pub fn summary(&self) -> CogSummary {
+        let latencies: Vec<f64> = self.records.iter().map(|r| r.latency_s()).collect();
+        let samples: u64 = self.records.iter().map(|r| r.samples as u64).sum();
+        let mut straggler_counts = vec![0u64; self.cfg.ranks];
+        let mut total_compute_s = 0.0;
+        let mut total_queue_s = 0.0;
+        let mut total_swap_s = 0.0;
+        let mut total_network_s = 0.0;
+        let mut total_service_s = 0.0;
+        let mut max_spread_s = 0.0f64;
+        for s in &self.steps {
+            straggler_counts[s.straggler] += 1;
+            total_compute_s += s.compute_s;
+            total_queue_s += s.queue_s;
+            total_swap_s += s.swap_s;
+            total_network_s += s.network_s;
+            total_service_s += s.service_s;
+            max_spread_s = max_spread_s.max(s.spread_s);
+        }
+        let tts = self.time_to_solution_s();
+        CogSummary {
+            ranks: self.cfg.ranks as u64,
+            timesteps: self.steps.len() as u64,
+            requests: self.records.len() as u64,
+            samples,
+            batches: self.batches,
+            time_to_solution_s: tts,
+            steps: self.steps.clone(),
+            total_compute_s,
+            total_queue_s,
+            total_swap_s,
+            total_network_s,
+            total_service_s,
+            latency: LatencyDist::from_latencies(&latencies),
+            swaps: self.swaps,
+            swap_time_s: self.swap_time_s,
+            straggler_counts,
+            max_spread_s,
+            mean_step_s: if self.steps.is_empty() {
+                0.0
+            } else {
+                tts / self.steps.len() as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuBackend, RduBackend};
+    use crate::devices::{Api, Gpu};
+    use crate::rdu::RduApi;
+
+    fn gpu_fleet(n: usize) -> Vec<Box<dyn Backend>> {
+        (0..n)
+            .map(|i| {
+                Box::new(GpuBackend::node_local(
+                    format!("gpu/rank{i}"),
+                    Gpu::a100(),
+                    Api::TrtCudaGraphs,
+                )) as Box<dyn Backend>
+            })
+            .collect()
+    }
+
+    fn pool() -> Vec<Box<dyn Backend>> {
+        vec![
+            Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+            Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+        ]
+    }
+
+    #[test]
+    fn lru_residency_touch_semantics() {
+        let mut r = Residency::new(2);
+        assert!(r.touch("a")); // miss: first sighting
+        assert!(r.touch("b"));
+        assert!(!r.touch("a")); // hit, refreshes a
+        assert!(r.touch("c")); // evicts b (LRU)
+        assert!(r.touch("b")); // b gone: miss again
+        assert!(!r.touch("c")); // c survived (a was evicted by b)
+    }
+
+    #[test]
+    fn coupled_run_completes_every_step_and_request() {
+        let cfg = CogSimConfig { ranks: 6, timesteps: 5, ..Default::default() };
+        let mut sim = CogSim::new(pool(), Policy::LeastOutstanding, cfg);
+        sim.run_to_completion();
+        assert_eq!(sim.steps().len(), 5);
+        assert_eq!(sim.submitted(), 6 * 5 * 6);
+        assert_eq!(sim.completed(), sim.submitted());
+        assert_eq!(sim.in_flight(), 0);
+        assert_eq!(sim.batcher_pending(), 0);
+        assert_eq!(sim.records().len() as u64, sim.submitted());
+        assert!(sim.time_to_solution_s() > 0.0);
+        // steps tile the run: each starts where the previous ended
+        for pair in sim.steps().windows(2) {
+            assert_eq!(pair[0].end_s, pair[1].start_s);
+        }
+    }
+
+    #[test]
+    fn per_step_breakdown_sums_to_duration() {
+        let cfg = CogSimConfig {
+            ranks: 8,
+            timesteps: 6,
+            swap_s: 100e-6,
+            compute_jitter_s: 0.5e-3,
+            ..Default::default()
+        };
+        let mut sim = CogSim::new(pool(), Policy::RoundRobin, cfg);
+        sim.run_to_completion();
+        for s in sim.steps() {
+            assert!(
+                (s.components_sum_s() - s.duration_s()).abs() < 1e-9,
+                "step {}: components {} vs duration {}",
+                s.step,
+                s.components_sum_s(),
+                s.duration_s()
+            );
+            assert!(s.spread_s >= 0.0);
+            assert!(s.straggler < 8);
+        }
+    }
+
+    #[test]
+    fn compute_bound_steps_are_pure_compute() {
+        // Overlap 1.0 with enormous compute: inference hides entirely,
+        // every step is compute-bound and exactly compute_s long.
+        let cfg = CogSimConfig {
+            ranks: 2,
+            timesteps: 3,
+            compute_s: 1.0,
+            overlap: 1.0,
+            ..Default::default()
+        };
+        let mut sim = CogSim::new(gpu_fleet(2), Policy::LatencyAware, cfg);
+        sim.run_to_completion();
+        for s in sim.steps() {
+            assert!((s.duration_s() - 1.0).abs() < 1e-12, "step {}", s.step);
+            assert_eq!(s.queue_s, 0.0);
+            assert_eq!(s.service_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn swap_cost_slows_time_to_solution() {
+        let tts = |swap_s: f64| {
+            let cfg = CogSimConfig { swap_s, ..Default::default() };
+            let mut sim = CogSim::new(pool(), Policy::RoundRobin, cfg);
+            sim.run_to_completion();
+            sim.time_to_solution_s()
+        };
+        let free = tts(0.0);
+        let costly = tts(1e-3);
+        assert!(costly > free, "swap 1ms {costly} vs free {free}");
+    }
+
+    #[test]
+    fn residency_hits_need_no_swap() {
+        // One model, one backend: exactly one miss ever.
+        let cfg = CogSimConfig { models: 1, swap_s: 1e-3, ..Default::default() };
+        let mut sim = CogSim::new(gpu_fleet(1), Policy::RoundRobin, cfg);
+        sim.run_to_completion();
+        assert_eq!(sim.swaps(), 1);
+        let with_swap: Vec<&CogRecord> =
+            sim.records().iter().filter(|r| r.swap_s > 0.0).collect();
+        assert_eq!(with_swap.len(), 1, "only the first dispatch pays");
+    }
+
+    #[test]
+    fn overlap_hides_inference_behind_compute() {
+        let tts = |overlap: f64| {
+            let cfg = CogSimConfig { overlap, ..Default::default() };
+            let mut sim = CogSim::new(pool(), Policy::LatencyAware, cfg);
+            sim.run_to_completion();
+            sim.time_to_solution_s()
+        };
+        assert!(tts(1.0) <= tts(0.0) + 1e-12);
+    }
+
+    #[test]
+    fn mir_requests_ride_their_tier() {
+        let cfg = CogSimConfig {
+            ranks: 2,
+            timesteps: 4,
+            mir_every: 2,
+            mir_samples: 128,
+            ..Default::default()
+        };
+        let mut fleet = gpu_fleet(2);
+        fleet.extend(pool());
+        let mut sim =
+            CogSim::with_tiers(fleet, Policy::LatencyAware, cfg, vec![2, 3], vec![0, 1]);
+        sim.run_to_completion();
+        assert!(sim.records().iter().any(|r| r.model == "mir"));
+        for r in sim.records() {
+            if r.model.starts_with("mir") {
+                assert!(r.backend < 2, "mir routed to {}", r.backend);
+            } else {
+                assert!(r.backend >= 2, "hermit routed to {}", r.backend);
+            }
+        }
+        // MIR fires on steps 0 and 2: 2 ranks x 2 steps
+        assert_eq!(sim.records().iter().filter(|r| r.model == "mir").count(), 4);
+    }
+
+    #[test]
+    fn batching_window_coalesces_the_step_burst() {
+        let cfg = CogSimConfig {
+            ranks: 16,
+            timesteps: 3,
+            models: 4,
+            batching: Batching::Window { window_s: 200e-6, max_batch: 256 },
+            ..Default::default()
+        };
+        let mut sim = CogSim::new(pool(), Policy::LatencyAware, cfg);
+        sim.run_to_completion();
+        assert_eq!(sim.completed(), sim.submitted());
+        assert!(
+            sim.batches() * 4 <= sim.submitted(),
+            "{} batches for {} requests",
+            sim.batches(),
+            sim.submitted()
+        );
+        assert!(sim.records().iter().any(|r| r.batch_samples > r.samples));
+    }
+
+    #[test]
+    fn summary_accounts_everything() {
+        let cfg = CogSimConfig { ranks: 4, timesteps: 6, swap_s: 50e-6, ..Default::default() };
+        let mut sim = CogSim::new(pool(), Policy::ModelAffinity, cfg);
+        sim.run_to_completion();
+        let s = sim.summary();
+        assert_eq!(s.requests, sim.submitted());
+        assert_eq!(s.timesteps, 6);
+        assert_eq!(s.steps.len(), 6);
+        assert_eq!(s.straggler_counts.iter().sum::<u64>(), 6);
+        assert_eq!(s.swaps, sim.swaps());
+        assert!(s.time_to_solution_s > 0.0);
+        assert!((s.mean_step_s * 6.0 - s.time_to_solution_s).abs() < 1e-9);
+        assert!(s.total_compute_s > 0.0);
+        let hist_total: u64 =
+            s.latency.histogram.iter().map(|(_, c)| c).sum::<u64>() + s.latency.overflow;
+        assert_eq!(hist_total, s.requests);
+    }
+}

@@ -1,16 +1,39 @@
-//! The deterministic event queue: a binary heap of `(time, seq)`
-//! keys.  Virtual time is `f64` seconds ordered by `total_cmp`; the
-//! insertion sequence number breaks ties, so two runs that push the
-//! same events in the same order always pop them in the same order —
-//! the foundation of the engine's byte-stable summaries.
+//! The deterministic event queue: a binary heap of `(time, class,
+//! seq)` keys.  Virtual time is `f64` seconds ordered by `total_cmp`;
+//! the event *class* defines the semantics of simultaneity (at one
+//! instant: completions land, then arrivals enter, then batching
+//! windows close); the insertion sequence number breaks the remaining
+//! ties, so two runs that push the same events in the same order
+//! always pop them in the same order — the foundation of the engine's
+//! byte-stable summaries.
+//!
+//! The class tier exists for one reason: a batch-close deadline and a
+//! request arrival can legitimately share a timestamp (a timestep
+//! period that is a multiple of the batching window lines them up
+//! exactly).  Ordering them by insertion accident would make the
+//! dispatched batch membership depend on *when* the wake-up happened
+//! to be scheduled; ordering arrivals before deadlines pins the
+//! semantics — a request arriving the instant a window expires rides
+//! the closing batch (`rust/tests/eventsim_props.rs`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Heap key: event time, then insertion order.
+/// Same-instant tier: completions first (capacity frees before new
+/// work observes it).
+pub const CLASS_COMPLETION: u8 = 0;
+/// Same-instant tier: arrivals and generator ticks (the default).
+pub const CLASS_ARRIVAL: u8 = 1;
+/// Same-instant tier: batch-close deadlines fire only after every
+/// same-instant arrival has had the chance to join the batch.
+pub const CLASS_DEADLINE: u8 = 2;
+
+/// Heap key: event time, then same-instant class, then insertion
+/// order.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EventKey {
     pub time_s: f64,
+    pub class: u8,
     pub seq: u64,
 }
 
@@ -20,6 +43,7 @@ impl Ord for EventKey {
     fn cmp(&self, other: &Self) -> Ordering {
         self.time_s
             .total_cmp(&other.time_s)
+            .then_with(|| self.class.cmp(&other.class))
             .then_with(|| self.seq.cmp(&other.seq))
     }
 }
@@ -76,10 +100,18 @@ impl<E> EventQueue<E> {
         EventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
-    /// Schedule `event` at `time_s` (must be finite and >= 0).
+    /// Schedule `event` at `time_s` (must be finite and >= 0) in the
+    /// default arrival tier.
     pub fn push(&mut self, time_s: f64, event: E) {
+        self.push_class(time_s, CLASS_ARRIVAL, event);
+    }
+
+    /// Schedule `event` at `time_s` with an explicit same-instant
+    /// class ([`CLASS_COMPLETION`] < [`CLASS_ARRIVAL`] <
+    /// [`CLASS_DEADLINE`]).
+    pub fn push_class(&mut self, time_s: f64, class: u8, event: E) {
         assert!(time_s.is_finite() && time_s >= 0.0, "bad event time {time_s}");
-        let key = EventKey { time_s, seq: self.seq };
+        let key = EventKey { time_s, class, seq: self.seq };
         self.seq += 1;
         self.heap.push(Entry { key, event });
     }
@@ -149,5 +181,34 @@ mod tests {
     fn rejects_nan_times() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn classes_order_same_instant_events() {
+        // Adversarial insertion order: deadline first, then arrival,
+        // then completion, all at t = 1.0 — they must pop by class
+        // (completion, arrival, deadline), not by insertion.
+        let mut q = EventQueue::new();
+        q.push_class(1.0, CLASS_DEADLINE, "deadline");
+        q.push_class(1.0, CLASS_ARRIVAL, "arrival");
+        q.push_class(1.0, CLASS_COMPLETION, "completion");
+        q.push(0.5, "early");
+        let popped: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(popped, vec!["early", "completion", "arrival", "deadline"]);
+    }
+
+    #[test]
+    fn classes_tie_break_by_seq_within_a_class() {
+        let mut q = EventQueue::new();
+        for i in 0..8 {
+            q.push_class(2.0, CLASS_DEADLINE, i);
+        }
+        for i in 8..16 {
+            q.push_class(2.0, CLASS_ARRIVAL, i);
+        }
+        let popped: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        // arrivals (8..16) before deadlines (0..8), each in insertion
+        // order
+        assert_eq!(popped, (8..16).chain(0..8).collect::<Vec<_>>());
     }
 }

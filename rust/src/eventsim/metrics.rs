@@ -55,6 +55,85 @@ impl LatencyDist {
     }
 }
 
+/// Critical-path decomposition of one bulk-synchronous timestep of
+/// the coupled CogSim model ([`crate::eventsim::cogsim`]).  The
+/// components follow the straggler rank's longest chain and sum to
+/// the step duration (`end_s - start_s`) up to float associativity:
+/// non-overlapped compute, then — for the request whose completion
+/// released the rank — batching/backend queueing, model-swap charge,
+/// link round trip, and device execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepBreakdown {
+    pub step: usize,
+    /// Barrier release that started this step, virtual seconds.
+    pub start_s: f64,
+    /// Barrier at which the last rank finished the step.
+    pub end_s: f64,
+    /// Rank whose finish set the barrier (lowest index on ties).
+    pub straggler: usize,
+    /// Non-overlapped physics compute on the critical path.
+    pub compute_s: f64,
+    /// Batching-window wait + backend queue wait of the critical
+    /// request.
+    pub queue_s: f64,
+    /// Model-residency swap charge of the critical request's batch.
+    pub swap_s: f64,
+    /// Link round trip of the critical request's batch.
+    pub network_s: f64,
+    /// Device execution of the critical request's batch.
+    pub service_s: f64,
+    /// Straggler spread: last rank finish minus first rank finish.
+    pub spread_s: f64,
+}
+
+impl StepBreakdown {
+    /// Step wall-clock duration.
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+
+    /// Sum of the critical-path components (equals `duration_s` up to
+    /// float associativity; pinned by `rust/tests/cogsim_props.rs`).
+    pub fn components_sum_s(&self) -> f64 {
+        self.compute_s + self.queue_s + self.swap_s + self.network_s + self.service_s
+    }
+}
+
+/// Everything one coupled CogSim run reports: the paper's figure of
+/// merit (time-to-solution) plus where it went.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CogSummary {
+    pub ranks: u64,
+    pub timesteps: u64,
+    /// Inference requests completed (= N·T·K plus any MIR cadence).
+    pub requests: u64,
+    pub samples: u64,
+    /// Batches dispatched to backends.
+    pub batches: u64,
+    /// Virtual time from t = 0 to the last barrier.
+    pub time_to_solution_s: f64,
+    /// Per-timestep critical-path decomposition, in step order.
+    pub steps: Vec<StepBreakdown>,
+    /// Component totals across all steps (critical path only).
+    pub total_compute_s: f64,
+    pub total_queue_s: f64,
+    pub total_swap_s: f64,
+    pub total_network_s: f64,
+    pub total_service_s: f64,
+    /// Per-request (emit → complete) latency distribution.
+    pub latency: LatencyDist,
+    /// Residency misses across all dispatched batches.
+    pub swaps: u64,
+    /// Seconds charged for those misses.
+    pub swap_time_s: f64,
+    /// How often each rank was the straggler (index = rank).
+    pub straggler_counts: Vec<u64>,
+    /// Largest per-step finish spread across ranks.
+    pub max_spread_s: f64,
+    /// Mean step duration (= time_to_solution / timesteps).
+    pub mean_step_s: f64,
+}
+
 /// Everything one event-sim run reports.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EventSummary {

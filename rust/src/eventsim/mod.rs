@@ -11,9 +11,10 @@
 //! that workload event by event:
 //!
 //! * **events** — a binary-heap [`equeue::EventQueue`] ordered by
-//!   `(virtual time, insertion seq)`: arrivals, batching-window
-//!   deadlines, completions, and the generator events that produce
-//!   the arrival stream;
+//!   `(virtual time, class, insertion seq)` (same-instant semantics:
+//!   completions, then arrivals, then batch-close deadlines):
+//!   arrivals, batching-window deadlines, completions, and the
+//!   generator events that produce the arrival stream;
 //! * **arrivals** — three [`arrival::ArrivalProcess`]es: synchronised
 //!   per-timestep bursts, open-loop Poisson, closed-loop think time;
 //! * **batching** — an optional router-level stage that coalesces
@@ -28,7 +29,11 @@
 //!   the paper's double-buffered period;
 //! * **metrics** — full latency distributions
 //!   (p50/p90/p99/p99.9, histogram, per-rank slowdown) instead of
-//!   means only ([`metrics::LatencyDist`]).
+//!   means only ([`metrics::LatencyDist`]);
+//! * **cogsim** — the *application-level* coupling ([`cogsim::CogSim`]):
+//!   N ranks run T bulk-synchronous timesteps, each stalling on its
+//!   in-the-loop inference burst, with per-backend model residency and
+//!   swap costs — the paper's actual figure of merit, time-to-solution.
 //!
 //! Everything is seeded from [`crate::util::rng::Rng`] and ordered
 //! deterministically, so identical configs produce byte-identical
@@ -37,6 +42,7 @@
 //! the analytic model in the contention-free limit.
 
 pub mod arrival;
+pub mod cogsim;
 pub mod equeue;
 pub mod metrics;
 
@@ -49,16 +55,12 @@ use crate::devices::{profiles, ModelProfile};
 use crate::util::rng::Rng;
 use crate::workload::HydraWorkload;
 
-pub use arrival::ArrivalProcess;
-pub use equeue::EventQueue;
-pub use metrics::{EventSummary, LatencyDist};
+use equeue::{CLASS_COMPLETION, CLASS_DEADLINE};
 
-/// Safety margin added when scheduling a batching-deadline event:
-/// the batcher's `Instant` clock has nanosecond resolution, so the
-/// wake-up lands strictly *after* the deadline it serves (a wake-up
-/// that rounds 1 ns early would find nothing ready and reschedule
-/// itself forever).
-const DEADLINE_EPS_S: f64 = 2e-9;
+pub use arrival::ArrivalProcess;
+pub use cogsim::{CogRecord, CogSim, CogSimConfig};
+pub use equeue::EventQueue;
+pub use metrics::{CogSummary, EventSummary, LatencyDist, StepBreakdown};
 
 /// Router-level dynamic batching configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -69,6 +71,121 @@ pub enum Batching {
     /// Coalesce same-instance requests arriving within `window_s`,
     /// capped at `max_batch` samples per dispatched batch.
     Window { window_s: f64, max_batch: usize },
+}
+
+/// The router-level batching stage shared by [`EventSim`] and
+/// [`cogsim::CogSim`]: the serving stack's [`DynamicBatcher`] mapped
+/// onto virtual time via a fixed epoch, plus the same-instant
+/// tie-breaking contract both engines rely on:
+///
+/// * the **arrival path** drains only *size*-ready queues
+///   ([`Self::drain_size_ready`]) — a queue whose deadline expires at
+///   the very instant new requests arrive is closed by its deadline
+///   wake-up instead, which the event queue orders *after* every
+///   same-instant arrival, so simultaneous requests ride the closing
+///   batch deterministically;
+/// * **wake-ups** ([`Self::wakeup_at`]) land on the exact
+///   ns-quantised deadline — a ns-resolution `Duration` round-trips
+///   `as_secs_f64`/`from_secs_f64` exactly at simulation time scales,
+///   and the batcher counts `now == deadline` as expired, so a
+///   wake-up never lands early and respins.
+pub(crate) struct BatchStage {
+    batcher: DynamicBatcher,
+    /// Virtual-time anchor for the batcher's `Instant` API.
+    epoch: Instant,
+    /// Requests enqueued but not yet drained into a batch.
+    pending: u64,
+}
+
+impl BatchStage {
+    /// `None` for [`Batching::Off`] (every request dispatches alone).
+    fn from_config(batching: Batching) -> Option<BatchStage> {
+        match batching {
+            Batching::Off => None,
+            Batching::Window { window_s, max_batch } => {
+                assert!(window_s >= 0.0 && window_s.is_finite());
+                assert!(max_batch >= 1);
+                let window = Duration::from_secs_f64(window_s);
+                Some(BatchStage {
+                    batcher: DynamicBatcher::new(BatcherConfig {
+                        // size trigger = the cap: a window's queue
+                        // fires early only once it can fill a whole
+                        // batch
+                        target_batch: max_batch,
+                        max_wait: window,
+                        deferred_max_wait: window,
+                        max_batch,
+                    }),
+                    epoch: Instant::now(),
+                    pending: 0,
+                })
+            }
+        }
+    }
+
+    fn inst(&self, t_s: f64) -> Instant {
+        self.epoch + Duration::from_secs_f64(t_s)
+    }
+
+    fn pending(&self) -> u64 {
+        self.pending
+    }
+
+    fn enqueue(&mut self, instance: &str, id: u64, samples: usize, clock_s: f64) {
+        let arrived = self.inst(clock_s);
+        self.batcher.enqueue(
+            instance,
+            PendingRequest {
+                id,
+                input: Vec::new(),
+                samples,
+                arrived,
+                priority: Priority::Critical,
+            },
+        );
+        self.pending += 1;
+    }
+
+    /// Drain everything the size trigger alone makes ready, as lists
+    /// of request ids per batch (deadline-expired queues stay put for
+    /// their wake-up).
+    fn drain_size_ready(&mut self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        while self.batcher.has_size_ready() {
+            for batch in self.batcher.drain_size_ready() {
+                self.pending -= batch.requests.len() as u64;
+                out.push(batch.requests.iter().map(|r| r.id as usize).collect());
+            }
+        }
+        out
+    }
+
+    /// Drain everything ready at `clock_s`, size- or deadline-wise.
+    fn drain_ready(&mut self, clock_s: f64) -> Vec<Vec<usize>> {
+        let now = self.inst(clock_s);
+        let mut out = Vec::new();
+        while self.batcher.has_ready(now) {
+            for batch in self.batcher.drain_ready(now) {
+                self.pending -= batch.requests.len() as u64;
+                out.push(batch.requests.iter().map(|r| r.id as usize).collect());
+            }
+        }
+        out
+    }
+
+    /// When the engine must schedule its next batch-close wake-up:
+    /// `Some(clock_s)` when some queue is already expired at this
+    /// exact instant (close it after all same-instant arrivals), the
+    /// earliest future deadline otherwise, `None` when idle.
+    fn wakeup_at(&self, clock_s: f64) -> Option<f64> {
+        let now = self.inst(clock_s);
+        if self.batcher.has_ready(now) {
+            return Some(clock_s);
+        }
+        self.batcher
+            .next_deadline(now)
+            .map(|d| d.duration_since(self.epoch).as_secs_f64().max(clock_s))
+    }
 }
 
 /// One event-sim run's knobs.
@@ -181,16 +298,13 @@ pub struct EventSim {
     affinity: BTreeMap<String, usize>,
     clock_s: f64,
     events: EventQueue<Event>,
-    batcher: Option<DynamicBatcher>,
-    /// Virtual-time anchor for the batcher's `Instant` API.
-    epoch: Instant,
+    batcher: Option<BatchStage>,
     rngs: Vec<Rng>,
     pending: Vec<PendingMeta>,
     records: Vec<RequestRecord>,
     submitted: u64,
     dispatched: u64,
     completed: u64,
-    batcher_pending: u64,
     batches: u64,
 }
 
@@ -223,22 +337,7 @@ impl EventSim {
         );
         assert!(hermit_tier.iter().chain(&mir_tier).all(|&i| i < backends.len()));
 
-        let batcher = match cfg.batching {
-            Batching::Off => None,
-            Batching::Window { window_s, max_batch } => {
-                assert!(window_s >= 0.0 && window_s.is_finite());
-                assert!(max_batch >= 1);
-                let window = Duration::from_secs_f64(window_s);
-                Some(DynamicBatcher::new(BatcherConfig {
-                    // size trigger = the cap: a window's queue fires
-                    // early only once it can fill a whole batch
-                    target_batch: max_batch,
-                    max_wait: window,
-                    deferred_max_wait: window,
-                    max_batch,
-                }))
-            }
-        };
+        let batcher = BatchStage::from_config(cfg.batching);
         let rngs = (0..cfg.ranks)
             .map(|r| Rng::new(cfg.seed ^ (r as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)))
             .collect();
@@ -256,14 +355,12 @@ impl EventSim {
             clock_s: 0.0,
             events: EventQueue::new(),
             batcher,
-            epoch: Instant::now(),
             rngs,
             pending: Vec::new(),
             records: Vec::new(),
             submitted: 0,
             dispatched: 0,
             completed: 0,
-            batcher_pending: 0,
             batches: 0,
         };
         sim.seed_generators();
@@ -402,10 +499,6 @@ impl EventSim {
 
     // ------------------------------------------------------- routing
 
-    fn inst(&self, t_s: f64) -> Instant {
-        self.epoch + Duration::from_secs_f64(t_s)
-    }
-
     fn on_request(&mut self, rank: usize, model: String, samples: usize) {
         self.submitted += 1;
         let id = self.pending.len();
@@ -416,43 +509,38 @@ impl EventSim {
             arrival_s: self.clock_s,
         });
         if self.batcher.is_some() {
-            let arrived = self.inst(self.clock_s);
-            self.batcher.as_mut().unwrap().enqueue(
-                &model,
-                PendingRequest {
-                    id: id as u64,
-                    input: Vec::new(),
-                    samples,
-                    arrived,
-                    priority: Priority::Critical,
-                },
-            );
-            self.batcher_pending += 1;
-            self.pump_batcher();
+            let stage = self.batcher.as_mut().unwrap();
+            stage.enqueue(&model, id as u64, samples, self.clock_s);
+            // Arrival path: dispatch only queues the *size* trigger
+            // filled; deadline-expired queues close via their wake-up,
+            // after every same-instant arrival (see [`BatchStage`]).
+            let ready = stage.drain_size_ready();
+            self.dispatch_batches(ready);
+            self.arm_batch_wakeup();
         } else {
             self.dispatch(vec![id]);
         }
     }
 
-    /// Drain every ready batcher queue at the current virtual time,
-    /// then arm a wake-up for the earliest future deadline.
+    fn dispatch_batches(&mut self, batches: Vec<Vec<usize>>) {
+        for ids in batches {
+            self.dispatch(ids);
+        }
+    }
+
+    /// Schedule the next batch-close wake-up [`BatchStage`] asks for.
+    fn arm_batch_wakeup(&mut self) {
+        if let Some(t) = self.batcher.as_ref().unwrap().wakeup_at(self.clock_s) {
+            self.events.push_class(t, CLASS_DEADLINE, Event::BatchDeadline);
+        }
+    }
+
+    /// Deadline wake-up: drain every ready batcher queue at the
+    /// current virtual time, then arm the next future deadline.
     fn pump_batcher(&mut self) {
-        let now = self.inst(self.clock_s);
-        loop {
-            if !self.batcher.as_ref().unwrap().has_ready(now) {
-                break;
-            }
-            let batches = self.batcher.as_mut().unwrap().drain_ready(now);
-            for batch in batches {
-                self.batcher_pending -= batch.requests.len() as u64;
-                let ids: Vec<usize> = batch.requests.iter().map(|r| r.id as usize).collect();
-                self.dispatch(ids);
-            }
-        }
-        if let Some(deadline) = self.batcher.as_ref().unwrap().next_deadline(now) {
-            let t = deadline.duration_since(self.epoch).as_secs_f64() + DEADLINE_EPS_S;
-            self.events.push(t.max(self.clock_s), Event::BatchDeadline);
-        }
+        let ready = self.batcher.as_mut().unwrap().drain_ready(self.clock_s);
+        self.dispatch_batches(ready);
+        self.arm_batch_wakeup();
     }
 
     /// Route one batch (same-instance request ids) exactly as the
@@ -502,7 +590,7 @@ impl EventSim {
         }
         self.dispatched += ids.len() as u64;
         self.batches += 1;
-        self.events.push(complete_s, Event::Completion { ids });
+        self.events.push_class(complete_s, CLASS_COMPLETION, Event::Completion { ids });
     }
 
     fn on_completion(&mut self, ids: Vec<usize>) {
@@ -550,7 +638,7 @@ impl EventSim {
 
     /// Requests waiting in the batching window.
     pub fn batcher_pending(&self) -> u64 {
-        self.batcher_pending
+        self.batcher.as_ref().map_or(0, BatchStage::pending)
     }
 
     /// Batches dispatched so far.

@@ -28,10 +28,19 @@
 //! arrival process × dynamic-batching window, reporting full latency
 //! distributions (p50/p99/p99.9, histograms, per-rank slowdown) —
 //! `repro eventsim` on the command line.
+//!
+//! And a **cogsim mode** ([`run_cog_campaign`]): the *coupled*
+//! application model ([`crate::eventsim::cogsim`]) swept over
+//! topology × policy × rank count × models-per-rank × swap cost ×
+//! overlap, reporting time-to-solution with its per-timestep
+//! critical-path breakdown — `repro cogsim` on the command line.
 
 use crate::cluster::{Backend, BackendReport, Cluster, GpuBackend, Policy, RduBackend};
 use crate::devices::{profiles, Api, Gpu, ModelProfile};
-use crate::eventsim::{ArrivalProcess, Batching, EventSim, EventSimConfig, EventSummary};
+use crate::eventsim::{
+    ArrivalProcess, Batching, CogSim, CogSimConfig, CogSummary, EventSim, EventSimConfig,
+    EventSummary,
+};
 use crate::netsim::Link;
 use crate::rdu::RduApi;
 use crate::util::json::Value;
@@ -575,6 +584,238 @@ pub fn run_event_campaign(cfg: &EventCampaignConfig) -> EventCampaignResult {
     EventCampaignResult { config: cfg.clone(), scenarios }
 }
 
+// ------------------------------------------------------ cogsim mode
+
+/// Coupled-campaign knobs: the CogSim application model
+/// ([`crate::eventsim::cogsim`]) swept over topology × policy × rank
+/// count × models-per-rank × swap cost × overlap.  This is the only
+/// mode that reports the paper's real figure of merit —
+/// time-to-solution — because it is the only one where inference
+/// latency feeds back into when the next timestep's requests exist.
+#[derive(Debug, Clone)]
+pub struct CogCampaignConfig {
+    pub topologies: Vec<Topology>,
+    pub policies: Vec<Policy>,
+    /// MPI rank counts (local topology gets one GPU per rank).
+    pub rank_counts: Vec<usize>,
+    /// Target-model counts per rank (M per-material Hermit instances).
+    pub models_per_rank: Vec<usize>,
+    /// Residency swap costs to sweep, seconds.
+    pub swap_costs_s: Vec<f64>,
+    /// Compute/inference overlap fractions to sweep.
+    pub overlaps: Vec<f64>,
+    /// Bulk-synchronous timesteps per run.
+    pub timesteps: usize,
+    /// Physics compute per rank per timestep, seconds.
+    pub compute_s: f64,
+    /// In-the-loop requests per rank per timestep (K).
+    pub requests_per_step: usize,
+    /// Samples per request, uniform inclusive.
+    pub samples_per_request: (usize, usize),
+    /// Every `mir_every`-th step adds one MIR request per rank.
+    pub mir_every: usize,
+    pub mir_samples: usize,
+    /// Models resident per backend (LRU).
+    pub residency_slots: usize,
+    /// Router batching window, µs; 0 disables batching.
+    pub window_us: f64,
+    pub max_batch: usize,
+    pub seed: u64,
+}
+
+impl Default for CogCampaignConfig {
+    fn default() -> Self {
+        CogCampaignConfig {
+            // The two coupling endpoints; hybrid needs MIR cadence
+            // (set mir_every > 0) to differ from pooled.
+            topologies: vec![Topology::Local, Topology::Pooled],
+            policies: Policy::ALL.to_vec(),
+            rank_counts: vec![4],
+            models_per_rank: vec![8],
+            // free swaps vs swaps far above the small-batch service
+            // time — the regime where affinity routing must win
+            swap_costs_s: vec![0.0, 2e-3],
+            overlaps: vec![0.0, 1.0],
+            timesteps: 8,
+            compute_s: 2e-3,
+            requests_per_step: 6,
+            samples_per_request: (2, 3),
+            mir_every: 0,
+            mir_samples: 512,
+            residency_slots: 4,
+            window_us: 0.0,
+            max_batch: 256,
+            seed: 42,
+        }
+    }
+}
+
+/// One (topology, policy, ranks, models, swap, overlap) cell.
+#[derive(Debug, Clone)]
+pub struct CogScenarioResult {
+    pub topology: Topology,
+    pub policy: Policy,
+    pub ranks: usize,
+    pub models: usize,
+    pub swap_s: f64,
+    pub overlap: f64,
+    pub summary: CogSummary,
+}
+
+/// The full coupled sweep.
+#[derive(Debug, Clone)]
+pub struct CogCampaignResult {
+    pub config: CogCampaignConfig,
+    pub scenarios: Vec<CogScenarioResult>,
+}
+
+impl CogCampaignResult {
+    /// Look up one cell.
+    pub fn scenario(
+        &self,
+        topology: Topology,
+        policy: Policy,
+        ranks: usize,
+        models: usize,
+        swap_s: f64,
+        overlap: f64,
+    ) -> Option<&CogScenarioResult> {
+        self.scenarios.iter().find(|s| {
+            s.topology == topology
+                && s.policy == policy
+                && s.ranks == ranks
+                && s.models == models
+                && s.swap_s == swap_s
+                && s.overlap == overlap
+        })
+    }
+
+    /// Deterministic JSON document (BTreeMap key order; fixed
+    /// precision), golden-pinned by `rust/tests/campaign_golden.rs`.
+    pub fn to_json(&self) -> Value {
+        let mut root = BTreeMap::new();
+        root.insert("config".to_string(), cog_config_json(&self.config));
+        root.insert(
+            "scenarios".to_string(),
+            Value::Array(self.scenarios.iter().map(cog_scenario_json).collect()),
+        );
+        Value::Object(root)
+    }
+
+    /// One aligned table per topology; one row per swept cell.
+    pub fn tables(&self) -> Vec<Table> {
+        self.config
+            .topologies
+            .iter()
+            .map(|&topo| {
+                let cells: Vec<&CogScenarioResult> =
+                    self.scenarios.iter().filter(|s| s.topology == topo).collect();
+                let mut t = Table::new(
+                    format!("CogSim campaign — {} ({})", topo.key(), topo.label()),
+                    "cell",
+                );
+                t.set_x(cells.iter().map(|s| {
+                    format!(
+                        "{}/r{}/m{}/sw{}/ov{}",
+                        s.policy.key(),
+                        s.ranks,
+                        s.models,
+                        s.swap_s * 1e6,
+                        s.overlap
+                    )
+                }));
+                t.add_series(
+                    "tts_ms",
+                    cells.iter().map(|s| s.summary.time_to_solution_s * 1e3).collect(),
+                );
+                t.add_series(
+                    "compute_ms",
+                    cells.iter().map(|s| s.summary.total_compute_s * 1e3).collect(),
+                );
+                t.add_series(
+                    "queue_ms",
+                    cells.iter().map(|s| s.summary.total_queue_s * 1e3).collect(),
+                );
+                t.add_series(
+                    "swap_ms",
+                    cells.iter().map(|s| s.summary.total_swap_s * 1e3).collect(),
+                );
+                t.add_series(
+                    "network_ms",
+                    cells.iter().map(|s| s.summary.total_network_s * 1e3).collect(),
+                );
+                t.add_series(
+                    "service_ms",
+                    cells.iter().map(|s| s.summary.total_service_s * 1e3).collect(),
+                );
+                t.add_series("swaps", cells.iter().map(|s| s.summary.swaps as f64).collect());
+                t.add_series(
+                    "spread_us",
+                    cells.iter().map(|s| s.summary.max_spread_s * 1e6).collect(),
+                );
+                t
+            })
+            .collect()
+    }
+}
+
+/// Run one coupled cell.
+pub fn run_cog_scenario(
+    topology: Topology,
+    policy: Policy,
+    ranks: usize,
+    models: usize,
+    swap_s: f64,
+    overlap: f64,
+    cfg: &CogCampaignConfig,
+) -> CogScenarioResult {
+    let (backends, tier) = build_fleet(topology, ranks, &Link::infiniband_cx6());
+    let sim_cfg = CogSimConfig {
+        ranks,
+        timesteps: cfg.timesteps,
+        compute_s: cfg.compute_s,
+        compute_jitter_s: 0.0,
+        requests_per_step: cfg.requests_per_step,
+        models,
+        samples_per_request: cfg.samples_per_request,
+        mir_every: cfg.mir_every,
+        mir_samples: cfg.mir_samples,
+        overlap,
+        swap_s,
+        residency_slots: cfg.residency_slots,
+        batching: if cfg.window_us > 0.0 {
+            Batching::Window { window_s: cfg.window_us * 1e-6, max_batch: cfg.max_batch }
+        } else {
+            Batching::Off
+        },
+        seed: cfg.seed,
+    };
+    let mut sim = CogSim::with_tiers(backends, policy, sim_cfg, tier.hermit, tier.mir);
+    sim.run_to_completion();
+    CogScenarioResult { topology, policy, ranks, models, swap_s, overlap, summary: sim.summary() }
+}
+
+/// Run the full coupled sweep.
+pub fn run_cog_campaign(cfg: &CogCampaignConfig) -> CogCampaignResult {
+    let mut scenarios = Vec::new();
+    for &topology in &cfg.topologies {
+        for &policy in &cfg.policies {
+            for &ranks in &cfg.rank_counts {
+                for &models in &cfg.models_per_rank {
+                    for &swap_s in &cfg.swap_costs_s {
+                        for &overlap in &cfg.overlaps {
+                            scenarios.push(run_cog_scenario(
+                                topology, policy, ranks, models, swap_s, overlap, cfg,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    CogCampaignResult { config: cfg.clone(), scenarios }
+}
+
 // ------------------------------------------------------------- JSON
 
 /// Microseconds at fixed 3-decimal precision (byte-stable rendering).
@@ -760,6 +1001,119 @@ fn event_scenario_json(s: &EventScenarioResult) -> Value {
     Value::Object(m)
 }
 
+// -------------------------------------------------- cogsim-mode JSON
+
+fn cog_config_json(cfg: &CogCampaignConfig) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "topologies".to_string(),
+        Value::Array(
+            cfg.topologies
+                .iter()
+                .map(|t| Value::String(t.key().to_string()))
+                .collect(),
+        ),
+    );
+    m.insert(
+        "policies".to_string(),
+        Value::Array(
+            cfg.policies.iter().map(|p| Value::String(p.key().to_string())).collect(),
+        ),
+    );
+    m.insert(
+        "rank_counts".to_string(),
+        Value::Array(cfg.rank_counts.iter().map(|&r| count(r as u64)).collect()),
+    );
+    m.insert(
+        "models_per_rank".to_string(),
+        Value::Array(cfg.models_per_rank.iter().map(|&m| count(m as u64)).collect()),
+    );
+    m.insert(
+        "swap_costs_us".to_string(),
+        Value::Array(cfg.swap_costs_s.iter().map(|&s| us(s)).collect()),
+    );
+    m.insert(
+        "overlaps".to_string(),
+        Value::Array(cfg.overlaps.iter().map(|&o| fixed3(o)).collect()),
+    );
+    m.insert("timesteps".to_string(), count(cfg.timesteps as u64));
+    m.insert("compute_us".to_string(), us(cfg.compute_s));
+    m.insert("requests_per_step".to_string(), count(cfg.requests_per_step as u64));
+    m.insert(
+        "samples_per_request".to_string(),
+        Value::Array(vec![
+            count(cfg.samples_per_request.0 as u64),
+            count(cfg.samples_per_request.1 as u64),
+        ]),
+    );
+    m.insert("mir_every".to_string(), count(cfg.mir_every as u64));
+    m.insert("mir_samples".to_string(), count(cfg.mir_samples as u64));
+    m.insert("residency_slots".to_string(), count(cfg.residency_slots as u64));
+    m.insert("window_us".to_string(), fixed3(cfg.window_us));
+    m.insert("max_batch".to_string(), count(cfg.max_batch as u64));
+    m.insert("seed".to_string(), count(cfg.seed));
+    Value::Object(m)
+}
+
+fn cog_summary_json(s: &CogSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ranks".to_string(), count(s.ranks));
+    m.insert("timesteps".to_string(), count(s.timesteps));
+    m.insert("requests".to_string(), count(s.requests));
+    m.insert("samples".to_string(), count(s.samples));
+    m.insert("batches".to_string(), count(s.batches));
+    m.insert("time_to_solution_us".to_string(), us(s.time_to_solution_s));
+    m.insert("mean_step_us".to_string(), us(s.mean_step_s));
+    m.insert("total_compute_us".to_string(), us(s.total_compute_s));
+    m.insert("total_queue_us".to_string(), us(s.total_queue_s));
+    m.insert("total_swap_us".to_string(), us(s.total_swap_s));
+    m.insert("total_network_us".to_string(), us(s.total_network_s));
+    m.insert("total_service_us".to_string(), us(s.total_service_s));
+    m.insert("swaps".to_string(), count(s.swaps));
+    m.insert("swap_time_us".to_string(), us(s.swap_time_s));
+    m.insert("max_spread_us".to_string(), us(s.max_spread_s));
+    m.insert("request_p50_us".to_string(), us(s.latency.p50_s));
+    m.insert("request_p99_us".to_string(), us(s.latency.p99_s));
+    m.insert(
+        "straggler_counts".to_string(),
+        Value::Array(s.straggler_counts.iter().map(|&c| count(c)).collect()),
+    );
+    m.insert(
+        "steps".to_string(),
+        Value::Array(
+            s.steps
+                .iter()
+                .map(|st| {
+                    let mut sm = BTreeMap::new();
+                    sm.insert("step".to_string(), count(st.step as u64));
+                    sm.insert("duration_us".to_string(), us(st.duration_s()));
+                    sm.insert("straggler".to_string(), count(st.straggler as u64));
+                    sm.insert("compute_us".to_string(), us(st.compute_s));
+                    sm.insert("queue_us".to_string(), us(st.queue_s));
+                    sm.insert("swap_us".to_string(), us(st.swap_s));
+                    sm.insert("network_us".to_string(), us(st.network_s));
+                    sm.insert("service_us".to_string(), us(st.service_s));
+                    sm.insert("spread_us".to_string(), us(st.spread_s));
+                    Value::Object(sm)
+                })
+                .collect(),
+        ),
+    );
+    Value::Object(m)
+}
+
+fn cog_scenario_json(s: &CogScenarioResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topology".to_string(), Value::String(s.topology.key().to_string()));
+    m.insert("policy".to_string(), Value::String(s.policy.key().to_string()));
+    m.insert("ranks".to_string(), count(s.ranks as u64));
+    m.insert("models".to_string(), count(s.models as u64));
+    m.insert("swap_us".to_string(), us(s.swap_s));
+    m.insert("overlap".to_string(), fixed3(s.overlap));
+    m.insert("summary".to_string(), cog_summary_json(&s.summary));
+    Value::Object(m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -926,5 +1280,102 @@ mod tests {
             );
             assert!(t.series("p999_us").is_some());
         }
+    }
+
+    // ------------------------------------------------ cogsim mode
+
+    fn quick_cog_cfg() -> CogCampaignConfig {
+        CogCampaignConfig {
+            policies: vec![Policy::RoundRobin, Policy::ModelAffinity],
+            timesteps: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cog_campaign_covers_every_cell() {
+        let cfg = quick_cog_cfg();
+        let result = run_cog_campaign(&cfg);
+        let cells = cfg.topologies.len()
+            * cfg.policies.len()
+            * cfg.rank_counts.len()
+            * cfg.models_per_rank.len()
+            * cfg.swap_costs_s.len()
+            * cfg.overlaps.len();
+        assert_eq!(result.scenarios.len(), cells);
+        for s in &result.scenarios {
+            assert!(s.summary.time_to_solution_s > 0.0, "{:?}/{:?}", s.topology, s.policy);
+            assert_eq!(s.summary.timesteps as usize, cfg.timesteps);
+            assert_eq!(
+                s.summary.requests,
+                (s.ranks * cfg.timesteps * cfg.requests_per_step) as u64
+            );
+            assert_eq!(s.summary.steps.len(), cfg.timesteps);
+        }
+        assert!(result
+            .scenario(Topology::Pooled, Policy::ModelAffinity, 4, 8, 2e-3, 0.0)
+            .is_some());
+        assert!(result
+            .scenario(Topology::Hybrid, Policy::ModelAffinity, 4, 8, 2e-3, 0.0)
+            .is_none());
+    }
+
+    #[test]
+    fn cog_json_is_deterministic_and_parses() {
+        let cfg = quick_cog_cfg();
+        let a = crate::util::json::write(&run_cog_campaign(&cfg).to_json());
+        let b = crate::util::json::write(&run_cog_campaign(&cfg).to_json());
+        assert_eq!(a, b);
+        let doc = crate::util::json::parse(&a).unwrap();
+        let scenarios = doc.get("scenarios").unwrap().as_array().unwrap();
+        for s in scenarios {
+            for field in ["topology", "policy", "ranks", "models", "swap_us", "overlap"] {
+                assert!(s.get(field).is_some(), "missing {field}");
+            }
+            let sum = s.get("summary").unwrap();
+            for field in [
+                "time_to_solution_us",
+                "total_compute_us",
+                "total_queue_us",
+                "total_swap_us",
+                "total_network_us",
+                "total_service_us",
+                "straggler_counts",
+                "steps",
+            ] {
+                assert!(sum.get(field).is_some(), "missing summary.{field}");
+            }
+            let steps = sum.get("steps").unwrap().as_array().unwrap();
+            assert_eq!(steps.len(), cfg.timesteps);
+        }
+    }
+
+    #[test]
+    fn cog_tables_cover_the_sweep() {
+        let cfg = quick_cog_cfg();
+        let result = run_cog_campaign(&cfg);
+        let tables = result.tables();
+        assert_eq!(tables.len(), cfg.topologies.len());
+        for t in &tables {
+            assert_eq!(
+                t.x.len(),
+                cfg.policies.len()
+                    * cfg.rank_counts.len()
+                    * cfg.models_per_rank.len()
+                    * cfg.swap_costs_s.len()
+                    * cfg.overlaps.len()
+            );
+            assert!(t.series("tts_ms").is_some());
+            assert!(t.series("swap_ms").is_some());
+        }
+    }
+
+    #[test]
+    fn cog_local_topology_pays_no_network_on_the_critical_path() {
+        let cfg = quick_cog_cfg();
+        let s = run_cog_scenario(Topology::Local, Policy::LatencyAware, 4, 8, 0.0, 0.0, &cfg);
+        assert_eq!(s.summary.total_network_s, 0.0);
+        let p = run_cog_scenario(Topology::Pooled, Policy::LatencyAware, 4, 8, 0.0, 0.0, &cfg);
+        assert!(p.summary.total_network_s > 0.0, "pool rides the link");
     }
 }

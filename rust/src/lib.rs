@@ -34,13 +34,23 @@
 //!   with pluggable routing policies (round-robin, least-outstanding,
 //!   model-affinity, latency-aware).
 //! * [`eventsim`] — deterministic discrete-event simulator: binary-heap
-//!   event queue, multi-rank arrival processes (timestep-synchronised
-//!   bursts, open-loop Poisson, closed-loop think time), a router-level
-//!   dynamic-batching stage reusing [`coordinator::batcher`], FIFO
-//!   service through [`cluster::Policy`] routing, and full latency
-//!   distributions (p50/p99/p99.9, histograms, per-rank slowdown).
-//!   Degrades provably to the analytic [`cluster::Cluster`] in the
+//!   event queue (class-tiered same-instant ordering), multi-rank
+//!   arrival processes (timestep-synchronised bursts, open-loop
+//!   Poisson, closed-loop think time), a router-level dynamic-batching
+//!   stage reusing [`coordinator::batcher`], FIFO service through
+//!   [`cluster::Policy`] routing, and full latency distributions
+//!   (p50/p99/p99.9, histograms, per-rank slowdown).  Degrades
+//!   provably to the analytic [`cluster::Cluster`] in the
 //!   contention-free limit (`rust/tests/eventsim_vs_analytic.rs`).
+//! * [`eventsim::cogsim`] — the **coupled** CogSim application model:
+//!   N ranks × T bulk-synchronous timesteps, each rank stalling on
+//!   its in-the-loop inference burst (K per-material requests over M
+//!   models + optional MIR cadence), partial compute/inference
+//!   overlap, per-backend LRU model residency with swap costs, and
+//!   per-timestep critical-path breakdowns (compute / queue / swap /
+//!   network / service) behind the paper's real figure of merit —
+//!   time-to-solution.  Degrades to `compute + Cluster` in the
+//!   1-rank/1-model limit (`rust/tests/cogsim_vs_analytic.rs`).
 //! * [`workload`] — Hydra/MIR request-trace generators.
 //! * [`metrics`] — the paper's measurement methodology (mean over
 //!   mini-batches, 5 replicates, 95 % confidence intervals).

@@ -31,7 +31,12 @@ fn main() {
     }
 }
 
-/// Tiny flag parser: positionals + `--key value` pairs.
+/// Flags that take no value: presence alone means `true`.
+const BOOL_FLAGS: [&str; 1] = ["smoke"];
+
+/// Tiny flag parser: positionals + `--key value` pairs, plus the
+/// declared boolean switches (`repro cogsim --smoke`).  Value flags
+/// still fail loudly when their value is missing.
 struct Args {
     positional: Vec<String>,
     flags: BTreeMap<String, String>,
@@ -45,11 +50,16 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let value = argv
-                    .get(i + 1)
-                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
-                flags.insert(key.to_string(), value.clone());
-                i += 2;
+                if BOOL_FLAGS.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    let value = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                    flags.insert(key.to_string(), value.clone());
+                    i += 2;
+                }
             } else {
                 positional.push(a.clone());
                 i += 1;
@@ -68,6 +78,10 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
         }
     }
+
+    fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
 }
 
 fn run() -> Result<()> {
@@ -84,6 +98,7 @@ fn run() -> Result<()> {
         "scaling" => cmd_scaling(&args),
         "campaign" => cmd_campaign(&args),
         "eventsim" => cmd_eventsim(&args),
+        "cogsim" => cmd_cogsim(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -106,6 +121,8 @@ USAGE:
   repro scaling [--max-ranks 128] [--step-ms 100] [--slo-ms 1]
   repro campaign [--ranks 4] [--timesteps 12] [--zones 200] [--out results/campaign.json]
   repro eventsim [--horizon-ms 200] [--seed 42] [--out results/eventsim.json]
+  repro cogsim [--ranks 4] [--timesteps 8] [--models 8] [--seed 42] [--smoke]
+               [--out results/cogsim.json]
   repro trace  [--timesteps 3] [--ranks 4] [--zones 1000]
   repro info   [--artifacts artifacts]"
     );
@@ -367,6 +384,67 @@ fn cmd_eventsim(args: &Args) -> Result<()> {
                 }
             );
         }
+    }
+    Ok(())
+}
+
+/// Coupled CogSim campaign: time-to-solution across topology ×
+/// policy × ranks × models × swap cost × overlap.
+fn cmd_cogsim(args: &Args) -> Result<()> {
+    use cogsim_disagg::cluster::Policy;
+    use cogsim_disagg::harness::campaign::{run_cog_campaign, CogCampaignConfig, Topology};
+
+    let mut cfg = CogCampaignConfig::default();
+    cfg.rank_counts = vec![args.get_usize("ranks", 4)?];
+    cfg.models_per_rank = vec![args.get_usize("models", 8)?];
+    cfg.timesteps = args.get_usize("timesteps", cfg.timesteps)?;
+    cfg.seed = args.get_usize("seed", 42)? as u64;
+    if args.get_bool("smoke") {
+        // CI-sized: one topology, two policies, three steps.
+        cfg.topologies = vec![Topology::Pooled];
+        cfg.policies = vec![Policy::RoundRobin, Policy::ModelAffinity];
+        cfg.timesteps = cfg.timesteps.min(3);
+        cfg.overlaps = vec![0.0];
+    }
+    if cfg.timesteps == 0 {
+        bail!("--timesteps must be positive");
+    }
+    let out = args.get("out", "results/cogsim.json");
+
+    let result = run_cog_campaign(&cfg);
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+
+    let json = cogsim_disagg::util::json::write(&result.to_json());
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
+    eprintln!("wrote {out}");
+
+    // The headline: once swapping weights costs more than serving a
+    // request, sticky model-affinity routing must beat blind
+    // round-robin on time-to-solution (shared pool, serial coupling).
+    let ranks = cfg.rank_counts[0];
+    let models = cfg.models_per_rank[0];
+    let swap = *cfg.swap_costs_s.last().expect("swap sweep is non-empty");
+    let aff = result.scenario(Topology::Pooled, Policy::ModelAffinity, ranks, models, swap, 0.0);
+    let rr = result.scenario(Topology::Pooled, Policy::RoundRobin, ranks, models, swap, 0.0);
+    if let (Some(aff), Some(rr)) = (aff, rr) {
+        println!(
+            "pooled TTS at swap {:.0} us: model-affinity {:.2} ms vs round-robin {:.2} ms ({})",
+            swap * 1e6,
+            aff.summary.time_to_solution_s * 1e3,
+            rr.summary.time_to_solution_s * 1e3,
+            if aff.summary.time_to_solution_s < rr.summary.time_to_solution_s {
+                "affinity wins"
+            } else {
+                "affinity does not win here"
+            }
+        );
     }
     Ok(())
 }

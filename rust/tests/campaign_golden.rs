@@ -4,21 +4,24 @@
 //! The campaign runs entirely in virtual time on the calibrated
 //! analytic models, so a fixed seed must produce a **byte-stable**
 //! JSON summary.  The golden files live at
-//! `rust/tests/golden/campaign_summary.json` (analytic sweep) and
-//! `rust/tests/golden/event_summary.json` (event-sim sweep); on first
-//! run (fresh checkout without a file) the test writes it, afterwards
-//! every run must reproduce it byte for byte.  The event mode also
-//! pins the queueing headline the analytic sweep cannot express:
-//! dynamic batching shrinks p99 under bursty 64-rank arrivals on the
-//! pooled topology.
+//! `rust/tests/golden/campaign_summary.json` (analytic sweep),
+//! `rust/tests/golden/event_summary.json` (event-sim sweep), and
+//! `rust/tests/golden/cogsim_summary.json` (coupled cogsim sweep); on
+//! first run (fresh checkout without a file) the test writes it,
+//! afterwards every run must reproduce it byte for byte.  The event
+//! mode also pins the queueing headline the analytic sweep cannot
+//! express — dynamic batching shrinks p99 under bursty 64-rank
+//! arrivals on the pooled topology — and the cogsim mode pins the
+//! coupled headline: model-affinity routing beats round-robin on
+//! time-to-solution once the swap cost exceeds the service time.
 
 use std::path::PathBuf;
 
 use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::eventsim::ArrivalProcess;
 use cogsim_disagg::harness::campaign::{
-    run_campaign, run_event_campaign, run_event_scenario, run_scenario_with_link,
-    CampaignConfig, EventCampaignConfig, Topology,
+    run_campaign, run_cog_campaign, run_cog_scenario, run_event_campaign, run_event_scenario,
+    run_scenario_with_link, CampaignConfig, CogCampaignConfig, EventCampaignConfig, Topology,
 };
 use cogsim_disagg::netsim::Link;
 use cogsim_disagg::util::json;
@@ -38,12 +41,20 @@ fn event_golden_path() -> PathBuf {
     golden_dir().join("event_summary.json")
 }
 
+fn cogsim_golden_path() -> PathBuf {
+    golden_dir().join("cogsim_summary.json")
+}
+
 fn campaign_json() -> String {
     json::write(&run_campaign(&CampaignConfig::default()).to_json())
 }
 
 fn event_campaign_json() -> String {
     json::write(&run_event_campaign(&EventCampaignConfig::default()).to_json())
+}
+
+fn cogsim_campaign_json() -> String {
+    json::write(&run_cog_campaign(&CogCampaignConfig::default()).to_json())
 }
 
 /// Shared golden-file protocol: bootstrap on first run, byte-compare
@@ -79,6 +90,60 @@ fn fixed_seed_event_summary_is_byte_stable() {
     let b = event_campaign_json();
     assert_eq!(a, b, "two identical event runs must serialise identically");
     assert_golden(&a, &event_golden_path(), event_campaign_json);
+}
+
+#[test]
+fn fixed_seed_cogsim_summary_is_byte_stable() {
+    let a = cogsim_campaign_json();
+    let b = cogsim_campaign_json();
+    assert_eq!(a, b, "two identical cogsim runs must serialise identically");
+    assert_golden(&a, &cogsim_golden_path(), cogsim_campaign_json);
+}
+
+#[test]
+fn model_affinity_beats_round_robin_on_tts_once_swaps_cost_more_than_service() {
+    // The cogsim headline: on the shared heterogeneous pool, sticky
+    // model-affinity routing pins each per-material model to one
+    // backend, so after first sighting its weights stay resident and
+    // swaps stop.  Blind round-robin bounces every model across the
+    // pool and re-pays the swap continuously.  With swaps free the
+    // two policies are within noise of each other; once the swap cost
+    // exceeds the small-batch service time (tens of µs here, 2 ms
+    // swap), affinity must win time-to-solution outright.
+    let cfg = CogCampaignConfig::default();
+    let cell = |policy, swap_s| {
+        run_cog_scenario(Topology::Pooled, policy, 4, 8, swap_s, 0.0, &cfg)
+    };
+    let swap = 2e-3;
+    let aff = cell(Policy::ModelAffinity, swap);
+    let rr = cell(Policy::RoundRobin, swap);
+    assert!(
+        aff.summary.time_to_solution_s < rr.summary.time_to_solution_s,
+        "affinity TTS {:.2}ms must beat round-robin {:.2}ms at swap {:.0}us",
+        aff.summary.time_to_solution_s * 1e3,
+        rr.summary.time_to_solution_s * 1e3,
+        swap * 1e6
+    );
+    // the mechanism: affinity stops swapping after warmup — far fewer
+    // misses than round-robin's continuous thrash
+    assert!(
+        aff.summary.swaps * 2 < rr.summary.swaps,
+        "affinity {} swaps vs round-robin {}",
+        aff.summary.swaps,
+        rr.summary.swaps
+    );
+    // and the swap share of the critical path collapses
+    assert!(aff.summary.total_swap_s < rr.summary.total_swap_s);
+    // with free swaps the gap is the point: affinity's win above
+    // comes from residency, not from generally better routing
+    let aff0 = cell(Policy::ModelAffinity, 0.0);
+    let rr0 = cell(Policy::RoundRobin, 0.0);
+    let ratio_free = aff0.summary.time_to_solution_s / rr0.summary.time_to_solution_s;
+    let ratio_swap = aff.summary.time_to_solution_s / rr.summary.time_to_solution_s;
+    assert!(
+        ratio_swap < ratio_free,
+        "swap pressure must move the comparison toward affinity: {ratio_swap} vs {ratio_free}"
+    );
 }
 
 #[test]

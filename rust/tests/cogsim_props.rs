@@ -1,0 +1,229 @@
+//! Property tests for the coupled CogSim engine: the invariants that
+//! must hold for every policy, fleet, and knob setting — timestep
+//! conservation, time-to-solution monotonicity in swap cost and rank
+//! count, overlap dominance, critical-path decomposition exactness,
+//! and bit-identical campaign JSON.
+
+use cogsim_disagg::cluster::{Backend, GpuBackend, Policy, RduBackend};
+use cogsim_disagg::devices::{Api, Gpu};
+use cogsim_disagg::eventsim::{Batching, CogSim, CogSimConfig};
+use cogsim_disagg::harness::campaign::{run_cog_campaign, CogCampaignConfig};
+use cogsim_disagg::rdu::RduApi;
+use cogsim_disagg::util::json;
+
+fn pool() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn mixed_fleet() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(GpuBackend::node_local("gpu/rank0", Gpu::a100(), Api::TrtCudaGraphs)),
+        Box::new(GpuBackend::node_local("gpu/rank1", Gpu::a100(), Api::NaivePyTorch)),
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn run(policy: Policy, cfg: CogSimConfig) -> CogSim {
+    let mut sim = CogSim::new(pool(), policy, cfg);
+    sim.run_to_completion();
+    sim
+}
+
+#[test]
+fn timestep_conservation_for_every_policy_and_batching() {
+    // Every rank completes exactly T steps; completed requests are
+    // N·T·K (plus the MIR cadence) at the final barrier; nothing is
+    // left in flight or in the batching window.
+    const N: usize = 8;
+    const T: usize = 5;
+    const K: usize = 6;
+    for policy in Policy::ALL {
+        for batching in
+            [Batching::Off, Batching::Window { window_s: 100e-6, max_batch: 64 }]
+        {
+            for mir_every in [0usize, 2] {
+                let cfg = CogSimConfig {
+                    ranks: N,
+                    timesteps: T,
+                    requests_per_step: K,
+                    mir_every,
+                    mir_samples: 64,
+                    swap_s: 50e-6,
+                    batching,
+                    ..Default::default()
+                };
+                let mut sim = CogSim::new(mixed_fleet(), policy, cfg);
+                sim.run_to_completion();
+                // MIR fires on steps 0, 2, 4 when mir_every = 2
+                let mir = if mir_every > 0 { N * T.div_ceil(mir_every) } else { 0 };
+                let expect = (N * T * K + mir) as u64;
+                assert_eq!(sim.submitted(), expect, "{policy:?}/{batching:?}/{mir_every}");
+                assert_eq!(sim.completed(), sim.submitted());
+                assert_eq!(sim.in_flight(), 0);
+                assert_eq!(sim.batcher_pending(), 0);
+                assert_eq!(sim.records().len() as u64, sim.submitted());
+                assert_eq!(sim.steps().len(), T);
+                // every (rank, step) pair produced its K requests
+                for rank in 0..N {
+                    for step in 0..T {
+                        let n = sim
+                            .records()
+                            .iter()
+                            .filter(|r| r.rank == rank && r.step == step)
+                            .count();
+                        let mir_here =
+                            if mir_every > 0 && step % mir_every == 0 { 1 } else { 0 };
+                        assert_eq!(n, K + mir_here, "rank {rank} step {step}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn breakdown_components_sum_to_step_duration() {
+    for policy in Policy::ALL {
+        for (swap_s, overlap, jitter) in
+            [(0.0, 0.0, 0.0), (200e-6, 0.0, 0.0), (100e-6, 0.5, 0.3e-3), (1e-3, 1.0, 0.0)]
+        {
+            let cfg = CogSimConfig {
+                ranks: 6,
+                timesteps: 6,
+                swap_s,
+                overlap,
+                compute_jitter_s: jitter,
+                ..Default::default()
+            };
+            let mut sim = CogSim::new(mixed_fleet(), policy, cfg);
+            sim.run_to_completion();
+            for s in sim.steps() {
+                assert!(
+                    (s.components_sum_s() - s.duration_s()).abs() < 1e-9,
+                    "{policy:?} swap {swap_s} overlap {overlap} step {}: {} vs {}",
+                    s.step,
+                    s.components_sum_s(),
+                    s.duration_s()
+                );
+                assert!(s.spread_s >= -1e-12);
+                assert!(s.duration_s() > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn time_to_solution_monotone_in_swap_cost() {
+    // Round-robin routing is oblivious to queue state, so the request
+    // → backend mapping is identical across swap costs and a higher
+    // swap charge can only slow the run down.  (State-aware policies
+    // may legitimately reroute around expensive swaps.)
+    let tts = |swap_s: f64| {
+        let cfg = CogSimConfig { ranks: 6, timesteps: 6, swap_s, ..Default::default() };
+        run(Policy::RoundRobin, cfg).time_to_solution_s()
+    };
+    let costs = [0.0, 20e-6, 200e-6, 2e-3];
+    let times: Vec<f64> = costs.iter().map(|&c| tts(c)).collect();
+    for w in times.windows(2) {
+        assert!(w[1] >= w[0] - 1e-12, "TTS not monotone in swap cost: {times:?}");
+    }
+    assert!(times[costs.len() - 1] > times[0], "expensive swaps must actually bite");
+}
+
+#[test]
+fn time_to_solution_monotone_in_rank_count() {
+    // A fixed shared fleet: more ranks emit strictly more work per
+    // timestep, and per-rank request streams are rank-count
+    // independent (the first N ranks' draws are a prefix), so TTS can
+    // only grow.
+    for policy in [Policy::RoundRobin, Policy::LeastOutstanding, Policy::LatencyAware] {
+        let tts = |ranks: usize| {
+            let cfg = CogSimConfig { ranks, timesteps: 5, ..Default::default() };
+            run(policy, cfg).time_to_solution_s()
+        };
+        let counts = [1usize, 2, 4, 8, 16];
+        let times: Vec<f64> = counts.iter().map(|&n| tts(n)).collect();
+        for w in times.windows(2) {
+            assert!(
+                w[1] >= w[0] - 1e-12,
+                "{policy:?}: TTS not monotone in ranks: {times:?}"
+            );
+        }
+        assert!(times[counts.len() - 1] > times[0], "{policy:?}: load must bite");
+    }
+}
+
+#[test]
+fn full_overlap_never_slower_than_no_overlap() {
+    // With identical per-rank compute (no jitter) the emission
+    // pattern under overlap f is the no-overlap pattern shifted
+    // earlier by f·compute, queues start every step drained, and the
+    // per-step duration is max(compute, (1-f)·compute + span) —
+    // monotone in f.  Overlap 1.0 therefore dominates overlap 0.0 for
+    // every policy and swap cost.
+    for policy in Policy::ALL {
+        for swap_s in [0.0, 500e-6] {
+            let tts = |overlap: f64| {
+                let cfg = CogSimConfig {
+                    ranks: 6,
+                    timesteps: 6,
+                    overlap,
+                    swap_s,
+                    ..Default::default()
+                };
+                run(policy, cfg).time_to_solution_s()
+            };
+            let serial = tts(0.0);
+            let half = tts(0.5);
+            let full = tts(1.0);
+            assert!(
+                full <= serial + 1e-9,
+                "{policy:?}/swap {swap_s}: overlap 1.0 ({full}) slower than 0.0 ({serial})"
+            );
+            assert!(
+                half <= serial + 1e-9,
+                "{policy:?}/swap {swap_s}: overlap 0.5 ({half}) slower than 0.0 ({serial})"
+            );
+            assert!(full <= half + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn identical_seeds_give_byte_identical_campaign_json() {
+    let cfg = CogCampaignConfig {
+        policies: vec![Policy::RoundRobin, Policy::ModelAffinity],
+        timesteps: 4,
+        ..Default::default()
+    };
+    let a = json::write(&run_cog_campaign(&cfg).to_json());
+    let b = json::write(&run_cog_campaign(&cfg).to_json());
+    assert_eq!(a, b, "same seed must serialise identically");
+
+    let different = CogCampaignConfig { seed: 43, ..cfg };
+    let c = json::write(&run_cog_campaign(&different).to_json());
+    assert_ne!(a, c, "a different seed must change the summary");
+}
+
+#[test]
+fn straggler_accounting_is_consistent() {
+    let cfg = CogSimConfig {
+        ranks: 8,
+        timesteps: 10,
+        compute_jitter_s: 0.5e-3,
+        ..Default::default()
+    };
+    let mut sim = CogSim::new(pool(), Policy::LeastOutstanding, cfg);
+    sim.run_to_completion();
+    let s = sim.summary();
+    assert_eq!(s.straggler_counts.len(), 8);
+    assert_eq!(s.straggler_counts.iter().sum::<u64>(), 10, "one straggler per step");
+    assert!(s.max_spread_s > 0.0, "jittered ranks cannot all finish together");
+    for step in &s.steps {
+        assert!(step.spread_s <= s.max_spread_s + 1e-15);
+    }
+}

@@ -1,0 +1,208 @@
+//! Differential test: in the contention-free limit the coupled
+//! CogSim engine must agree with the analytic virtual-time `Cluster`
+//! — request for request, backend for backend, to 1e-9 seconds — and
+//! each timestep's makespan must be exactly `compute_s` plus the
+//! analytic latency of its K-request burst.
+//!
+//! The limit: **one rank** (no cross-rank contention), **one model**
+//! (no residency pressure), **zero swap cost**, **zero overlap**
+//! (requests are emitted only when compute ends, so each step's burst
+//! finds the queues the previous burst fully drained), **batching
+//! off** (every request dispatches alone, at its emission instant).
+//! Then both models compute latency as `wait + link + execute`
+//! through the *same* `Backend` methods and the *same* policy
+//! selection, so they must coincide.  Any divergence means the
+//! coupled engine's barrier, residency, or queue accounting drifted
+//! from the analytic semantics.
+
+use cogsim_disagg::cluster::{Backend, Cluster, GpuBackend, Policy, RduBackend};
+use cogsim_disagg::devices::{profiles, Api, Gpu};
+use cogsim_disagg::eventsim::{Batching, CogSim, CogSimConfig};
+use cogsim_disagg::rdu::RduApi;
+
+const COMPUTE_S: f64 = 2e-3;
+const TIMESTEPS: usize = 6;
+const K: usize = 6;
+
+/// Two identical backends so every policy has a real choice to make.
+fn gpu_fleet() -> Vec<Box<dyn Backend>> {
+    (0..2)
+        .map(|i| {
+            Box::new(GpuBackend::node_local(
+                format!("gpu/rank{i}"),
+                Gpu::a100(),
+                Api::TrtCudaGraphs,
+            )) as Box<dyn Backend>
+        })
+        .collect()
+}
+
+fn rdu_fleet() -> Vec<Box<dyn Backend>> {
+    (0..2)
+        .map(|i| {
+            Box::new(RduBackend::disaggregated(format!("rdu/pool{i}"), 4, RduApi::CppOptimized))
+                as Box<dyn Backend>
+        })
+        .collect()
+}
+
+/// Run the coupled sim in the contention-free limit and replay the
+/// same request sequence through the analytic cluster.
+fn assert_cogsim_matches_analytic(
+    fleet_name: &str,
+    cog_fleet: Vec<Box<dyn Backend>>,
+    analytic_fleet: Vec<Box<dyn Backend>>,
+    policy: Policy,
+) {
+    let cfg = CogSimConfig {
+        ranks: 1,
+        timesteps: TIMESTEPS,
+        compute_s: COMPUTE_S,
+        compute_jitter_s: 0.0,
+        requests_per_step: K,
+        models: 1,
+        samples_per_request: (2, 3),
+        mir_every: 0,
+        overlap: 0.0,
+        swap_s: 0.0,
+        residency_slots: 1,
+        batching: Batching::Off,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut sim = CogSim::new(cog_fleet, policy, cfg);
+    sim.run_to_completion();
+    assert_eq!(sim.steps().len(), TIMESTEPS);
+    assert_eq!(sim.records().len(), TIMESTEPS * K);
+
+    let mut cluster = Cluster::new(analytic_fleet, policy);
+    let profile = profiles::hermit();
+    // analytic max latency per step, for the makespan identity
+    let mut step_max = vec![0.0f64; TIMESTEPS];
+    for (i, rec) in sim.records().iter().enumerate() {
+        assert_eq!(rec.model, "hermit/mat0", "one model in the mix");
+        assert_eq!(rec.batch_samples, rec.samples, "batching off dispatches alone");
+        assert_eq!(
+            rec.dispatch_s, rec.emit_s,
+            "{fleet_name}/{policy:?} req {i}: batching off must dispatch on emission"
+        );
+        assert_eq!(rec.swap_s, 0.0, "zero swap cost");
+        cluster.advance_to(rec.dispatch_s);
+        let routed = cluster.submit(&rec.model, &profile, rec.samples);
+        assert_eq!(
+            routed.backend, rec.backend,
+            "{fleet_name}/{policy:?} req {i}: routed to different backends"
+        );
+        assert!(
+            (routed.latency_s - rec.latency_s()).abs() < 1e-9,
+            "{fleet_name}/{policy:?} req {i}: analytic {} vs coupled {}",
+            routed.latency_s,
+            rec.latency_s()
+        );
+        assert!(
+            (routed.wait_s - rec.wait_s).abs() < 1e-12,
+            "{fleet_name}/{policy:?} req {i}: queue wait diverged"
+        );
+        step_max[rec.step] = step_max[rec.step].max(routed.latency_s);
+    }
+
+    // Per-timestep makespan identity: the barrier-to-barrier duration
+    // is exactly the physics compute plus the analytic latency of the
+    // burst's slowest request.
+    for (t, step) in sim.steps().iter().enumerate() {
+        let expect = COMPUTE_S + step_max[t];
+        assert!(
+            (step.duration_s() - expect).abs() < 1e-9,
+            "{fleet_name}/{policy:?} step {t}: duration {} vs compute + analytic {}",
+            step.duration_s(),
+            expect
+        );
+        // every step's burst starts on drained queues
+        assert!(
+            (step.compute_s - COMPUTE_S).abs() < 1e-12,
+            "{fleet_name}/{policy:?} step {t}: critical-path compute share"
+        );
+        assert!(step.swap_s == 0.0);
+    }
+    // the coupled figure of merit follows: TTS = sum of the steps
+    let tts: f64 = sim.steps().iter().map(|s| s.duration_s()).sum();
+    assert!((sim.time_to_solution_s() - tts).abs() < 1e-9);
+}
+
+#[test]
+fn gpu_fleet_matches_analytic_for_every_policy() {
+    for policy in Policy::ALL {
+        assert_cogsim_matches_analytic("gpu", gpu_fleet(), gpu_fleet(), policy);
+    }
+}
+
+#[test]
+fn rdu_fleet_matches_analytic_for_every_policy() {
+    for policy in Policy::ALL {
+        assert_cogsim_matches_analytic("rdu", rdu_fleet(), rdu_fleet(), policy);
+    }
+}
+
+#[test]
+fn each_step_burst_finds_drained_queues() {
+    // The limit's precondition, asserted directly: with zero overlap
+    // the first-dispatched request of every timestep waits on nothing.
+    let cfg = CogSimConfig {
+        ranks: 1,
+        timesteps: TIMESTEPS,
+        compute_s: COMPUTE_S,
+        requests_per_step: K,
+        models: 1,
+        overlap: 0.0,
+        swap_s: 0.0,
+        batching: Batching::Off,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut sim = CogSim::new(rdu_fleet(), Policy::LeastOutstanding, cfg);
+    sim.run_to_completion();
+    for t in 0..TIMESTEPS {
+        let first = sim
+            .records()
+            .iter()
+            .find(|r| r.step == t)
+            .expect("every step has records");
+        assert_eq!(first.wait_s, 0.0, "step {t}: queues must be drained at the barrier");
+    }
+}
+
+#[test]
+fn contention_breaks_the_identity_as_expected() {
+    // Sanity check on the limit itself: with many ranks bursting into
+    // a two-backend pool, per-step makespan must exceed compute plus
+    // a single idle-latency — i.e. the differential limit above is
+    // genuinely the contention-free special case.
+    let cfg = CogSimConfig {
+        ranks: 32,
+        timesteps: 3,
+        compute_s: COMPUTE_S,
+        requests_per_step: K,
+        models: 1,
+        overlap: 0.0,
+        swap_s: 0.0,
+        batching: Batching::Off,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut sim = CogSim::new(rdu_fleet(), Policy::LeastOutstanding, cfg);
+    sim.run_to_completion();
+    let idle = {
+        let fleet = rdu_fleet();
+        let p = profiles::hermit();
+        fleet[0].latency_s(&p, 3)
+    };
+    for step in sim.steps() {
+        assert!(
+            step.duration_s() > COMPUTE_S + 2.0 * idle,
+            "step {}: {} vs compute + idle {}",
+            step.step,
+            step.duration_s(),
+            COMPUTE_S + idle
+        );
+    }
+}

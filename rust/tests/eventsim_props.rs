@@ -123,10 +123,11 @@ fn batches_respect_max_batch_and_window() {
                 "{arrival:?}: batch of {} samples",
                 r.batch_samples
             );
-            // the window bound: dispatched within window of arrival
-            // (+5 ns slack for the ns-quantised deadline wake-up)
+            // the window bound: deadline wake-ups land exactly on the
+            // ns-quantised deadline, so the only slack is the ns
+            // rounding of the arrival instant itself
             assert!(
-                r.batch_wait_s() <= WINDOW_S + 5e-9,
+                r.batch_wait_s() <= WINDOW_S + 1e-9,
                 "{arrival:?}: request held {}s past its window",
                 r.batch_wait_s() - WINDOW_S
             );
@@ -150,6 +151,91 @@ fn identical_seeds_give_byte_identical_summaries() {
     let different = EventCampaignConfig { seed: 43, ..cfg };
     let c = json::write(&run_event_campaign(&different).to_json());
     assert_ne!(a, c, "a different seed must change the summary");
+}
+
+#[test]
+fn batch_close_ties_admit_same_instant_arrivals() {
+    // Regression for the batch-close/arrival tie: pick a burst period
+    // that is *exactly* the batching window (both powers of two, so
+    // every burst time and every ns-quantised deadline is exact in
+    // f64 and they collide bit-for-bit).  Burst k's window expires at
+    // the very instant burst k+1 arrives; the event queue must order
+    // the arrivals before the deadline, so odd bursts ride the
+    // closing batch with zero wait while even bursts wait the full
+    // window.  Before the class-tiered event queue this ordering
+    // depended on when the wake-up happened to be scheduled (and an
+    // epsilon kept the deadline 2 ns late); now it is pinned.
+    const P: f64 = 0.015625; // 2^-6 s: exact in f64 and in ns
+    let cfg = EventSimConfig {
+        ranks: 4,
+        materials: 2,
+        arrival: ArrivalProcess::Synchronized { period_s: P, jitter_s: 0.0 },
+        batching: Batching::Window { window_s: P, max_batch: 1 << 20 },
+        horizon_s: 0.05, // bursts at 0, P, 2P, 3P
+        seed: 9,
+        ..Default::default()
+    };
+    let mut sim = EventSim::new(mixed_fleet(), Policy::LeastOutstanding, cfg);
+    sim.run_to_completion();
+    assert_eq!(sim.completed(), sim.submitted());
+    assert_eq!(sim.submitted(), 4 * 4 * 6, "4 bursts x 4 ranks x 6 requests");
+    let mut odd_burst_riders = 0;
+    for r in sim.records() {
+        let burst = (r.arrival_s / P).round() as usize;
+        assert!((r.arrival_s - burst as f64 * P).abs() < 1e-15, "exact burst times");
+        if burst % 2 == 0 {
+            // even bursts open the window and wait it out fully
+            assert!(
+                (r.batch_wait_s() - P).abs() < 1e-12,
+                "burst {burst}: waited {} not the window",
+                r.batch_wait_s()
+            );
+        } else {
+            // odd bursts arrive at the closing instant and ride along
+            assert!(
+                r.batch_wait_s().abs() < 1e-12,
+                "burst {burst}: rider waited {}",
+                r.batch_wait_s()
+            );
+            odd_burst_riders += 1;
+            assert!(
+                r.batch_samples > r.samples,
+                "burst {burst}: rider must share its batch with the opener"
+            );
+        }
+    }
+    assert_eq!(odd_burst_riders, 2 * 4 * 6, "bursts 1 and 3 ride");
+    // pairing halves the batch count: one batch per material per
+    // burst pair
+    assert_eq!(sim.batches(), 2 * 2, "2 burst pairs x 2 materials");
+}
+
+#[test]
+fn zero_window_batches_like_off_but_through_the_deadline_path() {
+    // window_s = 0: every request's deadline expires at its own
+    // arrival instant.  The arrival-path drain must NOT fire it (size
+    // trigger only); the same-instant deadline wake-up must.  All
+    // same-instant same-material requests therefore still coalesce —
+    // deterministically — instead of dispatching one-by-one.
+    let cfg = EventSimConfig {
+        ranks: 8,
+        materials: 2,
+        arrival: ArrivalProcess::Synchronized { period_s: 0.01, jitter_s: 0.0 },
+        batching: Batching::Window { window_s: 0.0, max_batch: 1 << 20 },
+        horizon_s: 0.025,
+        seed: 3,
+        ..Default::default()
+    };
+    let mut sim = EventSim::new(mixed_fleet(), Policy::LeastOutstanding, cfg);
+    sim.run_to_completion();
+    assert_eq!(sim.completed(), sim.submitted());
+    for r in sim.records() {
+        assert!(r.batch_wait_s().abs() < 1e-12, "zero window adds no wait");
+    }
+    // all of a burst's same-material requests ride one batch: 3
+    // bursts x 2 materials
+    assert_eq!(sim.batches(), 3 * 2, "{} batches", sim.batches());
+    assert!(sim.records().iter().any(|r| r.batch_samples > r.samples));
 }
 
 #[test]
