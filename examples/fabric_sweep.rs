@@ -1,0 +1,108 @@
+//! Fabric sweep: the contention-aware network layer end to end.
+//!
+//! Part 1 drives the flow-level [`FabricEngine`] directly — eight
+//! hosts bursting into a two-accelerator pool — and prints the
+//! max-min fair shares as flows join and leave.  Part 2 runs the
+//! coupled CogSim model over the same fabric across oversubscription
+//! factors and shows where the shared pool's time-to-solution loses
+//! to per-rank local GPUs.
+//!
+//! ```bash
+//! cargo run --release --example fabric_sweep
+//! ```
+
+use cogsim_disagg::cluster::Policy;
+use cogsim_disagg::fabric::{FabricEngine, FabricSpec, Topology};
+use cogsim_disagg::harness::campaign::{
+    run_cog_scenario, CogCampaignConfig, Topology as CampaignTopology,
+};
+
+fn main() {
+    // ---- part 1: fair share on the wire ----------------------------
+    println!("8 hosts -> 2 pooled accels, 4:1 oversubscribed, 1 MB each:\n");
+    let topo = Topology::pooled(8, 2, 4.0);
+    let mut eng = FabricEngine::new(topo);
+    let mut flows = Vec::new();
+    for h in 0..8 {
+        let path = eng.topology().request_path(h, h % 2);
+        flows.push(eng.start(0.0, path, 1e6));
+    }
+    println!(
+        "  burst: {} active flows, per-flow share {:.0} MB/s",
+        eng.active(),
+        eng.rate_of(flows[0]).unwrap() / 1e6
+    );
+    while let Some(t) = eng.next_completion_s() {
+        let done = eng.take_completed(t);
+        let share = flows
+            .iter()
+            .find_map(|&f| eng.rate_of(f))
+            .map(|r| format!("{:.0} MB/s", r / 1e6))
+            .unwrap_or_else(|| "idle".to_string());
+        println!(
+            "  t={:>7.1} us: {} finished, {} left, share now {}",
+            t * 1e6,
+            done.len(),
+            eng.active(),
+            share
+        );
+    }
+
+    // ---- part 2: the coupled crossover -----------------------------
+    println!("\nCogSim pooled-vs-local TTS across the oversubscription knob:\n");
+    let cfg = CogCampaignConfig::default();
+    for ranks in [4usize, 32] {
+        let local = run_cog_scenario(
+            CampaignTopology::Local,
+            Policy::LatencyAware,
+            ranks,
+            8,
+            0.0,
+            0.0,
+            1.0,
+            &cfg,
+        );
+        println!(
+            "  {ranks} ranks, local GPUs: {:>8.2} ms",
+            local.summary.time_to_solution_s * 1e3
+        );
+        for oversub in [1.0, 2.0, 4.0, 8.0] {
+            let pooled = run_cog_scenario(
+                CampaignTopology::Pooled,
+                Policy::LatencyAware,
+                ranks,
+                8,
+                0.0,
+                0.0,
+                oversub,
+                &cfg,
+            );
+            let s = &pooled.summary;
+            println!(
+                "  {ranks} ranks, pool {oversub}:1:   {:>8.2} ms \
+                 (network {:.2} ms of which contention {:.2} ms){}",
+                s.time_to_solution_s * 1e3,
+                s.total_network_s * 1e3,
+                s.total_contention_s * 1e3,
+                if s.time_to_solution_s > local.summary.time_to_solution_s {
+                    "  <- pooled loses"
+                } else {
+                    ""
+                }
+            );
+        }
+    }
+
+    // the spec plumbing the campaign uses under the hood
+    let spec = FabricSpec {
+        topology: Topology::hybrid(4, 2, 4.0),
+        accel_of_backend: vec![0, 1, 2, 3, 4, 5],
+    };
+    println!(
+        "\nhybrid spec: {} hosts, {} accels ({} pooled), rank 5 -> host {}",
+        spec.topology.hosts(),
+        spec.topology.accels(),
+        (0..spec.topology.accels()).filter(|&a| spec.topology.is_pooled(a)).count(),
+        spec.host_of_rank(5)
+    );
+}

@@ -1,0 +1,105 @@
+"""coordinator::batcher transliteration.
+
+Instants are integer nanoseconds from an epoch at 0; Duration
+conversions mirror Rust's `from_secs_f64` (nearest ns, ties to even)
+and `as_secs_f64` exactly — the eventsim BatchStage's tie-breaking
+contract depends on this quantisation.
+"""
+
+
+class PendingRequest:
+    __slots__ = ("id", "samples", "arrived_ns")
+
+    def __init__(self, id_, samples, arrived_ns):
+        self.id = id_
+        self.samples = samples
+        self.arrived_ns = arrived_ns
+
+
+class Batch:
+    __slots__ = ("instance", "requests", "total_samples")
+
+    def __init__(self, instance, requests, total_samples):
+        self.instance = instance
+        self.requests = requests
+        self.total_samples = total_samples
+
+
+class DynamicBatcher:
+    """All requests are Priority::Critical in the event engines, so
+    the priority distinction collapses to a single max_wait."""
+
+    def __init__(self, target_batch, max_wait_ns, max_batch):
+        assert max_batch >= target_batch
+        self.target_batch = target_batch
+        self.max_wait_ns = max_wait_ns
+        self.max_batch = max_batch
+        self.queues = {}          # instance -> list[PendingRequest]
+        self.queued_samples = {}  # instance -> int
+
+    def enqueue(self, instance, req):
+        self.queued_samples[instance] = self.queued_samples.get(instance, 0) + req.samples
+        self.queues.setdefault(instance, []).append(req)
+
+    def queued(self, instance):
+        return self.queued_samples.get(instance, 0)
+
+    def _queue_deadline(self, q):
+        if not q:
+            return None
+        return min(r.arrived_ns + self.max_wait_ns for r in q)
+
+    def _queue_size_ready(self, instance, q):
+        return bool(q) and self.queued(instance) >= self.target_batch
+
+    def _queue_ready(self, instance, q, now_ns):
+        if self._queue_size_ready(instance, q):
+            return True
+        d = self._queue_deadline(q)
+        return d is not None and now_ns >= d
+
+    def has_ready(self, now_ns):
+        return any(self._queue_ready(i, q, now_ns) for i, q in self.queues.items())
+
+    def has_size_ready(self):
+        return any(self._queue_size_ready(i, q) for i, q in self.queues.items())
+
+    def next_deadline(self, now_ns):
+        if self.has_ready(now_ns):
+            return None
+        ds = [d for d in (self._queue_deadline(q) for q in self.queues.values())
+              if d is not None]
+        return min(ds) if ds else None
+
+    def _drain_picked(self, now_ns):
+        picked = []
+        for inst, q in self.queues.items():
+            if now_ns is None:
+                ready = self._queue_size_ready(inst, q)
+            else:
+                ready = self._queue_ready(inst, q, now_ns)
+            if ready:
+                # all requests are critical: (False, name) sort key
+                picked.append((False, inst))
+        picked.sort()
+        return [self._drain_instance(inst) for _, inst in picked]
+
+    def drain_ready(self, now_ns):
+        return self._drain_picked(now_ns)
+
+    def drain_size_ready(self):
+        return self._drain_picked(None)
+
+    def _drain_instance(self, instance):
+        q = self.queues[instance]
+        requests = []
+        total = 0
+        while q:
+            front = q[0]
+            if requests and total + front.samples > self.max_batch:
+                break
+            q.pop(0)
+            total += front.samples
+            requests.append(front)
+        self.queued_samples[instance] -= total
+        return Batch(instance, requests, total)

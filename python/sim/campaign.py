@@ -1,0 +1,488 @@
+"""harness::campaign transliteration: all three modes + JSON emit."""
+
+import devices
+import stats
+from cluster import (ALL_POLICIES, Cluster, GpuBackend, RduBackend, LATENCY_AWARE,
+                     ROUND_ROBIN)
+from cogsim import CogSim
+from eventsim import EventSim, FabricLayer
+from fabric import Topology as NetTopology
+from netsim import Link
+from rustfloat import F64_MIN_POSITIVE, rust_round
+from workload import HydraWorkload, MirWorkload
+
+TOPOLOGIES = ["local", "pooled", "hybrid"]
+
+
+def pays_the_link(topology):
+    return topology != "local"
+
+
+def oversubs_for(topology, oversubs):
+    return list(oversubs) if pays_the_link(topology) else [1.0]
+
+
+# --------------------------------------------------------- fleets
+
+
+def build_fleet(topology, ranks, pool_link):
+    def local_gpu(r):
+        return GpuBackend(f"gpu/rank{r}", devices.Gpu.a100(), devices.TRT_CUDA_GRAPHS)
+
+    def pool(start):
+        import rdu
+        return [
+            RduBackend(f"rdu/pool{start}", 4, rdu.RDU_CPP_OPT, pool_link.clone()),
+            RduBackend(f"rdu/pool{start + 1}", 2, rdu.RDU_PYTHON, pool_link.clone()),
+        ]
+
+    if topology == "local":
+        backends = [local_gpu(r) for r in range(ranks)]
+        allidx = list(range(len(backends)))
+        return backends, (allidx, list(allidx))
+    if topology == "pooled":
+        backends = pool(0)
+        allidx = list(range(len(backends)))
+        return backends, (allidx, list(allidx))
+    # hybrid
+    backends = [local_gpu(r) for r in range(ranks)]
+    gpu_idx = list(range(len(backends)))
+    backends.extend(pool(0))
+    pool_idx = list(range(len(gpu_idx), len(backends)))
+    return backends, (pool_idx, gpu_idx)  # (hermit, mir)
+
+
+def build_fabric_spec(topology, ranks, oversub):
+    if topology == "local":
+        return None
+    if topology == "pooled":
+        return (NetTopology.pooled(ranks, 2, oversub), [0, 1])
+    return (NetTopology.hybrid(ranks, 2, oversub), list(range(ranks)) + [ranks, ranks + 1])
+
+
+# -------------------------------------------------- analytic mode
+
+
+def default_campaign_cfg():
+    return {
+        "ranks": 4, "zones_per_rank": 200, "materials": 8, "timesteps": 12,
+        "step_period_s": 0.02, "mir_base_zones": 1024, "fabric_oversubs": [1.0],
+        "seed": 42,
+    }
+
+
+def derated_link(link, oversub):
+    import math
+    l = link.clone()
+    if math.isfinite(l.eff_bandwidth):
+        l.eff_bandwidth = l.eff_bandwidth / oversub
+    return l
+
+
+def run_scenario_with_link(topology, policy, cfg, pool_link):
+    backends, (hermit_tier, mir_tier) = build_fleet(topology, cfg["ranks"], pool_link)
+    cluster = Cluster(backends, policy)
+    hydra = HydraWorkload(cfg["ranks"], cfg["zones_per_rank"], cfg["materials"],
+                          (2, 3), cfg["seed"])
+    mir = MirWorkload(cfg["ranks"], cfg["mir_base_zones"], 0.4, cfg["seed"] ^ 0x5EED)
+    hermit_profile = devices.hermit()
+    mir_profile = devices.mir_noln()
+
+    hydra_lat, hydra_link, hydra_samples = [], [], 0
+    mir_lat, mir_link, mir_samples = [], [], 0
+    for t in range(cfg["timesteps"]):
+        cluster.advance_to(float(t) * cfg["step_period_s"])
+        for (_, _, model, samples) in hydra.timestep(t):
+            _, _, latency_s, link_overhead_s = cluster.submit_among(
+                hermit_tier, model, hermit_profile, samples)
+            hydra_lat.append(latency_s)
+            hydra_link.append(link_overhead_s)
+            hydra_samples += samples
+        for (_, _, model, samples) in mir.timestep(t):
+            _, _, latency_s, link_overhead_s = cluster.submit_among(
+                mir_tier, model, mir_profile, samples)
+            mir_lat.append(latency_s)
+            mir_link.append(link_overhead_s)
+            mir_samples += samples
+
+    makespan_s = cluster.makespan_s()
+
+    def workload_summary(lat, link, samples):
+        return {
+            "requests": len(lat), "samples": samples, "mean_s": stats.mean(lat),
+            "p50_s": stats.percentile(lat, 50.0), "p95_s": stats.percentile(lat, 95.0),
+            "p99_s": stats.percentile(lat, 99.0), "mean_link_overhead_s": stats.mean(link),
+            "samples_per_s": (float(samples) / makespan_s if makespan_s > 0.0 else 0.0),
+        }
+
+    reports = []
+    for b, st in zip(cluster.backends, cluster.stats):
+        reports.append({"name": b.name, "requests": st[0], "samples": st[1],
+                        "busy_s": st[2], "queue_s": b.queue_s()})
+    return {
+        "topology": topology, "policy": policy, "oversub": 1.0,
+        "hydra": workload_summary(hydra_lat, hydra_link, hydra_samples),
+        "mir": workload_summary(mir_lat, mir_link, mir_samples),
+        "makespan_s": makespan_s, "backends": reports,
+    }
+
+
+def run_scenario_at(topology, policy, oversub, cfg):
+    link = derated_link(Link.infiniband_cx6(), oversub)
+    s = run_scenario_with_link(topology, policy, cfg, link)
+    s["oversub"] = oversub
+    return s
+
+
+def run_campaign(cfg):
+    scenarios = []
+    for topology in TOPOLOGIES:
+        for policy in ALL_POLICIES:
+            for oversub in oversubs_for(topology, cfg["fabric_oversubs"]):
+                scenarios.append(run_scenario_at(topology, policy, oversub, cfg))
+    return {"config": cfg, "scenarios": scenarios}
+
+
+# ----------------------------------------------------- event mode
+
+
+def default_event_cfg():
+    return {
+        "topologies": ["local", "pooled"],
+        "policies": [ROUND_ROBIN, LATENCY_AWARE],
+        "rank_counts": [4, 64],
+        "arrivals": [("synchronized", 0.02, 0.0), ("poisson", 800.0),
+                     ("closed_loop", 2e-3)],
+        "windows_us": [0.0, 200.0],
+        "max_batch": 256,
+        "materials": 8,
+        "samples_per_request": (2, 3),
+        "requests_per_burst": 6,
+        "mir_every": 0,
+        "mir_samples": 512,
+        "fabric_oversubs": [1.0, 4.0],
+        "horizon_s": 0.2,
+        "seed": 42,
+    }
+
+
+def run_event_scenario(topology, policy, arrival, ranks, window_us, oversub, cfg):
+    backends, (hermit_tier, mir_tier) = build_fleet(topology, ranks, Link.infiniband_cx6())
+    sim_cfg = {
+        "ranks": ranks, "materials": cfg["materials"],
+        "samples_per_request": cfg["samples_per_request"],
+        "requests_per_burst": cfg["requests_per_burst"],
+        "mir_every": cfg["mir_every"], "mir_samples": cfg["mir_samples"],
+        "arrival": arrival,
+        "batching": ((window_us * 1e-6, cfg["max_batch"]) if window_us > 0.0 else None),
+        "horizon_s": cfg["horizon_s"], "seed": cfg["seed"],
+    }
+    spec = build_fabric_spec(topology, ranks, oversub)
+    fabric = FabricLayer(spec[0], spec[1], len(backends)) if spec else None
+    sim = EventSim(backends, policy, sim_cfg, hermit_tier, mir_tier, fabric)
+    sim.run_to_completion()
+    return {
+        "topology": topology, "policy": policy, "arrival": arrival, "ranks": ranks,
+        "window_us": window_us, "oversub": oversub, "summary": sim.summary(),
+        "sim": sim,
+    }
+
+
+def run_event_campaign(cfg):
+    scenarios = []
+    for topology in cfg["topologies"]:
+        for policy in cfg["policies"]:
+            for ranks in cfg["rank_counts"]:
+                for arrival in cfg["arrivals"]:
+                    for window_us in cfg["windows_us"]:
+                        for oversub in oversubs_for(topology, cfg["fabric_oversubs"]):
+                            scenarios.append(run_event_scenario(
+                                topology, policy, arrival, ranks, window_us, oversub, cfg))
+    return {"config": cfg, "scenarios": scenarios}
+
+
+# ---------------------------------------------------- cogsim mode
+
+
+def default_cog_cfg():
+    return {
+        "topologies": ["local", "pooled"],
+        "policies": list(ALL_POLICIES),
+        "rank_counts": [4, 32],
+        "models_per_rank": [8],
+        "swap_costs_s": [0.0, 2e-3],
+        "overlaps": [0.0],
+        "timesteps": 8,
+        "compute_s": 2e-3,
+        "requests_per_step": 6,
+        "samples_per_request": (2, 3),
+        "mir_every": 0,
+        "mir_samples": 512,
+        "residency_slots": 4,
+        "window_us": 0.0,
+        "max_batch": 256,
+        "fabric_oversubs": [1.0, 2.0, 4.0, 8.0],
+        "seed": 42,
+    }
+
+
+def run_cog_scenario(topology, policy, ranks, models, swap_s, overlap, oversub, cfg):
+    backends, (hermit_tier, mir_tier) = build_fleet(topology, ranks, Link.infiniband_cx6())
+    sim_cfg = {
+        "ranks": ranks, "timesteps": cfg["timesteps"], "compute_s": cfg["compute_s"],
+        "compute_jitter_s": 0.0, "requests_per_step": cfg["requests_per_step"],
+        "models": models, "samples_per_request": cfg["samples_per_request"],
+        "mir_every": cfg["mir_every"], "mir_samples": cfg["mir_samples"],
+        "overlap": overlap, "swap_s": swap_s,
+        "residency_slots": cfg["residency_slots"],
+        "batching": ((cfg["window_us"] * 1e-6, cfg["max_batch"])
+                     if cfg["window_us"] > 0.0 else None),
+        "seed": cfg["seed"],
+    }
+    spec = build_fabric_spec(topology, ranks, oversub)
+    fabric = FabricLayer(spec[0], spec[1], len(backends)) if spec else None
+    sim = CogSim(backends, policy, sim_cfg, hermit_tier, mir_tier, fabric)
+    sim.run_to_completion()
+    return {
+        "topology": topology, "policy": policy, "ranks": ranks, "models": models,
+        "swap_s": swap_s, "overlap": overlap, "oversub": oversub,
+        "summary": sim.summary(), "sim": sim,
+    }
+
+
+def run_cog_campaign(cfg):
+    scenarios = []
+    for topology in cfg["topologies"]:
+        for policy in cfg["policies"]:
+            for ranks in cfg["rank_counts"]:
+                for models in cfg["models_per_rank"]:
+                    for swap_s in cfg["swap_costs_s"]:
+                        for overlap in cfg["overlaps"]:
+                            for oversub in oversubs_for(topology, cfg["fabric_oversubs"]):
+                                scenarios.append(run_cog_scenario(
+                                    topology, policy, ranks, models, swap_s, overlap,
+                                    oversub, cfg))
+    return {"config": cfg, "scenarios": scenarios}
+
+
+# ------------------------------------------------------------- JSON
+
+
+def us(seconds):
+    return rust_round(seconds * 1e9) / 1e3
+
+
+def fixed3(v):
+    return rust_round(v * 1e3) / 1e3
+
+
+def config_json(cfg):
+    return {
+        "ranks": float(cfg["ranks"]),
+        "zones_per_rank": float(cfg["zones_per_rank"]),
+        "materials": float(cfg["materials"]),
+        "timesteps": float(cfg["timesteps"]),
+        "step_period_us": us(cfg["step_period_s"]),
+        "mir_base_zones": float(cfg["mir_base_zones"]),
+        "fabric_oversubs": [fixed3(v) for v in cfg["fabric_oversubs"]],
+        "seed": float(cfg["seed"]),
+    }
+
+
+def workload_json(w):
+    return {
+        "requests": float(w["requests"]),
+        "samples": float(w["samples"]),
+        "mean_us": us(w["mean_s"]),
+        "p50_us": us(w["p50_s"]),
+        "p95_us": us(w["p95_s"]),
+        "p99_us": us(w["p99_s"]),
+        "mean_link_overhead_us": us(w["mean_link_overhead_s"]),
+        "samples_per_s": fixed3(w["samples_per_s"]),
+    }
+
+
+def scenario_json(s):
+    makespan = max(s["makespan_s"], F64_MIN_POSITIVE)
+    return {
+        "topology": s["topology"],
+        "policy": s["policy"],
+        "oversub": fixed3(s["oversub"]),
+        "hydra": workload_json(s["hydra"]),
+        "mir": workload_json(s["mir"]),
+        "makespan_us": us(s["makespan_s"]),
+        "backends": [
+            {
+                "name": b["name"],
+                "requests": float(b["requests"]),
+                "samples": float(b["samples"]),
+                "busy_us": us(b["busy_s"]),
+                "utilization": rust_round(b["busy_s"] / makespan * 1e6) / 1e6,
+            }
+            for b in s["backends"]
+        ],
+    }
+
+
+def campaign_json(result):
+    return {
+        "config": config_json(result["config"]),
+        "scenarios": [scenario_json(s) for s in result["scenarios"]],
+    }
+
+
+def arrival_json(a):
+    if a[0] == "synchronized":
+        return {"kind": "synchronized", "period_us": us(a[1]), "jitter_us": us(a[2])}
+    if a[0] == "poisson":
+        return {"kind": "poisson", "rate_per_rank": fixed3(a[1])}
+    return {"kind": "closed_loop", "think_us": us(a[1])}
+
+
+def event_config_json(cfg):
+    return {
+        "topologies": list(cfg["topologies"]),
+        "policies": list(cfg["policies"]),
+        "rank_counts": [float(r) for r in cfg["rank_counts"]],
+        "arrivals": [arrival_json(a) for a in cfg["arrivals"]],
+        "windows_us": [fixed3(w) for w in cfg["windows_us"]],
+        "fabric_oversubs": [fixed3(v) for v in cfg["fabric_oversubs"]],
+        "max_batch": float(cfg["max_batch"]),
+        "materials": float(cfg["materials"]),
+        "samples_per_request": [float(cfg["samples_per_request"][0]),
+                                float(cfg["samples_per_request"][1])],
+        "requests_per_burst": float(cfg["requests_per_burst"]),
+        "mir_every": float(cfg["mir_every"]),
+        "mir_samples": float(cfg["mir_samples"]),
+        "horizon_us": us(cfg["horizon_s"]),
+        "seed": float(cfg["seed"]),
+    }
+
+
+def event_summary_json(s):
+    lat = s["latency"]
+    return {
+        "requests": float(s["requests"]),
+        "samples": float(s["samples"]),
+        "batches": float(s["batches"]),
+        "mean_batch_samples": fixed3(s["mean_batch_samples"]),
+        "mean_us": us(lat["mean_s"]),
+        "p50_us": us(lat["p50_s"]),
+        "p90_us": us(lat["p90_s"]),
+        "p99_us": us(lat["p99_s"]),
+        "p999_us": us(lat["p999_s"]),
+        "max_us": us(lat["max_s"]),
+        "mean_link_overhead_us": us(s["mean_link_overhead_s"]),
+        "mean_contention_us": us(s["mean_contention_s"]),
+        "samples_per_s": fixed3(s["samples_per_s"]),
+        "makespan_us": us(s["makespan_s"]),
+        "slowdown_max": fixed3(s["slowdown_max"]),
+        "histogram": [
+            {"le_us": le_us, "count": float(c)}
+            for le_us, c in lat["histogram"]
+            if c > 0
+        ],
+        "overflow": float(lat["overflow"]),
+    }
+
+
+def event_scenario_json(s):
+    return {
+        "topology": s["topology"],
+        "policy": s["policy"],
+        "arrival": s["arrival"][0],
+        "ranks": float(s["ranks"]),
+        "window_us": fixed3(s["window_us"]),
+        "oversub": fixed3(s["oversub"]),
+        "summary": event_summary_json(s["summary"]),
+    }
+
+
+def event_campaign_json(result):
+    return {
+        "config": event_config_json(result["config"]),
+        "scenarios": [event_scenario_json(s) for s in result["scenarios"]],
+    }
+
+
+def cog_config_json(cfg):
+    return {
+        "topologies": list(cfg["topologies"]),
+        "policies": list(cfg["policies"]),
+        "rank_counts": [float(r) for r in cfg["rank_counts"]],
+        "models_per_rank": [float(m) for m in cfg["models_per_rank"]],
+        "swap_costs_us": [us(s) for s in cfg["swap_costs_s"]],
+        "overlaps": [fixed3(o) for o in cfg["overlaps"]],
+        "fabric_oversubs": [fixed3(v) for v in cfg["fabric_oversubs"]],
+        "timesteps": float(cfg["timesteps"]),
+        "compute_us": us(cfg["compute_s"]),
+        "requests_per_step": float(cfg["requests_per_step"]),
+        "samples_per_request": [float(cfg["samples_per_request"][0]),
+                                float(cfg["samples_per_request"][1])],
+        "mir_every": float(cfg["mir_every"]),
+        "mir_samples": float(cfg["mir_samples"]),
+        "residency_slots": float(cfg["residency_slots"]),
+        "window_us": fixed3(cfg["window_us"]),
+        "max_batch": float(cfg["max_batch"]),
+        "seed": float(cfg["seed"]),
+    }
+
+
+def cog_summary_json(s):
+    lat = s["latency"]
+    return {
+        "ranks": float(s["ranks"]),
+        "timesteps": float(s["timesteps"]),
+        "requests": float(s["requests"]),
+        "samples": float(s["samples"]),
+        "batches": float(s["batches"]),
+        "time_to_solution_us": us(s["time_to_solution_s"]),
+        "mean_step_us": us(s["mean_step_s"]),
+        "total_compute_us": us(s["total_compute_s"]),
+        "total_queue_us": us(s["total_queue_s"]),
+        "total_swap_us": us(s["total_swap_s"]),
+        "total_network_us": us(s["total_network_s"]),
+        "total_contention_us": us(s["total_contention_s"]),
+        "total_service_us": us(s["total_service_s"]),
+        "swaps": float(s["swaps"]),
+        "swap_time_us": us(s["swap_time_s"]),
+        "max_spread_us": us(s["max_spread_s"]),
+        "request_p50_us": us(lat["p50_s"]),
+        "request_p99_us": us(lat["p99_s"]),
+        "straggler_counts": [float(c) for c in s["straggler_counts"]],
+        "steps": [
+            {
+                "step": float(st["step"]),
+                "duration_us": us(st["end_s"] - st["start_s"]),
+                "straggler": float(st["straggler"]),
+                "compute_us": us(st["compute_s"]),
+                "queue_us": us(st["queue_s"]),
+                "swap_us": us(st["swap_s"]),
+                "network_us": us(st["network_s"]),
+                "contention_us": us(st["contention_s"]),
+                "service_us": us(st["service_s"]),
+                "spread_us": us(st["spread_s"]),
+            }
+            for st in s["steps"]
+        ],
+    }
+
+
+def cog_scenario_json(s):
+    return {
+        "topology": s["topology"],
+        "policy": s["policy"],
+        "ranks": float(s["ranks"]),
+        "models": float(s["models"]),
+        "swap_us": us(s["swap_s"]),
+        "overlap": fixed3(s["overlap"]),
+        "oversub": fixed3(s["oversub"]),
+        "summary": cog_summary_json(s["summary"]),
+    }
+
+
+def cog_campaign_json(result):
+    return {
+        "config": cog_config_json(result["config"]),
+        "scenarios": [cog_scenario_json(s) for s in result["scenarios"]],
+    }

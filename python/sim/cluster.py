@@ -1,0 +1,141 @@
+"""cluster transliteration: Backend impls, policies, Cluster."""
+
+import math
+
+import devices
+import rdu as rdu_mod
+from netsim import Link, payload_bytes
+
+ROUND_ROBIN = "round_robin"
+LEAST_OUTSTANDING = "least_outstanding"
+MODEL_AFFINITY = "model_affinity"
+LATENCY_AWARE = "latency_aware"
+
+ALL_POLICIES = [ROUND_ROBIN, LEAST_OUTSTANDING, MODEL_AFFINITY, LATENCY_AWARE]
+
+
+class BackendBase:
+    def __init__(self, name, link):
+        self.name = name
+        self.link = link
+        self.queue_s_v = 0.0
+
+    def queue_s(self):
+        return self.queue_s_v
+
+    def add_queue_s(self, s):
+        self.queue_s_v += s
+
+    def drain_queue_s(self, dt):
+        self.queue_s_v = max(self.queue_s_v - dt, 0.0)
+
+    def link_overhead_s(self, model, batch):
+        return self.link.rtt_overhead_s(
+            payload_bytes(model.input_elems, model.output_elems, batch)
+        )
+
+    def latency_s(self, model, batch):
+        return self.link_overhead_s(model, batch) + self.execute_s(model, batch)
+
+    def occupancy_s(self, model, batch):
+        return (self.execute_s(model, batch)
+                + self.link_overhead_s(model, batch) * (1.0 - self.link.async_overlap))
+
+
+class GpuBackend(BackendBase):
+    def __init__(self, name, gpu, api, link=None):
+        super().__init__(name, link if link is not None else Link.local())
+        self.gpu = gpu
+        self.api = api
+
+    def execute_s(self, model, batch):
+        return devices.GpuModel(self.gpu, self.api, model).latency_s(batch)
+
+
+class RduBackend(BackendBase):
+    def __init__(self, name, tiles, api, link=None):
+        super().__init__(name, link if link is not None else Link.infiniband_cx6())
+        self.tiles = tiles
+        self.api = api
+
+    def execute_s(self, model, batch):
+        return rdu_mod.RduModel(model, self.tiles, self.api).latency_best_s(batch)
+
+
+def _least_queued(backends, candidates):
+    best = candidates[0]
+    best_queue = math.inf
+    for idx in candidates:
+        q = backends[idx].queue_s()
+        if q < best_queue:
+            best = idx
+            best_queue = q
+    return best
+
+
+def select(policy, backends, rr_state, affinity, candidates, instance, profile, batch):
+    """policy::select; rr_state is a 1-element list (the cursor)."""
+    assert candidates
+    if policy == ROUND_ROBIN:
+        idx = candidates[rr_state[0] % len(candidates)]
+        rr_state[0] += 1
+        return idx
+    if policy == LEAST_OUTSTANDING:
+        return _least_queued(backends, candidates)
+    if policy == MODEL_AFFINITY:
+        idx = affinity.get(instance)
+        if idx is not None and idx in candidates:
+            return idx
+        idx = _least_queued(backends, candidates)
+        affinity[instance] = idx
+        return idx
+    if policy == LATENCY_AWARE:
+        best = candidates[0]
+        best_cost = math.inf
+        for idx in candidates:
+            b = backends[idx]
+            cost = b.queue_s() + b.latency_s(profile, batch)
+            if cost < best_cost:
+                best = idx
+                best_cost = cost
+        return best
+    raise ValueError(policy)
+
+
+class Cluster:
+    def __init__(self, backends, policy):
+        assert backends
+        self.backends = backends
+        self.policy = policy
+        self.rr_state = [0]
+        self.affinity = {}
+        self.stats = [[0, 0, 0.0] for _ in backends]  # requests, samples, busy_s
+        self.clock_s = 0.0
+        self.last_completion_s = 0.0
+
+    def advance_to(self, t_s):
+        dt = t_s - self.clock_s
+        if dt <= 0.0:
+            return
+        for b in self.backends:
+            b.drain_queue_s(dt)
+        self.clock_s = t_s
+
+    def submit_among(self, candidates, instance, profile, samples):
+        idx = select(self.policy, self.backends, self.rr_state, self.affinity,
+                     candidates, instance, profile, samples)
+        backend = self.backends[idx]
+        wait_s = backend.queue_s()
+        link_overhead_s = backend.link_overhead_s(profile, samples)
+        latency_s = wait_s + backend.latency_s(profile, samples)
+        occupancy = backend.occupancy_s(profile, samples)
+        backend.add_queue_s(occupancy)
+        st = self.stats[idx]
+        st[0] += 1
+        st[1] += samples
+        st[2] += occupancy
+        self.last_completion_s = max(self.last_completion_s, self.clock_s + latency_s)
+        return idx, wait_s, latency_s, link_overhead_s
+
+    def makespan_s(self):
+        return max(self.last_completion_s, self.clock_s)

@@ -1,0 +1,197 @@
+"""devices transliteration: ModelProfile builders + the GPU model."""
+
+import math
+
+BATCH_SAT = 32768.0
+
+HERMIT_WIDTHS = [42, 19, 17, 13, 10, 12, 16, 24, 32, 48, 64, 128, 256, 512, 1024, 2050,
+                 27, 27, 27, 27, 27, 30]
+
+
+class ModelProfile:
+    __slots__ = (
+        "name", "param_count", "flops_per_sample", "weight_bytes",
+        "activation_bytes_per_sample", "n_layers", "kernels_per_layer_naive",
+        "has_layernorm", "input_elems", "output_elems", "util_factor", "sat_exp_scale",
+    )
+
+
+def hermit():
+    params = 0
+    flops = 0.0
+    act_bytes = 0.0
+    for d_in, d_out in zip(HERMIT_WIDTHS, HERMIT_WIDTHS[1:]):
+        params += d_in * d_out + d_out
+        flops += 2.0 * float(d_in * d_out)
+        act_bytes += 2.0 * 2.0 * float(d_out)
+    p = ModelProfile()
+    p.name = "hermit"
+    p.param_count = params
+    p.flops_per_sample = flops
+    p.weight_bytes = 2.0 * float(params)
+    p.activation_bytes_per_sample = act_bytes
+    p.n_layers = len(HERMIT_WIDTHS) - 1
+    p.kernels_per_layer_naive = 3.0
+    p.has_layernorm = False
+    p.input_elems = 42
+    p.output_elems = 30
+    p.util_factor = 1.0
+    p.sat_exp_scale = 1.0
+    return p
+
+
+def mir():
+    channels = [1, 16, 32, 64, 128]
+    sizes = [48, 24, 12, 6]
+    params = 0
+    flops = 0.0
+    act_bytes = 0.0
+    for i in range(4):
+        cin, cout = channels[i], channels[i + 1]
+        hw = sizes[i] * sizes[i]
+        params += 9 * cin * cout + cout
+        flops += 2.0 * float(hw * 9 * cin * cout)
+        act_bytes += 2.0 * 2.0 * float(hw * cout)
+        params += 2 * cout
+    for d_in, d_out in [(4608, 64), (64, 64), (64, 4608)]:
+        params += d_in * d_out + d_out
+        flops += 2.0 * float(d_in * d_out)
+        act_bytes += 2.0 * 2.0 * float(d_out)
+    dec_sizes = [6, 6, 12, 24]
+    for i, layer in enumerate(reversed(range(4))):
+        cin, cout = channels[layer + 1], channels[layer]
+        stride = 1 if layer == 3 else 2
+        out_side = dec_sizes[i] * stride
+        hw = out_side * out_side
+        params += cout
+        flops += 2.0 * float(hw * 9 * cin * cout)
+        act_bytes += 2.0 * 2.0 * float(hw * cout)
+    p = ModelProfile()
+    p.name = "mir"
+    p.param_count = params
+    p.flops_per_sample = flops
+    p.weight_bytes = 2.0 * float(params)
+    p.activation_bytes_per_sample = act_bytes
+    p.n_layers = 15
+    p.kernels_per_layer_naive = 4.0
+    p.has_layernorm = True
+    p.input_elems = 48 * 48
+    p.output_elems = 48 * 48
+    p.util_factor = 0.065
+    p.sat_exp_scale = 0.065
+    return p
+
+
+def mir_noln():
+    p = mir()
+    p.name = "mir_noln"
+    p.has_layernorm = False
+    ln_params = sum(2 * c for c in [16, 32, 64, 128])
+    p.param_count -= ln_params
+    p.weight_bytes = 2.0 * float(p.param_count)
+    p.n_layers = 11
+    return p
+
+
+# ------------------------------------------------------------- APIs
+
+NAIVE_PYTORCH = "NaivePyTorch"
+TENSOR_RT = "TensorRt"
+CUDA_GRAPHS = "CudaGraphs"
+TRT_CUDA_GRAPHS = "TrtCudaGraphs"
+CPP_TENSOR_RT = "CppTensorRt"
+
+FUSED_EFF_BONUS = 2.22
+
+
+def api_host_launches(api, p):
+    layers = float(p.n_layers)
+    if api == NAIVE_PYTORCH:
+        return layers * p.kernels_per_layer_naive
+    if api in (TENSOR_RT, CPP_TENSOR_RT):
+        return layers
+    return 2.0  # CudaGraphs / TrtCudaGraphs
+
+
+def api_device_kernels(api, p):
+    layers = float(p.n_layers)
+    if api in (NAIVE_PYTORCH, CUDA_GRAPHS):
+        return layers * p.kernels_per_layer_naive
+    return layers
+
+
+def api_base_overhead_us(api):
+    return {
+        NAIVE_PYTORCH: 30.0,
+        TENSOR_RT: 40.0,
+        CUDA_GRAPHS: 45.0,
+        TRT_CUDA_GRAPHS: 70.0,
+        CPP_TENSOR_RT: 10.0,
+    }[api]
+
+
+def api_fused(api):
+    return api in (TENSOR_RT, TRT_CUDA_GRAPHS, CPP_TENSOR_RT)
+
+
+def api_layernorm_penalty(api, p):
+    if p.has_layernorm and api in (TENSOR_RT, TRT_CUDA_GRAPHS, CPP_TENSOR_RT):
+        return 2.2
+    return 1.0
+
+
+class Gpu:
+    __slots__ = ("name", "peak_half_tflops", "mem_bw_gbps", "launch_us", "kernel_min_us",
+                 "eff_sat", "sat_exponent", "tdp_w", "transistors_b", "plateau")
+
+    def __init__(self, name, peak, bw, launch, kmin, eff_sat, sat_exp, tdp, trans, plateau):
+        self.name = name
+        self.peak_half_tflops = peak
+        self.mem_bw_gbps = bw
+        self.launch_us = launch
+        self.kernel_min_us = kmin
+        self.eff_sat = eff_sat
+        self.sat_exponent = sat_exp
+        self.tdp_w = tdp
+        self.transistors_b = trans
+        self.plateau = plateau
+
+    @staticmethod
+    def a100():
+        return Gpu("A100", 312.0, 1555.0, 8.0, 1.5, 0.183, 0.30, 250.0, 54.2, None)
+
+
+class GpuModel:
+    def __init__(self, gpu, api, profile):
+        self.gpu = gpu
+        self.api = api
+        self.profile = profile
+
+    def host_overhead_s(self):
+        return (api_host_launches(self.api, self.profile) * self.gpu.launch_us
+                + api_base_overhead_us(self.api)) * 1e-6
+
+    def utilisation(self, batch):
+        b = min(float(batch), BATCH_SAT)
+        ramp = math.pow(b / BATCH_SAT, self.gpu.sat_exponent * self.profile.sat_exp_scale)
+        eff = self.gpu.eff_sat * self.profile.util_factor * ramp
+        if api_fused(self.api) and not self.profile.has_layernorm:
+            eff *= FUSED_EFF_BONUS
+        if self.gpu.plateau is not None:
+            threshold, penalty = self.gpu.plateau
+            if batch >= threshold:
+                eff *= penalty
+        return eff
+
+    def device_time_s(self, batch):
+        b = float(batch)
+        flops = self.profile.flops_per_sample * b * api_layernorm_penalty(self.api, self.profile)
+        compute = flops / (self.gpu.peak_half_tflops * 1e12 * self.utilisation(batch))
+        act = self.profile.activation_bytes_per_sample * b
+        bytes_ = self.profile.weight_bytes + (0.15 * act if api_fused(self.api) else act)
+        memory = bytes_ / (self.gpu.mem_bw_gbps * 1e9)
+        floor = api_device_kernels(self.api, self.profile) * self.gpu.kernel_min_us * 1e-6
+        return max(compute, memory, floor)
+
+    def latency_s(self, batch):
+        return self.host_overhead_s() + self.device_time_s(batch)

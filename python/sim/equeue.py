@@ -1,0 +1,36 @@
+"""eventsim::equeue transliteration: (time, class, seq) min-heap."""
+
+import heapq
+import math
+
+CLASS_COMPLETION = 0
+CLASS_ARRIVAL = 1
+CLASS_DEADLINE = 2
+
+
+class EventQueue:
+    __slots__ = ("heap", "seq")
+
+    def __init__(self):
+        self.heap = []
+        self.seq = 0
+
+    def push(self, time_s, event):
+        self.push_class(time_s, CLASS_ARRIVAL, event)
+
+    def push_class(self, time_s, class_, event):
+        assert math.isfinite(time_s) and time_s >= 0.0, f"bad event time {time_s}"
+        heapq.heappush(self.heap, (time_s, class_, self.seq, event))
+        self.seq += 1
+
+    def pop(self):
+        if not self.heap:
+            return None
+        t, _, _, event = heapq.heappop(self.heap)
+        return (t, event)
+
+    def peek_time(self):
+        return self.heap[0][0] if self.heap else None
+
+    def __len__(self):
+        return len(self.heap)

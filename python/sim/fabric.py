@@ -1,0 +1,197 @@
+"""fabric transliteration: Topology, max-min fair share, FabricEngine."""
+
+import math
+
+from netsim import Link
+
+INF = math.inf
+DONE_BYTES = 1e-6
+
+
+class Topology:
+    def __init__(self):
+        self.link = None
+        self.oversubscription = 1.0
+        self.capacities = []
+        self.hosts = 0
+        self.accel_ports = []  # None | (tx, rx)
+        self.host_tx = []
+        self.host_rx = []
+        self.host_up = None
+        self.host_down = None
+        self.accel_up = None
+        self.accel_down = None
+
+    @staticmethod
+    def node_local(n_nodes):
+        t = Topology()
+        t.link = Link.local()
+        t.hosts = n_nodes
+        t.accel_ports = [None] * n_nodes
+        return t
+
+    @staticmethod
+    def pooled(n_hosts, n_accels, oversubscription, link=None):
+        return Topology._build(n_hosts, 0, n_accels, oversubscription,
+                               link if link is not None else Link.infiniband_cx6())
+
+    @staticmethod
+    def hybrid(n_hosts, n_pool, oversubscription):
+        return Topology._build(n_hosts, n_hosts, n_pool, oversubscription,
+                               Link.infiniband_cx6())
+
+    @staticmethod
+    def _build(n_hosts, n_local_accels, n_pool, oversubscription, link):
+        assert n_hosts >= 1 and n_pool >= 1
+        assert oversubscription >= 1.0 and math.isfinite(oversubscription)
+        nic = link.eff_bandwidth
+        assert nic > 0.0 and math.isfinite(nic)
+        t = Topology()
+        t.link = link
+        t.oversubscription = oversubscription
+        t.hosts = n_hosts
+
+        def push(cap):
+            t.capacities.append(cap)
+            return len(t.capacities) - 1
+
+        t.host_tx = [push(nic) for _ in range(n_hosts)]
+        t.host_rx = [push(nic) for _ in range(n_hosts)]
+        t.host_up = push(float(n_hosts) * nic / oversubscription)
+        t.host_down = push(float(n_hosts) * nic / oversubscription)
+        t.accel_up = push(float(n_pool) * nic / oversubscription)
+        t.accel_down = push(float(n_pool) * nic / oversubscription)
+        t.accel_ports = [None] * n_local_accels
+        for _ in range(n_pool):
+            tx = push(nic)
+            rx = push(nic)
+            t.accel_ports.append((tx, rx))
+        return t
+
+    def accels(self):
+        return len(self.accel_ports)
+
+    def is_pooled(self, accel):
+        return self.accel_ports[accel] is not None
+
+    def dir_fixed_s(self, accel):
+        return self.link.dir_fixed_s() if self.accel_ports[accel] is not None else 0.0
+
+    def request_path(self, host, accel):
+        port = self.accel_ports[accel]
+        if port is None:
+            return []
+        return [self.host_tx[host], self.host_up, self.accel_down, port[1]]
+
+    def response_path(self, host, accel):
+        port = self.accel_ports[accel]
+        if port is None:
+            return []
+        return [port[0], self.accel_up, self.host_down, self.host_rx[host]]
+
+    def swap_path(self, accel):
+        port = self.accel_ports[accel]
+        if port is None:
+            return []
+        return [self.accel_down, port[1]]
+
+
+def max_min_rates(capacities, flows):
+    n = len(flows)
+    rates = [0.0] * n
+    frozen = [False] * n
+    remaining = list(capacities)
+    users = [0] * len(capacities)
+
+    for f, path in enumerate(flows):
+        if not path or all(math.isinf(capacities[l]) for l in path):
+            rates[f] = INF
+            frozen[f] = True
+        else:
+            for l in path:
+                users[l] += 1
+
+    left = sum(1 for fz in frozen if not fz)
+    while left > 0:
+        bottleneck = None
+        for l, cap in enumerate(remaining):
+            if users[l] == 0 or math.isinf(cap):
+                continue
+            share = cap / float(users[l])
+            if bottleneck is None or share < bottleneck[0]:
+                bottleneck = (share, l)
+        if bottleneck is None:
+            for f in range(n):
+                if not frozen[f]:
+                    rates[f] = INF
+                    frozen[f] = True
+            break
+        share, link = bottleneck
+        for f in range(n):
+            if frozen[f] or link not in flows[f]:
+                continue
+            rates[f] = share
+            frozen[f] = True
+            left -= 1
+            for l in flows[f]:
+                if math.isfinite(remaining[l]):
+                    remaining[l] = max(remaining[l] - share, 0.0)
+                users[l] -= 1
+    return rates
+
+
+class FabricEngine:
+    def __init__(self, topo):
+        self.topo = topo
+        self.flows = {}  # id -> [path, remaining, rate]; ids monotone
+        self.next_id = 0
+        self.now_s = 0.0
+
+    def active(self):
+        return len(self.flows)
+
+    def start(self, now_s, path, bytes_):
+        assert bytes_ >= 0.0 and math.isfinite(bytes_)
+        self.advance_to(now_s)
+        fid = self.next_id
+        self.next_id += 1
+        self.flows[fid] = [path, bytes_, 0.0]
+        self._recompute()
+        return fid
+
+    def advance_to(self, t_s):
+        dt = t_s - self.now_s
+        if dt > 0.0:
+            for f in self.flows.values():
+                if math.isinf(f[2]):
+                    f[1] = 0.0
+                else:
+                    f[1] = max(f[1] - f[2] * dt, 0.0)
+        self.now_s = max(self.now_s, t_s)
+
+    def _recompute(self):
+        paths = [f[0] for f in self.flows.values()]
+        rates = max_min_rates(self.topo.capacities, paths)
+        for f, r in zip(self.flows.values(), rates):
+            f[2] = r
+
+    @staticmethod
+    def _eta(f):
+        if f[1] <= DONE_BYTES or math.isinf(f[2]):
+            return 0.0
+        return f[1] / f[2]
+
+    def next_completion_s(self):
+        if not self.flows:
+            return None
+        return min(self.now_s + self._eta(f) for f in self.flows.values())
+
+    def take_completed(self, now_s):
+        self.advance_to(now_s)
+        done = [fid for fid, f in self.flows.items()
+                if f[1] <= DONE_BYTES or math.isinf(f[2])]
+        for fid in done:
+            del self.flows[fid]
+        if done:
+            self._recompute()
+        return done

@@ -1,0 +1,61 @@
+"""util::json writer transliteration: compact, BTreeMap key order,
+Rust `{}` float formatting."""
+
+from rustfloat import fmt_f64
+
+
+def write(value):
+    out = []
+    _write_into(value, out)
+    return "".join(out)
+
+
+def _write_into(value, out):
+    if value is None:
+        out.append("null")
+    elif value is True:
+        out.append("true")
+    elif value is False:
+        out.append("false")
+    elif isinstance(value, (int, float)):
+        out.append(fmt_f64(float(value)))
+    elif isinstance(value, str):
+        _write_escaped(value, out)
+    elif isinstance(value, list):
+        out.append("[")
+        for i, item in enumerate(value):
+            if i > 0:
+                out.append(",")
+            _write_into(item, out)
+        out.append("]")
+    elif isinstance(value, dict):
+        out.append("{")
+        for i, k in enumerate(sorted(value.keys())):
+            if i > 0:
+                out.append(",")
+            _write_escaped(k, out)
+            out.append(":")
+            _write_into(value[k], out)
+        out.append("}")
+    else:
+        raise TypeError(type(value))
+
+
+def _write_escaped(s, out):
+    out.append('"')
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif ord(c) < 0x20:
+            out.append(f"\\u{ord(c):04x}")
+        else:
+            out.append(c)
+    out.append('"')

@@ -1,0 +1,51 @@
+"""netsim transliteration: the Link model."""
+
+import math
+
+INF = math.inf
+
+
+class Link:
+    __slots__ = ("wire_latency_s", "soft_per_msg_s", "eff_bandwidth", "line_rate", "async_overlap")
+
+    def __init__(self, wire_latency_s, soft_per_msg_s, eff_bandwidth, line_rate, async_overlap):
+        self.wire_latency_s = wire_latency_s
+        self.soft_per_msg_s = soft_per_msg_s
+        self.eff_bandwidth = eff_bandwidth
+        self.line_rate = line_rate
+        self.async_overlap = async_overlap
+
+    @staticmethod
+    def infiniband_cx6():
+        return Link(1e-6, 8e-6, 2.1e9, 100e9 / 8.0, 0.5)
+
+    @staticmethod
+    def local():
+        return Link(0.0, 0.0, INF, INF, 1.0)
+
+    def clone(self):
+        return Link(
+            self.wire_latency_s,
+            self.soft_per_msg_s,
+            self.eff_bandwidth,
+            self.line_rate,
+            self.async_overlap,
+        )
+
+    def rtt_overhead_s(self, bytes_total):
+        if bytes_total > 0.0 and math.isfinite(self.eff_bandwidth):
+            transfer_s = bytes_total / self.eff_bandwidth
+        else:
+            transfer_s = 0.0
+        return 2.0 * self.wire_latency_s + self.soft_per_msg_s + transfer_s
+
+    def dir_fixed_s(self):
+        return self.wire_latency_s + 0.5 * self.soft_per_msg_s
+
+
+def payload_bytes(input_elems, output_elems, batch):
+    return 2.0 * float(input_elems + output_elems) * float(batch)
+
+
+def dir_payload_bytes(input_elems, output_elems, batch):
+    return (2.0 * float(input_elems) * float(batch), 2.0 * float(output_elems) * float(batch))

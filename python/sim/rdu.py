@@ -1,0 +1,97 @@
+"""rdu transliteration: the RDU dataflow model."""
+
+import math
+
+RDU_PYTHON = "Python"
+RDU_PYTHON_OPT = "PythonOptimized"
+RDU_CPP_OPT = "CppOptimized"
+
+TILE_SRAM_BYTES = 8.0 * 1024.0 * 1024.0
+PREFERRED_MB_SPEEDUP = 0.88
+
+
+def _host_us(api):
+    return {RDU_PYTHON: 75.0, RDU_PYTHON_OPT: 70.0, RDU_CPP_OPT: 18.0}[api]
+
+
+def _placement_speedup(api):
+    return 1.0 if api == RDU_PYTHON else 1.55
+
+
+def _per_micro_us(api):
+    return 1.2 if api == RDU_CPP_OPT else 0.55
+
+
+class RduModel:
+    def __init__(self, profile, tiles, api):
+        assert 1 <= tiles <= 4
+        self.profile = profile
+        self.tiles = tiles
+        self.api = api
+        self.preferred_mb = False
+
+    def depth(self):
+        per_tile = 3 if self.profile.name.startswith("mir") else 2
+        return per_tile * self.tiles
+
+    def t_sample_s(self):
+        full_rdu_rate = 9.9e6 if self.profile.name == "hermit" else 0.148e6
+        rate = full_rdu_rate * float(self.tiles) / 4.0 * _placement_speedup(self.api) / 1.55
+        return 1.0 / rate
+
+    def stream_bytes_per_sample(self):
+        if self.profile.name.startswith("mir"):
+            return 2.0 * 48.0 * 48.0 * 16.0
+        return 2.0 * 2050.0
+
+    def spill_factor(self, micro):
+        bytes_ = float(micro) * self.stream_bytes_per_sample()
+        sram = TILE_SRAM_BYTES * float(self.tiles)
+        if bytes_ <= sram:
+            return 1.0
+        return 1.0 + 1.05 * min(bytes_ / sram - 1.0, 6.0)
+
+    def t_min_s(self):
+        return 0.45e-6 + _per_micro_us(self.api) * 1e-6
+
+    def stage_s(self, micro):
+        return self.t_min_s() + float(micro) * self.t_sample_s() * self.spill_factor(micro)
+
+    def fill_stage_s(self, micro):
+        return self.t_min_s() + float(micro) * self.t_sample_s()
+
+    def latency_s(self, mini, micro):
+        n_micro = float(-(-mini // micro))  # div_ceil
+        lat = (_host_us(self.api) * 1e-6
+               + float(self.depth() - 1) * self.fill_stage_s(micro)
+               + n_micro * self.stage_s(micro))
+        if self.preferred_mb and micro % 6 == 0 and mini % micro == 0:
+            lat *= PREFERRED_MB_SPEEDUP
+        return lat
+
+    @staticmethod
+    def micro_candidates(mini, preferred):
+        v = []
+        m = 1
+        while m <= mini:
+            v.append(m)
+            m *= 2
+        if preferred:
+            m = 6
+            while m <= mini:
+                if mini % m == 0:
+                    v.append(m)
+                m += 6
+            v = sorted(set(v))
+        return v
+
+    def best_micro(self, mini):
+        best = (1, math.inf)
+        for micro in self.micro_candidates(mini, self.preferred_mb):
+            l = self.latency_s(mini, micro)
+            if l < best[1]:
+                best = (micro, l)
+        return best[0]
+
+    def latency_best_s(self, mini):
+        return self.latency_s(mini, self.best_micro(mini))

@@ -1,0 +1,61 @@
+"""util::rng transliteration: SplitMix64-seeded xoshiro256**."""
+
+import math
+
+from rustfloat import MASK64
+
+_INV_2_53 = 1.0 / float(1 << 53)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    __slots__ = ("s",)
+
+    def __init__(self, seed: int):
+        s = []
+        sm = seed & MASK64
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self) -> float:
+        return float(self.next_u64() >> 11) * _INV_2_53
+
+    def below(self, n: int) -> int:
+        assert n > 0
+        return self.next_u64() % n
+
+    def range(self, lo: int, hi: int) -> int:
+        assert lo <= hi
+        return lo + self.below(hi - lo + 1)
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.f64()
+
+    def normal(self) -> float:
+        u1 = max(self.f64(), 1e-300)
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def exponential(self, rate: float) -> float:
+        assert rate > 0.0
+        return -math.log(max(self.f64(), 1e-300)) / rate

@@ -1,0 +1,50 @@
+"""Generate the committed campaign goldens byte-exactly.
+
+Writes rust/tests/golden/{campaign,event,cogsim}_summary.json from
+the default configs — the same documents
+`cargo test --test campaign_golden` reproduces and compares.
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import campaign  # noqa: E402
+import jsonw  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+GOLDEN = os.path.join(REPO, "rust", "tests", "golden")
+
+
+def main():
+    os.makedirs(GOLDEN, exist_ok=True)
+    t0 = time.time()
+
+    doc = jsonw.write(campaign.campaign_json(campaign.run_campaign(
+        campaign.default_campaign_cfg())))
+    path = os.path.join(GOLDEN, "campaign_summary.json")
+    with open(path, "w") as f:
+        f.write(doc)
+    print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    doc = jsonw.write(campaign.event_campaign_json(campaign.run_event_campaign(
+        campaign.default_event_cfg())))
+    path = os.path.join(GOLDEN, "event_summary.json")
+    with open(path, "w") as f:
+        f.write(doc)
+    print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    doc = jsonw.write(campaign.cog_campaign_json(campaign.run_cog_campaign(
+        campaign.default_cog_cfg())))
+    path = os.path.join(GOLDEN, "cogsim_summary.json")
+    with open(path, "w") as f:
+        f.write(doc)
+    print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

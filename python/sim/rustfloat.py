@@ -1,0 +1,69 @@
+"""Rust-exact float helpers: `f64::round`, `Duration` nanosecond
+conversions, and the `{}` Display formatting util::json relies on."""
+
+import math
+from fractions import Fraction
+
+MASK64 = (1 << 64) - 1
+
+F64_MIN_POSITIVE = 2.2250738585072014e-308
+
+
+def rust_round(x: float) -> float:
+    """f64::round: nearest integer, ties away from zero (exact)."""
+    f = math.floor(x)
+    diff = x - f  # exact: |x - floor(x)| <= 1 and same scale
+    if diff > 0.5:
+        return float(f + 1)
+    if diff < 0.5:
+        return float(f)
+    # tie: away from zero
+    return float(f + 1) if x > 0.0 else float(f)
+
+
+def dur_from_secs_f64(x: float) -> int:
+    """Duration::from_secs_f64 as integer nanoseconds: nearest ns,
+    ties to even, computed exactly from the binary value."""
+    assert x >= 0.0 and math.isfinite(x)
+    ns = Fraction(x) * 10**9
+    return round(ns)  # Fraction.__round__ is ties-to-even
+
+
+def dur_as_secs_f64(ns: int) -> float:
+    """Duration::as_secs_f64: secs as f64 + nanos as f64 / 1e9."""
+    secs, nanos = divmod(ns, 10**9)
+    return float(secs) + float(nanos) / 1e9
+
+
+def _positional(s: str) -> str:
+    """Convert a repr like '2e-06' / '1.5e+16' to positional digits
+    (Rust's `{}` Display never uses exponent notation)."""
+    if "e" not in s and "E" not in s:
+        return s
+    mant, _, exp = s.partition("e" if "e" in s else "E")
+    e = int(exp)
+    neg = mant.startswith("-")
+    if neg:
+        mant = mant[1:]
+    if "." in mant:
+        int_part, frac_part = mant.split(".")
+    else:
+        int_part, frac_part = mant, ""
+    digits = int_part + frac_part
+    point = len(int_part) + e
+    if point <= 0:
+        out = "0." + "0" * (-point) + digits
+    elif point >= len(digits):
+        out = digits + "0" * (point - len(digits))
+    else:
+        out = digits[:point] + "." + digits[point:]
+    out = out.rstrip(".") if out.endswith(".") else out
+    return ("-" if neg else "") + out
+
+
+def fmt_f64(x: float) -> str:
+    """util::json's number rendering: integers < 1e15 as i64, the
+    rest via Rust `{}` Display (shortest round-trip, positional)."""
+    if x == math.trunc(x) and abs(x) < 1e15:
+        return str(int(x))
+    return _positional(repr(x))

@@ -1,0 +1,27 @@
+"""util::stats transliteration (mean, percentile)."""
+
+
+def mean(xs):
+    if not xs:
+        return 0.0
+    # iter().sum::<f64>() is sequential left-to-right addition
+    total = 0.0
+    for x in xs:
+        total += x
+    return total / float(len(xs))
+
+
+def percentile(xs, p):
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    rank = (p / 100.0) * float(len(s) - 1)
+    import math
+
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    lo_i, hi_i = int(lo), int(hi)
+    if lo_i == hi_i:
+        return s[lo_i]
+    frac = rank - float(lo_i)
+    return s[lo_i] * (1.0 - frac) + s[hi_i] * frac

@@ -1,0 +1,269 @@
+"""Re-verify every numeric claim the Rust test suite pins, against
+the transliterated pipeline.  Run after any engine change; pass
+--full to also re-derive the two slow goldens (event ~14 min,
+cogsim ~30 s in CPython).
+
+The claims mirror, in order: calibration anchors (netsim/devices/
+rdu/workload unit tests), the fabric degenerate limit and fair-share
+hand computations (fabric_props), the engine-level fabric properties
+(eventsim/cogsim in-file tests), and the campaign_golden headlines
+including the contention crossover's pinned numbers.
+"""
+
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import campaign as cp  # noqa: E402
+import cluster as cl  # noqa: E402
+import devices  # noqa: E402
+import jsonw  # noqa: E402
+import rdu  # noqa: E402
+import netsim  # noqa: E402
+import workload  # noqa: E402
+from cogsim import CogSim  # noqa: E402
+from eventsim import EventSim, FabricLayer  # noqa: E402
+from fabric import FabricEngine, Topology, max_min_rates  # noqa: E402
+
+CHECKS = [0]
+
+
+def ok(cond, msg):
+    CHECKS[0] += 1
+    assert cond, msg
+
+
+def pool():
+    return [cl.RduBackend("rdu/pool0", 4, rdu.RDU_CPP_OPT),
+            cl.RduBackend("rdu/pool1", 2, rdu.RDU_PYTHON)]
+
+
+def one_rdu():
+    return [cl.RduBackend("rdu/pool0", 4, rdu.RDU_CPP_OPT)]
+
+
+def ecfg(**kw):
+    base = dict(ranks=4, materials=8, samples_per_request=(2, 3), requests_per_burst=6,
+                mir_every=0, mir_samples=512, arrival=("synchronized", 0.02, 0.0),
+                batching=None, horizon_s=0.2, seed=42)
+    base.update(kw)
+    return base
+
+
+def ccfg(**kw):
+    base = dict(ranks=4, timesteps=8, compute_s=2e-3, compute_jitter_s=0.0,
+                requests_per_step=6, models=8, samples_per_request=(2, 3),
+                mir_every=0, mir_samples=512, overlap=0.0, swap_s=0.0,
+                residency_slots=4, batching=None, seed=42)
+    base.update(kw)
+    return base
+
+
+def fab(ranks, over, n=2):
+    return FabricLayer(Topology.pooled(ranks, n, over), list(range(n)), n)
+
+
+def anchors():
+    link = netsim.Link.infiniband_cx6()
+    ok(8e-6 <= link.rtt_overhead_s(netsim.payload_bytes(42, 30, 4)) <= 14e-6, "fig15 small")
+    ok(abs(link.rtt_overhead_s(netsim.payload_bytes(42, 30, 16384)) / 1.14e-3 - 1) < 0.15,
+       "fig15 16k")
+    total = netsim.payload_bytes(42, 30, 64)
+    ok(abs(2 * link.dir_fixed_s() + total / link.eff_bandwidth
+           - link.rtt_overhead_s(total)) < 1e-15, "direction split")
+    ok(devices.hermit().param_count == 2866530, "hermit params")
+    ok(devices.mir_noln().param_count == 695921, "mir_noln params")
+    m = devices.GpuModel(devices.Gpu.a100(), devices.NAIVE_PYTORCH, devices.hermit())
+    ok(abs(m.latency_s(1) * 1e3 / 0.65 - 1) < 0.10, "a100 naive @1")
+    ok(abs(m.latency_s(32768) * 1e3 / 3.92 - 1) < 0.10, "a100 naive @32k")
+    r = rdu.RduModel(devices.hermit(), 4, rdu.RDU_CPP_OPT)
+    ok(0.02 < r.latency_best_s(1) * 1e3 < 0.06, "rdu cpp @1")
+    w = workload.HydraWorkload(1, 10000, 8, (2, 3), 0)
+    ok(20000 <= sum(s for *_, s in w.timestep(0)) <= 30000, "hydra volume")
+
+
+def fair_share():
+    nic = netsim.Link.infiniband_cx6().eff_bandwidth
+    t = Topology.pooled(4, 2, 1.0)
+    ok(max_min_rates(t.capacities, [t.request_path(0, 0), t.request_path(1, 0)])
+       == [nic / 2.0, nic / 2.0], "2 flows NIC bottleneck")
+    ok(max_min_rates(t.capacities, [t.request_path(0, 0), t.request_path(1, 0),
+                                    t.request_path(2, 1)])
+       == [nic / 2.0, nic / 2.0, nic], "3 flows")
+    t8 = Topology.pooled(4, 2, 8.0)
+    rates = max_min_rates(t8.capacities, [t8.request_path(h, h % 2) for h in range(4)])
+    ok(all(abs(r - nic / 16.0) < 1e-6 for r in rates), "4 flows uplink bottleneck")
+
+
+def degenerate_limit():
+    link = netsim.Link.infiniband_cx6()
+    topo = Topology.pooled(4, 2, 1.0)
+    for batch in (1, 4, 64, 1024, 16384):
+        b_in, b_out = netsim.dir_payload_bytes(42, 30, batch)
+        eng = FabricEngine(topo)
+        elapsed = 0.0
+        for b in (b_in, b_out):
+            eng.start(elapsed, topo.request_path(0, 1), b)
+            t = eng.next_completion_s()
+            eng.take_completed(t)
+            elapsed = t + topo.dir_fixed_s(1)
+        ok(abs(elapsed - link.rtt_overhead_s(netsim.payload_bytes(42, 30, batch))) < 1e-9,
+           f"1-flow limit batch {batch}")
+
+    c = ccfg(ranks=1, timesteps=6, requests_per_step=1, models=1)
+    legacy = CogSim(one_rdu(), cl.ROUND_ROBIN, c, [0], [0])
+    legacy.run_to_completion()
+    f = CogSim(one_rdu(), cl.ROUND_ROBIN, c, [0], [0], fab(1, 1.0, 1))
+    f.run_to_completion()
+    for l, fr in zip(legacy.records, f.records):
+        ok(abs(l["complete_s"] - fr["complete_s"]) < 1e-9, "cogsim degenerate complete")
+        ok(abs(l["link_s"] - fr["link_s"]) < 1e-9, "cogsim degenerate link")
+        ok(abs(fr["contention_s"]) < 1e-9, "cogsim degenerate contention")
+    ok(abs(legacy.time_to_solution_s() - f.time_to_solution_s()) < 1e-9, "degenerate TTS")
+
+    ec = ecfg(ranks=1, arrival=("closed_loop", 2e-3), horizon_s=0.05)
+    le = EventSim(one_rdu(), cl.ROUND_ROBIN, ec, [0], [0])
+    le.run_to_completion()
+    fe = EventSim(one_rdu(), cl.ROUND_ROBIN, ec, [0], [0], fab(1, 1.0, 1))
+    fe.run_to_completion()
+    ok(le.submitted == fe.submitted > 0, "closed loop volume")
+    for l, fr in zip(le.records, fe.records):
+        ok(abs(l["complete_s"] - fr["complete_s"]) < 1e-9, "eventsim degenerate complete")
+
+
+def engine_properties():
+    sim = EventSim(pool(), cl.LEAST_OUTSTANDING, ecfg(ranks=16, horizon_s=0.045),
+                   [0, 1], [0, 1], fab(16, 4.0))
+    sim.run_to_completion()
+    ok(sim.completed == sim.submitted == 3 * 16 * 6, "fabric conservation")
+    s = sim.summary()
+    ok(s["mean_contention_s"] > 0, "burst contention")
+    ok(s["mean_link_overhead_s"] > s["mean_contention_s"], "contention subset")
+    ideal = netsim.Link.infiniband_cx6()
+    for r in sim.records:
+        floor = ideal.rtt_overhead_s(netsim.payload_bytes(42, 30, r["batch_samples"]))
+        ok(r["link_overhead_s"] >= floor - 1e-12, "measured >= uncontended floor")
+
+    for policy, key in ((cl.LEAST_OUTSTANDING, 32), (cl.ROUND_ROBIN, 16)):
+        last = (0.0, 0.0, 0.0)
+        for over in (1.0, 2.0, 4.0, 8.0):
+            sim = EventSim(pool(), policy, ecfg(ranks=key, horizon_s=0.045),
+                           [0, 1], [0, 1], fab(key, over))
+            sim.run_to_completion()
+            n = len(sim.records)
+            cur = (sim.summary()["mean_link_overhead_s"],
+                   sum(r["complete_s"] for r in sim.records) / n,
+                   max(r["complete_s"] for r in sim.records))
+            ok(all(c >= l - 1e-12 for c, l in zip(cur, last)),
+               f"event monotone r{key} o{over}")
+            last = cur
+
+    sim = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(ranks=12, timesteps=5, swap_s=200e-6),
+                 [0, 1], [0, 1], fab(12, 4.0))
+    sim.run_to_completion()
+    for s in sim.steps:
+        comp = (s["compute_s"] + s["queue_s"] + s["swap_s"] + s["network_s"]
+                + s["service_s"])
+        ok(abs(comp - (s["end_s"] - s["start_s"])) < 1e-9, "breakdown sums")
+        ok(0 <= s["contention_s"] <= s["network_s"] + 1e-15, "contention subset of net")
+    ok(sim.summary()["total_contention_s"] > 0, "cogsim contention")
+
+    last = 0.0
+    for over in (1.0, 2.0, 4.0, 8.0):
+        s2 = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(ranks=16, timesteps=4),
+                    [0, 1], [0, 1], fab(16, over))
+        s2.run_to_completion()
+        ok(s2.time_to_solution_s() >= last - 1e-12, f"cog TTS monotone o{over}")
+        last = s2.time_to_solution_s()
+
+    free = CogSim(pool(), cl.ROUND_ROBIN, ccfg(ranks=8, timesteps=4, swap_s=0.0),
+                  [0, 1], [0, 1], fab(8, 2.0))
+    free.run_to_completion()
+    sw = CogSim(pool(), cl.ROUND_ROBIN, ccfg(ranks=8, timesteps=4, swap_s=2e-3),
+                [0, 1], [0, 1], fab(8, 2.0))
+    sw.run_to_completion()
+    ok(sw.time_to_solution_s() > free.time_to_solution_s(), "swap congestion slows TTS")
+    ok(free.swap_time_s == 0.0 and sw.swaps > 0, "swap accounting")
+    ok(sw.swap_time_s >= 2e-3 * sw.swaps - 1e-9, "contended swap >= uncontended")
+
+
+def campaign_headlines():
+    cfg = cp.default_cog_cfg()
+
+    def cog(topology, policy, ranks, swap, oversub):
+        return cp.run_cog_scenario(topology, policy, ranks, 8, swap, 0.0, oversub,
+                                   cfg)["summary"]
+
+    aff = cog("pooled", cl.MODEL_AFFINITY, 4, 2e-3, 1.0)
+    rr = cog("pooled", cl.ROUND_ROBIN, 4, 2e-3, 1.0)
+    aff0 = cog("pooled", cl.MODEL_AFFINITY, 4, 0.0, 1.0)
+    rr0 = cog("pooled", cl.ROUND_ROBIN, 4, 0.0, 1.0)
+    ok(aff["time_to_solution_s"] < rr["time_to_solution_s"], "affinity wins TTS")
+    ok(aff["swaps"] * 2 < rr["swaps"], "affinity swaps less")
+    ok(aff["total_swap_s"] < rr["total_swap_s"], "affinity swap share")
+    ok(aff["time_to_solution_s"] / rr["time_to_solution_s"]
+       < aff0["time_to_solution_s"] / rr0["time_to_solution_s"], "swap moves the ratio")
+
+    # the contention crossover with its pinned numbers (±2%)
+    within = lambda x, t: abs(x / t - 1.0) < 0.02
+    for ranks in (4, 32):
+        last = 0.0
+        for o in (1.0, 2.0, 4.0, 8.0):
+            t = cog("pooled", cl.LATENCY_AWARE, ranks, 0.0, o)["time_to_solution_s"]
+            ok(t >= last - 1e-12, f"crossover monotone r{ranks} o{o}")
+            last = t
+    p4 = cog("pooled", cl.LATENCY_AWARE, 4, 0.0, 1.0)["time_to_solution_s"]
+    l4 = cog("local", cl.LATENCY_AWARE, 4, 0.0, 1.0)["time_to_solution_s"]
+    l32 = cog("local", cl.LATENCY_AWARE, 32, 0.0, 1.0)["time_to_solution_s"]
+    relaxed = cog("pooled", cl.LATENCY_AWARE, 32, 0.0, 1.0)
+    starved = cog("pooled", cl.LATENCY_AWARE, 32, 0.0, 8.0)
+    ok(p4 < l4, "pooled wins at 4 ranks")
+    ok(starved["time_to_solution_s"] > l32, "pooled loses at 32 ranks 8:1")
+    ok(within(p4, 20.70e-3), f"pinned p4 {p4}")
+    ok(within(l4, 21.64e-3) and within(l32, 21.64e-3), f"pinned local {l4} {l32}")
+    ok(within(starved["time_to_solution_s"], 53.43e-3), "pinned starved")
+    ok(starved["total_contention_s"] > 8.0 * relaxed["total_contention_s"],
+       "contention grows ~10x")
+
+    ecfg_ = cp.default_event_cfg()
+    bursty = ("synchronized", 0.02, 0.0)
+    for pol in (cl.ROUND_ROBIN, cl.LATENCY_AWARE):
+        off = cp.run_event_scenario("pooled", pol, bursty, 64, 0.0, 1.0, ecfg_)["summary"]
+        on = cp.run_event_scenario("pooled", pol, bursty, 64, 200.0, 1.0, ecfg_)["summary"]
+        ok(on["latency"]["p99_s"] < off["latency"]["p99_s"], f"batching wins p99 {pol}")
+        ok(on["batches"] < off["batches"] / 4, "fewer batches")
+        ok(on["mean_batch_samples"] > 4.0 * off["mean_batch_samples"], "bigger batches")
+
+
+def golden_stability():
+    golden = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))), "rust", "tests", "golden")
+    doc = jsonw.write(cp.campaign_json(cp.run_campaign(cp.default_campaign_cfg())))
+    with open(os.path.join(golden, "campaign_summary.json")) as f:
+        ok(f.read() == doc, "analytic golden reproduces")
+    if "--full" in sys.argv:
+        doc = jsonw.write(cp.event_campaign_json(cp.run_event_campaign(
+            cp.default_event_cfg())))
+        with open(os.path.join(golden, "event_summary.json")) as f:
+            ok(f.read() == doc, "event golden reproduces")
+        doc = jsonw.write(cp.cog_campaign_json(cp.run_cog_campaign(
+            cp.default_cog_cfg())))
+        with open(os.path.join(golden, "cogsim_summary.json")) as f:
+            ok(f.read() == doc, "cogsim golden reproduces")
+
+
+def main():
+    t0 = time.time()
+    for phase in (anchors, fair_share, degenerate_limit, engine_properties,
+                  campaign_headlines, golden_stability):
+        t1 = time.time()
+        phase()
+        print(f"{phase.__name__}: OK ({time.time() - t1:.1f}s)")
+    print(f"\n{CHECKS[0]} checks passed in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

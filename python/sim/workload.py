@@ -1,0 +1,55 @@
+"""workload transliteration: Hydra + MIR request generators."""
+
+import math
+
+from rng import Rng
+from rustfloat import MASK64
+
+
+def material_model(material):
+    return f"hermit/mat{material}"
+
+
+class HydraWorkload:
+    def __init__(self, ranks, zones_per_rank, materials, inferences_per_zone, seed):
+        self.ranks = ranks
+        self.zones_per_rank = zones_per_rank
+        self.materials = materials
+        self.inferences_per_zone = inferences_per_zone
+        self.seed = seed
+
+    def timestep(self, t):
+        rng = Rng(self.seed ^ ((t * 0x9E3779B9) & MASK64))
+        reqs = []
+        for rank in range(self.ranks):
+            zones_of_material = [0] * self.materials
+            for _ in range(self.zones_per_rank):
+                zones_of_material[rng.below(self.materials)] += 1
+            for mat, zones in enumerate(zones_of_material):
+                if zones == 0:
+                    continue
+                lo, hi = self.inferences_per_zone
+                total = 0
+                for _ in range(zones):
+                    total += rng.range(lo, hi)
+                reqs.append((t, rank, material_model(mat), total))
+        return reqs
+
+
+class MirWorkload:
+    def __init__(self, ranks, base_zones, variation, seed):
+        self.ranks = ranks
+        self.base_zones = base_zones
+        self.variation = variation
+        self.seed = seed
+
+    def timestep(self, t):
+        rng = Rng(self.seed ^ ((t * 0x517CC1B7) & MASK64))
+        phase = float(t) / 50.0 * (2.0 * math.pi)
+        out = []
+        for rank in range(self.ranks):
+            drift = 1.0 + self.variation * math.sin(phase)
+            jitter = max(1.0 + 0.1 * rng.normal(), 0.2)
+            zones = int(max(float(self.base_zones) * drift * jitter, 1.0))
+            out.append((t, rank, "mir", zones))
+        return out

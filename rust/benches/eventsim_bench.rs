@@ -1,0 +1,89 @@
+//! Event-engine throughput micro-benchmark: events/sec with and
+//! without the contention-aware fabric layer.
+//!
+//! The fabric turns every remote dispatch into 3–4 events plus a
+//! max-min fair-share recomputation per flow start/finish; this
+//! bench pins what that costs the simulator itself (not the
+//! simulated system).  Results go to `BENCH_eventsim.json` at the
+//! repo root so runs can be diffed across commits.
+//!
+//! ```bash
+//! cargo bench --bench eventsim_bench            # full budget
+//! cargo bench --bench eventsim_bench -- --smoke # CI-sized
+//! ```
+
+use std::collections::BTreeMap;
+
+use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
+use cogsim_disagg::eventsim::{EventSim, EventSimConfig};
+use cogsim_disagg::fabric::{FabricSpec, Topology};
+use cogsim_disagg::rdu::RduApi;
+use cogsim_disagg::util::bench::Bencher;
+use cogsim_disagg::util::json::{write as json_write, Value};
+
+fn pool() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn sim_cfg(ranks: usize, horizon_s: f64) -> EventSimConfig {
+    EventSimConfig { ranks, horizon_s, ..Default::default() }
+}
+
+/// One measured configuration: run the sim to completion, report
+/// events processed so the bench can normalise to events/sec.
+fn run_once(ranks: usize, horizon_s: f64, fabric: bool) -> u64 {
+    let cfg = sim_cfg(ranks, horizon_s);
+    let mut sim = if fabric {
+        let spec = FabricSpec {
+            topology: Topology::pooled(ranks, 2, 4.0),
+            accel_of_backend: vec![0, 1],
+        };
+        EventSim::with_fabric(pool(), Policy::LeastOutstanding, cfg, vec![0, 1], vec![0, 1], spec)
+    } else {
+        EventSim::new(pool(), Policy::LeastOutstanding, cfg)
+    };
+    sim.run_to_completion();
+    sim.events_processed()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
+    let (ranks, horizon_s) = if smoke { (16, 0.045) } else { (64, 0.205) };
+
+    let mut doc = BTreeMap::new();
+    doc.insert("ranks".to_string(), Value::Number(ranks as f64));
+    doc.insert("horizon_us".to_string(), Value::Number(horizon_s * 1e6));
+    doc.insert("smoke".to_string(), Value::Bool(smoke));
+
+    let mut results = BTreeMap::new();
+    for (key, fabric) in [("legacy_link", false), ("fabric_4to1", true)] {
+        let events = run_once(ranks, horizon_s, fabric);
+        let r = bencher.run(&format!("eventsim/{key}"), || {
+            std::hint::black_box(run_once(ranks, horizon_s, fabric));
+        });
+        let events_per_s = events as f64 / r.mean_secs();
+        println!("{r}");
+        println!("  -> {events} events/run, {events_per_s:.0} events/s");
+        let mut m = BTreeMap::new();
+        m.insert("events_per_run".to_string(), Value::Number(events as f64));
+        m.insert(
+            "events_per_s".to_string(),
+            Value::Number((events_per_s).round()),
+        );
+        m.insert(
+            "mean_run_us".to_string(),
+            Value::Number((r.mean_secs() * 1e6).round()),
+        );
+        m.insert("iters".to_string(), Value::Number(r.iters as f64));
+        results.insert(key.to_string(), Value::Object(m));
+    }
+    doc.insert("results".to_string(), Value::Object(results));
+
+    let out = "BENCH_eventsim.json";
+    std::fs::write(out, json_write(&Value::Object(doc))).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -80,6 +80,12 @@ pub struct StepBreakdown {
     pub swap_s: f64,
     /// Link round trip of the critical request's batch.
     pub network_s: f64,
+    /// Contention share of `network_s`: measured transfer time minus
+    /// the uncontended [`crate::netsim::Link::rtt_overhead_s`] for
+    /// the same payload.  Zero without the fabric layer; a *subset*
+    /// of `network_s`, not an extra component (the sum invariant is
+    /// unchanged).
+    pub contention_s: f64,
     /// Device execution of the critical request's batch.
     pub service_s: f64,
     /// Straggler spread: last rank finish minus first rank finish.
@@ -119,6 +125,10 @@ pub struct CogSummary {
     pub total_queue_s: f64,
     pub total_swap_s: f64,
     pub total_network_s: f64,
+    /// Contention share of `total_network_s` (a subset, not an extra
+    /// component): what the shared fabric cost beyond the degenerate
+    /// 1-flow link.  Zero without the fabric layer.
+    pub total_contention_s: f64,
     pub total_service_s: f64,
     /// Per-request (emit → complete) latency distribution.
     pub latency: LatencyDist,
@@ -149,6 +159,10 @@ pub struct EventSummary {
     pub latency: LatencyDist,
     /// Mean link round-trip share of request latency, seconds.
     pub mean_link_overhead_s: f64,
+    /// Mean fabric-contention share of the link overhead (measured
+    /// transfer time beyond the uncontended round trip); zero without
+    /// the fabric layer.
+    pub mean_contention_s: f64,
     /// Mean latency per originating rank (index = rank).
     pub per_rank_mean_s: Vec<f64>,
     /// Worst rank mean over best rank mean (1.0 = perfectly fair).

@@ -30,6 +30,12 @@
 //! * **metrics** — full latency distributions
 //!   (p50/p90/p99/p99.9, histogram, per-rank slowdown) instead of
 //!   means only ([`metrics::LatencyDist`]);
+//! * **fabric** — optionally ([`EventSim::with_fabric`]), remote
+//!   dispatches ride the contention-aware [`crate::fabric`] layer:
+//!   the fixed link charge becomes two time-varying transfer events
+//!   (request in, result out) competing for shared leaf/spine
+//!   bandwidth under max-min fair share, so a 64-rank burst pays for
+//!   the wire it actually shares;
 //! * **cogsim** — the *application-level* coupling ([`cogsim::CogSim`]):
 //!   N ranks run T bulk-synchronous timesteps, each stalling on its
 //!   in-the-loop inference burst, with per-backend model residency and
@@ -52,6 +58,8 @@ use std::time::{Duration, Instant};
 use crate::cluster::{policy, Backend, Policy};
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, PendingRequest, Priority};
 use crate::devices::{profiles, ModelProfile};
+use crate::fabric::{FabricEngine, FabricSpec};
+use crate::netsim::dir_payload_bytes;
 use crate::util::rng::Rng;
 use crate::workload::HydraWorkload;
 
@@ -188,6 +196,106 @@ impl BatchStage {
     }
 }
 
+/// The contention-aware network stage shared by [`EventSim`] and
+/// [`cogsim::CogSim`]: a [`FabricSpec`] (topology + backend→accel
+/// endpoint map) driving an incremental [`FabricEngine`], plus the
+/// flow→continuation table and the wake-up versioning both engines
+/// use.
+///
+/// Flow completion times change whenever the active flow set changes,
+/// so a previously armed wake-up event can go stale; every mutation
+/// bumps `wake_version` and arms a fresh wake-up at the engine's new
+/// earliest completion, and handlers drop wake-ups whose version is
+/// not current.
+pub(crate) struct FabricLayer {
+    pub(crate) spec: FabricSpec,
+    pub(crate) engine: FabricEngine,
+    pub(crate) cont: BTreeMap<u64, FlowCont>,
+    pub(crate) wake_version: u64,
+    /// Per-backend device-busy horizon: fabric batches execute
+    /// strictly one at a time per device ([`Self::occupy`]).
+    pub(crate) busy_until_s: Vec<f64>,
+}
+
+/// What happens when a fabric flow finishes: `token` indexes the
+/// engine's in-transit batch table.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum FlowCont {
+    /// Request payload arrived at the accelerator.
+    In { token: usize },
+    /// Model weights arrived at the accelerator (cogsim residency).
+    Swap { token: usize },
+    /// Result payload arrived back at the host.
+    Out { token: usize },
+}
+
+impl FabricLayer {
+    pub(crate) fn new(spec: FabricSpec, n_backends: usize) -> FabricLayer {
+        spec.validate(n_backends);
+        let engine = FabricEngine::new(spec.topology.clone());
+        FabricLayer {
+            spec,
+            engine,
+            cont: BTreeMap::new(),
+            wake_version: 0,
+            busy_until_s: vec![0.0; n_backends],
+        }
+    }
+
+    /// Serialize one batch onto a backend's device: execution starts
+    /// at `max(ready, device free)` (work-conserving — a batch whose
+    /// payload lands first runs first), never overlapping the
+    /// previous batch.  Returns `(device wait, completion time)` and
+    /// advances the device clock.  The dispatch-time `queue_s`
+    /// reservation remains the *routing* signal; this clock is the
+    /// physical exclusivity constraint.
+    pub(crate) fn occupy(&mut self, backend: usize, ready_s: f64, exec_s: f64) -> (f64, f64) {
+        let start_s = ready_s.max(self.busy_until_s[backend]);
+        let done_s = start_s + exec_s;
+        self.busy_until_s[backend] = done_s;
+        (start_s - ready_s, done_s)
+    }
+
+    /// Stale-check a wake-up; when current, drain every finished
+    /// flow and hand back its continuation (`None` = stale, drop it).
+    pub(crate) fn drain_wake(&mut self, version: u64, clock_s: f64) -> Option<Vec<FlowCont>> {
+        if version != self.wake_version {
+            return None;
+        }
+        let done = self.engine.take_completed(clock_s);
+        Some(
+            done.iter()
+                .map(|flow| self.cont.remove(flow).expect("completed flow has a continuation"))
+                .collect(),
+        )
+    }
+
+    /// Bump the wake version and return the `(time, version)` to arm
+    /// at the engine's earliest completion; `None` when idle.
+    pub(crate) fn next_wake(&mut self, clock_s: f64) -> Option<(f64, u64)> {
+        let t = self.engine.next_completion_s()?;
+        self.wake_version += 1;
+        Some((t.max(clock_s), self.wake_version))
+    }
+
+    /// Does `backend` sit behind the shared fabric (vs in its node)?
+    pub(crate) fn is_remote(&self, backend: usize) -> bool {
+        self.spec.topology.is_pooled(self.spec.accel_of_backend[backend])
+    }
+
+    pub(crate) fn accel(&self, backend: usize) -> usize {
+        self.spec.accel_of_backend[backend]
+    }
+
+    /// Uncontended round trip for a payload — the degenerate
+    /// [`crate::netsim::Link`] charge the fabric collapses to with
+    /// one flow on a 1:1 topology; measured transfer time beyond it
+    /// is the *contention* share.
+    pub(crate) fn ideal_rtt_s(&self, bytes_total: f64) -> f64 {
+        self.spec.topology.link().rtt_overhead_s(bytes_total)
+    }
+}
+
 /// One event-sim run's knobs.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EventSimConfig {
@@ -245,8 +353,13 @@ pub struct RequestRecord {
     pub backend: usize,
     /// Total samples in the dispatched batch this request rode in.
     pub batch_samples: usize,
-    /// Link round-trip share of the service time, seconds.
+    /// Link round-trip share of the service time, seconds.  With the
+    /// fabric layer this is the *measured* transfer time (both
+    /// directions, fixed latency included).
     pub link_overhead_s: f64,
+    /// Fabric-contention share of `link_overhead_s`: measured minus
+    /// the uncontended round trip.  Zero without the fabric layer.
+    pub contention_s: f64,
 }
 
 impl RequestRecord {
@@ -283,9 +396,39 @@ enum Event {
     BatchDeadline,
     /// A dispatched batch finished; ids index the request metadata.
     Completion { ids: Vec<usize> },
+    /// The fabric engine's earliest flow completion (stale when
+    /// `version` is no longer current — see [`FabricLayer`]).
+    FabricWake { version: u64 },
+    /// A batch's request payload finished its fixed-latency tail and
+    /// is at the accelerator; begin queue + execution.
+    XferInDone { token: usize },
+    /// A batch's device execution finished; start the result flow.
+    ServiceDone { token: usize },
+    /// The result payload is back at the host; complete the batch.
+    XferOutDone { token: usize },
 }
 
-/// The engine: backends + policy + event queue + optional batcher.
+/// One batch in flight through the fabric: which phase timings have
+/// been measured so far (token-indexed; records are filled when the
+/// result lands).
+#[derive(Debug, Clone)]
+struct BatchTransit {
+    ids: Vec<usize>,
+    backend: usize,
+    accel: usize,
+    host: usize,
+    bytes_out: f64,
+    dispatch_s: f64,
+    net_in_s: f64,
+    exec_s: f64,
+    out_start_s: f64,
+    ideal_rtt_s: f64,
+    /// First record index of this batch (`ids.len()` consecutive).
+    rec0: usize,
+}
+
+/// The engine: backends + policy + event queue + optional batcher +
+/// optional contention-aware fabric.
 pub struct EventSim {
     cfg: EventSimConfig,
     backends: Vec<Box<dyn Backend>>,
@@ -299,6 +442,8 @@ pub struct EventSim {
     clock_s: f64,
     events: EventQueue<Event>,
     batcher: Option<BatchStage>,
+    fabric: Option<FabricLayer>,
+    transits: Vec<BatchTransit>,
     rngs: Vec<Rng>,
     pending: Vec<PendingMeta>,
     records: Vec<RequestRecord>,
@@ -306,6 +451,7 @@ pub struct EventSim {
     dispatched: u64,
     completed: u64,
     batches: u64,
+    events_processed: u64,
 }
 
 impl EventSim {
@@ -355,6 +501,8 @@ impl EventSim {
             clock_s: 0.0,
             events: EventQueue::new(),
             batcher,
+            fabric: None,
+            transits: Vec::new(),
             rngs,
             pending: Vec::new(),
             records: Vec::new(),
@@ -362,8 +510,28 @@ impl EventSim {
             dispatched: 0,
             completed: 0,
             batches: 0,
+            events_processed: 0,
         };
         sim.seed_generators();
+        sim
+    }
+
+    /// As [`Self::with_tiers`], with remote dispatches carried by the
+    /// contention-aware fabric: the fixed `Link::rtt_overhead_s`
+    /// charge is replaced by time-varying transfer events (request
+    /// payload in, result payload out) competing for shared-link
+    /// bandwidth under max-min fair share.  Backends whose accel
+    /// endpoint is node-local in the topology keep the legacy path.
+    pub fn with_fabric(
+        backends: Vec<Box<dyn Backend>>,
+        policy: Policy,
+        cfg: EventSimConfig,
+        hermit_tier: Vec<usize>,
+        mir_tier: Vec<usize>,
+        spec: FabricSpec,
+    ) -> EventSim {
+        let mut sim = Self::with_tiers(backends, policy, cfg, hermit_tier, mir_tier);
+        sim.fabric = Some(FabricLayer::new(spec, sim.backends.len()));
         sim
     }
 
@@ -402,6 +570,7 @@ impl EventSim {
         let Some((t, event)) = self.events.pop() else {
             return false;
         };
+        self.events_processed += 1;
         self.advance_clock(t);
         self.handle(event);
         true
@@ -440,6 +609,10 @@ impl EventSim {
             Event::ClosedArrival { rank } => self.on_closed(rank),
             Event::BatchDeadline => self.pump_batcher(),
             Event::Completion { ids } => self.on_completion(ids),
+            Event::FabricWake { version } => self.on_fabric_wake(version),
+            Event::XferInDone { token } => self.on_xfer_in_done(token),
+            Event::ServiceDone { token } => self.on_service_done(token),
+            Event::XferOutDone { token } => self.on_xfer_out_done(token),
         }
     }
 
@@ -547,6 +720,11 @@ impl EventSim {
     /// analytic cluster would: policy selection over the candidate
     /// tier, wait behind the backend's queued seconds, pay link +
     /// execute, occupy the backend for the double-buffered period.
+    ///
+    /// With a [`FabricLayer`] attached, remote backends instead enter
+    /// the multi-phase path ([`Self::dispatch_remote`]): the network
+    /// cost becomes two fabric flows whose durations depend on what
+    /// else is on the wire.
     fn dispatch(&mut self, ids: Vec<usize>) {
         debug_assert!(!ids.is_empty());
         let model = self.pending[ids[0]].model.clone();
@@ -565,6 +743,10 @@ impl EventSim {
             &profile,
             total,
         );
+        if self.fabric.as_ref().is_some_and(|f| f.is_remote(idx)) {
+            self.dispatch_remote(ids, idx, total, &profile);
+            return;
+        }
         let backend = &mut self.backends[idx];
         let wait_s = backend.queue_s();
         let link_overhead_s = backend.link_overhead_s(&profile, total);
@@ -586,11 +768,212 @@ impl EventSim {
                 backend: idx,
                 batch_samples: total,
                 link_overhead_s,
+                contention_s: 0.0,
             });
         }
         self.dispatched += ids.len() as u64;
         self.batches += 1;
         self.events.push_class(complete_s, CLASS_COMPLETION, Event::Completion { ids });
+    }
+
+    // ------------------------------------------------- fabric phases
+
+    /// Remote dispatch over the fabric: the batch's request payload
+    /// becomes a flow toward the accelerator; execution begins once
+    /// the payload lands ([`Event::XferInDone`]) *and* the backlog
+    /// the batch reserved behind has drained, and the result rides
+    /// its own flow back.  The FIFO slot is reserved **at dispatch**
+    /// (`queue_s` reflects committed work immediately), so the
+    /// routing policies see exactly the feedback the legacy path
+    /// gives them.  Records are created now (dispatch order) and
+    /// their completion fields filled when the result lands.
+    ///
+    /// Simplification: a router-coalesced batch travels as **one**
+    /// flow attributed to the leading request's host (and its result
+    /// returns there) — the router batches at the host leaf, so the
+    /// merged payload crosses the leaf uplink and the accelerator
+    /// side (where the shared-pool contention lives) exactly once;
+    /// the per-member host-NIC hops of the tiny pre-merge requests
+    /// are not modeled.
+    fn dispatch_remote(
+        &mut self,
+        ids: Vec<usize>,
+        idx: usize,
+        total: usize,
+        profile: &ModelProfile,
+    ) {
+        let (bytes_in, bytes_out) =
+            dir_payload_bytes(profile.input_elems, profile.output_elems, total);
+        let fab = self.fabric.as_ref().expect("remote dispatch without a fabric");
+        let accel = fab.accel(idx);
+        let host = fab.spec.host_of_rank(self.pending[ids[0]].rank);
+        let ideal_rtt_s = fab.ideal_rtt_s(bytes_in + bytes_out);
+
+        // reserve the backend's routing queue now: transfers are
+        // explicit, so the batch occupies the device for its
+        // execution time only, and policies see committed work
+        // immediately (the physical one-batch-at-a-time constraint
+        // is [`FabricLayer::occupy`]'s device clock)
+        let backend = &mut self.backends[idx];
+        let exec_s = backend.execute_s(profile, total);
+        backend.add_queue_s(exec_s);
+
+        let rec0 = self.records.len();
+        for &id in &ids {
+            let meta = &self.pending[id];
+            self.records.push(RequestRecord {
+                id: id as u64,
+                rank: meta.rank,
+                model: meta.model.clone(),
+                samples: meta.samples,
+                arrival_s: meta.arrival_s,
+                dispatch_s: self.clock_s,
+                complete_s: f64::NAN,
+                backend: idx,
+                batch_samples: total,
+                link_overhead_s: 0.0,
+                contention_s: 0.0,
+            });
+        }
+        self.dispatched += ids.len() as u64;
+        self.batches += 1;
+
+        let token = self.transits.len();
+        self.transits.push(BatchTransit {
+            ids,
+            backend: idx,
+            accel,
+            host,
+            bytes_out,
+            dispatch_s: self.clock_s,
+            net_in_s: 0.0,
+            exec_s,
+            out_start_s: 0.0,
+            ideal_rtt_s,
+            rec0,
+        });
+
+        let clock = self.clock_s;
+        let fab = self.fabric.as_mut().expect("checked above");
+        let path = fab.spec.topology.request_path(host, accel);
+        let flow = fab.engine.start(clock, path, bytes_in);
+        fab.cont.insert(flow, FlowCont::In { token });
+        self.arm_fabric();
+    }
+
+    /// Re-arm the fabric wake-up at the engine's (new) earliest flow
+    /// completion; called after every flow start/finish.  Earlier
+    /// armed wake-ups become stale through the version bump.
+    fn arm_fabric(&mut self) {
+        let clock = self.clock_s;
+        let armed = self.fabric.as_mut().expect("arm_fabric without a fabric").next_wake(clock);
+        if let Some((t, version)) = armed {
+            self.events.push_class(t, CLASS_COMPLETION, Event::FabricWake { version });
+        }
+    }
+
+    /// A fabric wake-up fired: drain every finished flow and schedule
+    /// its continuation after the direction's fixed-latency tail
+    /// (wire + half the per-message software cost — the bytes share
+    /// the fabric, the fixed share does not).
+    fn on_fabric_wake(&mut self, version: u64) {
+        let clock = self.clock_s;
+        let conts = {
+            let Some(fab) = self.fabric.as_mut() else { return };
+            let Some(conts) = fab.drain_wake(version, clock) else {
+                return; // stale: a newer wake-up is armed
+            };
+            conts
+        };
+        for cont in conts {
+            match cont {
+                FlowCont::In { token } => {
+                    let fixed = self.dir_fixed_of(token);
+                    self.events.push_class(
+                        self.clock_s + fixed,
+                        CLASS_COMPLETION,
+                        Event::XferInDone { token },
+                    );
+                }
+                FlowCont::Out { token } => {
+                    let fixed = self.dir_fixed_of(token);
+                    self.events.push_class(
+                        self.clock_s + fixed,
+                        CLASS_COMPLETION,
+                        Event::XferOutDone { token },
+                    );
+                }
+                FlowCont::Swap { .. } => {
+                    unreachable!("EventSim starts no swap flows (see cogsim)")
+                }
+            }
+        }
+        if self.fabric.is_some() {
+            self.arm_fabric();
+        }
+    }
+
+    fn dir_fixed_of(&self, token: usize) -> f64 {
+        let fab = self.fabric.as_ref().expect("fabric phase without a fabric");
+        fab.spec.topology.dir_fixed_s(self.transits[token].accel)
+    }
+
+    /// The request payload is at the accelerator: execute as soon as
+    /// the device frees up ([`FabricLayer::occupy`] — strictly one
+    /// batch at a time per device, work-conserving order; the device
+    /// wait is part of the record's end-to-end latency).
+    fn on_xfer_in_done(&mut self, token: usize) {
+        let clock = self.clock_s;
+        let (idx, exec_s) = {
+            let tr = &self.transits[token];
+            (tr.backend, tr.exec_s)
+        };
+        let fab = self.fabric.as_mut().expect("fabric phase without a fabric");
+        let (_wait_s, done_s) = fab.occupy(idx, clock, exec_s);
+        // Re-sync the routing signal with the device horizon: long
+        // transfers can outlive the dispatch-time reservation's
+        // wall-time drain, and the policies must keep seeing the
+        // serialized backlog `occupy` is accumulating.
+        let backend = &mut self.backends[idx];
+        let deficit = (done_s - clock) - backend.queue_s();
+        if deficit > 0.0 {
+            backend.add_queue_s(deficit);
+        }
+        self.transits[token].net_in_s = clock - self.transits[token].dispatch_s;
+        self.events.push_class(done_s, CLASS_COMPLETION, Event::ServiceDone { token });
+    }
+
+    /// Execution finished: send the result payload home.
+    fn on_service_done(&mut self, token: usize) {
+        let (host, accel, bytes_out) = {
+            let tr = &self.transits[token];
+            (tr.host, tr.accel, tr.bytes_out)
+        };
+        self.transits[token].out_start_s = self.clock_s;
+        let clock = self.clock_s;
+        let fab = self.fabric.as_mut().expect("fabric phase without a fabric");
+        let path = fab.spec.topology.response_path(host, accel);
+        let flow = fab.engine.start(clock, path, bytes_out);
+        fab.cont.insert(flow, FlowCont::Out { token });
+        self.arm_fabric();
+    }
+
+    /// The result landed: fill the batch's records with the measured
+    /// transfer timings and run the shared completion logic.
+    fn on_xfer_out_done(&mut self, token: usize) {
+        let (ids, rec0, link_s, contention_s) = {
+            let tr = &self.transits[token];
+            let net_out_s = self.clock_s - tr.out_start_s;
+            let link_s = tr.net_in_s + net_out_s;
+            (tr.ids.clone(), tr.rec0, link_s, (link_s - tr.ideal_rtt_s).max(0.0))
+        };
+        for k in 0..ids.len() {
+            let r = &mut self.records[rec0 + k];
+            r.complete_s = self.clock_s;
+            r.link_overhead_s = link_s;
+            r.contention_s = contention_s;
+        }
+        self.on_completion(ids);
     }
 
     fn on_completion(&mut self, ids: Vec<usize>) {
@@ -646,26 +1029,41 @@ impl EventSim {
         self.batches
     }
 
+    /// Events popped off the queue so far (the micro-benchmark's
+    /// denominator: events/sec = this over wall time).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
     /// Per-request records, in dispatch order.  A record exists from
-    /// the moment its batch is dispatched (its completion time is
-    /// already determined then).
+    /// the moment its batch is dispatched; without the fabric layer
+    /// its completion time is already determined then, with it the
+    /// completion fields are filled when the result lands.
     pub fn records(&self) -> &[RequestRecord] {
         &self.records
     }
 
     /// Summarise the run (intended after [`Self::run_to_completion`]).
+    /// Fabric-mode records whose result is still in transit
+    /// (`complete_s` not yet filled) are excluded, so a mid-run
+    /// summary is well-defined rather than NaN-poisoned; after a
+    /// full run the filter is a no-op.
     pub fn summary(&self) -> EventSummary {
-        let latencies: Vec<f64> = self.records.iter().map(|r| r.latency_s()).collect();
-        let samples: u64 = self.records.iter().map(|r| r.samples as u64).sum();
-        let makespan_s = self.records.iter().map(|r| r.complete_s).fold(0.0, f64::max);
+        let records: Vec<&RequestRecord> =
+            self.records.iter().filter(|r| r.complete_s.is_finite()).collect();
+        let latencies: Vec<f64> = records.iter().map(|r| r.latency_s()).collect();
+        let samples: u64 = records.iter().map(|r| r.samples as u64).sum();
+        let makespan_s = records.iter().map(|r| r.complete_s).fold(0.0, f64::max);
 
         let mut rank_sum = vec![0.0f64; self.cfg.ranks];
         let mut rank_n = vec![0u64; self.cfg.ranks];
         let mut link_sum = 0.0;
-        for r in &self.records {
+        let mut contention_sum = 0.0;
+        for r in &records {
             rank_sum[r.rank] += r.latency_s();
             rank_n[r.rank] += 1;
             link_sum += r.link_overhead_s;
+            contention_sum += r.contention_s;
         }
         let per_rank_mean_s: Vec<f64> = rank_sum
             .iter()
@@ -687,7 +1085,7 @@ impl EventSim {
         };
 
         EventSummary {
-            requests: self.records.len() as u64,
+            requests: records.len() as u64,
             samples,
             batches: self.batches,
             mean_batch_samples: if self.batches > 0 {
@@ -696,10 +1094,15 @@ impl EventSim {
                 0.0
             },
             latency: LatencyDist::from_latencies(&latencies),
-            mean_link_overhead_s: if self.records.is_empty() {
+            mean_link_overhead_s: if records.is_empty() {
                 0.0
             } else {
-                link_sum / self.records.len() as f64
+                link_sum / records.len() as f64
+            },
+            mean_contention_s: if records.is_empty() {
+                0.0
+            } else {
+                contention_sum / records.len() as f64
             },
             per_rank_mean_s,
             slowdown_max,
@@ -866,5 +1269,70 @@ mod tests {
         let hist_total: u64 =
             s.latency.histogram.iter().map(|(_, c)| c).sum::<u64>() + s.latency.overflow;
         assert_eq!(hist_total, s.requests);
+        assert!(sim.events_processed() > s.requests, "every request costs >= 1 event");
+    }
+
+    // ------------------------------------------------- fabric layer
+
+    fn pool_fabric(ranks: usize, oversub: f64) -> crate::fabric::FabricSpec {
+        crate::fabric::FabricSpec {
+            topology: crate::fabric::Topology::pooled(ranks, 2, oversub),
+            accel_of_backend: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn fabric_run_completes_everything_and_measures_contention() {
+        let cfg = EventSimConfig { ranks: 16, horizon_s: 0.045, ..Default::default() };
+        let mut sim = EventSim::with_fabric(
+            pool(),
+            Policy::LeastOutstanding,
+            cfg,
+            vec![0, 1],
+            vec![0, 1],
+            pool_fabric(16, 4.0),
+        );
+        sim.run_to_completion();
+        assert_eq!(sim.completed(), sim.submitted());
+        assert_eq!(sim.in_flight(), 0);
+        assert_eq!(sim.records().len() as u64, sim.submitted());
+        // every record's completion was filled and transfers were paid
+        for r in sim.records() {
+            assert!(r.complete_s.is_finite() && r.complete_s >= r.dispatch_s);
+            assert!(r.link_overhead_s > 0.0, "remote batch must ride the fabric");
+            assert!(r.contention_s >= 0.0);
+            assert!(r.contention_s <= r.link_overhead_s + 1e-15);
+        }
+        // a synchronized 16-rank burst on a 4:1 fabric must contend
+        let s = sim.summary();
+        assert!(s.mean_contention_s > 0.0, "bursts on 4:1 must queue on the wire");
+        assert!(s.mean_link_overhead_s > s.mean_contention_s);
+    }
+
+    #[test]
+    fn fabric_oversubscription_slows_the_tail() {
+        let run = |oversub: f64| {
+            let cfg = EventSimConfig { ranks: 32, horizon_s: 0.045, ..Default::default() };
+            let mut sim = EventSim::with_fabric(
+                pool(),
+                Policy::LeastOutstanding,
+                cfg,
+                vec![0, 1],
+                vec![0, 1],
+                pool_fabric(32, oversub),
+            );
+            sim.run_to_completion();
+            sim.summary()
+        };
+        let mut last = 0.0;
+        for oversub in [1.0, 2.0, 4.0, 8.0] {
+            let s = run(oversub);
+            assert!(
+                s.mean_link_overhead_s >= last - 1e-12,
+                "oversub {oversub}: mean link {} < previous {last}",
+                s.mean_link_overhead_s
+            );
+            last = s.mean_link_overhead_s;
+        }
     }
 }

@@ -1,0 +1,266 @@
+//! The incremental flow-level fabric engine.
+//!
+//! [`FabricEngine`] tracks the set of active byte transfers over a
+//! [`Topology`], assigns each the max-min fair share of the links it
+//! crosses ([`super::fairshare`]), and answers the one question an
+//! event engine needs: *when does the next transfer finish?*  Rates
+//! only change when the flow set changes, so the engine integrates
+//! lazily — on every mutation it first credits each active flow
+//! `rate × dt` of progress, then recomputes the allocation.  Between
+//! mutations, completion times are exact linear extrapolations.
+//!
+//! The caller (the event engines in [`crate::eventsim`]) arms a
+//! wake-up at [`FabricEngine::next_completion_s`], and on firing
+//! calls [`FabricEngine::take_completed`]; because any flow start can
+//! invalidate a previously armed wake-up, callers version their
+//! wake-up events and ignore stale ones.
+//!
+//! Everything is deterministic: flows are kept in a `BTreeMap` keyed
+//! by their monotonically assigned id, allocation scans in id order,
+//! and completions pop in id order within one instant.
+
+use std::collections::BTreeMap;
+
+use super::fairshare::max_min_rates;
+use super::topology::Topology;
+
+/// Below this many bytes a flow counts as finished (float slack from
+/// incremental integration is ~ulp-sized; this is far above it and
+/// far below any real payload).
+const DONE_BYTES: f64 = 1e-6;
+
+#[derive(Debug, Clone)]
+struct Flow {
+    path: Vec<usize>,
+    remaining: f64,
+    rate: f64,
+}
+
+/// Active transfers + fair-share rates over a topology.
+pub struct FabricEngine {
+    topo: Topology,
+    flows: BTreeMap<u64, Flow>,
+    next_id: u64,
+    now_s: f64,
+}
+
+impl FabricEngine {
+    pub fn new(topo: Topology) -> FabricEngine {
+        FabricEngine { topo, flows: BTreeMap::new(), next_id: 0, now_s: 0.0 }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Active (unfinished) flow count.
+    pub fn active(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Current fair-share rate of a flow, bytes/s.
+    pub fn rate_of(&self, id: u64) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.rate)
+    }
+
+    /// Start a transfer of `bytes` along `path` at `now_s`; returns
+    /// the flow id.  Every active flow's share is recomputed.  A
+    /// zero-byte or free-path flow completes at the very next
+    /// [`Self::take_completed`].
+    pub fn start(&mut self, now_s: f64, path: Vec<usize>, bytes: f64) -> u64 {
+        assert!(bytes >= 0.0 && bytes.is_finite(), "bad flow size {bytes}");
+        self.advance_to(now_s);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.flows.insert(id, Flow { path, remaining: bytes, rate: 0.0 });
+        self.recompute();
+        id
+    }
+
+    /// Credit progress up to `t_s` at the current rates (monotone;
+    /// earlier times are a no-op).
+    pub fn advance_to(&mut self, t_s: f64) {
+        let dt = t_s - self.now_s;
+        if dt > 0.0 {
+            for f in self.flows.values_mut() {
+                if f.rate.is_infinite() {
+                    f.remaining = 0.0;
+                } else {
+                    f.remaining = (f.remaining - f.rate * dt).max(0.0);
+                }
+            }
+        }
+        self.now_s = self.now_s.max(t_s);
+    }
+
+    fn recompute(&mut self) {
+        let paths: Vec<&[usize]> =
+            self.flows.values().map(|f| f.path.as_slice()).collect();
+        let rates = max_min_rates(self.topo.capacities(), &paths);
+        for (f, r) in self.flows.values_mut().zip(rates) {
+            f.rate = r;
+        }
+    }
+
+    /// Virtual time at which the earliest active flow finishes under
+    /// the current rates; `None` when idle.
+    pub fn next_completion_s(&self) -> Option<f64> {
+        self.flows
+            .values()
+            .map(|f| self.now_s + Self::eta_s(f))
+            .min_by(f64::total_cmp)
+    }
+
+    fn eta_s(f: &Flow) -> f64 {
+        if f.remaining <= DONE_BYTES || f.rate.is_infinite() {
+            0.0
+        } else {
+            f.remaining / f.rate
+        }
+    }
+
+    /// Advance to `now_s` and drain every finished flow (in id
+    /// order); remaining flows' shares are recomputed if anything
+    /// left.
+    pub fn take_completed(&mut self, now_s: f64) -> Vec<u64> {
+        self.advance_to(now_s);
+        let done: Vec<u64> = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.remaining <= DONE_BYTES || f.rate.is_infinite())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &done {
+            self.flows.remove(id);
+        }
+        if !done.is_empty() {
+            self.recompute();
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Link;
+
+    fn pooled(hosts: usize, accels: usize, over: f64) -> Topology {
+        Topology::pooled(hosts, accels, over)
+    }
+
+    #[test]
+    fn one_flow_alone_matches_the_link_transfer_time() {
+        // The degenerate case: one flow on a 1:1 fabric moves at the
+        // NIC's eff_bandwidth, i.e. Link's transfer term exactly.
+        let link = Link::infiniband_cx6();
+        let topo = pooled(4, 2, 1.0);
+        let mut eng = FabricEngine::new(topo);
+        let bytes = 1e6;
+        let path = eng.topology().request_path(0, 0);
+        eng.start(0.0, path, bytes);
+        let done = eng.next_completion_s().unwrap();
+        let expect = bytes / link.eff_bandwidth;
+        assert!((done - expect).abs() < 1e-12, "{done} vs {expect}");
+        let finished = eng.take_completed(done);
+        assert_eq!(finished, vec![0]);
+        assert_eq!(eng.active(), 0);
+        assert_eq!(eng.next_completion_s(), None);
+    }
+
+    #[test]
+    fn two_flows_to_one_accel_halve_each_other() {
+        let topo = pooled(4, 1, 1.0);
+        let nic = topo.link().eff_bandwidth;
+        let mut eng = FabricEngine::new(topo);
+        let p0 = eng.topology().request_path(0, 0);
+        let p1 = eng.topology().request_path(1, 0);
+        let a = eng.start(0.0, p0, 1e6);
+        assert_eq!(eng.rate_of(a), Some(nic));
+        let b = eng.start(0.0, p1, 1e6);
+        // both bottleneck on accel0's rx NIC: half rate each
+        assert_eq!(eng.rate_of(a), Some(nic / 2.0));
+        assert_eq!(eng.rate_of(b), Some(nic / 2.0));
+        let t = eng.next_completion_s().unwrap();
+        assert!((t - 2e6 / nic).abs() < 1e-12, "{t}");
+        // both finish at the same instant, popped in id order
+        assert_eq!(eng.take_completed(t), vec![a, b]);
+    }
+
+    #[test]
+    fn late_joiner_slows_the_incumbent_incrementally() {
+        let topo = pooled(2, 1, 1.0);
+        let nic = topo.link().eff_bandwidth;
+        let mut eng = FabricEngine::new(topo);
+        let p0 = eng.topology().request_path(0, 0);
+        let p1 = eng.topology().request_path(1, 0);
+        // flow a: 1e6 bytes alone for the time of its first half
+        let half_t = 0.5e6 / nic;
+        let a = eng.start(0.0, p0, 1e6);
+        // at half_t, b joins; a has 0.5e6 left at rate nic/2
+        let b = eng.start(half_t, p1, 1e6);
+        let t_a = eng.next_completion_s().unwrap();
+        assert!((t_a - (half_t + 0.5e6 / (nic / 2.0))).abs() < 1e-9, "{t_a}");
+        assert_eq!(eng.take_completed(t_a), vec![a]);
+        // b ran at nic/2 while a lived, then speeds back to nic
+        assert_eq!(eng.rate_of(b), Some(nic));
+        let t_b = eng.next_completion_s().unwrap();
+        // b moved 0.5e6 during [half_t, t_a]; 0.5e6 left at full rate
+        assert!((t_b - (t_a + 0.5e6 / nic)).abs() < 1e-9, "{t_b}");
+        assert_eq!(eng.take_completed(t_b), vec![b]);
+    }
+
+    #[test]
+    fn zero_byte_and_free_path_flows_finish_immediately() {
+        let mut eng = FabricEngine::new(Topology::node_local(2));
+        let a = eng.start(1.0, Vec::new(), 5e9);
+        let b = eng.start(1.0, Vec::new(), 0.0);
+        assert_eq!(eng.next_completion_s(), Some(1.0));
+        assert_eq!(eng.take_completed(1.0), vec![a, b]);
+    }
+
+    #[test]
+    fn oversubscription_monotonically_slows_completions() {
+        // 8 hosts all sending to 2 accels: higher oversubscription
+        // must never speed any completion up.
+        let mut last = 0.0;
+        for over in [1.0, 2.0, 4.0, 8.0] {
+            let topo = pooled(8, 2, over);
+            let mut eng = FabricEngine::new(topo);
+            for h in 0..8 {
+                let p = eng.topology().request_path(h, h % 2);
+                eng.start(0.0, p, 1e6);
+            }
+            // drain fully; the last completion is the burst makespan
+            let mut t = 0.0;
+            while let Some(next) = eng.next_completion_s() {
+                t = next;
+                eng.take_completed(next);
+            }
+            assert!(
+                t >= last - 1e-12,
+                "oversub {over}: makespan {t} < previous {last}"
+            );
+            last = t;
+        }
+    }
+
+    #[test]
+    fn conservation_bytes_delivered_equals_bytes_sent() {
+        // integrate rate * dt across all mutations: the engine's
+        // lazy accounting must deliver every byte exactly once.
+        let topo = pooled(4, 2, 2.0);
+        let mut eng = FabricEngine::new(topo);
+        let sizes = [3e5, 7e5, 1e6, 2e5];
+        for (h, &bytes) in sizes.iter().enumerate() {
+            let p = eng.topology().request_path(h, h % 2);
+            eng.start(h as f64 * 1e-5, p, bytes);
+        }
+        let mut finished = 0usize;
+        while let Some(t) = eng.next_completion_s() {
+            finished += eng.take_completed(t).len();
+        }
+        assert_eq!(finished, sizes.len());
+        assert_eq!(eng.active(), 0);
+    }
+}

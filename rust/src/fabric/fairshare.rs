@@ -1,0 +1,222 @@
+//! Max-min fair bandwidth allocation by progressive filling.
+//!
+//! Given a set of directed links with capacities (bytes/s) and a set
+//! of flows, each crossing a list of links, the max-min fair
+//! allocation gives every flow the largest rate such that no flow can
+//! be raised without lowering a flow that already has less — the
+//! steady state TCP-fair transport converges to on a shared fabric,
+//! and the standard fluid model for flow-level network simulation
+//! (CXL-ClusterSim, SimAI and friends use the same allocator).
+//!
+//! Progressive filling: repeatedly find the *bottleneck* link — the
+//! one whose remaining capacity divided by its unfrozen flow count is
+//! smallest — freeze every flow crossing it at that fair share,
+//! subtract the frozen bandwidth everywhere those flows go, and
+//! recurse on what is left.  Flows whose whole path has infinite
+//! capacity (node-local "links") get an infinite rate.
+//!
+//! Everything is deterministic: links scan in index order, strict
+//! `<` picks the first minimal bottleneck, flows freeze in index
+//! order — identical inputs always produce identical allocations
+//! (the event engines' byte-stable summaries depend on it).
+
+/// Max-min fair rates for `flows` over `capacities`.
+///
+/// `capacities[l]` is link `l`'s capacity in bytes/s (may be
+/// `f64::INFINITY` for a free resource); `flows[f]` lists the link
+/// indices flow `f` crosses (an empty path means the flow never
+/// touches a constrained resource and rates at infinity).  Paths are
+/// taken by reference (`&[usize]`, `Vec<usize>`, ...) so the hot
+/// recompute path never clones them.
+///
+/// Returns one rate per flow, in flow order.
+pub fn max_min_rates<P: AsRef<[usize]>>(capacities: &[f64], flows: &[P]) -> Vec<f64> {
+    let flows: Vec<&[usize]> = flows.iter().map(AsRef::as_ref).collect();
+    for path in &flows {
+        for &l in *path {
+            assert!(l < capacities.len(), "flow crosses unknown link {l}");
+        }
+    }
+    for (l, &c) in capacities.iter().enumerate() {
+        assert!(c > 0.0, "link {l} has non-positive capacity {c}");
+    }
+
+    let n = flows.len();
+    let mut rates = vec![0.0f64; n];
+    let mut frozen = vec![false; n];
+    let mut remaining: Vec<f64> = capacities.to_vec();
+    let mut users = vec![0usize; capacities.len()];
+
+    for (f, &path) in flows.iter().enumerate() {
+        if path.is_empty() || path.iter().all(|&l| capacities[l].is_infinite()) {
+            rates[f] = f64::INFINITY;
+            frozen[f] = true;
+        } else {
+            for &l in path {
+                users[l] += 1;
+            }
+        }
+    }
+
+    let mut left = frozen.iter().filter(|&&fz| !fz).count();
+    while left > 0 {
+        // the bottleneck: smallest fair share among loaded finite links
+        let mut bottleneck: Option<(f64, usize)> = None;
+        for (l, &cap) in remaining.iter().enumerate() {
+            if users[l] == 0 || cap.is_infinite() {
+                continue;
+            }
+            let share = cap / users[l] as f64;
+            if bottleneck.is_none_or(|(best, _)| share < best) {
+                bottleneck = Some((share, l));
+            }
+        }
+        let Some((share, link)) = bottleneck else {
+            // every remaining flow crosses only unloaded/infinite
+            // links — cannot happen while users > 0 on finite links,
+            // but guard against an all-infinite residual anyway
+            for f in 0..n {
+                if !frozen[f] {
+                    rates[f] = f64::INFINITY;
+                    frozen[f] = true;
+                }
+            }
+            break;
+        };
+        // freeze every unfrozen flow crossing the bottleneck
+        for f in 0..n {
+            if frozen[f] || !flows[f].contains(&link) {
+                continue;
+            }
+            rates[f] = share;
+            frozen[f] = true;
+            left -= 1;
+            for &l in flows[f] {
+                if remaining[l].is_finite() {
+                    remaining[l] = (remaining[l] - share).max(0.0);
+                }
+                users[l] -= 1;
+            }
+        }
+    }
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const INF: f64 = f64::INFINITY;
+
+    #[test]
+    fn single_flow_gets_the_path_minimum() {
+        // NIC 10, uplink 40: a lone flow runs at its NIC rate.
+        let rates = max_min_rates(&[10.0, 40.0], &[vec![0, 1]]);
+        assert_eq!(rates, vec![10.0]);
+    }
+
+    #[test]
+    fn two_flows_split_a_shared_link_evenly() {
+        // hand-computed: one link of 10, two flows -> 5 each
+        let rates = max_min_rates(&[10.0], &[vec![0], vec![0]]);
+        assert_eq!(rates, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn three_flows_bottlenecked_at_different_tiers() {
+        // hand-computed: links A=12, B=4.
+        //   f0 = {A}, f1 = {A, B}, f2 = {B}
+        // B is the bottleneck first: 4/2 = 2 -> f1 = f2 = 2.
+        // A keeps 12 - 2 = 10 for f0 alone -> f0 = 10.
+        let rates =
+            max_min_rates(&[12.0, 4.0], &[vec![0], vec![0, 1], vec![1]]);
+        assert_eq!(rates, vec![10.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn four_flows_nic_vs_uplink_bottlenecks() {
+        // hand-computed leaf-spine cut: two host NICs of 10 (links 0,
+        // 1), one oversubscribed uplink of 8 (link 2), one fat
+        // receiver NIC of 100 (link 3).
+        //   f0, f1 from host 0; f2, f3 from host 1; all cross 2, 3.
+        // Uplink first: 8/4 = 2 each — below the NIC share 10/2 = 5 —
+        // so every flow freezes at 2 (uplink-bound, not NIC-bound).
+        let paths = vec![
+            vec![0, 2, 3],
+            vec![0, 2, 3],
+            vec![1, 2, 3],
+            vec![1, 2, 3],
+        ];
+        let rates = max_min_rates(&[10.0, 10.0, 8.0, 100.0], &paths);
+        assert_eq!(rates, vec![2.0, 2.0, 2.0, 2.0]);
+
+        // raise the uplink to 32 and the NICs bottleneck instead:
+        // 10/2 = 5 each, uplink only half-used.
+        let rates = max_min_rates(&[10.0, 10.0, 32.0, 100.0], &paths);
+        assert_eq!(rates, vec![5.0, 5.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn asymmetric_hosts_reclaim_leftover_uplink() {
+        // hand-computed: host NICs 10 (link 0) and 10 (link 1),
+        // uplink 18 (link 2).  Three flows on host 0, one on host 1.
+        //   NIC0 share: 10/3 = 3.33; NIC1: 10/1 = 10; uplink: 18/4 = 4.5
+        // NIC0 freezes f0..f2 at 10/3; uplink keeps 18 - 10 = 8 for
+        // f3, NIC1 allows 10 -> f3 = 8 (uplink-bound).
+        let paths = vec![vec![0, 2], vec![0, 2], vec![0, 2], vec![1, 2]];
+        let rates = max_min_rates(&[10.0, 10.0, 18.0], &paths);
+        let third = 10.0 / 3.0;
+        for f in 0..3 {
+            assert!((rates[f] - third).abs() < 1e-12, "f{f}: {}", rates[f]);
+        }
+        assert!((rates[3] - 8.0).abs() < 1e-12, "{}", rates[3]);
+    }
+
+    #[test]
+    fn empty_and_infinite_paths_rate_at_infinity() {
+        let rates = max_min_rates(&[10.0, INF], &[vec![], vec![1], vec![0]]);
+        assert_eq!(rates[0], INF);
+        assert_eq!(rates[1], INF);
+        assert_eq!(rates[2], 10.0);
+    }
+
+    #[test]
+    fn conservation_no_link_oversubscribed() {
+        // arbitrary mesh: total allocated through any finite link must
+        // not exceed its capacity (up to float slack)
+        let caps = [7.0, 11.0, 5.0, 13.0];
+        let paths = vec![
+            vec![0, 1],
+            vec![1, 2],
+            vec![0, 2, 3],
+            vec![3],
+            vec![1, 3],
+        ];
+        let rates = max_min_rates(&caps, &paths);
+        for (l, &cap) in caps.iter().enumerate() {
+            let load: f64 = paths
+                .iter()
+                .zip(&rates)
+                .filter(|(p, _)| p.contains(&l))
+                .map(|(_, &r)| r)
+                .sum();
+            assert!(load <= cap + 1e-9, "link {l}: {load} > {cap}");
+        }
+        // and every rate is positive: progressive filling starves no one
+        assert!(rates.iter().all(|&r| r > 0.0));
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        let caps = [3.0, 9.0, 4.0];
+        let paths = vec![vec![0, 1], vec![1, 2], vec![0, 2], vec![1]];
+        let a = max_min_rates(&caps, &paths);
+        let b = max_min_rates(&caps, &paths);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn no_flows_is_fine() {
+        assert!(max_min_rates(&[5.0], &[]).is_empty());
+    }
+}

@@ -1,0 +1,92 @@
+//! Contention-aware fabric simulator: shared-bandwidth network
+//! topologies for the disaggregated pool.
+//!
+//! The analytic [`crate::netsim::Link`] charges every remote request
+//! a fixed `rtt_overhead_s` — correct for one stream, but blind to
+//! *sharing*: a 64-rank burst pays the same per-request network cost
+//! as a single request, which systematically flatters the pooled
+//! topology exactly where the paper's question is hardest.  This
+//! module adds the missing layer:
+//!
+//! * [`topology`] — leaf/spine [`Topology`] graphs (host NICs,
+//!   oversubscribed uplinks, accelerator NICs) with `node_local`,
+//!   `pooled` and `hybrid` constructors;
+//! * [`fairshare`] — the max-min fair-share allocator (progressive
+//!   filling over the active flow set);
+//! * [`engine`] — the incremental [`FabricEngine`]: start flows,
+//!   recompute shares on every start/finish, report the next
+//!   completion time.
+//!
+//! The event engines ([`crate::eventsim`], [`crate::eventsim::cogsim`])
+//! consume this through a [`FabricSpec`]: each backend maps to an
+//! accelerator endpoint, each rank to a host NIC, and a remote
+//! dispatch becomes three-to-four *events* instead of one fixed
+//! charge — request payload in, optional model-swap transfer
+//! competing on the same uplinks, device execution, result payload
+//! out.  One flow alone on a 1:1 fabric reproduces
+//! `Link::rtt_overhead_s` to 1e-9 (`rust/tests/fabric_props.rs`), so
+//! [`crate::netsim::Link`] remains the exact degenerate case.
+
+pub mod engine;
+pub mod fairshare;
+pub mod topology;
+
+pub use engine::FabricEngine;
+pub use fairshare::max_min_rates;
+pub use topology::Topology;
+
+/// How an event engine's fleet plugs into a fabric: the topology plus
+/// the backend-index → accelerator-endpoint map.  Ranks map to host
+/// NICs round-robin (`rank % hosts`).
+#[derive(Debug, Clone)]
+pub struct FabricSpec {
+    pub topology: Topology,
+    /// Accelerator endpoint (index into the topology's accels) per
+    /// backend index.
+    pub accel_of_backend: Vec<usize>,
+}
+
+impl FabricSpec {
+    /// Validate against a fleet of `n_backends` backends.
+    pub fn validate(&self, n_backends: usize) {
+        assert_eq!(
+            self.accel_of_backend.len(),
+            n_backends,
+            "fabric spec must map every backend to an accel endpoint"
+        );
+        for &a in &self.accel_of_backend {
+            assert!(a < self.topology.accels(), "unknown accel endpoint {a}");
+        }
+    }
+
+    /// Host NIC for a rank.
+    pub fn host_of_rank(&self, rank: usize) -> usize {
+        rank % self.topology.hosts()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_maps_ranks_and_backends() {
+        let spec = FabricSpec {
+            topology: Topology::pooled(4, 2, 2.0),
+            accel_of_backend: vec![0, 1],
+        };
+        spec.validate(2);
+        assert_eq!(spec.host_of_rank(0), 0);
+        assert_eq!(spec.host_of_rank(5), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "accel endpoint")]
+    fn spec_rejects_out_of_range_endpoints() {
+        let spec = FabricSpec {
+            topology: Topology::pooled(2, 1, 1.0),
+            accel_of_backend: vec![3],
+        };
+        spec.validate(1);
+    }
+}

@@ -1,0 +1,334 @@
+//! Shared-bandwidth network topologies for the disaggregated pool.
+//!
+//! A [`Topology`] is a two-tier leaf/spine graph of *directed* links:
+//! every compute node (MPI rank host) has a NIC (tx + rx), every
+//! pooled accelerator has a NIC (tx + rx), and the host leaf and
+//! accelerator leaf hang off the spine through uplinks whose capacity
+//! is the aggregate NIC bandwidth of their side divided by the
+//! **oversubscription** factor — the knob datacentre fabrics actually
+//! buy down (1:1 = non-blocking, 8:1 = an eighth of the bisection).
+//!
+//! ```text
+//!  host0 ─nic┐                      ┌nic─ accel0
+//!  host1 ─nic┤► host-leaf ═uplink═ spine ═uplink═ accel-leaf ├nic─ accel1
+//!  host2 ─nic┘   (Σnic/over)          (Σnic/over)            ┘
+//! ```
+//!
+//! Three constructors span the paper's coupling axis:
+//!
+//! * [`Topology::node_local`] — every accelerator sits in its host
+//!   node; no shared links at all (the degenerate free fabric);
+//! * [`Topology::pooled`] — all accelerators behind the leaf/spine
+//!   fabric (the paper's disaggregated DataScale);
+//! * [`Topology::hybrid`] — per-host local accelerators *plus* a
+//!   shared pool (MIR local, Hermit pooled).
+//!
+//! Per-endpoint constants (effective single-stream bandwidth, wire
+//! latency, per-message software cost) delegate to
+//! [`crate::netsim::Link`]: a NIC's capacity is the link's
+//! `eff_bandwidth`, and each direction of a transfer pays
+//! [`Link::dir_fixed_s`] on top of its bytes — so one flow alone on a
+//! 1:1 fabric reproduces `Link::rtt_overhead_s` exactly
+//! (`rust/tests/fabric_props.rs` pins it to 1e-9).
+//!
+//! Model-swap traffic enters from a parameter store at the spine and
+//! shares the accelerator-leaf downlink and the accelerator's rx NIC
+//! with inbound inference payloads — swapping weights onto a pooled
+//! accelerator congests the very links inference needs.
+
+use crate::netsim::Link;
+
+/// One pooled accelerator's NIC port pair (directed link indices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct AccelPort {
+    tx: usize,
+    rx: usize,
+}
+
+/// A leaf/spine fabric over hosts and accelerators.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    link: Link,
+    oversubscription: f64,
+    /// Directed link capacities, bytes/s.
+    capacities: Vec<f64>,
+    hosts: usize,
+    /// Per-accelerator port pair; `None` = node-local (no fabric).
+    accel_ports: Vec<Option<AccelPort>>,
+    host_tx: Vec<usize>,
+    host_rx: Vec<usize>,
+    /// Host-leaf uplink toward the spine / back down.
+    host_up: usize,
+    host_down: usize,
+    /// Accel-leaf uplink toward the spine / back down.
+    accel_up: usize,
+    accel_down: usize,
+}
+
+impl Topology {
+    /// Every accelerator lives in its host node: no constrained links,
+    /// zero fixed latency ([`Link::local`]).  The fabric engine's
+    /// degenerate free case.
+    pub fn node_local(n_nodes: usize) -> Topology {
+        assert!(n_nodes >= 1);
+        Topology {
+            link: Link::local(),
+            oversubscription: 1.0,
+            capacities: Vec::new(),
+            hosts: n_nodes,
+            accel_ports: vec![None; n_nodes],
+            host_tx: Vec::new(),
+            host_rx: Vec::new(),
+            host_up: usize::MAX,
+            host_down: usize::MAX,
+            accel_up: usize::MAX,
+            accel_down: usize::MAX,
+        }
+    }
+
+    /// All accelerators behind the shared leaf/spine fabric, reached
+    /// over the paper's Infiniband software path.
+    pub fn pooled(n_hosts: usize, n_accels: usize, oversubscription: f64) -> Topology {
+        Self::build(n_hosts, 0, n_accels, oversubscription, Link::infiniband_cx6())
+    }
+
+    /// As [`Topology::pooled`] with an explicit per-endpoint link
+    /// model (the campaign's link-ablation hook).
+    pub fn pooled_with_link(
+        n_hosts: usize,
+        n_accels: usize,
+        oversubscription: f64,
+        link: Link,
+    ) -> Topology {
+        Self::build(n_hosts, 0, n_accels, oversubscription, link)
+    }
+
+    /// `n_hosts` nodes each with one local accelerator (accel ids
+    /// `0..n_hosts`, free) plus `n_pool` shared accelerators behind
+    /// the fabric (accel ids `n_hosts..n_hosts + n_pool`).
+    pub fn hybrid(n_hosts: usize, n_pool: usize, oversubscription: f64) -> Topology {
+        Self::build(n_hosts, n_hosts, n_pool, oversubscription, Link::infiniband_cx6())
+    }
+
+    fn build(
+        n_hosts: usize,
+        n_local_accels: usize,
+        n_pool: usize,
+        oversubscription: f64,
+        link: Link,
+    ) -> Topology {
+        assert!(n_hosts >= 1 && n_pool >= 1);
+        assert!(
+            oversubscription >= 1.0 && oversubscription.is_finite(),
+            "oversubscription must be >= 1 ({oversubscription})"
+        );
+        let nic = link.eff_bandwidth;
+        assert!(
+            nic > 0.0 && nic.is_finite(),
+            "pooled fabric needs a finite NIC bandwidth (got {nic}); \
+             use Topology::node_local for the free-link limit"
+        );
+
+        let mut capacities = Vec::new();
+        let mut push = |cap: f64| -> usize {
+            capacities.push(cap);
+            capacities.len() - 1
+        };
+        let host_tx: Vec<usize> = (0..n_hosts).map(|_| push(nic)).collect();
+        let host_rx: Vec<usize> = (0..n_hosts).map(|_| push(nic)).collect();
+        let host_up = push(n_hosts as f64 * nic / oversubscription);
+        let host_down = push(n_hosts as f64 * nic / oversubscription);
+        let accel_up = push(n_pool as f64 * nic / oversubscription);
+        let accel_down = push(n_pool as f64 * nic / oversubscription);
+        let mut accel_ports: Vec<Option<AccelPort>> = vec![None; n_local_accels];
+        for _ in 0..n_pool {
+            let tx = push(nic);
+            let rx = push(nic);
+            accel_ports.push(Some(AccelPort { tx, rx }));
+        }
+
+        Topology {
+            link,
+            oversubscription,
+            capacities,
+            hosts: n_hosts,
+            accel_ports,
+            host_tx,
+            host_rx,
+            host_up,
+            host_down,
+            accel_up,
+            accel_down,
+        }
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.hosts
+    }
+
+    pub fn accels(&self) -> usize {
+        self.accel_ports.len()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.capacities.len()
+    }
+
+    pub fn capacities(&self) -> &[f64] {
+        &self.capacities
+    }
+
+    pub fn oversubscription(&self) -> f64 {
+        self.oversubscription
+    }
+
+    /// The per-endpoint link model the fabric delegates to.
+    pub fn link(&self) -> &Link {
+        &self.link
+    }
+
+    /// Fixed per-direction latency ([`Link::dir_fixed_s`]); zero for
+    /// node-local accelerators.
+    pub fn dir_fixed_s(&self, accel: usize) -> f64 {
+        if self.accel_ports[accel].is_some() {
+            self.link.dir_fixed_s()
+        } else {
+            0.0
+        }
+    }
+
+    /// Does `accel` sit behind the shared fabric (vs in its node)?
+    pub fn is_pooled(&self, accel: usize) -> bool {
+        self.accel_ports[accel].is_some()
+    }
+
+    /// Directed links a request payload crosses, host -> accel.
+    /// Empty for a node-local accelerator.
+    pub fn request_path(&self, host: usize, accel: usize) -> Vec<usize> {
+        assert!(host < self.hosts, "unknown host {host}");
+        match self.accel_ports[accel] {
+            None => Vec::new(),
+            Some(port) => {
+                vec![self.host_tx[host], self.host_up, self.accel_down, port.rx]
+            }
+        }
+    }
+
+    /// Directed links a result payload crosses, accel -> host.
+    pub fn response_path(&self, host: usize, accel: usize) -> Vec<usize> {
+        assert!(host < self.hosts, "unknown host {host}");
+        match self.accel_ports[accel] {
+            None => Vec::new(),
+            Some(port) => {
+                vec![port.tx, self.accel_up, self.host_down, self.host_rx[host]]
+            }
+        }
+    }
+
+    /// Directed links a model-swap transfer crosses: the parameter
+    /// store sits at the spine, so weights ride the accel-leaf
+    /// downlink and the accelerator's rx NIC — straight through the
+    /// inference request path's last hops.
+    pub fn swap_path(&self, accel: usize) -> Vec<usize> {
+        match self.accel_ports[accel] {
+            None => Vec::new(),
+            Some(port) => vec![self.accel_down, port.rx],
+        }
+    }
+
+    /// The rate one flow gets when nothing else is active: the
+    /// minimum capacity along its path (`INFINITY` for an empty
+    /// path).  On a 1:1 fabric this is the NIC = `eff_bandwidth`,
+    /// which is what makes [`Link`] the exact degenerate case.
+    pub fn solo_rate(&self, path: &[usize]) -> f64 {
+        path.iter().map(|&l| self.capacities[l]).fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_local_is_free() {
+        let t = Topology::node_local(4);
+        assert_eq!(t.hosts(), 4);
+        assert_eq!(t.accels(), 4);
+        assert_eq!(t.n_links(), 0);
+        for a in 0..4 {
+            assert!(!t.is_pooled(a));
+            assert!(t.request_path(0, a).is_empty());
+            assert!(t.response_path(0, a).is_empty());
+            assert!(t.swap_path(a).is_empty());
+            assert_eq!(t.dir_fixed_s(a), 0.0);
+        }
+        assert_eq!(t.solo_rate(&[]), f64::INFINITY);
+    }
+
+    #[test]
+    fn pooled_single_flow_runs_at_nic_rate_at_one_to_one() {
+        let t = Topology::pooled(8, 2, 1.0);
+        let nic = Link::infiniband_cx6().eff_bandwidth;
+        let up = t.request_path(3, 1);
+        assert_eq!(up.len(), 4, "nic, host uplink, accel downlink, accel nic");
+        assert_eq!(t.solo_rate(&up), nic, "1:1 fabric: solo flow is NIC-bound");
+        let down = t.response_path(3, 1);
+        assert_eq!(t.solo_rate(&down), nic);
+        // request and response ride disjoint directed links
+        assert!(up.iter().all(|l| !down.contains(l)));
+    }
+
+    #[test]
+    fn oversubscription_cuts_the_uplinks_only() {
+        let o = 8.0;
+        let t1 = Topology::pooled(16, 2, 1.0);
+        let t8 = Topology::pooled(16, 2, o);
+        let nic = Link::infiniband_cx6().eff_bandwidth;
+        // NICs unchanged; uplink capacities divided by o
+        assert_eq!(t8.capacities()[t8.host_tx[0]], nic);
+        assert_eq!(
+            t8.capacities()[t8.host_up] * o,
+            t1.capacities()[t1.host_up]
+        );
+        assert_eq!(
+            t8.capacities()[t8.accel_down] * o,
+            t1.capacities()[t1.accel_down]
+        );
+        // 2 accels at 8:1: the pool-side uplink is below one NIC —
+        // even a lone flow feels the oversubscribed cut
+        assert!(t8.solo_rate(&t8.request_path(0, 0)) < nic);
+    }
+
+    #[test]
+    fn swap_traffic_shares_the_inference_downlink() {
+        let t = Topology::pooled(4, 2, 2.0);
+        let swap = t.swap_path(0);
+        let req = t.request_path(1, 0);
+        // the swap's two links are both on the request path
+        assert!(swap.iter().all(|l| req.contains(l)));
+        // but not on the response path (results leave on tx)
+        let resp = t.response_path(1, 0);
+        assert!(swap.iter().all(|l| !resp.contains(l)));
+    }
+
+    #[test]
+    fn hybrid_mixes_local_and_pooled_accels() {
+        let t = Topology::hybrid(4, 2, 4.0);
+        assert_eq!(t.accels(), 6);
+        for a in 0..4 {
+            assert!(!t.is_pooled(a), "accel {a} is node-local");
+            assert!(t.request_path(a, a).is_empty());
+        }
+        for a in 4..6 {
+            assert!(t.is_pooled(a));
+            assert_eq!(t.request_path(0, a).len(), 4);
+            assert!(t.dir_fixed_s(a) > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscription")]
+    fn rejects_sub_unit_oversubscription() {
+        Topology::pooled(4, 2, 0.5);
+    }
+}

@@ -34,6 +34,16 @@
 //! topology × policy × rank count × models-per-rank × swap cost ×
 //! overlap, reporting time-to-solution with its per-timestep
 //! critical-path breakdown — `repro cogsim` on the command line.
+//!
+//! All three modes carry a **fabric knob** (`fabric_oversubs`): the
+//! pooled/hybrid topologies' network is swept across leaf/spine
+//! oversubscription factors (1:1 non-blocking up to 8:1).  The event
+//! and cogsim modes route remote dispatches through the
+//! contention-aware flow-level simulator ([`crate::fabric`]) — shared
+//! uplinks, max-min fair share, swap traffic competing with inference
+//! — while the analytic mode applies the closed-form worst-case
+//! derate (pool link bandwidth divided by the oversubscription).
+//! `repro fabric` runs the focused pooled-vs-local crossover sweep.
 
 use crate::cluster::{Backend, BackendReport, Cluster, GpuBackend, Policy, RduBackend};
 use crate::devices::{profiles, Api, Gpu, ModelProfile};
@@ -41,6 +51,7 @@ use crate::eventsim::{
     ArrivalProcess, Batching, CogSim, CogSimConfig, CogSummary, EventSim, EventSimConfig,
     EventSummary,
 };
+use crate::fabric::{FabricSpec, Topology as NetTopology};
 use crate::netsim::Link;
 use crate::rdu::RduApi;
 use crate::util::json::Value;
@@ -78,6 +89,96 @@ impl Topology {
             Topology::Hybrid => "hybrid",
         }
     }
+
+    /// Does this topology have backends behind the shared fabric?
+    /// Local is all node-local: the oversubscription axis collapses
+    /// to a single 1:1 cell there (no duplicate sweep cells).
+    pub fn pays_the_link(&self) -> bool {
+        !matches!(self, Topology::Local)
+    }
+}
+
+// ----------------------------------------------- shared scaffolding
+//
+// The three campaign modes (analytic / event / cogsim) share their
+// sweep-grid and JSON-emit skeleton; these helpers hold the single
+// copy (previously ~3 hand-rolled repetitions of each).
+
+/// The oversubscription cells a topology actually sweeps: the
+/// configured list where the fabric exists, the single 1:1 cell on
+/// the all-local topology.
+fn oversubs_for(topology: Topology, oversubs: &[f64]) -> Vec<f64> {
+    if topology.pays_the_link() {
+        oversubs.to_vec()
+    } else {
+        vec![1.0]
+    }
+}
+
+/// JSON array of stable keys (topologies, policies, ...).
+fn key_array<T>(items: &[T], key: impl Fn(&T) -> String) -> Value {
+    Value::Array(items.iter().map(|i| Value::String(key(i))).collect())
+}
+
+/// JSON array of numbers at fixed precision.
+fn num_array(items: &[f64]) -> Value {
+    Value::Array(items.iter().map(|&v| fixed3(v)).collect())
+}
+
+/// The root campaign document every mode emits: `{config, scenarios}`.
+fn doc_json(config: Value, scenarios: Vec<Value>) -> Value {
+    let mut root = BTreeMap::new();
+    root.insert("config".to_string(), config);
+    root.insert("scenarios".to_string(), Value::Array(scenarios));
+    Value::Object(root)
+}
+
+/// One aligned table per topology over a sweep's cells: `x_of` labels
+/// each cell, `series` extracts the numeric columns.  (The analytic
+/// mode keeps its bespoke metric-per-column layout; the event and
+/// cogsim sweeps share this cell-per-row shape.)
+fn topology_tables<S>(
+    title_prefix: &str,
+    topologies: &[Topology],
+    scenarios: &[S],
+    topo_of: impl Fn(&S) -> Topology,
+    x_of: impl Fn(&S) -> String,
+    series: &[(&str, &dyn Fn(&S) -> f64)],
+) -> Vec<Table> {
+    topologies
+        .iter()
+        .map(|&topo| {
+            let cells: Vec<&S> =
+                scenarios.iter().filter(|s| topo_of(s) == topo).collect();
+            let mut t = Table::new(
+                format!("{title_prefix} — {} ({})", topo.key(), topo.label()),
+                "cell",
+            );
+            t.set_x(cells.iter().map(|s| x_of(s)));
+            for (name, extract) in series {
+                t.add_series(*name, cells.iter().map(|s| extract(s)).collect());
+            }
+            t
+        })
+        .collect()
+}
+
+/// Fabric spec for an event/cogsim cell: the flow-level topology plus
+/// the backend→accel endpoint map matching [`build_fleet`]'s layout.
+/// `None` on the all-local topology (no shared links to model).
+fn build_fabric_spec(topology: Topology, ranks: usize, oversub: f64) -> Option<FabricSpec> {
+    match topology {
+        Topology::Local => None,
+        Topology::Pooled => Some(FabricSpec {
+            topology: NetTopology::pooled(ranks, 2, oversub),
+            accel_of_backend: vec![0, 1],
+        }),
+        Topology::Hybrid => Some(FabricSpec {
+            topology: NetTopology::hybrid(ranks, 2, oversub),
+            // GPU i sits in node i; the pool rides the fabric.
+            accel_of_backend: (0..ranks).chain([ranks, ranks + 1]).collect(),
+        }),
+    }
 }
 
 /// Campaign knobs (defaults sized so the full 3×4 sweep runs in
@@ -96,6 +197,10 @@ pub struct CampaignConfig {
     pub step_period_s: f64,
     /// Base MIR mixed-zone count per rank per timestep.
     pub mir_base_zones: usize,
+    /// Fabric oversubscription factors to sweep on topologies with
+    /// pooled backends (the analytic mode applies the closed-form
+    /// worst-case derate: pool link bandwidth ÷ oversubscription).
+    pub fabric_oversubs: Vec<f64>,
     /// Workload seed (fixed seed → byte-stable summary).
     pub seed: u64,
 }
@@ -109,6 +214,7 @@ impl Default for CampaignConfig {
             timesteps: 12,
             step_period_s: 0.02,
             mir_base_zones: 1024,
+            fabric_oversubs: vec![1.0],
             seed: 42,
         }
     }
@@ -143,11 +249,13 @@ impl WorkloadSummary {
     }
 }
 
-/// One (topology, policy) cell of the sweep.
+/// One (topology, policy, oversubscription) cell of the sweep.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
     pub topology: Topology,
     pub policy: Policy,
+    /// Fabric oversubscription of this cell (1.0 = non-blocking).
+    pub oversub: f64,
     pub hydra: WorkloadSummary,
     pub mir: WorkloadSummary,
     pub makespan_s: f64,
@@ -162,24 +270,39 @@ pub struct CampaignResult {
 }
 
 impl CampaignResult {
-    /// Look up one cell.
+    /// Look up the baseline cell of a (topology, policy) pair: the
+    /// non-blocking 1:1 cell when it was swept, otherwise the first
+    /// swept oversubscription (so the classic lookup stays total
+    /// over any `fabric_oversubs` configuration).
     pub fn scenario(&self, topology: Topology, policy: Policy) -> &ScenarioResult {
+        self.scenario_at(topology, policy, 1.0)
+            .or_else(|| {
+                self.scenarios
+                    .iter()
+                    .find(|s| s.topology == topology && s.policy == policy)
+            })
+            .expect("campaign ran every (topology, policy) cell")
+    }
+
+    /// Look up one cell at an explicit oversubscription factor.
+    pub fn scenario_at(
+        &self,
+        topology: Topology,
+        policy: Policy,
+        oversub: f64,
+    ) -> Option<&ScenarioResult> {
         self.scenarios
             .iter()
-            .find(|s| s.topology == topology && s.policy == policy)
-            .expect("campaign ran every (topology, policy) cell")
+            .find(|s| s.topology == topology && s.policy == policy && s.oversub == oversub)
     }
 
     /// Deterministic JSON document (BTreeMap key order; values
     /// rounded to fixed precision so the rendering is byte-stable).
     pub fn to_json(&self) -> Value {
-        let mut root = BTreeMap::new();
-        root.insert("config".to_string(), config_json(&self.config));
-        root.insert(
-            "scenarios".to_string(),
-            Value::Array(self.scenarios.iter().map(scenario_json).collect()),
-        );
-        Value::Object(root)
+        doc_json(
+            config_json(&self.config),
+            self.scenarios.iter().map(scenario_json).collect(),
+        )
     }
 
     /// One aligned table per topology (rows: policy; columns: key
@@ -299,9 +422,36 @@ fn profile_for(model: &str) -> ModelProfile {
     }
 }
 
-/// Run one (topology, policy) scenario.
+/// Run one (topology, policy) scenario at 1:1 oversubscription.
 pub fn run_scenario(topology: Topology, policy: Policy, cfg: &CampaignConfig) -> ScenarioResult {
     run_scenario_with_link(topology, policy, cfg, &Link::infiniband_cx6())
+}
+
+/// Worst-case closed-form fabric derate for the analytic mode: every
+/// remote request is assumed to find the oversubscribed uplink fully
+/// contended, i.e. the pool link's effective bandwidth divides by the
+/// oversubscription factor.  (The event/cogsim modes model the real
+/// time-varying sharing through [`crate::fabric`].)
+fn derated_link(link: &Link, oversub: f64) -> Link {
+    assert!(oversub >= 1.0 && oversub.is_finite());
+    let mut l = link.clone();
+    if l.eff_bandwidth.is_finite() {
+        l.eff_bandwidth = l.eff_bandwidth / oversub;
+    }
+    l
+}
+
+/// Run one analytic cell at an explicit oversubscription factor.
+pub fn run_scenario_at(
+    topology: Topology,
+    policy: Policy,
+    oversub: f64,
+    cfg: &CampaignConfig,
+) -> ScenarioResult {
+    let link = derated_link(&Link::infiniband_cx6(), oversub);
+    let mut s = run_scenario_with_link(topology, policy, cfg, &link);
+    s.oversub = oversub;
+    s
 }
 
 /// As [`run_scenario`], with an explicit pool link — the link
@@ -359,6 +509,7 @@ pub fn run_scenario_with_link(
     ScenarioResult {
         topology,
         policy,
+        oversub: 1.0,
         hydra: WorkloadSummary::from_run(&hydra_lat, &hydra_link, hydra_samples, makespan_s),
         mir: WorkloadSummary::from_run(&mir_lat, &mir_link, mir_samples, makespan_s),
         makespan_s,
@@ -366,12 +517,16 @@ pub fn run_scenario_with_link(
     }
 }
 
-/// Run the full sweep: every topology under every routing policy.
+/// Run the full sweep: every topology under every routing policy,
+/// across the fabric oversubscription axis (all-local topologies run
+/// the single 1:1 cell — no fabric to derate).
 pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
     let mut scenarios = Vec::new();
     for topology in Topology::ALL {
         for policy in Policy::ALL {
-            scenarios.push(run_scenario(topology, policy, cfg));
+            for oversub in oversubs_for(topology, &cfg.fabric_oversubs) {
+                scenarios.push(run_scenario_at(topology, policy, oversub, cfg));
+            }
         }
     }
     CampaignResult { config: cfg.clone(), scenarios }
@@ -406,6 +561,10 @@ pub struct EventCampaignConfig {
     /// burst (0 = hermit-only).
     pub mir_every: usize,
     pub mir_samples: usize,
+    /// Fabric oversubscription factors to sweep; pooled/hybrid cells
+    /// route remote dispatches through the flow-level
+    /// [`crate::fabric`] simulator at each factor.
+    pub fabric_oversubs: Vec<f64>,
     /// Arrival generators stop here; in-flight work drains.
     pub horizon_s: f64,
     pub seed: u64,
@@ -432,13 +591,14 @@ impl Default for EventCampaignConfig {
             requests_per_burst: 6,
             mir_every: 0,
             mir_samples: 512,
+            fabric_oversubs: vec![1.0, 4.0],
             horizon_s: 0.2,
             seed: 42,
         }
     }
 }
 
-/// One (topology, policy, arrival, ranks, window) cell.
+/// One (topology, policy, arrival, ranks, window, oversub) cell.
 #[derive(Debug, Clone)]
 pub struct EventScenarioResult {
     pub topology: Topology,
@@ -446,6 +606,8 @@ pub struct EventScenarioResult {
     pub arrival: ArrivalProcess,
     pub ranks: usize,
     pub window_us: f64,
+    /// Fabric oversubscription of this cell (1.0 = non-blocking).
+    pub oversub: f64,
     pub summary: EventSummary,
 }
 
@@ -465,6 +627,7 @@ impl EventCampaignResult {
         arrival_key: &str,
         ranks: usize,
         window_us: f64,
+        oversub: f64,
     ) -> Option<&EventScenarioResult> {
         self.scenarios.iter().find(|s| {
             s.topology == topology
@@ -472,75 +635,60 @@ impl EventCampaignResult {
                 && s.arrival.key() == arrival_key
                 && s.ranks == ranks
                 && s.window_us == window_us
+                && s.oversub == oversub
         })
     }
 
     /// Deterministic JSON document (BTreeMap key order; fixed
     /// precision), golden-pinned by `rust/tests/campaign_golden.rs`.
     pub fn to_json(&self) -> Value {
-        let mut root = BTreeMap::new();
-        root.insert("config".to_string(), event_config_json(&self.config));
-        root.insert(
-            "scenarios".to_string(),
-            Value::Array(self.scenarios.iter().map(event_scenario_json).collect()),
-        );
-        Value::Object(root)
+        doc_json(
+            event_config_json(&self.config),
+            self.scenarios.iter().map(event_scenario_json).collect(),
+        )
     }
 
     /// One aligned table per topology; one row per swept cell.
     pub fn tables(&self) -> Vec<Table> {
-        self.config
-            .topologies
-            .iter()
-            .map(|&topo| {
-                let cells: Vec<&EventScenarioResult> =
-                    self.scenarios.iter().filter(|s| s.topology == topo).collect();
-                let mut t = Table::new(
-                    format!("Event campaign — {} ({})", topo.key(), topo.label()),
-                    "cell",
-                );
-                t.set_x(cells.iter().map(|s| {
-                    format!(
-                        "{}/{}/r{}/w{}",
-                        s.policy.key(),
-                        s.arrival.key(),
-                        s.ranks,
-                        s.window_us
-                    )
-                }));
-                t.add_series(
-                    "p50_us",
-                    cells.iter().map(|s| s.summary.latency.p50_s * 1e6).collect(),
-                );
-                t.add_series(
-                    "p99_us",
-                    cells.iter().map(|s| s.summary.latency.p99_s * 1e6).collect(),
-                );
-                t.add_series(
-                    "p999_us",
-                    cells.iter().map(|s| s.summary.latency.p999_s * 1e6).collect(),
-                );
-                t.add_series(
-                    "mean_batch",
-                    cells.iter().map(|s| s.summary.mean_batch_samples).collect(),
-                );
-                t.add_series(
-                    "slowdown",
-                    cells.iter().map(|s| s.summary.slowdown_max).collect(),
-                );
-                t
-            })
-            .collect()
+        topology_tables(
+            "Event campaign",
+            &self.config.topologies,
+            &self.scenarios,
+            |s: &EventScenarioResult| s.topology,
+            |s| {
+                format!(
+                    "{}/{}/r{}/w{}/o{}",
+                    s.policy.key(),
+                    s.arrival.key(),
+                    s.ranks,
+                    s.window_us,
+                    s.oversub
+                )
+            },
+            &[
+                ("p50_us", &|s: &EventScenarioResult| s.summary.latency.p50_s * 1e6),
+                ("p99_us", &|s: &EventScenarioResult| s.summary.latency.p99_s * 1e6),
+                ("p999_us", &|s: &EventScenarioResult| s.summary.latency.p999_s * 1e6),
+                ("mean_batch", &|s: &EventScenarioResult| s.summary.mean_batch_samples),
+                ("contention_us", &|s: &EventScenarioResult| {
+                    s.summary.mean_contention_s * 1e6
+                }),
+                ("slowdown", &|s: &EventScenarioResult| s.summary.slowdown_max),
+            ],
+        )
     }
 }
 
-/// Run one event-mode cell.
+/// Run one event-mode cell.  Pooled/hybrid topologies route remote
+/// dispatches through the flow-level fabric at `oversub`; the
+/// all-local topology has no shared links.
 pub fn run_event_scenario(
     topology: Topology,
     policy: Policy,
     arrival: ArrivalProcess,
     ranks: usize,
     window_us: f64,
+    oversub: f64,
     cfg: &EventCampaignConfig,
 ) -> EventScenarioResult {
     let (backends, tier) = build_fleet(topology, ranks, &Link::infiniband_cx6());
@@ -560,9 +708,22 @@ pub fn run_event_scenario(
         horizon_s: cfg.horizon_s,
         seed: cfg.seed,
     };
-    let mut sim = EventSim::with_tiers(backends, policy, sim_cfg, tier.hermit, tier.mir);
+    let mut sim = match build_fabric_spec(topology, ranks, oversub) {
+        Some(spec) => {
+            EventSim::with_fabric(backends, policy, sim_cfg, tier.hermit, tier.mir, spec)
+        }
+        None => EventSim::with_tiers(backends, policy, sim_cfg, tier.hermit, tier.mir),
+    };
     sim.run_to_completion();
-    EventScenarioResult { topology, policy, arrival, ranks, window_us, summary: sim.summary() }
+    EventScenarioResult {
+        topology,
+        policy,
+        arrival,
+        ranks,
+        window_us,
+        oversub,
+        summary: sim.summary(),
+    }
 }
 
 /// Run the full event-mode sweep.
@@ -573,9 +734,11 @@ pub fn run_event_campaign(cfg: &EventCampaignConfig) -> EventCampaignResult {
             for &ranks in &cfg.rank_counts {
                 for &arrival in &cfg.arrivals {
                     for &window_us in &cfg.windows_us {
-                        scenarios.push(run_event_scenario(
-                            topology, policy, arrival, ranks, window_us, cfg,
-                        ));
+                        for oversub in oversubs_for(topology, &cfg.fabric_oversubs) {
+                            scenarios.push(run_event_scenario(
+                                topology, policy, arrival, ranks, window_us, oversub, cfg,
+                            ));
+                        }
                     }
                 }
             }
@@ -620,6 +783,10 @@ pub struct CogCampaignConfig {
     /// Router batching window, µs; 0 disables batching.
     pub window_us: f64,
     pub max_batch: usize,
+    /// Fabric oversubscription factors to sweep; pooled/hybrid cells
+    /// route remote dispatches (and residency-swap weight transfers)
+    /// through the flow-level [`crate::fabric`] simulator.
+    pub fabric_oversubs: Vec<f64>,
     pub seed: u64,
 }
 
@@ -630,12 +797,14 @@ impl Default for CogCampaignConfig {
             // (set mir_every > 0) to differ from pooled.
             topologies: vec![Topology::Local, Topology::Pooled],
             policies: Policy::ALL.to_vec(),
-            rank_counts: vec![4],
+            // 4 ranks: the pool's home turf; 32: the burst regime
+            // where sharing 2 accelerators (and their fabric) hurts
+            rank_counts: vec![4, 32],
             models_per_rank: vec![8],
             // free swaps vs swaps far above the small-batch service
             // time — the regime where affinity routing must win
             swap_costs_s: vec![0.0, 2e-3],
-            overlaps: vec![0.0, 1.0],
+            overlaps: vec![0.0],
             timesteps: 8,
             compute_s: 2e-3,
             requests_per_step: 6,
@@ -645,12 +814,15 @@ impl Default for CogCampaignConfig {
             residency_slots: 4,
             window_us: 0.0,
             max_batch: 256,
+            // the contention axis of the acceptance headline: 1:1
+            // non-blocking through 8:1 starved
+            fabric_oversubs: vec![1.0, 2.0, 4.0, 8.0],
             seed: 42,
         }
     }
 }
 
-/// One (topology, policy, ranks, models, swap, overlap) cell.
+/// One (topology, policy, ranks, models, swap, overlap, oversub) cell.
 #[derive(Debug, Clone)]
 pub struct CogScenarioResult {
     pub topology: Topology,
@@ -659,6 +831,8 @@ pub struct CogScenarioResult {
     pub models: usize,
     pub swap_s: f64,
     pub overlap: f64,
+    /// Fabric oversubscription of this cell (1.0 = non-blocking).
+    pub oversub: f64,
     pub summary: CogSummary,
 }
 
@@ -671,6 +845,7 @@ pub struct CogCampaignResult {
 
 impl CogCampaignResult {
     /// Look up one cell.
+    #[allow(clippy::too_many_arguments)]
     pub fn scenario(
         &self,
         topology: Topology,
@@ -679,6 +854,7 @@ impl CogCampaignResult {
         models: usize,
         swap_s: f64,
         overlap: f64,
+        oversub: f64,
     ) -> Option<&CogScenarioResult> {
         self.scenarios.iter().find(|s| {
             s.topology == topology
@@ -687,79 +863,58 @@ impl CogCampaignResult {
                 && s.models == models
                 && s.swap_s == swap_s
                 && s.overlap == overlap
+                && s.oversub == oversub
         })
     }
 
     /// Deterministic JSON document (BTreeMap key order; fixed
     /// precision), golden-pinned by `rust/tests/campaign_golden.rs`.
     pub fn to_json(&self) -> Value {
-        let mut root = BTreeMap::new();
-        root.insert("config".to_string(), cog_config_json(&self.config));
-        root.insert(
-            "scenarios".to_string(),
-            Value::Array(self.scenarios.iter().map(cog_scenario_json).collect()),
-        );
-        Value::Object(root)
+        doc_json(
+            cog_config_json(&self.config),
+            self.scenarios.iter().map(cog_scenario_json).collect(),
+        )
     }
 
     /// One aligned table per topology; one row per swept cell.
     pub fn tables(&self) -> Vec<Table> {
-        self.config
-            .topologies
-            .iter()
-            .map(|&topo| {
-                let cells: Vec<&CogScenarioResult> =
-                    self.scenarios.iter().filter(|s| s.topology == topo).collect();
-                let mut t = Table::new(
-                    format!("CogSim campaign — {} ({})", topo.key(), topo.label()),
-                    "cell",
-                );
-                t.set_x(cells.iter().map(|s| {
-                    format!(
-                        "{}/r{}/m{}/sw{}/ov{}",
-                        s.policy.key(),
-                        s.ranks,
-                        s.models,
-                        s.swap_s * 1e6,
-                        s.overlap
-                    )
-                }));
-                t.add_series(
-                    "tts_ms",
-                    cells.iter().map(|s| s.summary.time_to_solution_s * 1e3).collect(),
-                );
-                t.add_series(
-                    "compute_ms",
-                    cells.iter().map(|s| s.summary.total_compute_s * 1e3).collect(),
-                );
-                t.add_series(
-                    "queue_ms",
-                    cells.iter().map(|s| s.summary.total_queue_s * 1e3).collect(),
-                );
-                t.add_series(
-                    "swap_ms",
-                    cells.iter().map(|s| s.summary.total_swap_s * 1e3).collect(),
-                );
-                t.add_series(
-                    "network_ms",
-                    cells.iter().map(|s| s.summary.total_network_s * 1e3).collect(),
-                );
-                t.add_series(
-                    "service_ms",
-                    cells.iter().map(|s| s.summary.total_service_s * 1e3).collect(),
-                );
-                t.add_series("swaps", cells.iter().map(|s| s.summary.swaps as f64).collect());
-                t.add_series(
-                    "spread_us",
-                    cells.iter().map(|s| s.summary.max_spread_s * 1e6).collect(),
-                );
-                t
-            })
-            .collect()
+        topology_tables(
+            "CogSim campaign",
+            &self.config.topologies,
+            &self.scenarios,
+            |s: &CogScenarioResult| s.topology,
+            |s| {
+                format!(
+                    "{}/r{}/m{}/sw{}/ov{}/o{}",
+                    s.policy.key(),
+                    s.ranks,
+                    s.models,
+                    s.swap_s * 1e6,
+                    s.overlap,
+                    s.oversub
+                )
+            },
+            &[
+                ("tts_ms", &|s: &CogScenarioResult| s.summary.time_to_solution_s * 1e3),
+                ("compute_ms", &|s: &CogScenarioResult| s.summary.total_compute_s * 1e3),
+                ("queue_ms", &|s: &CogScenarioResult| s.summary.total_queue_s * 1e3),
+                ("swap_ms", &|s: &CogScenarioResult| s.summary.total_swap_s * 1e3),
+                ("network_ms", &|s: &CogScenarioResult| s.summary.total_network_s * 1e3),
+                ("contention_ms", &|s: &CogScenarioResult| {
+                    s.summary.total_contention_s * 1e3
+                }),
+                ("service_ms", &|s: &CogScenarioResult| s.summary.total_service_s * 1e3),
+                ("swaps", &|s: &CogScenarioResult| s.summary.swaps as f64),
+                ("spread_us", &|s: &CogScenarioResult| s.summary.max_spread_s * 1e6),
+            ],
+        )
     }
 }
 
-/// Run one coupled cell.
+/// Run one coupled cell.  Pooled/hybrid topologies route remote
+/// dispatches and residency swaps through the flow-level fabric at
+/// `oversub`; the all-local topology has no shared links.
+#[allow(clippy::too_many_arguments)]
 pub fn run_cog_scenario(
     topology: Topology,
     policy: Policy,
@@ -767,6 +922,7 @@ pub fn run_cog_scenario(
     models: usize,
     swap_s: f64,
     overlap: f64,
+    oversub: f64,
     cfg: &CogCampaignConfig,
 ) -> CogScenarioResult {
     let (backends, tier) = build_fleet(topology, ranks, &Link::infiniband_cx6());
@@ -790,9 +946,23 @@ pub fn run_cog_scenario(
         },
         seed: cfg.seed,
     };
-    let mut sim = CogSim::with_tiers(backends, policy, sim_cfg, tier.hermit, tier.mir);
+    let mut sim = match build_fabric_spec(topology, ranks, oversub) {
+        Some(spec) => {
+            CogSim::with_fabric(backends, policy, sim_cfg, tier.hermit, tier.mir, spec)
+        }
+        None => CogSim::with_tiers(backends, policy, sim_cfg, tier.hermit, tier.mir),
+    };
     sim.run_to_completion();
-    CogScenarioResult { topology, policy, ranks, models, swap_s, overlap, summary: sim.summary() }
+    CogScenarioResult {
+        topology,
+        policy,
+        ranks,
+        models,
+        swap_s,
+        overlap,
+        oversub,
+        summary: sim.summary(),
+    }
 }
 
 /// Run the full coupled sweep.
@@ -804,9 +974,12 @@ pub fn run_cog_campaign(cfg: &CogCampaignConfig) -> CogCampaignResult {
                 for &models in &cfg.models_per_rank {
                     for &swap_s in &cfg.swap_costs_s {
                         for &overlap in &cfg.overlaps {
-                            scenarios.push(run_cog_scenario(
-                                topology, policy, ranks, models, swap_s, overlap, cfg,
-                            ));
+                            for oversub in oversubs_for(topology, &cfg.fabric_oversubs) {
+                                scenarios.push(run_cog_scenario(
+                                    topology, policy, ranks, models, swap_s, overlap, oversub,
+                                    cfg,
+                                ));
+                            }
                         }
                     }
                 }
@@ -840,6 +1013,7 @@ fn config_json(cfg: &CampaignConfig) -> Value {
     m.insert("timesteps".to_string(), count(cfg.timesteps as u64));
     m.insert("step_period_us".to_string(), us(cfg.step_period_s));
     m.insert("mir_base_zones".to_string(), count(cfg.mir_base_zones as u64));
+    m.insert("fabric_oversubs".to_string(), num_array(&cfg.fabric_oversubs));
     m.insert("seed".to_string(), count(cfg.seed));
     Value::Object(m)
 }
@@ -861,6 +1035,7 @@ fn scenario_json(s: &ScenarioResult) -> Value {
     let mut m = BTreeMap::new();
     m.insert("topology".to_string(), Value::String(s.topology.key().to_string()));
     m.insert("policy".to_string(), Value::String(s.policy.key().to_string()));
+    m.insert("oversub".to_string(), fixed3(s.oversub));
     m.insert("hydra".to_string(), workload_json(&s.hydra));
     m.insert("mir".to_string(), workload_json(&s.mir));
     m.insert("makespan_us".to_string(), us(s.makespan_s));
@@ -910,21 +1085,8 @@ fn arrival_json(a: &ArrivalProcess) -> Value {
 
 fn event_config_json(cfg: &EventCampaignConfig) -> Value {
     let mut m = BTreeMap::new();
-    m.insert(
-        "topologies".to_string(),
-        Value::Array(
-            cfg.topologies
-                .iter()
-                .map(|t| Value::String(t.key().to_string()))
-                .collect(),
-        ),
-    );
-    m.insert(
-        "policies".to_string(),
-        Value::Array(
-            cfg.policies.iter().map(|p| Value::String(p.key().to_string())).collect(),
-        ),
-    );
+    m.insert("topologies".to_string(), key_array(&cfg.topologies, |t| t.key().to_string()));
+    m.insert("policies".to_string(), key_array(&cfg.policies, |p| p.key().to_string()));
     m.insert(
         "rank_counts".to_string(),
         Value::Array(cfg.rank_counts.iter().map(|&r| count(r as u64)).collect()),
@@ -933,10 +1095,8 @@ fn event_config_json(cfg: &EventCampaignConfig) -> Value {
         "arrivals".to_string(),
         Value::Array(cfg.arrivals.iter().map(arrival_json).collect()),
     );
-    m.insert(
-        "windows_us".to_string(),
-        Value::Array(cfg.windows_us.iter().map(|&w| fixed3(w)).collect()),
-    );
+    m.insert("windows_us".to_string(), num_array(&cfg.windows_us));
+    m.insert("fabric_oversubs".to_string(), num_array(&cfg.fabric_oversubs));
     m.insert("max_batch".to_string(), count(cfg.max_batch as u64));
     m.insert("materials".to_string(), count(cfg.materials as u64));
     m.insert(
@@ -967,6 +1127,7 @@ fn event_summary_json(s: &EventSummary) -> Value {
     m.insert("p999_us".to_string(), us(s.latency.p999_s));
     m.insert("max_us".to_string(), us(s.latency.max_s));
     m.insert("mean_link_overhead_us".to_string(), us(s.mean_link_overhead_s));
+    m.insert("mean_contention_us".to_string(), us(s.mean_contention_s));
     m.insert("samples_per_s".to_string(), fixed3(s.samples_per_s));
     m.insert("makespan_us".to_string(), us(s.makespan_s));
     m.insert("slowdown_max".to_string(), fixed3(s.slowdown_max));
@@ -997,6 +1158,7 @@ fn event_scenario_json(s: &EventScenarioResult) -> Value {
     m.insert("arrival".to_string(), Value::String(s.arrival.key().to_string()));
     m.insert("ranks".to_string(), count(s.ranks as u64));
     m.insert("window_us".to_string(), fixed3(s.window_us));
+    m.insert("oversub".to_string(), fixed3(s.oversub));
     m.insert("summary".to_string(), event_summary_json(&s.summary));
     Value::Object(m)
 }
@@ -1005,21 +1167,8 @@ fn event_scenario_json(s: &EventScenarioResult) -> Value {
 
 fn cog_config_json(cfg: &CogCampaignConfig) -> Value {
     let mut m = BTreeMap::new();
-    m.insert(
-        "topologies".to_string(),
-        Value::Array(
-            cfg.topologies
-                .iter()
-                .map(|t| Value::String(t.key().to_string()))
-                .collect(),
-        ),
-    );
-    m.insert(
-        "policies".to_string(),
-        Value::Array(
-            cfg.policies.iter().map(|p| Value::String(p.key().to_string())).collect(),
-        ),
-    );
+    m.insert("topologies".to_string(), key_array(&cfg.topologies, |t| t.key().to_string()));
+    m.insert("policies".to_string(), key_array(&cfg.policies, |p| p.key().to_string()));
     m.insert(
         "rank_counts".to_string(),
         Value::Array(cfg.rank_counts.iter().map(|&r| count(r as u64)).collect()),
@@ -1032,10 +1181,8 @@ fn cog_config_json(cfg: &CogCampaignConfig) -> Value {
         "swap_costs_us".to_string(),
         Value::Array(cfg.swap_costs_s.iter().map(|&s| us(s)).collect()),
     );
-    m.insert(
-        "overlaps".to_string(),
-        Value::Array(cfg.overlaps.iter().map(|&o| fixed3(o)).collect()),
-    );
+    m.insert("overlaps".to_string(), num_array(&cfg.overlaps));
+    m.insert("fabric_oversubs".to_string(), num_array(&cfg.fabric_oversubs));
     m.insert("timesteps".to_string(), count(cfg.timesteps as u64));
     m.insert("compute_us".to_string(), us(cfg.compute_s));
     m.insert("requests_per_step".to_string(), count(cfg.requests_per_step as u64));
@@ -1068,6 +1215,7 @@ fn cog_summary_json(s: &CogSummary) -> Value {
     m.insert("total_queue_us".to_string(), us(s.total_queue_s));
     m.insert("total_swap_us".to_string(), us(s.total_swap_s));
     m.insert("total_network_us".to_string(), us(s.total_network_s));
+    m.insert("total_contention_us".to_string(), us(s.total_contention_s));
     m.insert("total_service_us".to_string(), us(s.total_service_s));
     m.insert("swaps".to_string(), count(s.swaps));
     m.insert("swap_time_us".to_string(), us(s.swap_time_s));
@@ -1092,6 +1240,7 @@ fn cog_summary_json(s: &CogSummary) -> Value {
                     sm.insert("queue_us".to_string(), us(st.queue_s));
                     sm.insert("swap_us".to_string(), us(st.swap_s));
                     sm.insert("network_us".to_string(), us(st.network_s));
+                    sm.insert("contention_us".to_string(), us(st.contention_s));
                     sm.insert("service_us".to_string(), us(st.service_s));
                     sm.insert("spread_us".to_string(), us(st.spread_s));
                     Value::Object(sm)
@@ -1110,6 +1259,7 @@ fn cog_scenario_json(s: &CogScenarioResult) -> Value {
     m.insert("models".to_string(), count(s.models as u64));
     m.insert("swap_us".to_string(), us(s.swap_s));
     m.insert("overlap".to_string(), fixed3(s.overlap));
+    m.insert("oversub".to_string(), fixed3(s.oversub));
     m.insert("summary".to_string(), cog_summary_json(&s.summary));
     Value::Object(m)
 }
@@ -1207,23 +1357,36 @@ mod tests {
     fn event_campaign_covers_every_cell() {
         let cfg = quick_event_cfg();
         let result = run_event_campaign(&cfg);
-        let cells = cfg.topologies.len()
-            * cfg.policies.len()
-            * cfg.rank_counts.len()
-            * cfg.arrivals.len()
-            * cfg.windows_us.len();
+        let cells: usize = cfg
+            .topologies
+            .iter()
+            .map(|&t| {
+                cfg.policies.len()
+                    * cfg.rank_counts.len()
+                    * cfg.arrivals.len()
+                    * cfg.windows_us.len()
+                    * oversubs_for(t, &cfg.fabric_oversubs).len()
+            })
+            .sum();
         assert_eq!(result.scenarios.len(), cells);
         for s in &result.scenarios {
             assert!(s.summary.requests > 0, "{:?}/{:?}", s.topology, s.policy);
             assert!(s.summary.latency.p50_s > 0.0);
             assert!(s.summary.latency.p999_s >= s.summary.latency.p99_s);
         }
-        // lookup works for an arbitrary cell
+        // lookup works for an arbitrary cell; the local topology
+        // collapses the oversubscription axis to the single 1:1 cell
         assert!(result
-            .scenario(Topology::Pooled, Policy::LatencyAware, "poisson", 4, 200.0)
+            .scenario(Topology::Pooled, Policy::LatencyAware, "poisson", 4, 200.0, 4.0)
             .is_some());
         assert!(result
-            .scenario(Topology::Hybrid, Policy::LatencyAware, "poisson", 4, 200.0)
+            .scenario(Topology::Local, Policy::LatencyAware, "poisson", 4, 200.0, 4.0)
+            .is_none());
+        assert!(result
+            .scenario(Topology::Local, Policy::LatencyAware, "poisson", 4, 200.0, 1.0)
+            .is_some());
+        assert!(result
+            .scenario(Topology::Hybrid, Policy::LatencyAware, "poisson", 4, 200.0, 1.0)
             .is_none());
     }
 
@@ -1273,12 +1436,16 @@ mod tests {
         let result = run_event_campaign(&cfg);
         let tables = result.tables();
         assert_eq!(tables.len(), cfg.topologies.len());
-        for t in &tables {
+        for (table, &topo) in tables.iter().zip(&cfg.topologies) {
             assert_eq!(
-                t.x.len(),
-                cfg.policies.len() * cfg.arrivals.len() * cfg.windows_us.len()
+                table.x.len(),
+                cfg.policies.len()
+                    * cfg.arrivals.len()
+                    * cfg.windows_us.len()
+                    * oversubs_for(topo, &cfg.fabric_oversubs).len()
             );
-            assert!(t.series("p999_us").is_some());
+            assert!(table.series("p999_us").is_some());
+            assert!(table.series("contention_us").is_some());
         }
     }
 
@@ -1287,6 +1454,8 @@ mod tests {
     fn quick_cog_cfg() -> CogCampaignConfig {
         CogCampaignConfig {
             policies: vec![Policy::RoundRobin, Policy::ModelAffinity],
+            rank_counts: vec![4],
+            fabric_oversubs: vec![1.0, 4.0],
             timesteps: 4,
             ..Default::default()
         }
@@ -1296,12 +1465,18 @@ mod tests {
     fn cog_campaign_covers_every_cell() {
         let cfg = quick_cog_cfg();
         let result = run_cog_campaign(&cfg);
-        let cells = cfg.topologies.len()
-            * cfg.policies.len()
-            * cfg.rank_counts.len()
-            * cfg.models_per_rank.len()
-            * cfg.swap_costs_s.len()
-            * cfg.overlaps.len();
+        let cells: usize = cfg
+            .topologies
+            .iter()
+            .map(|&t| {
+                cfg.policies.len()
+                    * cfg.rank_counts.len()
+                    * cfg.models_per_rank.len()
+                    * cfg.swap_costs_s.len()
+                    * cfg.overlaps.len()
+                    * oversubs_for(t, &cfg.fabric_oversubs).len()
+            })
+            .sum();
         assert_eq!(result.scenarios.len(), cells);
         for s in &result.scenarios {
             assert!(s.summary.time_to_solution_s > 0.0, "{:?}/{:?}", s.topology, s.policy);
@@ -1313,10 +1488,13 @@ mod tests {
             assert_eq!(s.summary.steps.len(), cfg.timesteps);
         }
         assert!(result
-            .scenario(Topology::Pooled, Policy::ModelAffinity, 4, 8, 2e-3, 0.0)
+            .scenario(Topology::Pooled, Policy::ModelAffinity, 4, 8, 2e-3, 0.0, 4.0)
             .is_some());
         assert!(result
-            .scenario(Topology::Hybrid, Policy::ModelAffinity, 4, 8, 2e-3, 0.0)
+            .scenario(Topology::Local, Policy::ModelAffinity, 4, 8, 2e-3, 0.0, 4.0)
+            .is_none());
+        assert!(result
+            .scenario(Topology::Hybrid, Policy::ModelAffinity, 4, 8, 2e-3, 0.0, 1.0)
             .is_none());
     }
 
@@ -1356,26 +1534,50 @@ mod tests {
         let result = run_cog_campaign(&cfg);
         let tables = result.tables();
         assert_eq!(tables.len(), cfg.topologies.len());
-        for t in &tables {
+        for (table, &topo) in tables.iter().zip(&cfg.topologies) {
             assert_eq!(
-                t.x.len(),
+                table.x.len(),
                 cfg.policies.len()
                     * cfg.rank_counts.len()
                     * cfg.models_per_rank.len()
                     * cfg.swap_costs_s.len()
                     * cfg.overlaps.len()
+                    * oversubs_for(topo, &cfg.fabric_oversubs).len()
             );
-            assert!(t.series("tts_ms").is_some());
-            assert!(t.series("swap_ms").is_some());
+            assert!(table.series("tts_ms").is_some());
+            assert!(table.series("swap_ms").is_some());
+            assert!(table.series("contention_ms").is_some());
         }
     }
 
     #[test]
     fn cog_local_topology_pays_no_network_on_the_critical_path() {
         let cfg = quick_cog_cfg();
-        let s = run_cog_scenario(Topology::Local, Policy::LatencyAware, 4, 8, 0.0, 0.0, &cfg);
+        let s =
+            run_cog_scenario(Topology::Local, Policy::LatencyAware, 4, 8, 0.0, 0.0, 1.0, &cfg);
         assert_eq!(s.summary.total_network_s, 0.0);
-        let p = run_cog_scenario(Topology::Pooled, Policy::LatencyAware, 4, 8, 0.0, 0.0, &cfg);
+        assert_eq!(s.summary.total_contention_s, 0.0);
+        let p =
+            run_cog_scenario(Topology::Pooled, Policy::LatencyAware, 4, 8, 0.0, 0.0, 1.0, &cfg);
         assert!(p.summary.total_network_s > 0.0, "pool rides the link");
+    }
+
+    #[test]
+    fn cog_fabric_oversubscription_never_speeds_the_pool_up() {
+        // The knob's contract at the campaign level: pooled TTS is
+        // monotone non-decreasing in oversubscription, and the
+        // all-local topology is untouched by it.
+        let cfg = quick_cog_cfg();
+        let tts = |oversub: f64| {
+            run_cog_scenario(Topology::Pooled, Policy::RoundRobin, 4, 8, 0.0, 0.0, oversub, &cfg)
+                .summary
+                .time_to_solution_s
+        };
+        let mut last = 0.0;
+        for oversub in [1.0, 2.0, 4.0, 8.0] {
+            let t = tts(oversub);
+            assert!(t >= last - 1e-12, "oversub {oversub}: {t} < {last}");
+            last = t;
+        }
     }
 }

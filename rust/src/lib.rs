@@ -28,6 +28,16 @@
 //! * [`rdu`] — a dataflow-accelerator simulator: tiles, micro-batch
 //!   pipelining, config-validity rules, preferred multiple-of-6 sizes.
 //! * [`netsim`] — the Infiniband link model (100 Gb/s, 1 µs).
+//! * [`fabric`] — the contention-aware fabric simulator: leaf/spine
+//!   [`fabric::Topology`] graphs (host NICs, oversubscribed uplinks,
+//!   accelerator NICs; `node_local` / `pooled` / `hybrid`
+//!   constructors), a max-min fair-share bandwidth allocator
+//!   (progressive filling), and the incremental
+//!   [`fabric::FabricEngine`] that turns every remote dispatch into
+//!   time-varying transfer events — request payload in, model-swap
+//!   traffic competing on the same uplinks, result payload out.
+//!   [`netsim::Link`] is the exact degenerate 1-flow case
+//!   (`rust/tests/fabric_props.rs`).
 //! * [`cluster`] — the multi-backend layer: a [`cluster::Backend`]
 //!   trait unifying the GPU/RDU device models behind `latency_s` /
 //!   `throughput` / `queue_s`, composed into a [`cluster::Cluster`]
@@ -69,6 +79,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod devices;
 pub mod eventsim;
+pub mod fabric;
 pub mod harness;
 pub mod metrics;
 pub mod net;

@@ -99,6 +99,7 @@ fn run() -> Result<()> {
         "campaign" => cmd_campaign(&args),
         "eventsim" => cmd_eventsim(&args),
         "cogsim" => cmd_cogsim(&args),
+        "fabric" => cmd_fabric(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -123,9 +124,28 @@ USAGE:
   repro eventsim [--horizon-ms 200] [--seed 42] [--out results/eventsim.json]
   repro cogsim [--ranks 4] [--timesteps 8] [--models 8] [--seed 42] [--smoke]
                [--out results/cogsim.json]
+  repro fabric [--timesteps 8] [--seed 42] [--smoke] [--out results/fabric.json]
   repro trace  [--timesteps 3] [--ranks 4] [--zones 1000]
-  repro info   [--artifacts artifacts]"
+  repro info   [--artifacts artifacts]
+
+The campaign modes sweep the pooled fabric's oversubscription
+(1:1/2:1/4:1/8:1 by default in cogsim mode); `repro fabric` runs the
+focused pooled-vs-node-local time-to-solution crossover sweep on the
+contention-aware fabric simulator."
     );
+}
+
+/// Write a campaign JSON document, creating parent directories
+/// (shared by every campaign subcommand).
+fn write_json_out(out: &str, json: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, json).with_context(|| format!("writing {out}"))?;
+    eprintln!("wrote {out}");
+    Ok(())
 }
 
 /// Start the disaggregated inference server.
@@ -306,15 +326,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     for table in result.tables() {
         println!("{}", table.render());
     }
-
-    let json = cogsim_disagg::util::json::write(&result.to_json());
-    if let Some(dir) = std::path::Path::new(&out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
-    std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
-    eprintln!("wrote {out}");
+    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
 
     // The headline comparison: does state-aware routing beat blind
     // round-robin on tail latency in the hybrid topology?
@@ -352,25 +364,29 @@ fn cmd_eventsim(args: &Args) -> Result<()> {
     for table in result.tables() {
         println!("{}", table.render());
     }
-
-    let json = cogsim_disagg::util::json::write(&result.to_json());
-    if let Some(dir) = std::path::Path::new(&out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
-    std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
-    eprintln!("wrote {out}");
+    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
 
     // The headline: under bursty 64-rank arrivals on the pooled
     // topology, does the dynamic-batching window shrink tail latency?
     let ranks = *cfg.rank_counts.last().expect("rank sweep is non-empty");
     let windows = (cfg.windows_us.first().copied(), cfg.windows_us.last().copied());
     if let (Some(w_off), Some(w_on)) = windows {
-        let off =
-            result.scenario(Topology::Pooled, Policy::LatencyAware, "synchronized", ranks, w_off);
-        let on =
-            result.scenario(Topology::Pooled, Policy::LatencyAware, "synchronized", ranks, w_on);
+        let off = result.scenario(
+            Topology::Pooled,
+            Policy::LatencyAware,
+            "synchronized",
+            ranks,
+            w_off,
+            1.0,
+        );
+        let on = result.scenario(
+            Topology::Pooled,
+            Policy::LatencyAware,
+            "synchronized",
+            ranks,
+            w_on,
+            1.0,
+        );
         if let (Some(off), Some(on)) = (off, on) {
             println!(
                 "pooled {ranks}-rank bursty p99: window {w_on} us {:.1} us vs window {w_off} us \
@@ -405,6 +421,7 @@ fn cmd_cogsim(args: &Args) -> Result<()> {
         cfg.policies = vec![Policy::RoundRobin, Policy::ModelAffinity];
         cfg.timesteps = cfg.timesteps.min(3);
         cfg.overlaps = vec![0.0];
+        cfg.fabric_oversubs = vec![1.0, 8.0];
     }
     if cfg.timesteps == 0 {
         bail!("--timesteps must be positive");
@@ -415,15 +432,7 @@ fn cmd_cogsim(args: &Args) -> Result<()> {
     for table in result.tables() {
         println!("{}", table.render());
     }
-
-    let json = cogsim_disagg::util::json::write(&result.to_json());
-    if let Some(dir) = std::path::Path::new(&out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
-    std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
-    eprintln!("wrote {out}");
+    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
 
     // The headline: once swapping weights costs more than serving a
     // request, sticky model-affinity routing must beat blind
@@ -431,8 +440,10 @@ fn cmd_cogsim(args: &Args) -> Result<()> {
     let ranks = cfg.rank_counts[0];
     let models = cfg.models_per_rank[0];
     let swap = *cfg.swap_costs_s.last().expect("swap sweep is non-empty");
-    let aff = result.scenario(Topology::Pooled, Policy::ModelAffinity, ranks, models, swap, 0.0);
-    let rr = result.scenario(Topology::Pooled, Policy::RoundRobin, ranks, models, swap, 0.0);
+    let aff =
+        result.scenario(Topology::Pooled, Policy::ModelAffinity, ranks, models, swap, 0.0, 1.0);
+    let rr =
+        result.scenario(Topology::Pooled, Policy::RoundRobin, ranks, models, swap, 0.0, 1.0);
     if let (Some(aff), Some(rr)) = (aff, rr) {
         println!(
             "pooled TTS at swap {:.0} us: model-affinity {:.2} ms vs round-robin {:.2} ms ({})",
@@ -445,6 +456,76 @@ fn cmd_cogsim(args: &Args) -> Result<()> {
                 "affinity does not win here"
             }
         );
+    }
+    Ok(())
+}
+
+/// Contention crossover on the flow-level fabric: pooled vs
+/// node-local time-to-solution across rank count × oversubscription.
+fn cmd_fabric(args: &Args) -> Result<()> {
+    use cogsim_disagg::cluster::Policy;
+    use cogsim_disagg::harness::campaign::{run_cog_campaign, CogCampaignConfig, Topology};
+
+    let smoke = args.get_bool("smoke");
+    let mut cfg = CogCampaignConfig {
+        topologies: vec![Topology::Local, Topology::Pooled],
+        policies: vec![Policy::LatencyAware],
+        rank_counts: if smoke { vec![4, 32] } else { vec![4, 8, 16, 32] },
+        models_per_rank: vec![8],
+        swap_costs_s: vec![0.0],
+        overlaps: vec![0.0],
+        fabric_oversubs: if smoke { vec![1.0, 8.0] } else { vec![1.0, 2.0, 4.0, 8.0] },
+        ..Default::default()
+    };
+    cfg.timesteps = args.get_usize("timesteps", cfg.timesteps)?;
+    if smoke {
+        cfg.timesteps = cfg.timesteps.min(3);
+    }
+    cfg.seed = args.get_usize("seed", 42)? as u64;
+    if cfg.timesteps == 0 {
+        bail!("--timesteps must be positive");
+    }
+    let out = args.get("out", "results/fabric.json");
+
+    let result = run_cog_campaign(&cfg);
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
+
+    // The headline: at what (rank count, oversubscription) does the
+    // shared pool lose to per-rank local GPUs on time-to-solution?
+    let policy = cfg.policies[0];
+    let mut crossover: Option<(usize, f64)> = None;
+    println!("pooled-vs-local TTS (ms), policy {}:", policy.key());
+    for &ranks in &cfg.rank_counts {
+        let local = result
+            .scenario(Topology::Local, policy, ranks, 8, 0.0, 0.0, 1.0)
+            .expect("local cell ran");
+        let local_ms = local.summary.time_to_solution_s * 1e3;
+        let mut row = format!("  ranks {ranks:>3}: local {local_ms:>8.2}  pooled");
+        for &oversub in &cfg.fabric_oversubs {
+            let pooled = result
+                .scenario(Topology::Pooled, policy, ranks, 8, 0.0, 0.0, oversub)
+                .expect("pooled cell ran");
+            let pooled_ms = pooled.summary.time_to_solution_s * 1e3;
+            let behind = pooled.summary.time_to_solution_s > local.summary.time_to_solution_s;
+            row.push_str(&format!(
+                " {oversub}:1={pooled_ms:.2}{}",
+                if behind { "*" } else { "" }
+            ));
+            if behind && crossover.is_none() {
+                crossover = Some((ranks, oversub));
+            }
+        }
+        println!("{row}");
+    }
+    match crossover {
+        Some((ranks, oversub)) => println!(
+            "pooled falls behind node-local from {ranks} ranks at {oversub}:1 \
+             oversubscription (* = pooled slower)"
+        ),
+        None => println!("pooled never falls behind node-local in this sweep"),
     }
     Ok(())
 }

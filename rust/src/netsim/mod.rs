@@ -76,6 +76,21 @@ impl Link {
         2.0 * self.wire_latency_s + self.soft_per_msg_s + transfer_s
     }
 
+    /// Fixed per-direction latency when the round trip is split into
+    /// two transfers (request in, result out), as the flow-level
+    /// fabric simulator ([`crate::fabric`]) does: one wire traversal
+    /// plus half the per-message software cost each way, so that
+    ///
+    /// ```text
+    /// 2 · dir_fixed_s + bytes_total / eff_bandwidth == rtt_overhead_s
+    /// ```
+    ///
+    /// holds exactly — [`Link`] stays the degenerate 1-flow case the
+    /// fabric collapses to when nothing competes for bandwidth.
+    pub fn dir_fixed_s(&self) -> f64 {
+        self.wire_latency_s + 0.5 * self.soft_per_msg_s
+    }
+
     /// Remote latency given node-local latency and payload bytes.
     pub fn remote_latency_s(&self, local_latency_s: f64, bytes_total: f64) -> f64 {
         local_latency_s + self.rtt_overhead_s(bytes_total)
@@ -103,6 +118,16 @@ impl Link {
 /// both directions, §V-A).
 pub fn payload_bytes(input_elems: usize, output_elems: usize, batch: usize) -> f64 {
     2.0 * (input_elems + output_elems) as f64 * batch as f64
+}
+
+/// Per-direction payload bytes at half precision: `(request, result)`.
+/// Sums to [`payload_bytes`]; the fabric simulator charges each
+/// direction as its own flow.
+pub fn dir_payload_bytes(input_elems: usize, output_elems: usize, batch: usize) -> (f64, f64) {
+    (
+        2.0 * input_elems as f64 * batch as f64,
+        2.0 * output_elems as f64 * batch as f64,
+    )
 }
 
 #[cfg(test)]
@@ -189,6 +214,26 @@ mod tests {
         // zero-batch payload sizing composes with the guard
         assert_eq!(payload_bytes(42, 30, 0), 0.0);
         assert!(ib.rtt_overhead_s(payload_bytes(42, 30, 0)).is_finite());
+    }
+
+    #[test]
+    fn direction_split_reassembles_the_round_trip() {
+        // The fabric charges each direction separately; the split
+        // must reassemble the legacy single charge exactly.
+        let link = Link::infiniband_cx6();
+        for batch in [1usize, 4, 256, 16384] {
+            let total = payload_bytes(HERMIT_IN, HERMIT_OUT, batch);
+            let (up, down) = dir_payload_bytes(HERMIT_IN, HERMIT_OUT, batch);
+            assert_eq!(up + down, total);
+            let split = 2.0 * link.dir_fixed_s() + total / link.eff_bandwidth;
+            assert!(
+                (split - link.rtt_overhead_s(total)).abs() < 1e-15,
+                "batch {batch}: {split} vs {}",
+                link.rtt_overhead_s(total)
+            );
+        }
+        // the local link splits to zero fixed cost per direction
+        assert_eq!(Link::local().dir_fixed_s(), 0.0);
     }
 
     #[test]

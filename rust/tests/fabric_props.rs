@@ -1,0 +1,279 @@
+//! Fabric correctness: the degenerate 1-flow limit against
+//! `Link::rtt_overhead_s`, hand-computed max-min allocations on the
+//! real pooled topology, and the conservation/monotonicity
+//! properties the campaign's oversubscription knob relies on.
+
+use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
+use cogsim_disagg::eventsim::{
+    ArrivalProcess, CogSim, CogSimConfig, EventSim, EventSimConfig,
+};
+use cogsim_disagg::fabric::{max_min_rates, FabricEngine, FabricSpec, Topology};
+use cogsim_disagg::netsim::{dir_payload_bytes, payload_bytes, Link};
+use cogsim_disagg::rdu::RduApi;
+
+const HERMIT_IN: usize = 42;
+const HERMIT_OUT: usize = 30;
+
+fn one_rdu() -> Vec<Box<dyn Backend>> {
+    vec![Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized))]
+}
+
+fn pool() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn spec(hosts: usize, accels: usize, oversub: f64) -> FabricSpec {
+    FabricSpec {
+        topology: Topology::pooled(hosts, accels, oversub),
+        accel_of_backend: (0..accels).collect(),
+    }
+}
+
+// ------------------------------------------------ degenerate limit
+
+/// One flow alone on a 1:1 fabric: the two directed transfers plus
+/// their fixed tails must reassemble `Link::rtt_overhead_s` to 1e-9.
+#[test]
+fn one_flow_limit_reproduces_link_rtt_overhead() {
+    let link = Link::infiniband_cx6();
+    let topo = Topology::pooled(4, 2, 1.0);
+    for batch in [1usize, 4, 64, 1024, 16384] {
+        let (bytes_in, bytes_out) = dir_payload_bytes(HERMIT_IN, HERMIT_OUT, batch);
+        let mut eng = FabricEngine::new(topo.clone());
+
+        let mut elapsed = 0.0;
+        for bytes in [bytes_in, bytes_out] {
+            let path = eng.topology().request_path(0, 1);
+            eng.start(elapsed, path, bytes);
+            let t = eng.next_completion_s().unwrap();
+            assert_eq!(eng.take_completed(t).len(), 1);
+            elapsed = t + topo.dir_fixed_s(1);
+        }
+        let expect = link.rtt_overhead_s(payload_bytes(HERMIT_IN, HERMIT_OUT, batch));
+        assert!(
+            (elapsed - expect).abs() < 1e-9,
+            "batch {batch}: fabric {elapsed} vs link {expect}"
+        );
+    }
+}
+
+/// The coupled engine in the sequential regime (1 rank, 1 request
+/// per step, no swap, no overlap, batching off): the fabric path
+/// must reproduce the legacy fixed-charge engine request for request
+/// to 1e-9 — which is exactly why `cogsim_vs_analytic` keeps
+/// holding.
+#[test]
+fn cogsim_fabric_degenerates_to_legacy_in_the_one_flow_limit() {
+    let cfg = CogSimConfig {
+        ranks: 1,
+        timesteps: 6,
+        requests_per_step: 1,
+        models: 1,
+        swap_s: 0.0,
+        overlap: 0.0,
+        ..Default::default()
+    };
+    let mut legacy = CogSim::new(one_rdu(), Policy::RoundRobin, cfg);
+    legacy.run_to_completion();
+    let mut fabric = CogSim::with_fabric(
+        one_rdu(),
+        Policy::RoundRobin,
+        cfg,
+        vec![0],
+        vec![0],
+        spec(1, 1, 1.0),
+    );
+    fabric.run_to_completion();
+
+    assert_eq!(legacy.records().len(), fabric.records().len());
+    assert!(!legacy.records().is_empty());
+    for (l, f) in legacy.records().iter().zip(fabric.records()) {
+        assert_eq!(l.model, f.model);
+        assert!((l.emit_s - f.emit_s).abs() < 1e-9, "{} vs {}", l.emit_s, f.emit_s);
+        assert!(
+            (l.complete_s - f.complete_s).abs() < 1e-9,
+            "complete {} vs {}",
+            l.complete_s,
+            f.complete_s
+        );
+        assert!((l.latency_s() - f.latency_s()).abs() < 1e-9);
+        // the measured transfer equals the degenerate link charge
+        assert!((l.link_s - f.link_s).abs() < 1e-9, "{} vs {}", l.link_s, f.link_s);
+        assert!(f.contention_s.abs() < 1e-9, "no sharing, no contention");
+    }
+    assert!(
+        (legacy.time_to_solution_s() - fabric.time_to_solution_s()).abs() < 1e-9,
+        "TTS {} vs {}",
+        legacy.time_to_solution_s(),
+        fabric.time_to_solution_s()
+    );
+}
+
+/// Same degenerate limit for the open event engine: a closed loop
+/// with one rank keeps exactly one transfer on the wire at a time.
+#[test]
+fn eventsim_fabric_degenerates_to_legacy_closed_loop() {
+    let cfg = EventSimConfig {
+        ranks: 1,
+        arrival: ArrivalProcess::ClosedLoop { think_s: 2e-3 },
+        horizon_s: 0.05,
+        ..Default::default()
+    };
+    let mut legacy = EventSim::new(one_rdu(), Policy::RoundRobin, cfg);
+    legacy.run_to_completion();
+    let mut fabric = EventSim::with_fabric(
+        one_rdu(),
+        Policy::RoundRobin,
+        cfg,
+        vec![0],
+        vec![0],
+        spec(1, 1, 1.0),
+    );
+    fabric.run_to_completion();
+
+    assert_eq!(legacy.submitted(), fabric.submitted());
+    assert!(legacy.submitted() > 0);
+    assert_eq!(legacy.records().len(), fabric.records().len());
+    for (l, f) in legacy.records().iter().zip(fabric.records()) {
+        assert!((l.arrival_s - f.arrival_s).abs() < 1e-9);
+        assert!(
+            (l.complete_s - f.complete_s).abs() < 1e-9,
+            "complete {} vs {}",
+            l.complete_s,
+            f.complete_s
+        );
+        assert!((l.link_overhead_s - f.link_overhead_s).abs() < 1e-9);
+        assert!(f.contention_s.abs() < 1e-9);
+    }
+}
+
+// ------------------------------------- hand-computed fair sharing
+
+/// Two, three, and four flows on the real pooled topology, pushing
+/// the bottleneck from the accelerator NIC to the oversubscribed
+/// uplink.
+#[test]
+fn hand_computed_shares_nic_vs_uplink_bottleneck() {
+    let nic = Link::infiniband_cx6().eff_bandwidth;
+
+    // 1:1, 2 flows to the same accel: its rx NIC is the bottleneck.
+    let topo = Topology::pooled(4, 2, 1.0);
+    let flows =
+        vec![topo.request_path(0, 0), topo.request_path(1, 0)];
+    let rates = max_min_rates(topo.capacities(), &flows);
+    assert_eq!(rates, vec![nic / 2.0, nic / 2.0]);
+
+    // 1:1, 3 flows split 2-vs-1 over the two accels: accel 0's NIC
+    // halves its two flows, accel 1's lone flow keeps the full NIC
+    // (the shared downlink has 2x NIC capacity — not the bottleneck).
+    let flows = vec![
+        topo.request_path(0, 0),
+        topo.request_path(1, 0),
+        topo.request_path(2, 1),
+    ];
+    let rates = max_min_rates(topo.capacities(), &flows);
+    assert_eq!(rates, vec![nic / 2.0, nic / 2.0, nic]);
+
+    // 8:1, 4 flows: the accel-leaf downlink (2·nic/8 = nic/4) is now
+    // the bottleneck for everyone — each flow gets nic/16,
+    // regardless of which accel it targets.
+    let topo = Topology::pooled(4, 2, 8.0);
+    let flows = vec![
+        topo.request_path(0, 0),
+        topo.request_path(1, 0),
+        topo.request_path(2, 1),
+        topo.request_path(3, 1),
+    ];
+    let rates = max_min_rates(topo.capacities(), &flows);
+    for (i, &r) in rates.iter().enumerate() {
+        assert!((r - nic / 16.0).abs() < 1e-6, "flow {i}: {r} vs {}", nic / 16.0);
+    }
+}
+
+// --------------------------------- conservation and monotonicity
+
+#[test]
+fn fabric_conserves_requests_and_measures_sane_transfers() {
+    let cfg = EventSimConfig { ranks: 24, horizon_s: 0.045, ..Default::default() };
+    let mut sim = EventSim::with_fabric(
+        pool(),
+        Policy::LeastOutstanding,
+        cfg,
+        vec![0, 1],
+        vec![0, 1],
+        spec(24, 2, 4.0),
+    );
+    sim.run_to_completion();
+    assert_eq!(sim.completed(), sim.submitted());
+    assert_eq!(sim.in_flight(), 0);
+    assert_eq!(sim.batcher_pending(), 0);
+    let ideal = Link::infiniband_cx6();
+    for r in sim.records() {
+        assert!(r.complete_s.is_finite());
+        // measured transfer can never beat the uncontended round trip
+        let floor = ideal.rtt_overhead_s(payload_bytes(
+            HERMIT_IN,
+            HERMIT_OUT,
+            r.batch_samples,
+        ));
+        assert!(
+            r.link_overhead_s >= floor - 1e-12,
+            "measured {} under the uncontended floor {floor}",
+            r.link_overhead_s
+        );
+        assert!((r.contention_s - (r.link_overhead_s - floor)).abs() < 1e-9);
+    }
+}
+
+/// The acceptance property behind the campaign knob: cutting
+/// bisection bandwidth never speeds the burst up — mean transfer
+/// time, mean completion, and makespan are monotone non-decreasing
+/// in the oversubscription factor.  (Pointwise per-request
+/// monotonicity is *not* claimed: a slower fabric spreads arrivals,
+/// which can shorten an individual request's backend queue.)
+#[test]
+fn completion_times_monotone_in_oversubscription() {
+    let run = |oversub: f64| -> (f64, f64, f64) {
+        let cfg = EventSimConfig { ranks: 16, horizon_s: 0.045, ..Default::default() };
+        let mut sim = EventSim::with_fabric(
+            pool(),
+            Policy::RoundRobin,
+            cfg,
+            vec![0, 1],
+            vec![0, 1],
+            spec(16, 2, oversub),
+        );
+        sim.run_to_completion();
+        let n = sim.records().len() as f64;
+        let mean_complete = sim.records().iter().map(|r| r.complete_s).sum::<f64>() / n;
+        let makespan = sim
+            .records()
+            .iter()
+            .map(|r| r.complete_s)
+            .fold(0.0f64, f64::max);
+        (sim.summary().mean_link_overhead_s, mean_complete, makespan)
+    };
+    let mut last = (0.0, 0.0, 0.0);
+    for oversub in [1.0, 2.0, 4.0, 8.0] {
+        let (link, mean_c, makespan) = run(oversub);
+        assert!(
+            link >= last.0 - 1e-12,
+            "oversub {oversub}: mean transfer {link} < {}",
+            last.0
+        );
+        assert!(
+            mean_c >= last.1 - 1e-12,
+            "oversub {oversub}: mean completion {mean_c} < {}",
+            last.1
+        );
+        assert!(
+            makespan >= last.2 - 1e-12,
+            "oversub {oversub}: makespan {makespan} < {}",
+            last.2
+        );
+        last = (link, mean_c, makespan);
+    }
+}
