@@ -12,7 +12,7 @@
 
 use cogsim_disagg::cluster::{Backend, Cluster, GpuBackend, Policy, RduBackend};
 use cogsim_disagg::devices::{profiles, Api, Gpu};
-use cogsim_disagg::harness::campaign::{run_campaign, CampaignConfig, Topology};
+use cogsim_disagg::harness::{run_campaign, CampaignConfig, Topology};
 use cogsim_disagg::rdu::RduApi;
 use cogsim_disagg::util::json;
 use cogsim_disagg::util::stats;

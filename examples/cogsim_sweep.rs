@@ -14,7 +14,7 @@
 
 use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
 use cogsim_disagg::eventsim::{CogSim, CogSimConfig};
-use cogsim_disagg::harness::campaign::{run_cog_campaign, CogCampaignConfig};
+use cogsim_disagg::harness::{run_cog_campaign, CogCampaignConfig};
 use cogsim_disagg::rdu::RduApi;
 use cogsim_disagg::util::json;
 

@@ -12,7 +12,7 @@
 
 use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
 use cogsim_disagg::eventsim::{ArrivalProcess, Batching, EventSim, EventSimConfig};
-use cogsim_disagg::harness::campaign::{run_event_campaign, EventCampaignConfig};
+use cogsim_disagg::harness::{run_event_campaign, EventCampaignConfig};
 use cogsim_disagg::rdu::RduApi;
 use cogsim_disagg::util::json;
 

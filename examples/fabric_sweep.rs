@@ -13,7 +13,7 @@
 
 use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::fabric::{FabricEngine, FabricSpec, Topology};
-use cogsim_disagg::harness::campaign::{
+use cogsim_disagg::harness::{
     run_cog_scenario, CogCampaignConfig, Topology as CampaignTopology,
 };
 

@@ -23,41 +23,68 @@ def oversubs_for(topology, oversubs):
 
 
 # --------------------------------------------------------- fleets
+#
+# Fleet axis (mirrors harness::scenario::Fleet): "default" is the
+# legacy 4-tile-C++ + 2-tile-Python RDU pair; ("mixed", G, R) is a
+# heterogeneous pool of G remote A100/TRT-CG members followed by R RDU
+# tile groups alternating the default pair's shapes.
+
+DEFAULT_FLEET = "default"
 
 
-def build_fleet(topology, ranks, pool_link):
+def fleet_pool_size(fleet):
+    if fleet == DEFAULT_FLEET:
+        return 2
+    _, gpus, rdus = fleet
+    return gpus + rdus
+
+
+def pool_members(fleet, pool_link):
+    import rdu
+    if fleet == DEFAULT_FLEET:
+        return [
+            RduBackend("rdu/pool0", 4, rdu.RDU_CPP_OPT, pool_link.clone()),
+            RduBackend("rdu/pool1", 2, rdu.RDU_PYTHON, pool_link.clone()),
+        ]
+    _, gpus, rdus = fleet
+    assert gpus + rdus >= 1
+    members = [GpuBackend(f"gpu/pool{i}", devices.Gpu.a100(), devices.TRT_CUDA_GRAPHS,
+                          pool_link.clone())
+               for i in range(gpus)]
+    for j in range(rdus):
+        tiles, api = (4, rdu.RDU_CPP_OPT) if j % 2 == 0 else (2, rdu.RDU_PYTHON)
+        members.append(RduBackend(f"rdu/pool{gpus + j}", tiles, api, pool_link.clone()))
+    return members
+
+
+def build_fleet(topology, ranks, pool_link, fleet=DEFAULT_FLEET):
     def local_gpu(r):
         return GpuBackend(f"gpu/rank{r}", devices.Gpu.a100(), devices.TRT_CUDA_GRAPHS)
-
-    def pool(start):
-        import rdu
-        return [
-            RduBackend(f"rdu/pool{start}", 4, rdu.RDU_CPP_OPT, pool_link.clone()),
-            RduBackend(f"rdu/pool{start + 1}", 2, rdu.RDU_PYTHON, pool_link.clone()),
-        ]
 
     if topology == "local":
         backends = [local_gpu(r) for r in range(ranks)]
         allidx = list(range(len(backends)))
         return backends, (allidx, list(allidx))
     if topology == "pooled":
-        backends = pool(0)
+        backends = pool_members(fleet, pool_link)
         allidx = list(range(len(backends)))
         return backends, (allidx, list(allidx))
     # hybrid
     backends = [local_gpu(r) for r in range(ranks)]
     gpu_idx = list(range(len(backends)))
-    backends.extend(pool(0))
+    backends.extend(pool_members(fleet, pool_link))
     pool_idx = list(range(len(gpu_idx), len(backends)))
     return backends, (pool_idx, gpu_idx)  # (hermit, mir)
 
 
-def build_fabric_spec(topology, ranks, oversub):
+def build_fabric_spec(topology, ranks, oversub, fleet=DEFAULT_FLEET):
+    pool = fleet_pool_size(fleet)
     if topology == "local":
         return None
     if topology == "pooled":
-        return (NetTopology.pooled(ranks, 2, oversub), [0, 1])
-    return (NetTopology.hybrid(ranks, 2, oversub), list(range(ranks)) + [ranks, ranks + 1])
+        return (NetTopology.pooled(ranks, pool, oversub), list(range(pool)))
+    return (NetTopology.hybrid(ranks, pool, oversub),
+            list(range(ranks)) + list(range(ranks, ranks + pool)))
 
 
 # -------------------------------------------------- analytic mode
@@ -79,8 +106,8 @@ def derated_link(link, oversub):
     return l
 
 
-def run_scenario_with_link(topology, policy, cfg, pool_link):
-    backends, (hermit_tier, mir_tier) = build_fleet(topology, cfg["ranks"], pool_link)
+def run_scenario_with_link(topology, policy, cfg, pool_link, fleet=DEFAULT_FLEET):
+    backends, (hermit_tier, mir_tier) = build_fleet(topology, cfg["ranks"], pool_link, fleet)
     cluster = Cluster(backends, policy)
     hydra = HydraWorkload(cfg["ranks"], cfg["zones_per_rank"], cfg["materials"],
                           (2, 3), cfg["seed"])
@@ -166,8 +193,10 @@ def default_event_cfg():
     }
 
 
-def run_event_scenario(topology, policy, arrival, ranks, window_us, oversub, cfg):
-    backends, (hermit_tier, mir_tier) = build_fleet(topology, ranks, Link.infiniband_cx6())
+def run_event_scenario(topology, policy, arrival, ranks, window_us, oversub, cfg,
+                       fleet=DEFAULT_FLEET):
+    backends, (hermit_tier, mir_tier) = build_fleet(topology, ranks, Link.infiniband_cx6(),
+                                                    fleet)
     sim_cfg = {
         "ranks": ranks, "materials": cfg["materials"],
         "samples_per_request": cfg["samples_per_request"],
@@ -177,7 +206,7 @@ def run_event_scenario(topology, policy, arrival, ranks, window_us, oversub, cfg
         "batching": ((window_us * 1e-6, cfg["max_batch"]) if window_us > 0.0 else None),
         "horizon_s": cfg["horizon_s"], "seed": cfg["seed"],
     }
-    spec = build_fabric_spec(topology, ranks, oversub)
+    spec = build_fabric_spec(topology, ranks, oversub, fleet)
     fabric = FabricLayer(spec[0], spec[1], len(backends)) if spec else None
     sim = EventSim(backends, policy, sim_cfg, hermit_tier, mir_tier, fabric)
     sim.run_to_completion()
@@ -226,8 +255,10 @@ def default_cog_cfg():
     }
 
 
-def run_cog_scenario(topology, policy, ranks, models, swap_s, overlap, oversub, cfg):
-    backends, (hermit_tier, mir_tier) = build_fleet(topology, ranks, Link.infiniband_cx6())
+def run_cog_scenario(topology, policy, ranks, models, swap_s, overlap, oversub, cfg,
+                     fleet=DEFAULT_FLEET):
+    backends, (hermit_tier, mir_tier) = build_fleet(topology, ranks, Link.infiniband_cx6(),
+                                                    fleet)
     sim_cfg = {
         "ranks": ranks, "timesteps": cfg["timesteps"], "compute_s": cfg["compute_s"],
         "compute_jitter_s": 0.0, "requests_per_step": cfg["requests_per_step"],
@@ -239,7 +270,7 @@ def run_cog_scenario(topology, policy, ranks, models, swap_s, overlap, oversub, 
                      if cfg["window_us"] > 0.0 else None),
         "seed": cfg["seed"],
     }
-    spec = build_fabric_spec(topology, ranks, oversub)
+    spec = build_fabric_spec(topology, ranks, oversub, fleet)
     fabric = FabricLayer(spec[0], spec[1], len(backends)) if spec else None
     sim = CogSim(backends, policy, sim_cfg, hermit_tier, mir_tier, fabric)
     sim.run_to_completion()

@@ -1,30 +1,16 @@
-"""eventsim::cogsim transliteration: the coupled CogSim engine."""
+"""eventsim::cogsim transliteration: the coupled CogSim engine
+driving the simcore Pipeline.
+
+The engine keeps only workload logic — the bulk-synchronous timestep
+barrier, per-rank state, and record keeping; every dispatch/batch/
+residency/fabric/service decision lives in simcore.Pipeline."""
 
 import math
 
-import devices
-import stats
-from cluster import select
-from equeue import CLASS_ARRIVAL, CLASS_COMPLETION, CLASS_DEADLINE, EventQueue
-from eventsim import BatchStage, latency_dist, rank_rngs
-from netsim import dir_payload_bytes
+from equeue import CLASS_ARRIVAL, EventQueue
+from eventsim import latency_dist, rank_rngs
+from simcore import Pipeline
 from workload import material_model
-
-
-class Residency:
-    def __init__(self, slots):
-        self.slots = slots
-        self.held = []
-
-    def touch(self, model):
-        if model in self.held:
-            self.held.remove(model)
-            self.held.append(model)
-            return False
-        self.held.append(model)
-        if len(self.held) > self.slots:
-            self.held.pop(0)
-        return True
 
 
 class CogSim:
@@ -34,36 +20,22 @@ class CogSim:
         # mir_samples, overlap, swap_s, residency_slots,
         # batching (None | (window_s, max_batch)), seed
         self.cfg = cfg
-        self.backends = backends
-        self.policy = policy
-        self.hermit_tier = hermit_tier
-        self.mir_tier = mir_tier
-        self.hermit_profile = devices.hermit()
-        self.mir_profile = devices.mir_noln()
-        self.rr_state = [0]
-        self.affinity = {}
-        self.residency = [Residency(cfg["residency_slots"]) for _ in backends]
-        self.clock_s = 0.0
+        self.core = Pipeline(backends, policy, hermit_tier, mir_tier,
+                             cfg["batching"],
+                             (cfg["residency_slots"], cfg["swap_s"]), fabric)
         self.events = EventQueue()
-        self.batcher = (BatchStage(*cfg["batching"]) if cfg["batching"] else None)
-        self.fabric = fabric
-        self.transits = []
-        self.swap_ready_s = {}   # (backend, model) -> landing time (inf = in transit)
-        self.swap_waiters = {}   # (backend, model) -> [token]
         self.rngs = rank_rngs(cfg["seed"], cfg["ranks"])
         self.ranks = [self._idle_rank() for _ in range(cfg["ranks"])]
         self.step_start_s = 0.0
         self.current_step = 0
         self.finished_ranks = 0
-        self.pending = []  # [step, rank, model, samples, emit_s, record]
+        # what the pipeline cannot know: [step, emit_s, record];
+        # rank/model/samples live in core.req_meta, id-aligned
+        self.pending = []
         self.records = []
+        self.rec0_of_token = []  # transit token -> first record index
         self.steps = []
-        self.submitted = 0
-        self.dispatched = 0
-        self.completed = 0
-        self.batches = 0
-        self.swaps = 0
-        self.swap_time_s = 0.0
+        self.events_processed = 0
         self.events.push_class(0.0, CLASS_ARRIVAL, ("step_start", 0))
 
     @staticmethod
@@ -72,6 +44,38 @@ class CogSim:
                 "compute_done": False, "finished": False, "finish_s": 0.0,
                 "last_record": None}
 
+    # counters live on the pipeline
+    @property
+    def clock_s(self):
+        return self.core.clock_s
+
+    @property
+    def submitted(self):
+        return self.core.submitted
+
+    @property
+    def dispatched(self):
+        return self.core.dispatched_n
+
+    @property
+    def completed(self):
+        return self.core.completed_n
+
+    @property
+    def batches(self):
+        return self.core.batches
+
+    @property
+    def swaps(self):
+        return self.core.swaps
+
+    @property
+    def swap_time_s(self):
+        return self.core.swap_time_s
+
+    def batcher_pending(self):
+        return self.core.batcher_pending()
+
     # ------------------------------------------------------ run loop
 
     def _pump(self):
@@ -79,21 +83,14 @@ class CogSim:
         if popped is None:
             return False
         t, event = popped
-        self._advance_clock(t)
+        self.events_processed += 1
+        self.core.advance_to(t)
         self._handle(event)
         return True
 
     def run_to_completion(self):
         while self._pump():
             pass
-
-    def _advance_clock(self, t_s):
-        dt = t_s - self.clock_s
-        if dt <= 0.0:
-            return
-        for b in self.backends:
-            b.drain_queue_s(dt)
-        self.clock_s = t_s
 
     def _handle(self, event):
         kind = event[0]
@@ -103,20 +100,9 @@ class CogSim:
             self._on_request(event[1], event[2], event[3])
         elif kind == "compute_done":
             self._on_compute_done(event[1])
-        elif kind == "deadline":
-            self._pump_batcher()
-        elif kind == "completion":
-            self._on_completion(event[1])
-        elif kind == "fabric_wake":
-            self._on_fabric_wake(event[1])
-        elif kind == "xfer_in":
-            self._on_xfer_in_done(event[1])
-        elif kind == "service_done":
-            self._on_service_done(event[1])
-        elif kind == "xfer_out":
-            self._on_xfer_out_done(event[1])
         else:
-            raise ValueError(kind)
+            self.core.handle(event)
+            self._apply_effects()
 
     # ------------------------------------------------- timestep loop
 
@@ -208,204 +194,68 @@ class CogSim:
     # ------------------------------------------------------- routing
 
     def _on_request(self, rank, model, samples):
-        self.submitted += 1
-        id_ = len(self.pending)
-        self.pending.append([self.current_step, rank, model, samples, self.clock_s, None])
-        if self.batcher is not None:
-            self.batcher.enqueue(model, id_, samples, self.clock_s)
-            for ids in self.batcher.drain_size_ready():
-                self._dispatch(ids)
-            self._arm_batch_wakeup()
-        else:
-            self._dispatch([id_])
+        self.pending.append([self.current_step, self.clock_s, None])
+        id_ = self.core.submit(rank, model, samples)
+        assert id_ == len(self.pending) - 1
+        self._apply_effects()
 
-    def _arm_batch_wakeup(self):
-        t = self.batcher.wakeup_at(self.clock_s)
-        if t is not None:
-            self.events.push_class(t, CLASS_DEADLINE, ("deadline",))
-
-    def _pump_batcher(self):
-        for ids in self.batcher.drain_ready(self.clock_s):
-            self._dispatch(ids)
-        self._arm_batch_wakeup()
-
-    def _dispatch(self, ids):
-        model = self.pending[ids[0]][2]
-        total = sum(self.pending[i][3] for i in ids)
-        is_mir = model.startswith("mir")
-        profile = self.mir_profile if is_mir else self.hermit_profile
-        candidates = self.mir_tier if is_mir else self.hermit_tier
-        idx = select(self.policy, self.backends, self.rr_state, self.affinity,
-                     candidates, model, profile, total)
-        miss = self.residency[idx].touch(model)
-        if miss:
-            self.swaps += 1
-        if self.fabric is not None and self.fabric.is_remote(idx):
-            self._dispatch_remote(ids, idx, total, profile, miss)
-            return
-        swap_s = self.cfg["swap_s"] if miss else 0.0
-        if miss:
-            self.swap_time_s += swap_s
-        backend = self.backends[idx]
-        wait_s = backend.queue_s()
-        link_s = backend.link_overhead_s(profile, total)
-        exec_s = backend.execute_s(profile, total)
-        latency_s = wait_s + swap_s + (link_s + exec_s)
-        occupancy = backend.occupancy_s(profile, total) + swap_s
-        backend.add_queue_s(occupancy)
-        complete_s = self.clock_s + latency_s
-        for i in ids:
-            meta = self.pending[i]
-            meta[5] = len(self.records)
-            self.records.append({
-                "id": i, "step": meta[0], "rank": meta[1], "model": meta[2],
-                "samples": meta[3], "emit_s": meta[4], "dispatch_s": self.clock_s,
-                "complete_s": complete_s, "backend": idx, "batch_samples": total,
-                "wait_s": wait_s, "swap_s": swap_s, "link_s": link_s,
-                "contention_s": 0.0, "exec_s": exec_s,
-            })
-        self.dispatched += len(ids)
-        self.batches += 1
-        self.events.push_class(complete_s, CLASS_COMPLETION, ("completion", ids))
-
-    # ------------------------------------------------- fabric phases
-
-    def _dispatch_remote(self, ids, idx, total, profile, miss):
-        bytes_in, bytes_out = dir_payload_bytes(profile.input_elems, profile.output_elems, total)
-        fab = self.fabric
-        accel = fab.accel(idx)
-        host = fab.host_of_rank(self.pending[ids[0]][1])
-        ideal_rtt_s = fab.ideal_rtt_s(bytes_in + bytes_out)
-        swap_bytes = self.cfg["swap_s"] * fab.topology.link.eff_bandwidth
-        backend = self.backends[idx]
-        exec_s = backend.execute_s(profile, total)
-        backend.add_queue_s(exec_s)
-        rec0 = len(self.records)
-        for i in ids:
-            meta = self.pending[i]
-            meta[5] = len(self.records)
-            self.records.append({
-                "id": i, "step": meta[0], "rank": meta[1], "model": meta[2],
-                "samples": meta[3], "emit_s": meta[4], "dispatch_s": self.clock_s,
-                "complete_s": math.nan, "backend": idx, "batch_samples": total,
-                "wait_s": 0.0, "swap_s": 0.0, "link_s": 0.0,
-                "contention_s": 0.0, "exec_s": 0.0,
-            })
-        self.dispatched += len(ids)
-        self.batches += 1
-        model = self.pending[ids[0]][2]
-        token = len(self.transits)
-        needs_swap_flow = miss and swap_bytes > 0.0
-        if needs_swap_flow:
-            self.swap_ready_s[(idx, model)] = math.inf
-        self.transits.append({
-            "ids": ids, "backend": idx, "accel": accel, "host": host,
-            "model": model, "bytes_out": bytes_out, "dispatch_s": self.clock_s,
-            "net_in_s": 0.0, "in_done_s": 0.0,
-            "in_done": False, "swap_done": not needs_swap_flow, "started": False,
-            "swap_excess_s": 0.0, "wait_s": 0.0, "exec_s": exec_s,
-            "out_start_s": 0.0, "ideal_rtt_s": ideal_rtt_s, "rec0": rec0,
-        })
-        path = fab.topology.request_path(host, accel)
-        flow = fab.engine.start(self.clock_s, path, bytes_in)
-        fab.cont[flow] = ("in", token)
-        if needs_swap_flow:
-            spath = fab.topology.swap_path(accel)
-            sflow = fab.engine.start(self.clock_s, spath, swap_bytes)
-            fab.cont[sflow] = ("swap", token)
-        self._arm_fabric()
-
-    def _arm_fabric(self):
-        armed = self.fabric.next_wake(self.clock_s)
-        if armed is not None:
-            t, version = armed
-            self.events.push_class(t, CLASS_COMPLETION, ("fabric_wake", version))
-
-    def _on_fabric_wake(self, version):
-        fab = self.fabric
-        conts = fab.drain_wake(version, self.clock_s)
-        if conts is None:
-            return
-        for kind, token in conts:
-            if kind == "in":
-                fixed = fab.topology.dir_fixed_s(self.transits[token]["accel"])
-                self.events.push_class(self.clock_s + fixed, CLASS_COMPLETION,
-                                       ("xfer_in", token))
-            elif kind == "swap":
-                measured = self.clock_s - self.transits[token]["dispatch_s"]
-                self.swap_time_s += measured
-                self.transits[token]["swap_done"] = True
-                key = (self.transits[token]["backend"], self.transits[token]["model"])
-                self.swap_ready_s[key] = self.clock_s
-                self._try_begin_service(token)
-                for waiter in self.swap_waiters.pop(key, []):
-                    self._try_begin_service(waiter)
-            else:  # out
-                fixed = fab.topology.dir_fixed_s(self.transits[token]["accel"])
-                self.events.push_class(self.clock_s + fixed, CLASS_COMPLETION,
-                                       ("xfer_out", token))
-        self._arm_fabric()
-
-    def _on_xfer_in_done(self, token):
-        tr = self.transits[token]
-        tr["net_in_s"] = self.clock_s - tr["dispatch_s"]
-        tr["in_done_s"] = self.clock_s
-        tr["in_done"] = True
-        self._try_begin_service(token)
-
-    def _try_begin_service(self, token):
-        clock = self.clock_s
-        tr = self.transits[token]
-        if tr["started"] or not (tr["in_done"] and tr["swap_done"]):
-            return
-        key = (tr["backend"], tr["model"])
-        if math.isinf(self.swap_ready_s.get(key, 0.0)):
-            self.swap_waiters.setdefault(key, []).append(token)
-            return
-        wait_s, done_s = self.fabric.occupy(tr["backend"], clock, tr["exec_s"])
-        backend = self.backends[tr["backend"]]
-        deficit = (done_s - clock) - backend.queue_s()
-        if deficit > 0.0:
-            backend.add_queue_s(deficit)
-        tr["started"] = True
-        tr["swap_excess_s"] = clock - tr["in_done_s"]
-        tr["wait_s"] = wait_s
-        self.events.push_class(done_s, CLASS_COMPLETION, ("service_done", token))
-
-    def _on_service_done(self, token):
-        tr = self.transits[token]
-        tr["out_start_s"] = self.clock_s
-        fab = self.fabric
-        path = fab.topology.response_path(tr["host"], tr["accel"])
-        flow = fab.engine.start(self.clock_s, path, tr["bytes_out"])
-        fab.cont[flow] = ("out", token)
-        self._arm_fabric()
-
-    def _on_xfer_out_done(self, token):
-        tr = self.transits[token]
-        net_out_s = self.clock_s - tr["out_start_s"]
-        link_s = tr["net_in_s"] + net_out_s
-        contention_s = max(link_s - tr["ideal_rtt_s"], 0.0)
-        for k in range(len(tr["ids"])):
-            r = self.records[tr["rec0"] + k]
-            r["complete_s"] = self.clock_s
-            r["wait_s"] = tr["wait_s"]
-            r["swap_s"] = tr["swap_excess_s"]
-            r["link_s"] = link_s
-            r["contention_s"] = contention_s
-            r["exec_s"] = tr["exec_s"]
-        self._on_completion(tr["ids"])
-
-    def _on_completion(self, ids):
-        self.completed += len(ids)
-        for i in ids:
-            rank = self.pending[i][1]
-            record = self.pending[i][5]
-            st = self.ranks[rank]
-            assert st["outstanding"] > 0
-            st["outstanding"] -= 1
-            st["last_record"] = record
-            self._try_finish(rank)
+    def _apply_effects(self):
+        scheduled, dispatched, completed = self.core.take_effects()
+        for d in dispatched:
+            if d[0] == "direct":
+                _, ids, idx, total, wait_s, swap_s, link_s, exec_s, complete_s = d
+                for i in ids:
+                    rank, model, samples = self.core.req_meta[i]
+                    meta = self.pending[i]
+                    meta[2] = len(self.records)
+                    self.records.append({
+                        "id": i, "step": meta[0], "rank": rank, "model": model,
+                        "samples": samples, "emit_s": meta[1],
+                        "dispatch_s": self.clock_s,
+                        "complete_s": complete_s, "backend": idx,
+                        "batch_samples": total,
+                        "wait_s": wait_s, "swap_s": swap_s, "link_s": link_s,
+                        "contention_s": 0.0, "exec_s": exec_s,
+                    })
+            else:  # remote
+                _, ids, idx, total, token = d
+                assert token == len(self.rec0_of_token)
+                self.rec0_of_token.append(len(self.records))
+                for i in ids:
+                    rank, model, samples = self.core.req_meta[i]
+                    meta = self.pending[i]
+                    meta[2] = len(self.records)
+                    self.records.append({
+                        "id": i, "step": meta[0], "rank": rank, "model": model,
+                        "samples": samples, "emit_s": meta[1],
+                        "dispatch_s": self.clock_s,
+                        "complete_s": math.nan, "backend": idx,
+                        "batch_samples": total,
+                        "wait_s": 0.0, "swap_s": 0.0, "link_s": 0.0,
+                        "contention_s": 0.0, "exec_s": 0.0,
+                    })
+        for t, cls, ev in scheduled:
+            self.events.push_class(t, cls, ev)
+        for ids, token, timing in completed:
+            if timing is not None:
+                wait_s, swap_x, link_s, contention_s, exec_s = timing
+                rec0 = self.rec0_of_token[token]
+                for k in range(len(ids)):
+                    r = self.records[rec0 + k]
+                    r["complete_s"] = self.clock_s
+                    r["wait_s"] = wait_s
+                    r["swap_s"] = swap_x
+                    r["link_s"] = link_s
+                    r["contention_s"] = contention_s
+                    r["exec_s"] = exec_s
+            for i in ids:
+                rank = self.core.req_meta[i][0]
+                record = self.pending[i][2]
+                st = self.ranks[rank]
+                assert st["outstanding"] > 0
+                st["outstanding"] -= 1
+                st["last_record"] = record
+                self._try_finish(rank)
 
     # ----------------------------------------------------- summary
 

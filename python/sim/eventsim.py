@@ -1,16 +1,16 @@
-"""eventsim transliteration: BatchStage, FabricLayer, EventSim."""
+"""eventsim transliteration: EventSim driving the simcore Pipeline.
+
+The engine keeps only workload logic — arrival generators and record
+keeping; every dispatch/batch/fabric/service decision lives in
+simcore.Pipeline (mirrors rust/src/simcore/)."""
 
 import math
 
-import devices
 import stats
-from batcher import DynamicBatcher, PendingRequest
-from cluster import select
-from equeue import CLASS_ARRIVAL, CLASS_COMPLETION, CLASS_DEADLINE, EventQueue
-from fabric import FabricEngine
-from netsim import dir_payload_bytes
+from equeue import EventQueue
 from rng import Rng
-from rustfloat import MASK64, dur_as_secs_f64, dur_from_secs_f64
+from rustfloat import MASK64
+from simcore import BatchStage, FabricLayer, Pipeline  # noqa: F401 (re-export)
 from workload import material_model
 
 HIST_EDGES_US = [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3,
@@ -41,90 +41,6 @@ def latency_dist(xs):
     }
 
 
-class BatchStage:
-    def __init__(self, window_s, max_batch):
-        assert window_s >= 0.0 and math.isfinite(window_s)
-        assert max_batch >= 1
-        self.batcher = DynamicBatcher(max_batch, dur_from_secs_f64(window_s), max_batch)
-        self.pending = 0
-
-    @staticmethod
-    def inst(t_s):
-        return dur_from_secs_f64(t_s)
-
-    def enqueue(self, instance, id_, samples, clock_s):
-        self.batcher.enqueue(instance, PendingRequest(id_, samples, self.inst(clock_s)))
-        self.pending += 1
-
-    def drain_size_ready(self):
-        out = []
-        while self.batcher.has_size_ready():
-            for batch in self.batcher.drain_size_ready():
-                self.pending -= len(batch.requests)
-                out.append([r.id for r in batch.requests])
-        return out
-
-    def drain_ready(self, clock_s):
-        now = self.inst(clock_s)
-        out = []
-        while self.batcher.has_ready(now):
-            for batch in self.batcher.drain_ready(now):
-                self.pending -= len(batch.requests)
-                out.append([r.id for r in batch.requests])
-        return out
-
-    def wakeup_at(self, clock_s):
-        now = self.inst(clock_s)
-        if self.batcher.has_ready(now):
-            return clock_s
-        d = self.batcher.next_deadline(now)
-        if d is None:
-            return None
-        return max(dur_as_secs_f64(d), clock_s)
-
-
-class FabricLayer:
-    def __init__(self, topology, accel_of_backend, n_backends):
-        assert len(accel_of_backend) == n_backends
-        self.topology = topology
-        self.accel_of_backend = accel_of_backend
-        self.engine = FabricEngine(topology)
-        self.cont = {}  # flow id -> ("in"|"swap"|"out", token)
-        self.wake_version = 0
-        self.busy_until_s = [0.0] * n_backends
-
-    def is_remote(self, backend):
-        return self.topology.is_pooled(self.accel_of_backend[backend])
-
-    def accel(self, backend):
-        return self.accel_of_backend[backend]
-
-    def host_of_rank(self, rank):
-        return rank % self.topology.hosts
-
-    def ideal_rtt_s(self, bytes_total):
-        return self.topology.link.rtt_overhead_s(bytes_total)
-
-    def occupy(self, backend, ready_s, exec_s):
-        start_s = max(ready_s, self.busy_until_s[backend])
-        done_s = start_s + exec_s
-        self.busy_until_s[backend] = done_s
-        return start_s - ready_s, done_s
-
-    def drain_wake(self, version, clock_s):
-        if version != self.wake_version:
-            return None
-        done = self.engine.take_completed(clock_s)
-        return [self.cont.pop(f) for f in done]
-
-    def next_wake(self, clock_s):
-        t = self.engine.next_completion_s()
-        if t is None:
-            return None
-        self.wake_version += 1
-        return (max(t, clock_s), self.wake_version)
-
-
 def rank_rngs(seed, ranks):
     return [Rng(seed ^ (((r + 1) * 0x9E3779B97F4A7C15) & MASK64)) for r in range(ranks)]
 
@@ -139,28 +55,41 @@ class EventSim:
         # requests_per_burst, mir_every, mir_samples, arrival,
         # batching (None | (window_s, max_batch)), horizon_s, seed
         self.cfg = cfg
-        self.backends = backends
-        self.policy = policy
-        self.hermit_tier = hermit_tier
-        self.mir_tier = mir_tier
-        self.hermit_profile = devices.hermit()
-        self.mir_profile = devices.mir_noln()
-        self.rr_state = [0]
-        self.affinity = {}
-        self.clock_s = 0.0
+        self.core = Pipeline(backends, policy, hermit_tier, mir_tier,
+                             cfg["batching"], None, fabric)
         self.events = EventQueue()
-        self.batcher = (BatchStage(*cfg["batching"]) if cfg["batching"] else None)
-        self.fabric = fabric
-        self.transits = []
         self.rngs = rank_rngs(cfg["seed"], cfg["ranks"])
-        self.pending = []   # (rank, model, samples, arrival_s)
-        self.records = []   # dicts
-        self.submitted = 0
-        self.dispatched = 0
-        self.completed = 0
-        self.batches = 0
+        # per-request emission time; rank/model/samples live in the
+        # pipeline's metadata store (core.req_meta), id-aligned
+        self.arrival_s = []
+        self.records = []        # dicts
+        self.rec0_of_token = []  # transit token -> first record index
         self.events_processed = 0
         self._seed_generators()
+
+    # counters live on the pipeline
+    @property
+    def clock_s(self):
+        return self.core.clock_s
+
+    @property
+    def submitted(self):
+        return self.core.submitted
+
+    @property
+    def dispatched(self):
+        return self.core.dispatched_n
+
+    @property
+    def completed(self):
+        return self.core.completed_n
+
+    @property
+    def batches(self):
+        return self.core.batches
+
+    def batcher_pending(self):
+        return self.core.batcher_pending()
 
     # ---------------------------------------------------- generators
 
@@ -197,21 +126,13 @@ class EventSim:
             return False
         t, event = popped
         self.events_processed += 1
-        self._advance_clock(t)
+        self.core.advance_to(t)
         self._handle(event)
         return True
 
     def run_to_completion(self):
         while self.step():
             pass
-
-    def _advance_clock(self, t_s):
-        dt = t_s - self.clock_s
-        if dt <= 0.0:
-            return
-        for b in self.backends:
-            b.drain_queue_s(dt)
-        self.clock_s = t_s
 
     def _handle(self, event):
         kind = event[0]
@@ -223,20 +144,9 @@ class EventSim:
             self._on_poisson(event[1])
         elif kind == "closed":
             self._on_closed(event[1])
-        elif kind == "deadline":
-            self._pump_batcher()
-        elif kind == "completion":
-            self._on_completion(event[1])
-        elif kind == "fabric_wake":
-            self._on_fabric_wake(event[1])
-        elif kind == "xfer_in":
-            self._on_xfer_in_done(event[1])
-        elif kind == "service_done":
-            self._on_service_done(event[1])
-        elif kind == "xfer_out":
-            self._on_xfer_out_done(event[1])
         else:
-            raise ValueError(kind)
+            self.core.handle(event)
+            self._apply_effects()
 
     def _on_burst(self, step):
         _, period_s, jitter_s = self.cfg["arrival"]
@@ -269,156 +179,56 @@ class EventSim:
     # ------------------------------------------------------- routing
 
     def _on_request(self, rank, model, samples):
-        self.submitted += 1
-        id_ = len(self.pending)
-        self.pending.append((rank, model, samples, self.clock_s))
-        if self.batcher is not None:
-            self.batcher.enqueue(model, id_, samples, self.clock_s)
-            for ids in self.batcher.drain_size_ready():
-                self._dispatch(ids)
-            self._arm_batch_wakeup()
-        else:
-            self._dispatch([id_])
+        self.arrival_s.append(self.clock_s)
+        id_ = self.core.submit(rank, model, samples)
+        assert id_ == len(self.arrival_s) - 1
+        self._apply_effects()
 
-    def _arm_batch_wakeup(self):
-        t = self.batcher.wakeup_at(self.clock_s)
-        if t is not None:
-            self.events.push_class(t, CLASS_DEADLINE, ("deadline",))
-
-    def _pump_batcher(self):
-        for ids in self.batcher.drain_ready(self.clock_s):
-            self._dispatch(ids)
-        self._arm_batch_wakeup()
-
-    def _dispatch(self, ids):
-        rank0, model, _, _ = self.pending[ids[0]]
-        total = sum(self.pending[i][2] for i in ids)
-        is_mir = model.startswith("mir")
-        profile = self.mir_profile if is_mir else self.hermit_profile
-        candidates = self.mir_tier if is_mir else self.hermit_tier
-        idx = select(self.policy, self.backends, self.rr_state, self.affinity,
-                     candidates, model, profile, total)
-        if self.fabric is not None and self.fabric.is_remote(idx):
-            self._dispatch_remote(ids, idx, total, profile)
-            return
-        backend = self.backends[idx]
-        wait_s = backend.queue_s()
-        link_overhead_s = backend.link_overhead_s(profile, total)
-        latency_s = wait_s + backend.latency_s(profile, total)
-        occupancy = backend.occupancy_s(profile, total)
-        backend.add_queue_s(occupancy)
-        complete_s = self.clock_s + latency_s
-        for i in ids:
-            rank, m, samples, arrival_s = self.pending[i]
-            self.records.append({
-                "id": i, "rank": rank, "model": m, "samples": samples,
-                "arrival_s": arrival_s, "dispatch_s": self.clock_s,
-                "complete_s": complete_s, "backend": idx, "batch_samples": total,
-                "link_overhead_s": link_overhead_s, "contention_s": 0.0,
-            })
-        self.dispatched += len(ids)
-        self.batches += 1
-        self.events.push_class(complete_s, CLASS_COMPLETION, ("completion", ids))
-
-    # ------------------------------------------------- fabric phases
-
-    def _dispatch_remote(self, ids, idx, total, profile):
-        bytes_in, bytes_out = dir_payload_bytes(profile.input_elems, profile.output_elems, total)
-        fab = self.fabric
-        accel = fab.accel(idx)
-        host = fab.host_of_rank(self.pending[ids[0]][0])
-        ideal_rtt_s = fab.ideal_rtt_s(bytes_in + bytes_out)
-        backend = self.backends[idx]
-        exec_s = backend.execute_s(profile, total)
-        backend.add_queue_s(exec_s)
-        rec0 = len(self.records)
-        for i in ids:
-            rank, m, samples, arrival_s = self.pending[i]
-            self.records.append({
-                "id": i, "rank": rank, "model": m, "samples": samples,
-                "arrival_s": arrival_s, "dispatch_s": self.clock_s,
-                "complete_s": math.nan, "backend": idx, "batch_samples": total,
-                "link_overhead_s": 0.0, "contention_s": 0.0,
-            })
-        self.dispatched += len(ids)
-        self.batches += 1
-        token = len(self.transits)
-        self.transits.append({
-            "ids": ids, "backend": idx, "accel": accel, "host": host,
-            "bytes_out": bytes_out, "dispatch_s": self.clock_s,
-            "net_in_s": 0.0,
-            "exec_s": exec_s, "out_start_s": 0.0, "ideal_rtt_s": ideal_rtt_s,
-            "rec0": rec0,
-        })
-        path = fab.topology.request_path(host, accel)
-        flow = fab.engine.start(self.clock_s, path, bytes_in)
-        fab.cont[flow] = ("in", token)
-        self._arm_fabric()
-
-    def _arm_fabric(self):
-        armed = self.fabric.next_wake(self.clock_s)
-        if armed is not None:
-            t, version = armed
-            self.events.push_class(t, CLASS_COMPLETION, ("fabric_wake", version))
-
-    def _on_fabric_wake(self, version):
-        fab = self.fabric
-        conts = fab.drain_wake(version, self.clock_s)
-        if conts is None:
-            return
-        for kind, token in conts:
-            fixed = fab.topology.dir_fixed_s(self.transits[token]["accel"])
-            if kind == "in":
-                self.events.push_class(self.clock_s + fixed, CLASS_COMPLETION,
-                                       ("xfer_in", token))
-            elif kind == "out":
-                self.events.push_class(self.clock_s + fixed, CLASS_COMPLETION,
-                                       ("xfer_out", token))
-            else:
-                raise AssertionError("EventSim starts no swap flows")
-        self._arm_fabric()
-
-    def _on_xfer_in_done(self, token):
-        clock = self.clock_s
-        tr = self.transits[token]
-        _wait_s, done_s = self.fabric.occupy(tr["backend"], clock, tr["exec_s"])
-        backend = self.backends[tr["backend"]]
-        deficit = (done_s - clock) - backend.queue_s()
-        if deficit > 0.0:
-            backend.add_queue_s(deficit)
-        tr["net_in_s"] = clock - tr["dispatch_s"]
-        self.events.push_class(done_s, CLASS_COMPLETION, ("service_done", token))
-
-    def _on_service_done(self, token):
-        tr = self.transits[token]
-        tr["out_start_s"] = self.clock_s
-        fab = self.fabric
-        path = fab.topology.response_path(tr["host"], tr["accel"])
-        flow = fab.engine.start(self.clock_s, path, tr["bytes_out"])
-        fab.cont[flow] = ("out", token)
-        self._arm_fabric()
-
-    def _on_xfer_out_done(self, token):
-        tr = self.transits[token]
-        net_out_s = self.clock_s - tr["out_start_s"]
-        link_s = tr["net_in_s"] + net_out_s
-        contention_s = max(link_s - tr["ideal_rtt_s"], 0.0)
-        for k in range(len(tr["ids"])):
-            r = self.records[tr["rec0"] + k]
-            r["complete_s"] = self.clock_s
-            r["link_overhead_s"] = link_s
-            r["contention_s"] = contention_s
-        self._on_completion(tr["ids"])
-
-    def _on_completion(self, ids):
-        self.completed += len(ids)
-        if self.cfg["arrival"][0] == "closed_loop":
-            think = self.cfg["arrival"][1]
-            for i in ids:
-                rank = self.pending[i][0]
-                t = self.clock_s + think
-                if t <= self.cfg["horizon_s"]:
-                    self.events.push(t, ("closed", rank))
+    def _apply_effects(self):
+        scheduled, dispatched, completed = self.core.take_effects()
+        for d in dispatched:
+            if d[0] == "direct":
+                _, ids, idx, total, _wait_s, _swap_s, link_s, _exec_s, complete_s = d
+                for i in ids:
+                    rank, m, samples = self.core.req_meta[i]
+                    self.records.append({
+                        "id": i, "rank": rank, "model": m, "samples": samples,
+                        "arrival_s": self.arrival_s[i], "dispatch_s": self.clock_s,
+                        "complete_s": complete_s, "backend": idx,
+                        "batch_samples": total,
+                        "link_overhead_s": link_s, "contention_s": 0.0,
+                    })
+            else:  # remote
+                _, ids, idx, total, token = d
+                assert token == len(self.rec0_of_token)
+                self.rec0_of_token.append(len(self.records))
+                for i in ids:
+                    rank, m, samples = self.core.req_meta[i]
+                    self.records.append({
+                        "id": i, "rank": rank, "model": m, "samples": samples,
+                        "arrival_s": self.arrival_s[i], "dispatch_s": self.clock_s,
+                        "complete_s": math.nan, "backend": idx,
+                        "batch_samples": total,
+                        "link_overhead_s": 0.0, "contention_s": 0.0,
+                    })
+        for t, cls, ev in scheduled:
+            self.events.push_class(t, cls, ev)
+        for ids, token, timing in completed:
+            if timing is not None:
+                _wait_s, _swap_x, link_s, contention_s, _exec_s = timing
+                rec0 = self.rec0_of_token[token]
+                for k in range(len(ids)):
+                    r = self.records[rec0 + k]
+                    r["complete_s"] = self.clock_s
+                    r["link_overhead_s"] = link_s
+                    r["contention_s"] = contention_s
+            if self.cfg["arrival"][0] == "closed_loop":
+                think = self.cfg["arrival"][1]
+                for i in ids:
+                    rank = self.core.req_meta[i][0]
+                    t = self.clock_s + think
+                    if t <= self.cfg["horizon_s"]:
+                        self.events.push(t, ("closed", rank))
 
     # ----------------------------------------------------- summary
 

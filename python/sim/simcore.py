@@ -1,0 +1,414 @@
+"""simcore transliteration: the engine-agnostic request pipeline.
+
+Mirrors rust/src/simcore/ — the shared request lifecycle both event
+engines drive: policy routing, the router-level batching stage, the
+residency/LRU swap stage, legacy fixed-charge dispatch, and the
+multi-phase fabric path (payload flow in, weights-ready gate, per-
+device busy clock, result flow out).
+
+The engines (eventsim.EventSim, cogsim.CogSim) keep only workload
+logic (arrival processes vs. timestep barriers) plus their record
+stores; every dispatch/batch/fabric/service decision lives here once.
+
+Effects protocol: pipeline methods never touch the engine's event
+queue or records directly.  They accumulate, in exact legacy push
+order,
+
+* ``scheduled``  — (t_s, class, pipe_event) to insert into the event
+  queue (the engine wraps them; insertion order defines heap seq
+  numbers, so order is part of the byte-stability contract);
+* ``dispatched`` — one entry per dispatched batch, for the engine to
+  open records: ("direct", ids, backend, total, wait_s, swap_s,
+  link_s, exec_s, complete_s) or ("remote", ids, backend, total,
+  token);
+* ``completed``  — (ids, token, timing) per finished batch; timing is
+  None on the direct path (completion fields were known at dispatch)
+  or (wait_s, swap_excess_s, link_s, contention_s, exec_s) measured
+  over the fabric, with ``token`` identifying the transit so the
+  engine can find the record block it opened at dispatch.
+
+The engine drains them with take_effects() after every submit/handle
+call and applies them in order: records, queue insertions, completion
+hooks.
+"""
+
+import math
+
+import devices
+from batcher import DynamicBatcher, PendingRequest
+from cluster import select
+from equeue import CLASS_COMPLETION, CLASS_DEADLINE
+from fabric import FabricEngine
+from netsim import dir_payload_bytes
+from rustfloat import dur_as_secs_f64, dur_from_secs_f64
+
+
+class BatchStage:
+    """Router-level dynamic batching mapped onto virtual time."""
+
+    def __init__(self, window_s, max_batch):
+        assert window_s >= 0.0 and math.isfinite(window_s)
+        assert max_batch >= 1
+        self.batcher = DynamicBatcher(max_batch, dur_from_secs_f64(window_s), max_batch)
+        self.pending = 0
+
+    @staticmethod
+    def inst(t_s):
+        return dur_from_secs_f64(t_s)
+
+    def enqueue(self, instance, id_, samples, clock_s):
+        self.batcher.enqueue(instance, PendingRequest(id_, samples, self.inst(clock_s)))
+        self.pending += 1
+
+    def drain_size_ready(self):
+        out = []
+        while self.batcher.has_size_ready():
+            for batch in self.batcher.drain_size_ready():
+                self.pending -= len(batch.requests)
+                out.append([r.id for r in batch.requests])
+        return out
+
+    def drain_ready(self, clock_s):
+        now = self.inst(clock_s)
+        out = []
+        while self.batcher.has_ready(now):
+            for batch in self.batcher.drain_ready(now):
+                self.pending -= len(batch.requests)
+                out.append([r.id for r in batch.requests])
+        return out
+
+    def wakeup_at(self, clock_s):
+        now = self.inst(clock_s)
+        if self.batcher.has_ready(now):
+            return clock_s
+        d = self.batcher.next_deadline(now)
+        if d is None:
+            return None
+        return max(dur_as_secs_f64(d), clock_s)
+
+
+class FabricLayer:
+    """FabricSpec + engine + continuations + per-device busy clock."""
+
+    def __init__(self, topology, accel_of_backend, n_backends):
+        assert len(accel_of_backend) == n_backends
+        self.topology = topology
+        self.accel_of_backend = accel_of_backend
+        self.engine = FabricEngine(topology)
+        self.cont = {}  # flow id -> ("in"|"swap"|"out", token)
+        self.wake_version = 0
+        self.busy_until_s = [0.0] * n_backends
+
+    def is_remote(self, backend):
+        return self.topology.is_pooled(self.accel_of_backend[backend])
+
+    def accel(self, backend):
+        return self.accel_of_backend[backend]
+
+    def host_of_rank(self, rank):
+        return rank % self.topology.hosts
+
+    def ideal_rtt_s(self, bytes_total):
+        return self.topology.link.rtt_overhead_s(bytes_total)
+
+    def occupy(self, backend, ready_s, exec_s):
+        start_s = max(ready_s, self.busy_until_s[backend])
+        done_s = start_s + exec_s
+        self.busy_until_s[backend] = done_s
+        return start_s - ready_s, done_s
+
+    def drain_wake(self, version, clock_s):
+        if version != self.wake_version:
+            return None
+        done = self.engine.take_completed(clock_s)
+        return [self.cont.pop(f) for f in done]
+
+    def next_wake(self, clock_s):
+        t = self.engine.next_completion_s()
+        if t is None:
+            return None
+        self.wake_version += 1
+        return (max(t, clock_s), self.wake_version)
+
+
+class Residency:
+    """Per-backend LRU model residency (most recently used last)."""
+
+    def __init__(self, slots):
+        self.slots = slots
+        self.held = []
+
+    def touch(self, model):
+        if model in self.held:
+            self.held.remove(model)
+            self.held.append(model)
+            return False
+        self.held.append(model)
+        if len(self.held) > self.slots:
+            self.held.pop(0)
+        return True
+
+
+class Pipeline:
+    def __init__(self, backends, policy, hermit_tier, mir_tier, batching,
+                 residency=None, fabric=None):
+        # batching: None | (window_s, max_batch)
+        # residency: None | (slots, swap_s)  -- None = no residency stage
+        assert backends, "pipeline needs at least one backend"
+        assert hermit_tier, "hermit tier must not be empty"
+        assert all(i < len(backends) for i in hermit_tier + mir_tier)
+        self.backends = backends
+        self.policy = policy
+        self.hermit_tier = hermit_tier
+        self.mir_tier = mir_tier
+        self.hermit_profile = devices.hermit()
+        self.mir_profile = devices.mir_noln()
+        self.rr_state = [0]
+        self.affinity = {}
+        self.clock_s = 0.0
+        self.batcher = BatchStage(*batching) if batching else None
+        self.fabric = fabric
+        self.residency = ([Residency(residency[0]) for _ in backends]
+                          if residency else None)
+        self.swap_cfg_s = residency[1] if residency else 0.0
+        self.transits = []
+        self.swap_ready_s = {}   # (backend, model) -> landing time (inf = in transit)
+        self.swap_waiters = {}   # (backend, model) -> [token]
+        self.req_meta = []       # (rank, model, samples)
+        self.submitted = 0
+        self.dispatched_n = 0
+        self.completed_n = 0
+        self.batches = 0
+        self.swaps = 0
+        self.swap_time_s = 0.0
+        # effects, in exact legacy push order
+        self.scheduled = []      # (t_s, class, pipe_event)
+        self.out_dispatched = []
+        self.out_completed = []
+
+    # ----------------------------------------------------- effects
+
+    def take_effects(self):
+        eff = (self.scheduled, self.out_dispatched, self.out_completed)
+        self.scheduled, self.out_dispatched, self.out_completed = [], [], []
+        return eff
+
+    def batcher_pending(self):
+        return self.batcher.pending if self.batcher is not None else 0
+
+    # ----------------------------------------------------- run loop
+
+    def advance_to(self, t_s):
+        dt = t_s - self.clock_s
+        if dt <= 0.0:
+            return
+        for b in self.backends:
+            b.drain_queue_s(dt)
+        self.clock_s = t_s
+
+    def submit(self, rank, model, samples):
+        """One request enters the router at the current clock."""
+        self.submitted += 1
+        id_ = len(self.req_meta)
+        self.req_meta.append((rank, model, samples))
+        if self.batcher is not None:
+            self.batcher.enqueue(model, id_, samples, self.clock_s)
+            # Arrival path: dispatch only queues the *size* trigger
+            # filled; deadline-expired queues close via their wake-up,
+            # after every same-instant arrival.
+            for ids in self.batcher.drain_size_ready():
+                self._dispatch(ids)
+            self._arm_batch_wakeup()
+        else:
+            self._dispatch([id_])
+        return id_
+
+    def handle(self, event):
+        kind = event[0]
+        if kind == "deadline":
+            self._pump_batcher()
+        elif kind == "completion":
+            self._complete(event[1], None, None)
+        elif kind == "fabric_wake":
+            self._on_fabric_wake(event[1])
+        elif kind == "xfer_in":
+            self._on_xfer_in_done(event[1])
+        elif kind == "service_done":
+            self._on_service_done(event[1])
+        elif kind == "xfer_out":
+            self._on_xfer_out_done(event[1])
+        else:
+            raise ValueError(kind)
+
+    # ------------------------------------------------------ batching
+
+    def _arm_batch_wakeup(self):
+        t = self.batcher.wakeup_at(self.clock_s)
+        if t is not None:
+            self.scheduled.append((t, CLASS_DEADLINE, ("deadline",)))
+
+    def _pump_batcher(self):
+        for ids in self.batcher.drain_ready(self.clock_s):
+            self._dispatch(ids)
+        self._arm_batch_wakeup()
+
+    # ------------------------------------------------------- routing
+
+    def _dispatch(self, ids):
+        rank0, model, _ = self.req_meta[ids[0]]
+        total = sum(self.req_meta[i][2] for i in ids)
+        is_mir = model.startswith("mir")
+        profile = self.mir_profile if is_mir else self.hermit_profile
+        candidates = self.mir_tier if is_mir else self.hermit_tier
+        idx = select(self.policy, self.backends, self.rr_state, self.affinity,
+                     candidates, model, profile, total)
+        miss = self.residency[idx].touch(model) if self.residency is not None else False
+        if miss:
+            self.swaps += 1
+        if self.fabric is not None and self.fabric.is_remote(idx):
+            self._dispatch_remote(ids, idx, total, profile, miss, rank0, model)
+            return
+        swap_s = self.swap_cfg_s if miss else 0.0
+        if miss:
+            self.swap_time_s += swap_s
+        backend = self.backends[idx]
+        wait_s = backend.queue_s()
+        link_s = backend.link_overhead_s(profile, total)
+        exec_s = backend.execute_s(profile, total)
+        latency_s = wait_s + swap_s + (link_s + exec_s)
+        occupancy = backend.occupancy_s(profile, total) + swap_s
+        backend.add_queue_s(occupancy)
+        complete_s = self.clock_s + latency_s
+        self.out_dispatched.append(
+            ("direct", ids, idx, total, wait_s, swap_s, link_s, exec_s, complete_s))
+        self.dispatched_n += len(ids)
+        self.batches += 1
+        self.scheduled.append((complete_s, CLASS_COMPLETION, ("completion", ids)))
+
+    # ------------------------------------------------- fabric phases
+
+    def _dispatch_remote(self, ids, idx, total, profile, miss, rank0, model):
+        bytes_in, bytes_out = dir_payload_bytes(
+            profile.input_elems, profile.output_elems, total)
+        fab = self.fabric
+        accel = fab.accel(idx)
+        host = fab.host_of_rank(rank0)
+        ideal_rtt_s = fab.ideal_rtt_s(bytes_in + bytes_out)
+        # Sized so an uncontended swap takes exactly swap_s at the
+        # endpoint's single-stream bandwidth — the degenerate charge.
+        swap_bytes = self.swap_cfg_s * fab.topology.link.eff_bandwidth
+        # reserve the backend's routing queue now: transfers are
+        # explicit, so the batch occupies the device for its execution
+        # time only, and policies see committed work immediately (the
+        # physical one-batch-at-a-time constraint is occupy's clock)
+        backend = self.backends[idx]
+        exec_s = backend.execute_s(profile, total)
+        backend.add_queue_s(exec_s)
+        token = len(self.transits)
+        self.out_dispatched.append(("remote", ids, idx, total, token))
+        self.dispatched_n += len(ids)
+        self.batches += 1
+        needs_swap_flow = miss and swap_bytes > 0.0
+        if needs_swap_flow:
+            # weights are on the wire: same-model followers routed
+            # here park until they land
+            self.swap_ready_s[(idx, model)] = math.inf
+        self.transits.append({
+            "ids": ids, "backend": idx, "accel": accel, "host": host,
+            "model": model, "bytes_out": bytes_out, "dispatch_s": self.clock_s,
+            "net_in_s": 0.0, "in_done_s": 0.0,
+            "in_done": False, "swap_done": not needs_swap_flow, "started": False,
+            "swap_excess_s": 0.0, "wait_s": 0.0, "exec_s": exec_s,
+            "out_start_s": 0.0, "ideal_rtt_s": ideal_rtt_s,
+        })
+        path = fab.topology.request_path(host, accel)
+        flow = fab.engine.start(self.clock_s, path, bytes_in)
+        fab.cont[flow] = ("in", token)
+        if needs_swap_flow:
+            spath = fab.topology.swap_path(accel)
+            sflow = fab.engine.start(self.clock_s, spath, swap_bytes)
+            fab.cont[sflow] = ("swap", token)
+        self._arm_fabric()
+
+    def _arm_fabric(self):
+        armed = self.fabric.next_wake(self.clock_s)
+        if armed is not None:
+            t, version = armed
+            self.scheduled.append((t, CLASS_COMPLETION, ("fabric_wake", version)))
+
+    def _on_fabric_wake(self, version):
+        fab = self.fabric
+        conts = fab.drain_wake(version, self.clock_s)
+        if conts is None:
+            return  # stale: a newer wake-up is armed
+        for kind, token in conts:
+            if kind == "in":
+                fixed = fab.topology.dir_fixed_s(self.transits[token]["accel"])
+                self.scheduled.append((self.clock_s + fixed, CLASS_COMPLETION,
+                                       ("xfer_in", token)))
+            elif kind == "swap":
+                measured = self.clock_s - self.transits[token]["dispatch_s"]
+                self.swap_time_s += measured
+                self.transits[token]["swap_done"] = True
+                # the weights landed: unblock this batch, then every
+                # same-model follower parked behind it
+                key = (self.transits[token]["backend"], self.transits[token]["model"])
+                self.swap_ready_s[key] = self.clock_s
+                self._try_begin_service(token)
+                for waiter in self.swap_waiters.pop(key, []):
+                    self._try_begin_service(waiter)
+            else:  # out
+                fixed = fab.topology.dir_fixed_s(self.transits[token]["accel"])
+                self.scheduled.append((self.clock_s + fixed, CLASS_COMPLETION,
+                                       ("xfer_out", token)))
+        self._arm_fabric()
+
+    def _on_xfer_in_done(self, token):
+        tr = self.transits[token]
+        tr["net_in_s"] = self.clock_s - tr["dispatch_s"]
+        tr["in_done_s"] = self.clock_s
+        tr["in_done"] = True
+        self._try_begin_service(token)
+
+    def _try_begin_service(self, token):
+        clock = self.clock_s
+        tr = self.transits[token]
+        if tr["started"] or not (tr["in_done"] and tr["swap_done"]):
+            return
+        key = (tr["backend"], tr["model"])
+        if math.isinf(self.swap_ready_s.get(key, 0.0)):
+            self.swap_waiters.setdefault(key, []).append(token)
+            return
+        wait_s, done_s = self.fabric.occupy(tr["backend"], clock, tr["exec_s"])
+        # Re-sync the routing signal with the device horizon: long
+        # transfers/swaps can outlive the dispatch-time reservation's
+        # wall-time drain.
+        backend = self.backends[tr["backend"]]
+        deficit = (done_s - clock) - backend.queue_s()
+        if deficit > 0.0:
+            backend.add_queue_s(deficit)
+        tr["started"] = True
+        tr["swap_excess_s"] = clock - tr["in_done_s"]
+        tr["wait_s"] = wait_s
+        self.scheduled.append((done_s, CLASS_COMPLETION, ("service_done", token)))
+
+    def _on_service_done(self, token):
+        tr = self.transits[token]
+        tr["out_start_s"] = self.clock_s
+        fab = self.fabric
+        path = fab.topology.response_path(tr["host"], tr["accel"])
+        flow = fab.engine.start(self.clock_s, path, tr["bytes_out"])
+        fab.cont[flow] = ("out", token)
+        self._arm_fabric()
+
+    def _on_xfer_out_done(self, token):
+        tr = self.transits[token]
+        net_out_s = self.clock_s - tr["out_start_s"]
+        link_s = tr["net_in_s"] + net_out_s
+        contention_s = max(link_s - tr["ideal_rtt_s"], 0.0)
+        timing = (tr["wait_s"], tr["swap_excess_s"], link_s, contention_s, tr["exec_s"])
+        self._complete(tr["ids"], token, timing)
+
+    def _complete(self, ids, token, timing):
+        self.completed_n += len(ids)
+        self.out_completed.append((ids, token, timing))

@@ -238,6 +238,70 @@ def campaign_headlines():
         ok(on["mean_batch_samples"] > 4.0 * off["mean_batch_samples"], "bigger batches")
 
 
+def mixed_fleet():
+    """The fleet axis (rust/tests/scenario_props.rs): mixed GPU+RDU
+    pools in all three modes from one knob set, the affinity swap
+    bound, and the pinned hybrid-pool-vs-pure-pools headline."""
+    within = lambda x, t: abs(x / t - 1.0) < 0.02
+    cfg = cp.default_cog_cfg()
+    mixed = ("mixed", 4, 2)
+
+    def tts(fleet, ranks):
+        return cp.run_cog_scenario("pooled", cl.LATENCY_AWARE, ranks, 8, 0.0, 0.0, 1.0,
+                                   cfg, fleet)["summary"]["time_to_solution_s"]
+
+    # the headline: pure RDU < hybrid < pure GPU < starved default
+    d32 = tts(cp.DEFAULT_FLEET, 32)
+    r32 = tts(("mixed", 0, 6), 32)
+    g32 = tts(("mixed", 6, 0), 32)
+    h32 = tts(mixed, 32)
+    ok(within(d32, 52.99e-3), f"pinned default32 {d32}")
+    ok(within(r32, 28.56e-3), f"pinned pure-rdu32 {r32}")
+    ok(within(g32, 46.18e-3), f"pinned pure-gpu32 {g32}")
+    ok(within(h32, 36.77e-3), f"pinned hybrid32 {h32}")
+    ok(r32 < h32 < g32 < d32, "fleet ordering at 32 ranks")
+    ok(within(tts(mixed, 4), 18.90e-3), "pinned hybrid4")
+
+    # conservation in all three modes from one config
+    a = cp.run_scenario_with_link("pooled", cl.LEAST_OUTSTANDING,
+                                  cp.default_campaign_cfg(), netsim.Link.infiniband_cx6(), mixed)
+    ok(len(a["backends"]) == 6, "mixed pool size")
+    ok(sum(b["samples"] for b in a["backends"])
+       == a["hydra"]["samples"] + a["mir"]["samples"], "analytic conservation")
+    e = cp.run_event_scenario("pooled", cl.LEAST_OUTSTANDING, ("synchronized", 0.02, 0.0),
+                              8, 0.0, 2.0, cp.default_event_cfg(), mixed)["sim"]
+    ok(e.submitted == e.completed == 11 * 8 * 6, "event conservation")
+    served = {r["backend"] for r in e.records}
+    ok(served == set(range(6)), "every mixed-pool member serves")
+    c = cp.run_cog_scenario("pooled", cl.LEAST_OUTSTANDING, 8, 8, 0.0, 0.0, 2.0,
+                            cfg, mixed)["sim"]
+    ok(c.submitted == c.completed == 8 * 8 * 6, "cog conservation")
+
+    # affinity property: stable mapping, bounded distinct models,
+    # exactly one swap per model (vs round-robin thrash)
+    aff = cp.run_cog_scenario("pooled", cl.MODEL_AFFINITY, 8, 8, 2e-3, 0.0, 1.0,
+                              cfg, mixed)["sim"]
+    mapping, distinct = {}, {}
+    for r in aff.records:
+        ok(mapping.setdefault(r["model"], r["backend"]) == r["backend"],
+           "affinity mapping stable")
+        distinct.setdefault(r["backend"], set()).add(r["model"])
+    bound = min(8, 4 * 6)
+    ok(all(len(ms) <= bound for ms in distinct.values()), "distinct-model bound")
+    ok(len(mapping) == 8 and aff.swaps == 8, "one swap per pinned model")
+    rr = cp.run_cog_scenario("pooled", cl.ROUND_ROBIN, 8, 8, 2e-3, 0.0, 1.0,
+                             cfg, mixed)["sim"]
+    ok(rr.swaps > 2 * aff.swaps, "round-robin thrashes")
+
+    # fleet anchor: mixed{0g2r} is byte-for-byte the default pool
+    b0 = cp.build_fleet("pooled", 4, netsim.Link.infiniband_cx6())[0]
+    b1 = cp.build_fleet("pooled", 4, netsim.Link.infiniband_cx6(), ("mixed", 0, 2))[0]
+    prof = devices.hermit()
+    for x, y in zip(b0, b1):
+        ok(x.name == y.name and x.execute_s(prof, 64) == y.execute_s(prof, 64),
+           "mixed{0g2r} == default pool")
+
+
 def golden_stability():
     golden = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__)))), "rust", "tests", "golden")
@@ -258,7 +322,7 @@ def golden_stability():
 def main():
     t0 = time.time()
     for phase in (anchors, fair_share, degenerate_limit, engine_properties,
-                  campaign_headlines, golden_stability):
+                  campaign_headlines, mixed_fleet, golden_stability):
         t1 = time.time()
         phase()
         print(f"{phase.__name__}: OK ({time.time() - t1:.1f}s)")

@@ -1,11 +1,14 @@
-//! Event-engine throughput micro-benchmark: events/sec with and
-//! without the contention-aware fabric layer.
+//! Event-engine throughput micro-benchmarks: events/sec with and
+//! without the contention-aware fabric layer, for **both** engines
+//! that drive the shared [`cogsim_disagg::simcore`] pipeline.
 //!
 //! The fabric turns every remote dispatch into 3–4 events plus a
-//! max-min fair-share recomputation per flow start/finish; this
-//! bench pins what that costs the simulator itself (not the
-//! simulated system).  Results go to `BENCH_eventsim.json` at the
-//! repo root so runs can be diffed across commits.
+//! max-min fair-share recomputation per flow start/finish; these
+//! benches pin what that costs the simulator itself (not the
+//! simulated system), and guard the SimCore extraction against
+//! throughput regressions.  Results go to `BENCH_eventsim.json`
+//! (open-loop EventSim) and `BENCH_cogsim.json` (coupled CogSim) at
+//! the repo root so runs can be diffed across commits.
 //!
 //! ```bash
 //! cargo bench --bench eventsim_bench            # full budget
@@ -15,7 +18,7 @@
 use std::collections::BTreeMap;
 
 use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
-use cogsim_disagg::eventsim::{EventSim, EventSimConfig};
+use cogsim_disagg::eventsim::{CogSim, CogSimConfig, EventSim, EventSimConfig};
 use cogsim_disagg::fabric::{FabricSpec, Topology};
 use cogsim_disagg::rdu::RduApi;
 use cogsim_disagg::util::bench::Bencher;
@@ -28,20 +31,26 @@ fn pool() -> Vec<Box<dyn Backend>> {
     ]
 }
 
-fn sim_cfg(ranks: usize, horizon_s: f64) -> EventSimConfig {
-    EventSimConfig { ranks, horizon_s, ..Default::default() }
+fn spec(ranks: usize) -> FabricSpec {
+    FabricSpec {
+        topology: Topology::pooled(ranks, 2, 4.0),
+        accel_of_backend: vec![0, 1],
+    }
 }
 
-/// One measured configuration: run the sim to completion, report
+/// One measured event-sim configuration: run to completion, report
 /// events processed so the bench can normalise to events/sec.
-fn run_once(ranks: usize, horizon_s: f64, fabric: bool) -> u64 {
-    let cfg = sim_cfg(ranks, horizon_s);
+fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool) -> u64 {
+    let cfg = EventSimConfig { ranks, horizon_s, ..Default::default() };
     let mut sim = if fabric {
-        let spec = FabricSpec {
-            topology: Topology::pooled(ranks, 2, 4.0),
-            accel_of_backend: vec![0, 1],
-        };
-        EventSim::with_fabric(pool(), Policy::LeastOutstanding, cfg, vec![0, 1], vec![0, 1], spec)
+        EventSim::with_fabric(
+            pool(),
+            Policy::LeastOutstanding,
+            cfg,
+            vec![0, 1],
+            vec![0, 1],
+            spec(ranks),
+        )
     } else {
         EventSim::new(pool(), Policy::LeastOutstanding, cfg)
     };
@@ -49,41 +58,92 @@ fn run_once(ranks: usize, horizon_s: f64, fabric: bool) -> u64 {
     sim.events_processed()
 }
 
+/// One measured coupled configuration: the CogSim path adds the
+/// timestep barrier, residency swaps, and (with the fabric) the
+/// weights-ready gate to every dispatch.
+fn run_cog_once(ranks: usize, timesteps: usize, fabric: bool) -> u64 {
+    let cfg = CogSimConfig {
+        ranks,
+        timesteps,
+        swap_s: 200e-6,
+        ..Default::default()
+    };
+    let mut sim = if fabric {
+        CogSim::with_fabric(
+            pool(),
+            Policy::LeastOutstanding,
+            cfg,
+            vec![0, 1],
+            vec![0, 1],
+            spec(ranks),
+        )
+    } else {
+        CogSim::new(pool(), Policy::LeastOutstanding, cfg)
+    };
+    sim.run_to_completion();
+    sim.events_processed()
+}
+
+/// Benchmark one `(key, runner)` pair and record its events/sec.
+fn bench_into(
+    bencher: &Bencher,
+    results: &mut BTreeMap<String, Value>,
+    group: &str,
+    key: &str,
+    run: impl Fn() -> u64,
+) {
+    let events = run();
+    let r = bencher.run(&format!("{group}/{key}"), || {
+        std::hint::black_box(run());
+    });
+    let events_per_s = events as f64 / r.mean_secs();
+    println!("{r}");
+    println!("  -> {events} events/run, {events_per_s:.0} events/s");
+    let mut m = BTreeMap::new();
+    m.insert("events_per_run".to_string(), Value::Number(events as f64));
+    m.insert("events_per_s".to_string(), Value::Number(events_per_s.round()));
+    m.insert("mean_run_us".to_string(), Value::Number((r.mean_secs() * 1e6).round()));
+    m.insert("iters".to_string(), Value::Number(r.iters as f64));
+    results.insert(key.to_string(), Value::Object(m));
+}
+
+fn write_doc(out: &str, meta: BTreeMap<String, Value>, results: BTreeMap<String, Value>) {
+    let mut doc = meta;
+    doc.insert("results".to_string(), Value::Object(results));
+    std::fs::write(out, json_write(&Value::Object(doc))).expect("write bench json");
+    println!("wrote {out}");
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
+
+    // ------------------------------------------------ EventSim path
     let (ranks, horizon_s) = if smoke { (16, 0.045) } else { (64, 0.205) };
-
-    let mut doc = BTreeMap::new();
-    doc.insert("ranks".to_string(), Value::Number(ranks as f64));
-    doc.insert("horizon_us".to_string(), Value::Number(horizon_s * 1e6));
-    doc.insert("smoke".to_string(), Value::Bool(smoke));
-
+    let mut meta = BTreeMap::new();
+    meta.insert("ranks".to_string(), Value::Number(ranks as f64));
+    meta.insert("horizon_us".to_string(), Value::Number(horizon_s * 1e6));
+    meta.insert("smoke".to_string(), Value::Bool(smoke));
     let mut results = BTreeMap::new();
     for (key, fabric) in [("legacy_link", false), ("fabric_4to1", true)] {
-        let events = run_once(ranks, horizon_s, fabric);
-        let r = bencher.run(&format!("eventsim/{key}"), || {
-            std::hint::black_box(run_once(ranks, horizon_s, fabric));
+        bench_into(&bencher, &mut results, "eventsim", key, || {
+            run_event_once(ranks, horizon_s, fabric)
         });
-        let events_per_s = events as f64 / r.mean_secs();
-        println!("{r}");
-        println!("  -> {events} events/run, {events_per_s:.0} events/s");
-        let mut m = BTreeMap::new();
-        m.insert("events_per_run".to_string(), Value::Number(events as f64));
-        m.insert(
-            "events_per_s".to_string(),
-            Value::Number((events_per_s).round()),
-        );
-        m.insert(
-            "mean_run_us".to_string(),
-            Value::Number((r.mean_secs() * 1e6).round()),
-        );
-        m.insert("iters".to_string(), Value::Number(r.iters as f64));
-        results.insert(key.to_string(), Value::Object(m));
     }
-    doc.insert("results".to_string(), Value::Object(results));
+    write_doc("BENCH_eventsim.json", meta, results);
 
-    let out = "BENCH_eventsim.json";
-    std::fs::write(out, json_write(&Value::Object(doc))).expect("write bench json");
-    println!("wrote {out}");
+    // -------------------------------------------------- CogSim path
+    let (cog_ranks, timesteps) = if smoke { (16, 4) } else { (64, 16) };
+    let mut meta = BTreeMap::new();
+    meta.insert("ranks".to_string(), Value::Number(cog_ranks as f64));
+    meta.insert("timesteps".to_string(), Value::Number(timesteps as f64));
+    meta.insert("swap_us".to_string(), Value::Number(200.0));
+    meta.insert("smoke".to_string(), Value::Bool(smoke));
+    let mut results = BTreeMap::new();
+    for (key, fabric) in [("legacy_link", false), ("fabric_4to1", true)] {
+        bench_into(&bencher, &mut results, "cogsim", key, || {
+            run_cog_once(cog_ranks, timesteps, fabric)
+        });
+    }
+    write_doc("BENCH_cogsim.json", meta, results);
 }

@@ -16,7 +16,7 @@
 //!   cluster clock, wait behind the routed backend's queue, occupy it
 //!   for the double-buffered period, and report their end-to-end
 //!   latency.  Everything is deterministic — no wall clock — so
-//!   campaign sweeps ([`crate::harness::campaign`]) are byte-stable.
+//!   scenario-grid sweeps ([`crate::harness::sweep`]) are byte-stable.
 //!
 //! The coordinator mirrors this layer on the serving path: registry
 //! replica sets + [`crate::coordinator::RoutingPolicy`] route real

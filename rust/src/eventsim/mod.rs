@@ -12,30 +12,19 @@
 //!
 //! * **events** — a binary-heap [`equeue::EventQueue`] ordered by
 //!   `(virtual time, class, insertion seq)` (same-instant semantics:
-//!   completions, then arrivals, then batch-close deadlines):
-//!   arrivals, batching-window deadlines, completions, and the
-//!   generator events that produce the arrival stream;
+//!   completions, then arrivals, then batch-close deadlines);
 //! * **arrivals** — three [`arrival::ArrivalProcess`]es: synchronised
 //!   per-timestep bursts, open-loop Poisson, closed-loop think time;
-//! * **batching** — an optional router-level stage that coalesces
-//!   same-instance requests within a window/max-batch, *reusing* the
-//!   serving stack's [`crate::coordinator::batcher::DynamicBatcher`]
-//!   (virtual time is mapped onto its `Instant` API via a fixed
-//!   epoch);
-//! * **service** — each batch is routed through the *same*
-//!   [`crate::cluster::Policy`] selection the analytic cluster uses,
-//!   waits behind the chosen backend's FIFO queue, pays the
-//!   [`crate::netsim::Link`] round trip, and occupies the backend for
-//!   the paper's double-buffered period;
+//! * **pipeline** — everything between arrival and completion
+//!   (routing through [`crate::cluster::Policy`] selection, the
+//!   dynamic-batching window, FIFO service with
+//!   [`crate::netsim::Link`] overhead and double-buffered occupancy,
+//!   and the optional contention-aware fabric path) lives in the
+//!   shared [`crate::simcore::Pipeline`] — one copy for this engine
+//!   and the coupled [`cogsim::CogSim`];
 //! * **metrics** — full latency distributions
 //!   (p50/p90/p99/p99.9, histogram, per-rank slowdown) instead of
 //!   means only ([`metrics::LatencyDist`]);
-//! * **fabric** — optionally ([`EventSim::with_fabric`]), remote
-//!   dispatches ride the contention-aware [`crate::fabric`] layer:
-//!   the fixed link charge becomes two time-varying transfer events
-//!   (request in, result out) competing for shared leaf/spine
-//!   bandwidth under max-min fair share, so a 64-rank burst pays for
-//!   the wire it actually shares;
 //! * **cogsim** — the *application-level* coupling ([`cogsim::CogSim`]):
 //!   N ranks run T bulk-synchronous timesteps, each stalling on its
 //!   in-the-loop inference burst, with per-backend model residency and
@@ -52,248 +41,24 @@ pub mod cogsim;
 pub mod equeue;
 pub mod metrics;
 
-use std::collections::BTreeMap;
-use std::time::{Duration, Instant};
-
-use crate::cluster::{policy, Backend, Policy};
-use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, PendingRequest, Priority};
-use crate::devices::{profiles, ModelProfile};
-use crate::fabric::{FabricEngine, FabricSpec};
-use crate::netsim::dir_payload_bytes;
+use crate::cluster::{Backend, Policy};
+use crate::fabric::FabricSpec;
+use crate::simcore::{Completed, Dispatched, Outcome, PipeEvent, Pipeline};
 use crate::util::rng::Rng;
 use crate::workload::HydraWorkload;
 
-use equeue::{CLASS_COMPLETION, CLASS_DEADLINE};
-
+pub use crate::simcore::Batching;
 pub use arrival::ArrivalProcess;
 pub use cogsim::{CogRecord, CogSim, CogSimConfig};
 pub use equeue::EventQueue;
 pub use metrics::{CogSummary, EventSummary, LatencyDist, StepBreakdown};
 
-/// Router-level dynamic batching configuration.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Batching {
-    /// Every request dispatches alone, immediately (the analytic
-    /// cluster's behaviour).
-    Off,
-    /// Coalesce same-instance requests arriving within `window_s`,
-    /// capped at `max_batch` samples per dispatched batch.
-    Window { window_s: f64, max_batch: usize },
-}
-
-/// The router-level batching stage shared by [`EventSim`] and
-/// [`cogsim::CogSim`]: the serving stack's [`DynamicBatcher`] mapped
-/// onto virtual time via a fixed epoch, plus the same-instant
-/// tie-breaking contract both engines rely on:
-///
-/// * the **arrival path** drains only *size*-ready queues
-///   ([`Self::drain_size_ready`]) — a queue whose deadline expires at
-///   the very instant new requests arrive is closed by its deadline
-///   wake-up instead, which the event queue orders *after* every
-///   same-instant arrival, so simultaneous requests ride the closing
-///   batch deterministically;
-/// * **wake-ups** ([`Self::wakeup_at`]) land on the exact
-///   ns-quantised deadline — a ns-resolution `Duration` round-trips
-///   `as_secs_f64`/`from_secs_f64` exactly at simulation time scales,
-///   and the batcher counts `now == deadline` as expired, so a
-///   wake-up never lands early and respins.
-pub(crate) struct BatchStage {
-    batcher: DynamicBatcher,
-    /// Virtual-time anchor for the batcher's `Instant` API.
-    epoch: Instant,
-    /// Requests enqueued but not yet drained into a batch.
-    pending: u64,
-}
-
-impl BatchStage {
-    /// `None` for [`Batching::Off`] (every request dispatches alone).
-    fn from_config(batching: Batching) -> Option<BatchStage> {
-        match batching {
-            Batching::Off => None,
-            Batching::Window { window_s, max_batch } => {
-                assert!(window_s >= 0.0 && window_s.is_finite());
-                assert!(max_batch >= 1);
-                let window = Duration::from_secs_f64(window_s);
-                Some(BatchStage {
-                    batcher: DynamicBatcher::new(BatcherConfig {
-                        // size trigger = the cap: a window's queue
-                        // fires early only once it can fill a whole
-                        // batch
-                        target_batch: max_batch,
-                        max_wait: window,
-                        deferred_max_wait: window,
-                        max_batch,
-                    }),
-                    epoch: Instant::now(),
-                    pending: 0,
-                })
-            }
-        }
-    }
-
-    fn inst(&self, t_s: f64) -> Instant {
-        self.epoch + Duration::from_secs_f64(t_s)
-    }
-
-    fn pending(&self) -> u64 {
-        self.pending
-    }
-
-    fn enqueue(&mut self, instance: &str, id: u64, samples: usize, clock_s: f64) {
-        let arrived = self.inst(clock_s);
-        self.batcher.enqueue(
-            instance,
-            PendingRequest {
-                id,
-                input: Vec::new(),
-                samples,
-                arrived,
-                priority: Priority::Critical,
-            },
-        );
-        self.pending += 1;
-    }
-
-    /// Drain everything the size trigger alone makes ready, as lists
-    /// of request ids per batch (deadline-expired queues stay put for
-    /// their wake-up).
-    fn drain_size_ready(&mut self) -> Vec<Vec<usize>> {
-        let mut out = Vec::new();
-        while self.batcher.has_size_ready() {
-            for batch in self.batcher.drain_size_ready() {
-                self.pending -= batch.requests.len() as u64;
-                out.push(batch.requests.iter().map(|r| r.id as usize).collect());
-            }
-        }
-        out
-    }
-
-    /// Drain everything ready at `clock_s`, size- or deadline-wise.
-    fn drain_ready(&mut self, clock_s: f64) -> Vec<Vec<usize>> {
-        let now = self.inst(clock_s);
-        let mut out = Vec::new();
-        while self.batcher.has_ready(now) {
-            for batch in self.batcher.drain_ready(now) {
-                self.pending -= batch.requests.len() as u64;
-                out.push(batch.requests.iter().map(|r| r.id as usize).collect());
-            }
-        }
-        out
-    }
-
-    /// When the engine must schedule its next batch-close wake-up:
-    /// `Some(clock_s)` when some queue is already expired at this
-    /// exact instant (close it after all same-instant arrivals), the
-    /// earliest future deadline otherwise, `None` when idle.
-    fn wakeup_at(&self, clock_s: f64) -> Option<f64> {
-        let now = self.inst(clock_s);
-        if self.batcher.has_ready(now) {
-            return Some(clock_s);
-        }
-        self.batcher
-            .next_deadline(now)
-            .map(|d| d.duration_since(self.epoch).as_secs_f64().max(clock_s))
-    }
-}
-
-/// The contention-aware network stage shared by [`EventSim`] and
-/// [`cogsim::CogSim`]: a [`FabricSpec`] (topology + backend→accel
-/// endpoint map) driving an incremental [`FabricEngine`], plus the
-/// flow→continuation table and the wake-up versioning both engines
-/// use.
-///
-/// Flow completion times change whenever the active flow set changes,
-/// so a previously armed wake-up event can go stale; every mutation
-/// bumps `wake_version` and arms a fresh wake-up at the engine's new
-/// earliest completion, and handlers drop wake-ups whose version is
-/// not current.
-pub(crate) struct FabricLayer {
-    pub(crate) spec: FabricSpec,
-    pub(crate) engine: FabricEngine,
-    pub(crate) cont: BTreeMap<u64, FlowCont>,
-    pub(crate) wake_version: u64,
-    /// Per-backend device-busy horizon: fabric batches execute
-    /// strictly one at a time per device ([`Self::occupy`]).
-    pub(crate) busy_until_s: Vec<f64>,
-}
-
-/// What happens when a fabric flow finishes: `token` indexes the
-/// engine's in-transit batch table.
-#[derive(Debug, Clone, Copy)]
-pub(crate) enum FlowCont {
-    /// Request payload arrived at the accelerator.
-    In { token: usize },
-    /// Model weights arrived at the accelerator (cogsim residency).
-    Swap { token: usize },
-    /// Result payload arrived back at the host.
-    Out { token: usize },
-}
-
-impl FabricLayer {
-    pub(crate) fn new(spec: FabricSpec, n_backends: usize) -> FabricLayer {
-        spec.validate(n_backends);
-        let engine = FabricEngine::new(spec.topology.clone());
-        FabricLayer {
-            spec,
-            engine,
-            cont: BTreeMap::new(),
-            wake_version: 0,
-            busy_until_s: vec![0.0; n_backends],
-        }
-    }
-
-    /// Serialize one batch onto a backend's device: execution starts
-    /// at `max(ready, device free)` (work-conserving — a batch whose
-    /// payload lands first runs first), never overlapping the
-    /// previous batch.  Returns `(device wait, completion time)` and
-    /// advances the device clock.  The dispatch-time `queue_s`
-    /// reservation remains the *routing* signal; this clock is the
-    /// physical exclusivity constraint.
-    pub(crate) fn occupy(&mut self, backend: usize, ready_s: f64, exec_s: f64) -> (f64, f64) {
-        let start_s = ready_s.max(self.busy_until_s[backend]);
-        let done_s = start_s + exec_s;
-        self.busy_until_s[backend] = done_s;
-        (start_s - ready_s, done_s)
-    }
-
-    /// Stale-check a wake-up; when current, drain every finished
-    /// flow and hand back its continuation (`None` = stale, drop it).
-    pub(crate) fn drain_wake(&mut self, version: u64, clock_s: f64) -> Option<Vec<FlowCont>> {
-        if version != self.wake_version {
-            return None;
-        }
-        let done = self.engine.take_completed(clock_s);
-        Some(
-            done.iter()
-                .map(|flow| self.cont.remove(flow).expect("completed flow has a continuation"))
-                .collect(),
-        )
-    }
-
-    /// Bump the wake version and return the `(time, version)` to arm
-    /// at the engine's earliest completion; `None` when idle.
-    pub(crate) fn next_wake(&mut self, clock_s: f64) -> Option<(f64, u64)> {
-        let t = self.engine.next_completion_s()?;
-        self.wake_version += 1;
-        Some((t.max(clock_s), self.wake_version))
-    }
-
-    /// Does `backend` sit behind the shared fabric (vs in its node)?
-    pub(crate) fn is_remote(&self, backend: usize) -> bool {
-        self.spec.topology.is_pooled(self.spec.accel_of_backend[backend])
-    }
-
-    pub(crate) fn accel(&self, backend: usize) -> usize {
-        self.spec.accel_of_backend[backend]
-    }
-
-    /// Uncontended round trip for a payload — the degenerate
-    /// [`crate::netsim::Link`] charge the fabric collapses to with
-    /// one flow on a 1:1 topology; measured transfer time beyond it
-    /// is the *contention* share.
-    pub(crate) fn ideal_rtt_s(&self, bytes_total: f64) -> f64 {
-        self.spec.topology.link().rtt_overhead_s(bytes_total)
-    }
+/// Per-rank RNG streams: a rank's draw sequence is independent of the
+/// total rank count (shared by both engines).
+pub(crate) fn rank_rngs(seed: u64, ranks: usize) -> Vec<Rng> {
+    (0..ranks)
+        .map(|r| Rng::new(seed ^ (r as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)))
+        .collect()
 }
 
 /// One event-sim run's knobs.
@@ -375,14 +140,6 @@ impl RequestRecord {
 }
 
 #[derive(Debug, Clone)]
-struct PendingMeta {
-    rank: usize,
-    model: String,
-    samples: usize,
-    arrival_s: f64,
-}
-
-#[derive(Debug, Clone)]
 enum Event {
     /// Synchronized-mode generator: emit burst `step`, schedule the next.
     Burst { step: usize },
@@ -392,65 +149,23 @@ enum Event {
     PoissonArrival { rank: usize },
     /// Closed-loop rank ready to submit again.
     ClosedArrival { rank: usize },
-    /// Re-check the batcher's deadline-ready queues.
-    BatchDeadline,
-    /// A dispatched batch finished; ids index the request metadata.
-    Completion { ids: Vec<usize> },
-    /// The fabric engine's earliest flow completion (stale when
-    /// `version` is no longer current — see [`FabricLayer`]).
-    FabricWake { version: u64 },
-    /// A batch's request payload finished its fixed-latency tail and
-    /// is at the accelerator; begin queue + execution.
-    XferInDone { token: usize },
-    /// A batch's device execution finished; start the result flow.
-    ServiceDone { token: usize },
-    /// The result payload is back at the host; complete the batch.
-    XferOutDone { token: usize },
+    /// Everything past the router lives in [`crate::simcore`].
+    Pipe(PipeEvent),
 }
 
-/// One batch in flight through the fabric: which phase timings have
-/// been measured so far (token-indexed; records are filled when the
-/// result lands).
-#[derive(Debug, Clone)]
-struct BatchTransit {
-    ids: Vec<usize>,
-    backend: usize,
-    accel: usize,
-    host: usize,
-    bytes_out: f64,
-    dispatch_s: f64,
-    net_in_s: f64,
-    exec_s: f64,
-    out_start_s: f64,
-    ideal_rtt_s: f64,
-    /// First record index of this batch (`ids.len()` consecutive).
-    rec0: usize,
-}
-
-/// The engine: backends + policy + event queue + optional batcher +
-/// optional contention-aware fabric.
+/// The engine: arrival generators + record store around the shared
+/// [`Pipeline`] (backends, policy routing, batching, fabric).
 pub struct EventSim {
     cfg: EventSimConfig,
-    backends: Vec<Box<dyn Backend>>,
-    policy: Policy,
-    hermit_tier: Vec<usize>,
-    mir_tier: Vec<usize>,
-    hermit_profile: ModelProfile,
-    mir_profile: ModelProfile,
-    rr_cursor: usize,
-    affinity: BTreeMap<String, usize>,
-    clock_s: f64,
+    core: Pipeline,
     events: EventQueue<Event>,
-    batcher: Option<BatchStage>,
-    fabric: Option<FabricLayer>,
-    transits: Vec<BatchTransit>,
     rngs: Vec<Rng>,
-    pending: Vec<PendingMeta>,
+    /// Per-request emission time; rank/model/samples live in the
+    /// pipeline's metadata store ([`Pipeline::request`]), id-aligned.
+    arrival_s: Vec<f64>,
     records: Vec<RequestRecord>,
-    submitted: u64,
-    dispatched: u64,
-    completed: u64,
-    batches: u64,
+    /// Fabric transit token -> first record index of its batch.
+    rec0_of_token: Vec<usize>,
     events_processed: u64,
 }
 
@@ -476,40 +191,22 @@ impl EventSim {
         assert!(cfg.samples_per_request.0 >= 1);
         assert!(cfg.samples_per_request.0 <= cfg.samples_per_request.1);
         assert!(cfg.horizon_s > 0.0 && cfg.horizon_s.is_finite());
-        assert!(!hermit_tier.is_empty(), "hermit tier must not be empty");
         assert!(
             cfg.mir_every == 0 || !mir_tier.is_empty(),
             "mir_every > 0 needs a non-empty mir tier"
         );
-        assert!(hermit_tier.iter().chain(&mir_tier).all(|&i| i < backends.len()));
 
-        let batcher = BatchStage::from_config(cfg.batching);
-        let rngs = (0..cfg.ranks)
-            .map(|r| Rng::new(cfg.seed ^ (r as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)))
-            .collect();
+        let core = Pipeline::new(backends, policy, hermit_tier, mir_tier, cfg.batching, None);
+        let rngs = rank_rngs(cfg.seed, cfg.ranks);
 
         let mut sim = EventSim {
             cfg,
-            backends,
-            policy,
-            hermit_tier,
-            mir_tier,
-            hermit_profile: profiles::hermit(),
-            mir_profile: profiles::mir_noln(),
-            rr_cursor: 0,
-            affinity: BTreeMap::new(),
-            clock_s: 0.0,
+            core,
             events: EventQueue::new(),
-            batcher,
-            fabric: None,
-            transits: Vec::new(),
             rngs,
-            pending: Vec::new(),
+            arrival_s: Vec::new(),
             records: Vec::new(),
-            submitted: 0,
-            dispatched: 0,
-            completed: 0,
-            batches: 0,
+            rec0_of_token: Vec::new(),
             events_processed: 0,
         };
         sim.seed_generators();
@@ -531,7 +228,7 @@ impl EventSim {
         spec: FabricSpec,
     ) -> EventSim {
         let mut sim = Self::with_tiers(backends, policy, cfg, hermit_tier, mir_tier);
-        sim.fabric = Some(FabricLayer::new(spec, sim.backends.len()));
+        sim.core.attach_fabric(spec);
         sim
     }
 
@@ -571,7 +268,7 @@ impl EventSim {
             return false;
         };
         self.events_processed += 1;
-        self.advance_clock(t);
+        self.core.advance_to(t);
         self.handle(event);
         true
     }
@@ -590,29 +287,16 @@ impl EventSim {
         while self.step() {}
     }
 
-    fn advance_clock(&mut self, t_s: f64) {
-        let dt = t_s - self.clock_s;
-        if dt <= 0.0 {
-            return;
-        }
-        for b in &mut self.backends {
-            b.drain_queue_s(dt);
-        }
-        self.clock_s = t_s;
-    }
-
     fn handle(&mut self, event: Event) {
         match event {
             Event::Burst { step } => self.on_burst(step),
             Event::Arrival { rank, model, samples } => self.on_request(rank, model, samples),
             Event::PoissonArrival { rank } => self.on_poisson(rank),
             Event::ClosedArrival { rank } => self.on_closed(rank),
-            Event::BatchDeadline => self.pump_batcher(),
-            Event::Completion { ids } => self.on_completion(ids),
-            Event::FabricWake { version } => self.on_fabric_wake(version),
-            Event::XferInDone { token } => self.on_xfer_in_done(token),
-            Event::ServiceDone { token } => self.on_service_done(token),
-            Event::XferOutDone { token } => self.on_xfer_out_done(token),
+            Event::Pipe(ev) => {
+                self.core.handle(ev);
+                self.apply_effects();
+            }
         }
     }
 
@@ -658,7 +342,7 @@ impl EventSim {
             unreachable!("poisson event outside poisson mode");
         };
         let (model, samples) = self.gen_hermit(rank);
-        let next = self.clock_s + self.rngs[rank].exponential(rate_per_rank);
+        let next = self.core.clock_s() + self.rngs[rank].exponential(rate_per_rank);
         if next <= self.cfg.horizon_s {
             self.events.push(next, Event::PoissonArrival { rank });
         }
@@ -673,315 +357,71 @@ impl EventSim {
     // ------------------------------------------------------- routing
 
     fn on_request(&mut self, rank: usize, model: String, samples: usize) {
-        self.submitted += 1;
-        let id = self.pending.len();
-        self.pending.push(PendingMeta {
-            rank,
-            model: model.clone(),
-            samples,
-            arrival_s: self.clock_s,
-        });
-        if self.batcher.is_some() {
-            let stage = self.batcher.as_mut().unwrap();
-            stage.enqueue(&model, id as u64, samples, self.clock_s);
-            // Arrival path: dispatch only queues the *size* trigger
-            // filled; deadline-expired queues close via their wake-up,
-            // after every same-instant arrival (see [`BatchStage`]).
-            let ready = stage.drain_size_ready();
-            self.dispatch_batches(ready);
-            self.arm_batch_wakeup();
-        } else {
-            self.dispatch(vec![id]);
+        self.arrival_s.push(self.core.clock_s());
+        let id = self.core.submit(rank, model, samples);
+        debug_assert_eq!(id, self.arrival_s.len() - 1, "engine/pipeline id spaces align");
+        self.apply_effects();
+    }
+
+    /// Interpret the pipeline's effects, in order: open records for
+    /// dispatched batches, insert scheduled events (insertion order =
+    /// heap seq order), then run completion hooks.
+    fn apply_effects(&mut self) {
+        let effects = self.core.take_effects();
+        let clock = self.core.clock_s();
+        for d in effects.dispatched {
+            self.open_records(&d, clock);
+        }
+        for (t, class, ev) in effects.scheduled {
+            self.events.push_class(t, class, Event::Pipe(ev));
+        }
+        for c in effects.completed {
+            self.on_batch_done(c, clock);
         }
     }
 
-    fn dispatch_batches(&mut self, batches: Vec<Vec<usize>>) {
-        for ids in batches {
-            self.dispatch(ids);
-        }
-    }
-
-    /// Schedule the next batch-close wake-up [`BatchStage`] asks for.
-    fn arm_batch_wakeup(&mut self) {
-        if let Some(t) = self.batcher.as_ref().unwrap().wakeup_at(self.clock_s) {
-            self.events.push_class(t, CLASS_DEADLINE, Event::BatchDeadline);
-        }
-    }
-
-    /// Deadline wake-up: drain every ready batcher queue at the
-    /// current virtual time, then arm the next future deadline.
-    fn pump_batcher(&mut self) {
-        let ready = self.batcher.as_mut().unwrap().drain_ready(self.clock_s);
-        self.dispatch_batches(ready);
-        self.arm_batch_wakeup();
-    }
-
-    /// Route one batch (same-instance request ids) exactly as the
-    /// analytic cluster would: policy selection over the candidate
-    /// tier, wait behind the backend's queued seconds, pay link +
-    /// execute, occupy the backend for the double-buffered period.
-    ///
-    /// With a [`FabricLayer`] attached, remote backends instead enter
-    /// the multi-phase path ([`Self::dispatch_remote`]): the network
-    /// cost becomes two fabric flows whose durations depend on what
-    /// else is on the wire.
-    fn dispatch(&mut self, ids: Vec<usize>) {
-        debug_assert!(!ids.is_empty());
-        let model = self.pending[ids[0]].model.clone();
-        let total: usize = ids.iter().map(|&i| self.pending[i].samples).sum();
-        let is_mir = model.starts_with("mir");
-        let profile =
-            if is_mir { self.mir_profile.clone() } else { self.hermit_profile.clone() };
-        let candidates: &[usize] = if is_mir { &self.mir_tier } else { &self.hermit_tier };
-        let idx = policy::select(
-            self.policy,
-            &self.backends,
-            &mut self.rr_cursor,
-            &mut self.affinity,
-            candidates,
-            &model,
-            &profile,
-            total,
-        );
-        if self.fabric.as_ref().is_some_and(|f| f.is_remote(idx)) {
-            self.dispatch_remote(ids, idx, total, &profile);
-            return;
-        }
-        let backend = &mut self.backends[idx];
-        let wait_s = backend.queue_s();
-        let link_overhead_s = backend.link_overhead_s(&profile, total);
-        let latency_s = wait_s + backend.latency_s(&profile, total);
-        let occupancy = backend.occupancy_s(&profile, total);
-        backend.add_queue_s(occupancy);
-
-        let complete_s = self.clock_s + latency_s;
-        for &id in &ids {
-            let meta = &self.pending[id];
-            self.records.push(RequestRecord {
-                id: id as u64,
-                rank: meta.rank,
-                model: meta.model.clone(),
-                samples: meta.samples,
-                arrival_s: meta.arrival_s,
-                dispatch_s: self.clock_s,
-                complete_s,
-                backend: idx,
-                batch_samples: total,
-                link_overhead_s,
-                contention_s: 0.0,
-            });
-        }
-        self.dispatched += ids.len() as u64;
-        self.batches += 1;
-        self.events.push_class(complete_s, CLASS_COMPLETION, Event::Completion { ids });
-    }
-
-    // ------------------------------------------------- fabric phases
-
-    /// Remote dispatch over the fabric: the batch's request payload
-    /// becomes a flow toward the accelerator; execution begins once
-    /// the payload lands ([`Event::XferInDone`]) *and* the backlog
-    /// the batch reserved behind has drained, and the result rides
-    /// its own flow back.  The FIFO slot is reserved **at dispatch**
-    /// (`queue_s` reflects committed work immediately), so the
-    /// routing policies see exactly the feedback the legacy path
-    /// gives them.  Records are created now (dispatch order) and
-    /// their completion fields filled when the result lands.
-    ///
-    /// Simplification: a router-coalesced batch travels as **one**
-    /// flow attributed to the leading request's host (and its result
-    /// returns there) — the router batches at the host leaf, so the
-    /// merged payload crosses the leaf uplink and the accelerator
-    /// side (where the shared-pool contention lives) exactly once;
-    /// the per-member host-NIC hops of the tiny pre-merge requests
-    /// are not modeled.
-    fn dispatch_remote(
-        &mut self,
-        ids: Vec<usize>,
-        idx: usize,
-        total: usize,
-        profile: &ModelProfile,
-    ) {
-        let (bytes_in, bytes_out) =
-            dir_payload_bytes(profile.input_elems, profile.output_elems, total);
-        let fab = self.fabric.as_ref().expect("remote dispatch without a fabric");
-        let accel = fab.accel(idx);
-        let host = fab.spec.host_of_rank(self.pending[ids[0]].rank);
-        let ideal_rtt_s = fab.ideal_rtt_s(bytes_in + bytes_out);
-
-        // reserve the backend's routing queue now: transfers are
-        // explicit, so the batch occupies the device for its
-        // execution time only, and policies see committed work
-        // immediately (the physical one-batch-at-a-time constraint
-        // is [`FabricLayer::occupy`]'s device clock)
-        let backend = &mut self.backends[idx];
-        let exec_s = backend.execute_s(profile, total);
-        backend.add_queue_s(exec_s);
-
-        let rec0 = self.records.len();
-        for &id in &ids {
-            let meta = &self.pending[id];
-            self.records.push(RequestRecord {
-                id: id as u64,
-                rank: meta.rank,
-                model: meta.model.clone(),
-                samples: meta.samples,
-                arrival_s: meta.arrival_s,
-                dispatch_s: self.clock_s,
-                complete_s: f64::NAN,
-                backend: idx,
-                batch_samples: total,
-                link_overhead_s: 0.0,
-                contention_s: 0.0,
-            });
-        }
-        self.dispatched += ids.len() as u64;
-        self.batches += 1;
-
-        let token = self.transits.len();
-        self.transits.push(BatchTransit {
-            ids,
-            backend: idx,
-            accel,
-            host,
-            bytes_out,
-            dispatch_s: self.clock_s,
-            net_in_s: 0.0,
-            exec_s,
-            out_start_s: 0.0,
-            ideal_rtt_s,
-            rec0,
-        });
-
-        let clock = self.clock_s;
-        let fab = self.fabric.as_mut().expect("checked above");
-        let path = fab.spec.topology.request_path(host, accel);
-        let flow = fab.engine.start(clock, path, bytes_in);
-        fab.cont.insert(flow, FlowCont::In { token });
-        self.arm_fabric();
-    }
-
-    /// Re-arm the fabric wake-up at the engine's (new) earliest flow
-    /// completion; called after every flow start/finish.  Earlier
-    /// armed wake-ups become stale through the version bump.
-    fn arm_fabric(&mut self) {
-        let clock = self.clock_s;
-        let armed = self.fabric.as_mut().expect("arm_fabric without a fabric").next_wake(clock);
-        if let Some((t, version)) = armed {
-            self.events.push_class(t, CLASS_COMPLETION, Event::FabricWake { version });
-        }
-    }
-
-    /// A fabric wake-up fired: drain every finished flow and schedule
-    /// its continuation after the direction's fixed-latency tail
-    /// (wire + half the per-message software cost — the bytes share
-    /// the fabric, the fixed share does not).
-    fn on_fabric_wake(&mut self, version: u64) {
-        let clock = self.clock_s;
-        let conts = {
-            let Some(fab) = self.fabric.as_mut() else { return };
-            let Some(conts) = fab.drain_wake(version, clock) else {
-                return; // stale: a newer wake-up is armed
-            };
-            conts
+    fn open_records(&mut self, d: &Dispatched, clock: f64) {
+        let (complete_s, link_s) = match d.outcome {
+            Outcome::Direct { link_s, complete_s, .. } => (complete_s, link_s),
+            Outcome::InFlight { token } => {
+                debug_assert_eq!(token, self.rec0_of_token.len());
+                self.rec0_of_token.push(self.records.len());
+                (f64::NAN, 0.0)
+            }
         };
-        for cont in conts {
-            match cont {
-                FlowCont::In { token } => {
-                    let fixed = self.dir_fixed_of(token);
-                    self.events.push_class(
-                        self.clock_s + fixed,
-                        CLASS_COMPLETION,
-                        Event::XferInDone { token },
-                    );
-                }
-                FlowCont::Out { token } => {
-                    let fixed = self.dir_fixed_of(token);
-                    self.events.push_class(
-                        self.clock_s + fixed,
-                        CLASS_COMPLETION,
-                        Event::XferOutDone { token },
-                    );
-                }
-                FlowCont::Swap { .. } => {
-                    unreachable!("EventSim starts no swap flows (see cogsim)")
-                }
+        for &id in &d.ids {
+            let (rank, model, samples) = self.core.request(id);
+            self.records.push(RequestRecord {
+                id: id as u64,
+                rank,
+                model: model.to_string(),
+                samples,
+                arrival_s: self.arrival_s[id],
+                dispatch_s: clock,
+                complete_s,
+                backend: d.backend,
+                batch_samples: d.batch_samples,
+                link_overhead_s: link_s,
+                contention_s: 0.0,
+            });
+        }
+    }
+
+    fn on_batch_done(&mut self, c: Completed, clock: f64) {
+        if let (Some(token), Some(timing)) = (c.token, c.timing) {
+            // fabric path: fill the record block with measured timings
+            let rec0 = self.rec0_of_token[token];
+            for k in 0..c.ids.len() {
+                let r = &mut self.records[rec0 + k];
+                r.complete_s = clock;
+                r.link_overhead_s = timing.link_s;
+                r.contention_s = timing.contention_s;
             }
         }
-        if self.fabric.is_some() {
-            self.arm_fabric();
-        }
-    }
-
-    fn dir_fixed_of(&self, token: usize) -> f64 {
-        let fab = self.fabric.as_ref().expect("fabric phase without a fabric");
-        fab.spec.topology.dir_fixed_s(self.transits[token].accel)
-    }
-
-    /// The request payload is at the accelerator: execute as soon as
-    /// the device frees up ([`FabricLayer::occupy`] — strictly one
-    /// batch at a time per device, work-conserving order; the device
-    /// wait is part of the record's end-to-end latency).
-    fn on_xfer_in_done(&mut self, token: usize) {
-        let clock = self.clock_s;
-        let (idx, exec_s) = {
-            let tr = &self.transits[token];
-            (tr.backend, tr.exec_s)
-        };
-        let fab = self.fabric.as_mut().expect("fabric phase without a fabric");
-        let (_wait_s, done_s) = fab.occupy(idx, clock, exec_s);
-        // Re-sync the routing signal with the device horizon: long
-        // transfers can outlive the dispatch-time reservation's
-        // wall-time drain, and the policies must keep seeing the
-        // serialized backlog `occupy` is accumulating.
-        let backend = &mut self.backends[idx];
-        let deficit = (done_s - clock) - backend.queue_s();
-        if deficit > 0.0 {
-            backend.add_queue_s(deficit);
-        }
-        self.transits[token].net_in_s = clock - self.transits[token].dispatch_s;
-        self.events.push_class(done_s, CLASS_COMPLETION, Event::ServiceDone { token });
-    }
-
-    /// Execution finished: send the result payload home.
-    fn on_service_done(&mut self, token: usize) {
-        let (host, accel, bytes_out) = {
-            let tr = &self.transits[token];
-            (tr.host, tr.accel, tr.bytes_out)
-        };
-        self.transits[token].out_start_s = self.clock_s;
-        let clock = self.clock_s;
-        let fab = self.fabric.as_mut().expect("fabric phase without a fabric");
-        let path = fab.spec.topology.response_path(host, accel);
-        let flow = fab.engine.start(clock, path, bytes_out);
-        fab.cont.insert(flow, FlowCont::Out { token });
-        self.arm_fabric();
-    }
-
-    /// The result landed: fill the batch's records with the measured
-    /// transfer timings and run the shared completion logic.
-    fn on_xfer_out_done(&mut self, token: usize) {
-        let (ids, rec0, link_s, contention_s) = {
-            let tr = &self.transits[token];
-            let net_out_s = self.clock_s - tr.out_start_s;
-            let link_s = tr.net_in_s + net_out_s;
-            (tr.ids.clone(), tr.rec0, link_s, (link_s - tr.ideal_rtt_s).max(0.0))
-        };
-        for k in 0..ids.len() {
-            let r = &mut self.records[rec0 + k];
-            r.complete_s = self.clock_s;
-            r.link_overhead_s = link_s;
-            r.contention_s = contention_s;
-        }
-        self.on_completion(ids);
-    }
-
-    fn on_completion(&mut self, ids: Vec<usize>) {
-        self.completed += ids.len() as u64;
         if let ArrivalProcess::ClosedLoop { think_s } = self.cfg.arrival {
-            for &id in &ids {
-                let rank = self.pending[id].rank;
-                let t = self.clock_s + think_s;
+            for &id in &c.ids {
+                let (rank, _, _) = self.core.request(id);
+                let t = clock + think_s;
                 if t <= self.cfg.horizon_s {
                     self.events.push(t, Event::ClosedArrival { rank });
                 }
@@ -992,41 +432,41 @@ impl EventSim {
     // ----------------------------------------------------- accessors
 
     pub fn clock_s(&self) -> f64 {
-        self.clock_s
+        self.core.clock_s()
     }
 
     pub fn policy(&self) -> Policy {
-        self.policy
+        self.core.policy()
     }
 
     /// Requests that have entered the router.
     pub fn submitted(&self) -> u64 {
-        self.submitted
+        self.core.submitted()
     }
 
     /// Requests dispatched to a backend (inside some batch).
     pub fn dispatched(&self) -> u64 {
-        self.dispatched
+        self.core.dispatched()
     }
 
     /// Requests whose completion event has fired.
     pub fn completed(&self) -> u64 {
-        self.completed
+        self.core.completed()
     }
 
     /// Dispatched but not yet completed.
     pub fn in_flight(&self) -> u64 {
-        self.dispatched - self.completed
+        self.core.dispatched() - self.core.completed()
     }
 
     /// Requests waiting in the batching window.
     pub fn batcher_pending(&self) -> u64 {
-        self.batcher.as_ref().map_or(0, BatchStage::pending)
+        self.core.batcher_pending()
     }
 
     /// Batches dispatched so far.
     pub fn batches(&self) -> u64 {
-        self.batches
+        self.core.batches()
     }
 
     /// Events popped off the queue so far (the micro-benchmark's
@@ -1087,9 +527,9 @@ impl EventSim {
         EventSummary {
             requests: records.len() as u64,
             samples,
-            batches: self.batches,
-            mean_batch_samples: if self.batches > 0 {
-                samples as f64 / self.batches as f64
+            batches: self.core.batches(),
+            mean_batch_samples: if self.core.batches() > 0 {
+                samples as f64 / self.core.batches() as f64
             } else {
                 0.0
             },

@@ -4,21 +4,39 @@
 //!   returning the figure's series as structured rows rendered as an
 //!   aligned table + CSV (`repro repro <figN>` / `repro repro all`);
 //! * [`scaling`]  — the ranks-per-DataScale feasibility frontier;
-//! * [`campaign`] — multi-backend scenario campaigns: Hydra/MIR
-//!   streams swept across cluster topologies (local / pooled /
-//!   hybrid) × routing policies, emitting deterministic JSON
-//!   (`repro campaign`), plus the event-sim mode sweeping rank count
-//!   × arrival process × batching window (`repro eventsim`);
+//! * [`scenario`] — the declarative scenario grid: **one** struct
+//!   ([`scenario::Grid`]) describing every sweep axis × workload kind
+//!   (topology, pool fleet composition, policy, ranks, arrival,
+//!   batching window, models, swap cost, overlap, fabric
+//!   oversubscription), plus the legacy per-mode config views;
+//! * [`sweep`]    — the one sweep engine: expand a grid into cells,
+//!   run each on its engine (analytic cluster / event sim / coupled
+//!   cogsim), plus the legacy `run_campaign` / `run_event_campaign` /
+//!   `run_cog_campaign` entry points as thin wrappers;
+//! * [`report`]   — the one report layer: deterministic JSON
+//!   documents (golden-pinned) and aligned tables for every result;
 //! * [`table`]    — aligned-table + CSV rendering.
+//!
+//! (The former `harness::campaign` module was dissolved into
+//! [`scenario`] / [`sweep`] / [`report`]; every public name it
+//! exported is re-exported below.)
 
-pub mod campaign;
 pub mod figures;
+pub mod report;
 pub mod scaling;
+pub mod scenario;
+pub mod sweep;
 pub mod table;
 
-pub use campaign::{
-    run_campaign, run_event_campaign, CampaignConfig, CampaignResult, EventCampaignConfig,
-    EventCampaignResult, Topology,
-};
 pub use figures::{run_figure, FigureResult, FIGURES};
+pub use scenario::{
+    build_fabric_spec, build_fleet, Axes, CampaignConfig, CogCampaignConfig,
+    EventCampaignConfig, Fleet, Grid, Kind, Knobs, Scenario, Tiering, Topology,
+};
+pub use sweep::{
+    run_campaign, run_cell, run_cog_campaign, run_cog_scenario, run_event_campaign,
+    run_event_scenario, run_grid, run_scenario, run_scenario_at, run_scenario_with_link,
+    CampaignResult, CellResult, CellSummary, CogCampaignResult, CogScenarioResult,
+    EventCampaignResult, EventScenarioResult, GridResult, ScenarioResult, WorkloadSummary,
+};
 pub use table::Table;

@@ -1,0 +1,706 @@
+//! The one report layer: deterministic JSON documents and aligned
+//! tables for every sweep result.
+//!
+//! All three legacy campaign modes emit the same `{config, scenarios}`
+//! root with BTreeMap key order and fixed-precision numbers, so a
+//! fixed seed yields a byte-stable document — the committed goldens
+//! (`rust/tests/golden/*.json`) pin the three legacy shapes, which is
+//! why the per-mode leaf writers here are format definitions, not
+//! duplicated logic: the sweep/emit skeleton around them exists once.
+//!
+//! [`GridResult`] (the unified `repro scenario` output) shares the
+//! same scaffolding and reuses the per-kind summary writers, adding
+//! the cell's full axis coordinates (kind, fleet, …) to each entry.
+
+use std::collections::BTreeMap;
+
+use crate::eventsim::{ArrivalProcess, CogSummary, EventSummary};
+use crate::util::json::Value;
+
+use super::scenario::{Grid, Topology};
+use super::sweep::{
+    AnalyticSummary, CampaignResult, CellSummary, CogCampaignResult, CogScenarioResult,
+    EventCampaignResult, EventScenarioResult, GridResult, ScenarioResult, WorkloadSummary,
+};
+use super::table::Table;
+
+// ------------------------------------------------ shared scaffolding
+
+/// Microseconds at fixed 3-decimal precision (byte-stable rendering).
+fn us(seconds: f64) -> Value {
+    Value::Number((seconds * 1e9).round() / 1e3)
+}
+
+/// A plain number at fixed 3-decimal precision.
+fn fixed3(v: f64) -> Value {
+    Value::Number((v * 1e3).round() / 1e3)
+}
+
+fn count(v: u64) -> Value {
+    Value::Number(v as f64)
+}
+
+/// JSON array of stable keys (topologies, policies, ...).
+fn key_array<T>(items: &[T], key: impl Fn(&T) -> String) -> Value {
+    Value::Array(items.iter().map(|i| Value::String(key(i))).collect())
+}
+
+/// JSON array of numbers at fixed precision.
+fn num_array(items: &[f64]) -> Value {
+    Value::Array(items.iter().map(|&v| fixed3(v)).collect())
+}
+
+/// The root campaign document every mode emits: `{config, scenarios}`.
+fn doc_json(config: Value, scenarios: Vec<Value>) -> Value {
+    let mut root = BTreeMap::new();
+    root.insert("config".to_string(), config);
+    root.insert("scenarios".to_string(), Value::Array(scenarios));
+    Value::Object(root)
+}
+
+/// One aligned table per topology over a sweep's cells: `x_of` labels
+/// each cell, `series` extracts the numeric columns.  (The analytic
+/// mode keeps its bespoke metric-per-column layout; the event and
+/// cog sweeps share this cell-per-row shape.)
+fn topology_tables<S>(
+    title_prefix: &str,
+    topologies: &[Topology],
+    scenarios: &[S],
+    topo_of: impl Fn(&S) -> Topology,
+    x_of: impl Fn(&S) -> String,
+    series: &[(&str, &dyn Fn(&S) -> f64)],
+) -> Vec<Table> {
+    topologies
+        .iter()
+        .map(|&topo| {
+            let cells: Vec<&S> =
+                scenarios.iter().filter(|s| topo_of(s) == topo).collect();
+            let mut t = Table::new(
+                format!("{title_prefix} — {} ({})", topo.key(), topo.label()),
+                "cell",
+            );
+            t.set_x(cells.iter().map(|s| x_of(s)));
+            for (name, extract) in series {
+                t.add_series(*name, cells.iter().map(|s| extract(s)).collect());
+            }
+            t
+        })
+        .collect()
+}
+
+// --------------------------------------------------- analytic leafs
+
+fn config_json(cfg: &super::scenario::CampaignConfig) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ranks".to_string(), count(cfg.ranks as u64));
+    m.insert("zones_per_rank".to_string(), count(cfg.zones_per_rank as u64));
+    m.insert("materials".to_string(), count(cfg.materials as u64));
+    m.insert("timesteps".to_string(), count(cfg.timesteps as u64));
+    m.insert("step_period_us".to_string(), us(cfg.step_period_s));
+    m.insert("mir_base_zones".to_string(), count(cfg.mir_base_zones as u64));
+    m.insert("fabric_oversubs".to_string(), num_array(&cfg.fabric_oversubs));
+    m.insert("seed".to_string(), count(cfg.seed));
+    Value::Object(m)
+}
+
+fn workload_json(w: &WorkloadSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("requests".to_string(), count(w.requests));
+    m.insert("samples".to_string(), count(w.samples));
+    m.insert("mean_us".to_string(), us(w.mean_s));
+    m.insert("p50_us".to_string(), us(w.p50_s));
+    m.insert("p95_us".to_string(), us(w.p95_s));
+    m.insert("p99_us".to_string(), us(w.p99_s));
+    m.insert("mean_link_overhead_us".to_string(), us(w.mean_link_overhead_s));
+    m.insert("samples_per_s".to_string(), fixed3(w.samples_per_s));
+    Value::Object(m)
+}
+
+/// The analytic payload `{hydra, mir, makespan_us, backends}` —
+/// shared by the legacy scenario entries and the unified grid cells.
+fn analytic_summary_fields(
+    m: &mut BTreeMap<String, Value>,
+    hydra: &WorkloadSummary,
+    mir: &WorkloadSummary,
+    makespan_s: f64,
+    backends: &[crate::cluster::BackendReport],
+) {
+    m.insert("hydra".to_string(), workload_json(hydra));
+    m.insert("mir".to_string(), workload_json(mir));
+    m.insert("makespan_us".to_string(), us(makespan_s));
+    let makespan = makespan_s.max(f64::MIN_POSITIVE);
+    m.insert(
+        "backends".to_string(),
+        Value::Array(
+            backends
+                .iter()
+                .map(|b| {
+                    let mut bm = BTreeMap::new();
+                    bm.insert("name".to_string(), Value::String(b.name.clone()));
+                    bm.insert("requests".to_string(), count(b.requests));
+                    bm.insert("samples".to_string(), count(b.samples));
+                    bm.insert("busy_us".to_string(), us(b.busy_s));
+                    bm.insert(
+                        "utilization".to_string(),
+                        Value::Number((b.busy_s / makespan * 1e6).round() / 1e6),
+                    );
+                    Value::Object(bm)
+                })
+                .collect(),
+        ),
+    );
+}
+
+fn scenario_json(s: &ScenarioResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topology".to_string(), Value::String(s.topology.key().to_string()));
+    m.insert("policy".to_string(), Value::String(s.policy.key().to_string()));
+    m.insert("oversub".to_string(), fixed3(s.oversub));
+    analytic_summary_fields(&mut m, &s.hydra, &s.mir, s.makespan_s, &s.backends);
+    Value::Object(m)
+}
+
+impl CampaignResult {
+    /// Deterministic JSON document (BTreeMap key order; values
+    /// rounded to fixed precision so the rendering is byte-stable).
+    pub fn to_json(&self) -> Value {
+        doc_json(
+            config_json(&self.config),
+            self.scenarios.iter().map(scenario_json).collect(),
+        )
+    }
+
+    /// One aligned table per topology (rows: policy; columns: key
+    /// latency/throughput figures).
+    pub fn tables(&self) -> Vec<Table> {
+        use crate::cluster::Policy;
+        Topology::ALL
+            .iter()
+            .map(|&topo| {
+                let mut t = Table::new(
+                    format!("Campaign — {} ({})", topo.key(), topo.label()),
+                    "metric",
+                );
+                t.set_x([
+                    "hydra_p50_us",
+                    "hydra_p99_us",
+                    "hydra_Msamples_per_s",
+                    "mir_p50_us",
+                    "mir_p99_us",
+                ]);
+                for policy in Policy::ALL {
+                    let s = self.scenario(topo, policy);
+                    t.add_series(
+                        policy.key(),
+                        vec![
+                            s.hydra.p50_s * 1e6,
+                            s.hydra.p99_s * 1e6,
+                            s.hydra.samples_per_s / 1e6,
+                            s.mir.p50_s * 1e6,
+                            s.mir.p99_s * 1e6,
+                        ],
+                    );
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+// ------------------------------------------------------- event leafs
+
+fn arrival_json(a: &ArrivalProcess) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Value::String(a.key().to_string()));
+    match *a {
+        ArrivalProcess::Synchronized { period_s, jitter_s } => {
+            m.insert("period_us".to_string(), us(period_s));
+            m.insert("jitter_us".to_string(), us(jitter_s));
+        }
+        ArrivalProcess::Poisson { rate_per_rank } => {
+            m.insert("rate_per_rank".to_string(), fixed3(rate_per_rank));
+        }
+        ArrivalProcess::ClosedLoop { think_s } => {
+            m.insert("think_us".to_string(), us(think_s));
+        }
+    }
+    Value::Object(m)
+}
+
+fn event_config_json(cfg: &super::scenario::EventCampaignConfig) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topologies".to_string(), key_array(&cfg.topologies, |t| t.key().to_string()));
+    m.insert("policies".to_string(), key_array(&cfg.policies, |p| p.key().to_string()));
+    m.insert(
+        "rank_counts".to_string(),
+        Value::Array(cfg.rank_counts.iter().map(|&r| count(r as u64)).collect()),
+    );
+    m.insert(
+        "arrivals".to_string(),
+        Value::Array(cfg.arrivals.iter().map(arrival_json).collect()),
+    );
+    m.insert("windows_us".to_string(), num_array(&cfg.windows_us));
+    m.insert("fabric_oversubs".to_string(), num_array(&cfg.fabric_oversubs));
+    m.insert("max_batch".to_string(), count(cfg.max_batch as u64));
+    m.insert("materials".to_string(), count(cfg.materials as u64));
+    m.insert(
+        "samples_per_request".to_string(),
+        Value::Array(vec![
+            count(cfg.samples_per_request.0 as u64),
+            count(cfg.samples_per_request.1 as u64),
+        ]),
+    );
+    m.insert("requests_per_burst".to_string(), count(cfg.requests_per_burst as u64));
+    m.insert("mir_every".to_string(), count(cfg.mir_every as u64));
+    m.insert("mir_samples".to_string(), count(cfg.mir_samples as u64));
+    m.insert("horizon_us".to_string(), us(cfg.horizon_s));
+    m.insert("seed".to_string(), count(cfg.seed));
+    Value::Object(m)
+}
+
+fn event_summary_json(s: &EventSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("requests".to_string(), count(s.requests));
+    m.insert("samples".to_string(), count(s.samples));
+    m.insert("batches".to_string(), count(s.batches));
+    m.insert("mean_batch_samples".to_string(), fixed3(s.mean_batch_samples));
+    m.insert("mean_us".to_string(), us(s.latency.mean_s));
+    m.insert("p50_us".to_string(), us(s.latency.p50_s));
+    m.insert("p90_us".to_string(), us(s.latency.p90_s));
+    m.insert("p99_us".to_string(), us(s.latency.p99_s));
+    m.insert("p999_us".to_string(), us(s.latency.p999_s));
+    m.insert("max_us".to_string(), us(s.latency.max_s));
+    m.insert("mean_link_overhead_us".to_string(), us(s.mean_link_overhead_s));
+    m.insert("mean_contention_us".to_string(), us(s.mean_contention_s));
+    m.insert("samples_per_s".to_string(), fixed3(s.samples_per_s));
+    m.insert("makespan_us".to_string(), us(s.makespan_s));
+    m.insert("slowdown_max".to_string(), fixed3(s.slowdown_max));
+    m.insert(
+        "histogram".to_string(),
+        Value::Array(
+            s.latency
+                .histogram
+                .iter()
+                .filter(|(_, c)| *c > 0)
+                .map(|&(le_us, c)| {
+                    let mut bm = BTreeMap::new();
+                    bm.insert("le_us".to_string(), Value::Number(le_us));
+                    bm.insert("count".to_string(), count(c));
+                    Value::Object(bm)
+                })
+                .collect(),
+        ),
+    );
+    m.insert("overflow".to_string(), count(s.latency.overflow));
+    Value::Object(m)
+}
+
+fn event_scenario_json(s: &EventScenarioResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topology".to_string(), Value::String(s.topology.key().to_string()));
+    m.insert("policy".to_string(), Value::String(s.policy.key().to_string()));
+    m.insert("arrival".to_string(), Value::String(s.arrival.key().to_string()));
+    m.insert("ranks".to_string(), count(s.ranks as u64));
+    m.insert("window_us".to_string(), fixed3(s.window_us));
+    m.insert("oversub".to_string(), fixed3(s.oversub));
+    m.insert("summary".to_string(), event_summary_json(&s.summary));
+    Value::Object(m)
+}
+
+impl EventCampaignResult {
+    /// Deterministic JSON document (BTreeMap key order; fixed
+    /// precision), golden-pinned by `rust/tests/campaign_golden.rs`.
+    pub fn to_json(&self) -> Value {
+        doc_json(
+            event_config_json(&self.config),
+            self.scenarios.iter().map(event_scenario_json).collect(),
+        )
+    }
+
+    /// One aligned table per topology; one row per swept cell.
+    pub fn tables(&self) -> Vec<Table> {
+        topology_tables(
+            "Event campaign",
+            &self.config.topologies,
+            &self.scenarios,
+            |s: &EventScenarioResult| s.topology,
+            |s| {
+                format!(
+                    "{}/{}/r{}/w{}/o{}",
+                    s.policy.key(),
+                    s.arrival.key(),
+                    s.ranks,
+                    s.window_us,
+                    s.oversub
+                )
+            },
+            &[
+                ("p50_us", &|s: &EventScenarioResult| s.summary.latency.p50_s * 1e6),
+                ("p99_us", &|s: &EventScenarioResult| s.summary.latency.p99_s * 1e6),
+                ("p999_us", &|s: &EventScenarioResult| s.summary.latency.p999_s * 1e6),
+                ("mean_batch", &|s: &EventScenarioResult| s.summary.mean_batch_samples),
+                ("contention_us", &|s: &EventScenarioResult| {
+                    s.summary.mean_contention_s * 1e6
+                }),
+                ("slowdown", &|s: &EventScenarioResult| s.summary.slowdown_max),
+            ],
+        )
+    }
+}
+
+// --------------------------------------------------------- cog leafs
+
+fn cog_config_json(cfg: &super::scenario::CogCampaignConfig) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topologies".to_string(), key_array(&cfg.topologies, |t| t.key().to_string()));
+    m.insert("policies".to_string(), key_array(&cfg.policies, |p| p.key().to_string()));
+    m.insert(
+        "rank_counts".to_string(),
+        Value::Array(cfg.rank_counts.iter().map(|&r| count(r as u64)).collect()),
+    );
+    m.insert(
+        "models_per_rank".to_string(),
+        Value::Array(cfg.models_per_rank.iter().map(|&m| count(m as u64)).collect()),
+    );
+    m.insert(
+        "swap_costs_us".to_string(),
+        Value::Array(cfg.swap_costs_s.iter().map(|&s| us(s)).collect()),
+    );
+    m.insert("overlaps".to_string(), num_array(&cfg.overlaps));
+    m.insert("fabric_oversubs".to_string(), num_array(&cfg.fabric_oversubs));
+    m.insert("timesteps".to_string(), count(cfg.timesteps as u64));
+    m.insert("compute_us".to_string(), us(cfg.compute_s));
+    m.insert("requests_per_step".to_string(), count(cfg.requests_per_step as u64));
+    m.insert(
+        "samples_per_request".to_string(),
+        Value::Array(vec![
+            count(cfg.samples_per_request.0 as u64),
+            count(cfg.samples_per_request.1 as u64),
+        ]),
+    );
+    m.insert("mir_every".to_string(), count(cfg.mir_every as u64));
+    m.insert("mir_samples".to_string(), count(cfg.mir_samples as u64));
+    m.insert("residency_slots".to_string(), count(cfg.residency_slots as u64));
+    m.insert("window_us".to_string(), fixed3(cfg.window_us));
+    m.insert("max_batch".to_string(), count(cfg.max_batch as u64));
+    m.insert("seed".to_string(), count(cfg.seed));
+    Value::Object(m)
+}
+
+fn cog_summary_json(s: &CogSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ranks".to_string(), count(s.ranks));
+    m.insert("timesteps".to_string(), count(s.timesteps));
+    m.insert("requests".to_string(), count(s.requests));
+    m.insert("samples".to_string(), count(s.samples));
+    m.insert("batches".to_string(), count(s.batches));
+    m.insert("time_to_solution_us".to_string(), us(s.time_to_solution_s));
+    m.insert("mean_step_us".to_string(), us(s.mean_step_s));
+    m.insert("total_compute_us".to_string(), us(s.total_compute_s));
+    m.insert("total_queue_us".to_string(), us(s.total_queue_s));
+    m.insert("total_swap_us".to_string(), us(s.total_swap_s));
+    m.insert("total_network_us".to_string(), us(s.total_network_s));
+    m.insert("total_contention_us".to_string(), us(s.total_contention_s));
+    m.insert("total_service_us".to_string(), us(s.total_service_s));
+    m.insert("swaps".to_string(), count(s.swaps));
+    m.insert("swap_time_us".to_string(), us(s.swap_time_s));
+    m.insert("max_spread_us".to_string(), us(s.max_spread_s));
+    m.insert("request_p50_us".to_string(), us(s.latency.p50_s));
+    m.insert("request_p99_us".to_string(), us(s.latency.p99_s));
+    m.insert(
+        "straggler_counts".to_string(),
+        Value::Array(s.straggler_counts.iter().map(|&c| count(c)).collect()),
+    );
+    m.insert(
+        "steps".to_string(),
+        Value::Array(
+            s.steps
+                .iter()
+                .map(|st| {
+                    let mut sm = BTreeMap::new();
+                    sm.insert("step".to_string(), count(st.step as u64));
+                    sm.insert("duration_us".to_string(), us(st.duration_s()));
+                    sm.insert("straggler".to_string(), count(st.straggler as u64));
+                    sm.insert("compute_us".to_string(), us(st.compute_s));
+                    sm.insert("queue_us".to_string(), us(st.queue_s));
+                    sm.insert("swap_us".to_string(), us(st.swap_s));
+                    sm.insert("network_us".to_string(), us(st.network_s));
+                    sm.insert("contention_us".to_string(), us(st.contention_s));
+                    sm.insert("service_us".to_string(), us(st.service_s));
+                    sm.insert("spread_us".to_string(), us(st.spread_s));
+                    Value::Object(sm)
+                })
+                .collect(),
+        ),
+    );
+    Value::Object(m)
+}
+
+fn cog_scenario_json(s: &CogScenarioResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("topology".to_string(), Value::String(s.topology.key().to_string()));
+    m.insert("policy".to_string(), Value::String(s.policy.key().to_string()));
+    m.insert("ranks".to_string(), count(s.ranks as u64));
+    m.insert("models".to_string(), count(s.models as u64));
+    m.insert("swap_us".to_string(), us(s.swap_s));
+    m.insert("overlap".to_string(), fixed3(s.overlap));
+    m.insert("oversub".to_string(), fixed3(s.oversub));
+    m.insert("summary".to_string(), cog_summary_json(&s.summary));
+    Value::Object(m)
+}
+
+impl CogCampaignResult {
+    /// Deterministic JSON document (BTreeMap key order; fixed
+    /// precision), golden-pinned by `rust/tests/campaign_golden.rs`.
+    pub fn to_json(&self) -> Value {
+        doc_json(
+            cog_config_json(&self.config),
+            self.scenarios.iter().map(cog_scenario_json).collect(),
+        )
+    }
+
+    /// One aligned table per topology; one row per swept cell.
+    pub fn tables(&self) -> Vec<Table> {
+        topology_tables(
+            "CogSim campaign",
+            &self.config.topologies,
+            &self.scenarios,
+            |s: &CogScenarioResult| s.topology,
+            |s| {
+                format!(
+                    "{}/r{}/m{}/sw{}/ov{}/o{}",
+                    s.policy.key(),
+                    s.ranks,
+                    s.models,
+                    s.swap_s * 1e6,
+                    s.overlap,
+                    s.oversub
+                )
+            },
+            &[
+                ("tts_ms", &|s: &CogScenarioResult| s.summary.time_to_solution_s * 1e3),
+                ("compute_ms", &|s: &CogScenarioResult| s.summary.total_compute_s * 1e3),
+                ("queue_ms", &|s: &CogScenarioResult| s.summary.total_queue_s * 1e3),
+                ("swap_ms", &|s: &CogScenarioResult| s.summary.total_swap_s * 1e3),
+                ("network_ms", &|s: &CogScenarioResult| s.summary.total_network_s * 1e3),
+                ("contention_ms", &|s: &CogScenarioResult| {
+                    s.summary.total_contention_s * 1e3
+                }),
+                ("service_ms", &|s: &CogScenarioResult| s.summary.total_service_s * 1e3),
+                ("swaps", &|s: &CogScenarioResult| s.summary.swaps as f64),
+                ("spread_us", &|s: &CogScenarioResult| s.summary.max_spread_s * 1e6),
+            ],
+        )
+    }
+}
+
+// ------------------------------------------------------ unified grid
+
+fn grid_config_json(grid: &Grid) -> Value {
+    let a = &grid.axes;
+    let k = &grid.knobs;
+    let mut m = BTreeMap::new();
+    m.insert("kinds".to_string(), key_array(&a.kinds, |x| x.key().to_string()));
+    m.insert("topologies".to_string(), key_array(&a.topologies, |t| t.key().to_string()));
+    m.insert("fleets".to_string(), key_array(&a.fleets, |f| f.key()));
+    m.insert("policies".to_string(), key_array(&a.policies, |p| p.key().to_string()));
+    m.insert(
+        "rank_counts".to_string(),
+        Value::Array(a.rank_counts.iter().map(|&r| count(r as u64)).collect()),
+    );
+    m.insert(
+        "arrivals".to_string(),
+        Value::Array(a.arrivals.iter().map(arrival_json).collect()),
+    );
+    m.insert("windows_us".to_string(), num_array(&a.windows_us));
+    m.insert(
+        "models_per_rank".to_string(),
+        Value::Array(a.models_per_rank.iter().map(|&x| count(x as u64)).collect()),
+    );
+    m.insert(
+        "swap_costs_us".to_string(),
+        Value::Array(a.swap_costs_s.iter().map(|&s| us(s)).collect()),
+    );
+    m.insert("overlaps".to_string(), num_array(&a.overlaps));
+    m.insert("fabric_oversubs".to_string(), num_array(&a.fabric_oversubs));
+    let mut kn = BTreeMap::new();
+    kn.insert("materials".to_string(), count(k.materials as u64));
+    kn.insert(
+        "samples_per_request".to_string(),
+        Value::Array(vec![
+            count(k.samples_per_request.0 as u64),
+            count(k.samples_per_request.1 as u64),
+        ]),
+    );
+    kn.insert("requests_per_burst".to_string(), count(k.requests_per_burst as u64));
+    kn.insert("requests_per_step".to_string(), count(k.requests_per_step as u64));
+    kn.insert("mir_every".to_string(), count(k.mir_every as u64));
+    kn.insert("mir_samples".to_string(), count(k.mir_samples as u64));
+    kn.insert("max_batch".to_string(), count(k.max_batch as u64));
+    kn.insert("horizon_us".to_string(), us(k.horizon_s));
+    kn.insert("timesteps".to_string(), count(k.timesteps as u64));
+    kn.insert("compute_us".to_string(), us(k.compute_s));
+    kn.insert("residency_slots".to_string(), count(k.residency_slots as u64));
+    kn.insert("zones_per_rank".to_string(), count(k.zones_per_rank as u64));
+    kn.insert("step_period_us".to_string(), us(k.step_period_s));
+    kn.insert("mir_base_zones".to_string(), count(k.mir_base_zones as u64));
+    kn.insert("seed".to_string(), count(k.seed));
+    m.insert("knobs".to_string(), Value::Object(kn));
+    Value::Object(m)
+}
+
+impl GridResult {
+    /// Deterministic JSON document: one output schema for every
+    /// workload kind — each cell carries its full axis coordinates
+    /// plus its kind's summary payload.
+    pub fn to_json(&self) -> Value {
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                let sc = &c.scenario;
+                let mut m = BTreeMap::new();
+                m.insert("kind".to_string(), Value::String(sc.kind.key().to_string()));
+                m.insert("topology".to_string(), Value::String(sc.topology.key().to_string()));
+                m.insert("fleet".to_string(), Value::String(sc.fleet.key()));
+                m.insert("policy".to_string(), Value::String(sc.policy.key().to_string()));
+                m.insert("ranks".to_string(), count(sc.ranks as u64));
+                m.insert("arrival".to_string(), Value::String(sc.arrival.key().to_string()));
+                m.insert("window_us".to_string(), fixed3(sc.window_us));
+                m.insert("models".to_string(), count(sc.models as u64));
+                m.insert("swap_us".to_string(), us(sc.swap_s));
+                m.insert("overlap".to_string(), fixed3(sc.overlap));
+                m.insert("oversub".to_string(), fixed3(sc.oversub));
+                let summary = match &c.summary {
+                    CellSummary::Analytic(AnalyticSummary {
+                        hydra,
+                        mir,
+                        makespan_s,
+                        backends,
+                    }) => {
+                        let mut sm = BTreeMap::new();
+                        analytic_summary_fields(&mut sm, hydra, mir, *makespan_s, backends);
+                        Value::Object(sm)
+                    }
+                    CellSummary::Event(s) => event_summary_json(s),
+                    CellSummary::Cog(s) => cog_summary_json(s),
+                };
+                m.insert("summary".to_string(), summary);
+                Value::Object(m)
+            })
+            .collect();
+        doc_json(grid_config_json(&self.grid), cells)
+    }
+
+    /// One aligned table per (kind, topology) over the grid's cells:
+    /// a compact cross-kind view with one headline metric family per
+    /// kind.
+    pub fn tables(&self) -> Vec<Table> {
+        let mut tables = Vec::new();
+        for &kind in &self.grid.axes.kinds {
+            let kind_cells: Vec<_> =
+                self.cells.iter().filter(|c| c.scenario.kind == kind).collect();
+            for &topo in &self.grid.axes.topologies {
+                let rows: Vec<_> = kind_cells
+                    .iter()
+                    .filter(|c| c.scenario.topology == topo)
+                    .collect();
+                if rows.is_empty() {
+                    continue;
+                }
+                let mut t = Table::new(
+                    format!("Scenario[{}] — {} ({})", kind.key(), topo.key(), topo.label()),
+                    "cell",
+                );
+                t.set_x(rows.iter().map(|c| {
+                    let sc = &c.scenario;
+                    format!(
+                        "{}/{}/r{}/o{}",
+                        sc.fleet.key(),
+                        sc.policy.key(),
+                        sc.ranks,
+                        sc.oversub
+                    )
+                }));
+                match kind {
+                    super::scenario::Kind::Analytic => {
+                        t.add_series(
+                            "hydra_p99_us",
+                            rows.iter()
+                                .map(|c| {
+                                    c.analytic().map_or(f64::NAN, |s| s.hydra.p99_s * 1e6)
+                                })
+                                .collect(),
+                        );
+                        t.add_series(
+                            "mir_p99_us",
+                            rows.iter()
+                                .map(|c| c.analytic().map_or(f64::NAN, |s| s.mir.p99_s * 1e6))
+                                .collect(),
+                        );
+                        t.add_series(
+                            "makespan_ms",
+                            rows.iter()
+                                .map(|c| {
+                                    c.analytic().map_or(f64::NAN, |s| s.makespan_s * 1e3)
+                                })
+                                .collect(),
+                        );
+                    }
+                    super::scenario::Kind::Event => {
+                        t.add_series(
+                            "p50_us",
+                            rows.iter()
+                                .map(|c| {
+                                    c.event().map_or(f64::NAN, |s| s.latency.p50_s * 1e6)
+                                })
+                                .collect(),
+                        );
+                        t.add_series(
+                            "p99_us",
+                            rows.iter()
+                                .map(|c| {
+                                    c.event().map_or(f64::NAN, |s| s.latency.p99_s * 1e6)
+                                })
+                                .collect(),
+                        );
+                        t.add_series(
+                            "contention_us",
+                            rows.iter()
+                                .map(|c| {
+                                    c.event().map_or(f64::NAN, |s| s.mean_contention_s * 1e6)
+                                })
+                                .collect(),
+                        );
+                    }
+                    super::scenario::Kind::Cog => {
+                        t.add_series(
+                            "tts_ms",
+                            rows.iter()
+                                .map(|c| {
+                                    c.cog().map_or(f64::NAN, |s| s.time_to_solution_s * 1e3)
+                                })
+                                .collect(),
+                        );
+                        t.add_series(
+                            "network_ms",
+                            rows.iter()
+                                .map(|c| {
+                                    c.cog().map_or(f64::NAN, |s| s.total_network_s * 1e3)
+                                })
+                                .collect(),
+                        );
+                        t.add_series(
+                            "swaps",
+                            rows.iter()
+                                .map(|c| c.cog().map_or(f64::NAN, |s| s.swaps as f64))
+                                .collect(),
+                        );
+                    }
+                }
+                tables.push(t);
+            }
+        }
+        tables
+    }
+}

@@ -1,0 +1,1008 @@
+//! The declarative scenario grid: **one** struct describing every
+//! sweep axis × workload kind, replacing the three parallel
+//! config/sweep stacks the campaign harness used to carry
+//! (`CampaignConfig` / `EventCampaignConfig` / `CogCampaignConfig`
+//! each hand-rolled its own nested loops and cell structs).
+//!
+//! A [`Grid`] is [`Axes`] (the swept dimensions — workload [`Kind`],
+//! coupling [`Topology`], pool [`Fleet`] composition, routing
+//! [`Policy`], rank count, arrival process, batching window,
+//! models-per-rank, swap cost, overlap, fabric oversubscription) plus
+//! [`Knobs`] (the scalar workload parameters every cell shares).
+//! [`Grid::cells`] expands it into [`Scenario`] cells in a fixed
+//! nesting order — the same order the legacy per-mode sweeps used, so
+//! the committed goldens are byte-stable across the refactor.
+//!
+//! Axes that cannot apply to a cell collapse instead of multiplying:
+//! the all-local topology has no shared fabric, so the
+//! oversubscription axis collapses to the single 1:1 cell and the
+//! fleet axis to the default pool (there is no pool to compose); an
+//! axis a cell's *kind* cannot observe (arrivals outside the event
+//! kind; models/swap/overlap outside the cog kind; batching windows
+//! in the analytic kind) collapses to its first value rather than
+//! re-running identical cells.
+//!
+//! The **fleet axis** is the grid's proof of life: heterogeneous
+//! mixed GPU+RDU pools ([`Fleet::Mixed`], e.g. `4g2r` = four pooled
+//! A100s next to two RDU tile groups) ride every mode — analytic,
+//! event, coupled — from this single definition, where previously a
+//! new axis needed three hand-wired copies.
+//!
+//! The legacy config structs remain as thin typed views
+//! ([`CampaignConfig::grid`], [`EventCampaignConfig::grid`],
+//! [`CogCampaignConfig::grid`]) so existing callers and the committed
+//! golden JSON keep working unchanged.
+
+use crate::cluster::{Backend, GpuBackend, Policy, RduBackend};
+use crate::devices::{profiles, Api, Gpu, ModelProfile};
+use crate::eventsim::ArrivalProcess;
+use crate::fabric::{FabricSpec, Topology as NetTopology};
+use crate::netsim::Link;
+use crate::rdu::RduApi;
+
+/// The three coupling topologies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    Local,
+    Pooled,
+    Hybrid,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 3] = [Topology::Local, Topology::Pooled, Topology::Hybrid];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Topology::Local => "per-rank local GPUs",
+            Topology::Pooled => "shared disaggregated accelerator pool",
+            Topology::Hybrid => "hybrid (MIR local, Hermit pooled)",
+        }
+    }
+
+    /// Stable snake_case key for JSON artifacts.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Topology::Local => "local",
+            Topology::Pooled => "pooled",
+            Topology::Hybrid => "hybrid",
+        }
+    }
+
+    /// Does this topology have backends behind the shared fabric?
+    /// Local is all node-local: the oversubscription and fleet axes
+    /// collapse to a single cell there (no duplicate sweep cells).
+    pub fn pays_the_link(&self) -> bool {
+        !matches!(self, Topology::Local)
+    }
+}
+
+/// What backs the shared pool — the heterogeneous-fleet axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fleet {
+    /// The legacy pool: one full 4-tile group on the optimised C++
+    /// stack next to a half-provisioned 2-tile group still on the
+    /// naive Python stack (the allocator's natural shapes, Fig. 13's
+    /// API spread).
+    DefaultPool,
+    /// A mixed pool: `gpus` A100/TRT-CudaGraphs members next to
+    /// `rdus` RDU tile groups (alternating 4-tile C++ / 2-tile
+    /// Python), all behind the same fabric — the heterogeneous fleet
+    /// the paper's §VI leaves open.
+    Mixed { gpus: u8, rdus: u8 },
+}
+
+impl Fleet {
+    /// Stable key for JSON artifacts and the CLI (`default`, `4g2r`).
+    pub fn key(&self) -> String {
+        match self {
+            Fleet::DefaultPool => "default".to_string(),
+            Fleet::Mixed { gpus, rdus } => format!("{gpus}g{rdus}r"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Fleet::DefaultPool => "default RDU pair (4-tile C++ + 2-tile Python)".to_string(),
+            Fleet::Mixed { gpus, rdus } => {
+                format!("mixed pool: {gpus}x A100 + {rdus}x RDU tile groups")
+            }
+        }
+    }
+
+    /// Pool members this fleet places behind the fabric.
+    pub fn pool_size(&self) -> usize {
+        match self {
+            Fleet::DefaultPool => 2,
+            Fleet::Mixed { gpus, rdus } => *gpus as usize + *rdus as usize,
+        }
+    }
+
+    /// Parse a CLI key: `default` or `<G>g<R>r` (e.g. `4g2r`).
+    pub fn parse(s: &str) -> Option<Fleet> {
+        if s == "default" {
+            return Some(Fleet::DefaultPool);
+        }
+        let (g, rest) = s.split_once('g')?;
+        let r = rest.strip_suffix('r')?;
+        let fleet = Fleet::Mixed { gpus: g.parse().ok()?, rdus: r.parse().ok()? };
+        (fleet.pool_size() >= 1).then_some(fleet)
+    }
+}
+
+/// Which engine a cell runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// Closed-form virtual-time cluster (`cluster::Cluster`).
+    Analytic,
+    /// Discrete-event engine (`eventsim::EventSim`).
+    Event,
+    /// Coupled timestep model (`eventsim::cogsim::CogSim`).
+    Cog,
+}
+
+impl Kind {
+    pub const ALL: [Kind; 3] = [Kind::Analytic, Kind::Event, Kind::Cog];
+
+    /// Stable snake_case key for JSON artifacts and the CLI.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Kind::Analytic => "analytic",
+            Kind::Event => "event",
+            Kind::Cog => "cog",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "analytic" => Some(Kind::Analytic),
+            "event" | "eventsim" => Some(Kind::Event),
+            "cog" | "cogsim" => Some(Kind::Cog),
+            _ => None,
+        }
+    }
+}
+
+/// The swept dimensions.  Axes that do not apply to a cell's kind or
+/// topology collapse to their first (or canonical) value instead of
+/// multiplying the grid.
+#[derive(Debug, Clone)]
+pub struct Axes {
+    /// Workload kinds to run (each kind sweeps the full grid).
+    pub kinds: Vec<Kind>,
+    pub topologies: Vec<Topology>,
+    /// Pool compositions (collapses on the all-local topology).
+    pub fleets: Vec<Fleet>,
+    pub policies: Vec<Policy>,
+    /// MPI rank counts (local topology gets one GPU per rank).
+    pub rank_counts: Vec<usize>,
+    /// Arrival processes (event kind only; others ignore it).
+    pub arrivals: Vec<ArrivalProcess>,
+    /// Dynamic-batching windows, µs; `0` disables batching
+    /// (event + cog kinds).
+    pub windows_us: Vec<f64>,
+    /// Target-model counts per rank (cog kind only).
+    pub models_per_rank: Vec<usize>,
+    /// Residency swap costs, seconds (cog kind only).
+    pub swap_costs_s: Vec<f64>,
+    /// Compute/inference overlap fractions (cog kind only).
+    pub overlaps: Vec<f64>,
+    /// Fabric oversubscription factors (collapses to 1:1 on the
+    /// all-local topology).
+    pub fabric_oversubs: Vec<f64>,
+}
+
+impl Default for Axes {
+    fn default() -> Self {
+        Axes {
+            kinds: vec![Kind::Cog],
+            topologies: vec![Topology::Local, Topology::Pooled],
+            fleets: vec![Fleet::DefaultPool],
+            policies: vec![Policy::RoundRobin, Policy::LatencyAware],
+            rank_counts: vec![4, 32],
+            arrivals: vec![ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 }],
+            windows_us: vec![0.0],
+            models_per_rank: vec![8],
+            swap_costs_s: vec![0.0],
+            overlaps: vec![0.0],
+            fabric_oversubs: vec![1.0, 4.0],
+        }
+    }
+}
+
+/// The scalar workload knobs every cell shares (the union of the
+/// three legacy config structs' non-axis fields).
+#[derive(Debug, Clone, Copy)]
+pub struct Knobs {
+    /// Per-material Hermit instances (analytic + event kinds).
+    pub materials: usize,
+    /// Samples per request, uniform inclusive (paper: 2–3 per zone).
+    pub samples_per_request: (usize, usize),
+    /// Synchronized event mode: requests per rank per burst.
+    pub requests_per_burst: usize,
+    /// Cog: in-the-loop requests per rank per timestep (K).
+    pub requests_per_step: usize,
+    /// Every `mir_every`-th burst/step adds one MIR request per rank.
+    pub mir_every: usize,
+    pub mir_samples: usize,
+    /// Sample cap per coalesced batch.
+    pub max_batch: usize,
+    /// Event: arrival generators stop here; in-flight work drains.
+    pub horizon_s: f64,
+    /// Analytic + cog: simulated timesteps.
+    pub timesteps: usize,
+    /// Cog: physics compute per rank per timestep, seconds.
+    pub compute_s: f64,
+    /// Cog: models resident per backend (LRU).
+    pub residency_slots: usize,
+    /// Analytic: Hydra zones per rank per timestep.
+    pub zones_per_rank: usize,
+    /// Analytic: virtual seconds between timesteps.
+    pub step_period_s: f64,
+    /// Analytic: base MIR mixed-zone count per rank per timestep.
+    pub mir_base_zones: usize,
+    /// Workload seed (fixed seed → byte-stable summary).
+    pub seed: u64,
+}
+
+impl Default for Knobs {
+    fn default() -> Self {
+        Knobs {
+            materials: 8,
+            samples_per_request: (2, 3),
+            requests_per_burst: 6,
+            requests_per_step: 6,
+            mir_every: 0,
+            mir_samples: 512,
+            max_batch: 256,
+            horizon_s: 0.2,
+            timesteps: 8,
+            compute_s: 2e-3,
+            residency_slots: 4,
+            zones_per_rank: 200,
+            step_period_s: 0.02,
+            mir_base_zones: 1024,
+            seed: 42,
+        }
+    }
+}
+
+/// The declarative scenario grid: axes × workload kind + shared
+/// knobs.  `repro scenario` runs one of these; the legacy campaign
+/// modes are thin views over it.
+#[derive(Debug, Clone, Default)]
+pub struct Grid {
+    pub axes: Axes,
+    pub knobs: Knobs,
+}
+
+/// One cell of the expanded grid.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub kind: Kind,
+    pub topology: Topology,
+    pub fleet: Fleet,
+    pub policy: Policy,
+    pub ranks: usize,
+    /// Event kind only; carried (and emitted) regardless.
+    pub arrival: ArrivalProcess,
+    /// Batching window, µs; 0 = off (event + cog kinds).
+    pub window_us: f64,
+    /// Cog kind only: models per rank.
+    pub models: usize,
+    /// Cog kind only: residency swap cost, seconds.
+    pub swap_s: f64,
+    /// Cog kind only: compute/inference overlap fraction.
+    pub overlap: f64,
+    /// Fabric oversubscription (1.0 = non-blocking).
+    pub oversub: f64,
+}
+
+/// The oversubscription cells a topology actually sweeps: the
+/// configured list where the fabric exists, the single 1:1 cell on
+/// the all-local topology.
+pub fn oversubs_for(topology: Topology, oversubs: &[f64]) -> Vec<f64> {
+    if topology.pays_the_link() {
+        oversubs.to_vec()
+    } else {
+        vec![1.0]
+    }
+}
+
+/// The fleet cells a topology actually sweeps: the configured pool
+/// compositions where a pool exists, the single default cell on the
+/// all-local topology (no pool to compose).
+pub fn fleets_for(topology: Topology, fleets: &[Fleet]) -> Vec<Fleet> {
+    if topology.pays_the_link() {
+        fleets.to_vec()
+    } else {
+        vec![Fleet::DefaultPool]
+    }
+}
+
+/// An axis a cell's kind cannot observe collapses to its first
+/// configured value instead of multiplying the grid with duplicate
+/// identical cells (empty axes stay empty: no cells).
+fn axis_for<T: Copy>(applies: bool, axis: &[T]) -> Vec<T> {
+    if applies || axis.len() <= 1 {
+        axis.to_vec()
+    } else {
+        vec![axis[0]]
+    }
+}
+
+impl Grid {
+    /// Expand the axes into cells.  The nesting order — kind,
+    /// topology, fleet, policy, ranks, arrival, window, models, swap,
+    /// overlap, oversubscription — reproduces every legacy mode's
+    /// sweep order when its unused axes are singletons, which keeps
+    /// the committed golden JSON byte-stable.  Axes a kind or
+    /// topology cannot observe collapse instead of multiplying:
+    /// arrivals are event-only; windows are event+cog; models, swap
+    /// costs and overlaps are cog-only; the fleet and
+    /// oversubscription axes collapse on the all-local topology.
+    pub fn cells(&self) -> Vec<Scenario> {
+        let a = &self.axes;
+        let mut out = Vec::new();
+        for &kind in &a.kinds {
+            for &topology in &a.topologies {
+                for fleet in fleets_for(topology, &a.fleets) {
+                    for &policy in &a.policies {
+                        for &ranks in &a.rank_counts {
+                            for arrival in axis_for(kind == Kind::Event, &a.arrivals) {
+                                for window_us in
+                                    axis_for(kind != Kind::Analytic, &a.windows_us)
+                                {
+                                    for models in
+                                        axis_for(kind == Kind::Cog, &a.models_per_rank)
+                                    {
+                                        for swap_s in
+                                            axis_for(kind == Kind::Cog, &a.swap_costs_s)
+                                        {
+                                            for overlap in
+                                                axis_for(kind == Kind::Cog, &a.overlaps)
+                                            {
+                                                for oversub in
+                                                    oversubs_for(topology, &a.fabric_oversubs)
+                                                {
+                                                    out.push(Scenario {
+                                                        kind,
+                                                        topology,
+                                                        fleet,
+                                                        policy,
+                                                        ranks,
+                                                        arrival,
+                                                        window_us,
+                                                        models,
+                                                        swap_s,
+                                                        overlap,
+                                                        oversub,
+                                                    });
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-readable axis table for `repro scenario --list`: every
+    /// swept axis with its current values, plus which kinds use it.
+    pub fn axis_help(&self) -> Vec<(&'static str, String, &'static str)> {
+        let a = &self.axes;
+        let join = |v: Vec<String>| v.join(",");
+        vec![
+            ("kinds", join(a.kinds.iter().map(|k| k.key().to_string()).collect()),
+             "workload kind per cell (analytic|event|cog)"),
+            ("topologies", join(a.topologies.iter().map(|t| t.key().to_string()).collect()),
+             "coupling topology (local|pooled|hybrid)"),
+            ("fleets", join(a.fleets.iter().map(|f| f.key()).collect()),
+             "pool composition (default or <G>g<R>r, e.g. 4g2r); collapses on local"),
+            ("policies", join(a.policies.iter().map(|p| p.key().to_string()).collect()),
+             "routing policy"),
+            ("ranks", join(a.rank_counts.iter().map(|r| r.to_string()).collect()),
+             "MPI rank counts"),
+            ("arrivals", join(a.arrivals.iter().map(|x| x.key().to_string()).collect()),
+             "arrival process (event kind)"),
+            ("windows-us", join(a.windows_us.iter().map(|w| w.to_string()).collect()),
+             "batching window in us, 0 = off (event+cog kinds)"),
+            ("models", join(a.models_per_rank.iter().map(|m| m.to_string()).collect()),
+             "models per rank (cog kind)"),
+            ("swaps-us",
+             join(a.swap_costs_s.iter().map(|s| (s * 1e6).to_string()).collect()),
+             "residency swap cost in us (cog kind)"),
+            ("overlaps", join(a.overlaps.iter().map(|o| o.to_string()).collect()),
+             "compute/inference overlap fraction (cog kind)"),
+            ("oversubs", join(a.fabric_oversubs.iter().map(|o| o.to_string()).collect()),
+             "fabric oversubscription factors; collapses to 1:1 on local"),
+        ]
+    }
+}
+
+// ----------------------------------------------------------- fleets
+
+/// Tiering: which backend indices serve which model class.
+pub struct Tiering {
+    pub hermit: Vec<usize>,
+    pub mir: Vec<usize>,
+}
+
+fn local_gpu(r: usize) -> Box<dyn Backend> {
+    Box::new(GpuBackend::node_local(format!("gpu/rank{r}"), Gpu::a100(), Api::TrtCudaGraphs))
+}
+
+/// The pool members a fleet places behind the shared link.  The
+/// default pool is deliberately heterogeneous — a full 4-tile group
+/// on the optimised C++ stack next to a half-provisioned 2-tile group
+/// still on the naive Python stack: state-blind policies pay for not
+/// seeing the difference.  Mixed fleets extend the same idea across
+/// architectures: pooled A100s (remote, over the same link) next to
+/// RDU tile groups alternating the default pair's shapes.
+fn pool_members(fleet: Fleet, pool_link: &Link) -> Vec<Box<dyn Backend>> {
+    match fleet {
+        Fleet::DefaultPool => vec![
+            Box::new(RduBackend::with_link(
+                "rdu/pool0",
+                4,
+                RduApi::CppOptimized,
+                pool_link.clone(),
+            )),
+            Box::new(RduBackend::with_link("rdu/pool1", 2, RduApi::Python, pool_link.clone())),
+        ],
+        Fleet::Mixed { gpus, rdus } => {
+            assert!(gpus as usize + rdus as usize >= 1, "mixed fleet needs members");
+            let mut members: Vec<Box<dyn Backend>> = Vec::new();
+            for i in 0..gpus as usize {
+                members.push(Box::new(GpuBackend::remote(
+                    format!("gpu/pool{i}"),
+                    Gpu::a100(),
+                    Api::TrtCudaGraphs,
+                    pool_link.clone(),
+                )));
+            }
+            for j in 0..rdus as usize {
+                let (tiles, api) = if j % 2 == 0 {
+                    (4, RduApi::CppOptimized)
+                } else {
+                    (2, RduApi::Python)
+                };
+                members.push(Box::new(RduBackend::with_link(
+                    format!("rdu/pool{}", gpus as usize + j),
+                    tiles,
+                    api,
+                    pool_link.clone(),
+                )));
+            }
+            members
+        }
+    }
+}
+
+/// Build a topology's backend fleet + tiering (shared by all three
+/// workload kinds).
+pub fn build_fleet(
+    topology: Topology,
+    ranks: usize,
+    fleet: Fleet,
+    pool_link: &Link,
+) -> (Vec<Box<dyn Backend>>, Tiering) {
+    match topology {
+        Topology::Local => {
+            let backends: Vec<Box<dyn Backend>> = (0..ranks).map(local_gpu).collect();
+            let all: Vec<usize> = (0..backends.len()).collect();
+            (backends, Tiering { hermit: all.clone(), mir: all })
+        }
+        Topology::Pooled => {
+            let backends = pool_members(fleet, pool_link);
+            let all: Vec<usize> = (0..backends.len()).collect();
+            (backends, Tiering { hermit: all.clone(), mir: all })
+        }
+        Topology::Hybrid => {
+            let mut backends: Vec<Box<dyn Backend>> = (0..ranks).map(local_gpu).collect();
+            let gpu_idx: Vec<usize> = (0..backends.len()).collect();
+            backends.extend(pool_members(fleet, pool_link));
+            let pool_idx: Vec<usize> = (gpu_idx.len()..backends.len()).collect();
+            (backends, Tiering { hermit: pool_idx, mir: gpu_idx })
+        }
+    }
+}
+
+/// Fabric spec for an event/cog cell: the flow-level topology plus
+/// the backend→accel endpoint map matching [`build_fleet`]'s layout.
+/// `None` on the all-local topology (no shared links to model).
+pub fn build_fabric_spec(
+    topology: Topology,
+    ranks: usize,
+    fleet: Fleet,
+    oversub: f64,
+) -> Option<FabricSpec> {
+    let pool = fleet.pool_size();
+    match topology {
+        Topology::Local => None,
+        Topology::Pooled => Some(FabricSpec {
+            topology: NetTopology::pooled(ranks, pool, oversub),
+            accel_of_backend: (0..pool).collect(),
+        }),
+        Topology::Hybrid => Some(FabricSpec {
+            topology: NetTopology::hybrid(ranks, pool, oversub),
+            // GPU i sits in node i; the pool rides the fabric.
+            accel_of_backend: (0..ranks).chain(ranks..ranks + pool).collect(),
+        }),
+    }
+}
+
+/// Campaign model mapping: Hermit requests use the Hermit profile;
+/// MIR requests use the Fig-20 no-layernorm variant so GPU and RDU
+/// backends execute the same network.
+pub(crate) fn profile_for(model: &str) -> ModelProfile {
+    if model.starts_with("mir") {
+        profiles::mir_noln()
+    } else {
+        profiles::hermit()
+    }
+}
+
+// ---------------------------------------------- legacy config views
+
+/// Analytic-campaign knobs (defaults sized so the full 3×4 sweep runs
+/// in milliseconds of wall time).
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// MPI ranks issuing requests.
+    pub ranks: usize,
+    /// Hydra zones per rank per timestep.
+    pub zones_per_rank: usize,
+    /// Per-material Hermit instances per rank.
+    pub materials: usize,
+    /// Simulated physics timesteps.
+    pub timesteps: usize,
+    /// Virtual seconds between timesteps (queues drain in between).
+    pub step_period_s: f64,
+    /// Base MIR mixed-zone count per rank per timestep.
+    pub mir_base_zones: usize,
+    /// Fabric oversubscription factors to sweep on topologies with
+    /// pooled backends (the analytic mode applies the closed-form
+    /// worst-case derate: pool link bandwidth ÷ oversubscription).
+    pub fabric_oversubs: Vec<f64>,
+    /// Workload seed (fixed seed → byte-stable summary).
+    pub seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            ranks: 4,
+            zones_per_rank: 200,
+            materials: 8,
+            timesteps: 12,
+            step_period_s: 0.02,
+            mir_base_zones: 1024,
+            fabric_oversubs: vec![1.0],
+            seed: 42,
+        }
+    }
+}
+
+impl CampaignConfig {
+    /// The equivalent declarative grid (analytic kind, full topology
+    /// × policy cross, one cell per oversubscription).
+    pub fn grid(&self) -> Grid {
+        Grid {
+            axes: Axes {
+                kinds: vec![Kind::Analytic],
+                topologies: Topology::ALL.to_vec(),
+                fleets: vec![Fleet::DefaultPool],
+                policies: Policy::ALL.to_vec(),
+                rank_counts: vec![self.ranks],
+                arrivals: vec![ArrivalProcess::Synchronized {
+                    period_s: self.step_period_s,
+                    jitter_s: 0.0,
+                }],
+                windows_us: vec![0.0],
+                models_per_rank: vec![self.materials],
+                swap_costs_s: vec![0.0],
+                overlaps: vec![0.0],
+                fabric_oversubs: self.fabric_oversubs.clone(),
+            },
+            knobs: Knobs {
+                materials: self.materials,
+                timesteps: self.timesteps,
+                zones_per_rank: self.zones_per_rank,
+                step_period_s: self.step_period_s,
+                mir_base_zones: self.mir_base_zones,
+                seed: self.seed,
+                ..Knobs::default()
+            },
+        }
+    }
+}
+
+/// Event-mode campaign knobs: the discrete-event simulator swept over
+/// topology × policy × rank count × arrival process × batching
+/// window.  Unlike the analytic sweep, this resolves *when* requests
+/// collide — the queueing behaviour of bursty multi-rank arrivals
+/// that the closed-form cluster cannot express.
+#[derive(Debug, Clone)]
+pub struct EventCampaignConfig {
+    pub topologies: Vec<Topology>,
+    pub policies: Vec<Policy>,
+    /// MPI rank counts to sweep (local topology gets one GPU per rank).
+    pub rank_counts: Vec<usize>,
+    pub arrivals: Vec<ArrivalProcess>,
+    /// Dynamic-batching windows, µs; `0` disables batching.
+    pub windows_us: Vec<f64>,
+    /// Sample cap per coalesced batch.
+    pub max_batch: usize,
+    /// Per-material Hermit instances.
+    pub materials: usize,
+    /// Samples per request, uniform inclusive (paper: 2–3 per zone).
+    pub samples_per_request: (usize, usize),
+    /// Synchronized mode: requests per rank per burst.
+    pub requests_per_burst: usize,
+    /// Synchronized mode: emit one MIR request per rank every k-th
+    /// burst (0 = hermit-only).
+    pub mir_every: usize,
+    pub mir_samples: usize,
+    /// Fabric oversubscription factors to sweep; pooled/hybrid cells
+    /// route remote dispatches through the flow-level
+    /// [`crate::fabric`] simulator at each factor.
+    pub fabric_oversubs: Vec<f64>,
+    /// Arrival generators stop here; in-flight work drains.
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+impl Default for EventCampaignConfig {
+    fn default() -> Self {
+        EventCampaignConfig {
+            // Hybrid needs MIR traffic to differ from Pooled; the
+            // default event sweep studies the bursty in-the-loop
+            // Hermit regime, so it covers the two endpoints.
+            topologies: vec![Topology::Local, Topology::Pooled],
+            policies: vec![Policy::RoundRobin, Policy::LatencyAware],
+            rank_counts: vec![4, 64],
+            arrivals: vec![
+                ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+                ArrivalProcess::Poisson { rate_per_rank: 800.0 },
+                ArrivalProcess::ClosedLoop { think_s: 2e-3 },
+            ],
+            windows_us: vec![0.0, 200.0],
+            max_batch: 256,
+            materials: 8,
+            samples_per_request: (2, 3),
+            requests_per_burst: 6,
+            mir_every: 0,
+            mir_samples: 512,
+            fabric_oversubs: vec![1.0, 4.0],
+            horizon_s: 0.2,
+            seed: 42,
+        }
+    }
+}
+
+impl EventCampaignConfig {
+    /// The equivalent declarative grid (event kind).
+    pub fn grid(&self) -> Grid {
+        Grid {
+            axes: Axes {
+                kinds: vec![Kind::Event],
+                topologies: self.topologies.clone(),
+                fleets: vec![Fleet::DefaultPool],
+                policies: self.policies.clone(),
+                rank_counts: self.rank_counts.clone(),
+                arrivals: self.arrivals.clone(),
+                windows_us: self.windows_us.clone(),
+                models_per_rank: vec![self.materials],
+                swap_costs_s: vec![0.0],
+                overlaps: vec![0.0],
+                fabric_oversubs: self.fabric_oversubs.clone(),
+            },
+            knobs: Knobs {
+                materials: self.materials,
+                samples_per_request: self.samples_per_request,
+                requests_per_burst: self.requests_per_burst,
+                mir_every: self.mir_every,
+                mir_samples: self.mir_samples,
+                max_batch: self.max_batch,
+                horizon_s: self.horizon_s,
+                seed: self.seed,
+                ..Knobs::default()
+            },
+        }
+    }
+}
+
+/// Coupled-campaign knobs: the CogSim application model swept over
+/// topology × policy × rank count × models-per-rank × swap cost ×
+/// overlap.  This is the only mode that reports the paper's real
+/// figure of merit — time-to-solution — because it is the only one
+/// where inference latency feeds back into when the next timestep's
+/// requests exist.
+#[derive(Debug, Clone)]
+pub struct CogCampaignConfig {
+    pub topologies: Vec<Topology>,
+    pub policies: Vec<Policy>,
+    /// MPI rank counts (local topology gets one GPU per rank).
+    pub rank_counts: Vec<usize>,
+    /// Target-model counts per rank (M per-material Hermit instances).
+    pub models_per_rank: Vec<usize>,
+    /// Residency swap costs to sweep, seconds.
+    pub swap_costs_s: Vec<f64>,
+    /// Compute/inference overlap fractions to sweep.
+    pub overlaps: Vec<f64>,
+    /// Bulk-synchronous timesteps per run.
+    pub timesteps: usize,
+    /// Physics compute per rank per timestep, seconds.
+    pub compute_s: f64,
+    /// In-the-loop requests per rank per timestep (K).
+    pub requests_per_step: usize,
+    /// Samples per request, uniform inclusive.
+    pub samples_per_request: (usize, usize),
+    /// Every `mir_every`-th step adds one MIR request per rank.
+    pub mir_every: usize,
+    pub mir_samples: usize,
+    /// Models resident per backend (LRU).
+    pub residency_slots: usize,
+    /// Router batching window, µs; 0 disables batching.
+    pub window_us: f64,
+    pub max_batch: usize,
+    /// Fabric oversubscription factors to sweep; pooled/hybrid cells
+    /// route remote dispatches (and residency-swap weight transfers)
+    /// through the flow-level [`crate::fabric`] simulator.
+    pub fabric_oversubs: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for CogCampaignConfig {
+    fn default() -> Self {
+        CogCampaignConfig {
+            // The two coupling endpoints; hybrid needs MIR cadence
+            // (set mir_every > 0) to differ from pooled.
+            topologies: vec![Topology::Local, Topology::Pooled],
+            policies: Policy::ALL.to_vec(),
+            // 4 ranks: the pool's home turf; 32: the burst regime
+            // where sharing 2 accelerators (and their fabric) hurts
+            rank_counts: vec![4, 32],
+            models_per_rank: vec![8],
+            // free swaps vs swaps far above the small-batch service
+            // time — the regime where affinity routing must win
+            swap_costs_s: vec![0.0, 2e-3],
+            overlaps: vec![0.0],
+            timesteps: 8,
+            compute_s: 2e-3,
+            requests_per_step: 6,
+            samples_per_request: (2, 3),
+            mir_every: 0,
+            mir_samples: 512,
+            residency_slots: 4,
+            window_us: 0.0,
+            max_batch: 256,
+            // the contention axis of the acceptance headline: 1:1
+            // non-blocking through 8:1 starved
+            fabric_oversubs: vec![1.0, 2.0, 4.0, 8.0],
+            seed: 42,
+        }
+    }
+}
+
+impl CogCampaignConfig {
+    /// The equivalent declarative grid (cog kind).
+    pub fn grid(&self) -> Grid {
+        Grid {
+            axes: Axes {
+                kinds: vec![Kind::Cog],
+                topologies: self.topologies.clone(),
+                fleets: vec![Fleet::DefaultPool],
+                policies: self.policies.clone(),
+                rank_counts: self.rank_counts.clone(),
+                arrivals: vec![ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 }],
+                windows_us: vec![self.window_us],
+                models_per_rank: self.models_per_rank.clone(),
+                swap_costs_s: self.swap_costs_s.clone(),
+                overlaps: self.overlaps.clone(),
+                fabric_oversubs: self.fabric_oversubs.clone(),
+            },
+            knobs: Knobs {
+                samples_per_request: self.samples_per_request,
+                requests_per_step: self.requests_per_step,
+                mir_every: self.mir_every,
+                mir_samples: self.mir_samples,
+                max_batch: self.max_batch,
+                timesteps: self.timesteps,
+                compute_s: self.compute_s,
+                residency_slots: self.residency_slots,
+                seed: self.seed,
+                ..Knobs::default()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_keys_round_trip() {
+        assert_eq!(Fleet::DefaultPool.key(), "default");
+        assert_eq!(Fleet::Mixed { gpus: 4, rdus: 2 }.key(), "4g2r");
+        assert_eq!(Fleet::parse("default"), Some(Fleet::DefaultPool));
+        assert_eq!(Fleet::parse("4g2r"), Some(Fleet::Mixed { gpus: 4, rdus: 2 }));
+        assert_eq!(Fleet::parse("0g6r"), Some(Fleet::Mixed { gpus: 0, rdus: 6 }));
+        assert_eq!(Fleet::parse("0g0r"), None, "empty pool rejected");
+        assert_eq!(Fleet::parse("bogus"), None);
+        assert_eq!(Fleet::Mixed { gpus: 4, rdus: 2 }.pool_size(), 6);
+    }
+
+    #[test]
+    fn grid_expansion_matches_legacy_event_order() {
+        // The generic nesting must reproduce the event mode's legacy
+        // loop order: topology → policy → ranks → arrival → window →
+        // oversub, with the fleet axis collapsed.
+        let cfg = EventCampaignConfig::default();
+        let cells = cfg.grid().cells();
+        let mut expect = Vec::new();
+        for &topology in &cfg.topologies {
+            for &policy in &cfg.policies {
+                for &ranks in &cfg.rank_counts {
+                    for &arrival in &cfg.arrivals {
+                        for &window_us in &cfg.windows_us {
+                            for oversub in oversubs_for(topology, &cfg.fabric_oversubs) {
+                                expect.push((topology, policy, ranks, arrival, window_us, oversub));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(cells.len(), expect.len());
+        for (cell, (topology, policy, ranks, arrival, window_us, oversub)) in
+            cells.iter().zip(expect)
+        {
+            assert_eq!(cell.kind, Kind::Event);
+            assert_eq!(cell.topology, topology);
+            assert_eq!(cell.fleet, Fleet::DefaultPool);
+            assert_eq!(cell.policy, policy);
+            assert_eq!(cell.ranks, ranks);
+            assert_eq!(cell.arrival, arrival);
+            assert_eq!(cell.window_us, window_us);
+            assert_eq!(cell.oversub, oversub);
+        }
+    }
+
+    #[test]
+    fn grid_expansion_matches_legacy_cog_order() {
+        let cfg = CogCampaignConfig::default();
+        let cells = cfg.grid().cells();
+        let mut expect = Vec::new();
+        for &topology in &cfg.topologies {
+            for &policy in &cfg.policies {
+                for &ranks in &cfg.rank_counts {
+                    for &models in &cfg.models_per_rank {
+                        for &swap_s in &cfg.swap_costs_s {
+                            for &overlap in &cfg.overlaps {
+                                for oversub in oversubs_for(topology, &cfg.fabric_oversubs) {
+                                    expect.push((topology, policy, ranks, models, swap_s, overlap,
+                                                 oversub));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(cells.len(), expect.len());
+        for (cell, (topology, policy, ranks, models, swap_s, overlap, oversub)) in
+            cells.iter().zip(expect)
+        {
+            assert_eq!(cell.kind, Kind::Cog);
+            assert_eq!((cell.topology, cell.policy, cell.ranks), (topology, policy, ranks));
+            assert_eq!((cell.models, cell.swap_s, cell.overlap), (models, swap_s, overlap));
+            assert_eq!(cell.oversub, oversub);
+        }
+    }
+
+    #[test]
+    fn kind_inapplicable_axes_collapse_instead_of_multiplying() {
+        // A cog grid with three arrival processes and an event grid
+        // with three swap costs would otherwise re-run identical
+        // cells; only the axes the kind can observe multiply.
+        let grid = |kind: Kind| Grid {
+            axes: Axes {
+                kinds: vec![kind],
+                topologies: vec![Topology::Pooled],
+                policies: vec![Policy::RoundRobin],
+                rank_counts: vec![4],
+                arrivals: vec![
+                    ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+                    ArrivalProcess::Poisson { rate_per_rank: 800.0 },
+                    ArrivalProcess::ClosedLoop { think_s: 2e-3 },
+                ],
+                swap_costs_s: vec![0.0, 1e-3, 2e-3],
+                fabric_oversubs: vec![1.0],
+                ..Axes::default()
+            },
+            knobs: Knobs::default(),
+        };
+        // cog: the arrival axis collapses, the swap axis multiplies
+        assert_eq!(grid(Kind::Cog).cells().len(), 3);
+        assert!(grid(Kind::Cog).cells().iter().all(|c| c.arrival.key() == "synchronized"));
+        // event: the swap axis collapses, the arrival axis multiplies
+        assert_eq!(grid(Kind::Event).cells().len(), 3);
+        assert!(grid(Kind::Event).cells().iter().all(|c| c.swap_s == 0.0));
+        // analytic: both collapse
+        assert_eq!(grid(Kind::Analytic).cells().len(), 1);
+    }
+
+    #[test]
+    fn local_topology_collapses_fleet_and_oversub_axes() {
+        let grid = Grid {
+            axes: Axes {
+                kinds: vec![Kind::Cog],
+                topologies: vec![Topology::Local, Topology::Pooled],
+                fleets: vec![Fleet::DefaultPool, Fleet::Mixed { gpus: 4, rdus: 2 }],
+                policies: vec![Policy::RoundRobin],
+                rank_counts: vec![4],
+                fabric_oversubs: vec![1.0, 8.0],
+                ..Axes::default()
+            },
+            knobs: Knobs::default(),
+        };
+        let cells = grid.cells();
+        let local: Vec<_> =
+            cells.iter().filter(|c| c.topology == Topology::Local).collect();
+        let pooled: Vec<_> =
+            cells.iter().filter(|c| c.topology == Topology::Pooled).collect();
+        assert_eq!(local.len(), 1, "local: both axes collapse");
+        assert_eq!(pooled.len(), 4, "pooled: 2 fleets x 2 oversubs");
+    }
+
+    #[test]
+    fn mixed_fleet_builds_pool_members_for_every_topology() {
+        let link = Link::infiniband_cx6();
+        let fleet = Fleet::Mixed { gpus: 4, rdus: 2 };
+        let (pool, tier) = build_fleet(Topology::Pooled, 8, fleet, &link);
+        assert_eq!(pool.len(), 6);
+        assert_eq!(tier.hermit, (0..6).collect::<Vec<_>>());
+        assert!(pool[0].name().starts_with("gpu/pool"));
+        assert!(pool[4].name().starts_with("rdu/pool"));
+        // pooled GPUs pay the link like any pool member
+        let p = profiles::hermit();
+        assert!(pool[0].link_overhead_s(&p, 4) > 0.0);
+
+        let (hybrid, tier) = build_fleet(Topology::Hybrid, 3, fleet, &link);
+        assert_eq!(hybrid.len(), 3 + 6);
+        assert_eq!(tier.mir, vec![0, 1, 2], "MIR stays on the local GPUs");
+        assert_eq!(tier.hermit, (3..9).collect::<Vec<_>>());
+
+        // the fabric spec tracks the pool size
+        let spec = build_fabric_spec(Topology::Pooled, 8, fleet, 2.0).unwrap();
+        assert_eq!(spec.topology.accels(), 6);
+        spec.validate(6);
+        let spec = build_fabric_spec(Topology::Hybrid, 3, fleet, 2.0).unwrap();
+        assert_eq!(spec.topology.accels(), 3 + 6);
+        spec.validate(9);
+        assert!(build_fabric_spec(Topology::Local, 8, fleet, 2.0).is_none());
+    }
+
+    #[test]
+    fn mixed_zero_gpu_pair_matches_default_pool_shape() {
+        // Mixed{0g2r} is exactly the legacy default pool: same names,
+        // same tile shapes, same link — the fleet axis is anchored.
+        let link = Link::infiniband_cx6();
+        let (a, _) = build_fleet(Topology::Pooled, 4, Fleet::DefaultPool, &link);
+        let (b, _) = build_fleet(Topology::Pooled, 4, Fleet::Mixed { gpus: 0, rdus: 2 }, &link);
+        assert_eq!(a.len(), b.len());
+        let p = profiles::hermit();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name(), y.name());
+            assert_eq!(x.execute_s(&p, 64), y.execute_s(&p, 64));
+            assert_eq!(x.link_overhead_s(&p, 64), y.link_overhead_s(&p, 64));
+        }
+    }
+}

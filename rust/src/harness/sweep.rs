@@ -1,0 +1,974 @@
+//! The one sweep engine: expand a [`Grid`] into cells, run each cell
+//! on its engine, collect results.
+//!
+//! Every campaign mode — analytic, event, coupled — used to carry its
+//! own nested sweep loops and cell runner; this module holds the
+//! single copy ([`run_grid`] / [`run_cell`]) and re-derives the three
+//! legacy entry points ([`run_campaign`], [`run_event_campaign`],
+//! [`run_cog_campaign`] and their per-cell helpers) as thin wrappers,
+//! so the committed goldens and every existing caller keep working
+//! byte-for-byte.
+
+use crate::cluster::{BackendReport, Cluster, Policy};
+use crate::eventsim::{
+    ArrivalProcess, Batching, CogSim, CogSimConfig, CogSummary, EventSim, EventSimConfig,
+    EventSummary,
+};
+use crate::netsim::Link;
+use crate::util::stats;
+use crate::workload::{HydraWorkload, MirWorkload};
+
+use super::scenario::{
+    build_fabric_spec, build_fleet, profile_for, CampaignConfig, CogCampaignConfig,
+    EventCampaignConfig, Fleet, Grid, Kind, Knobs, Scenario, Topology,
+};
+
+// ------------------------------------------------------ cell results
+
+/// Latency/throughput summary for one workload within an analytic
+/// cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSummary {
+    pub requests: u64,
+    pub samples: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_link_overhead_s: f64,
+    /// Samples over the scenario makespan.
+    pub samples_per_s: f64,
+}
+
+impl WorkloadSummary {
+    fn from_run(latencies: &[f64], link_overheads: &[f64], samples: u64, makespan_s: f64) -> Self {
+        WorkloadSummary {
+            requests: latencies.len() as u64,
+            samples,
+            mean_s: stats::mean(latencies),
+            p50_s: stats::percentile(latencies, 50.0),
+            p95_s: stats::percentile(latencies, 95.0),
+            p99_s: stats::percentile(latencies, 99.0),
+            mean_link_overhead_s: stats::mean(link_overheads),
+            samples_per_s: if makespan_s > 0.0 { samples as f64 / makespan_s } else { 0.0 },
+        }
+    }
+}
+
+/// The analytic kind's per-cell payload.
+#[derive(Debug, Clone)]
+pub struct AnalyticSummary {
+    pub hydra: WorkloadSummary,
+    pub mir: WorkloadSummary,
+    pub makespan_s: f64,
+    pub backends: Vec<BackendReport>,
+}
+
+/// One cell's result payload, by workload kind.
+#[derive(Debug, Clone)]
+pub enum CellSummary {
+    Analytic(AnalyticSummary),
+    Event(EventSummary),
+    Cog(CogSummary),
+}
+
+/// One executed grid cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub scenario: Scenario,
+    pub summary: CellSummary,
+}
+
+impl CellResult {
+    /// The event summary, if this cell ran the event kind.
+    pub fn event(&self) -> Option<&EventSummary> {
+        match &self.summary {
+            CellSummary::Event(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The cog summary, if this cell ran the coupled kind.
+    pub fn cog(&self) -> Option<&CogSummary> {
+        match &self.summary {
+            CellSummary::Cog(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The analytic summary, if this cell ran the analytic kind.
+    pub fn analytic(&self) -> Option<&AnalyticSummary> {
+        match &self.summary {
+            CellSummary::Analytic(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// An executed grid: the configuration plus every cell's result, in
+/// expansion order.
+#[derive(Debug, Clone)]
+pub struct GridResult {
+    pub grid: Grid,
+    pub cells: Vec<CellResult>,
+}
+
+impl GridResult {
+    /// First cell matching a predicate (cells are in expansion order).
+    pub fn find(&self, pred: impl Fn(&Scenario) -> bool) -> Option<&CellResult> {
+        self.cells.iter().find(|c| pred(&c.scenario))
+    }
+}
+
+// ------------------------------------------------------ cell runners
+
+/// Worst-case closed-form fabric derate for the analytic mode: every
+/// remote request is assumed to find the oversubscribed uplink fully
+/// contended, i.e. the pool link's effective bandwidth divides by the
+/// oversubscription factor.  (The event/cog kinds model the real
+/// time-varying sharing through [`crate::fabric`].)
+fn derated_link(link: &Link, oversub: f64) -> Link {
+    assert!(oversub >= 1.0 && oversub.is_finite());
+    let mut l = link.clone();
+    if l.eff_bandwidth.is_finite() {
+        l.eff_bandwidth = l.eff_bandwidth / oversub;
+    }
+    l
+}
+
+/// Run one analytic cell body with an explicit pool link (the link
+/// ablation behind the Fig-15/16 anchor test).
+fn run_analytic(
+    topology: Topology,
+    fleet: Fleet,
+    policy: Policy,
+    ranks: usize,
+    knobs: &Knobs,
+    pool_link: &Link,
+) -> AnalyticSummary {
+    let (backends, tier) = build_fleet(topology, ranks, fleet, pool_link);
+    let mut cluster = Cluster::new(backends, policy);
+
+    let hydra = HydraWorkload {
+        ranks,
+        zones_per_rank: knobs.zones_per_rank,
+        materials: knobs.materials,
+        inferences_per_zone: knobs.samples_per_request,
+        seed: knobs.seed,
+    };
+    let mir = MirWorkload {
+        ranks,
+        base_zones: knobs.mir_base_zones,
+        variation: 0.4,
+        seed: knobs.seed ^ 0x5EED,
+    };
+    let hermit_profile = profile_for("hermit");
+    let mir_profile = profile_for("mir");
+
+    let mut hydra_lat = Vec::new();
+    let mut hydra_link = Vec::new();
+    let mut hydra_samples = 0u64;
+    let mut mir_lat = Vec::new();
+    let mut mir_link = Vec::new();
+    let mut mir_samples = 0u64;
+
+    for t in 0..knobs.timesteps {
+        cluster.advance_to(t as f64 * knobs.step_period_s);
+        for req in hydra.timestep(t) {
+            let routed =
+                cluster.submit_among(&tier.hermit, &req.model, &hermit_profile, req.samples);
+            hydra_lat.push(routed.latency_s);
+            hydra_link.push(routed.link_overhead_s);
+            hydra_samples += req.samples as u64;
+        }
+        for req in mir.timestep(t) {
+            let routed = cluster.submit_among(&tier.mir, &req.model, &mir_profile, req.samples);
+            mir_lat.push(routed.latency_s);
+            mir_link.push(routed.link_overhead_s);
+            mir_samples += req.samples as u64;
+        }
+    }
+
+    let makespan_s = cluster.makespan_s();
+    AnalyticSummary {
+        hydra: WorkloadSummary::from_run(&hydra_lat, &hydra_link, hydra_samples, makespan_s),
+        mir: WorkloadSummary::from_run(&mir_lat, &mir_link, mir_samples, makespan_s),
+        makespan_s,
+        backends: cluster.report(),
+    }
+}
+
+/// Run one grid cell on its kind's engine.
+pub fn run_cell(sc: &Scenario, knobs: &Knobs) -> CellResult {
+    let summary = match sc.kind {
+        Kind::Analytic => {
+            let link = derated_link(&Link::infiniband_cx6(), sc.oversub);
+            CellSummary::Analytic(run_analytic(
+                sc.topology, sc.fleet, sc.policy, sc.ranks, knobs, &link,
+            ))
+        }
+        Kind::Event => {
+            let (backends, tier) =
+                build_fleet(sc.topology, sc.ranks, sc.fleet, &Link::infiniband_cx6());
+            let sim_cfg = EventSimConfig {
+                ranks: sc.ranks,
+                materials: knobs.materials,
+                samples_per_request: knobs.samples_per_request,
+                requests_per_burst: knobs.requests_per_burst,
+                mir_every: knobs.mir_every,
+                mir_samples: knobs.mir_samples,
+                arrival: sc.arrival,
+                batching: if sc.window_us > 0.0 {
+                    Batching::Window {
+                        window_s: sc.window_us * 1e-6,
+                        max_batch: knobs.max_batch,
+                    }
+                } else {
+                    Batching::Off
+                },
+                horizon_s: knobs.horizon_s,
+                seed: knobs.seed,
+            };
+            let mut sim = match build_fabric_spec(sc.topology, sc.ranks, sc.fleet, sc.oversub) {
+                Some(spec) => {
+                    EventSim::with_fabric(backends, sc.policy, sim_cfg, tier.hermit, tier.mir, spec)
+                }
+                None => EventSim::with_tiers(backends, sc.policy, sim_cfg, tier.hermit, tier.mir),
+            };
+            sim.run_to_completion();
+            CellSummary::Event(sim.summary())
+        }
+        Kind::Cog => {
+            let (backends, tier) =
+                build_fleet(sc.topology, sc.ranks, sc.fleet, &Link::infiniband_cx6());
+            let sim_cfg = CogSimConfig {
+                ranks: sc.ranks,
+                timesteps: knobs.timesteps,
+                compute_s: knobs.compute_s,
+                compute_jitter_s: 0.0,
+                requests_per_step: knobs.requests_per_step,
+                models: sc.models,
+                samples_per_request: knobs.samples_per_request,
+                mir_every: knobs.mir_every,
+                mir_samples: knobs.mir_samples,
+                overlap: sc.overlap,
+                swap_s: sc.swap_s,
+                residency_slots: knobs.residency_slots,
+                batching: if sc.window_us > 0.0 {
+                    Batching::Window {
+                        window_s: sc.window_us * 1e-6,
+                        max_batch: knobs.max_batch,
+                    }
+                } else {
+                    Batching::Off
+                },
+                seed: knobs.seed,
+            };
+            let mut sim = match build_fabric_spec(sc.topology, sc.ranks, sc.fleet, sc.oversub) {
+                Some(spec) => {
+                    CogSim::with_fabric(backends, sc.policy, sim_cfg, tier.hermit, tier.mir, spec)
+                }
+                None => CogSim::with_tiers(backends, sc.policy, sim_cfg, tier.hermit, tier.mir),
+            };
+            sim.run_to_completion();
+            CellSummary::Cog(sim.summary())
+        }
+    };
+    CellResult { scenario: *sc, summary }
+}
+
+/// Run every cell of a grid, in expansion order.
+pub fn run_grid(grid: &Grid) -> GridResult {
+    let cells = grid.cells().iter().map(|sc| run_cell(sc, &grid.knobs)).collect();
+    GridResult { grid: grid.clone(), cells }
+}
+
+// ------------------------------------------------ legacy: analytic
+
+/// One (topology, policy, oversubscription) cell of the analytic
+/// sweep.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub topology: Topology,
+    pub policy: Policy,
+    /// Fabric oversubscription of this cell (1.0 = non-blocking).
+    pub oversub: f64,
+    pub hydra: WorkloadSummary,
+    pub mir: WorkloadSummary,
+    pub makespan_s: f64,
+    pub backends: Vec<BackendReport>,
+}
+
+/// The full analytic sweep.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub config: CampaignConfig,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl CampaignResult {
+    /// Look up the baseline cell of a (topology, policy) pair: the
+    /// non-blocking 1:1 cell when it was swept, otherwise the first
+    /// swept oversubscription (so the classic lookup stays total
+    /// over any `fabric_oversubs` configuration).
+    pub fn scenario(&self, topology: Topology, policy: Policy) -> &ScenarioResult {
+        self.scenario_at(topology, policy, 1.0)
+            .or_else(|| {
+                self.scenarios
+                    .iter()
+                    .find(|s| s.topology == topology && s.policy == policy)
+            })
+            .expect("campaign ran every (topology, policy) cell")
+    }
+
+    /// Look up one cell at an explicit oversubscription factor.
+    pub fn scenario_at(
+        &self,
+        topology: Topology,
+        policy: Policy,
+        oversub: f64,
+    ) -> Option<&ScenarioResult> {
+        self.scenarios
+            .iter()
+            .find(|s| s.topology == topology && s.policy == policy && s.oversub == oversub)
+    }
+}
+
+fn analytic_to_scenario_result(sc: &Scenario, summary: AnalyticSummary) -> ScenarioResult {
+    ScenarioResult {
+        topology: sc.topology,
+        policy: sc.policy,
+        oversub: sc.oversub,
+        hydra: summary.hydra,
+        mir: summary.mir,
+        makespan_s: summary.makespan_s,
+        backends: summary.backends,
+    }
+}
+
+/// Run one (topology, policy) scenario at 1:1 oversubscription.
+pub fn run_scenario(topology: Topology, policy: Policy, cfg: &CampaignConfig) -> ScenarioResult {
+    run_scenario_with_link(topology, policy, cfg, &Link::infiniband_cx6())
+}
+
+/// Run one analytic cell at an explicit oversubscription factor.
+pub fn run_scenario_at(
+    topology: Topology,
+    policy: Policy,
+    oversub: f64,
+    cfg: &CampaignConfig,
+) -> ScenarioResult {
+    let link = derated_link(&Link::infiniband_cx6(), oversub);
+    let mut s = run_scenario_with_link(topology, policy, cfg, &link);
+    s.oversub = oversub;
+    s
+}
+
+/// As [`run_scenario`], with an explicit pool link — the link
+/// ablation behind the Fig-15/16 anchor test (swap the Infiniband
+/// model for [`Link::local`] to measure the pure remote overhead).
+pub fn run_scenario_with_link(
+    topology: Topology,
+    policy: Policy,
+    cfg: &CampaignConfig,
+    pool_link: &Link,
+) -> ScenarioResult {
+    let knobs = cfg.grid().knobs;
+    let summary =
+        run_analytic(topology, Fleet::DefaultPool, policy, cfg.ranks, &knobs, pool_link);
+    ScenarioResult {
+        topology,
+        policy,
+        oversub: 1.0,
+        hydra: summary.hydra,
+        mir: summary.mir,
+        makespan_s: summary.makespan_s,
+        backends: summary.backends,
+    }
+}
+
+/// Run the full analytic sweep: every topology under every routing
+/// policy, across the fabric oversubscription axis (all-local
+/// topologies run the single 1:1 cell — no fabric to derate).
+pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
+    let grid = cfg.grid();
+    let scenarios = grid
+        .cells()
+        .iter()
+        .map(|sc| match run_cell(sc, &grid.knobs).summary {
+            CellSummary::Analytic(summary) => analytic_to_scenario_result(sc, summary),
+            _ => unreachable!("analytic grid produced a non-analytic cell"),
+        })
+        .collect();
+    CampaignResult { config: cfg.clone(), scenarios }
+}
+
+// --------------------------------------------------- legacy: event
+
+/// One (topology, policy, arrival, ranks, window, oversub) cell.
+#[derive(Debug, Clone)]
+pub struct EventScenarioResult {
+    pub topology: Topology,
+    pub policy: Policy,
+    pub arrival: ArrivalProcess,
+    pub ranks: usize,
+    pub window_us: f64,
+    /// Fabric oversubscription of this cell (1.0 = non-blocking).
+    pub oversub: f64,
+    pub summary: EventSummary,
+}
+
+/// The full event-mode sweep.
+#[derive(Debug, Clone)]
+pub struct EventCampaignResult {
+    pub config: EventCampaignConfig,
+    pub scenarios: Vec<EventScenarioResult>,
+}
+
+impl EventCampaignResult {
+    /// Look up one cell (`arrival_key` as in [`ArrivalProcess::key`]).
+    pub fn scenario(
+        &self,
+        topology: Topology,
+        policy: Policy,
+        arrival_key: &str,
+        ranks: usize,
+        window_us: f64,
+        oversub: f64,
+    ) -> Option<&EventScenarioResult> {
+        self.scenarios.iter().find(|s| {
+            s.topology == topology
+                && s.policy == policy
+                && s.arrival.key() == arrival_key
+                && s.ranks == ranks
+                && s.window_us == window_us
+                && s.oversub == oversub
+        })
+    }
+}
+
+fn event_cell_scenario(
+    topology: Topology,
+    policy: Policy,
+    arrival: ArrivalProcess,
+    ranks: usize,
+    window_us: f64,
+    oversub: f64,
+    cfg: &EventCampaignConfig,
+) -> Scenario {
+    Scenario {
+        kind: Kind::Event,
+        topology,
+        fleet: Fleet::DefaultPool,
+        policy,
+        ranks,
+        arrival,
+        window_us,
+        models: cfg.materials,
+        swap_s: 0.0,
+        overlap: 0.0,
+        oversub,
+    }
+}
+
+fn event_to_scenario_result(sc: &Scenario, summary: EventSummary) -> EventScenarioResult {
+    EventScenarioResult {
+        topology: sc.topology,
+        policy: sc.policy,
+        arrival: sc.arrival,
+        ranks: sc.ranks,
+        window_us: sc.window_us,
+        oversub: sc.oversub,
+        summary,
+    }
+}
+
+/// Run one event-mode cell.  Pooled/hybrid topologies route remote
+/// dispatches through the flow-level fabric at `oversub`; the
+/// all-local topology has no shared links.
+pub fn run_event_scenario(
+    topology: Topology,
+    policy: Policy,
+    arrival: ArrivalProcess,
+    ranks: usize,
+    window_us: f64,
+    oversub: f64,
+    cfg: &EventCampaignConfig,
+) -> EventScenarioResult {
+    let sc = event_cell_scenario(topology, policy, arrival, ranks, window_us, oversub, cfg);
+    match run_cell(&sc, &cfg.grid().knobs).summary {
+        CellSummary::Event(summary) => event_to_scenario_result(&sc, summary),
+        _ => unreachable!("event cell produced a non-event summary"),
+    }
+}
+
+/// Run the full event-mode sweep.
+pub fn run_event_campaign(cfg: &EventCampaignConfig) -> EventCampaignResult {
+    let grid = cfg.grid();
+    let scenarios = grid
+        .cells()
+        .iter()
+        .map(|sc| match run_cell(sc, &grid.knobs).summary {
+            CellSummary::Event(summary) => event_to_scenario_result(sc, summary),
+            _ => unreachable!("event grid produced a non-event cell"),
+        })
+        .collect();
+    EventCampaignResult { config: cfg.clone(), scenarios }
+}
+
+// ----------------------------------------------------- legacy: cog
+
+/// One (topology, policy, ranks, models, swap, overlap, oversub) cell.
+#[derive(Debug, Clone)]
+pub struct CogScenarioResult {
+    pub topology: Topology,
+    pub policy: Policy,
+    pub ranks: usize,
+    pub models: usize,
+    pub swap_s: f64,
+    pub overlap: f64,
+    /// Fabric oversubscription of this cell (1.0 = non-blocking).
+    pub oversub: f64,
+    pub summary: CogSummary,
+}
+
+/// The full coupled sweep.
+#[derive(Debug, Clone)]
+pub struct CogCampaignResult {
+    pub config: CogCampaignConfig,
+    pub scenarios: Vec<CogScenarioResult>,
+}
+
+impl CogCampaignResult {
+    /// Look up one cell.
+    #[allow(clippy::too_many_arguments)]
+    pub fn scenario(
+        &self,
+        topology: Topology,
+        policy: Policy,
+        ranks: usize,
+        models: usize,
+        swap_s: f64,
+        overlap: f64,
+        oversub: f64,
+    ) -> Option<&CogScenarioResult> {
+        self.scenarios.iter().find(|s| {
+            s.topology == topology
+                && s.policy == policy
+                && s.ranks == ranks
+                && s.models == models
+                && s.swap_s == swap_s
+                && s.overlap == overlap
+                && s.oversub == oversub
+        })
+    }
+}
+
+fn cog_to_scenario_result(sc: &Scenario, summary: CogSummary) -> CogScenarioResult {
+    CogScenarioResult {
+        topology: sc.topology,
+        policy: sc.policy,
+        ranks: sc.ranks,
+        models: sc.models,
+        swap_s: sc.swap_s,
+        overlap: sc.overlap,
+        oversub: sc.oversub,
+        summary,
+    }
+}
+
+/// Run one coupled cell.  Pooled/hybrid topologies route remote
+/// dispatches and residency swaps through the flow-level fabric at
+/// `oversub`; the all-local topology has no shared links.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cog_scenario(
+    topology: Topology,
+    policy: Policy,
+    ranks: usize,
+    models: usize,
+    swap_s: f64,
+    overlap: f64,
+    oversub: f64,
+    cfg: &CogCampaignConfig,
+) -> CogScenarioResult {
+    let sc = Scenario {
+        kind: Kind::Cog,
+        topology,
+        fleet: Fleet::DefaultPool,
+        policy,
+        ranks,
+        arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+        window_us: cfg.window_us,
+        models,
+        swap_s,
+        overlap,
+        oversub,
+    };
+    match run_cell(&sc, &cfg.grid().knobs).summary {
+        CellSummary::Cog(summary) => cog_to_scenario_result(&sc, summary),
+        _ => unreachable!("cog cell produced a non-cog summary"),
+    }
+}
+
+/// Run the full coupled sweep.
+pub fn run_cog_campaign(cfg: &CogCampaignConfig) -> CogCampaignResult {
+    let grid = cfg.grid();
+    let scenarios = grid
+        .cells()
+        .iter()
+        .map(|sc| match run_cell(sc, &grid.knobs).summary {
+            CellSummary::Cog(summary) => cog_to_scenario_result(sc, summary),
+            _ => unreachable!("cog grid produced a non-cog cell"),
+        })
+        .collect();
+    CogCampaignResult { config: cfg.clone(), scenarios }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scenario::{oversubs_for, Axes};
+    use super::*;
+
+    fn quick_cfg() -> CampaignConfig {
+        CampaignConfig { timesteps: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn campaign_covers_every_cell() {
+        let result = run_campaign(&quick_cfg());
+        assert_eq!(result.scenarios.len(), Topology::ALL.len() * Policy::ALL.len());
+        for topo in Topology::ALL {
+            for policy in Policy::ALL {
+                let s = result.scenario(topo, policy);
+                assert!(s.hydra.requests > 0, "{topo:?}/{policy:?}");
+                assert!(s.mir.requests > 0, "{topo:?}/{policy:?}");
+                assert!(s.makespan_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scenarios_conserve_samples() {
+        // every scenario of a sweep sees the same workload; each must
+        // route exactly the submitted sample volume
+        let result = run_campaign(&quick_cfg());
+        let expect_hydra = result.scenarios[0].hydra.samples;
+        let expect_mir = result.scenarios[0].mir.samples;
+        assert!(expect_hydra > 0 && expect_mir > 0);
+        for s in &result.scenarios {
+            assert_eq!(s.hydra.samples, expect_hydra, "{:?}/{:?}", s.topology, s.policy);
+            assert_eq!(s.mir.samples, expect_mir);
+            let routed: u64 = s.backends.iter().map(|b| b.samples).sum();
+            assert_eq!(routed, expect_hydra + expect_mir);
+        }
+    }
+
+    #[test]
+    fn local_topology_has_zero_link_overhead() {
+        let s = run_scenario(Topology::Local, Policy::LatencyAware, &quick_cfg());
+        assert_eq!(s.hydra.mean_link_overhead_s, 0.0);
+        assert_eq!(s.mir.mean_link_overhead_s, 0.0);
+    }
+
+    #[test]
+    fn pooled_topology_pays_the_link() {
+        let s = run_scenario(Topology::Pooled, Policy::LatencyAware, &quick_cfg());
+        assert!(s.hydra.mean_link_overhead_s > 0.0);
+        // MIR payloads (2×2304 els/sample) dwarf Hermit's 42+30
+        assert!(s.mir.mean_link_overhead_s > s.hydra.mean_link_overhead_s);
+    }
+
+    #[test]
+    fn hybrid_keeps_mir_local() {
+        let s = run_scenario(Topology::Hybrid, Policy::LatencyAware, &quick_cfg());
+        assert_eq!(s.mir.mean_link_overhead_s, 0.0, "hot model must stay local");
+        assert!(s.hydra.mean_link_overhead_s > 0.0, "long tail rides the link");
+        // GPU backends saw only MIR traffic, the pool only Hermit
+        let gpu_requests: u64 = s
+            .backends
+            .iter()
+            .filter(|b| b.name.starts_with("gpu/"))
+            .map(|b| b.requests)
+            .sum();
+        assert_eq!(gpu_requests, s.mir.requests);
+    }
+
+    #[test]
+    fn json_is_deterministic() {
+        let cfg = quick_cfg();
+        let a = crate::util::json::write(&run_campaign(&cfg).to_json());
+        let b = crate::util::json::write(&run_campaign(&cfg).to_json());
+        assert_eq!(a, b);
+        // and parses back
+        assert!(crate::util::json::parse(&a).is_ok());
+        assert!(a.contains("\"topology\":\"hybrid\""), "{}", &a[..200.min(a.len())]);
+    }
+
+    // ------------------------------------------------- event mode
+
+    fn quick_event_cfg() -> EventCampaignConfig {
+        EventCampaignConfig {
+            rank_counts: vec![4],
+            horizon_s: 0.05,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn event_campaign_covers_every_cell() {
+        let cfg = quick_event_cfg();
+        let result = run_event_campaign(&cfg);
+        let cells: usize = cfg
+            .topologies
+            .iter()
+            .map(|&t| {
+                cfg.policies.len()
+                    * cfg.rank_counts.len()
+                    * cfg.arrivals.len()
+                    * cfg.windows_us.len()
+                    * oversubs_for(t, &cfg.fabric_oversubs).len()
+            })
+            .sum();
+        assert_eq!(result.scenarios.len(), cells);
+        for s in &result.scenarios {
+            assert!(s.summary.requests > 0, "{:?}/{:?}", s.topology, s.policy);
+            assert!(s.summary.latency.p50_s > 0.0);
+            assert!(s.summary.latency.p999_s >= s.summary.latency.p99_s);
+        }
+        // lookup works for an arbitrary cell; the local topology
+        // collapses the oversubscription axis to the single 1:1 cell
+        assert!(result
+            .scenario(Topology::Pooled, Policy::LatencyAware, "poisson", 4, 200.0, 4.0)
+            .is_some());
+        assert!(result
+            .scenario(Topology::Local, Policy::LatencyAware, "poisson", 4, 200.0, 4.0)
+            .is_none());
+        assert!(result
+            .scenario(Topology::Local, Policy::LatencyAware, "poisson", 4, 200.0, 1.0)
+            .is_some());
+        assert!(result
+            .scenario(Topology::Hybrid, Policy::LatencyAware, "poisson", 4, 200.0, 1.0)
+            .is_none());
+    }
+
+    #[test]
+    fn event_workload_identical_across_cells_of_one_arrival() {
+        // Open-loop arrivals do not depend on service times, so every
+        // (topology, policy, window) cell of a given arrival process
+        // and rank count must see the same submitted request volume.
+        let result = run_event_campaign(&quick_event_cfg());
+        for key in ["synchronized", "poisson"] {
+            let volumes: Vec<u64> = result
+                .scenarios
+                .iter()
+                .filter(|s| s.arrival.key() == key && s.ranks == 4)
+                .map(|s| s.summary.requests)
+                .collect();
+            assert!(!volumes.is_empty());
+            assert!(
+                volumes.iter().all(|&v| v == volumes[0]),
+                "{key}: {volumes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn event_json_is_deterministic_and_parses() {
+        let cfg = quick_event_cfg();
+        let a = crate::util::json::write(&run_event_campaign(&cfg).to_json());
+        let b = crate::util::json::write(&run_event_campaign(&cfg).to_json());
+        assert_eq!(a, b);
+        let doc = crate::util::json::parse(&a).unwrap();
+        let scenarios = doc.get("scenarios").unwrap().as_array().unwrap();
+        for s in scenarios {
+            for field in ["topology", "policy", "arrival", "ranks", "window_us", "summary"] {
+                assert!(s.get(field).is_some(), "missing {field}");
+            }
+            let sum = s.get("summary").unwrap();
+            for field in ["p50_us", "p99_us", "p999_us", "histogram", "slowdown_max"] {
+                assert!(sum.get(field).is_some(), "missing summary.{field}");
+            }
+        }
+    }
+
+    #[test]
+    fn event_tables_cover_the_sweep() {
+        let cfg = quick_event_cfg();
+        let result = run_event_campaign(&cfg);
+        let tables = result.tables();
+        assert_eq!(tables.len(), cfg.topologies.len());
+        for (table, &topo) in tables.iter().zip(&cfg.topologies) {
+            assert_eq!(
+                table.x.len(),
+                cfg.policies.len()
+                    * cfg.arrivals.len()
+                    * cfg.windows_us.len()
+                    * oversubs_for(topo, &cfg.fabric_oversubs).len()
+            );
+            assert!(table.series("p999_us").is_some());
+            assert!(table.series("contention_us").is_some());
+        }
+    }
+
+    // ------------------------------------------------ cogsim mode
+
+    fn quick_cog_cfg() -> CogCampaignConfig {
+        CogCampaignConfig {
+            policies: vec![Policy::RoundRobin, Policy::ModelAffinity],
+            rank_counts: vec![4],
+            fabric_oversubs: vec![1.0, 4.0],
+            timesteps: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cog_campaign_covers_every_cell() {
+        let cfg = quick_cog_cfg();
+        let result = run_cog_campaign(&cfg);
+        let cells: usize = cfg
+            .topologies
+            .iter()
+            .map(|&t| {
+                cfg.policies.len()
+                    * cfg.rank_counts.len()
+                    * cfg.models_per_rank.len()
+                    * cfg.swap_costs_s.len()
+                    * cfg.overlaps.len()
+                    * oversubs_for(t, &cfg.fabric_oversubs).len()
+            })
+            .sum();
+        assert_eq!(result.scenarios.len(), cells);
+        for s in &result.scenarios {
+            assert!(s.summary.time_to_solution_s > 0.0, "{:?}/{:?}", s.topology, s.policy);
+            assert_eq!(s.summary.timesteps as usize, cfg.timesteps);
+            assert_eq!(
+                s.summary.requests,
+                (s.ranks * cfg.timesteps * cfg.requests_per_step) as u64
+            );
+            assert_eq!(s.summary.steps.len(), cfg.timesteps);
+        }
+        assert!(result
+            .scenario(Topology::Pooled, Policy::ModelAffinity, 4, 8, 2e-3, 0.0, 4.0)
+            .is_some());
+        assert!(result
+            .scenario(Topology::Local, Policy::ModelAffinity, 4, 8, 2e-3, 0.0, 4.0)
+            .is_none());
+        assert!(result
+            .scenario(Topology::Hybrid, Policy::ModelAffinity, 4, 8, 2e-3, 0.0, 1.0)
+            .is_none());
+    }
+
+    #[test]
+    fn cog_json_is_deterministic_and_parses() {
+        let cfg = quick_cog_cfg();
+        let a = crate::util::json::write(&run_cog_campaign(&cfg).to_json());
+        let b = crate::util::json::write(&run_cog_campaign(&cfg).to_json());
+        assert_eq!(a, b);
+        let doc = crate::util::json::parse(&a).unwrap();
+        let scenarios = doc.get("scenarios").unwrap().as_array().unwrap();
+        for s in scenarios {
+            for field in ["topology", "policy", "ranks", "models", "swap_us", "overlap"] {
+                assert!(s.get(field).is_some(), "missing {field}");
+            }
+            let sum = s.get("summary").unwrap();
+            for field in [
+                "time_to_solution_us",
+                "total_compute_us",
+                "total_queue_us",
+                "total_swap_us",
+                "total_network_us",
+                "total_service_us",
+                "straggler_counts",
+                "steps",
+            ] {
+                assert!(sum.get(field).is_some(), "missing summary.{field}");
+            }
+            let steps = sum.get("steps").unwrap().as_array().unwrap();
+            assert_eq!(steps.len(), cfg.timesteps);
+        }
+    }
+
+    #[test]
+    fn cog_tables_cover_the_sweep() {
+        let cfg = quick_cog_cfg();
+        let result = run_cog_campaign(&cfg);
+        let tables = result.tables();
+        assert_eq!(tables.len(), cfg.topologies.len());
+        for (table, &topo) in tables.iter().zip(&cfg.topologies) {
+            assert_eq!(
+                table.x.len(),
+                cfg.policies.len()
+                    * cfg.rank_counts.len()
+                    * cfg.models_per_rank.len()
+                    * cfg.swap_costs_s.len()
+                    * cfg.overlaps.len()
+                    * oversubs_for(topo, &cfg.fabric_oversubs).len()
+            );
+            assert!(table.series("tts_ms").is_some());
+            assert!(table.series("swap_ms").is_some());
+            assert!(table.series("contention_ms").is_some());
+        }
+    }
+
+    #[test]
+    fn cog_local_topology_pays_no_network_on_the_critical_path() {
+        let cfg = quick_cog_cfg();
+        let s =
+            run_cog_scenario(Topology::Local, Policy::LatencyAware, 4, 8, 0.0, 0.0, 1.0, &cfg);
+        assert_eq!(s.summary.total_network_s, 0.0);
+        assert_eq!(s.summary.total_contention_s, 0.0);
+        let p =
+            run_cog_scenario(Topology::Pooled, Policy::LatencyAware, 4, 8, 0.0, 0.0, 1.0, &cfg);
+        assert!(p.summary.total_network_s > 0.0, "pool rides the link");
+    }
+
+    #[test]
+    fn cog_fabric_oversubscription_never_speeds_the_pool_up() {
+        // The knob's contract at the campaign level: pooled TTS is
+        // monotone non-decreasing in oversubscription, and the
+        // all-local topology is untouched by it.
+        let cfg = quick_cog_cfg();
+        let tts = |oversub: f64| {
+            run_cog_scenario(Topology::Pooled, Policy::RoundRobin, 4, 8, 0.0, 0.0, oversub, &cfg)
+                .summary
+                .time_to_solution_s
+        };
+        let mut last = 0.0;
+        for oversub in [1.0, 2.0, 4.0, 8.0] {
+            let t = tts(oversub);
+            assert!(t >= last - 1e-12, "oversub {oversub}: {t} < {last}");
+            last = t;
+        }
+    }
+
+    // ------------------------------------------------ unified grid
+
+    #[test]
+    fn one_grid_runs_every_kind() {
+        // One declarative config, three engines: the mixed fleet
+        // rides all of them without per-mode wiring.
+        let grid = Grid {
+            axes: Axes {
+                kinds: Kind::ALL.to_vec(),
+                topologies: vec![Topology::Pooled],
+                fleets: vec![Fleet::Mixed { gpus: 2, rdus: 1 }],
+                policies: vec![Policy::LatencyAware],
+                rank_counts: vec![4],
+                fabric_oversubs: vec![1.0],
+                ..Axes::default()
+            },
+            knobs: Knobs { timesteps: 3, horizon_s: 0.05, ..Knobs::default() },
+        };
+        let result = run_grid(&grid);
+        assert_eq!(result.cells.len(), 3);
+        let analytic = result.cells[0].analytic().expect("kind order");
+        assert!(analytic.hydra.requests > 0);
+        assert_eq!(analytic.backends.len(), 3, "2 GPUs + 1 RDU in the pool");
+        let event = result.cells[1].event().expect("kind order");
+        assert!(event.requests > 0 && event.mean_link_overhead_s > 0.0);
+        let cog = result.cells[2].cog().expect("kind order");
+        assert!(cog.time_to_solution_s > 0.0);
+        assert!(cog.total_network_s > 0.0, "mixed pool is remote");
+    }
+}

@@ -43,15 +43,22 @@
 //!   `throughput` / `queue_s`, composed into a [`cluster::Cluster`]
 //!   with pluggable routing policies (round-robin, least-outstanding,
 //!   model-affinity, latency-aware).
+//! * [`simcore`] — the engine-agnostic request pipeline shared by
+//!   every discrete-event engine: policy routing via
+//!   [`cluster::policy`], the router-level dynamic-batching stage
+//!   (reusing [`coordinator::batcher`]), per-backend LRU model
+//!   residency with the weights-ready gate, the legacy fixed-charge
+//!   dispatch, and the multi-phase fabric path with its per-device
+//!   busy clock — one copy, driven by both engines through a narrow
+//!   effect-based surface ([`simcore::Pipeline`]).
 //! * [`eventsim`] — deterministic discrete-event simulator: binary-heap
 //!   event queue (class-tiered same-instant ordering), multi-rank
 //!   arrival processes (timestep-synchronised bursts, open-loop
-//!   Poisson, closed-loop think time), a router-level dynamic-batching
-//!   stage reusing [`coordinator::batcher`], FIFO service through
-//!   [`cluster::Policy`] routing, and full latency distributions
-//!   (p50/p99/p99.9, histograms, per-rank slowdown).  Degrades
-//!   provably to the analytic [`cluster::Cluster`] in the
-//!   contention-free limit (`rust/tests/eventsim_vs_analytic.rs`).
+//!   Poisson, closed-loop think time), and full latency distributions
+//!   (p50/p99/p99.9, histograms, per-rank slowdown) around the shared
+//!   [`simcore::Pipeline`].  Degrades provably to the analytic
+//!   [`cluster::Cluster`] in the contention-free limit
+//!   (`rust/tests/eventsim_vs_analytic.rs`).
 //! * [`eventsim::cogsim`] — the **coupled** CogSim application model:
 //!   N ranks × T bulk-synchronous timesteps, each rank stalling on
 //!   its in-the-loop inference burst (K per-material requests over M
@@ -65,8 +72,11 @@
 //! * [`metrics`] — the paper's measurement methodology (mean over
 //!   mini-batches, 5 replicates, 95 % confidence intervals).
 //! * [`harness`] — one regenerator per paper figure (4–20), the
-//!   scaling frontier, and the topology×policy scenario campaign
-//!   ([`harness::campaign`]).
+//!   scaling frontier, and the declarative scenario grid
+//!   ([`harness::scenario`]: one axes×kind struct, one sweep engine
+//!   ([`harness::sweep`]), one report layer ([`harness::report`]) —
+//!   with heterogeneous mixed GPU+RDU pool fleets as a first-class
+//!   axis).
 //! * [`util`] — in-tree substrates for the offline build environment:
 //!   JSON parsing, a PCG-family RNG, statistics, and a micro-bench
 //!   harness (no serde/rand/criterion available).
@@ -86,6 +96,7 @@ pub mod net;
 pub mod netsim;
 pub mod rdu;
 pub mod runtime;
+pub mod simcore;
 pub mod util;
 pub mod workload;
 

@@ -1,14 +1,12 @@
 //! `repro` — the cogsim-disagg command line.
 //!
-//! ```text
-//! repro serve  [--addr A] [--artifacts DIR] [--materials N] [--workers N]
-//! repro client --addr A --model M [--batch B] [--requests N] [--pipeline D]
-//! repro repro  <figN|all> [--out DIR]
-//! repro trace  [--timesteps N] [--ranks N] [--zones N]
-//! repro info   [--artifacts DIR]
-//! ```
-//!
-//! Argument parsing is hand-rolled (no clap in the offline build).
+//! Argument parsing is hand-rolled (no clap in the offline build),
+//! but declarative: every flag lives in the single [`FLAGS`] table
+//! (name, type, default, help, commands it applies to), the usage
+//! text is derived from it, and unknown flags fail loudly with the
+//! command's valid set.  `repro scenario` runs the declarative
+//! scenario grid; `campaign`, `eventsim`, `cogsim` and `fabric` are
+//! thin aliases that pre-shape the same grid.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -16,8 +14,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
-use cogsim_disagg::harness::{run_figure, FIGURES};
+use cogsim_disagg::eventsim::ArrivalProcess;
+use cogsim_disagg::harness::{
+    run_figure, run_grid, Axes, CampaignConfig, CogCampaignConfig, EventCampaignConfig, Fleet,
+    Grid, GridResult, Kind, Knobs, Topology, FIGURES,
+};
 use cogsim_disagg::metrics::LatencyRecorder;
 use cogsim_disagg::net::{Client, Server};
 use cogsim_disagg::runtime::Engine;
@@ -31,26 +34,191 @@ fn main() {
     }
 }
 
-/// Flags that take no value: presence alone means `true`.
-const BOOL_FLAGS: [&str; 1] = ["smoke"];
+// -------------------------------------------------------- flag table
 
-/// Tiny flag parser: positionals + `--key value` pairs, plus the
-/// declared boolean switches (`repro cogsim --smoke`).  Value flags
-/// still fail loudly when their value is missing.
+/// How a flag's value is parsed (and rendered in the usage text).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FlagKind {
+    /// `--flag N`
+    Usize,
+    /// `--flag STR`
+    Str,
+    /// `--flag A,B,...` (comma-separated list)
+    List,
+    /// Presence alone means `true`.
+    Bool,
+}
+
+/// One declarative flag: the single source of truth for parsing,
+/// defaults, and the derived usage text.  A name may appear in
+/// several rows with disjoint command sets (per-command defaults).
+struct FlagSpec {
+    name: &'static str,
+    kind: FlagKind,
+    default: &'static str,
+    help: &'static str,
+    cmds: &'static [&'static str],
+}
+
+/// Every flag of every subcommand.  `repro help` renders this table;
+/// the parser rejects flags not declared for the running command.
+const FLAGS: &[FlagSpec] = &[
+    // serving
+    FlagSpec { name: "addr", kind: FlagKind::Str, default: "127.0.0.1:7471",
+               help: "server address", cmds: &["serve", "client"] },
+    FlagSpec { name: "artifacts", kind: FlagKind::Str, default: "artifacts",
+               help: "AOT artifact directory", cmds: &["serve", "info"] },
+    FlagSpec { name: "materials", kind: FlagKind::Usize, default: "8",
+               help: "per-material Hermit instances", cmds: &["serve"] },
+    FlagSpec { name: "workers", kind: FlagKind::Usize, default: "1",
+               help: "coordinator worker threads", cmds: &["serve"] },
+    FlagSpec { name: "model", kind: FlagKind::Str, default: "hermit/mat0",
+               help: "target model instance", cmds: &["client"] },
+    FlagSpec { name: "batch", kind: FlagKind::Usize, default: "4",
+               help: "samples per request", cmds: &["client"] },
+    FlagSpec { name: "requests", kind: FlagKind::Usize, default: "100",
+               help: "requests to send", cmds: &["client"] },
+    FlagSpec { name: "pipeline", kind: FlagKind::Usize, default: "1",
+               help: "requests kept in flight", cmds: &["client"] },
+    // figures + scaling
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results",
+               help: "output directory for figure CSVs", cmds: &["repro"] },
+    FlagSpec { name: "max-ranks", kind: FlagKind::Usize, default: "128",
+               help: "largest rank count to probe", cmds: &["scaling"] },
+    FlagSpec { name: "step-ms", kind: FlagKind::Usize, default: "100",
+               help: "timestep period, ms", cmds: &["scaling"] },
+    FlagSpec { name: "slo-ms", kind: FlagKind::Usize, default: "1",
+               help: "per-request latency SLO, ms", cmds: &["scaling"] },
+    // grid aliases (legacy per-mode knobs)
+    FlagSpec { name: "ranks", kind: FlagKind::Usize, default: "4",
+               help: "MPI ranks", cmds: &["campaign", "cogsim"] },
+    FlagSpec { name: "zones", kind: FlagKind::Usize, default: "200",
+               help: "Hydra zones per rank per timestep", cmds: &["campaign"] },
+    FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "12",
+               help: "simulated timesteps", cmds: &["campaign"] },
+    FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "8",
+               help: "bulk-synchronous timesteps", cmds: &["cogsim", "fabric", "scenario"] },
+    FlagSpec { name: "horizon-ms", kind: FlagKind::Usize, default: "200",
+               help: "arrival horizon, ms", cmds: &["eventsim", "scenario"] },
+    FlagSpec { name: "seed", kind: FlagKind::Usize, default: "42",
+               help: "workload seed (fixed seed = byte-stable JSON)",
+               cmds: &["eventsim", "cogsim", "fabric", "scenario"] },
+    FlagSpec { name: "models", kind: FlagKind::Usize, default: "8",
+               help: "target models per rank", cmds: &["cogsim"] },
+    FlagSpec { name: "smoke", kind: FlagKind::Bool, default: "",
+               help: "CI-sized sweep", cmds: &["cogsim", "fabric", "scenario"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/campaign.json",
+               help: "JSON output path", cmds: &["campaign"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/eventsim.json",
+               help: "JSON output path", cmds: &["eventsim"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/cogsim.json",
+               help: "JSON output path", cmds: &["cogsim"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/fabric.json",
+               help: "JSON output path", cmds: &["fabric"] },
+    // the unified scenario grid
+    FlagSpec { name: "kinds", kind: FlagKind::List, default: "cog",
+               help: "workload kinds: analytic|event|cog", cmds: &["scenario"] },
+    FlagSpec { name: "topologies", kind: FlagKind::List, default: "local,pooled",
+               help: "coupling topologies: local|pooled|hybrid", cmds: &["scenario"] },
+    FlagSpec { name: "fleets", kind: FlagKind::List, default: "default",
+               help: "pool compositions: default or <G>g<R>r (e.g. 4g2r)",
+               cmds: &["scenario"] },
+    FlagSpec { name: "policies", kind: FlagKind::List, default: "round_robin,latency_aware",
+               help: "routing policies", cmds: &["scenario"] },
+    FlagSpec { name: "ranks", kind: FlagKind::List, default: "4,32",
+               help: "MPI rank counts", cmds: &["scenario"] },
+    FlagSpec { name: "arrivals", kind: FlagKind::List, default: "synchronized",
+               help: "arrival processes (event kind): synchronized|poisson|closed_loop",
+               cmds: &["scenario"] },
+    FlagSpec { name: "windows-us", kind: FlagKind::List, default: "0",
+               help: "batching windows in us, 0 = off", cmds: &["scenario"] },
+    FlagSpec { name: "models", kind: FlagKind::List, default: "8",
+               help: "models per rank (cog kind)", cmds: &["scenario"] },
+    FlagSpec { name: "swaps-us", kind: FlagKind::List, default: "0",
+               help: "residency swap costs in us (cog kind)", cmds: &["scenario"] },
+    FlagSpec { name: "overlaps", kind: FlagKind::List, default: "0",
+               help: "compute/inference overlap fractions (cog kind)", cmds: &["scenario"] },
+    FlagSpec { name: "oversubs", kind: FlagKind::List, default: "1,4",
+               help: "fabric oversubscription factors", cmds: &["scenario"] },
+    FlagSpec { name: "list", kind: FlagKind::Bool, default: "",
+               help: "print the grid's axes and defaults, then exit", cmds: &["scenario"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/scenario.json",
+               help: "JSON output path", cmds: &["scenario"] },
+    // workload inspection
+    FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "3",
+               help: "timesteps to print", cmds: &["trace"] },
+    FlagSpec { name: "ranks", kind: FlagKind::Usize, default: "4",
+               help: "MPI ranks", cmds: &["trace"] },
+    FlagSpec { name: "zones", kind: FlagKind::Usize, default: "1000",
+               help: "zones per rank", cmds: &["trace"] },
+];
+
+/// `(command, positional synopsis, one-line description)` — the
+/// usage text's skeleton; flag lines are derived from [`FLAGS`].
+const COMMANDS: &[(&str, &str, &str)] = &[
+    ("serve", "", "start the disaggregated inference server"),
+    ("client", "", "drive a server like one MPI rank"),
+    ("repro", "<fig4..fig20|all>", "regenerate paper figures"),
+    ("scaling", "", "ranks-per-DataScale feasibility frontier"),
+    ("scenario", "", "run the declarative scenario grid (axes x workload kind)"),
+    ("campaign", "", "alias: analytic grid (topology x policy)"),
+    ("eventsim", "", "alias: event grid (arrival x batching x ranks)"),
+    ("cogsim", "", "alias: coupled grid (time-to-solution)"),
+    ("fabric", "", "alias: pooled-vs-local crossover on the cog grid"),
+    ("trace", "", "print a Hydra-like request trace"),
+    ("info", "", "show manifest/runtime info"),
+];
+
+fn spec_for(cmd: &str, name: &str) -> Option<&'static FlagSpec> {
+    FLAGS.iter().find(|f| f.name == name && f.cmds.contains(&cmd))
+}
+
+fn print_usage() {
+    println!(
+        "repro — disaggregated CogSim inference (Wyatt et al., CS.DC 2021 reproduction)\n\nUSAGE:"
+    );
+    for (cmd, positional, desc) in COMMANDS {
+        let pos = if positional.is_empty() { String::new() } else { format!(" {positional}") };
+        println!("  repro {cmd}{pos} — {desc}");
+        for f in FLAGS.iter().filter(|f| f.cmds.contains(cmd)) {
+            match f.kind {
+                FlagKind::Bool => println!("      [--{}]  {}", f.name, f.help),
+                _ => println!("      [--{} {}]  {}", f.name, f.default, f.help),
+            }
+        }
+    }
+    println!(
+        "\nThe grid modes sweep the pooled fabric's oversubscription and the\n\
+         pool's fleet composition; `repro scenario --list` prints every axis\n\
+         with its defaults.  `repro fabric` runs the focused\n\
+         pooled-vs-node-local time-to-solution crossover sweep."
+    );
+}
+
+/// Parsed arguments for one subcommand, validated against [`FLAGS`].
 struct Args {
+    cmd: String,
     positional: Vec<String>,
     flags: BTreeMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Result<Args> {
+    fn parse(cmd: &str, argv: &[String]) -> Result<Args> {
         let mut positional = Vec::new();
         let mut flags = BTreeMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if BOOL_FLAGS.contains(&key) {
+                let Some(spec) = spec_for(cmd, key) else {
+                    let valid: Vec<&str> = FLAGS
+                        .iter()
+                        .filter(|f| f.cmds.contains(&cmd))
+                        .map(|f| f.name)
+                        .collect();
+                    bail!("unknown flag --{key} for `repro {cmd}` (valid: {valid:?})");
+                };
+                if spec.kind == FlagKind::Bool {
                     flags.insert(key.to_string(), "true".to_string());
                     i += 1;
                 } else {
@@ -65,22 +233,50 @@ impl Args {
                 i += 1;
             }
         }
-        Ok(Args { positional, flags })
+        Ok(Args { cmd: cmd.to_string(), positional, flags })
     }
 
-    fn get(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+    /// The flag's value, falling back to its declared default.
+    fn get(&self, key: &str) -> String {
         match self.flags.get(key) {
-            None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            Some(v) => v.clone(),
+            None => spec_for(&self.cmd, key)
+                .unwrap_or_else(|| panic!("flag --{key} not declared for `{}`", self.cmd))
+                .default
+                .to_string(),
         }
+    }
+
+    fn get_usize(&self, key: &str) -> Result<usize> {
+        let v = self.get(key);
+        v.parse().with_context(|| format!("--{key} {v:?}"))
     }
 
     fn get_bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated values of a `FlagKind::List` flag.
+    fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    fn get_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.get_list(key)
+            .iter()
+            .map(|v| v.parse().with_context(|| format!("--{key} {v:?}")))
+            .collect()
+    }
+
+    fn get_f64_list(&self, key: &str) -> Result<Vec<f64>> {
+        self.get_list(key)
+            .iter()
+            .map(|v| v.parse().with_context(|| format!("--{key} {v:?}")))
+            .collect()
     }
 }
 
@@ -90,53 +286,32 @@ fn run() -> Result<()> {
         print_usage();
         return Ok(());
     };
-    let args = Args::parse(&argv[1..])?;
+    if matches!(cmd, "help" | "--help" | "-h") {
+        print_usage();
+        return Ok(());
+    }
+    if !COMMANDS.iter().any(|(c, _, _)| *c == cmd) {
+        bail!("unknown command {cmd:?} (try `repro help`)");
+    }
+    let args = Args::parse(cmd, &argv[1..])?;
     match cmd {
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "repro" => cmd_repro(&args),
         "scaling" => cmd_scaling(&args),
+        "scenario" => cmd_scenario(&args),
         "campaign" => cmd_campaign(&args),
         "eventsim" => cmd_eventsim(&args),
         "cogsim" => cmd_cogsim(&args),
         "fabric" => cmd_fabric(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
-        "help" | "--help" | "-h" => {
-            print_usage();
-            Ok(())
-        }
-        other => bail!("unknown command {other:?} (try `repro help`)"),
+        _ => unreachable!("command list checked above"),
     }
 }
 
-fn print_usage() {
-    println!(
-        "repro — disaggregated CogSim inference (Wyatt et al., CS.DC 2021 reproduction)
-
-USAGE:
-  repro serve  [--addr 127.0.0.1:7471] [--artifacts artifacts] [--materials 8] [--workers 1]
-  repro client --addr 127.0.0.1:7471 [--model hermit/mat0] [--batch 4]
-               [--requests 100] [--pipeline 1]
-  repro repro  <fig4..fig20|all> [--out results]
-  repro scaling [--max-ranks 128] [--step-ms 100] [--slo-ms 1]
-  repro campaign [--ranks 4] [--timesteps 12] [--zones 200] [--out results/campaign.json]
-  repro eventsim [--horizon-ms 200] [--seed 42] [--out results/eventsim.json]
-  repro cogsim [--ranks 4] [--timesteps 8] [--models 8] [--seed 42] [--smoke]
-               [--out results/cogsim.json]
-  repro fabric [--timesteps 8] [--seed 42] [--smoke] [--out results/fabric.json]
-  repro trace  [--timesteps 3] [--ranks 4] [--zones 1000]
-  repro info   [--artifacts artifacts]
-
-The campaign modes sweep the pooled fabric's oversubscription
-(1:1/2:1/4:1/8:1 by default in cogsim mode); `repro fabric` runs the
-focused pooled-vs-node-local time-to-solution crossover sweep on the
-contention-aware fabric simulator."
-    );
-}
-
-/// Write a campaign JSON document, creating parent directories
-/// (shared by every campaign subcommand).
+/// Write a JSON document, creating parent directories (shared by
+/// every grid subcommand).
 fn write_json_out(out: &str, json: &str) -> Result<()> {
     if let Some(dir) = std::path::Path::new(out).parent() {
         if !dir.as_os_str().is_empty() {
@@ -148,12 +323,303 @@ fn write_json_out(out: &str, json: &str) -> Result<()> {
     Ok(())
 }
 
+/// Run a grid, print its tables, write its JSON — the single
+/// execution path behind `repro scenario` and every alias.
+fn execute_grid(grid: &Grid, out: &str) -> Result<GridResult> {
+    let result = run_grid(grid);
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+    write_json_out(out, &cogsim_disagg::util::json::write(&result.to_json()))?;
+    println!("{} cells", result.cells.len());
+    Ok(result)
+}
+
+// ---------------------------------------------------- grid commands
+
+/// The declarative scenario grid, straight from the axis flags.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    let mut axes = Axes::default();
+    axes.kinds = args
+        .get_list("kinds")
+        .iter()
+        .map(|k| Kind::parse(k).ok_or_else(|| anyhow!("unknown kind {k:?}")))
+        .collect::<Result<_>>()?;
+    axes.topologies = args
+        .get_list("topologies")
+        .iter()
+        .map(|t| match t.as_str() {
+            "local" => Ok(Topology::Local),
+            "pooled" => Ok(Topology::Pooled),
+            "hybrid" => Ok(Topology::Hybrid),
+            other => bail!("unknown topology {other:?}"),
+        })
+        .collect::<Result<_>>()?;
+    axes.fleets = args
+        .get_list("fleets")
+        .iter()
+        .map(|f| {
+            Fleet::parse(f).ok_or_else(|| anyhow!("unknown fleet {f:?} (default|<G>g<R>r)"))
+        })
+        .collect::<Result<_>>()?;
+    axes.policies = args
+        .get_list("policies")
+        .iter()
+        .map(|p| {
+            Policy::ALL
+                .iter()
+                .find(|x| x.key() == p.as_str())
+                .copied()
+                .ok_or_else(|| anyhow!("unknown policy {p:?}"))
+        })
+        .collect::<Result<_>>()?;
+    axes.rank_counts = args.get_usize_list("ranks")?;
+    axes.arrivals = args
+        .get_list("arrivals")
+        .iter()
+        .map(|a| match a.as_str() {
+            "synchronized" => Ok(ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 }),
+            "poisson" => Ok(ArrivalProcess::Poisson { rate_per_rank: 800.0 }),
+            "closed_loop" => Ok(ArrivalProcess::ClosedLoop { think_s: 2e-3 }),
+            other => bail!("unknown arrival {other:?}"),
+        })
+        .collect::<Result<_>>()?;
+    axes.windows_us = args.get_f64_list("windows-us")?;
+    axes.models_per_rank = args.get_usize_list("models")?;
+    axes.swap_costs_s = args.get_f64_list("swaps-us")?.iter().map(|us| us * 1e-6).collect();
+    axes.overlaps = args.get_f64_list("overlaps")?;
+    axes.fabric_oversubs = args.get_f64_list("oversubs")?;
+
+    let mut knobs = Knobs::default();
+    knobs.timesteps = args.get_usize("timesteps")?;
+    knobs.horizon_s = args.get_usize("horizon-ms")? as f64 / 1e3;
+    knobs.seed = args.get_usize("seed")? as u64;
+    if knobs.timesteps == 0 || knobs.horizon_s <= 0.0 {
+        bail!("--timesteps and --horizon-ms must be positive");
+    }
+
+    let mut grid = Grid { axes, knobs };
+    if args.get_bool("smoke") {
+        grid.axes.rank_counts.truncate(1);
+        grid.knobs.timesteps = grid.knobs.timesteps.min(3);
+        grid.knobs.horizon_s = grid.knobs.horizon_s.min(0.05);
+    }
+
+    if args.get_bool("list") {
+        println!("scenario grid axes (current values; change with the same-named flag):");
+        for (name, values, help) in grid.axis_help() {
+            println!("  --{name:<12} {values:<40} {help}");
+        }
+        println!(
+            "shared knobs: timesteps {}  horizon {} ms  seed {}",
+            grid.knobs.timesteps,
+            grid.knobs.horizon_s * 1e3,
+            grid.knobs.seed
+        );
+        println!("{} cells would run", grid.cells().len());
+        return Ok(());
+    }
+
+    execute_grid(&grid, &args.get("out"))?;
+    Ok(())
+}
+
+/// Alias: the analytic campaign as a pre-shaped grid.
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let cfg = CampaignConfig {
+        ranks: args.get_usize("ranks")?,
+        zones_per_rank: args.get_usize("zones")?,
+        timesteps: args.get_usize("timesteps")?,
+        ..Default::default()
+    };
+    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+
+    // The headline comparison: does state-aware routing beat blind
+    // round-robin on tail latency in the hybrid topology?
+    let cell = |policy: Policy| {
+        result
+            .find(|s| s.topology == Topology::Hybrid && s.policy == policy && s.oversub == 1.0)
+            .and_then(|c| c.analytic().map(|s| s.hydra.p99_s))
+            .expect("campaign ran every cell")
+    };
+    let la = cell(Policy::LatencyAware);
+    let rr = cell(Policy::RoundRobin);
+    println!(
+        "hybrid Hydra p99: latency-aware {:.1} us vs round-robin {:.1} us ({})",
+        la * 1e6,
+        rr * 1e6,
+        if la < rr { "latency-aware wins" } else { "round-robin wins" }
+    );
+    Ok(())
+}
+
+/// Alias: the event grid (arrival x batching x ranks).
+fn cmd_eventsim(args: &Args) -> Result<()> {
+    let mut cfg = EventCampaignConfig::default();
+    let horizon_ms = args.get_usize("horizon-ms")?;
+    if horizon_ms == 0 {
+        bail!("--horizon-ms must be positive");
+    }
+    cfg.horizon_s = horizon_ms as f64 / 1e3;
+    cfg.seed = args.get_usize("seed")? as u64;
+    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+
+    // The headline: under bursty 64-rank arrivals on the pooled
+    // topology, does the dynamic-batching window shrink tail latency?
+    let ranks = *cfg.rank_counts.last().expect("rank sweep is non-empty");
+    let windows = (cfg.windows_us.first().copied(), cfg.windows_us.last().copied());
+    if let (Some(w_off), Some(w_on)) = windows {
+        let cell = |window_us: f64| {
+            result
+                .find(|s| {
+                    s.topology == Topology::Pooled
+                        && s.policy == Policy::LatencyAware
+                        && s.arrival.key() == "synchronized"
+                        && s.ranks == ranks
+                        && s.window_us == window_us
+                        && s.oversub == 1.0
+                })
+                .and_then(|c| c.event().map(|s| s.latency.p99_s))
+        };
+        if let (Some(off), Some(on)) = (cell(w_off), cell(w_on)) {
+            println!(
+                "pooled {ranks}-rank bursty p99: window {w_on} us {:.1} us vs window {w_off} us \
+                 {:.1} us ({})",
+                on * 1e6,
+                off * 1e6,
+                if on < off { "batching wins the tail" } else { "batching does not win here" }
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Alias: the coupled grid (time-to-solution).
+fn cmd_cogsim(args: &Args) -> Result<()> {
+    let mut cfg = CogCampaignConfig::default();
+    cfg.rank_counts = vec![args.get_usize("ranks")?];
+    cfg.models_per_rank = vec![args.get_usize("models")?];
+    cfg.timesteps = args.get_usize("timesteps")?;
+    cfg.seed = args.get_usize("seed")? as u64;
+    if args.get_bool("smoke") {
+        // CI-sized: one topology, two policies, three steps.
+        cfg.topologies = vec![Topology::Pooled];
+        cfg.policies = vec![Policy::RoundRobin, Policy::ModelAffinity];
+        cfg.timesteps = cfg.timesteps.min(3);
+        cfg.overlaps = vec![0.0];
+        cfg.fabric_oversubs = vec![1.0, 8.0];
+    }
+    if cfg.timesteps == 0 {
+        bail!("--timesteps must be positive");
+    }
+    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+
+    // The headline: once swapping weights costs more than serving a
+    // request, sticky model-affinity routing must beat blind
+    // round-robin on time-to-solution (shared pool, serial coupling).
+    let ranks = cfg.rank_counts[0];
+    let models = cfg.models_per_rank[0];
+    let swap = *cfg.swap_costs_s.last().expect("swap sweep is non-empty");
+    let cell = |policy: Policy| {
+        result
+            .find(|s| {
+                s.topology == Topology::Pooled
+                    && s.policy == policy
+                    && s.ranks == ranks
+                    && s.models == models
+                    && s.swap_s == swap
+                    && s.overlap == 0.0
+                    && s.oversub == 1.0
+            })
+            .and_then(|c| c.cog().map(|s| s.time_to_solution_s))
+    };
+    if let (Some(aff), Some(rr)) = (cell(Policy::ModelAffinity), cell(Policy::RoundRobin)) {
+        println!(
+            "pooled TTS at swap {:.0} us: model-affinity {:.2} ms vs round-robin {:.2} ms ({})",
+            swap * 1e6,
+            aff * 1e3,
+            rr * 1e3,
+            if aff < rr { "affinity wins" } else { "affinity does not win here" }
+        );
+    }
+    Ok(())
+}
+
+/// Alias: contention crossover on the flow-level fabric — pooled vs
+/// node-local time-to-solution across rank count × oversubscription.
+fn cmd_fabric(args: &Args) -> Result<()> {
+    let smoke = args.get_bool("smoke");
+    let mut cfg = CogCampaignConfig {
+        topologies: vec![Topology::Local, Topology::Pooled],
+        policies: vec![Policy::LatencyAware],
+        rank_counts: if smoke { vec![4, 32] } else { vec![4, 8, 16, 32] },
+        models_per_rank: vec![8],
+        swap_costs_s: vec![0.0],
+        overlaps: vec![0.0],
+        fabric_oversubs: if smoke { vec![1.0, 8.0] } else { vec![1.0, 2.0, 4.0, 8.0] },
+        ..Default::default()
+    };
+    cfg.timesteps = args.get_usize("timesteps")?;
+    if smoke {
+        cfg.timesteps = cfg.timesteps.min(3);
+    }
+    cfg.seed = args.get_usize("seed")? as u64;
+    if cfg.timesteps == 0 {
+        bail!("--timesteps must be positive");
+    }
+    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+
+    // The headline: at what (rank count, oversubscription) does the
+    // shared pool lose to per-rank local GPUs on time-to-solution?
+    let policy = cfg.policies[0];
+    let tts = |topology: Topology, ranks: usize, oversub: f64| {
+        result
+            .find(|s| {
+                s.topology == topology
+                    && s.policy == policy
+                    && s.ranks == ranks
+                    && s.oversub == oversub
+            })
+            .and_then(|c| c.cog().map(|s| s.time_to_solution_s))
+            .expect("cell ran")
+    };
+    let mut crossover: Option<(usize, f64)> = None;
+    println!("pooled-vs-local TTS (ms), policy {}:", policy.key());
+    for &ranks in &cfg.rank_counts {
+        let local_s = tts(Topology::Local, ranks, 1.0);
+        let mut row = format!("  ranks {ranks:>3}: local {:>8.2}  pooled", local_s * 1e3);
+        for &oversub in &cfg.fabric_oversubs {
+            let pooled_s = tts(Topology::Pooled, ranks, oversub);
+            let behind = pooled_s > local_s;
+            row.push_str(&format!(
+                " {oversub}:1={:.2}{}",
+                pooled_s * 1e3,
+                if behind { "*" } else { "" }
+            ));
+            if behind && crossover.is_none() {
+                crossover = Some((ranks, oversub));
+            }
+        }
+        println!("{row}");
+    }
+    match crossover {
+        Some((ranks, oversub)) => println!(
+            "pooled falls behind node-local from {ranks} ranks at {oversub}:1 \
+             oversubscription (* = pooled slower)"
+        ),
+        None => println!("pooled never falls behind node-local in this sweep"),
+    }
+    Ok(())
+}
+
+// --------------------------------------------------- serving + misc
+
 /// Start the disaggregated inference server.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let artifacts = args.get("artifacts", "artifacts");
-    let addr = args.get("addr", "127.0.0.1:7471");
-    let materials = args.get_usize("materials", 8)?;
-    let workers = args.get_usize("workers", 1)?;
+    let artifacts = args.get("artifacts");
+    let addr = args.get("addr");
+    let materials = args.get_usize("materials")?;
+    let workers = args.get_usize("workers")?;
 
     let engine = if std::path::Path::new(&artifacts).join("manifest.json").exists() {
         eprintln!("loading artifacts from {artifacts}/ ...");
@@ -192,11 +658,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Drive a server like one MPI rank.
 fn cmd_client(args: &Args) -> Result<()> {
-    let addr = args.get("addr", "127.0.0.1:7471");
-    let model = args.get("model", "hermit/mat0");
-    let batch = args.get_usize("batch", 4)?;
-    let requests = args.get_usize("requests", 100)?;
-    let pipeline = args.get_usize("pipeline", 1)?.max(1);
+    let addr = args.get("addr");
+    let model = args.get("model");
+    let batch = args.get_usize("batch")?;
+    let requests = args.get_usize("requests")?;
+    let pipeline = args.get_usize("pipeline")?.max(1);
 
     let client = Client::connect(addr.as_str())?;
     let input_elems = if model.starts_with("mir") { 48 * 48 } else { 42 };
@@ -258,7 +724,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         .first()
         .map(String::as_str)
         .unwrap_or("all");
-    let out_dir = args.get("out", "results");
+    let out_dir = args.get("out");
     std::fs::create_dir_all(&out_dir)?;
 
     let ids: Vec<&str> = if which == "all" {
@@ -286,9 +752,9 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 /// Scaling analysis: ranks-per-DataScale frontier (paper SVI).
 fn cmd_scaling(args: &Args) -> Result<()> {
-    let max_ranks = args.get_usize("max-ranks", 128)?;
-    let step_ms = args.get_usize("step-ms", 100)?;
-    let slo_ms = args.get_usize("slo-ms", 1)?;
+    let max_ranks = args.get_usize("max-ranks")?;
+    let step_ms = args.get_usize("step-ms")?;
+    let slo_ms = args.get_usize("slo-ms")?;
     let scenario = cogsim_disagg::harness::scaling::Scenario {
         step_s: step_ms as f64 / 1e3,
         latency_slo_s: slo_ms as f64 / 1e3,
@@ -309,232 +775,11 @@ fn cmd_scaling(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-backend scenario campaign: topologies × routing policies.
-fn cmd_campaign(args: &Args) -> Result<()> {
-    use cogsim_disagg::cluster::Policy;
-    use cogsim_disagg::harness::campaign::{run_campaign, CampaignConfig, Topology};
-
-    let cfg = CampaignConfig {
-        ranks: args.get_usize("ranks", 4)?,
-        zones_per_rank: args.get_usize("zones", 200)?,
-        timesteps: args.get_usize("timesteps", 12)?,
-        ..Default::default()
-    };
-    let out = args.get("out", "results/campaign.json");
-
-    let result = run_campaign(&cfg);
-    for table in result.tables() {
-        println!("{}", table.render());
-    }
-    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
-
-    // The headline comparison: does state-aware routing beat blind
-    // round-robin on tail latency in the hybrid topology?
-    let la = result.scenario(Topology::Hybrid, Policy::LatencyAware);
-    let rr = result.scenario(Topology::Hybrid, Policy::RoundRobin);
-    println!(
-        "hybrid Hydra p99: latency-aware {:.1} us vs round-robin {:.1} us ({})",
-        la.hydra.p99_s * 1e6,
-        rr.hydra.p99_s * 1e6,
-        if la.hydra.p99_s < rr.hydra.p99_s {
-            "latency-aware wins"
-        } else {
-            "round-robin wins"
-        }
-    );
-    Ok(())
-}
-
-/// Discrete-event campaign: rank count × arrival process × batching
-/// window over the topology fleets.
-fn cmd_eventsim(args: &Args) -> Result<()> {
-    use cogsim_disagg::cluster::Policy;
-    use cogsim_disagg::harness::campaign::{run_event_campaign, EventCampaignConfig, Topology};
-
-    let mut cfg = EventCampaignConfig::default();
-    let horizon_ms = args.get_usize("horizon-ms", 200)?;
-    if horizon_ms == 0 {
-        bail!("--horizon-ms must be positive");
-    }
-    cfg.horizon_s = horizon_ms as f64 / 1e3;
-    cfg.seed = args.get_usize("seed", 42)? as u64;
-    let out = args.get("out", "results/eventsim.json");
-
-    let result = run_event_campaign(&cfg);
-    for table in result.tables() {
-        println!("{}", table.render());
-    }
-    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
-
-    // The headline: under bursty 64-rank arrivals on the pooled
-    // topology, does the dynamic-batching window shrink tail latency?
-    let ranks = *cfg.rank_counts.last().expect("rank sweep is non-empty");
-    let windows = (cfg.windows_us.first().copied(), cfg.windows_us.last().copied());
-    if let (Some(w_off), Some(w_on)) = windows {
-        let off = result.scenario(
-            Topology::Pooled,
-            Policy::LatencyAware,
-            "synchronized",
-            ranks,
-            w_off,
-            1.0,
-        );
-        let on = result.scenario(
-            Topology::Pooled,
-            Policy::LatencyAware,
-            "synchronized",
-            ranks,
-            w_on,
-            1.0,
-        );
-        if let (Some(off), Some(on)) = (off, on) {
-            println!(
-                "pooled {ranks}-rank bursty p99: window {w_on} us {:.1} us vs window {w_off} us \
-                 {:.1} us ({})",
-                on.summary.latency.p99_s * 1e6,
-                off.summary.latency.p99_s * 1e6,
-                if on.summary.latency.p99_s < off.summary.latency.p99_s {
-                    "batching wins the tail"
-                } else {
-                    "batching does not win here"
-                }
-            );
-        }
-    }
-    Ok(())
-}
-
-/// Coupled CogSim campaign: time-to-solution across topology ×
-/// policy × ranks × models × swap cost × overlap.
-fn cmd_cogsim(args: &Args) -> Result<()> {
-    use cogsim_disagg::cluster::Policy;
-    use cogsim_disagg::harness::campaign::{run_cog_campaign, CogCampaignConfig, Topology};
-
-    let mut cfg = CogCampaignConfig::default();
-    cfg.rank_counts = vec![args.get_usize("ranks", 4)?];
-    cfg.models_per_rank = vec![args.get_usize("models", 8)?];
-    cfg.timesteps = args.get_usize("timesteps", cfg.timesteps)?;
-    cfg.seed = args.get_usize("seed", 42)? as u64;
-    if args.get_bool("smoke") {
-        // CI-sized: one topology, two policies, three steps.
-        cfg.topologies = vec![Topology::Pooled];
-        cfg.policies = vec![Policy::RoundRobin, Policy::ModelAffinity];
-        cfg.timesteps = cfg.timesteps.min(3);
-        cfg.overlaps = vec![0.0];
-        cfg.fabric_oversubs = vec![1.0, 8.0];
-    }
-    if cfg.timesteps == 0 {
-        bail!("--timesteps must be positive");
-    }
-    let out = args.get("out", "results/cogsim.json");
-
-    let result = run_cog_campaign(&cfg);
-    for table in result.tables() {
-        println!("{}", table.render());
-    }
-    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
-
-    // The headline: once swapping weights costs more than serving a
-    // request, sticky model-affinity routing must beat blind
-    // round-robin on time-to-solution (shared pool, serial coupling).
-    let ranks = cfg.rank_counts[0];
-    let models = cfg.models_per_rank[0];
-    let swap = *cfg.swap_costs_s.last().expect("swap sweep is non-empty");
-    let aff =
-        result.scenario(Topology::Pooled, Policy::ModelAffinity, ranks, models, swap, 0.0, 1.0);
-    let rr =
-        result.scenario(Topology::Pooled, Policy::RoundRobin, ranks, models, swap, 0.0, 1.0);
-    if let (Some(aff), Some(rr)) = (aff, rr) {
-        println!(
-            "pooled TTS at swap {:.0} us: model-affinity {:.2} ms vs round-robin {:.2} ms ({})",
-            swap * 1e6,
-            aff.summary.time_to_solution_s * 1e3,
-            rr.summary.time_to_solution_s * 1e3,
-            if aff.summary.time_to_solution_s < rr.summary.time_to_solution_s {
-                "affinity wins"
-            } else {
-                "affinity does not win here"
-            }
-        );
-    }
-    Ok(())
-}
-
-/// Contention crossover on the flow-level fabric: pooled vs
-/// node-local time-to-solution across rank count × oversubscription.
-fn cmd_fabric(args: &Args) -> Result<()> {
-    use cogsim_disagg::cluster::Policy;
-    use cogsim_disagg::harness::campaign::{run_cog_campaign, CogCampaignConfig, Topology};
-
-    let smoke = args.get_bool("smoke");
-    let mut cfg = CogCampaignConfig {
-        topologies: vec![Topology::Local, Topology::Pooled],
-        policies: vec![Policy::LatencyAware],
-        rank_counts: if smoke { vec![4, 32] } else { vec![4, 8, 16, 32] },
-        models_per_rank: vec![8],
-        swap_costs_s: vec![0.0],
-        overlaps: vec![0.0],
-        fabric_oversubs: if smoke { vec![1.0, 8.0] } else { vec![1.0, 2.0, 4.0, 8.0] },
-        ..Default::default()
-    };
-    cfg.timesteps = args.get_usize("timesteps", cfg.timesteps)?;
-    if smoke {
-        cfg.timesteps = cfg.timesteps.min(3);
-    }
-    cfg.seed = args.get_usize("seed", 42)? as u64;
-    if cfg.timesteps == 0 {
-        bail!("--timesteps must be positive");
-    }
-    let out = args.get("out", "results/fabric.json");
-
-    let result = run_cog_campaign(&cfg);
-    for table in result.tables() {
-        println!("{}", table.render());
-    }
-    write_json_out(&out, &cogsim_disagg::util::json::write(&result.to_json()))?;
-
-    // The headline: at what (rank count, oversubscription) does the
-    // shared pool lose to per-rank local GPUs on time-to-solution?
-    let policy = cfg.policies[0];
-    let mut crossover: Option<(usize, f64)> = None;
-    println!("pooled-vs-local TTS (ms), policy {}:", policy.key());
-    for &ranks in &cfg.rank_counts {
-        let local = result
-            .scenario(Topology::Local, policy, ranks, 8, 0.0, 0.0, 1.0)
-            .expect("local cell ran");
-        let local_ms = local.summary.time_to_solution_s * 1e3;
-        let mut row = format!("  ranks {ranks:>3}: local {local_ms:>8.2}  pooled");
-        for &oversub in &cfg.fabric_oversubs {
-            let pooled = result
-                .scenario(Topology::Pooled, policy, ranks, 8, 0.0, 0.0, oversub)
-                .expect("pooled cell ran");
-            let pooled_ms = pooled.summary.time_to_solution_s * 1e3;
-            let behind = pooled.summary.time_to_solution_s > local.summary.time_to_solution_s;
-            row.push_str(&format!(
-                " {oversub}:1={pooled_ms:.2}{}",
-                if behind { "*" } else { "" }
-            ));
-            if behind && crossover.is_none() {
-                crossover = Some((ranks, oversub));
-            }
-        }
-        println!("{row}");
-    }
-    match crossover {
-        Some((ranks, oversub)) => println!(
-            "pooled falls behind node-local from {ranks} ranks at {oversub}:1 \
-             oversubscription (* = pooled slower)"
-        ),
-        None => println!("pooled never falls behind node-local in this sweep"),
-    }
-    Ok(())
-}
-
 /// Print a Hydra-like request trace (workload inspection).
 fn cmd_trace(args: &Args) -> Result<()> {
-    let timesteps = args.get_usize("timesteps", 3)?;
-    let ranks = args.get_usize("ranks", 4)?;
-    let zones = args.get_usize("zones", 1000)?;
+    let timesteps = args.get_usize("timesteps")?;
+    let ranks = args.get_usize("ranks")?;
+    let zones = args.get_usize("zones")?;
     let w = HydraWorkload { ranks, zones_per_rank: zones, ..Default::default() };
     println!(
         "hydra workload: {ranks} ranks x {zones} zones, {} materials, ~{} inferences/timestep",
@@ -557,7 +802,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
 /// Show manifest/runtime info.
 fn cmd_info(args: &Args) -> Result<()> {
-    let artifacts = args.get("artifacts", "artifacts");
+    let artifacts = args.get("artifacts");
     let manifest = cogsim_disagg::runtime::Manifest::load(&artifacts)?;
     println!("artifacts: {}", manifest.dir.display());
     println!("dtype {}  seed {}", manifest.dtype, manifest.seed);

@@ -1,0 +1,318 @@
+//! SimCore: the engine-agnostic request pipeline shared by every
+//! discrete-event engine in the crate.
+//!
+//! [`crate::eventsim::EventSim`] (open-/closed-loop request streams)
+//! and [`crate::eventsim::cogsim::CogSim`] (the coupled timestep
+//! model) used to each carry their own copy of the dispatch → batch →
+//! fabric-transfer → service → completion pipeline; every new stage
+//! (PR 4's fabric layer, the residency gate) had to be wired twice.
+//! This module holds the single copy:
+//!
+//! * [`BatchStage`] — the router-level dynamic-batching stage (the
+//!   serving stack's [`crate::coordinator::batcher::DynamicBatcher`]
+//!   mapped onto virtual time, with the same-instant tie-breaking
+//!   contract both engines rely on);
+//! * [`FabricLayer`] — the contention-aware network stage: a
+//!   [`crate::fabric::FabricSpec`] driving an incremental
+//!   [`crate::fabric::FabricEngine`], the flow→continuation table,
+//!   versioned wake-ups, and the per-device busy clock
+//!   ([`FabricLayer::occupy`] — strictly one batch at a time);
+//! * [`Residency`] — per-backend LRU model residency (the swap stage,
+//!   engaged only when a [`pipeline::ResidencySpec`] is configured);
+//! * [`pipeline::Pipeline`] — the request lifecycle itself: policy
+//!   routing via [`crate::cluster::policy`], batching, the legacy
+//!   fixed-charge dispatch, and the multi-phase fabric path (payload
+//!   flow in, weights-ready gate, device occupancy, result flow out).
+//!
+//! Engines drive the pipeline through a narrow, effect-based surface
+//! ([`pipeline::Pipeline::submit`] / [`pipeline::Pipeline::handle`] /
+//! [`pipeline::Pipeline::take_effects`]): the pipeline never touches
+//! an engine's event queue or record store; it returns, in exact
+//! dispatch order, the events to schedule and the batches opened or
+//! completed, and the engine interprets them.  Event-queue insertion
+//! order defines heap sequence numbers, so the effects' order is part
+//! of the byte-stability contract the campaign goldens pin.
+//!
+//! `python/sim/simcore.py` is the line-faithful transliteration that
+//! regenerates the committed goldens byte-exactly.
+
+pub mod pipeline;
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, PendingRequest, Priority};
+use crate::fabric::{FabricEngine, FabricSpec};
+
+pub use pipeline::{
+    Completed, Dispatched, Effects, Outcome, PipeEvent, Pipeline, ResidencySpec, TransitTiming,
+};
+
+/// Router-level dynamic batching configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Batching {
+    /// Every request dispatches alone, immediately (the analytic
+    /// cluster's behaviour).
+    Off,
+    /// Coalesce same-instance requests arriving within `window_s`,
+    /// capped at `max_batch` samples per dispatched batch.
+    Window { window_s: f64, max_batch: usize },
+}
+
+/// The router-level batching stage shared by the engines: the serving
+/// stack's [`DynamicBatcher`] mapped onto virtual time via a fixed
+/// epoch, plus the same-instant tie-breaking contract both engines
+/// rely on:
+///
+/// * the **arrival path** drains only *size*-ready queues
+///   ([`Self::drain_size_ready`]) — a queue whose deadline expires at
+///   the very instant new requests arrive is closed by its deadline
+///   wake-up instead, which the event queue orders *after* every
+///   same-instant arrival, so simultaneous requests ride the closing
+///   batch deterministically;
+/// * **wake-ups** ([`Self::wakeup_at`]) land on the exact
+///   ns-quantised deadline — a ns-resolution `Duration` round-trips
+///   `as_secs_f64`/`from_secs_f64` exactly at simulation time scales,
+///   and the batcher counts `now == deadline` as expired, so a
+///   wake-up never lands early and respins.
+pub struct BatchStage {
+    batcher: DynamicBatcher,
+    /// Virtual-time anchor for the batcher's `Instant` API.
+    epoch: Instant,
+    /// Requests enqueued but not yet drained into a batch.
+    pending: u64,
+}
+
+impl BatchStage {
+    /// `None` for [`Batching::Off`] (every request dispatches alone).
+    pub(crate) fn from_config(batching: Batching) -> Option<BatchStage> {
+        match batching {
+            Batching::Off => None,
+            Batching::Window { window_s, max_batch } => {
+                assert!(window_s >= 0.0 && window_s.is_finite());
+                assert!(max_batch >= 1);
+                let window = Duration::from_secs_f64(window_s);
+                Some(BatchStage {
+                    batcher: DynamicBatcher::new(BatcherConfig {
+                        // size trigger = the cap: a window's queue
+                        // fires early only once it can fill a whole
+                        // batch
+                        target_batch: max_batch,
+                        max_wait: window,
+                        deferred_max_wait: window,
+                        max_batch,
+                    }),
+                    epoch: Instant::now(),
+                    pending: 0,
+                })
+            }
+        }
+    }
+
+    fn inst(&self, t_s: f64) -> Instant {
+        self.epoch + Duration::from_secs_f64(t_s)
+    }
+
+    pub(crate) fn pending(&self) -> u64 {
+        self.pending
+    }
+
+    fn enqueue(&mut self, instance: &str, id: u64, samples: usize, clock_s: f64) {
+        let arrived = self.inst(clock_s);
+        self.batcher.enqueue(
+            instance,
+            PendingRequest {
+                id,
+                input: Vec::new(),
+                samples,
+                arrived,
+                priority: Priority::Critical,
+            },
+        );
+        self.pending += 1;
+    }
+
+    /// Drain everything the size trigger alone makes ready, as lists
+    /// of request ids per batch (deadline-expired queues stay put for
+    /// their wake-up).
+    fn drain_size_ready(&mut self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        while self.batcher.has_size_ready() {
+            for batch in self.batcher.drain_size_ready() {
+                self.pending -= batch.requests.len() as u64;
+                out.push(batch.requests.iter().map(|r| r.id as usize).collect());
+            }
+        }
+        out
+    }
+
+    /// Drain everything ready at `clock_s`, size- or deadline-wise.
+    fn drain_ready(&mut self, clock_s: f64) -> Vec<Vec<usize>> {
+        let now = self.inst(clock_s);
+        let mut out = Vec::new();
+        while self.batcher.has_ready(now) {
+            for batch in self.batcher.drain_ready(now) {
+                self.pending -= batch.requests.len() as u64;
+                out.push(batch.requests.iter().map(|r| r.id as usize).collect());
+            }
+        }
+        out
+    }
+
+    /// When the engine must schedule its next batch-close wake-up:
+    /// `Some(clock_s)` when some queue is already expired at this
+    /// exact instant (close it after all same-instant arrivals), the
+    /// earliest future deadline otherwise, `None` when idle.
+    fn wakeup_at(&self, clock_s: f64) -> Option<f64> {
+        let now = self.inst(clock_s);
+        if self.batcher.has_ready(now) {
+            return Some(clock_s);
+        }
+        self.batcher
+            .next_deadline(now)
+            .map(|d| d.duration_since(self.epoch).as_secs_f64().max(clock_s))
+    }
+}
+
+/// The contention-aware network stage: a [`FabricSpec`] (topology +
+/// backend→accel endpoint map) driving an incremental
+/// [`FabricEngine`], plus the flow→continuation table, the wake-up
+/// versioning, and the per-device busy clock.
+///
+/// Flow completion times change whenever the active flow set changes,
+/// so a previously armed wake-up event can go stale; every mutation
+/// bumps `wake_version` and arms a fresh wake-up at the engine's new
+/// earliest completion, and handlers drop wake-ups whose version is
+/// not current.
+pub struct FabricLayer {
+    pub(crate) spec: FabricSpec,
+    pub(crate) engine: FabricEngine,
+    pub(crate) cont: BTreeMap<u64, FlowCont>,
+    pub(crate) wake_version: u64,
+    /// Per-backend device-busy horizon: fabric batches execute
+    /// strictly one at a time per device ([`Self::occupy`]).
+    pub(crate) busy_until_s: Vec<f64>,
+}
+
+/// What happens when a fabric flow finishes: `token` indexes the
+/// pipeline's in-transit batch table.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum FlowCont {
+    /// Request payload arrived at the accelerator.
+    In { token: usize },
+    /// Model weights arrived at the accelerator (residency stage).
+    Swap { token: usize },
+    /// Result payload arrived back at the host.
+    Out { token: usize },
+}
+
+impl FabricLayer {
+    pub(crate) fn new(spec: FabricSpec, n_backends: usize) -> FabricLayer {
+        spec.validate(n_backends);
+        let engine = FabricEngine::new(spec.topology.clone());
+        FabricLayer {
+            spec,
+            engine,
+            cont: BTreeMap::new(),
+            wake_version: 0,
+            busy_until_s: vec![0.0; n_backends],
+        }
+    }
+
+    /// Serialize one batch onto a backend's device: execution starts
+    /// at `max(ready, device free)` (work-conserving — a batch whose
+    /// payload lands first runs first), never overlapping the
+    /// previous batch.  Returns `(device wait, completion time)` and
+    /// advances the device clock.  The dispatch-time `queue_s`
+    /// reservation remains the *routing* signal; this clock is the
+    /// physical exclusivity constraint.
+    pub(crate) fn occupy(&mut self, backend: usize, ready_s: f64, exec_s: f64) -> (f64, f64) {
+        let start_s = ready_s.max(self.busy_until_s[backend]);
+        let done_s = start_s + exec_s;
+        self.busy_until_s[backend] = done_s;
+        (start_s - ready_s, done_s)
+    }
+
+    /// Stale-check a wake-up; when current, drain every finished
+    /// flow and hand back its continuation (`None` = stale, drop it).
+    pub(crate) fn drain_wake(&mut self, version: u64, clock_s: f64) -> Option<Vec<FlowCont>> {
+        if version != self.wake_version {
+            return None;
+        }
+        let done = self.engine.take_completed(clock_s);
+        Some(
+            done.iter()
+                .map(|flow| self.cont.remove(flow).expect("completed flow has a continuation"))
+                .collect(),
+        )
+    }
+
+    /// Bump the wake version and return the `(time, version)` to arm
+    /// at the engine's earliest completion; `None` when idle.
+    pub(crate) fn next_wake(&mut self, clock_s: f64) -> Option<(f64, u64)> {
+        let t = self.engine.next_completion_s()?;
+        self.wake_version += 1;
+        Some((t.max(clock_s), self.wake_version))
+    }
+
+    /// Does `backend` sit behind the shared fabric (vs in its node)?
+    pub(crate) fn is_remote(&self, backend: usize) -> bool {
+        self.spec.topology.is_pooled(self.spec.accel_of_backend[backend])
+    }
+
+    pub(crate) fn accel(&self, backend: usize) -> usize {
+        self.spec.accel_of_backend[backend]
+    }
+
+    /// Uncontended round trip for a payload — the degenerate
+    /// [`crate::netsim::Link`] charge the fabric collapses to with
+    /// one flow on a 1:1 topology; measured transfer time beyond it
+    /// is the *contention* share.
+    pub(crate) fn ideal_rtt_s(&self, bytes_total: f64) -> f64 {
+        self.spec.topology.link().rtt_overhead_s(bytes_total)
+    }
+}
+
+/// Per-backend LRU model residency (most recently used last).
+#[derive(Debug, Clone, Default)]
+pub struct Residency {
+    slots: usize,
+    held: Vec<String>,
+}
+
+impl Residency {
+    pub(crate) fn new(slots: usize) -> Residency {
+        Residency { slots, held: Vec::new() }
+    }
+
+    /// Record a dispatch of `model`; returns true on a residency
+    /// miss (the swap is charged), false on a hit.
+    pub(crate) fn touch(&mut self, model: &str) -> bool {
+        if let Some(pos) = self.held.iter().position(|m| m == model) {
+            let m = self.held.remove(pos);
+            self.held.push(m);
+            return false;
+        }
+        self.held.push(model.to_string());
+        if self.held.len() > self.slots {
+            self.held.remove(0);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_residency_touch_semantics() {
+        let mut r = Residency::new(2);
+        assert!(r.touch("a")); // miss: first sighting
+        assert!(r.touch("b"));
+        assert!(!r.touch("a")); // hit, refreshes a
+        assert!(r.touch("c")); // evicts b (LRU)
+        assert!(r.touch("b")); // b gone: miss again
+        assert!(!r.touch("c")); // c survived (a was evicted by b)
+    }
+}

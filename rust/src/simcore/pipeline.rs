@@ -1,0 +1,685 @@
+//! The shared request lifecycle: routing → batching → (residency) →
+//! dispatch → service → completion, over either the legacy
+//! fixed-charge link or the multi-phase contention-aware fabric.
+//!
+//! See the [module docs](super) for the effects protocol.  The rule
+//! that makes the extraction behaviour-preserving: every effect is
+//! appended in **exactly** the order the pre-refactor engines pushed
+//! the corresponding event or record, because event-queue insertion
+//! order defines heap sequence numbers and record order defines the
+//! golden JSON.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{policy, Backend, Policy};
+use crate::devices::{profiles, ModelProfile};
+use crate::fabric::FabricSpec;
+use crate::netsim::dir_payload_bytes;
+
+use crate::eventsim::equeue::{CLASS_COMPLETION, CLASS_DEADLINE};
+
+use super::{BatchStage, Batching, FabricLayer, FlowCont, Residency};
+
+/// Pipeline-owned events: the engine wraps them in its own event enum
+/// and hands them back to [`Pipeline::handle`] when they pop.
+#[derive(Debug, Clone)]
+pub enum PipeEvent {
+    /// Re-check the batcher's deadline-ready queues.
+    BatchDeadline,
+    /// A direct-path batch finished; ids index the request metadata.
+    Completion { ids: Vec<usize> },
+    /// The fabric engine's earliest flow completion (stale when
+    /// `version` is no longer current — see [`FabricLayer`]).
+    FabricWake { version: u64 },
+    /// A batch's request payload finished its fixed-latency tail and
+    /// is at the accelerator; begin queue + execution.
+    XferInDone { token: usize },
+    /// A batch's device execution finished; start the result flow.
+    ServiceDone { token: usize },
+    /// The result payload is back at the host; complete the batch.
+    XferOutDone { token: usize },
+}
+
+/// How a dispatched batch will complete.
+#[derive(Debug, Clone, Copy)]
+pub enum Outcome {
+    /// Legacy fixed-charge path: the completion instant (and every
+    /// phase share) is known at dispatch.
+    Direct { wait_s: f64, swap_s: f64, link_s: f64, exec_s: f64, complete_s: f64 },
+    /// Fabric path: transit `token` opened; the measured timings land
+    /// with the matching [`Completed`] effect.
+    InFlight { token: usize },
+}
+
+/// One batch the pipeline dispatched: the engine opens its records
+/// (in effect order — record order is part of the golden contract).
+#[derive(Debug, Clone)]
+pub struct Dispatched {
+    pub ids: Vec<usize>,
+    pub backend: usize,
+    pub batch_samples: usize,
+    pub outcome: Outcome,
+}
+
+/// Measured phase timings of a fabric batch, filled when the result
+/// lands: `swap_s` is the *excess* residency wait not hidden behind
+/// the payload transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct TransitTiming {
+    pub wait_s: f64,
+    pub swap_s: f64,
+    pub link_s: f64,
+    pub contention_s: f64,
+    pub exec_s: f64,
+}
+
+/// One batch whose completion fired: `timing` is `None` on the direct
+/// path (the engine already knows the completion fields from
+/// [`Outcome::Direct`]); on the fabric path `token` identifies the
+/// transit whose record block the engine opened at dispatch.
+#[derive(Debug, Clone)]
+pub struct Completed {
+    pub ids: Vec<usize>,
+    pub token: Option<usize>,
+    pub timing: Option<TransitTiming>,
+}
+
+/// Everything a pipeline call produced, in exact legacy push order.
+#[derive(Debug, Default)]
+pub struct Effects {
+    /// `(time, event-queue class, event)` to insert, in order.
+    pub scheduled: Vec<(f64, u8, PipeEvent)>,
+    pub dispatched: Vec<Dispatched>,
+    pub completed: Vec<Completed>,
+}
+
+/// The residency stage's knobs (engaged only when configured).
+#[derive(Debug, Clone, Copy)]
+pub struct ResidencySpec {
+    /// Models resident per backend (LRU eviction).
+    pub slots: usize,
+    /// Seconds charged when a backend serves a model it doesn't hold.
+    pub swap_s: f64,
+}
+
+#[derive(Debug, Clone)]
+struct ReqMeta {
+    rank: usize,
+    model: String,
+    samples: usize,
+}
+
+/// One batch in flight through the fabric.  The weights-ready fields
+/// are inert for engines without a residency stage (`swap_done` is
+/// true from creation and the gate never parks).
+#[derive(Debug, Clone)]
+struct Transit {
+    ids: Vec<usize>,
+    backend: usize,
+    accel: usize,
+    host: usize,
+    /// Model the batch serves (the weights-ready gate's key).
+    model: String,
+    bytes_out: f64,
+    dispatch_s: f64,
+    net_in_s: f64,
+    /// When the payload's fixed tail landed (valid once `in_done`).
+    in_done_s: f64,
+    in_done: bool,
+    swap_done: bool,
+    /// Service already scheduled (guards double-starts when a parked
+    /// batch is re-tried by the weights-ready drain).
+    started: bool,
+    /// Swap time *not* hidden behind the payload transfer: the serial
+    /// residency charge on the batch's critical chain.
+    swap_excess_s: f64,
+    wait_s: f64,
+    exec_s: f64,
+    out_start_s: f64,
+    ideal_rtt_s: f64,
+}
+
+/// The engine-agnostic pipeline: backends + policy + batching +
+/// residency + fabric, driven through submit/handle/take_effects.
+pub struct Pipeline {
+    backends: Vec<Box<dyn Backend>>,
+    policy: Policy,
+    hermit_tier: Vec<usize>,
+    mir_tier: Vec<usize>,
+    hermit_profile: ModelProfile,
+    mir_profile: ModelProfile,
+    rr_cursor: usize,
+    affinity: BTreeMap<String, usize>,
+    clock_s: f64,
+    batcher: Option<BatchStage>,
+    fabric: Option<FabricLayer>,
+    residency: Option<Vec<Residency>>,
+    swap_cfg_s: f64,
+    transits: Vec<Transit>,
+    /// When a (backend, model)'s weights land: `INFINITY` while the
+    /// swap flow is still on the wire (followers must not execute
+    /// before the weights arrive — the residency `touch` marks the
+    /// model resident at dispatch, this gate makes that honest).
+    swap_ready_s: BTreeMap<(usize, String), f64>,
+    /// Batches parked on an in-transit swap, by its key.
+    swap_waiters: BTreeMap<(usize, String), Vec<usize>>,
+    req_meta: Vec<ReqMeta>,
+    submitted: u64,
+    dispatched: u64,
+    completed: u64,
+    batches: u64,
+    swaps: u64,
+    swap_time_s: f64,
+    effects: Effects,
+}
+
+impl Pipeline {
+    pub fn new(
+        backends: Vec<Box<dyn Backend>>,
+        policy: Policy,
+        hermit_tier: Vec<usize>,
+        mir_tier: Vec<usize>,
+        batching: Batching,
+        residency: Option<ResidencySpec>,
+    ) -> Pipeline {
+        assert!(!backends.is_empty(), "pipeline needs at least one backend");
+        assert!(!hermit_tier.is_empty(), "hermit tier must not be empty");
+        assert!(hermit_tier.iter().chain(&mir_tier).all(|&i| i < backends.len()));
+        if let Some(spec) = residency {
+            assert!(spec.slots >= 1);
+            assert!(spec.swap_s >= 0.0 && spec.swap_s.is_finite());
+        }
+        let batcher = BatchStage::from_config(batching);
+        let residency_state =
+            residency.map(|spec| backends.iter().map(|_| Residency::new(spec.slots)).collect());
+        Pipeline {
+            backends,
+            policy,
+            hermit_tier,
+            mir_tier,
+            hermit_profile: profiles::hermit(),
+            mir_profile: profiles::mir_noln(),
+            rr_cursor: 0,
+            affinity: BTreeMap::new(),
+            clock_s: 0.0,
+            batcher,
+            fabric: None,
+            residency: residency_state,
+            swap_cfg_s: residency.map_or(0.0, |spec| spec.swap_s),
+            transits: Vec::new(),
+            swap_ready_s: BTreeMap::new(),
+            swap_waiters: BTreeMap::new(),
+            req_meta: Vec::new(),
+            submitted: 0,
+            dispatched: 0,
+            completed: 0,
+            batches: 0,
+            swaps: 0,
+            swap_time_s: 0.0,
+            effects: Effects::default(),
+        }
+    }
+
+    /// Attach the contention-aware fabric: remote dispatches become
+    /// flow events instead of the fixed link charge.
+    pub fn attach_fabric(&mut self, spec: FabricSpec) {
+        self.fabric = Some(FabricLayer::new(spec, self.backends.len()));
+    }
+
+    // ----------------------------------------------------- effects
+
+    /// Drain everything accumulated since the last call, in exact
+    /// dispatch/push order.
+    pub fn take_effects(&mut self) -> Effects {
+        std::mem::take(&mut self.effects)
+    }
+
+    // --------------------------------------------------- accessors
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Requests that have entered the router.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Requests dispatched to a backend (inside some batch).
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Requests whose completion fired.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Batches dispatched so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Residency misses so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Seconds of swap time charged (legacy path) or measured on the
+    /// wire (fabric path).
+    pub fn swap_time_s(&self) -> f64 {
+        self.swap_time_s
+    }
+
+    /// Requests waiting in the batching window.
+    pub fn batcher_pending(&self) -> u64 {
+        self.batcher.as_ref().map_or(0, BatchStage::pending)
+    }
+
+    /// Metadata of request `id` as submitted: `(rank, model,
+    /// samples)`.  The pipeline is the single metadata store; engines
+    /// keep only what the pipeline cannot know (emission times, step
+    /// membership, record indices), id-aligned by submit order.
+    pub fn request(&self, id: usize) -> (usize, &str, usize) {
+        let m = &self.req_meta[id];
+        (m.rank, &m.model, m.samples)
+    }
+
+    // ----------------------------------------------------- run loop
+
+    /// Advance virtual time: every backend's routing queue drains.
+    pub fn advance_to(&mut self, t_s: f64) {
+        let dt = t_s - self.clock_s;
+        if dt <= 0.0 {
+            return;
+        }
+        for b in &mut self.backends {
+            b.drain_queue_s(dt);
+        }
+        self.clock_s = t_s;
+    }
+
+    /// One request enters the router at the current clock; returns
+    /// the request id (engines keep a parallel metadata store —
+    /// ids are assigned in submit order, so the stores align).
+    pub fn submit(&mut self, rank: usize, model: String, samples: usize) -> usize {
+        self.submitted += 1;
+        let id = self.req_meta.len();
+        self.req_meta.push(ReqMeta { rank, model: model.clone(), samples });
+        if self.batcher.is_some() {
+            let stage = self.batcher.as_mut().unwrap();
+            stage.enqueue(&model, id as u64, samples, self.clock_s);
+            // Arrival path: dispatch only queues the *size* trigger
+            // filled; deadline-expired queues close via their
+            // wake-up, after every same-instant arrival (see
+            // [`BatchStage`]).
+            let ready = stage.drain_size_ready();
+            for ids in ready {
+                self.dispatch(ids);
+            }
+            self.arm_batch_wakeup();
+        } else {
+            self.dispatch(vec![id]);
+        }
+        id
+    }
+
+    /// A pipeline event popped off the engine's queue.
+    pub fn handle(&mut self, event: PipeEvent) {
+        match event {
+            PipeEvent::BatchDeadline => self.pump_batcher(),
+            PipeEvent::Completion { ids } => self.complete(ids, None, None),
+            PipeEvent::FabricWake { version } => self.on_fabric_wake(version),
+            PipeEvent::XferInDone { token } => self.on_xfer_in_done(token),
+            PipeEvent::ServiceDone { token } => self.on_service_done(token),
+            PipeEvent::XferOutDone { token } => self.on_xfer_out_done(token),
+        }
+    }
+
+    // ---------------------------------------------------- batching
+
+    /// Schedule the next batch-close wake-up [`BatchStage`] asks for.
+    fn arm_batch_wakeup(&mut self) {
+        if let Some(t) = self.batcher.as_ref().unwrap().wakeup_at(self.clock_s) {
+            self.effects.scheduled.push((t, CLASS_DEADLINE, PipeEvent::BatchDeadline));
+        }
+    }
+
+    /// Deadline wake-up: drain every ready batcher queue at the
+    /// current virtual time, then arm the next future deadline.
+    fn pump_batcher(&mut self) {
+        let ready = self.batcher.as_mut().unwrap().drain_ready(self.clock_s);
+        for ids in ready {
+            self.dispatch(ids);
+        }
+        self.arm_batch_wakeup();
+    }
+
+    // ----------------------------------------------------- routing
+
+    /// Route one batch (same-instance request ids) exactly as the
+    /// analytic cluster would: policy selection over the candidate
+    /// tier, the residency touch (when configured), then either the
+    /// legacy fixed-charge path or the multi-phase fabric path.
+    fn dispatch(&mut self, ids: Vec<usize>) {
+        debug_assert!(!ids.is_empty());
+        let rank0 = self.req_meta[ids[0]].rank;
+        let model = self.req_meta[ids[0]].model.clone();
+        let total: usize = ids.iter().map(|&i| self.req_meta[i].samples).sum();
+        let is_mir = model.starts_with("mir");
+        let profile =
+            if is_mir { self.mir_profile.clone() } else { self.hermit_profile.clone() };
+        let candidates: &[usize] = if is_mir { &self.mir_tier } else { &self.hermit_tier };
+        let idx = policy::select(
+            self.policy,
+            &self.backends,
+            &mut self.rr_cursor,
+            &mut self.affinity,
+            candidates,
+            &model,
+            &profile,
+            total,
+        );
+        let miss = match self.residency.as_mut() {
+            Some(residency) => residency[idx].touch(&model),
+            None => false,
+        };
+        if miss {
+            self.swaps += 1;
+        }
+        if self.fabric.as_ref().is_some_and(|f| f.is_remote(idx)) {
+            self.dispatch_remote(ids, idx, total, &profile, miss, rank0, model);
+            return;
+        }
+        let swap_s = if miss { self.swap_cfg_s } else { 0.0 };
+        if miss {
+            self.swap_time_s += swap_s;
+        }
+        let backend = &mut self.backends[idx];
+        let wait_s = backend.queue_s();
+        let link_s = backend.link_overhead_s(&profile, total);
+        let exec_s = backend.execute_s(&profile, total);
+        let latency_s = wait_s + swap_s + (link_s + exec_s);
+        let occupancy = backend.occupancy_s(&profile, total) + swap_s;
+        backend.add_queue_s(occupancy);
+        let complete_s = self.clock_s + latency_s;
+        self.effects.dispatched.push(Dispatched {
+            ids: ids.clone(),
+            backend: idx,
+            batch_samples: total,
+            outcome: Outcome::Direct { wait_s, swap_s, link_s, exec_s, complete_s },
+        });
+        self.dispatched += ids.len() as u64;
+        self.batches += 1;
+        self.effects.scheduled.push((
+            complete_s,
+            CLASS_COMPLETION,
+            PipeEvent::Completion { ids },
+        ));
+    }
+
+    // ----------------------------------------------- fabric phases
+
+    /// Remote dispatch over the fabric: the request payload starts
+    /// its flow immediately; on a residency miss the model's weights
+    /// start *their* flow at the same instant (prefetch), riding the
+    /// same accel-leaf downlink and rx NIC — swap traffic congests
+    /// inference.  Execution begins once both have landed; the result
+    /// rides its own flow home.  A router-coalesced batch travels as
+    /// one flow attributed to the leading request's host (batching
+    /// happens at the host leaf).  The FIFO slot is reserved **at
+    /// dispatch** (`queue_s` reflects committed work immediately), so
+    /// the routing policies see exactly the feedback the legacy path
+    /// gives them.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_remote(
+        &mut self,
+        ids: Vec<usize>,
+        idx: usize,
+        total: usize,
+        profile: &ModelProfile,
+        miss: bool,
+        rank0: usize,
+        model: String,
+    ) {
+        let (bytes_in, bytes_out) =
+            dir_payload_bytes(profile.input_elems, profile.output_elems, total);
+        let fab = self.fabric.as_ref().expect("remote dispatch without a fabric");
+        let accel = fab.accel(idx);
+        let host = fab.spec.host_of_rank(rank0);
+        let ideal_rtt_s = fab.ideal_rtt_s(bytes_in + bytes_out);
+        // Sized so an uncontended swap takes exactly `swap_s` at the
+        // endpoint's single-stream bandwidth — the degenerate charge.
+        let swap_bytes = self.swap_cfg_s * fab.spec.topology.link().eff_bandwidth;
+
+        // reserve the backend's routing queue now: transfers are
+        // explicit, so the batch occupies the device for its
+        // execution time only, and policies see committed work
+        // immediately (the physical one-batch-at-a-time constraint
+        // is [`FabricLayer::occupy`]'s device clock)
+        let backend = &mut self.backends[idx];
+        let exec_s = backend.execute_s(profile, total);
+        backend.add_queue_s(exec_s);
+
+        let token = self.transits.len();
+        self.effects.dispatched.push(Dispatched {
+            ids: ids.clone(),
+            backend: idx,
+            batch_samples: total,
+            outcome: Outcome::InFlight { token },
+        });
+        self.dispatched += ids.len() as u64;
+        self.batches += 1;
+
+        let needs_swap_flow = miss && swap_bytes > 0.0;
+        if needs_swap_flow {
+            // weights are on the wire: same-model followers routed
+            // here park until they land (the residency touch already
+            // counts the model resident, this keeps it honest)
+            self.swap_ready_s.insert((idx, model.clone()), f64::INFINITY);
+        }
+        self.transits.push(Transit {
+            ids,
+            backend: idx,
+            accel,
+            host,
+            model,
+            bytes_out,
+            dispatch_s: self.clock_s,
+            net_in_s: 0.0,
+            in_done_s: 0.0,
+            in_done: false,
+            swap_done: !needs_swap_flow,
+            started: false,
+            swap_excess_s: 0.0,
+            wait_s: 0.0,
+            exec_s,
+            out_start_s: 0.0,
+            ideal_rtt_s,
+        });
+
+        let clock = self.clock_s;
+        let fab = self.fabric.as_mut().expect("checked above");
+        let path = fab.spec.topology.request_path(host, accel);
+        let flow = fab.engine.start(clock, path, bytes_in);
+        fab.cont.insert(flow, FlowCont::In { token });
+        if needs_swap_flow {
+            let path = fab.spec.topology.swap_path(accel);
+            let flow = fab.engine.start(clock, path, swap_bytes);
+            fab.cont.insert(flow, FlowCont::Swap { token });
+        }
+        self.arm_fabric();
+    }
+
+    /// Re-arm the fabric wake-up at the engine's (new) earliest flow
+    /// completion; called after every flow start/finish.  Earlier
+    /// armed wake-ups become stale through the version bump.
+    fn arm_fabric(&mut self) {
+        let clock = self.clock_s;
+        let armed = self.fabric.as_mut().expect("arm_fabric without a fabric").next_wake(clock);
+        if let Some((t, version)) = armed {
+            self.effects.scheduled.push((
+                t,
+                CLASS_COMPLETION,
+                PipeEvent::FabricWake { version },
+            ));
+        }
+    }
+
+    /// A fabric wake-up fired: drain finished flows.  Payload and
+    /// result flows get their direction's fixed-latency tail as a
+    /// scheduled event; swap completions take effect immediately (a
+    /// bulk weight stream has no per-message rendezvous).
+    fn on_fabric_wake(&mut self, version: u64) {
+        let clock = self.clock_s;
+        let conts = {
+            let Some(fab) = self.fabric.as_mut() else { return };
+            let Some(conts) = fab.drain_wake(version, clock) else {
+                return; // stale: a newer wake-up is armed
+            };
+            conts
+        };
+        for cont in conts {
+            match cont {
+                FlowCont::In { token } => {
+                    let fixed = self.dir_fixed_of(token);
+                    self.effects.scheduled.push((
+                        self.clock_s + fixed,
+                        CLASS_COMPLETION,
+                        PipeEvent::XferInDone { token },
+                    ));
+                }
+                FlowCont::Swap { token } => {
+                    let measured = self.clock_s - self.transits[token].dispatch_s;
+                    self.swap_time_s += measured;
+                    self.transits[token].swap_done = true;
+                    // the weights landed: unblock this batch, then
+                    // every same-model follower parked behind it
+                    let key =
+                        (self.transits[token].backend, self.transits[token].model.clone());
+                    self.swap_ready_s.insert(key.clone(), self.clock_s);
+                    self.try_begin_service(token);
+                    if let Some(waiters) = self.swap_waiters.remove(&key) {
+                        for waiter in waiters {
+                            self.try_begin_service(waiter);
+                        }
+                    }
+                }
+                FlowCont::Out { token } => {
+                    let fixed = self.dir_fixed_of(token);
+                    self.effects.scheduled.push((
+                        self.clock_s + fixed,
+                        CLASS_COMPLETION,
+                        PipeEvent::XferOutDone { token },
+                    ));
+                }
+            }
+        }
+        if self.fabric.is_some() {
+            self.arm_fabric();
+        }
+    }
+
+    fn dir_fixed_of(&self, token: usize) -> f64 {
+        let fab = self.fabric.as_ref().expect("fabric phase without a fabric");
+        fab.spec.topology.dir_fixed_s(self.transits[token].accel)
+    }
+
+    /// The request payload is at the accelerator.
+    fn on_xfer_in_done(&mut self, token: usize) {
+        let tr = &mut self.transits[token];
+        tr.net_in_s = self.clock_s - tr.dispatch_s;
+        tr.in_done_s = self.clock_s;
+        tr.in_done = true;
+        self.try_begin_service(token);
+    }
+
+    /// Begin execution once the payload has landed, the batch's own
+    /// swap (on a miss) has landed, **and** the model's weights are
+    /// actually on the backend — a follower routed to a backend whose
+    /// weights are still on the wire parks until they arrive (the
+    /// wait lands in its `swap_s` component).  The batch then
+    /// executes as soon as the device frees up ([`FabricLayer::occupy`]
+    /// — strictly one batch at a time per device, work-conserving
+    /// order).
+    fn try_begin_service(&mut self, token: usize) {
+        let clock = self.clock_s;
+        let (ready, idx, exec_s, in_done_s) = {
+            let tr = &self.transits[token];
+            (!tr.started && tr.in_done && tr.swap_done, tr.backend, tr.exec_s, tr.in_done_s)
+        };
+        if !ready {
+            return;
+        }
+        let key = (idx, self.transits[token].model.clone());
+        if self.swap_ready_s.get(&key).is_some_and(|t| t.is_infinite()) {
+            self.swap_waiters.entry(key).or_default().push(token);
+            return;
+        }
+        let fab = self.fabric.as_mut().expect("fabric phase without a fabric");
+        let (wait_s, done_s) = fab.occupy(idx, clock, exec_s);
+        // Re-sync the routing signal with the device horizon: long
+        // transfers/swaps can outlive the dispatch-time reservation's
+        // wall-time drain, and the policies must keep seeing the
+        // serialized backlog `occupy` is accumulating.
+        let backend = &mut self.backends[idx];
+        let deficit = (done_s - clock) - backend.queue_s();
+        if deficit > 0.0 {
+            backend.add_queue_s(deficit);
+        }
+        let tr = &mut self.transits[token];
+        tr.started = true;
+        tr.swap_excess_s = clock - in_done_s;
+        tr.wait_s = wait_s;
+        self.effects.scheduled.push((
+            done_s,
+            CLASS_COMPLETION,
+            PipeEvent::ServiceDone { token },
+        ));
+    }
+
+    /// Execution finished: send the result payload home.
+    fn on_service_done(&mut self, token: usize) {
+        let (host, accel, bytes_out) = {
+            let tr = &self.transits[token];
+            (tr.host, tr.accel, tr.bytes_out)
+        };
+        self.transits[token].out_start_s = self.clock_s;
+        let clock = self.clock_s;
+        let fab = self.fabric.as_mut().expect("fabric phase without a fabric");
+        let path = fab.spec.topology.response_path(host, accel);
+        let flow = fab.engine.start(clock, path, bytes_out);
+        fab.cont.insert(flow, FlowCont::Out { token });
+        self.arm_fabric();
+    }
+
+    /// The result landed: hand the engine the measured phase timings
+    /// and run the shared completion accounting.
+    fn on_xfer_out_done(&mut self, token: usize) {
+        let (ids, timing) = {
+            let tr = &self.transits[token];
+            let net_out_s = self.clock_s - tr.out_start_s;
+            let link_s = tr.net_in_s + net_out_s;
+            (
+                tr.ids.clone(),
+                TransitTiming {
+                    wait_s: tr.wait_s,
+                    swap_s: tr.swap_excess_s,
+                    link_s,
+                    contention_s: (link_s - tr.ideal_rtt_s).max(0.0),
+                    exec_s: tr.exec_s,
+                },
+            )
+        };
+        self.complete(ids, Some(token), Some(timing));
+    }
+
+    fn complete(&mut self, ids: Vec<usize>, token: Option<usize>, timing: Option<TransitTiming>) {
+        self.completed += ids.len() as u64;
+        self.effects.completed.push(Completed { ids, token, timing });
+    }
+}

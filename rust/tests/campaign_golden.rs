@@ -30,7 +30,7 @@ use std::path::PathBuf;
 
 use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::eventsim::ArrivalProcess;
-use cogsim_disagg::harness::campaign::{
+use cogsim_disagg::harness::{
     run_campaign, run_cog_campaign, run_cog_scenario, run_event_campaign, run_event_scenario,
     run_scenario_with_link, CampaignConfig, CogCampaignConfig, EventCampaignConfig, Topology,
 };

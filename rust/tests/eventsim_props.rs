@@ -6,7 +6,7 @@
 use cogsim_disagg::cluster::{Backend, GpuBackend, Policy, RduBackend};
 use cogsim_disagg::devices::{Api, Gpu};
 use cogsim_disagg::eventsim::{ArrivalProcess, Batching, EventSim, EventSimConfig};
-use cogsim_disagg::harness::campaign::{run_event_campaign, EventCampaignConfig};
+use cogsim_disagg::harness::{run_event_campaign, EventCampaignConfig};
 use cogsim_disagg::rdu::RduApi;
 use cogsim_disagg::util::json;
 

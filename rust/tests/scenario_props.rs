@@ -1,0 +1,251 @@
+//! Properties of the declarative scenario grid's new heterogeneous
+//! **fleet axis** — mixed GPU+RDU pools swept through all three
+//! workload kinds from one config — plus the pinned hybrid-pool
+//! headline.
+//!
+//! Every numeric assertion below (the ±2 % pinned TTS values, the
+//! affinity swap counts, the conservation volumes) was computed
+//! out-of-band with the `python/sim` transliteration of the whole
+//! pipeline, the same code that generates the committed goldens
+//! byte-exactly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use cogsim_disagg::cluster::Policy;
+use cogsim_disagg::eventsim::{ArrivalProcess, Batching, CogSim, CogSimConfig, EventSim,
+                              EventSimConfig};
+use cogsim_disagg::harness::{
+    build_fabric_spec, build_fleet, run_cell, run_grid, Axes, CellSummary, Fleet, Grid, Kind,
+    Knobs, Scenario, Topology,
+};
+use cogsim_disagg::netsim::Link;
+
+const MIXED: Fleet = Fleet::Mixed { gpus: 4, rdus: 2 };
+
+/// One cog cell on the pooled topology (the fleet-axis workhorse).
+fn cog_cell(fleet: Fleet, policy: Policy, ranks: usize, swap_s: f64, oversub: f64) -> Scenario {
+    Scenario {
+        kind: Kind::Cog,
+        topology: Topology::Pooled,
+        fleet,
+        policy,
+        ranks,
+        arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+        window_us: 0.0,
+        models: 8,
+        swap_s,
+        overlap: 0.0,
+        oversub,
+    }
+}
+
+fn cog_tts(fleet: Fleet, ranks: usize) -> f64 {
+    let cell = cog_cell(fleet, Policy::LatencyAware, ranks, 0.0, 1.0);
+    match run_cell(&cell, &Knobs::default()).summary {
+        CellSummary::Cog(s) => s.time_to_solution_s,
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn one_config_runs_the_mixed_fleet_in_all_three_kinds_and_conserves() {
+    // One declarative grid, the 4xGPU+2xRDU pool, three engines.
+    // Volumes (python/sim): analytic routes every submitted sample;
+    // event sees 11 bursts x 8 ranks x 6 = 528 requests; cog sees
+    // 8 ranks x 8 steps x 6 = 384 — all completed, nothing dropped.
+    let grid = Grid {
+        axes: Axes {
+            kinds: Kind::ALL.to_vec(),
+            topologies: vec![Topology::Pooled],
+            fleets: vec![MIXED],
+            policies: vec![Policy::LeastOutstanding],
+            rank_counts: vec![8],
+            fabric_oversubs: vec![2.0],
+            ..Axes::default()
+        },
+        knobs: Knobs::default(),
+    };
+    let result = run_grid(&grid);
+    assert_eq!(result.cells.len(), 3, "one cell per kind");
+
+    let analytic = result.cells[0].analytic().expect("kind order: analytic first");
+    assert_eq!(analytic.backends.len(), 6, "4 GPUs + 2 RDUs");
+    let routed: u64 = analytic.backends.iter().map(|b| b.samples).sum();
+    assert_eq!(routed, analytic.hydra.samples + analytic.mir.samples, "sample conservation");
+    assert!(analytic.hydra.mean_link_overhead_s > 0.0, "mixed pool is remote");
+
+    let event = result.cells[1].event().expect("kind order: event second");
+    assert_eq!(event.requests, 11 * 8 * 6, "11 bursts x 8 ranks x 6 requests");
+    assert!(event.mean_link_overhead_s > 0.0);
+
+    let cog = result.cells[2].cog().expect("kind order: cog third");
+    assert_eq!(cog.requests, 8 * 8 * 6, "8 ranks x 8 steps x 6 requests");
+    assert_eq!(cog.timesteps, 8);
+    assert!(cog.total_network_s > 0.0, "mixed pool rides the fabric");
+}
+
+#[test]
+fn mixed_fleet_event_run_conserves_and_exercises_every_member() {
+    // Drive the event engine directly on the mixed pool so we can see
+    // per-record routing: every request completes and every pool
+    // member — GPU and RDU alike — serves traffic under
+    // least-outstanding (python/sim: backend request counts
+    // {0:66, 1:66, 2:55, 3:55, 4:198, 5:88}).
+    let (backends, tier) = build_fleet(Topology::Pooled, 8, MIXED, &Link::infiniband_cx6());
+    assert_eq!(backends.len(), 6);
+    let spec = build_fabric_spec(Topology::Pooled, 8, MIXED, 2.0).expect("pooled has a fabric");
+    let cfg = EventSimConfig { ranks: 8, ..Default::default() };
+    let mut sim = EventSim::with_fabric(
+        backends,
+        Policy::LeastOutstanding,
+        cfg,
+        tier.hermit,
+        tier.mir,
+        spec,
+    );
+    sim.run_to_completion();
+    assert_eq!(sim.submitted(), 528);
+    assert_eq!(sim.completed(), sim.submitted());
+    assert_eq!(sim.in_flight(), 0);
+    let mut per_backend = vec![0u64; 6];
+    for r in sim.records() {
+        per_backend[r.backend] += 1;
+        assert!(r.complete_s.is_finite());
+        assert!(r.link_overhead_s > 0.0, "every pool member is remote");
+    }
+    assert!(per_backend.iter().all(|&n| n > 0), "idle pool member: {per_backend:?}");
+    assert_eq!(per_backend.iter().sum::<u64>(), 528);
+}
+
+#[test]
+fn affinity_routing_bounds_distinct_models_per_backend() {
+    // The residency property on the mixed fleet: under sticky
+    // model-affinity routing each model is pinned to exactly one
+    // backend for the whole run, so (a) the model→backend mapping
+    // never changes, (b) no backend ever swaps in more than
+    // min(models, residency_slots · backends) distinct models, and
+    // (c) with enough aggregate slots every model swaps in exactly
+    // once — python/sim: 8 swaps for 8 models, vs 183 under
+    // round-robin's continuous thrash.
+    let run = |policy: Policy| {
+        let (backends, tier) =
+            build_fleet(Topology::Pooled, 8, MIXED, &Link::infiniband_cx6());
+        let spec = build_fabric_spec(Topology::Pooled, 8, MIXED, 1.0).unwrap();
+        let cfg = CogSimConfig {
+            ranks: 8,
+            models: 8,
+            swap_s: 2e-3,
+            residency_slots: 4,
+            batching: Batching::Off,
+            ..Default::default()
+        };
+        let mut sim = CogSim::with_fabric(backends, policy, cfg, tier.hermit, tier.mir, spec);
+        sim.run_to_completion();
+        sim
+    };
+
+    let sim = run(Policy::ModelAffinity);
+    let n_backends = 6usize;
+    let models = 8u64;
+    let slots = 4u64;
+    let mut model_backend: BTreeMap<String, usize> = BTreeMap::new();
+    let mut distinct: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n_backends];
+    for r in sim.records() {
+        if let Some(&prev) = model_backend.get(&r.model) {
+            assert_eq!(prev, r.backend, "affinity mapping moved for {}", r.model);
+        }
+        model_backend.insert(r.model.clone(), r.backend);
+        distinct[r.backend].insert(r.model.clone());
+    }
+    let bound = models.min(slots * n_backends as u64);
+    for (b, set) in distinct.iter().enumerate() {
+        assert!(
+            (set.len() as u64) <= bound,
+            "backend {b} swapped {} distinct models, bound {bound}",
+            set.len()
+        );
+    }
+    assert_eq!(model_backend.len() as u64, models, "every model was sighted");
+    assert_eq!(sim.swaps(), models, "each pinned model swaps in exactly once");
+
+    // contrast: blind round-robin bounces models across the pool and
+    // re-pays the swap continuously
+    let rr = run(Policy::RoundRobin);
+    assert!(
+        rr.swaps() > 2 * sim.swaps(),
+        "round-robin must thrash: {} vs affinity {}",
+        rr.swaps(),
+        sim.swaps()
+    );
+}
+
+#[test]
+fn hybrid_pool_sits_between_pure_pools_at_32_ranks() {
+    // The fleet-axis headline, pinned (python/sim, ±2%): at 32 ranks
+    // on the non-blocking fabric, a 6-member pure-RDU pool clears the
+    // burst fastest (28.56 ms), a pure-GPU pool of the same size is
+    // slowest (46.18 ms), and the 4xGPU+2xRDU hybrid lands strictly
+    // between (36.77 ms) — while the default 2-member pool trails
+    // them all (52.99 ms).  Adding accelerators of *either*
+    // architecture to the pool beats starving it, and latency-aware
+    // routing exploits the fast RDU members in the mix.
+    let within = |x: f64, target: f64| (x / target - 1.0).abs() < 0.02;
+
+    let default32 = cog_tts(Fleet::DefaultPool, 32);
+    let pure_rdu32 = cog_tts(Fleet::Mixed { gpus: 0, rdus: 6 }, 32);
+    let pure_gpu32 = cog_tts(Fleet::Mixed { gpus: 6, rdus: 0 }, 32);
+    let hybrid32 = cog_tts(MIXED, 32);
+
+    assert!(within(default32, 52.99e-3), "default pool at 32 ranks: {default32}");
+    assert!(within(pure_rdu32, 28.56e-3), "pure-RDU pool at 32 ranks: {pure_rdu32}");
+    assert!(within(pure_gpu32, 46.18e-3), "pure-GPU pool at 32 ranks: {pure_gpu32}");
+    assert!(within(hybrid32, 36.77e-3), "hybrid pool at 32 ranks: {hybrid32}");
+
+    assert!(pure_rdu32 < hybrid32, "pure RDUs beat the hybrid mix");
+    assert!(hybrid32 < pure_gpu32, "hybrid beats pure GPUs");
+    assert!(pure_gpu32 < default32, "any 6-member pool beats the starved pair");
+
+    // the low-rank regime keeps the same ordering, just closer
+    let pure_rdu4 = cog_tts(Fleet::Mixed { gpus: 0, rdus: 6 }, 4);
+    let pure_gpu4 = cog_tts(Fleet::Mixed { gpus: 6, rdus: 0 }, 4);
+    let hybrid4 = cog_tts(MIXED, 4);
+    assert!(within(hybrid4, 18.90e-3), "hybrid pool at 4 ranks: {hybrid4}");
+    assert!(pure_rdu4 < hybrid4 && hybrid4 < pure_gpu4);
+}
+
+#[test]
+fn fleet_axis_sweeps_alongside_oversubscription() {
+    // The axis composes with the existing grid: fleets × oversubs
+    // expand only where a pool exists, and every mixed cell stays
+    // monotone in oversubscription like the default pool does.
+    let grid = Grid {
+        axes: Axes {
+            kinds: vec![Kind::Cog],
+            topologies: vec![Topology::Local, Topology::Pooled],
+            fleets: vec![Fleet::DefaultPool, MIXED],
+            policies: vec![Policy::LeastOutstanding],
+            rank_counts: vec![16],
+            fabric_oversubs: vec![1.0, 8.0],
+            ..Axes::default()
+        },
+        knobs: Knobs { timesteps: 4, ..Knobs::default() },
+    };
+    let result = run_grid(&grid);
+    // local collapses both axes: 1 cell; pooled: 2 fleets x 2 oversubs
+    assert_eq!(result.cells.len(), 1 + 4);
+    for fleet in [Fleet::DefaultPool, MIXED] {
+        let tts = |oversub: f64| {
+            result
+                .find(|s| {
+                    s.topology == Topology::Pooled && s.fleet == fleet && s.oversub == oversub
+                })
+                .and_then(|c| c.cog().map(|s| s.time_to_solution_s))
+                .expect("pooled cell ran")
+        };
+        assert!(
+            tts(8.0) >= tts(1.0) - 1e-12,
+            "{}: starving the fabric cannot speed the pool up",
+            fleet.key()
+        );
+    }
+}
