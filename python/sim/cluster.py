@@ -75,6 +75,17 @@ def _least_queued(backends, candidates):
 
 def select(policy, backends, rr_state, affinity, candidates, instance, profile, batch):
     """policy::select; rr_state is a 1-element list (the cursor)."""
+    slot = [affinity.get(instance)]
+    idx = select_slot(policy, backends, rr_state, slot, candidates, profile, batch)
+    if slot[0] is not None:
+        affinity[instance] = slot[0]
+    return idx
+
+
+def select_slot(policy, backends, rr_state, affinity_slot, candidates, profile, batch):
+    """policy::select_slot — the hot-path entry taking the caller's
+    dense per-model affinity slot (a 1-element list) instead of a
+    name-keyed map."""
     assert candidates
     if policy == ROUND_ROBIN:
         idx = candidates[rr_state[0] % len(candidates)]
@@ -83,11 +94,11 @@ def select(policy, backends, rr_state, affinity, candidates, instance, profile, 
     if policy == LEAST_OUTSTANDING:
         return _least_queued(backends, candidates)
     if policy == MODEL_AFFINITY:
-        idx = affinity.get(instance)
+        idx = affinity_slot[0]
         if idx is not None and idx in candidates:
             return idx
         idx = _least_queued(backends, candidates)
-        affinity[instance] = idx
+        affinity_slot[0] = idx
         return idx
     if policy == LATENCY_AWARE:
         best = candidates[0]

@@ -205,7 +205,7 @@ class CogSim:
             if d[0] == "direct":
                 _, ids, idx, total, wait_s, swap_s, link_s, exec_s, complete_s = d
                 for i in ids:
-                    rank, model, samples = self.core.req_meta[i]
+                    rank, model, samples = self.core.request(i)
                     meta = self.pending[i]
                     meta[2] = len(self.records)
                     self.records.append({
@@ -222,7 +222,7 @@ class CogSim:
                 assert token == len(self.rec0_of_token)
                 self.rec0_of_token.append(len(self.records))
                 for i in ids:
-                    rank, model, samples = self.core.req_meta[i]
+                    rank, model, samples = self.core.request(i)
                     meta = self.pending[i]
                     meta[2] = len(self.records)
                     self.records.append({

@@ -190,7 +190,7 @@ class EventSim:
             if d[0] == "direct":
                 _, ids, idx, total, _wait_s, _swap_s, link_s, _exec_s, complete_s = d
                 for i in ids:
-                    rank, m, samples = self.core.req_meta[i]
+                    rank, m, samples = self.core.request(i)
                     self.records.append({
                         "id": i, "rank": rank, "model": m, "samples": samples,
                         "arrival_s": self.arrival_s[i], "dispatch_s": self.clock_s,
@@ -203,7 +203,7 @@ class EventSim:
                 assert token == len(self.rec0_of_token)
                 self.rec0_of_token.append(len(self.records))
                 for i in ids:
-                    rank, m, samples = self.core.req_meta[i]
+                    rank, m, samples = self.core.request(i)
                     self.records.append({
                         "id": i, "rank": rank, "model": m, "samples": samples,
                         "arrival_s": self.arrival_s[i], "dispatch_s": self.clock_s,

@@ -96,6 +96,11 @@ class Topology:
         return [self.accel_down, port[1]]
 
 
+def _usable(capacities, l):
+    # in range with strictly positive capacity; NaN compares False
+    return l < len(capacities) and capacities[l] > 0.0
+
+
 def max_min_rates(capacities, flows):
     n = len(flows)
     rates = [0.0] * n
@@ -104,7 +109,10 @@ def max_min_rates(capacities, flows):
     users = [0] * len(capacities)
 
     for f, path in enumerate(flows):
-        if not path or all(math.isinf(capacities[l]) for l in path):
+        if any(not _usable(capacities, l) for l in path):
+            # guarded degenerate path: zero rate, never a user
+            frozen[f] = True
+        elif not path or all(math.isinf(capacities[l]) for l in path):
             rates[f] = INF
             frozen[f] = True
         else:
@@ -143,9 +151,11 @@ def max_min_rates(capacities, flows):
 class FabricEngine:
     def __init__(self, topo):
         self.topo = topo
-        self.flows = {}  # id -> [path, remaining, rate]; ids monotone
+        # id -> [path, remaining, rate, constrained]; ids monotone
+        self.flows = {}
         self.next_id = 0
         self.now_s = 0.0
+        self.constrained = 0
 
     def active(self):
         return len(self.flows)
@@ -155,7 +165,15 @@ class FabricEngine:
         self.advance_to(now_s)
         fid = self.next_id
         self.next_id += 1
-        self.flows[fid] = [path, bytes_, 0.0]
+        caps = self.topo.capacities
+        # a free-path flow (empty path, or infinite capacity everywhere
+        # it goes) rates at infinity without a re-solve: it never
+        # counts as a link user, so other flows' shares are untouched
+        free = all(l < len(caps) and math.isinf(caps[l]) for l in path)
+        self.flows[fid] = [path, bytes_, INF if free else 0.0, not free]
+        if free:
+            return fid
+        self.constrained += 1
         self._recompute()
         return fid
 
@@ -182,16 +200,25 @@ class FabricEngine:
         return f[1] / f[2]
 
     def next_completion_s(self):
-        if not self.flows:
+        # stalled guarded flows (0 rate) never finish: skip their
+        # infinite ETA rather than arm an infinite wake-up
+        times = [self.now_s + self._eta(f) for f in self.flows.values()]
+        times = [t for t in times if math.isfinite(t)]
+        if not times:
             return None
-        return min(self.now_s + self._eta(f) for f in self.flows.values())
+        return min(times)
 
     def take_completed(self, now_s):
         self.advance_to(now_s)
         done = [fid for fid, f in self.flows.items()
                 if f[1] <= DONE_BYTES or math.isinf(f[2])]
+        constrained_left = 0
         for fid in done:
-            del self.flows[fid]
-        if done:
+            if self.flows.pop(fid)[3]:
+                constrained_left += 1
+        self.constrained -= constrained_left
+        # free flows never held link capacity: their departure cannot
+        # change anyone's rate, so only re-solve for constrained exits
+        if constrained_left:
             self._recompute()
         return done

@@ -36,7 +36,7 @@ import math
 
 import devices
 from batcher import DynamicBatcher, PendingRequest
-from cluster import select
+from cluster import select_slot
 from equeue import CLASS_COMPLETION, CLASS_DEADLINE
 from fabric import FabricEngine
 from netsim import dir_payload_bytes
@@ -164,7 +164,6 @@ class Pipeline:
         self.hermit_profile = devices.hermit()
         self.mir_profile = devices.mir_noln()
         self.rr_state = [0]
-        self.affinity = {}
         self.clock_s = 0.0
         self.batcher = BatchStage(*batching) if batching else None
         self.fabric = fabric
@@ -172,9 +171,17 @@ class Pipeline:
                           if residency else None)
         self.swap_cfg_s = residency[1] if residency else 0.0
         self.transits = []
-        self.swap_ready_s = {}   # (backend, model) -> landing time (inf = in transit)
-        self.swap_waiters = {}   # (backend, model) -> [token]
-        self.req_meta = []       # (rank, model, samples)
+        # Dense per-model tables, grown in lockstep by _intern_model
+        # (mirrors the Rust hot path's usize-indexed tables; the Rust
+        # side's Vec pooling/arena reuse is unobservable and has no
+        # transliteration).
+        self.models = []         # model id -> name
+        self.model_is_mir = []   # model id -> routes to the MIR tier
+        self.affinity = []       # model id -> sticky backend (None = unset)
+        self.swap_ready_s = []   # [model][backend] landing time
+        #                          (-inf = never swapped, +inf = on the wire)
+        self.swap_waiters = []   # [model][backend] -> [token]
+        self.req_meta = []       # (rank, model id, samples)
         self.submitted = 0
         self.dispatched_n = 0
         self.completed_n = 0
@@ -206,11 +213,29 @@ class Pipeline:
             b.drain_queue_s(dt)
         self.clock_s = t_s
 
+    def _intern_model(self, model):
+        """Dense model id for a name (grows every per-model table)."""
+        for mid, name in enumerate(self.models):
+            if name == model:
+                return mid
+        self.models.append(model)
+        self.model_is_mir.append(model.startswith("mir"))
+        self.affinity.append(None)
+        self.swap_ready_s.append([-math.inf] * len(self.backends))
+        self.swap_waiters.append([[] for _ in self.backends])
+        return len(self.models) - 1
+
+    def request(self, id_):
+        """(rank, model name, samples) of a submitted request."""
+        rank, mid, samples = self.req_meta[id_]
+        return rank, self.models[mid], samples
+
     def submit(self, rank, model, samples):
         """One request enters the router at the current clock."""
         self.submitted += 1
+        mid = self._intern_model(model)
         id_ = len(self.req_meta)
-        self.req_meta.append((rank, model, samples))
+        self.req_meta.append((rank, mid, samples))
         if self.batcher is not None:
             self.batcher.enqueue(model, id_, samples, self.clock_s)
             # Arrival path: dispatch only queues the *size* trigger
@@ -255,18 +280,20 @@ class Pipeline:
     # ------------------------------------------------------- routing
 
     def _dispatch(self, ids):
-        rank0, model, _ = self.req_meta[ids[0]]
+        rank0, mid, _ = self.req_meta[ids[0]]
         total = sum(self.req_meta[i][2] for i in ids)
-        is_mir = model.startswith("mir")
+        is_mir = self.model_is_mir[mid]
         profile = self.mir_profile if is_mir else self.hermit_profile
         candidates = self.mir_tier if is_mir else self.hermit_tier
-        idx = select(self.policy, self.backends, self.rr_state, self.affinity,
-                     candidates, model, profile, total)
-        miss = self.residency[idx].touch(model) if self.residency is not None else False
+        slot = [self.affinity[mid]]
+        idx = select_slot(self.policy, self.backends, self.rr_state, slot,
+                          candidates, profile, total)
+        self.affinity[mid] = slot[0]
+        miss = self.residency[idx].touch(mid) if self.residency is not None else False
         if miss:
             self.swaps += 1
         if self.fabric is not None and self.fabric.is_remote(idx):
-            self._dispatch_remote(ids, idx, total, profile, miss, rank0, model)
+            self._dispatch_remote(ids, idx, total, miss, rank0, mid)
             return
         swap_s = self.swap_cfg_s if miss else 0.0
         if miss:
@@ -287,7 +314,8 @@ class Pipeline:
 
     # ------------------------------------------------- fabric phases
 
-    def _dispatch_remote(self, ids, idx, total, profile, miss, rank0, model):
+    def _dispatch_remote(self, ids, idx, total, miss, rank0, mid):
+        profile = self.mir_profile if self.model_is_mir[mid] else self.hermit_profile
         bytes_in, bytes_out = dir_payload_bytes(
             profile.input_elems, profile.output_elems, total)
         fab = self.fabric
@@ -312,10 +340,10 @@ class Pipeline:
         if needs_swap_flow:
             # weights are on the wire: same-model followers routed
             # here park until they land
-            self.swap_ready_s[(idx, model)] = math.inf
+            self.swap_ready_s[mid][idx] = math.inf
         self.transits.append({
             "ids": ids, "backend": idx, "accel": accel, "host": host,
-            "model": model, "bytes_out": bytes_out, "dispatch_s": self.clock_s,
+            "model": mid, "bytes_out": bytes_out, "dispatch_s": self.clock_s,
             "net_in_s": 0.0, "in_done_s": 0.0,
             "in_done": False, "swap_done": not needs_swap_flow, "started": False,
             "swap_excess_s": 0.0, "wait_s": 0.0, "exec_s": exec_s,
@@ -352,10 +380,13 @@ class Pipeline:
                 self.transits[token]["swap_done"] = True
                 # the weights landed: unblock this batch, then every
                 # same-model follower parked behind it
-                key = (self.transits[token]["backend"], self.transits[token]["model"])
-                self.swap_ready_s[key] = self.clock_s
+                mid = self.transits[token]["model"]
+                idx = self.transits[token]["backend"]
+                self.swap_ready_s[mid][idx] = self.clock_s
                 self._try_begin_service(token)
-                for waiter in self.swap_waiters.pop(key, []):
+                waiters = self.swap_waiters[mid][idx]
+                self.swap_waiters[mid][idx] = []
+                for waiter in waiters:
                     self._try_begin_service(waiter)
             else:  # out
                 fixed = fab.topology.dir_fixed_s(self.transits[token]["accel"])
@@ -375,9 +406,9 @@ class Pipeline:
         tr = self.transits[token]
         if tr["started"] or not (tr["in_done"] and tr["swap_done"]):
             return
-        key = (tr["backend"], tr["model"])
-        if math.isinf(self.swap_ready_s.get(key, 0.0)):
-            self.swap_waiters.setdefault(key, []).append(token)
+        # == +inf exactly: -inf means the model was never swapped here
+        if self.swap_ready_s[tr["model"]][tr["backend"]] == math.inf:
+            self.swap_waiters[tr["model"]][tr["backend"]].append(token)
             return
         wait_s, done_s = self.fabric.occupy(tr["backend"], clock, tr["exec_s"])
         # Re-sync the routing signal with the device horizon: long

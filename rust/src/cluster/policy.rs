@@ -58,6 +58,11 @@ impl Policy {
 /// Crate-visible so the event simulator ([`crate::eventsim`]) routes
 /// its batches through *exactly* the same selection logic as the
 /// analytic [`super::Cluster`] — the differential test depends on it.
+///
+/// The string-keyed map is the analytic cluster's convenience view;
+/// the hot path ([`crate::simcore::Pipeline`]) resolves the instance
+/// to a dense model id once at submit and calls [`select_slot`] with
+/// that id's affinity slot directly.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn select(
     policy: Policy,
@@ -66,6 +71,26 @@ pub(crate) fn select(
     affinity: &mut BTreeMap<String, usize>,
     candidates: &[usize],
     instance: &str,
+    profile: &ModelProfile,
+    batch: usize,
+) -> usize {
+    let mut slot = affinity.get(instance).copied();
+    let idx = select_slot(policy, backends, rr_cursor, &mut slot, candidates, profile, batch);
+    if let Some(parked) = slot {
+        affinity.insert(instance.to_string(), parked);
+    }
+    idx
+}
+
+/// [`select`] with the instance's sticky-affinity entry passed as a
+/// dense slot instead of a string-keyed map lookup.  Only
+/// [`Policy::ModelAffinity`] reads or writes the slot.
+pub(crate) fn select_slot(
+    policy: Policy,
+    backends: &[Box<dyn Backend>],
+    rr_cursor: &mut usize,
+    affinity_slot: &mut Option<usize>,
+    candidates: &[usize],
     profile: &ModelProfile,
     batch: usize,
 ) -> usize {
@@ -82,7 +107,7 @@ pub(crate) fn select(
         }
         Policy::LeastOutstanding => least_queued(backends, candidates),
         Policy::ModelAffinity => {
-            if let Some(&idx) = affinity.get(instance) {
+            if let Some(idx) = *affinity_slot {
                 if candidates.contains(&idx) {
                     return idx;
                 }
@@ -90,7 +115,7 @@ pub(crate) fn select(
             // first sighting: park the instance on the least-loaded
             // candidate and stick to it
             let idx = least_queued(backends, candidates);
-            affinity.insert(instance.to_string(), idx);
+            *affinity_slot = Some(idx);
             idx
         }
         Policy::LatencyAware => {

@@ -478,7 +478,7 @@ impl CogSim {
             emit_s: self.core.clock_s(),
             record: None,
         });
-        let id = self.core.submit(rank, model, samples);
+        let id = self.core.submit(rank, &model, samples);
         debug_assert_eq!(id, self.pending.len() - 1, "engine/pipeline id spaces align");
         self.apply_effects();
     }
@@ -486,19 +486,21 @@ impl CogSim {
     /// Interpret the pipeline's effects, in order: open records for
     /// dispatched batches, insert scheduled events (insertion order =
     /// heap seq order), then run the barrier accounting for completed
-    /// batches.
+    /// batches.  The drained shell goes back to the pipeline's free
+    /// lists.
     fn apply_effects(&mut self) {
-        let effects = self.core.take_effects();
+        let mut effects = self.core.take_effects();
         let clock = self.core.clock_s();
-        for d in effects.dispatched {
-            self.open_records(&d, clock);
+        for d in &effects.dispatched {
+            self.open_records(d, clock);
         }
-        for (t, class, ev) in effects.scheduled {
+        for (t, class, ev) in effects.scheduled.drain(..) {
             self.events.push_class(t, class, Event::Pipe(ev));
         }
-        for c in effects.completed {
+        for c in &effects.completed {
             self.on_batch_done(c, clock);
         }
+        self.core.recycle_effects(effects);
     }
 
     fn open_records(&mut self, d: &Dispatched, clock: f64) {
@@ -537,7 +539,7 @@ impl CogSim {
         }
     }
 
-    fn on_batch_done(&mut self, c: Completed, clock: f64) {
+    fn on_batch_done(&mut self, c: &Completed, clock: f64) {
         if let (Some(token), Some(timing)) = (c.token, c.timing) {
             // fabric path: fill the record block with the measured
             // phase timings (so per-step breakdowns still sum exactly)

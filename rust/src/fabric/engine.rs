@@ -18,10 +18,18 @@
 //! Everything is deterministic: flows are kept in a `BTreeMap` keyed
 //! by their monotonically assigned id, allocation scans in id order,
 //! and completions pop in id order within one instant.
+//!
+//! The solve itself is incremental: the allocation only depends on
+//! the set of *constrained* flows (those crossing at least one
+//! finite-capacity link — free-path flows rate at infinity and are
+//! never counted as link users), so the engine re-solves only when
+//! that set actually changes.  A node-local dispatch burst of free
+//! flows starts and drains without touching the allocator at all,
+//! and the solver's scratch buffers are reused across re-solves.
 
 use std::collections::BTreeMap;
 
-use super::fairshare::max_min_rates;
+use super::fairshare::{max_min_rates_into, Workspace};
 use super::topology::Topology;
 
 /// Below this many bytes a flow counts as finished (float slack from
@@ -34,6 +42,10 @@ struct Flow {
     path: Vec<usize>,
     remaining: f64,
     rate: f64,
+    /// Crosses at least one finite-capacity link: participates in
+    /// the fair-share solve.  Free flows never change other rates,
+    /// so starting/finishing one skips the recompute entirely.
+    constrained: bool,
 }
 
 /// Active transfers + fair-share rates over a topology.
@@ -42,11 +54,24 @@ pub struct FabricEngine {
     flows: BTreeMap<u64, Flow>,
     next_id: u64,
     now_s: f64,
+    /// Count of constrained active flows (recompute trigger).
+    constrained: usize,
+    /// Solver scratch, reused across recomputes.
+    ws: Workspace,
+    rates: Vec<f64>,
 }
 
 impl FabricEngine {
     pub fn new(topo: Topology) -> FabricEngine {
-        FabricEngine { topo, flows: BTreeMap::new(), next_id: 0, now_s: 0.0 }
+        FabricEngine {
+            topo,
+            flows: BTreeMap::new(),
+            next_id: 0,
+            now_s: 0.0,
+            constrained: 0,
+            ws: Workspace::default(),
+            rates: Vec::new(),
+        }
     }
 
     pub fn topology(&self) -> &Topology {
@@ -64,15 +89,27 @@ impl FabricEngine {
     }
 
     /// Start a transfer of `bytes` along `path` at `now_s`; returns
-    /// the flow id.  Every active flow's share is recomputed.  A
-    /// zero-byte or free-path flow completes at the very next
-    /// [`Self::take_completed`].
+    /// the flow id.  Constrained flows trigger a fair-share re-solve;
+    /// a free-path flow (empty path, or infinite capacity everywhere
+    /// it goes) rates at infinity directly, leaving every other
+    /// flow's share untouched.  A zero-byte or free-path flow
+    /// completes at the very next [`Self::take_completed`].
     pub fn start(&mut self, now_s: f64, path: Vec<usize>, bytes: f64) -> u64 {
         assert!(bytes >= 0.0 && bytes.is_finite(), "bad flow size {bytes}");
         self.advance_to(now_s);
         let id = self.next_id;
         self.next_id += 1;
-        self.flows.insert(id, Flow { path, remaining: bytes, rate: 0.0 });
+        let caps = self.topo.capacities();
+        let free = path
+            .iter()
+            .all(|&l| l < caps.len() && caps[l].is_infinite());
+        let rate = if free { f64::INFINITY } else { 0.0 };
+        self.flows
+            .insert(id, Flow { path, remaining: bytes, rate, constrained: !free });
+        if free {
+            return id;
+        }
+        self.constrained += 1;
         self.recompute();
         id
     }
@@ -96,18 +133,20 @@ impl FabricEngine {
     fn recompute(&mut self) {
         let paths: Vec<&[usize]> =
             self.flows.values().map(|f| f.path.as_slice()).collect();
-        let rates = max_min_rates(self.topo.capacities(), &paths);
-        for (f, r) in self.flows.values_mut().zip(rates) {
+        max_min_rates_into(self.topo.capacities(), &paths, &mut self.ws, &mut self.rates);
+        for (f, &r) in self.flows.values_mut().zip(&self.rates) {
             f.rate = r;
         }
     }
 
     /// Virtual time at which the earliest active flow finishes under
-    /// the current rates; `None` when idle.
+    /// the current rates; `None` when idle (or when every remaining
+    /// flow is stalled at a guarded 0 rate and will never finish).
     pub fn next_completion_s(&self) -> Option<f64> {
         self.flows
             .values()
             .map(|f| self.now_s + Self::eta_s(f))
+            .filter(|t| t.is_finite())
             .min_by(f64::total_cmp)
     }
 
@@ -120,8 +159,9 @@ impl FabricEngine {
     }
 
     /// Advance to `now_s` and drain every finished flow (in id
-    /// order); remaining flows' shares are recomputed if anything
-    /// left.
+    /// order); remaining flows' shares are re-solved only when a
+    /// *constrained* flow left (free flows never held link capacity,
+    /// so their departure cannot change anyone's rate).
     pub fn take_completed(&mut self, now_s: f64) -> Vec<u64> {
         self.advance_to(now_s);
         let done: Vec<u64> = self
@@ -130,10 +170,15 @@ impl FabricEngine {
             .filter(|(_, f)| f.remaining <= DONE_BYTES || f.rate.is_infinite())
             .map(|(&id, _)| id)
             .collect();
+        let mut constrained_left = 0usize;
         for id in &done {
-            self.flows.remove(id);
+            let f = self.flows.remove(id).expect("completed flow is active");
+            if f.constrained {
+                constrained_left += 1;
+            }
         }
-        if !done.is_empty() {
+        self.constrained -= constrained_left;
+        if constrained_left > 0 {
             self.recompute();
         }
         done
@@ -217,6 +262,47 @@ mod tests {
         let b = eng.start(1.0, Vec::new(), 0.0);
         assert_eq!(eng.next_completion_s(), Some(1.0));
         assert_eq!(eng.take_completed(1.0), vec![a, b]);
+    }
+
+    #[test]
+    fn guarded_stalled_flow_never_arms_a_wakeup() {
+        // regression: a flow over a link the topology doesn't know
+        // used to panic inside the allocator.  It now stalls at a
+        // guarded 0 rate, next_completion_s skips it (no infinite
+        // wake-up times reach the event queue), and healthy flows
+        // are unaffected.
+        let topo = pooled(2, 1, 1.0);
+        let nic = topo.link().eff_bandwidth;
+        let mut eng = FabricEngine::new(topo);
+        let bad = eng.start(0.0, vec![999], 1e6);
+        assert_eq!(eng.rate_of(bad), Some(0.0));
+        assert_eq!(eng.next_completion_s(), None);
+        let p0 = eng.topology().request_path(0, 0);
+        let good = eng.start(0.0, p0, 1e6);
+        assert_eq!(eng.rate_of(good), Some(nic));
+        let t = eng.next_completion_s().unwrap();
+        assert_eq!(eng.take_completed(t), vec![good]);
+        // the stalled flow stays active, still never completing
+        assert_eq!(eng.active(), 1);
+        assert_eq!(eng.next_completion_s(), None);
+    }
+
+    #[test]
+    fn free_flow_starts_skip_the_resolve_but_match_it() {
+        // a node-local (free-path) start must leave a pooled
+        // incumbent's rate bit-identical to a from-scratch solve
+        let topo = pooled(2, 1, 1.0);
+        let nic = topo.link().eff_bandwidth;
+        let mut eng = FabricEngine::new(topo);
+        let p0 = eng.topology().request_path(0, 0);
+        let a = eng.start(0.0, p0, 1e6);
+        assert_eq!(eng.rate_of(a), Some(nic));
+        let free = eng.start(0.0, Vec::new(), 3e6);
+        assert_eq!(eng.rate_of(free), Some(f64::INFINITY));
+        assert_eq!(eng.rate_of(a), Some(nic));
+        // free flow drains without re-solving; a is untouched
+        assert_eq!(eng.take_completed(0.0), vec![free]);
+        assert_eq!(eng.rate_of(a), Some(nic));
     }
 
     #[test]

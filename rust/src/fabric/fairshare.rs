@@ -15,10 +15,27 @@
 //! recurse on what is left.  Flows whose whole path has infinite
 //! capacity (node-local "links") get an infinite rate.
 //!
+//! Degenerate inputs are *guarded*, not panicked on (mirroring the
+//! `Link::rtt_overhead_s` NaN guard): a flow crossing a link index
+//! the capacity table doesn't know, or any link with non-positive (or
+//! NaN) capacity, freezes at a 0.0 rate — it can make no progress,
+//! but it neither poisons other flows' shares with NaN nor crashes a
+//! sweep at extreme oversubscription.
+//!
 //! Everything is deterministic: links scan in index order, strict
 //! `<` picks the first minimal bottleneck, flows freeze in index
 //! order — identical inputs always produce identical allocations
 //! (the event engines' byte-stable summaries depend on it).
+
+/// Reusable scratch buffers for [`max_min_rates_into`]: a caller that
+/// re-solves on every flow-set change (the fabric engine) allocates
+/// these once instead of four times per solve.
+#[derive(Debug, Default, Clone)]
+pub struct Workspace {
+    frozen: Vec<bool>,
+    remaining: Vec<f64>,
+    users: Vec<usize>,
+}
 
 /// Max-min fair rates for `flows` over `capacities`.
 ///
@@ -31,42 +48,58 @@
 ///
 /// Returns one rate per flow, in flow order.
 pub fn max_min_rates<P: AsRef<[usize]>>(capacities: &[f64], flows: &[P]) -> Vec<f64> {
-    let flows: Vec<&[usize]> = flows.iter().map(AsRef::as_ref).collect();
-    for path in &flows {
-        for &l in *path {
-            assert!(l < capacities.len(), "flow crosses unknown link {l}");
-        }
-    }
-    for (l, &c) in capacities.iter().enumerate() {
-        assert!(c > 0.0, "link {l} has non-positive capacity {c}");
-    }
+    let mut rates = Vec::new();
+    max_min_rates_into(capacities, flows, &mut Workspace::default(), &mut rates);
+    rates
+}
 
+/// [`max_min_rates`] writing into caller-owned buffers: `rates` is
+/// cleared and refilled (one rate per flow, flow order), `ws` holds
+/// the solver's scratch between calls.
+pub fn max_min_rates_into<P: AsRef<[usize]>>(
+    capacities: &[f64],
+    flows: &[P],
+    ws: &mut Workspace,
+    rates: &mut Vec<f64>,
+) {
     let n = flows.len();
-    let mut rates = vec![0.0f64; n];
-    let mut frozen = vec![false; n];
-    let mut remaining: Vec<f64> = capacities.to_vec();
-    let mut users = vec![0usize; capacities.len()];
+    rates.clear();
+    rates.resize(n, 0.0);
+    ws.frozen.clear();
+    ws.frozen.resize(n, false);
+    ws.remaining.clear();
+    ws.remaining.extend_from_slice(capacities);
+    ws.users.clear();
+    ws.users.resize(capacities.len(), 0);
 
-    for (f, &path) in flows.iter().enumerate() {
-        if path.is_empty() || path.iter().all(|&l| capacities[l].is_infinite()) {
+    // A usable link is in range with a strictly positive capacity;
+    // `!(c > 0.0)` also catches NaN.
+    let usable = |l: usize| l < capacities.len() && capacities[l] > 0.0;
+
+    for f in 0..n {
+        let path = flows[f].as_ref();
+        if path.iter().any(|&l| !usable(l)) {
+            // guarded degenerate path: zero rate, never a user
+            ws.frozen[f] = true;
+        } else if path.is_empty() || path.iter().all(|&l| capacities[l].is_infinite()) {
             rates[f] = f64::INFINITY;
-            frozen[f] = true;
+            ws.frozen[f] = true;
         } else {
             for &l in path {
-                users[l] += 1;
+                ws.users[l] += 1;
             }
         }
     }
 
-    let mut left = frozen.iter().filter(|&&fz| !fz).count();
+    let mut left = ws.frozen.iter().filter(|&&fz| !fz).count();
     while left > 0 {
         // the bottleneck: smallest fair share among loaded finite links
         let mut bottleneck: Option<(f64, usize)> = None;
-        for (l, &cap) in remaining.iter().enumerate() {
-            if users[l] == 0 || cap.is_infinite() {
+        for (l, &cap) in ws.remaining.iter().enumerate() {
+            if ws.users[l] == 0 || cap.is_infinite() {
                 continue;
             }
-            let share = cap / users[l] as f64;
+            let share = cap / ws.users[l] as f64;
             if bottleneck.is_none_or(|(best, _)| share < best) {
                 bottleneck = Some((share, l));
             }
@@ -76,30 +109,29 @@ pub fn max_min_rates<P: AsRef<[usize]>>(capacities: &[f64], flows: &[P]) -> Vec<
             // links — cannot happen while users > 0 on finite links,
             // but guard against an all-infinite residual anyway
             for f in 0..n {
-                if !frozen[f] {
+                if !ws.frozen[f] {
                     rates[f] = f64::INFINITY;
-                    frozen[f] = true;
+                    ws.frozen[f] = true;
                 }
             }
             break;
         };
         // freeze every unfrozen flow crossing the bottleneck
         for f in 0..n {
-            if frozen[f] || !flows[f].contains(&link) {
+            if ws.frozen[f] || !flows[f].as_ref().contains(&link) {
                 continue;
             }
             rates[f] = share;
-            frozen[f] = true;
+            ws.frozen[f] = true;
             left -= 1;
-            for &l in flows[f] {
-                if remaining[l].is_finite() {
-                    remaining[l] = (remaining[l] - share).max(0.0);
+            for &l in flows[f].as_ref() {
+                if ws.remaining[l].is_finite() {
+                    ws.remaining[l] = (ws.remaining[l] - share).max(0.0);
                 }
-                users[l] -= 1;
+                ws.users[l] -= 1;
             }
         }
     }
-    rates
 }
 
 #[cfg(test)]
@@ -181,6 +213,29 @@ mod tests {
     }
 
     #[test]
+    fn unknown_link_gets_a_guarded_zero_rate() {
+        // regression: this used to assert/panic.  The bad flow
+        // freezes at 0; the healthy flow still gets its full share.
+        let rates = max_min_rates(&[10.0], &[vec![0, 7], vec![0]]);
+        assert_eq!(rates, vec![0.0, 10.0]);
+    }
+
+    #[test]
+    fn zero_capacity_link_gets_a_guarded_zero_rate_not_nan() {
+        // regression: a 0-capacity uplink used to assert (and the
+        // division would produce NaN poisoning every summary
+        // downstream).  Flows crossing it freeze at 0.0; flows
+        // avoiding it are untouched.
+        let rates = max_min_rates(&[10.0, 0.0], &[vec![0, 1], vec![0]]);
+        assert!(rates.iter().all(|r| !r.is_nan()), "{rates:?}");
+        assert_eq!(rates, vec![0.0, 10.0]);
+
+        // NaN capacity is guarded the same way.
+        let rates = max_min_rates(&[10.0, f64::NAN], &[vec![1], vec![0]]);
+        assert_eq!(rates, vec![0.0, 10.0]);
+    }
+
+    #[test]
     fn conservation_no_link_oversubscribed() {
         // arbitrary mesh: total allocated through any finite link must
         // not exceed its capacity (up to float slack)
@@ -213,6 +268,24 @@ mod tests {
         let a = max_min_rates(&caps, &paths);
         let b = max_min_rates(&caps, &paths);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_solves() {
+        // the _into variant with a dirty workspace must agree with
+        // the allocating wrapper on every call
+        let caps = [3.0, 9.0, 4.0];
+        let cases: [&[Vec<usize>]; 3] = [
+            &[vec![0, 1], vec![1, 2]],
+            &[vec![0], vec![1], vec![2], vec![0, 1, 2]],
+            &[vec![2, 1]],
+        ];
+        let mut ws = Workspace::default();
+        let mut rates = Vec::new();
+        for paths in cases {
+            max_min_rates_into(&caps, paths, &mut ws, &mut rates);
+            assert_eq!(rates, max_min_rates(&caps, paths));
+        }
     }
 
     #[test]

@@ -35,7 +35,8 @@ pub use scenario::{
 };
 pub use sweep::{
     run_campaign, run_cell, run_cog_campaign, run_cog_scenario, run_event_campaign,
-    run_event_scenario, run_grid, run_scenario, run_scenario_at, run_scenario_with_link,
+    run_event_scenario, run_grid, run_grid_threads, run_scenario, run_scenario_at,
+    run_scenario_with_link,
     CampaignResult, CellResult, CellSummary, CogCampaignResult, CogScenarioResult,
     EventCampaignResult, EventScenarioResult, GridResult, ScenarioResult, WorkloadSummary,
 };

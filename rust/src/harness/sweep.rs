@@ -277,9 +277,20 @@ pub fn run_cell(sc: &Scenario, knobs: &Knobs) -> CellResult {
     CellResult { scenario: *sc, summary }
 }
 
-/// Run every cell of a grid, in expansion order.
+/// Run every cell of a grid, in expansion order, on all cores.
 pub fn run_grid(grid: &Grid) -> GridResult {
-    let cells = grid.cells().iter().map(|sc| run_cell(sc, &grid.knobs)).collect();
+    run_grid_threads(grid, 0)
+}
+
+/// Run every cell of a grid on a work-stealing pool of `threads`
+/// workers (`0` = all cores, `1` = the exact legacy sequential path).
+/// Cells are independent and individually deterministic, and results
+/// are collected keyed by cell index, so the output — and therefore
+/// every JSON report derived from it — is byte-identical at any
+/// thread count.
+pub fn run_grid_threads(grid: &Grid, threads: usize) -> GridResult {
+    let cells =
+        workpool::Pool::new(threads).map(grid.cells(), |_, sc| run_cell(&sc, &grid.knobs));
     GridResult { grid: grid.clone(), cells }
 }
 

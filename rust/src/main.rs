@@ -18,7 +18,8 @@ use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
 use cogsim_disagg::eventsim::ArrivalProcess;
 use cogsim_disagg::harness::{
-    run_figure, run_grid, Axes, CampaignConfig, CogCampaignConfig, EventCampaignConfig, Fleet,
+    run_figure, run_grid_threads, Axes, CampaignConfig, CogCampaignConfig, EventCampaignConfig,
+    Fleet,
     Grid, GridResult, Kind, Knobs, Topology, FIGURES,
 };
 use cogsim_disagg::metrics::LatencyRecorder;
@@ -107,6 +108,9 @@ const FLAGS: &[FlagSpec] = &[
                help: "target models per rank", cmds: &["cogsim"] },
     FlagSpec { name: "smoke", kind: FlagKind::Bool, default: "",
                help: "CI-sized sweep", cmds: &["cogsim", "fabric", "scenario"] },
+    FlagSpec { name: "threads", kind: FlagKind::Usize, default: "0",
+               help: "sweep worker threads (0 = all cores, 1 = sequential)",
+               cmds: &["scenario", "campaign", "eventsim", "cogsim", "fabric"] },
     FlagSpec { name: "out", kind: FlagKind::Str, default: "results/campaign.json",
                help: "JSON output path", cmds: &["campaign"] },
     FlagSpec { name: "out", kind: FlagKind::Str, default: "results/eventsim.json",
@@ -218,15 +222,21 @@ impl Args {
                         .collect();
                     bail!("unknown flag --{key} for `repro {cmd}` (valid: {valid:?})");
                 };
-                if spec.kind == FlagKind::Bool {
-                    flags.insert(key.to_string(), "true".to_string());
+                // A repeated flag is a hard error: silently letting
+                // the last occurrence win hides typos in long sweep
+                // command lines.
+                let value = if spec.kind == FlagKind::Bool {
                     i += 1;
+                    "true".to_string()
                 } else {
                     let value = argv
                         .get(i + 1)
                         .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
-                    flags.insert(key.to_string(), value.clone());
                     i += 2;
+                    value.clone()
+                };
+                if flags.insert(key.to_string(), value).is_some() {
+                    bail!("flag --{key} given more than once for `repro {cmd}`");
                 }
             } else {
                 positional.push(a.clone());
@@ -249,7 +259,9 @@ impl Args {
 
     fn get_usize(&self, key: &str) -> Result<usize> {
         let v = self.get(key);
-        v.parse().with_context(|| format!("--{key} {v:?}"))
+        // `str::parse` rejects trailing garbage ("32x"); keep it a
+        // hard error that names the offending flag.
+        v.parse().with_context(|| format!("flag --{key}: not an integer: {v:?}"))
     }
 
     fn get_bool(&self, key: &str) -> bool {
@@ -268,14 +280,14 @@ impl Args {
     fn get_usize_list(&self, key: &str) -> Result<Vec<usize>> {
         self.get_list(key)
             .iter()
-            .map(|v| v.parse().with_context(|| format!("--{key} {v:?}")))
+            .map(|v| v.parse().with_context(|| format!("flag --{key}: not an integer: {v:?}")))
             .collect()
     }
 
     fn get_f64_list(&self, key: &str) -> Result<Vec<f64>> {
         self.get_list(key)
             .iter()
-            .map(|v| v.parse().with_context(|| format!("--{key} {v:?}")))
+            .map(|v| v.parse().with_context(|| format!("flag --{key}: not a number: {v:?}")))
             .collect()
     }
 }
@@ -324,9 +336,11 @@ fn write_json_out(out: &str, json: &str) -> Result<()> {
 }
 
 /// Run a grid, print its tables, write its JSON — the single
-/// execution path behind `repro scenario` and every alias.
-fn execute_grid(grid: &Grid, out: &str) -> Result<GridResult> {
-    let result = run_grid(grid);
+/// execution path behind `repro scenario` and every alias.  Cells run
+/// on a work-stealing pool of `threads` workers (0 = all cores,
+/// 1 = sequential); the output is byte-identical at any width.
+fn execute_grid(grid: &Grid, out: &str, threads: usize) -> Result<GridResult> {
+    let result = run_grid_threads(grid, threads);
     for table in result.tables() {
         println!("{}", table.render());
     }
@@ -420,7 +434,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    execute_grid(&grid, &args.get("out"))?;
+    execute_grid(&grid, &args.get("out"), args.get_usize("threads")?)?;
     Ok(())
 }
 
@@ -432,7 +446,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         timesteps: args.get_usize("timesteps")?,
         ..Default::default()
     };
-    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
 
     // The headline comparison: does state-aware routing beat blind
     // round-robin on tail latency in the hybrid topology?
@@ -462,7 +476,7 @@ fn cmd_eventsim(args: &Args) -> Result<()> {
     }
     cfg.horizon_s = horizon_ms as f64 / 1e3;
     cfg.seed = args.get_usize("seed")? as u64;
-    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
 
     // The headline: under bursty 64-rank arrivals on the pooled
     // topology, does the dynamic-batching window shrink tail latency?
@@ -512,7 +526,7 @@ fn cmd_cogsim(args: &Args) -> Result<()> {
     if cfg.timesteps == 0 {
         bail!("--timesteps must be positive");
     }
-    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
 
     // The headline: once swapping weights costs more than serving a
     // request, sticky model-affinity routing must beat blind
@@ -567,7 +581,7 @@ fn cmd_fabric(args: &Args) -> Result<()> {
     if cfg.timesteps == 0 {
         bail!("--timesteps must be positive");
     }
-    let result = execute_grid(&cfg.grid(), &args.get("out"))?;
+    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
 
     // The headline: at what (rank count, oversubscription) does the
     // shared pool lose to per-rank local GPUs on time-to-solution?
@@ -816,4 +830,56 @@ fn cmd_info(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(words: &[&str]) -> Vec<String> {
+        words.iter().map(|w| w.to_string()).collect()
+    }
+
+    #[test]
+    fn repeated_flag_is_a_hard_error_naming_the_flag() {
+        let err = Args::parse("cogsim", &argv(&["--ranks", "4", "--ranks", "8"]))
+            .expect_err("duplicate flag must not silently last-win");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--ranks"), "error must name the flag: {msg}");
+        assert!(msg.contains("more than once"), "error must say why: {msg}");
+    }
+
+    #[test]
+    fn repeated_bool_flag_is_also_rejected() {
+        let err = Args::parse("cogsim", &argv(&["--smoke", "--smoke"]))
+            .expect_err("duplicate bool flag must error");
+        assert!(format!("{err:#}").contains("--smoke"));
+    }
+
+    #[test]
+    fn trailing_garbage_in_numeric_flag_names_the_flag() {
+        let args = Args::parse("cogsim", &argv(&["--ranks", "32x"])).expect("parse stage is lexical");
+        let err = args.get_usize("ranks").expect_err("'32x' is not an integer");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--ranks") && msg.contains("32x"), "{msg}");
+    }
+
+    #[test]
+    fn trailing_garbage_in_numeric_list_names_the_flag() {
+        let args = Args::parse("scenario", &argv(&["--ranks", "4,32x"])).expect("lexical parse");
+        let err = args.get_usize_list("ranks").expect_err("'32x' is not an integer");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--ranks") && msg.contains("32x"), "{msg}");
+    }
+
+    #[test]
+    fn distinct_flags_still_parse() {
+        let args =
+            Args::parse("cogsim", &argv(&["--ranks", "8", "--models", "4", "--smoke"])).unwrap();
+        assert_eq!(args.get_usize("ranks").unwrap(), 8);
+        assert_eq!(args.get_usize("models").unwrap(), 4);
+        assert!(args.get_bool("smoke"));
+        // Defaults still fill unset flags.
+        assert_eq!(args.get_usize("threads").unwrap(), 0);
+    }
 }

@@ -48,8 +48,16 @@ impl LatencyRecorder {
         stats::percentile(&self.samples_s, 95.0)
     }
 
+    /// Tail percentile, honest at small n: with fewer than 100
+    /// samples this is the nearest-rank quantile (the p99 of 2
+    /// samples is the observed max, not an interpolated value no
+    /// request experienced).
     pub fn p99_s(&self) -> f64 {
-        stats::percentile(&self.samples_s, 99.0)
+        stats::tail_quantile(&self.samples_s, 99.0)
+    }
+
+    pub fn p999_s(&self) -> f64 {
+        stats::tail_quantile(&self.samples_s, 99.9)
     }
 
     pub fn max_s(&self) -> f64 {
@@ -58,6 +66,71 @@ impl LatencyRecorder {
 
     pub fn clear(&mut self) {
         self.samples_s.clear();
+    }
+}
+
+/// A log-spaced latency histogram with an explicit zero bucket.
+///
+/// Buckets are geometric from `floor` by `ratio`, with one overflow
+/// bucket at the top.  Exact-zero (and negative) samples land in a
+/// dedicated `zeros` bucket instead of being silently dropped — a
+/// cache-hit path that completes in 0 time is real traffic, and a
+/// histogram whose total undercounts it skews every fraction
+/// computed from it.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    edges: Vec<f64>,
+    /// One count per edge (sample <= edge), plus overflow at the end.
+    counts: Vec<u64>,
+    zeros: u64,
+}
+
+impl LogHistogram {
+    /// Geometric edges `floor, floor*ratio, ...` (`buckets` of them).
+    pub fn new(floor: f64, ratio: f64, buckets: usize) -> LogHistogram {
+        assert!(floor > 0.0 && ratio > 1.0 && buckets >= 1);
+        let mut edges = Vec::with_capacity(buckets);
+        let mut edge = floor;
+        for _ in 0..buckets {
+            edges.push(edge);
+            edge *= ratio;
+        }
+        LogHistogram { counts: vec![0; buckets + 1], edges, zeros: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if !(x > 0.0) {
+            // counted, not dropped: zero-latency samples are traffic
+            self.zeros += 1;
+            return;
+        }
+        for (b, &edge) in self.edges.iter().enumerate() {
+            if x <= edge {
+                self.counts[b] += 1;
+                return;
+            }
+        }
+        *self.counts.last_mut().expect("overflow bucket") += 1;
+    }
+
+    /// Exact-zero (or sub-zero) samples recorded.
+    pub fn zeros(&self) -> u64 {
+        self.zeros
+    }
+
+    /// Upper edge of each finite bucket.
+    pub fn edges(&self) -> &[f64] {
+        &self.edges
+    }
+
+    /// Per-bucket counts (last entry = overflow); zeros are separate.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Every sample ever recorded, zeros included.
+    pub fn total(&self) -> u64 {
+        self.zeros + self.counts.iter().sum::<u64>()
     }
 }
 
@@ -128,6 +201,36 @@ mod tests {
         assert!((r.max_s() - 0.1).abs() < 1e-12);
         r.clear();
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn small_n_tail_is_the_observed_max() {
+        // regression: p99 over 2 samples used to interpolate to a
+        // value below the max; it must be the max.
+        let mut r = LatencyRecorder::new();
+        r.record_secs(0.001);
+        r.record_secs(0.100);
+        assert_eq!(r.p99_s(), 0.100);
+        assert_eq!(r.p999_s(), 0.100);
+        let mut one = LatencyRecorder::new();
+        one.record_secs(0.042);
+        assert_eq!(one.p99_s(), 0.042);
+    }
+
+    #[test]
+    fn log_histogram_counts_exact_zeros() {
+        // regression: zero-latency samples were dropped from the
+        // histogram, undercounting its total.
+        let mut h = LogHistogram::new(1e-6, 10.0, 4);
+        h.record(0.0);
+        h.record(0.0);
+        h.record(5e-7); // first bucket (<= 1e-6)
+        h.record(5e-4); // fourth bucket (<= 1e-3)
+        h.record(1.0); // overflow
+        assert_eq!(h.zeros(), 2);
+        assert_eq!(h.counts(), &[1, 0, 0, 1, 1]);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.edges().len(), 4);
     }
 
     #[test]

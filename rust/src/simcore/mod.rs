@@ -273,11 +273,12 @@ impl FabricLayer {
     }
 }
 
-/// Per-backend LRU model residency (most recently used last).
+/// Per-backend LRU model residency (most recently used last), keyed
+/// by the pipeline's dense model ids.
 #[derive(Debug, Clone, Default)]
 pub struct Residency {
     slots: usize,
-    held: Vec<String>,
+    held: Vec<usize>,
 }
 
 impl Residency {
@@ -287,13 +288,13 @@ impl Residency {
 
     /// Record a dispatch of `model`; returns true on a residency
     /// miss (the swap is charged), false on a hit.
-    pub(crate) fn touch(&mut self, model: &str) -> bool {
-        if let Some(pos) = self.held.iter().position(|m| m == model) {
+    pub(crate) fn touch(&mut self, model: usize) -> bool {
+        if let Some(pos) = self.held.iter().position(|&m| m == model) {
             let m = self.held.remove(pos);
             self.held.push(m);
             return false;
         }
-        self.held.push(model.to_string());
+        self.held.push(model);
         if self.held.len() > self.slots {
             self.held.remove(0);
         }
@@ -307,12 +308,13 @@ mod tests {
 
     #[test]
     fn lru_residency_touch_semantics() {
+        let (a, b, c) = (0, 1, 2);
         let mut r = Residency::new(2);
-        assert!(r.touch("a")); // miss: first sighting
-        assert!(r.touch("b"));
-        assert!(!r.touch("a")); // hit, refreshes a
-        assert!(r.touch("c")); // evicts b (LRU)
-        assert!(r.touch("b")); // b gone: miss again
-        assert!(!r.touch("c")); // c survived (a was evicted by b)
+        assert!(r.touch(a)); // miss: first sighting
+        assert!(r.touch(b));
+        assert!(!r.touch(a)); // hit, refreshes a
+        assert!(r.touch(c)); // evicts b (LRU)
+        assert!(r.touch(b)); // b gone: miss again
+        assert!(!r.touch(c)); // c survived (a was evicted by b)
     }
 }

@@ -8,8 +8,14 @@
 //! the corresponding event or record, because event-queue insertion
 //! order defines heap sequence numbers and record order defines the
 //! golden JSON.
-
-use std::collections::BTreeMap;
+//!
+//! Per-event cost: model names are interned to dense ids at submit
+//! (`models`), so the hot path — routing, the residency touch, the
+//! weights-ready gate — indexes flat `Vec` tables instead of hashing
+//! strings, and the id buffers inside [`Effects`] cycle through a
+//! free list ([`Pipeline::recycle_effects`]) instead of being
+//! reallocated per batch.  Both are invisible to the effects
+//! protocol: same decisions, same order, same bytes.
 
 use crate::cluster::{policy, Backend, Policy};
 use crate::devices::{profiles, ModelProfile};
@@ -102,11 +108,12 @@ pub struct ResidencySpec {
     pub swap_s: f64,
 }
 
-#[derive(Debug, Clone)]
+/// Per-request metadata, dense: `model` indexes the intern table.
+#[derive(Debug, Clone, Copy)]
 struct ReqMeta {
-    rank: usize,
-    model: String,
-    samples: usize,
+    rank: u32,
+    model: u32,
+    samples: u32,
 }
 
 /// One batch in flight through the fabric.  The weights-ready fields
@@ -118,8 +125,8 @@ struct Transit {
     backend: usize,
     accel: usize,
     host: usize,
-    /// Model the batch serves (the weights-ready gate's key).
-    model: String,
+    /// Model id the batch serves (the weights-ready gate's key).
+    model: usize,
     bytes_out: f64,
     dispatch_s: f64,
     net_in_s: f64,
@@ -149,21 +156,34 @@ pub struct Pipeline {
     hermit_profile: ModelProfile,
     mir_profile: ModelProfile,
     rr_cursor: usize,
-    affinity: BTreeMap<String, usize>,
+    /// Interned model names: submit resolves each name to its id once
+    /// (linear scan — the model population is small and stable), and
+    /// every per-event structure below indexes by that id.
+    models: Vec<String>,
+    /// Per-model: does the name select the MIR tier/profile?
+    model_is_mir: Vec<bool>,
+    /// Per-model sticky-affinity slot ([`Policy::ModelAffinity`]).
+    affinity: Vec<Option<usize>>,
     clock_s: f64,
     batcher: Option<BatchStage>,
     fabric: Option<FabricLayer>,
     residency: Option<Vec<Residency>>,
     swap_cfg_s: f64,
     transits: Vec<Transit>,
-    /// When a (backend, model)'s weights land: `INFINITY` while the
-    /// swap flow is still on the wire (followers must not execute
-    /// before the weights arrive — the residency `touch` marks the
-    /// model resident at dispatch, this gate makes that honest).
-    swap_ready_s: BTreeMap<(usize, String), f64>,
-    /// Batches parked on an in-transit swap, by its key.
-    swap_waiters: BTreeMap<(usize, String), Vec<usize>>,
+    /// `[model][backend]` — when that backend's copy of the model's
+    /// weights lands: `INFINITY` while the swap flow is still on the
+    /// wire (followers must not execute before the weights arrive —
+    /// the residency `touch` marks the model resident at dispatch,
+    /// this gate makes that honest), `NEG_INFINITY` = never swapped
+    /// (absent).  The in-transit test is `== INFINITY` *exactly*.
+    swap_ready_s: Vec<Vec<f64>>,
+    /// `[model][backend]` — batches parked on an in-transit swap.
+    swap_waiters: Vec<Vec<Vec<usize>>>,
     req_meta: Vec<ReqMeta>,
+    /// Free list of id buffers cycling through [`Effects`].
+    id_pool: Vec<Vec<usize>>,
+    /// Drained [`Effects`] shell awaiting reuse by `take_effects`.
+    spare: Option<Effects>,
     submitted: u64,
     dispatched: u64,
     completed: u64,
@@ -200,16 +220,20 @@ impl Pipeline {
             hermit_profile: profiles::hermit(),
             mir_profile: profiles::mir_noln(),
             rr_cursor: 0,
-            affinity: BTreeMap::new(),
+            models: Vec::new(),
+            model_is_mir: Vec::new(),
+            affinity: Vec::new(),
             clock_s: 0.0,
             batcher,
             fabric: None,
             residency: residency_state,
             swap_cfg_s: residency.map_or(0.0, |spec| spec.swap_s),
             transits: Vec::new(),
-            swap_ready_s: BTreeMap::new(),
-            swap_waiters: BTreeMap::new(),
+            swap_ready_s: Vec::new(),
+            swap_waiters: Vec::new(),
             req_meta: Vec::new(),
+            id_pool: Vec::new(),
+            spare: None,
             submitted: 0,
             dispatched: 0,
             completed: 0,
@@ -231,7 +255,32 @@ impl Pipeline {
     /// Drain everything accumulated since the last call, in exact
     /// dispatch/push order.
     pub fn take_effects(&mut self) -> Effects {
-        std::mem::take(&mut self.effects)
+        let fresh = self.spare.take().unwrap_or_default();
+        std::mem::replace(&mut self.effects, fresh)
+    }
+
+    /// Hand a consumed [`Effects`] back for reuse: its id buffers and
+    /// the three vectors return to the pipeline's free lists.  Purely
+    /// an allocation-recycling hook — skipping it only costs fresh
+    /// allocations, never correctness.
+    pub fn recycle_effects(&mut self, mut effects: Effects) {
+        for d in effects.dispatched.drain(..) {
+            self.recycle_ids(d.ids);
+        }
+        for c in effects.completed.drain(..) {
+            self.recycle_ids(c.ids);
+        }
+        effects.scheduled.clear();
+        self.spare = Some(effects);
+    }
+
+    fn recycle_ids(&mut self, mut ids: Vec<usize>) {
+        ids.clear();
+        self.id_pool.push(ids);
+    }
+
+    fn pooled_ids(&mut self) -> Vec<usize> {
+        self.id_pool.pop().unwrap_or_default()
     }
 
     // --------------------------------------------------- accessors
@@ -286,7 +335,22 @@ impl Pipeline {
     /// membership, record indices), id-aligned by submit order.
     pub fn request(&self, id: usize) -> (usize, &str, usize) {
         let m = &self.req_meta[id];
-        (m.rank, &m.model, m.samples)
+        (m.rank as usize, &self.models[m.model as usize], m.samples as usize)
+    }
+
+    /// Resolve a model name to its dense id, interning on first
+    /// sighting (and growing every per-model table in lockstep).
+    fn intern_model(&mut self, model: &str) -> usize {
+        if let Some(mid) = self.models.iter().position(|m| m == model) {
+            return mid;
+        }
+        let mid = self.models.len();
+        self.models.push(model.to_string());
+        self.model_is_mir.push(model.starts_with("mir"));
+        self.affinity.push(None);
+        self.swap_ready_s.push(vec![f64::NEG_INFINITY; self.backends.len()]);
+        self.swap_waiters.push(vec![Vec::new(); self.backends.len()]);
+        mid
     }
 
     // ----------------------------------------------------- run loop
@@ -306,13 +370,18 @@ impl Pipeline {
     /// One request enters the router at the current clock; returns
     /// the request id (engines keep a parallel metadata store —
     /// ids are assigned in submit order, so the stores align).
-    pub fn submit(&mut self, rank: usize, model: String, samples: usize) -> usize {
+    pub fn submit(&mut self, rank: usize, model: &str, samples: usize) -> usize {
         self.submitted += 1;
         let id = self.req_meta.len();
-        self.req_meta.push(ReqMeta { rank, model: model.clone(), samples });
+        let mid = self.intern_model(model);
+        self.req_meta.push(ReqMeta {
+            rank: rank as u32,
+            model: mid as u32,
+            samples: samples as u32,
+        });
         if self.batcher.is_some() {
             let stage = self.batcher.as_mut().unwrap();
-            stage.enqueue(&model, id as u64, samples, self.clock_s);
+            stage.enqueue(model, id as u64, samples, self.clock_s);
             // Arrival path: dispatch only queues the *size* trigger
             // filled; deadline-expired queues close via their
             // wake-up, after every same-instant arrival (see
@@ -323,7 +392,9 @@ impl Pipeline {
             }
             self.arm_batch_wakeup();
         } else {
-            self.dispatch(vec![id]);
+            let mut ids = self.pooled_ids();
+            ids.push(id);
+            self.dispatch(ids);
         }
         id
     }
@@ -367,48 +438,49 @@ impl Pipeline {
     /// legacy fixed-charge path or the multi-phase fabric path.
     fn dispatch(&mut self, ids: Vec<usize>) {
         debug_assert!(!ids.is_empty());
-        let rank0 = self.req_meta[ids[0]].rank;
-        let model = self.req_meta[ids[0]].model.clone();
-        let total: usize = ids.iter().map(|&i| self.req_meta[i].samples).sum();
-        let is_mir = model.starts_with("mir");
-        let profile =
-            if is_mir { self.mir_profile.clone() } else { self.hermit_profile.clone() };
+        let meta0 = self.req_meta[ids[0]];
+        let rank0 = meta0.rank as usize;
+        let mid = meta0.model as usize;
+        let total: usize = ids.iter().map(|&i| self.req_meta[i].samples as usize).sum();
+        let is_mir = self.model_is_mir[mid];
         let candidates: &[usize] = if is_mir { &self.mir_tier } else { &self.hermit_tier };
-        let idx = policy::select(
+        let idx = policy::select_slot(
             self.policy,
             &self.backends,
             &mut self.rr_cursor,
-            &mut self.affinity,
+            &mut self.affinity[mid],
             candidates,
-            &model,
-            &profile,
+            if is_mir { &self.mir_profile } else { &self.hermit_profile },
             total,
         );
         let miss = match self.residency.as_mut() {
-            Some(residency) => residency[idx].touch(&model),
+            Some(residency) => residency[idx].touch(mid),
             None => false,
         };
         if miss {
             self.swaps += 1;
         }
         if self.fabric.as_ref().is_some_and(|f| f.is_remote(idx)) {
-            self.dispatch_remote(ids, idx, total, &profile, miss, rank0, model);
+            self.dispatch_remote(ids, idx, total, miss, rank0, mid);
             return;
         }
         let swap_s = if miss { self.swap_cfg_s } else { 0.0 };
         if miss {
             self.swap_time_s += swap_s;
         }
+        let profile = if is_mir { &self.mir_profile } else { &self.hermit_profile };
         let backend = &mut self.backends[idx];
         let wait_s = backend.queue_s();
-        let link_s = backend.link_overhead_s(&profile, total);
-        let exec_s = backend.execute_s(&profile, total);
+        let link_s = backend.link_overhead_s(profile, total);
+        let exec_s = backend.execute_s(profile, total);
         let latency_s = wait_s + swap_s + (link_s + exec_s);
-        let occupancy = backend.occupancy_s(&profile, total) + swap_s;
+        let occupancy = backend.occupancy_s(profile, total) + swap_s;
         backend.add_queue_s(occupancy);
         let complete_s = self.clock_s + latency_s;
+        let mut rec_ids = self.pooled_ids();
+        rec_ids.extend_from_slice(&ids);
         self.effects.dispatched.push(Dispatched {
-            ids: ids.clone(),
+            ids: rec_ids,
             backend: idx,
             batch_samples: total,
             outcome: Outcome::Direct { wait_s, swap_s, link_s, exec_s, complete_s },
@@ -435,17 +507,17 @@ impl Pipeline {
     /// dispatch** (`queue_s` reflects committed work immediately), so
     /// the routing policies see exactly the feedback the legacy path
     /// gives them.
-    #[allow(clippy::too_many_arguments)]
     fn dispatch_remote(
         &mut self,
         ids: Vec<usize>,
         idx: usize,
         total: usize,
-        profile: &ModelProfile,
         miss: bool,
         rank0: usize,
-        model: String,
+        mid: usize,
     ) {
+        let is_mir = self.model_is_mir[mid];
+        let profile = if is_mir { &self.mir_profile } else { &self.hermit_profile };
         let (bytes_in, bytes_out) =
             dir_payload_bytes(profile.input_elems, profile.output_elems, total);
         let fab = self.fabric.as_ref().expect("remote dispatch without a fabric");
@@ -466,8 +538,10 @@ impl Pipeline {
         backend.add_queue_s(exec_s);
 
         let token = self.transits.len();
+        let mut rec_ids = self.pooled_ids();
+        rec_ids.extend_from_slice(&ids);
         self.effects.dispatched.push(Dispatched {
-            ids: ids.clone(),
+            ids: rec_ids,
             backend: idx,
             batch_samples: total,
             outcome: Outcome::InFlight { token },
@@ -480,14 +554,14 @@ impl Pipeline {
             // weights are on the wire: same-model followers routed
             // here park until they land (the residency touch already
             // counts the model resident, this keeps it honest)
-            self.swap_ready_s.insert((idx, model.clone()), f64::INFINITY);
+            self.swap_ready_s[mid][idx] = f64::INFINITY;
         }
         self.transits.push(Transit {
             ids,
             backend: idx,
             accel,
             host,
-            model,
+            model: mid,
             bytes_out,
             dispatch_s: self.clock_s,
             net_in_s: 0.0,
@@ -559,15 +633,18 @@ impl Pipeline {
                     self.transits[token].swap_done = true;
                     // the weights landed: unblock this batch, then
                     // every same-model follower parked behind it
-                    let key =
-                        (self.transits[token].backend, self.transits[token].model.clone());
-                    self.swap_ready_s.insert(key.clone(), self.clock_s);
+                    let (mid, idx) =
+                        (self.transits[token].model, self.transits[token].backend);
+                    self.swap_ready_s[mid][idx] = self.clock_s;
                     self.try_begin_service(token);
-                    if let Some(waiters) = self.swap_waiters.remove(&key) {
-                        for waiter in waiters {
-                            self.try_begin_service(waiter);
-                        }
+                    let mut waiters = std::mem::take(&mut self.swap_waiters[mid][idx]);
+                    for &waiter in &waiters {
+                        self.try_begin_service(waiter);
                     }
+                    // nothing re-parks once the weights are resident:
+                    // hand the drained buffer back to its slot
+                    waiters.clear();
+                    self.swap_waiters[mid][idx] = waiters;
                 }
                 FlowCont::Out { token } => {
                     let fixed = self.dir_fixed_of(token);
@@ -608,16 +685,18 @@ impl Pipeline {
     /// order).
     fn try_begin_service(&mut self, token: usize) {
         let clock = self.clock_s;
-        let (ready, idx, exec_s, in_done_s) = {
+        let (ready, idx, exec_s, in_done_s, mid) = {
             let tr = &self.transits[token];
-            (!tr.started && tr.in_done && tr.swap_done, tr.backend, tr.exec_s, tr.in_done_s)
+            (!tr.started && tr.in_done && tr.swap_done, tr.backend, tr.exec_s, tr.in_done_s,
+             tr.model)
         };
         if !ready {
             return;
         }
-        let key = (idx, self.transits[token].model.clone());
-        if self.swap_ready_s.get(&key).is_some_and(|t| t.is_infinite()) {
-            self.swap_waiters.entry(key).or_default().push(token);
+        // `== INFINITY` exactly: `NEG_INFINITY` means "never swapped
+        // here", which must not park the batch.
+        if self.swap_ready_s[mid][idx] == f64::INFINITY {
+            self.swap_waiters[mid][idx].push(token);
             return;
         }
         let fab = self.fabric.as_mut().expect("fabric phase without a fabric");
@@ -660,21 +739,21 @@ impl Pipeline {
     /// The result landed: hand the engine the measured phase timings
     /// and run the shared completion accounting.
     fn on_xfer_out_done(&mut self, token: usize) {
-        let (ids, timing) = {
+        let timing = {
             let tr = &self.transits[token];
             let net_out_s = self.clock_s - tr.out_start_s;
             let link_s = tr.net_in_s + net_out_s;
-            (
-                tr.ids.clone(),
-                TransitTiming {
-                    wait_s: tr.wait_s,
-                    swap_s: tr.swap_excess_s,
-                    link_s,
-                    contention_s: (link_s - tr.ideal_rtt_s).max(0.0),
-                    exec_s: tr.exec_s,
-                },
-            )
+            TransitTiming {
+                wait_s: tr.wait_s,
+                swap_s: tr.swap_excess_s,
+                link_s,
+                contention_s: (link_s - tr.ideal_rtt_s).max(0.0),
+                exec_s: tr.exec_s,
+            }
         };
+        // The transit is finished: move its id buffer out instead of
+        // cloning it (the token keeps indexing the timing fields).
+        let ids = std::mem::take(&mut self.transits[token].ids);
         self.complete(ids, Some(token), Some(timing));
     }
 

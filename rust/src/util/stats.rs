@@ -66,6 +66,33 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// A tail quantile that is honest at small n.
+///
+/// [`percentile`]'s linear interpolation is fine in the bulk of a
+/// distribution, but in the tail it *invents* values below the
+/// observed maximum: the p99 of 2 samples interpolated is ~98 % of
+/// the way from min to max, i.e. an optimistic number no request
+/// actually experienced.  For n below 100 this uses the nearest-rank
+/// (ceiling) definition instead — the p99 of 1, 2, or 3 samples is
+/// the observed maximum, which is the only defensible claim — and
+/// hands off to the interpolating estimate once n reaches 100, where
+/// the two agree to within a sample.
+pub fn tail_quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len();
+    if n >= 100 {
+        return percentile(xs, p);
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    // nearest-rank: the smallest value with at least p% of the
+    // sample at or below it
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(n - 1)]
+}
+
 /// A replicated measurement: mean ± 95 % CI over n runs (the paper's
 /// plotting convention).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -127,6 +154,29 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 75.0) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_quantile_small_n_returns_the_observed_max() {
+        // regression: interpolated p99 of 2 samples used to report
+        // ~98 % of the way to the max — a latency nobody saw.
+        assert_eq!(tail_quantile(&[7.0], 99.0), 7.0); // n=1
+        assert_eq!(tail_quantile(&[1.0, 9.0], 99.0), 9.0); // n=2
+        assert_eq!(tail_quantile(&[3.0, 1.0, 9.0], 99.0), 9.0); // n=3
+        assert_eq!(tail_quantile(&[1.0, 9.0], 99.9), 9.0);
+        // bulk quantiles still pick sensible ranks at small n
+        assert_eq!(tail_quantile(&[3.0, 1.0, 9.0], 50.0), 3.0);
+        assert_eq!(tail_quantile(&[], 99.0), 0.0);
+    }
+
+    #[test]
+    fn tail_quantile_hands_off_to_interpolation_at_n_100() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(tail_quantile(&xs, 99.0), percentile(&xs, 99.0));
+        assert_eq!(tail_quantile(&xs, 50.0), percentile(&xs, 50.0));
+        // at n=99 we are still nearest-rank: p99 = the 98th index (max)
+        let xs: Vec<f64> = (1..=99).map(|i| i as f64).collect();
+        assert_eq!(tail_quantile(&xs, 99.0), 99.0);
     }
 
     #[test]

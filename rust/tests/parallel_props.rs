@@ -1,0 +1,118 @@
+//! Determinism properties of the parallel sweep + incremental fabric.
+//!
+//! The tentpole contract: the thread count is a *performance* knob,
+//! never a *results* knob.  `run_grid_threads` at 1, 2, and 8 workers
+//! must render byte-identical campaign JSON for every workload kind,
+//! and the fabric engine's incremental fair-share bookkeeping must
+//! agree with a from-scratch solve after every arrival and departure.
+
+use cogsim_disagg::cluster::Policy;
+use cogsim_disagg::fabric::{max_min_rates, FabricEngine, Topology as FabricTopology};
+use cogsim_disagg::harness::{run_grid_threads, Axes, Fleet, Grid, Kind, Knobs, Topology};
+use cogsim_disagg::util::json;
+use cogsim_disagg::util::rng::Rng;
+
+/// One grid covering all three engines (analytic, event, cogsim) on
+/// a mixed fleet behind a pooled fabric — the same shape the default
+/// campaign sweeps.
+fn every_kind_grid() -> Grid {
+    Grid {
+        axes: Axes {
+            kinds: Kind::ALL.to_vec(),
+            topologies: vec![Topology::Pooled],
+            fleets: vec![Fleet::Mixed { gpus: 2, rdus: 1 }],
+            policies: vec![Policy::LatencyAware],
+            rank_counts: vec![4],
+            fabric_oversubs: vec![1.0],
+            ..Axes::default()
+        },
+        knobs: Knobs { timesteps: 3, horizon_s: 0.05, ..Knobs::default() },
+    }
+}
+
+#[test]
+fn grid_json_is_byte_identical_across_thread_counts() {
+    let grid = every_kind_grid();
+    let sequential = json::write(&run_grid_threads(&grid, 1).to_json());
+    for threads in [2, 8] {
+        let parallel = json::write(&run_grid_threads(&grid, threads).to_json());
+        assert_eq!(
+            sequential, parallel,
+            "--threads {threads} changed the campaign JSON"
+        );
+    }
+}
+
+#[test]
+fn default_thread_count_matches_sequential() {
+    let grid = every_kind_grid();
+    let sequential = json::write(&run_grid_threads(&grid, 1).to_json());
+    let all_cores = json::write(&run_grid_threads(&grid, 0).to_json());
+    assert_eq!(sequential, all_cores, "--threads 0 (all cores) diverged");
+}
+
+/// Relative agreement to 1e-12 (infinities must match exactly).
+fn close(a: f64, b: f64) -> bool {
+    if a.is_infinite() || b.is_infinite() {
+        return a == b;
+    }
+    (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn incremental_fabric_matches_from_scratch_solves() {
+    // Drive the engine through randomized flow arrivals (pooled
+    // request/response/swap paths, free node-local paths, zero-byte
+    // transfers) and departures (draining completions), checking
+    // after every mutation that each live flow's incremental rate
+    // agrees with a fresh max_min_rates over the live flow set.
+    let topo = FabricTopology::pooled(4, 2, 2.0);
+    let caps: Vec<f64> = topo.capacities().to_vec();
+    let mut eng = FabricEngine::new(topo.clone());
+    let mut rng = Rng::new(0xfab51c);
+    let mut live: Vec<(u64, Vec<usize>)> = Vec::new();
+    let mut now = 0.0_f64;
+
+    let check = |eng: &FabricEngine, live: &[(u64, Vec<usize>)]| {
+        let paths: Vec<&[usize]> = live.iter().map(|(_, p)| p.as_slice()).collect();
+        let scratch = max_min_rates(&caps, &paths);
+        for ((id, path), want) in live.iter().zip(&scratch) {
+            let got = eng.rate_of(*id).expect("live flow has a rate");
+            assert!(
+                close(got, *want),
+                "flow {id} over {path:?}: incremental {got} vs scratch {want}"
+            );
+        }
+    };
+
+    for step in 0..400 {
+        let arrive = live.len() < 2 || (rng.below(3) > 0 && live.len() < 24);
+        if arrive {
+            let path = match rng.below(5) {
+                0 => Vec::new(), // node-local: free path
+                1 => topo.response_path(rng.below(4), rng.below(2)),
+                2 => topo.swap_path(rng.below(2)),
+                _ => topo.request_path(rng.below(4), rng.below(2)),
+            };
+            let bytes = if rng.below(8) == 0 { 0.0 } else { rng.uniform(1e4, 2e6) };
+            now += rng.uniform(0.0, 1e-4);
+            let id = eng.start(now, path.clone(), bytes);
+            live.push((id, path));
+        } else {
+            let t = eng
+                .next_completion_s()
+                .expect("constrained flows are live")
+                .max(now);
+            now = t;
+            for id in eng.take_completed(t) {
+                let pos = live.iter().position(|(l, _)| *l == id).expect("tracked");
+                live.remove(pos);
+            }
+        }
+        check(&eng, &live);
+        // the armed wake-up time must be reproducible too
+        if let Some(t) = eng.next_completion_s() {
+            assert!(t.is_finite() && t >= now, "step {step}: bad wake {t}");
+        }
+    }
+}

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""CI gate: fail when engine bench throughput regresses more than 30 %.
+
+Usage:
+    python3 scripts/bench_gate.py <baseline_dir> <fresh_dir>
+
+Compares the committed `BENCH_eventsim.json` / `BENCH_cogsim.json`
+baselines (copied to <baseline_dir> before the bench run overwrites
+them) against the files a fresh `cargo bench --bench eventsim_bench
+-- --smoke` just wrote to <fresh_dir>.  For every benchmark key the
+fresh `events_per_s` must be at least 70 % of the baseline's.
+
+Baselines carrying `"baseline_floor": true` are conservative floors
+recorded without a local toolchain (deliberate underestimates so the
+gate arms without false alarms); re-baseline by committing the
+BENCH_*.json from a CI bench run, which drops the flag.
+
+Configurations are only comparable like-for-like: if the baseline and
+the fresh run disagree on the workload shape (`smoke`, `ranks`), the
+gate warns and passes rather than comparing apples to oranges.
+
+Stdlib only — no third-party imports.
+"""
+
+import json
+import os
+import sys
+
+FILES = ("BENCH_eventsim.json", "BENCH_cogsim.json")
+SHAPE_KEYS = ("smoke", "ranks", "horizon_us", "timesteps", "swap_us")
+MAX_REGRESSION = 0.30
+
+
+def load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__.strip().splitlines()[2].strip())
+    baseline_dir, fresh_dir = sys.argv[1], sys.argv[2]
+    failures = []
+    for name in FILES:
+        base_path = os.path.join(baseline_dir, name)
+        fresh_path = os.path.join(fresh_dir, name)
+        if not os.path.exists(base_path):
+            print(f"{name}: no committed baseline, skipping")
+            continue
+        base = load(base_path)
+        fresh = load(fresh_path)
+        shape_diff = [
+            k for k in SHAPE_KEYS
+            if k in base and k in fresh and base[k] != fresh[k]
+        ]
+        if shape_diff:
+            print(f"{name}: workload shape changed ({', '.join(shape_diff)}); "
+                  "not comparable — re-baseline")
+            continue
+        floor = " (floor baseline)" if base.get("baseline_floor") else ""
+        for key, want in sorted(base.get("results", {}).items()):
+            got = fresh.get("results", {}).get(key)
+            if got is None:
+                failures.append(f"{name}:{key}: benchmark disappeared")
+                continue
+            base_eps = float(want["events_per_s"])
+            fresh_eps = float(got["events_per_s"])
+            limit = (1.0 - MAX_REGRESSION) * base_eps
+            verdict = "ok" if fresh_eps >= limit else "REGRESSED"
+            print(f"{name}:{key}: {fresh_eps:.0f} events/s vs baseline "
+                  f"{base_eps:.0f}{floor} (limit {limit:.0f}) {verdict}")
+            if fresh_eps < limit:
+                failures.append(
+                    f"{name}:{key}: {fresh_eps:.0f} events/s is more than "
+                    f"{MAX_REGRESSION:.0%} below the baseline {base_eps:.0f}")
+    if failures:
+        print()
+        for f in failures:
+            print(f"FAIL {f}")
+        sys.exit(1)
+    print("bench gate: no >30% events/s regression")
+
+
+if __name__ == "__main__":
+    main()

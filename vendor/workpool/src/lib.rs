@@ -1,0 +1,151 @@
+//! Minimal work-stealing thread pool for embarrassingly parallel,
+//! index-keyed map operations.  Std-only (no network deps, same
+//! posture as the vendored `anyhow`): each worker owns a deque seeded
+//! round-robin, pops its own front, and steals from the back of other
+//! workers' deques when its own runs dry.  `map` never spawns new
+//! work mid-flight, so workers simply exit once every deque is empty.
+//!
+//! Determinism contract: results are returned keyed by input index,
+//! in input order, regardless of which worker ran which item or in
+//! what order items completed.  With `threads <= 1` (or a single
+//! item) the map runs inline on the caller's thread — the exact
+//! legacy sequential path, no threads spawned at all.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A fixed-width pool configuration.  Cheap to construct; threads are
+/// spawned per `map` call via `std::thread::scope` so the pool holds
+/// no OS resources between calls.
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// `threads == 0` means "all available cores".
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Pool { threads }
+    }
+
+    /// The resolved worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item, returning results in input order.
+    /// `f` receives `(index, item)` so callers can key side tables by
+    /// position.  Panics in `f` propagate to the caller.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            // Exact legacy path: inline, sequential, no threads.
+            return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
+        let workers = self.threads.min(n);
+        // Seed the per-worker deques round-robin so early indices are
+        // spread across workers.
+        let mut queues: Vec<Mutex<VecDeque<(usize, T)>>> =
+            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            queues[i % workers].get_mut().unwrap().push_back((i, item));
+        }
+        let queues = &queues;
+        let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+        let slots = &slots;
+        let f = &f;
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                scope.spawn(move || loop {
+                    // Own queue first (front), then steal from the
+                    // back of the others.  All queues empty => done:
+                    // map spawns no new work.
+                    let task = queues[w].lock().unwrap().pop_front().or_else(|| {
+                        (1..workers)
+                            .map(|d| (w + d) % workers)
+                            .find_map(|v| queues[v].lock().unwrap().pop_back())
+                    });
+                    match task {
+                        Some((i, item)) => {
+                            let r = f(i, item);
+                            slots.lock().unwrap()[i] = Some(r);
+                        }
+                        None => break,
+                    }
+                });
+            }
+        });
+        let collected: Vec<R> = slots
+            .lock()
+            .unwrap()
+            .iter_mut()
+            .map(|s| s.take().expect("worker completed every seeded item"))
+            .collect();
+        collected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_means_available_parallelism() {
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn map_preserves_input_order() {
+        for threads in [1, 2, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.map((0..100).collect(), |i, x: usize| {
+                assert_eq!(i, x);
+                x * x
+            });
+            assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn uneven_work_is_stolen() {
+        // Front-load the heavy items so a single worker would choke;
+        // the result must still come back in index order.
+        let pool = Pool::new(4);
+        let out = pool.map((0..32).collect(), |_, x: u64| {
+            let spins = if x < 4 { 200_000 } else { 10 };
+            let mut acc = x;
+            for _ in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            // Return the index-determined part only.
+            let _ = acc;
+            x + 1
+        });
+        assert_eq!(out, (1..=32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_item_runs_inline() {
+        let pool = Pool::new(8);
+        let out = pool.map(vec![7usize], |i, x| (i, x));
+        assert_eq!(out, vec![(0, 7)]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let pool = Pool::new(4);
+        let out: Vec<usize> = pool.map(Vec::<usize>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+}
