@@ -2,7 +2,8 @@
 driving the simcore Pipeline.
 
 The engine keeps only workload logic — the bulk-synchronous timestep
-barrier, per-rank state, and record keeping; every dispatch/batch/
+barrier, per-rank state, record keeping, and the control plane's
+rank checkpoint/restart + reactive autoscaler; every dispatch/batch/
 residency/fabric/service decision lives in simcore.Pipeline."""
 
 import math
@@ -11,6 +12,18 @@ from equeue import CLASS_ARRIVAL, EventQueue
 from eventsim import latency_dist, rank_rngs
 from simcore import Pipeline
 from workload import material_model
+
+
+def validate_autoscaler(cfg, tier):
+    # AutoscalerCfg.validate: dict keys initial, min_active,
+    # max_active, low_s, high_s
+    assert cfg["min_active"] >= 1, "autoscaler must keep one backend"
+    assert cfg["min_active"] <= cfg["initial"] <= cfg["max_active"], \
+        "autoscaler bounds must satisfy min <= initial <= max"
+    assert cfg["max_active"] <= tier, \
+        f"autoscaler max exceeds the tier size ({tier})"
+    assert cfg["low_s"] >= 0.0 and cfg["high_s"] > cfg["low_s"] \
+        and math.isfinite(cfg["high_s"])
 
 
 class CogSim:
@@ -29,13 +42,22 @@ class CogSim:
         self.step_start_s = 0.0
         self.current_step = 0
         self.finished_ranks = 0
-        # what the pipeline cannot know: [step, emit_s, record];
+        # what the pipeline cannot know: [step, emit_s, record, epoch];
         # rank/model/samples live in core.req_meta, id-aligned
         self.pending = []
         self.records = []
-        self.rec0_of_token = []  # transit token -> first record index
         self.steps = []
         self.events_processed = 0
+        # per-rank restart epoch: bumped on checkpoint/restart; events
+        # and completions from older epochs are stale
+        self.epoch = [0] * cfg["ranks"]
+        # per-rank draws + physics duration of the current step — the
+        # "checkpoint" a restarted rank replays (RNG not re-consumed)
+        self.step_draws = [[] for _ in range(cfg["ranks"])]
+        self.step_compute = [0.0] * cfg["ranks"]
+        self.autoscaler = None
+        self.rank_restarts = 0
+        self.active_samples = []
         self.events.push_class(0.0, CLASS_ARRIVAL, ("step_start", 0))
 
     @staticmethod
@@ -43,6 +65,23 @@ class CogSim:
         return {"compute_end_s": 0.0, "emit_s": 0.0, "outstanding": 0,
                 "compute_done": False, "finished": False, "finish_s": 0.0,
                 "last_record": None}
+
+    def with_control(self, trace, autoscaler=None):
+        # trace: list of (at_s, action) with action tuples as in
+        # eventsim.with_control; autoscaler: dict (validate_autoscaler)
+        for at_s, action in trace:
+            assert at_s >= 0.0 and math.isfinite(at_s), \
+                f"fleet event time must be finite and non-negative ({at_s})"
+            self.events.push_class(at_s, CLASS_ARRIVAL, ("fleet", action))
+        if autoscaler is not None:
+            tier = list(self.core.hermit_tier)
+            validate_autoscaler(autoscaler, len(tier))
+            for idx in tier[autoscaler["initial"]:]:
+                self.core.control_backend_leave(idx)
+            # nothing is in flight at t = 0: deactivating idle
+            # backends produces no observable effects
+            self.core.take_effects()
+            self.autoscaler = autoscaler
 
     # counters live on the pipeline
     @property
@@ -60,6 +99,24 @@ class CogSim:
     @property
     def completed(self):
         return self.core.completed_n
+
+    def in_flight(self):
+        return self.core.dispatched_n - self.core.retries_n - self.core.completed_n
+
+    def retries(self):
+        return self.core.retries_n
+
+    def orphaned(self):
+        return self.core.orphaned_n
+
+    def parked(self):
+        return self.core.parked_requests()
+
+    def backend_active(self, idx):
+        return self.core.is_active(idx)
+
+    def active_count(self):
+        return self.core.active_count()
 
     @property
     def batches(self):
@@ -97,9 +154,11 @@ class CogSim:
         if kind == "step_start":
             self._on_step_start(event[1])
         elif kind == "arrival":
-            self._on_request(event[1], event[2], event[3])
+            self._on_request(event[1], event[2], event[3], event[4])
         elif kind == "compute_done":
-            self._on_compute_done(event[1])
+            self._on_compute_done(event[1], event[2])
+        elif kind == "fleet":
+            self._on_fleet(event[1])
         else:
             self.core.handle(event)
             self._apply_effects()
@@ -107,6 +166,8 @@ class CogSim:
     # ------------------------------------------------- timestep loop
 
     def _on_step_start(self, step):
+        self._autoscale()
+        self.active_samples.append(self.core.active_count())
         self.step_start_s = self.clock_s
         self.current_step = step
         self.finished_ranks = 0
@@ -116,28 +177,42 @@ class CogSim:
                 jitter = self.rngs[rank].uniform(0.0, self.cfg["compute_jitter_s"])
             else:
                 jitter = 0.0
-            compute = self.cfg["compute_s"] + jitter
-            emit_s = self.clock_s + (1.0 - self.cfg["overlap"]) * compute
-            compute_end_s = self.clock_s + compute
-            outstanding = 0
+            self.step_compute[rank] = self.cfg["compute_s"] + jitter
+            draws = []
             for _ in range(self.cfg["requests_per_step"]):
                 model = material_model(self.rngs[rank].below(self.cfg["models"]))
                 samples = self.rngs[rank].range(lo, hi)
-                self.events.push_class(emit_s, CLASS_ARRIVAL,
-                                       ("arrival", rank, model, samples))
-                outstanding += 1
+                draws.append((model, samples))
             if self.cfg["mir_every"] > 0 and step % self.cfg["mir_every"] == 0:
-                self.events.push_class(emit_s, CLASS_ARRIVAL,
-                                       ("arrival", rank, "mir", self.cfg["mir_samples"]))
-                outstanding += 1
-            self.ranks[rank] = {
-                "compute_end_s": compute_end_s, "emit_s": emit_s,
-                "outstanding": outstanding, "compute_done": False,
-                "finished": False, "finish_s": 0.0, "last_record": None,
-            }
-            self.events.push_class(compute_end_s, CLASS_ARRIVAL, ("compute_done", rank))
+                draws.append(("mir", self.cfg["mir_samples"]))
+            self.step_draws[rank] = draws
+            self._emit_step(rank)
 
-    def _on_compute_done(self, rank):
+    def _emit_step(self, rank):
+        # (re)start the rank's current step at the current clock; on a
+        # checkpoint/restart the same stored draws replay (the
+        # checkpoint is the step's input state, not a fresh sample)
+        now = self.clock_s
+        compute = self.step_compute[rank]
+        emit_s = now + (1.0 - self.cfg["overlap"]) * compute
+        compute_end_s = now + compute
+        epoch = self.epoch[rank]
+        outstanding = 0
+        for model, samples in self.step_draws[rank]:
+            self.events.push_class(emit_s, CLASS_ARRIVAL,
+                                   ("arrival", rank, model, samples, epoch))
+            outstanding += 1
+        self.ranks[rank] = {
+            "compute_end_s": compute_end_s, "emit_s": emit_s,
+            "outstanding": outstanding, "compute_done": False,
+            "finished": False, "finish_s": 0.0, "last_record": None,
+        }
+        self.events.push_class(compute_end_s, CLASS_ARRIVAL,
+                               ("compute_done", rank, epoch))
+
+    def _on_compute_done(self, rank, epoch):
+        if epoch != self.epoch[rank]:
+            return  # pre-failure physics: the restarted rank re-computes
         self.ranks[rank]["compute_done"] = True
         self._try_finish(rank)
 
@@ -191,57 +266,130 @@ class CogSim:
         if nxt < self.cfg["timesteps"]:
             self.events.push_class(self.clock_s, CLASS_ARRIVAL, ("step_start", nxt))
 
+    # ------------------------------------------------- control plane
+
+    def _on_fleet(self, action):
+        kind = action[0]
+        if kind == "leave":
+            self.core.control_backend_leave(action[1])
+            self._apply_effects()
+        elif kind == "join":
+            self.core.control_backend_join(action[1])
+            self._apply_effects()
+        elif kind == "degrade":
+            self.core.control_link_scale(action[1])
+            self._apply_effects()
+        elif kind == "restore":
+            self.core.control_link_scale(1.0)
+            self._apply_effects()
+        else:  # rankfail
+            self._on_rank_fail(action[1])
+
+    def _on_rank_fail(self, rank):
+        # checkpoint/restart: the rank loses its in-flight timestep
+        # and replays it from the step's input state; responses to the
+        # lost attempt still arrive but count as waste
+        assert rank < self.cfg["ranks"], f"unknown rank {rank}"
+        if len(self.steps) >= self.cfg["timesteps"] or self.ranks[rank]["finished"]:
+            return
+        self.epoch[rank] += 1
+        self.rank_restarts += 1
+        self._emit_step(rank)
+
+    def _autoscale(self):
+        # reactive queue-depth autoscaling, one action per barrier:
+        # grow by the lowest-index parked hermit backend on high mean
+        # backlog, shrink the highest-index idle one on low
+        cfg = self.autoscaler
+        if cfg is None:
+            return
+        tier = list(self.core.hermit_tier)
+        active = [i for i in tier if self.core.is_active(i)]
+        if not active:
+            if tier:
+                self.core.control_backend_join(tier[0])
+                self._apply_effects()
+            return
+        mean_backlog = sum(self.core.backlog_s(i) for i in active) / float(len(active))
+        if mean_backlog > cfg["high_s"] and len(active) < cfg["max_active"]:
+            parked = [i for i in tier if not self.core.is_active(i)]
+            if parked:
+                self.core.control_backend_join(parked[0])
+                self._apply_effects()
+        elif mean_backlog < cfg["low_s"] and len(active) > cfg["min_active"]:
+            idle = [i for i in active
+                    if self.core.live_batches[i] == 0 and self.core.backlog_s(i) <= 0.0]
+            if idle:
+                self.core.control_backend_leave(idle[-1])
+                self._apply_effects()
+
     # ------------------------------------------------------- routing
 
-    def _on_request(self, rank, model, samples):
-        self.pending.append([self.current_step, self.clock_s, None])
+    def _on_request(self, rank, model, samples, epoch):
+        if epoch != self.epoch[rank]:
+            return  # emitted before the failure: lost with the checkpoint
+        self.pending.append([self.current_step, self.clock_s, None, epoch])
         id_ = self.core.submit(rank, model, samples)
         assert id_ == len(self.pending) - 1
         self._apply_effects()
 
     def _apply_effects(self):
-        scheduled, dispatched, completed = self.core.take_effects()
+        scheduled, dispatched, completed, orphaned = self.core.take_effects()
+        # a backend left: void the orphans' completion state first —
+        # each reappears in `dispatched` below with retry set
+        for i in orphaned:
+            rec = self.pending[i][2]
+            assert rec is not None, "orphaned work was dispatched"
+            r = self.records[rec]
+            r["complete_s"] = math.nan
+            r["retried"] = True
         for d in dispatched:
             if d[0] == "direct":
-                _, ids, idx, total, wait_s, swap_s, link_s, exec_s, complete_s = d
-                for i in ids:
-                    rank, model, samples = self.core.request(i)
-                    meta = self.pending[i]
-                    meta[2] = len(self.records)
-                    self.records.append({
-                        "id": i, "step": meta[0], "rank": rank, "model": model,
-                        "samples": samples, "emit_s": meta[1],
-                        "dispatch_s": self.clock_s,
-                        "complete_s": complete_s, "backend": idx,
-                        "batch_samples": total,
-                        "wait_s": wait_s, "swap_s": swap_s, "link_s": link_s,
-                        "contention_s": 0.0, "exec_s": exec_s,
-                    })
+                _, ids, idx, total, wait_s, swap_s, link_s, exec_s, complete_s, retry = d
             else:  # remote
-                _, ids, idx, total, token = d
-                assert token == len(self.rec0_of_token)
-                self.rec0_of_token.append(len(self.records))
+                _, ids, idx, total, token, retry = d
+                wait_s = swap_s = link_s = exec_s = 0.0
+                complete_s = math.nan
+            if retry:
+                # re-dispatch of orphaned work: the ids keep their one
+                # record each; routing fields describe the new attempt
                 for i in ids:
-                    rank, model, samples = self.core.request(i)
-                    meta = self.pending[i]
-                    meta[2] = len(self.records)
-                    self.records.append({
-                        "id": i, "step": meta[0], "rank": rank, "model": model,
-                        "samples": samples, "emit_s": meta[1],
-                        "dispatch_s": self.clock_s,
-                        "complete_s": math.nan, "backend": idx,
-                        "batch_samples": total,
-                        "wait_s": 0.0, "swap_s": 0.0, "link_s": 0.0,
-                        "contention_s": 0.0, "exec_s": 0.0,
-                    })
+                    r = self.records[self.pending[i][2]]
+                    r["dispatch_s"] = self.clock_s
+                    r["complete_s"] = complete_s
+                    r["backend"] = idx
+                    r["batch_samples"] = total
+                    r["wait_s"] = wait_s
+                    r["swap_s"] = swap_s
+                    r["link_s"] = link_s
+                    r["contention_s"] = 0.0
+                    r["exec_s"] = exec_s
+                continue
+            for i in ids:
+                rank, model, samples = self.core.request(i)
+                meta = self.pending[i]
+                meta[2] = len(self.records)
+                self.records.append({
+                    "id": i, "step": meta[0], "rank": rank, "model": model,
+                    "samples": samples, "emit_s": meta[1],
+                    "dispatch_s": self.clock_s,
+                    "complete_s": complete_s, "backend": idx,
+                    "batch_samples": total,
+                    "wait_s": wait_s, "swap_s": swap_s, "link_s": link_s,
+                    "contention_s": 0.0, "exec_s": exec_s,
+                    "retried": False,
+                })
         for t, cls, ev in scheduled:
             self.events.push_class(t, cls, ev)
         for ids, token, timing in completed:
-            if timing is not None:
+            if token is not None and timing is not None:
+                # fabric path: fill the batch's records with measured
+                # phase timings, addressed by id (identical to the old
+                # contiguous-block fill on a static run, and correct
+                # for retried batches with scattered records)
                 wait_s, swap_x, link_s, contention_s, exec_s = timing
-                rec0 = self.rec0_of_token[token]
-                for k in range(len(ids)):
-                    r = self.records[rec0 + k]
+                for i in ids:
+                    r = self.records[self.pending[i][2]]
                     r["complete_s"] = self.clock_s
                     r["wait_s"] = wait_s
                     r["swap_s"] = swap_x
@@ -251,6 +399,8 @@ class CogSim:
             for i in ids:
                 rank = self.core.req_meta[i][0]
                 record = self.pending[i][2]
+                if self.pending[i][3] != self.epoch[rank]:
+                    continue  # wasted work from a pre-failure epoch
                 st = self.ranks[rank]
                 assert st["outstanding"] > 0
                 st["outstanding"] -= 1
@@ -263,8 +413,13 @@ class CogSim:
         return self.steps[-1]["end_s"] if self.steps else 0.0
 
     def summary(self):
-        latencies = [r["complete_s"] - r["emit_s"] for r in self.records]
-        samples = sum(r["samples"] for r in self.records)
+        # completed records only: orphaned-not-yet-recompleted work has
+        # complete_s = NaN; retried completions are excluded from the
+        # latency distribution (not first-attempt samples)
+        finished = [r for r in self.records if math.isfinite(r["complete_s"])]
+        latencies = [r["complete_s"] - r["emit_s"] for r in finished
+                     if not r["retried"]]
+        samples = sum(r["samples"] for r in finished)
         straggler_counts = [0] * self.cfg["ranks"]
         totals = {"compute": 0.0, "queue": 0.0, "swap": 0.0, "network": 0.0,
                   "contention": 0.0, "service": 0.0}
@@ -279,10 +434,14 @@ class CogSim:
             totals["service"] += s["service_s"]
             max_spread_s = max(max_spread_s, s["spread_s"])
         tts = self.time_to_solution_s()
+        if self.active_samples:
+            mean_active = sum(self.active_samples) / float(len(self.active_samples))
+        else:
+            mean_active = float(self.core.active_count())
         return {
             "ranks": self.cfg["ranks"],
             "timesteps": len(self.steps),
-            "requests": len(self.records),
+            "requests": len(finished),
             "samples": samples,
             "batches": self.batches,
             "time_to_solution_s": tts,
@@ -299,4 +458,9 @@ class CogSim:
             "straggler_counts": straggler_counts,
             "max_spread_s": max_spread_s,
             "mean_step_s": (tts / float(len(self.steps)) if self.steps else 0.0),
+            "submitted": self.submitted,
+            "retries": self.core.retries_n,
+            "failed": self.submitted - len(finished) - self.core.batcher_pending(),
+            "rank_restarts": self.rank_restarts,
+            "mean_active_backends": mean_active,
         }

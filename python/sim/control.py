@@ -1,0 +1,213 @@
+"""harness control-plane transliteration: ControlSpec parsing, the
+seven-cell control campaign (harness::sweep), and its JSON document
+(harness::report) — the mirror that regenerates
+rust/tests/golden/control_summary.json byte-exactly."""
+
+import math
+
+from campaign import build_fabric_spec, build_fleet, fixed3, us
+from cluster import LEAST_OUTSTANDING
+from cogsim import CogSim
+from eventsim import FabricLayer
+from netsim import Link
+
+# The autoscaler must hold TTS within this factor of the statically-
+# provisioned optimum (report::AUTOSCALER_BOUND).
+AUTOSCALER_BOUND = 2.0
+
+
+def static_spec():
+    return {"key": "static", "trace": [], "autoscaler": None}
+
+
+def is_static(spec):
+    return not spec["trace"] and spec["autoscaler"] is None
+
+
+def parse_control(s):
+    """ControlSpec::parse: `+`-separated actions, times in µs.
+    Returns None on any malformed spec (the CLI rejects those)."""
+    if not s:
+        return None
+    if s == "static":
+        return static_spec()
+    trace = []
+    autoscaler = None
+    try:
+        for part in s.split("+"):
+            if part.startswith("auto:"):
+                fields = part[len("auto:"):].split(":")
+                if len(fields) != 4 or autoscaler is not None:
+                    return None
+                initial = int(fields[0])
+                min_s, max_s = fields[1].split("-")
+                low_us = float(fields[2])
+                high_us = float(fields[3])
+                autoscaler = {
+                    "initial": initial,
+                    "min_active": int(min_s),
+                    "max_active": int(max_s),
+                    "low_s": low_us * 1e-6,
+                    "high_s": high_us * 1e-6,
+                }
+                continue
+            if "@" not in part:
+                return None
+            head, at_us = part.rsplit("@", 1)
+            at_us = float(at_us)
+            if not (math.isfinite(at_us) and at_us >= 0.0):
+                return None
+            if head == "restore":
+                action = ("restore",)
+            else:
+                if ":" not in head:
+                    return None
+                verb, arg = head.split(":", 1)
+                if verb == "leave":
+                    action = ("leave", int(arg))
+                elif verb == "join":
+                    action = ("join", int(arg))
+                elif verb == "rankfail":
+                    action = ("rankfail", int(arg))
+                elif verb == "degrade":
+                    factor = float(arg)
+                    if not (factor > 0.0 and math.isfinite(factor)):
+                        return None
+                    action = ("degrade", factor)
+                else:
+                    return None
+            trace.append((at_us * 1e-6, action))
+    except ValueError:
+        return None
+    return {"key": s, "trace": trace, "autoscaler": autoscaler}
+
+
+# ------------------------------------------------ control campaign
+
+
+def default_control_cfg():
+    return {
+        "ranks": 4,
+        "timesteps": 8,
+        "policy": LEAST_OUTSTANDING,
+        "oversub": 2.0,
+        "seed": 42,
+    }
+
+
+def control_cells(cfg):
+    """ControlCampaignConfig::cells: (label, topology, spec)."""
+    keys = [
+        ("local/static", "local", "static"),
+        ("local/leave", "local", "leave:0@10300"),
+        ("pooled/static", "pooled", "static"),
+        ("pooled/leave", "pooled", "leave:0@10300"),
+        ("pooled/degrade", "pooled", "degrade:0.25@6000+restore@20000"),
+        ("pooled/rankfail", "pooled", "rankfail:1@10000"),
+        ("pooled/auto", "pooled", "auto:2:1-4:100:1000"),
+    ]
+    return [(label, topology, parse_control(key)) for label, topology, key in keys]
+
+
+def run_control_cell(topology, ctl, cfg):
+    # same device count in and out of the pool: Fleet::Mixed{gpus:
+    # ranks, rdus: 0}, so the loss cells compare like against like
+    fleet = ("mixed", cfg["ranks"], 0)
+    backends, (hermit_tier, mir_tier) = build_fleet(
+        topology, cfg["ranks"], Link.infiniband_cx6(), fleet)
+    sim_cfg = {
+        "ranks": cfg["ranks"], "timesteps": cfg["timesteps"],
+        "compute_s": 2e-3, "compute_jitter_s": 0.0,
+        "requests_per_step": 6, "models": 8,
+        "samples_per_request": (2, 3), "mir_every": 0, "mir_samples": 512,
+        "overlap": 0.0, "swap_s": 0.0, "residency_slots": 4,
+        "batching": None, "seed": cfg["seed"],
+    }
+    spec = build_fabric_spec(topology, cfg["ranks"], cfg["oversub"], fleet)
+    fabric = FabricLayer(spec[0], spec[1], len(backends)) if spec else None
+    sim = CogSim(backends, cfg["policy"], sim_cfg, hermit_tier, mir_tier, fabric)
+    if not is_static(ctl):
+        sim.with_control(ctl["trace"], ctl["autoscaler"])
+    sim.run_to_completion()
+    return sim
+
+
+def run_control_campaign(cfg):
+    cells = []
+    for label, topology, ctl in control_cells(cfg):
+        sim = run_control_cell(topology, ctl, cfg)
+        cells.append({
+            "label": label, "topology": topology, "control": ctl,
+            "summary": sim.summary(), "sim": sim,
+        })
+    return {"config": cfg, "cells": cells}
+
+
+def cell(result, label):
+    for c in result["cells"]:
+        if c["label"] == label:
+            return c
+    raise KeyError(f"control campaign has no cell {label!r}")
+
+
+def loss_ratio(result, topology_key):
+    stat = cell(result, f"{topology_key}/static")
+    loss = cell(result, f"{topology_key}/leave")
+    return (loss["summary"]["time_to_solution_s"]
+            / stat["summary"]["time_to_solution_s"])
+
+
+def autoscaler_factor(result):
+    return (cell(result, "pooled/auto")["summary"]["time_to_solution_s"]
+            / cell(result, "pooled/static")["summary"]["time_to_solution_s"])
+
+
+# ------------------------------------------------------------- JSON
+
+
+def control_cell_json(c):
+    s = c["summary"]
+    lat = s["latency"]
+    return {
+        "label": c["label"],
+        "topology": c["topology"],
+        "control": c["control"]["key"],
+        "summary": {
+            "tts_us": us(s["time_to_solution_s"]),
+            "requests": float(s["requests"]),
+            "submitted": float(s["submitted"]),
+            "retries": float(s["retries"]),
+            "failed": float(s["failed"]),
+            "rank_restarts": float(s["rank_restarts"]),
+            "mean_active_backends": fixed3(s["mean_active_backends"]),
+            "request_p50_us": us(lat["p50_s"]),
+            "request_p99_us": us(lat["p99_s"]),
+            "total_queue_us": us(s["total_queue_s"]),
+            "total_network_us": us(s["total_network_s"]),
+        },
+    }
+
+
+def control_campaign_json(result):
+    cfg = result["config"]
+    ll = loss_ratio(result, "local")
+    lp = loss_ratio(result, "pooled")
+    auto = autoscaler_factor(result)
+    return {
+        "config": {
+            "ranks": float(cfg["ranks"]),
+            "timesteps": float(cfg["timesteps"]),
+            "policy": cfg["policy"],
+            "oversub": fixed3(cfg["oversub"]),
+            "seed": float(cfg["seed"]),
+        },
+        "cells": [control_cell_json(c) for c in result["cells"]],
+        "headline": {
+            "loss_ratio_local": fixed3(ll),
+            "loss_ratio_pooled": fixed3(lp),
+            "pooled_degrades_more_gracefully": lp < ll,
+            "autoscaler_factor": fixed3(auto),
+            "autoscaler_bound": fixed3(AUTOSCALER_BOUND),
+            "autoscaler_within_bound": auto <= AUTOSCALER_BOUND,
+        },
+    }

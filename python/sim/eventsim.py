@@ -18,6 +18,10 @@ HIST_EDGES_US = [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1e3, 2e3,
 
 
 def latency_dist(xs):
+    # Non-finite entries — requests that never completed — are
+    # excluded, not recorded as 0-latency samples: quantiles describe
+    # completions only (the caller reports the failed count apart).
+    xs = [x for x in xs if math.isfinite(x)]
     histogram = [[e, 0] for e in HIST_EDGES_US]
     overflow = 0
     for x in xs:
@@ -63,9 +67,24 @@ class EventSim:
         # pipeline's metadata store (core.req_meta), id-aligned
         self.arrival_s = []
         self.records = []        # dicts
-        self.rec0_of_token = []  # transit token -> first record index
+        # request id -> record index (None until dispatched); retries
+        # update a request's one record in place, so completions
+        # address records by id, not by batch block
+        self.rec_of_id = []
         self.events_processed = 0
         self._seed_generators()
+
+    def with_control(self, trace):
+        """Arm a control-plane trace: each (at_s, action) fires as an
+        ordinary arrival-class event.  An empty trace adds nothing —
+        the run is bit-identical to a static one.  Actions: ("leave",
+        idx) | ("join", idx) | ("degrade", factor) | ("restore",) |
+        ("rankfail", rank) — rank failures are a coupled-engine
+        concept and are ignored here."""
+        for at_s, action in trace:
+            assert at_s >= 0.0 and math.isfinite(at_s), \
+                f"fleet event time must be finite and non-negative ({at_s})"
+            self.events.push(at_s, ("fleet", action))
 
     # counters live on the pipeline
     @property
@@ -90,6 +109,23 @@ class EventSim:
 
     def batcher_pending(self):
         return self.core.batcher_pending()
+
+    def in_flight(self):
+        # dispatched at least once but not yet completed (includes
+        # orphaned work parked with no live backend)
+        return self.core.dispatched_n - self.core.retries_n - self.core.completed_n
+
+    def retries(self):
+        return self.core.retries_n
+
+    def orphaned(self):
+        return self.core.orphaned_n
+
+    def parked(self):
+        return self.core.parked_requests()
+
+    def backend_active(self, idx):
+        return self.core.is_active(idx)
 
     # ---------------------------------------------------- generators
 
@@ -144,9 +180,27 @@ class EventSim:
             self._on_poisson(event[1])
         elif kind == "closed":
             self._on_closed(event[1])
+        elif kind == "fleet":
+            self._on_fleet(event[1])
         else:
             self.core.handle(event)
             self._apply_effects()
+
+    def _on_fleet(self, action):
+        verb = action[0]
+        if verb == "leave":
+            self.core.control_backend_leave(action[1])
+        elif verb == "join":
+            self.core.control_backend_join(action[1])
+        elif verb == "degrade":
+            self.core.control_link_scale(action[1])
+        elif verb == "restore":
+            self.core.control_link_scale(1.0)
+        elif verb == "rankfail":
+            pass  # no rank-owned state to replay here
+        else:
+            raise ValueError(verb)
+        self._apply_effects()
 
     def _on_burst(self, step):
         _, period_s, jitter_s = self.cfg["arrival"]
@@ -180,45 +234,59 @@ class EventSim:
 
     def _on_request(self, rank, model, samples):
         self.arrival_s.append(self.clock_s)
+        self.rec_of_id.append(None)
         id_ = self.core.submit(rank, model, samples)
         assert id_ == len(self.arrival_s) - 1
         self._apply_effects()
 
     def _apply_effects(self):
-        scheduled, dispatched, completed = self.core.take_effects()
+        scheduled, dispatched, completed, orphaned = self.core.take_effects()
+        # a backend left: void the orphans' completion state first —
+        # each reappears in `dispatched` below with retry set
+        for i in orphaned:
+            r = self.records[self.rec_of_id[i]]
+            r["complete_s"] = math.nan
+            r["retried"] = True
         for d in dispatched:
             if d[0] == "direct":
-                _, ids, idx, total, _wait_s, _swap_s, link_s, _exec_s, complete_s = d
-                for i in ids:
-                    rank, m, samples = self.core.request(i)
-                    self.records.append({
-                        "id": i, "rank": rank, "model": m, "samples": samples,
-                        "arrival_s": self.arrival_s[i], "dispatch_s": self.clock_s,
-                        "complete_s": complete_s, "backend": idx,
-                        "batch_samples": total,
-                        "link_overhead_s": link_s, "contention_s": 0.0,
-                    })
+                (_, ids, idx, total, _wait_s, _swap_s, link_s, _exec_s,
+                 complete_s, retry) = d
             else:  # remote
-                _, ids, idx, total, token = d
-                assert token == len(self.rec0_of_token)
-                self.rec0_of_token.append(len(self.records))
+                _, ids, idx, total, _token, retry = d
+                complete_s, link_s = math.nan, 0.0
+            if retry:
+                # re-dispatch of orphaned work: the ids keep their one
+                # record each; the routing fields describe the new
+                # attempt
                 for i in ids:
-                    rank, m, samples = self.core.request(i)
-                    self.records.append({
-                        "id": i, "rank": rank, "model": m, "samples": samples,
-                        "arrival_s": self.arrival_s[i], "dispatch_s": self.clock_s,
-                        "complete_s": math.nan, "backend": idx,
-                        "batch_samples": total,
-                        "link_overhead_s": 0.0, "contention_s": 0.0,
-                    })
+                    r = self.records[self.rec_of_id[i]]
+                    r["dispatch_s"] = self.clock_s
+                    r["complete_s"] = complete_s
+                    r["backend"] = idx
+                    r["batch_samples"] = total
+                    r["link_overhead_s"] = link_s
+                    r["contention_s"] = 0.0
+                continue
+            for i in ids:
+                rank, m, samples = self.core.request(i)
+                self.rec_of_id[i] = len(self.records)
+                self.records.append({
+                    "id": i, "rank": rank, "model": m, "samples": samples,
+                    "arrival_s": self.arrival_s[i], "dispatch_s": self.clock_s,
+                    "complete_s": complete_s, "backend": idx,
+                    "batch_samples": total,
+                    "link_overhead_s": link_s, "contention_s": 0.0,
+                    "retried": False,
+                })
         for t, cls, ev in scheduled:
             self.events.push_class(t, cls, ev)
         for ids, token, timing in completed:
-            if timing is not None:
+            if token is not None and timing is not None:
+                # fabric path: fill the batch's records with measured
+                # timings, addressed by id
                 _wait_s, _swap_x, link_s, contention_s, _exec_s = timing
-                rec0 = self.rec0_of_token[token]
-                for k in range(len(ids)):
-                    r = self.records[rec0 + k]
+                for i in ids:
+                    r = self.records[self.rec_of_id[i]]
                     r["complete_s"] = self.clock_s
                     r["link_overhead_s"] = link_s
                     r["contention_s"] = contention_s
@@ -234,7 +302,10 @@ class EventSim:
 
     def summary(self):
         records = [r for r in self.records if math.isfinite(r["complete_s"])]
-        latencies = [r["complete_s"] - r["arrival_s"] for r in records]
+        # first-attempt latencies only: a retried completion's chain
+        # includes the failure gap and is counted via `retries`
+        latencies = [r["complete_s"] - r["arrival_s"] for r in records
+                     if not r["retried"]]
         samples = sum(r["samples"] for r in records)
         makespan_s = 0.0
         for r in records:
@@ -271,4 +342,7 @@ class EventSim:
             "slowdown_max": slowdown_max,
             "makespan_s": makespan_s,
             "samples_per_s": (float(samples) / makespan_s if makespan_s > 0.0 else 0.0),
+            "submitted": self.core.submitted,
+            "retries": self.core.retries_n,
+            "failed": self.core.submitted - n_rec - self.core.batcher_pending(),
         }

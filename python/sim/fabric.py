@@ -13,6 +13,9 @@ class Topology:
         self.link = None
         self.oversubscription = 1.0
         self.capacities = []
+        # As-built capacities: the restore point for degrade events.
+        self.base_capacities = []
+        self.capacity_scale = 1.0
         self.hosts = 0
         self.accel_ports = []  # None | (tx, rx)
         self.host_tx = []
@@ -66,7 +69,19 @@ class Topology:
             tx = push(nic)
             rx = push(nic)
             t.accel_ports.append((tx, rx))
+        t.base_capacities = list(t.capacities)
         return t
+
+    def set_capacity_scale(self, factor):
+        # Degrade (or restore) the whole fabric: every directed link's
+        # capacity becomes factor x its as-built value.  factor = 1.0
+        # restores the as-built capacities exactly (recomputed from
+        # the base, so repeated cycles cannot accumulate drift).
+        assert factor > 0.0 and math.isfinite(factor), \
+            f"capacity scale must be a positive finite factor ({factor})"
+        self.capacity_scale = factor
+        self.capacities = [base if factor == 1.0 else base * factor
+                           for base in self.base_capacities]
 
     def accels(self):
         return len(self.accel_ports)
@@ -207,6 +222,28 @@ class FabricEngine:
         if not times:
             return None
         return min(times)
+
+    def set_capacity_scale(self, now_s, factor):
+        # Degrade (or restore) the fabric mid-run: credit every active
+        # flow its progress up to now_s at the *old* rates, scale the
+        # link capacities, then re-solve over what is left.
+        self.advance_to(now_s)
+        self.topo.set_capacity_scale(factor)
+        if self.constrained > 0:
+            self._recompute()
+
+    def cancel(self, now_s, fid):
+        # Cancel an active flow (control plane: its destination
+        # backend left the fleet).  Progress is credited first, so
+        # survivors keep exactly the bytes they moved.
+        self.advance_to(now_s)
+        f = self.flows.pop(fid, None)
+        if f is None:
+            return False
+        if f[3]:
+            self.constrained -= 1
+            self._recompute()
+        return True
 
     def take_completed(self, now_s):
         self.advance_to(now_s)

@@ -1,8 +1,9 @@
 """Generate the committed campaign goldens byte-exactly.
 
-Writes rust/tests/golden/{campaign,event,cogsim}_summary.json from
-the default configs — the same documents
-`cargo test --test campaign_golden` reproduces and compares.
+Writes rust/tests/golden/{campaign,event,cogsim,control}_summary.json
+from the default configs — the same documents
+`cargo test --test campaign_golden` (and the control-plane suite)
+reproduces and compares.
 """
 
 import os
@@ -12,6 +13,7 @@ import time
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import campaign  # noqa: E402
+import control  # noqa: E402
 import jsonw  # noqa: E402
 
 REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -41,6 +43,14 @@ def main():
     doc = jsonw.write(campaign.cog_campaign_json(campaign.run_cog_campaign(
         campaign.default_cog_cfg())))
     path = os.path.join(GOLDEN, "cogsim_summary.json")
+    with open(path, "w") as f:
+        f.write(doc)
+    print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    doc = jsonw.write(control.control_campaign_json(control.run_control_campaign(
+        control.default_control_cfg())))
+    path = os.path.join(GOLDEN, "control_summary.json")
     with open(path, "w") as f:
         f.write(doc)
     print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")

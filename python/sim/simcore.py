@@ -117,6 +117,23 @@ class FabricLayer:
         self.busy_until_s[backend] = done_s
         return start_s - ready_s, done_s
 
+    def set_capacity_scale(self, clock_s, factor):
+        """Control plane: degrade/restore every link, re-solve shares."""
+        self.engine.set_capacity_scale(clock_s, factor)
+
+    def cancel_flows_of(self, clock_s, token_dead):
+        """Control plane: cancel every in-flight flow whose transit
+        token satisfies token_dead (its backend left the fleet)."""
+        doomed = [fid for fid, cont in self.cont.items() if token_dead(cont[1])]
+        for fid in doomed:
+            del self.cont[fid]
+            self.engine.cancel(clock_s, fid)
+        return len(doomed)
+
+    def reset_busy(self, backend):
+        """Control plane: forget a departed backend's device horizon."""
+        self.busy_until_s[backend] = 0.0
+
     def drain_wake(self, version, clock_s):
         if version != self.wake_version:
             return None
@@ -147,6 +164,10 @@ class Residency:
         if len(self.held) > self.slots:
             self.held.pop(0)
         return True
+
+    def clear(self):
+        """Control plane: device memory is gone — forget every model."""
+        self.held = []
 
 
 class Pipeline:
@@ -188,20 +209,50 @@ class Pipeline:
         self.batches = 0
         self.swaps = 0
         self.swap_time_s = 0.0
+        # -------- control plane (inert on a static run) --------
+        self.active = [True] * len(backends)
+        # configured tiers filtered to active backends (rebuilt on
+        # every membership change; routing only ever sees these)
+        self.live_hermit = list(hermit_tier)
+        self.live_mir = list(mir_tier)
+        # direct-path batches in flight, indexed by completion token
+        # (a token recycles only when its scheduled completion popped)
+        self.direct_live = []    # {"ids", "backend", "dead"}
+        self.direct_free = []
+        # batches with no live backend in their tier, awaiting a join
+        self.parked = []         # (ids, retry)
+        self.live_batches = [0] * len(backends)
+        self.retries_n = 0
+        self.orphaned_n = 0
         # effects, in exact legacy push order
         self.scheduled = []      # (t_s, class, pipe_event)
         self.out_dispatched = []
         self.out_completed = []
+        self.out_orphaned = []
 
     # ----------------------------------------------------- effects
 
     def take_effects(self):
-        eff = (self.scheduled, self.out_dispatched, self.out_completed)
-        self.scheduled, self.out_dispatched, self.out_completed = [], [], []
+        eff = (self.scheduled, self.out_dispatched, self.out_completed,
+               self.out_orphaned)
+        self.scheduled, self.out_dispatched, self.out_completed, \
+            self.out_orphaned = [], [], [], []
         return eff
 
     def batcher_pending(self):
         return self.batcher.pending if self.batcher is not None else 0
+
+    def parked_requests(self):
+        return sum(len(ids) for ids, _ in self.parked)
+
+    def is_active(self, idx):
+        return self.active[idx]
+
+    def active_count(self):
+        return sum(1 for a in self.active if a)
+
+    def backlog_s(self, idx):
+        return self.backends[idx].queue_s()
 
     # ----------------------------------------------------- run loop
 
@@ -253,7 +304,7 @@ class Pipeline:
         if kind == "deadline":
             self._pump_batcher()
         elif kind == "completion":
-            self._complete(event[1], None, None)
+            self._on_direct_completion(event[1])
         elif kind == "fabric_wake":
             self._on_fabric_wake(event[1])
         elif kind == "xfer_in":
@@ -280,11 +331,20 @@ class Pipeline:
     # ------------------------------------------------------- routing
 
     def _dispatch(self, ids):
+        self._dispatch_inner(ids, False)
+
+    def _dispatch_inner(self, ids, retry):
         rank0, mid, _ = self.req_meta[ids[0]]
         total = sum(self.req_meta[i][2] for i in ids)
         is_mir = self.model_is_mir[mid]
         profile = self.mir_profile if is_mir else self.hermit_profile
-        candidates = self.mir_tier if is_mir else self.hermit_tier
+        candidates = self.live_mir if is_mir else self.live_hermit
+        if not candidates:
+            # every backend in the tier has left: park until a join
+            self.parked.append((ids, retry))
+            return
+        if retry:
+            self.retries_n += len(ids)
         slot = [self.affinity[mid]]
         idx = select_slot(self.policy, self.backends, self.rr_state, slot,
                           candidates, profile, total)
@@ -293,7 +353,7 @@ class Pipeline:
         if miss:
             self.swaps += 1
         if self.fabric is not None and self.fabric.is_remote(idx):
-            self._dispatch_remote(ids, idx, total, miss, rank0, mid)
+            self._dispatch_remote(ids, idx, total, miss, rank0, mid, retry)
             return
         swap_s = self.swap_cfg_s if miss else 0.0
         if miss:
@@ -307,14 +367,37 @@ class Pipeline:
         backend.add_queue_s(occupancy)
         complete_s = self.clock_s + latency_s
         self.out_dispatched.append(
-            ("direct", ids, idx, total, wait_s, swap_s, link_s, exec_s, complete_s))
+            ("direct", ids, idx, total, wait_s, swap_s, link_s, exec_s,
+             complete_s, retry))
         self.dispatched_n += len(ids)
         self.batches += 1
-        self.scheduled.append((complete_s, CLASS_COMPLETION, ("completion", ids)))
+        self.live_batches[idx] += 1
+        if self.direct_free:
+            token = self.direct_free.pop()
+            self.direct_live[token] = {"ids": ids, "backend": idx, "dead": False}
+        else:
+            self.direct_live.append({"ids": ids, "backend": idx, "dead": False})
+            token = len(self.direct_live) - 1
+        self.scheduled.append((complete_s, CLASS_COMPLETION, ("completion", token)))
+
+    def _on_direct_completion(self, token):
+        # Stale for batches the control plane orphaned (their ids were
+        # re-dispatched already); either way the token is spent.
+        batch = self.direct_live[token]
+        if batch["dead"]:
+            batch["dead"] = False
+            self.direct_free.append(token)
+            return
+        ids = batch["ids"]
+        batch["ids"] = []
+        idx = batch["backend"]
+        self.direct_free.append(token)
+        self.live_batches[idx] -= 1
+        self._complete(ids, None, None)
 
     # ------------------------------------------------- fabric phases
 
-    def _dispatch_remote(self, ids, idx, total, miss, rank0, mid):
+    def _dispatch_remote(self, ids, idx, total, miss, rank0, mid, retry):
         profile = self.mir_profile if self.model_is_mir[mid] else self.hermit_profile
         bytes_in, bytes_out = dir_payload_bytes(
             profile.input_elems, profile.output_elems, total)
@@ -333,9 +416,10 @@ class Pipeline:
         exec_s = backend.execute_s(profile, total)
         backend.add_queue_s(exec_s)
         token = len(self.transits)
-        self.out_dispatched.append(("remote", ids, idx, total, token))
+        self.out_dispatched.append(("remote", ids, idx, total, token, retry))
         self.dispatched_n += len(ids)
         self.batches += 1
+        self.live_batches[idx] += 1
         needs_swap_flow = miss and swap_bytes > 0.0
         if needs_swap_flow:
             # weights are on the wire: same-model followers routed
@@ -346,6 +430,7 @@ class Pipeline:
             "model": mid, "bytes_out": bytes_out, "dispatch_s": self.clock_s,
             "net_in_s": 0.0, "in_done_s": 0.0,
             "in_done": False, "swap_done": not needs_swap_flow, "started": False,
+            "dead": False,
             "swap_excess_s": 0.0, "wait_s": 0.0, "exec_s": exec_s,
             "out_start_s": 0.0, "ideal_rtt_s": ideal_rtt_s,
         })
@@ -396,6 +481,8 @@ class Pipeline:
 
     def _on_xfer_in_done(self, token):
         tr = self.transits[token]
+        if tr["dead"]:
+            return
         tr["net_in_s"] = self.clock_s - tr["dispatch_s"]
         tr["in_done_s"] = self.clock_s
         tr["in_done"] = True
@@ -404,7 +491,7 @@ class Pipeline:
     def _try_begin_service(self, token):
         clock = self.clock_s
         tr = self.transits[token]
-        if tr["started"] or not (tr["in_done"] and tr["swap_done"]):
+        if tr["dead"] or tr["started"] or not (tr["in_done"] and tr["swap_done"]):
             return
         # == +inf exactly: -inf means the model was never swapped here
         if self.swap_ready_s[tr["model"]][tr["backend"]] == math.inf:
@@ -425,6 +512,8 @@ class Pipeline:
 
     def _on_service_done(self, token):
         tr = self.transits[token]
+        if tr["dead"]:
+            return
         tr["out_start_s"] = self.clock_s
         fab = self.fabric
         path = fab.topology.response_path(tr["host"], tr["accel"])
@@ -434,12 +523,92 @@ class Pipeline:
 
     def _on_xfer_out_done(self, token):
         tr = self.transits[token]
+        if tr["dead"]:
+            return
         net_out_s = self.clock_s - tr["out_start_s"]
         link_s = tr["net_in_s"] + net_out_s
         contention_s = max(link_s - tr["ideal_rtt_s"], 0.0)
         timing = (tr["wait_s"], tr["swap_excess_s"], link_s, contention_s, tr["exec_s"])
-        self._complete(tr["ids"], token, timing)
+        ids = tr["ids"]
+        tr["ids"] = []
+        self.live_batches[tr["backend"]] -= 1
+        self._complete(ids, token, timing)
 
     def _complete(self, ids, token, timing):
         self.completed_n += len(ids)
         self.out_completed.append((ids, token, timing))
+
+    # ------------------------------------------------- control plane
+
+    def _rebuild_live_tiers(self):
+        self.live_hermit = [i for i in self.hermit_tier if self.active[i]]
+        self.live_mir = [i for i in self.mir_tier if self.active[i]]
+
+    def control_backend_leave(self, idx):
+        """Backend idx leaves the fleet (failure or scale-down): queue
+        drained, residency/weights-ready gates invalidated, flows
+        cancelled, in-flight batches orphaned and re-dispatched once
+        onto the surviving tier (or parked when the tier emptied)."""
+        assert idx < len(self.backends), f"unknown backend {idx}"
+        if not self.active[idx]:
+            return
+        self.active[idx] = False
+        self._rebuild_live_tiers()
+        # sticky affinity must not keep pointing at the dead slot
+        for mid, slot in enumerate(self.affinity):
+            if slot == idx:
+                self.affinity[mid] = None
+        # drain the dead backend's routing queue: its committed work
+        # is exactly the in-flight set being orphaned below
+        q = self.backends[idx].queue_s()
+        if q > 0.0:
+            self.backends[idx].drain_queue_s(q)
+        # residency + weights-ready gates: device memory is gone
+        if self.residency is not None:
+            self.residency[idx].clear()
+        for mid in range(len(self.models)):
+            self.swap_ready_s[mid][idx] = -math.inf
+            self.swap_waiters[mid][idx] = []
+        # orphan every batch the backend held, direct then fabric,
+        # ascending token order (deterministic re-dispatch order)
+        orphans = []
+        for batch in self.direct_live:
+            if batch["backend"] == idx and not batch["dead"] and batch["ids"]:
+                batch["dead"] = True
+                orphans.append(batch["ids"])
+                batch["ids"] = []
+        for tr in self.transits:
+            if tr["backend"] == idx and not tr["dead"] and tr["ids"]:
+                tr["dead"] = True
+                orphans.append(tr["ids"])
+                tr["ids"] = []
+        if self.fabric is not None:
+            self.fabric.cancel_flows_of(
+                self.clock_s, lambda token: self.transits[token]["dead"])
+            self.fabric.reset_busy(idx)
+            self._arm_fabric()
+        self.live_batches[idx] = 0
+        for ids in orphans:
+            self.orphaned_n += len(ids)
+            self.out_orphaned.extend(ids)
+            self._dispatch_inner(ids, True)
+
+    def control_backend_join(self, idx):
+        """Backend idx (re)joins the fleet cold; parked batches flush
+        through the router in arrival order."""
+        assert idx < len(self.backends), f"unknown backend {idx}"
+        if self.active[idx]:
+            return
+        self.active[idx] = True
+        self._rebuild_live_tiers()
+        parked = self.parked
+        self.parked = []
+        for ids, retry in parked:
+            self._dispatch_inner(ids, retry)
+
+    def control_link_scale(self, factor):
+        """Scale every fabric link to factor x as-built capacity and
+        re-solve the fair shares (no-op on the fabric-less path)."""
+        if self.fabric is not None:
+            self.fabric.set_capacity_scale(self.clock_s, factor)
+            self._arm_fabric()

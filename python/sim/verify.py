@@ -302,6 +302,190 @@ def mixed_fleet():
            "mixed{0g2r} == default pool")
 
 
+def control_plane():
+    import control as ctrl
+    from eventsim import latency_dist, rank_rngs
+
+    # ---- spec parsing round-trips (harness::scenario tests)
+    ok(ctrl.parse_control("static") == ctrl.static_spec(), "static parses")
+    ok(ctrl.parse_control("") is None, "empty spec rejected")
+    s = ctrl.parse_control("leave:0@30000+join:0@60000+auto:2:1-4:100:2000")
+    ok(s is not None and s["key"] == "leave:0@30000+join:0@60000+auto:2:1-4:100:2000",
+       "compound key round-trips")
+    ok(s["trace"] == [(0.03, ("leave", 0)), (0.06, ("join", 0))], "trace parses")
+    ok(s["autoscaler"] == {"initial": 2, "min_active": 1, "max_active": 4,
+                           "low_s": 100.0 * 1e-6, "high_s": 2000.0 * 1e-6},
+       "autoscaler parses")
+    ok(ctrl.parse_control("degrade:0.25@6000+restore@20000")["trace"]
+       == [(0.006, ("degrade", 0.25)), (0.02, ("restore",))], "degrade/restore parse")
+    ok(ctrl.parse_control("rankfail:1@10000")["trace"] == [(0.01, ("rankfail", 1))],
+       "rankfail parses")
+    for bad in ["leave:0", "leave@5", "degrade:0@5", "degrade:-1@5", "leave:0@-5",
+                "auto:2:1-4:100", "auto:2:1-4:100:2000+auto:2:1-4:100:2000",
+                "frob:1@5", "leave:0@nan"]:
+        ok(ctrl.parse_control(bad) is None, f"{bad!r} rejected")
+    ok(not ctrl.is_static(ctrl.parse_control("leave:0@5")), "leave is not static")
+    ok(ctrl.is_static(ctrl.parse_control("static")), "static is static")
+
+    # ---- quantile fix: never-completed requests (non-finite
+    # latencies) are excluded from the distribution, not counted as
+    # zero-latency entries
+    base = [1e-3, 2e-3, 3e-3, 4e-3]
+    d0 = latency_dist(base)
+    d1 = latency_dist(base + [math.nan, math.inf])
+    ok(d0 == d1, "quantiles exclude never-completed")
+    ok(d1["p50_s"] > 0.0 and d1["count"] == 4, "no zero-latency ghosts")
+
+    # ---- differential: an armed-but-empty control plane is
+    # byte-identical to the legacy static run, every workload kind
+    for arrival in [("synchronized", 0.02, 0.0), ("poisson", 800.0),
+                    ("closed_loop", 2e-3)]:
+        a = EventSim(pool(), cl.LEAST_OUTSTANDING, ecfg(arrival=arrival, horizon_s=0.05),
+                     [0, 1], [0, 1], None)
+        a.run_to_completion()
+        b = EventSim(pool(), cl.LEAST_OUTSTANDING, ecfg(arrival=arrival, horizon_s=0.05),
+                     [0, 1], [0, 1], None)
+        b.with_control([])
+        b.run_to_completion()
+        ok(jsonw.write(cp.event_summary_json(a.summary()))
+           == jsonw.write(cp.event_summary_json(b.summary())),
+           f"empty trace differential ({arrival[0]})")
+    a = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(), [0, 1], [0, 1], None)
+    a.run_to_completion()
+    b = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(), [0, 1], [0, 1], None)
+    b.with_control([], None)
+    b.run_to_completion()
+    ok(jsonw.write(cp.cog_summary_json(a.summary()))
+       == jsonw.write(cp.cog_summary_json(b.summary())),
+       "empty trace differential (cog)")
+
+    # ---- failure injection: backend loss mid-run, orphans
+    # re-dispatched exactly once, retries excluded from latencies
+    sim = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(), [0, 1], [0, 1], None)
+    sim.with_control([(2.2e-3, ("leave", 0))], None)
+    sim.run_to_completion()
+    s = sim.summary()
+    ok(sim.orphaned() > 0, "leave orphans in-flight work")
+    ok(sim.orphaned() == sim.retries(), "orphans re-dispatched exactly once")
+    ok(s["failed"] == 0 and s["requests"] == s["submitted"],
+       "survivors absorb the loss")
+    ok(len(sim.steps) == 8 and sim.in_flight() == 0, "run completes")
+    ok(not sim.backend_active(0) and sim.backend_active(1), "membership tracked")
+    ok(all(r["backend"] != 0 or not r["retried"] for r in sim.records),
+       "retries land on survivors")
+    retried = [r for r in sim.records if r["retried"]]
+    ok(len(retried) == sim.retries(), "one record per retried request")
+    ok(s["latency"]["count"] == s["requests"] - len(retried),
+       "first-attempt latencies only")
+    ok(all(math.isfinite(r["complete_s"]) for r in sim.records),
+       "every record eventually completes")
+    # same loss against the fabric path (flows cancelled, not leaked)
+    fsim = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(), [0, 1], [0, 1], fab(4, 2.0))
+    fsim.with_control([(2.2e-3, ("leave", 0))], None)
+    fsim.run_to_completion()
+    ok(fsim.orphaned() == fsim.retries() and fsim.in_flight() == 0,
+       "fabric-path loss conserves")
+    ok(fsim.core.fabric.engine.active() == 0, "no leaked flows")
+    # losing the whole tier parks work until a join revives it
+    dead = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(timesteps=2), [0, 1], [0, 1], None)
+    dead.with_control([(2.2e-3, ("leave", 0)), (2.2e-3, ("leave", 1)),
+                       (5e-3, ("join", 0))], None)
+    dead.run_to_completion()
+    ok(dead.summary()["failed"] == 0 and len(dead.steps) == 2,
+       "join flushes parked work")
+    # rank checkpoint/restart: replay finishes all steps, waste counted
+    rsim = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(), [0, 1], [0, 1], None)
+    rsim.with_control([(2.2e-3, ("rankfail", 1))], None)
+    rsim.run_to_completion()
+    ok(rsim.rank_restarts == 1 and len(rsim.steps) == 8, "rankfail replays the step")
+    ok(rsim.summary()["submitted"] > 8 * 4 * 6, "replay re-submits the lost burst")
+    ok(rsim.time_to_solution_s() > a.time_to_solution_s(), "restart costs time")
+
+    # ---- chaos: randomized seeded traces conserve, produce finite
+    # summaries, and rerun byte-identically
+    def chaos_trace(seed, horizon_s, n_backends, n_ranks):
+        rng = rank_rngs(seed, 1)[0]
+        trace = []
+        for _ in range(rng.range(3, 8)):
+            at = rng.uniform(0.0, horizon_s)
+            kind = rng.below(5)
+            if kind == 0:
+                trace.append((at, ("leave", rng.below(n_backends))))
+            elif kind == 1:
+                trace.append((at, ("join", rng.below(n_backends))))
+            elif kind == 2:
+                trace.append((at, ("degrade", 0.1 + 0.8 * rng.uniform(0.0, 1.0))))
+            elif kind == 3:
+                trace.append((at, ("restore",)))
+            else:
+                trace.append((at, ("rankfail", rng.below(n_ranks))))
+        return trace
+
+    def finite_doc(v):
+        if isinstance(v, float):
+            return math.isfinite(v)
+        if isinstance(v, dict):
+            return all(finite_doc(x) for x in v.values())
+        if isinstance(v, list):
+            return all(finite_doc(x) for x in v)
+        return True
+
+    for seed in [1, 7, 99]:
+        trace = chaos_trace(seed, 20e-3, 2, 4)
+        docs = []
+        for _ in range(2):
+            sim = CogSim(pool(), cl.LEAST_OUTSTANDING, ccfg(timesteps=4),
+                         [0, 1], [0, 1], fab(4, 2.0))
+            sim.with_control(trace, None)
+            sim.run_to_completion()
+            s = sim.summary()
+            fin = sum(1 for r in sim.records if math.isfinite(r["complete_s"]))
+            ok(s["submitted"] == fin + sim.parked() + sim.batcher_pending(),
+               f"cog chaos conserves (seed {seed})")
+            ok(s["retries"] == sim.orphaned(), f"cog chaos retries once (seed {seed})")
+            docs.append(jsonw.write(cp.cog_summary_json(s)))
+            ok(finite_doc(cp.cog_summary_json(s)), f"cog chaos finite (seed {seed})")
+        ok(docs[0] == docs[1], f"cog chaos rerun identical (seed {seed})")
+
+        trace = chaos_trace(seed + 1000, 40e-3, 2, 4)
+        docs = []
+        for _ in range(2):
+            sim = EventSim(pool(), cl.LEAST_OUTSTANDING,
+                           ecfg(arrival=("poisson", 800.0), horizon_s=0.05),
+                           [0, 1], [0, 1], None)
+            sim.with_control(trace)
+            sim.run_to_completion()
+            s = sim.summary()
+            ok(s["submitted"] == s["requests"] + s["failed"] + sim.core.batcher_pending(),
+               f"event chaos conserves (seed {seed})")
+            ok(s["failed"] == sim.parked(), f"event chaos failures parked (seed {seed})")
+            docs.append(jsonw.write(cp.event_summary_json(s)))
+            ok(finite_doc(cp.event_summary_json(s)), f"event chaos finite (seed {seed})")
+        ok(docs[0] == docs[1], f"event chaos rerun identical (seed {seed})")
+
+    # ---- the control campaign headline (golden-pinned)
+    r = ctrl.run_control_campaign(ctrl.default_control_cfg())
+    ll = ctrl.loss_ratio(r, "local")
+    lp = ctrl.loss_ratio(r, "pooled")
+    ok(1.0 < lp < ll, "pooled absorbs a one-backend loss more gracefully")
+    ok(ctrl.cell(r, "local/leave")["summary"]["retries"] > 0, "loss cells orphan work")
+    ok(ctrl.cell(r, "pooled/leave")["summary"]["retries"] > 0, "pooled loss orphans work")
+    ok(ctrl.cell(r, "pooled/rankfail")["summary"]["rank_restarts"] == 1,
+       "rankfail cell restarts once")
+    auto = ctrl.autoscaler_factor(r)
+    ok(auto <= ctrl.AUTOSCALER_BOUND, "autoscaler holds the TTS bound")
+    ok(ctrl.cell(r, "pooled/auto")["summary"]["mean_active_backends"]
+       < ctrl.cell(r, "pooled/static")["summary"]["mean_active_backends"],
+       "autoscaler sheds idle capacity")
+    for c in r["cells"]:
+        ok(c["summary"]["failed"] == 0, f"{c['label']} completes all work")
+    golden = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))), "rust", "tests", "golden")
+    doc = jsonw.write(ctrl.control_campaign_json(r))
+    with open(os.path.join(golden, "control_summary.json")) as f:
+        ok(f.read() == doc, "control golden reproduces")
+
+
 def golden_stability():
     golden = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__)))), "rust", "tests", "golden")
@@ -322,7 +506,7 @@ def golden_stability():
 def main():
     t0 = time.time()
     for phase in (anchors, fair_share, degenerate_limit, engine_properties,
-                  campaign_headlines, mixed_fleet, golden_stability):
+                  campaign_headlines, mixed_fleet, control_plane, golden_stability):
         t1 = time.time()
         phase()
         print(f"{phase.__name__}: OK ({time.time() - t1:.1f}s)")

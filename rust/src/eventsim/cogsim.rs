@@ -43,7 +43,8 @@
 use crate::cluster::{Backend, Policy};
 use crate::fabric::FabricSpec;
 use crate::simcore::{
-    Batching, Completed, Dispatched, Outcome, PipeEvent, Pipeline, ResidencySpec,
+    AutoscalerCfg, Batching, Completed, Dispatched, FleetAction, FleetEvent, Outcome, PipeEvent,
+    Pipeline, ResidencySpec,
 };
 use crate::util::rng::Rng;
 use crate::workload::HydraWorkload;
@@ -138,6 +139,10 @@ pub struct CogRecord {
     pub contention_s: f64,
     /// Device execution share of the service, seconds.
     pub exec_s: f64,
+    /// The request's first batch died with its backend and it was
+    /// re-dispatched by the control plane; the completion fields
+    /// describe the *successful* attempt.
+    pub retried: bool,
 }
 
 impl CogRecord {
@@ -162,6 +167,10 @@ struct PendingMeta {
     emit_s: f64,
     /// Index into `records` once the batch carrying it dispatched.
     record: Option<usize>,
+    /// Rank epoch the request was emitted in: completions from a
+    /// pre-failure epoch are wasted work and do not advance the
+    /// barrier.
+    epoch: u32,
 }
 
 /// Per-rank progress through the current timestep.
@@ -198,10 +207,14 @@ impl RankState {
 enum Event {
     /// Barrier release: all ranks begin timestep `step`.
     StepStart { step: usize },
-    /// One request entering the router.
-    Arrival { rank: usize, model: String, samples: usize },
-    /// A rank's physics compute for the current step finished.
-    ComputeDone { rank: usize },
+    /// One request entering the router.  Stale when `epoch` is no
+    /// longer the rank's current epoch (emitted before a failure).
+    Arrival { rank: usize, model: String, samples: usize, epoch: u32 },
+    /// A rank's physics compute for the current step finished (stale
+    /// when `epoch` is outdated — the restarted rank re-computes).
+    ComputeDone { rank: usize, epoch: u32 },
+    /// A timed control-plane action from the scenario's trace.
+    Fleet { action: FleetAction },
     /// Everything past the router lives in [`crate::simcore`].
     Pipe(PipeEvent),
 }
@@ -220,10 +233,21 @@ pub struct CogSim {
     finished_ranks: usize,
     pending: Vec<PendingMeta>,
     records: Vec<CogRecord>,
-    /// Fabric transit token -> first record index of its batch.
-    rec0_of_token: Vec<usize>,
     steps: Vec<StepBreakdown>,
     events_processed: u64,
+    /// Per-rank restart epoch: bumped on every checkpoint/restart;
+    /// events and completions from older epochs are stale.
+    epoch: Vec<u32>,
+    /// Per-rank draws of the current step — the "checkpoint" a
+    /// restarted rank replays (same models, samples, and compute as
+    /// the lost attempt; the rank's RNG stream is not re-consumed).
+    step_draws: Vec<Vec<(String, usize)>>,
+    /// Per-rank physics duration of the current step (jitter drawn).
+    step_compute: Vec<f64>,
+    autoscaler: Option<AutoscalerCfg>,
+    rank_restarts: u64,
+    /// Active backend count sampled at every step start.
+    active_samples: Vec<u64>,
 }
 
 impl CogSim {
@@ -277,12 +301,48 @@ impl CogSim {
             finished_ranks: 0,
             pending: Vec::new(),
             records: Vec::new(),
-            rec0_of_token: Vec::new(),
             steps: Vec::new(),
             events_processed: 0,
+            epoch: vec![0; cfg.ranks],
+            step_draws: vec![Vec::new(); cfg.ranks],
+            step_compute: vec![0.0; cfg.ranks],
+            autoscaler: None,
+            rank_restarts: 0,
+            active_samples: Vec::new(),
         };
         sim.events.push_class(0.0, CLASS_ARRIVAL, Event::StepStart { step: 0 });
         sim
+    }
+
+    /// Arm a control-plane trace and/or the reactive autoscaler.
+    /// Each [`FleetEvent`] fires at its time as an ordinary
+    /// arrival-class event; an empty trace with no autoscaler adds
+    /// nothing, so the run stays bit-identical to a static one (the
+    /// differential suite pins this).  The autoscaler manages the
+    /// hermit tier: backends past `initial` start parked, and the
+    /// pool grows/shrinks one backend per step from the mean routing
+    /// backlog.
+    pub fn with_control(&mut self, trace: &[FleetEvent], autoscaler: Option<AutoscalerCfg>) {
+        for ev in trace {
+            assert!(
+                ev.at_s >= 0.0 && ev.at_s.is_finite(),
+                "fleet event time must be finite and non-negative ({})",
+                ev.at_s
+            );
+            self.events.push_class(ev.at_s, CLASS_ARRIVAL, Event::Fleet { action: ev.action });
+        }
+        if let Some(cfg) = autoscaler {
+            let tier = self.core.hermit_tier().to_vec();
+            cfg.validate(tier.len());
+            for &idx in tier.iter().skip(cfg.initial) {
+                self.core.control_backend_leave(idx);
+            }
+            // nothing is in flight at t = 0: deactivating idle
+            // backends produces no observable effects
+            let fx = self.core.take_effects();
+            self.core.recycle_effects(fx);
+            self.autoscaler = Some(cfg);
+        }
     }
 
     /// As [`Self::with_tiers`], with remote dispatches carried by the
@@ -325,8 +385,11 @@ impl CogSim {
     fn handle(&mut self, event: Event) {
         match event {
             Event::StepStart { step } => self.on_step_start(step),
-            Event::Arrival { rank, model, samples } => self.on_request(rank, model, samples),
-            Event::ComputeDone { rank } => self.on_compute_done(rank),
+            Event::Arrival { rank, model, samples, epoch } => {
+                self.on_request(rank, model, samples, epoch)
+            }
+            Event::ComputeDone { rank, epoch } => self.on_compute_done(rank, epoch),
+            Event::Fleet { action } => self.on_fleet(action),
             Event::Pipe(ev) => {
                 self.core.handle(ev);
                 self.apply_effects();
@@ -341,6 +404,8 @@ impl CogSim {
     /// emission point.  Request draws happen here, in rank order, so
     /// a rank's stream is independent of the total rank count.
     fn on_step_start(&mut self, step: usize) {
+        self.autoscale();
+        self.active_samples.push(self.core.active_count() as u64);
         self.step_start_s = self.core.clock_s();
         self.current_step = step;
         self.finished_ranks = 0;
@@ -351,42 +416,63 @@ impl CogSim {
             } else {
                 0.0
             };
-            let compute = self.cfg.compute_s + jitter;
-            let emit_s = self.core.clock_s() + (1.0 - self.cfg.overlap) * compute;
-            let compute_end_s = self.core.clock_s() + compute;
-            let mut outstanding = 0usize;
+            self.step_compute[rank] = self.cfg.compute_s + jitter;
+            let mut draws = std::mem::take(&mut self.step_draws[rank]);
+            draws.clear();
             for _ in 0..self.cfg.requests_per_step {
                 let model = HydraWorkload::material_model(self.rngs[rank].below(self.cfg.models));
                 let samples = self.rngs[rank].range(lo, hi);
-                self.events.push_class(emit_s, CLASS_ARRIVAL, Event::Arrival {
-                    rank,
-                    model,
-                    samples,
-                });
-                outstanding += 1;
+                draws.push((model, samples));
             }
             if self.cfg.mir_every > 0 && step % self.cfg.mir_every == 0 {
-                self.events.push_class(emit_s, CLASS_ARRIVAL, Event::Arrival {
-                    rank,
-                    model: "mir".to_string(),
-                    samples: self.cfg.mir_samples,
-                });
-                outstanding += 1;
+                draws.push(("mir".to_string(), self.cfg.mir_samples));
             }
-            self.ranks[rank] = RankState {
-                compute_end_s,
-                emit_s,
-                outstanding,
-                compute_done: false,
-                finished: false,
-                finish_s: 0.0,
-                last_record: None,
-            };
-            self.events.push_class(compute_end_s, CLASS_ARRIVAL, Event::ComputeDone { rank });
+            self.step_draws[rank] = draws;
+            self.emit_step(rank);
         }
     }
 
-    fn on_compute_done(&mut self, rank: usize) {
+    /// (Re)start `rank`'s current step at the current clock: schedule
+    /// its physics end and emit the stored draws at the emission
+    /// point.  Called once per rank per step, and again on every
+    /// checkpoint/restart (same draws — the checkpoint is the step's
+    /// input state, not a fresh sample).
+    fn emit_step(&mut self, rank: usize) {
+        let now = self.core.clock_s();
+        let compute = self.step_compute[rank];
+        let emit_s = now + (1.0 - self.cfg.overlap) * compute;
+        let compute_end_s = now + compute;
+        let epoch = self.epoch[rank];
+        let mut outstanding = 0usize;
+        for k in 0..self.step_draws[rank].len() {
+            let (model, samples) = self.step_draws[rank][k].clone();
+            self.events.push_class(emit_s, CLASS_ARRIVAL, Event::Arrival {
+                rank,
+                model,
+                samples,
+                epoch,
+            });
+            outstanding += 1;
+        }
+        self.ranks[rank] = RankState {
+            compute_end_s,
+            emit_s,
+            outstanding,
+            compute_done: false,
+            finished: false,
+            finish_s: 0.0,
+            last_record: None,
+        };
+        self.events.push_class(compute_end_s, CLASS_ARRIVAL, Event::ComputeDone {
+            rank,
+            epoch,
+        });
+    }
+
+    fn on_compute_done(&mut self, rank: usize, epoch: u32) {
+        if epoch != self.epoch[rank] {
+            return; // pre-failure physics: the restarted rank re-computes
+        }
         self.ranks[rank].compute_done = true;
         self.try_finish(rank);
     }
@@ -470,13 +556,93 @@ impl CogSim {
         }
     }
 
+    // ------------------------------------------------- control plane
+
+    fn on_fleet(&mut self, action: FleetAction) {
+        match action {
+            FleetAction::BackendLeave(idx) => {
+                self.core.control_backend_leave(idx);
+                self.apply_effects();
+            }
+            FleetAction::BackendJoin(idx) => {
+                self.core.control_backend_join(idx);
+                self.apply_effects();
+            }
+            FleetAction::LinkDegrade(factor) => {
+                self.core.control_link_scale(factor);
+                self.apply_effects();
+            }
+            FleetAction::LinkRestore => {
+                self.core.control_link_scale(1.0);
+                self.apply_effects();
+            }
+            FleetAction::RankFail(rank) => self.on_rank_fail(rank),
+        }
+    }
+
+    /// Rank checkpoint/restart: the rank loses its in-flight
+    /// timestep and replays it from the step's input state — same
+    /// physics duration, same request draws.  Responses to the lost
+    /// attempt's requests still arrive (the pool did the work) but
+    /// count as waste: they no longer advance the barrier.  A rank
+    /// already checkpointed at this step's barrier loses nothing.
+    fn on_rank_fail(&mut self, rank: usize) {
+        assert!(rank < self.cfg.ranks, "unknown rank {rank}");
+        if self.steps.len() >= self.cfg.timesteps || self.ranks[rank].finished {
+            return;
+        }
+        self.epoch[rank] += 1;
+        self.rank_restarts += 1;
+        self.emit_step(rank);
+    }
+
+    /// Reactive queue-depth autoscaling, evaluated at every barrier
+    /// release: grow by the lowest-index parked hermit backend when
+    /// the mean routing backlog per active backend exceeds `high_s`;
+    /// shrink the highest-index *idle* one when it falls below
+    /// `low_s`.  One action per step keeps the policy stable.
+    fn autoscale(&mut self) {
+        let Some(cfg) = self.autoscaler else { return };
+        let tier = self.core.hermit_tier().to_vec();
+        let active: Vec<usize> =
+            tier.iter().copied().filter(|&i| self.core.is_active(i)).collect();
+        if active.is_empty() {
+            if let Some(&idx) = tier.first() {
+                self.core.control_backend_join(idx);
+                self.apply_effects();
+            }
+            return;
+        }
+        let mean_backlog =
+            active.iter().map(|&i| self.core.backlog_s(i)).sum::<f64>() / active.len() as f64;
+        if mean_backlog > cfg.high_s && active.len() < cfg.max_active {
+            if let Some(&idx) = tier.iter().find(|&&i| !self.core.is_active(i)) {
+                self.core.control_backend_join(idx);
+                self.apply_effects();
+            }
+        } else if mean_backlog < cfg.low_s && active.len() > cfg.min_active {
+            let idle = active
+                .iter()
+                .rev()
+                .find(|&&i| self.core.live_batches(i) == 0 && self.core.backlog_s(i) <= 0.0);
+            if let Some(&idx) = idle {
+                self.core.control_backend_leave(idx);
+                self.apply_effects();
+            }
+        }
+    }
+
     // ------------------------------------------------------- routing
 
-    fn on_request(&mut self, rank: usize, model: String, samples: usize) {
+    fn on_request(&mut self, rank: usize, model: String, samples: usize, epoch: u32) {
+        if epoch != self.epoch[rank] {
+            return; // emitted before the failure: lost with the checkpoint
+        }
         self.pending.push(PendingMeta {
             step: self.current_step,
             emit_s: self.core.clock_s(),
             record: None,
+            epoch,
         });
         let id = self.core.submit(rank, &model, samples);
         debug_assert_eq!(id, self.pending.len() - 1, "engine/pipeline id spaces align");
@@ -491,6 +657,14 @@ impl CogSim {
     fn apply_effects(&mut self) {
         let mut effects = self.core.take_effects();
         let clock = self.core.clock_s();
+        // a backend left: void the orphans' completion state first —
+        // each reappears in `dispatched` below with `retry` set
+        for &id in &effects.orphaned {
+            let rec = self.pending[id].record.expect("orphaned work was dispatched");
+            let r = &mut self.records[rec];
+            r.complete_s = f64::NAN;
+            r.retried = true;
+        }
         for d in &effects.dispatched {
             self.open_records(d, clock);
         }
@@ -508,12 +682,26 @@ impl CogSim {
             Outcome::Direct { wait_s, swap_s, link_s, exec_s, complete_s } => {
                 (complete_s, wait_s, swap_s, link_s, exec_s)
             }
-            Outcome::InFlight { token } => {
-                debug_assert_eq!(token, self.rec0_of_token.len());
-                self.rec0_of_token.push(self.records.len());
-                (f64::NAN, 0.0, 0.0, 0.0, 0.0)
-            }
+            Outcome::InFlight { .. } => (f64::NAN, 0.0, 0.0, 0.0, 0.0),
         };
+        if d.retry {
+            // re-dispatch of orphaned work: the ids keep their one
+            // record each; the routing fields describe the new attempt
+            for &id in &d.ids {
+                let rec = self.pending[id].record.expect("retried work was dispatched");
+                let r = &mut self.records[rec];
+                r.dispatch_s = clock;
+                r.complete_s = complete_s;
+                r.backend = d.backend;
+                r.batch_samples = d.batch_samples;
+                r.wait_s = wait_s;
+                r.swap_s = swap_s;
+                r.link_s = link_s;
+                r.contention_s = 0.0;
+                r.exec_s = exec_s;
+            }
+            return;
+        }
         for &id in &d.ids {
             let (rank, model, samples) = self.core.request(id);
             let meta = &mut self.pending[id];
@@ -534,18 +722,21 @@ impl CogSim {
                 link_s,
                 contention_s: 0.0,
                 exec_s,
+                retried: false,
             };
             self.records.push(record);
         }
     }
 
     fn on_batch_done(&mut self, c: &Completed, clock: f64) {
-        if let (Some(token), Some(timing)) = (c.token, c.timing) {
-            // fabric path: fill the record block with the measured
-            // phase timings (so per-step breakdowns still sum exactly)
-            let rec0 = self.rec0_of_token[token];
-            for k in 0..c.ids.len() {
-                let r = &mut self.records[rec0 + k];
+        if let (Some(_), Some(timing)) = (c.token, c.timing) {
+            // fabric path: fill the batch's records with the measured
+            // phase timings (addressed by id — identical to the old
+            // contiguous-block fill on a static run, and correct for
+            // retried batches whose records are scattered)
+            for &id in &c.ids {
+                let rec = self.pending[id].record.expect("completed work was dispatched");
+                let r = &mut self.records[rec];
                 r.complete_s = clock;
                 r.wait_s = timing.wait_s;
                 r.swap_s = timing.swap_s;
@@ -557,6 +748,9 @@ impl CogSim {
         for &id in &c.ids {
             let (rank, _, _) = self.core.request(id);
             let record = self.pending[id].record;
+            if self.pending[id].epoch != self.epoch[rank] {
+                continue; // wasted work from a pre-failure epoch
+            }
             let st = &mut self.ranks[rank];
             debug_assert!(st.outstanding > 0, "completion for an idle rank");
             st.outstanding -= 1;
@@ -588,9 +782,40 @@ impl CogSim {
         self.core.completed()
     }
 
-    /// Dispatched but not yet completed.
+    /// Dispatched but not yet completed (a retry is a re-dispatch of
+    /// the same request, not a new in-flight unit).
     pub fn in_flight(&self) -> u64 {
-        self.core.dispatched() - self.core.completed()
+        self.core.dispatched() - self.core.retries() - self.core.completed()
+    }
+
+    /// Requests re-dispatched after a backend leave orphaned them.
+    pub fn retries(&self) -> u64 {
+        self.core.retries()
+    }
+
+    /// Requests orphaned by backend leaves (each was retried).
+    pub fn orphaned(&self) -> u64 {
+        self.core.orphaned()
+    }
+
+    /// Requests parked because no backend of a usable tier is active.
+    pub fn parked(&self) -> u64 {
+        self.core.parked_requests()
+    }
+
+    /// Whether backend `idx` is currently serving.
+    pub fn backend_active(&self, idx: usize) -> bool {
+        self.core.is_active(idx)
+    }
+
+    /// Currently-active backend count.
+    pub fn active_count(&self) -> usize {
+        self.core.active_count()
+    }
+
+    /// Checkpoint/restart replays across all ranks so far.
+    pub fn rank_restarts(&self) -> u64 {
+        self.rank_restarts
     }
 
     /// Requests waiting in the batching window.
@@ -632,8 +857,17 @@ impl CogSim {
 
     /// Summarise the run (intended after [`Self::run_to_completion`]).
     pub fn summary(&self) -> CogSummary {
-        let latencies: Vec<f64> = self.records.iter().map(|r| r.latency_s()).collect();
-        let samples: u64 = self.records.iter().map(|r| r.samples as u64).sum();
+        // completed records only: orphaned-not-yet-recompleted work has
+        // complete_s = NaN; retried completions are excluded from the
+        // latency distribution (they are not first-attempt samples)
+        let finished: Vec<&CogRecord> =
+            self.records.iter().filter(|r| r.complete_s.is_finite()).collect();
+        let latencies: Vec<f64> = finished
+            .iter()
+            .filter(|r| !r.retried)
+            .map(|r| r.latency_s())
+            .collect();
+        let samples: u64 = finished.iter().map(|r| r.samples as u64).sum();
         let mut straggler_counts = vec![0u64; self.cfg.ranks];
         let mut total_compute_s = 0.0;
         let mut total_queue_s = 0.0;
@@ -653,10 +887,16 @@ impl CogSim {
             max_spread_s = max_spread_s.max(s.spread_s);
         }
         let tts = self.time_to_solution_s();
+        let submitted = self.core.submitted();
+        let mean_active_backends = if self.active_samples.is_empty() {
+            self.core.active_count() as f64
+        } else {
+            self.active_samples.iter().sum::<u64>() as f64 / self.active_samples.len() as f64
+        };
         CogSummary {
             ranks: self.cfg.ranks as u64,
             timesteps: self.steps.len() as u64,
-            requests: self.records.len() as u64,
+            requests: finished.len() as u64,
             samples,
             batches: self.core.batches(),
             time_to_solution_s: tts,
@@ -677,6 +917,11 @@ impl CogSim {
             } else {
                 tts / self.steps.len() as f64
             },
+            submitted,
+            retries: self.core.retries(),
+            failed: submitted - finished.len() as u64 - self.core.batcher_pending(),
+            rank_restarts: self.rank_restarts,
+            mean_active_backends,
         }
     }
 }

@@ -30,7 +30,14 @@ pub struct LatencyDist {
 }
 
 impl LatencyDist {
+    /// Build the distribution from observed latencies.  Non-finite
+    /// entries — requests that never completed (failed, or truncated
+    /// at the horizon) — are *excluded*, not recorded as 0-latency
+    /// samples: quantiles describe completions only, and the caller
+    /// reports the never-completed count separately.
     pub fn from_latencies(xs: &[f64]) -> LatencyDist {
+        let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        let xs = &finite[..];
         let mut histogram: Vec<(f64, u64)> =
             HIST_EDGES_US.iter().map(|&e| (e, 0u64)).collect();
         let mut overflow = 0u64;
@@ -142,6 +149,21 @@ pub struct CogSummary {
     pub max_spread_s: f64,
     /// Mean step duration (= time_to_solution / timesteps).
     pub mean_step_s: f64,
+    /// Requests that entered the router (>= `requests` whenever any
+    /// were still in flight, parked, or failed at summary time).
+    pub submitted: u64,
+    /// Requests re-dispatched after a backend leave orphaned their
+    /// batch (their latencies are excluded from `latency` — retried
+    /// completions are not first-attempt observations).
+    pub retries: u64,
+    /// Requests not completed at summary time: in flight, parked
+    /// with no live backend, or never dispatched.
+    pub failed: u64,
+    /// Checkpoint/restart replays across all ranks.
+    pub rank_restarts: u64,
+    /// Mean active backend count sampled at each step start (the
+    /// autoscaler's provisioning trajectory; fleet size when static).
+    pub mean_active_backends: f64,
 }
 
 /// Everything one event-sim run reports.
@@ -171,6 +193,15 @@ pub struct EventSummary {
     pub makespan_s: f64,
     /// Samples over the makespan.
     pub samples_per_s: f64,
+    /// Requests that entered the router (>= `requests` whenever any
+    /// were still in flight, parked, or failed at summary time).
+    pub submitted: u64,
+    /// Requests re-dispatched after a backend leave orphaned their
+    /// batch (excluded from `latency` — not first-attempt samples).
+    pub retries: u64,
+    /// Requests not completed at summary time: in flight, parked
+    /// with no live backend, or never dispatched.
+    pub failed: u64,
 }
 
 #[cfg(test)]

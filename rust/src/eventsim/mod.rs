@@ -47,7 +47,7 @@ use crate::simcore::{Completed, Dispatched, Outcome, PipeEvent, Pipeline};
 use crate::util::rng::Rng;
 use crate::workload::HydraWorkload;
 
-pub use crate::simcore::Batching;
+pub use crate::simcore::{AutoscalerCfg, Batching, FleetAction, FleetEvent};
 pub use arrival::ArrivalProcess;
 pub use cogsim::{CogRecord, CogSim, CogSimConfig};
 pub use equeue::EventQueue;
@@ -125,6 +125,10 @@ pub struct RequestRecord {
     /// Fabric-contention share of `link_overhead_s`: measured minus
     /// the uncontended round trip.  Zero without the fabric layer.
     pub contention_s: f64,
+    /// The request's first batch died with its backend and it was
+    /// re-dispatched by the control plane; the completion fields
+    /// describe the *successful* attempt.
+    pub retried: bool,
 }
 
 impl RequestRecord {
@@ -149,6 +153,8 @@ enum Event {
     PoissonArrival { rank: usize },
     /// Closed-loop rank ready to submit again.
     ClosedArrival { rank: usize },
+    /// A timed control-plane action from the scenario's trace.
+    Fleet { action: FleetAction },
     /// Everything past the router lives in [`crate::simcore`].
     Pipe(PipeEvent),
 }
@@ -164,8 +170,10 @@ pub struct EventSim {
     /// pipeline's metadata store ([`Pipeline::request`]), id-aligned.
     arrival_s: Vec<f64>,
     records: Vec<RequestRecord>,
-    /// Fabric transit token -> first record index of its batch.
-    rec0_of_token: Vec<usize>,
+    /// Request id -> record index (`usize::MAX` until dispatched).
+    /// Control-plane retries update a request's one record in place,
+    /// so completions address records by id, not by batch block.
+    rec_of_id: Vec<usize>,
     events_processed: u64,
 }
 
@@ -206,11 +214,28 @@ impl EventSim {
             rngs,
             arrival_s: Vec::new(),
             records: Vec::new(),
-            rec0_of_token: Vec::new(),
+            rec_of_id: Vec::new(),
             events_processed: 0,
         };
         sim.seed_generators();
         sim
+    }
+
+    /// Arm a control-plane trace: each [`FleetEvent`] fires at its
+    /// time as an ordinary arrival-class event.  An empty trace adds
+    /// nothing — the run is bit-identical to a static one (the
+    /// differential suite pins this).  Rank failures are a
+    /// coupled-engine concept and are ignored by the open/closed-loop
+    /// streams.
+    pub fn with_control(&mut self, trace: &[FleetEvent]) {
+        for ev in trace {
+            assert!(
+                ev.at_s >= 0.0 && ev.at_s.is_finite(),
+                "fleet event time must be finite and non-negative ({})",
+                ev.at_s
+            );
+            self.events.push(ev.at_s, Event::Fleet { action: ev.action });
+        }
     }
 
     /// As [`Self::with_tiers`], with remote dispatches carried by the
@@ -293,6 +318,7 @@ impl EventSim {
             Event::Arrival { rank, model, samples } => self.on_request(rank, model, samples),
             Event::PoissonArrival { rank } => self.on_poisson(rank),
             Event::ClosedArrival { rank } => self.on_closed(rank),
+            Event::Fleet { action } => self.on_fleet(action),
             Event::Pipe(ev) => {
                 self.core.handle(ev);
                 self.apply_effects();
@@ -358,8 +384,22 @@ impl EventSim {
 
     fn on_request(&mut self, rank: usize, model: String, samples: usize) {
         self.arrival_s.push(self.core.clock_s());
+        self.rec_of_id.push(usize::MAX);
         let id = self.core.submit(rank, &model, samples);
         debug_assert_eq!(id, self.arrival_s.len() - 1, "engine/pipeline id spaces align");
+        self.apply_effects();
+    }
+
+    // ------------------------------------------------- control plane
+
+    fn on_fleet(&mut self, action: FleetAction) {
+        match action {
+            FleetAction::BackendLeave(idx) => self.core.control_backend_leave(idx),
+            FleetAction::BackendJoin(idx) => self.core.control_backend_join(idx),
+            FleetAction::LinkDegrade(factor) => self.core.control_link_scale(factor),
+            FleetAction::LinkRestore => self.core.control_link_scale(1.0),
+            FleetAction::RankFail(_) => {} // no rank-owned state to replay here
+        }
         self.apply_effects();
     }
 
@@ -370,6 +410,13 @@ impl EventSim {
     fn apply_effects(&mut self) {
         let mut effects = self.core.take_effects();
         let clock = self.core.clock_s();
+        // a backend left: void the orphans' completion state first —
+        // each reappears in `dispatched` below with `retry` set
+        for &id in &effects.orphaned {
+            let r = &mut self.records[self.rec_of_id[id]];
+            r.complete_s = f64::NAN;
+            r.retried = true;
+        }
         for d in &effects.dispatched {
             self.open_records(d, clock);
         }
@@ -385,14 +432,25 @@ impl EventSim {
     fn open_records(&mut self, d: &Dispatched, clock: f64) {
         let (complete_s, link_s) = match d.outcome {
             Outcome::Direct { link_s, complete_s, .. } => (complete_s, link_s),
-            Outcome::InFlight { token } => {
-                debug_assert_eq!(token, self.rec0_of_token.len());
-                self.rec0_of_token.push(self.records.len());
-                (f64::NAN, 0.0)
-            }
+            Outcome::InFlight { .. } => (f64::NAN, 0.0),
         };
+        if d.retry {
+            // re-dispatch of orphaned work: the ids keep their one
+            // record each; the routing fields describe the new attempt
+            for &id in &d.ids {
+                let r = &mut self.records[self.rec_of_id[id]];
+                r.dispatch_s = clock;
+                r.complete_s = complete_s;
+                r.backend = d.backend;
+                r.batch_samples = d.batch_samples;
+                r.link_overhead_s = link_s;
+                r.contention_s = 0.0;
+            }
+            return;
+        }
         for &id in &d.ids {
             let (rank, model, samples) = self.core.request(id);
+            self.rec_of_id[id] = self.records.len();
             self.records.push(RequestRecord {
                 id: id as u64,
                 rank,
@@ -405,16 +463,19 @@ impl EventSim {
                 batch_samples: d.batch_samples,
                 link_overhead_s: link_s,
                 contention_s: 0.0,
+                retried: false,
             });
         }
     }
 
     fn on_batch_done(&mut self, c: &Completed, clock: f64) {
-        if let (Some(token), Some(timing)) = (c.token, c.timing) {
-            // fabric path: fill the record block with measured timings
-            let rec0 = self.rec0_of_token[token];
-            for k in 0..c.ids.len() {
-                let r = &mut self.records[rec0 + k];
+        if let (Some(_), Some(timing)) = (c.token, c.timing) {
+            // fabric path: fill the batch's records with measured
+            // timings (addressed by id — identical to the old
+            // contiguous-block fill on a static run, and correct for
+            // retried batches whose records are scattered)
+            for &id in &c.ids {
+                let r = &mut self.records[self.rec_of_id[id]];
                 r.complete_s = clock;
                 r.link_overhead_s = timing.link_s;
                 r.contention_s = timing.contention_s;
@@ -456,14 +517,35 @@ impl EventSim {
         self.core.completed()
     }
 
-    /// Dispatched but not yet completed.
+    /// Dispatched at least once but not yet completed (includes
+    /// orphaned work parked with no live backend).
     pub fn in_flight(&self) -> u64 {
-        self.core.dispatched() - self.core.completed()
+        self.core.dispatched() - self.core.retries() - self.core.completed()
     }
 
     /// Requests waiting in the batching window.
     pub fn batcher_pending(&self) -> u64 {
         self.core.batcher_pending()
+    }
+
+    /// Requests re-dispatched after a backend leave orphaned them.
+    pub fn retries(&self) -> u64 {
+        self.core.retries()
+    }
+
+    /// Requests orphaned by backend leaves so far.
+    pub fn orphaned(&self) -> u64 {
+        self.core.orphaned()
+    }
+
+    /// Requests parked with no live backend in their tier.
+    pub fn parked(&self) -> u64 {
+        self.core.parked_requests()
+    }
+
+    /// Is backend `idx` currently in the fleet?
+    pub fn backend_active(&self, idx: usize) -> bool {
+        self.core.is_active(idx)
     }
 
     /// Batches dispatched so far.
@@ -493,7 +575,10 @@ impl EventSim {
     pub fn summary(&self) -> EventSummary {
         let records: Vec<&RequestRecord> =
             self.records.iter().filter(|r| r.complete_s.is_finite()).collect();
-        let latencies: Vec<f64> = records.iter().map(|r| r.latency_s()).collect();
+        // first-attempt latencies only: a retried completion's chain
+        // includes the failure gap and is counted via `retries`
+        let latencies: Vec<f64> =
+            records.iter().filter(|r| !r.retried).map(|r| r.latency_s()).collect();
         let samples: u64 = records.iter().map(|r| r.samples as u64).sum();
         let makespan_s = records.iter().map(|r| r.complete_s).fold(0.0, f64::max);
 
@@ -550,6 +635,11 @@ impl EventSim {
             slowdown_max,
             makespan_s,
             samples_per_s: if makespan_s > 0.0 { samples as f64 / makespan_s } else { 0.0 },
+            submitted: self.core.submitted(),
+            retries: self.core.retries(),
+            failed: self.core.submitted()
+                - records.len() as u64
+                - self.core.batcher_pending(),
         }
     }
 }

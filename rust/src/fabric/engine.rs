@@ -158,6 +158,39 @@ impl FabricEngine {
         }
     }
 
+    /// Degrade (or restore) the fabric mid-run: credit every active
+    /// flow its progress up to `now_s` at the *old* rates, scale every
+    /// link capacity to `factor` times its as-built value, then
+    /// re-solve the fair shares over what is left.  Free flows stay
+    /// free (a finite capacity scaled stays finite), so the
+    /// constrained count is unchanged.
+    pub fn set_capacity_scale(&mut self, now_s: f64, factor: f64) {
+        self.advance_to(now_s);
+        self.topo.set_capacity_scale(factor);
+        if self.constrained > 0 {
+            self.recompute();
+        }
+    }
+
+    /// Cancel an active flow (control plane: its destination backend
+    /// left the fleet).  Progress is credited up to `now_s` first, so
+    /// surviving flows keep exactly the bytes they moved while the
+    /// cancelled flow held its share.  Returns false when the id is
+    /// unknown or already completed.
+    pub fn cancel(&mut self, now_s: f64, id: u64) -> bool {
+        self.advance_to(now_s);
+        match self.flows.remove(&id) {
+            Some(f) => {
+                if f.constrained {
+                    self.constrained -= 1;
+                    self.recompute();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Advance to `now_s` and drain every finished flow (in id
     /// order); remaining flows' shares are re-solved only when a
     /// *constrained* flow left (free flows never held link capacity,
@@ -329,6 +362,49 @@ mod tests {
             );
             last = t;
         }
+    }
+
+    #[test]
+    fn degrade_slows_and_restore_resumes_exactly() {
+        let topo = pooled(2, 1, 1.0);
+        let nic = topo.link().eff_bandwidth;
+        let mut eng = FabricEngine::new(topo);
+        let p = eng.topology().request_path(0, 0);
+        let a = eng.start(0.0, p, 1e6);
+        assert_eq!(eng.rate_of(a), Some(nic));
+        // half the bytes move, then the fabric browns out to 25%
+        let half_t = 0.5e6 / nic;
+        eng.set_capacity_scale(half_t, 0.25);
+        assert_eq!(eng.rate_of(a), Some(nic * 0.25));
+        // a quarter of the remainder crawls through, then restore
+        let crawl_t = half_t + 0.125e6 / (nic * 0.25);
+        eng.set_capacity_scale(crawl_t, 1.0);
+        assert_eq!(eng.rate_of(a), Some(nic));
+        let done = eng.next_completion_s().unwrap();
+        assert!((done - (crawl_t + 0.375e6 / nic)).abs() < 1e-9, "{done}");
+        assert_eq!(eng.take_completed(done), vec![a]);
+    }
+
+    #[test]
+    fn cancel_returns_the_share_to_survivors() {
+        let topo = pooled(4, 1, 1.0);
+        let nic = topo.link().eff_bandwidth;
+        let mut eng = FabricEngine::new(topo);
+        let p0 = eng.topology().request_path(0, 0);
+        let p1 = eng.topology().request_path(1, 0);
+        let a = eng.start(0.0, p0, 1e6);
+        let b = eng.start(0.0, p1, 1e6);
+        assert_eq!(eng.rate_of(a), Some(nic / 2.0));
+        // b is cancelled after a quarter of a's bytes moved at half
+        // rate; a immediately speeds back up to the full NIC
+        let t = 0.25e6 / (nic / 2.0);
+        assert!(eng.cancel(t, b));
+        assert!(!eng.cancel(t, b), "double cancel is a no-op");
+        assert_eq!(eng.rate_of(a), Some(nic));
+        assert_eq!(eng.active(), 1);
+        let done = eng.next_completion_s().unwrap();
+        assert!((done - (t + 0.75e6 / nic)).abs() < 1e-9, "{done}");
+        assert_eq!(eng.take_completed(done), vec![a]);
     }
 
     #[test]

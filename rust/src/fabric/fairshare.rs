@@ -134,11 +134,60 @@ pub fn max_min_rates_into<P: AsRef<[usize]>>(
     }
 }
 
+/// Is `rates` a feasible allocation for `flows` over `capacities` —
+/// no finite link carrying more than its capacity (plus `slack_frac`
+/// relative slack for float error), no NaN rate anywhere?  The
+/// control-plane chaos suites call this after every capacity mutation
+/// (degrade/restore) and flow cancellation: whatever sequence of
+/// mid-run events hit the allocator, the shares it hands out must
+/// still fit the links that remain.
+pub fn allocation_feasible<P: AsRef<[usize]>>(
+    capacities: &[f64],
+    flows: &[P],
+    rates: &[f64],
+    slack_frac: f64,
+) -> bool {
+    if rates.len() != flows.len() || rates.iter().any(|r| r.is_nan()) {
+        return false;
+    }
+    for (l, &cap) in capacities.iter().enumerate() {
+        if cap.is_infinite() {
+            continue;
+        }
+        let load: f64 = flows
+            .iter()
+            .zip(rates)
+            .filter(|(p, _)| p.as_ref().contains(&l))
+            .map(|(_, &r)| r)
+            .filter(|r| r.is_finite())
+            .sum();
+        if load > cap * (1.0 + slack_frac) {
+            return false;
+        }
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     const INF: f64 = f64::INFINITY;
+
+    #[test]
+    fn feasibility_checker_accepts_the_solver_and_rejects_overload() {
+        let caps = [7.0, 11.0, 5.0, 13.0];
+        let paths = vec![vec![0, 1], vec![1, 2], vec![0, 2, 3], vec![3], vec![1, 3]];
+        let rates = max_min_rates(&caps, &paths);
+        assert!(allocation_feasible(&caps, &paths, &rates, 1e-9));
+        // doubling every share must blow at least one link
+        let doubled: Vec<f64> = rates.iter().map(|r| r * 2.0).collect();
+        assert!(!allocation_feasible(&caps, &paths, &doubled, 1e-9));
+        // NaN anywhere is an automatic fail
+        let mut poisoned = rates.clone();
+        poisoned[0] = f64::NAN;
+        assert!(!allocation_feasible(&caps, &paths, &poisoned, 1e-9));
+    }
 
     #[test]
     fn single_flow_gets_the_path_minimum() {

@@ -32,7 +32,7 @@ pub mod fairshare;
 pub mod topology;
 
 pub use engine::FabricEngine;
-pub use fairshare::max_min_rates;
+pub use fairshare::{allocation_feasible, max_min_rates};
 pub use topology::Topology;
 
 /// How an event engine's fleet plugs into a fabric: the topology plus

@@ -50,8 +50,13 @@ struct AccelPort {
 pub struct Topology {
     link: Link,
     oversubscription: f64,
-    /// Directed link capacities, bytes/s.
+    /// Directed link capacities, bytes/s (the as-built values scaled
+    /// by the current degrade factor — see [`Self::set_capacity_scale`]).
     capacities: Vec<f64>,
+    /// As-built capacities: the restore point for degrade events.
+    base_capacities: Vec<f64>,
+    /// Current fabric-wide degrade factor (1.0 = healthy).
+    capacity_scale: f64,
     hosts: usize,
     /// Per-accelerator port pair; `None` = node-local (no fabric).
     accel_ports: Vec<Option<AccelPort>>,
@@ -75,6 +80,8 @@ impl Topology {
             link: Link::local(),
             oversubscription: 1.0,
             capacities: Vec::new(),
+            base_capacities: Vec::new(),
+            capacity_scale: 1.0,
             hosts: n_nodes,
             accel_ports: vec![None; n_nodes],
             host_tx: Vec::new(),
@@ -150,6 +157,8 @@ impl Topology {
         Topology {
             link,
             oversubscription,
+            base_capacities: capacities.clone(),
+            capacity_scale: 1.0,
             capacities,
             hosts: n_hosts,
             accel_ports,
@@ -180,6 +189,31 @@ impl Topology {
 
     pub fn oversubscription(&self) -> f64 {
         self.oversubscription
+    }
+
+    /// Current fabric-wide degrade factor (1.0 = healthy as-built).
+    pub fn capacity_scale(&self) -> f64 {
+        self.capacity_scale
+    }
+
+    /// Degrade (or restore) the whole fabric: every directed link's
+    /// capacity becomes `factor` times its as-built value.  The
+    /// control-plane model is a fabric-wide brownout — a flapping
+    /// spine, a firmware-throttled leaf — rather than a single cable:
+    /// the fair-share allocator then re-splits whatever is left.
+    /// `factor = 1.0` restores the as-built capacities exactly
+    /// (recomputed *from the base*, so repeated degrade/restore cycles
+    /// cannot accumulate float drift).  No-op topologically for
+    /// node-local (no shared links to degrade).
+    pub fn set_capacity_scale(&mut self, factor: f64) {
+        assert!(
+            factor > 0.0 && factor.is_finite(),
+            "capacity scale must be a positive finite factor ({factor})"
+        );
+        self.capacity_scale = factor;
+        for (cap, &base) in self.capacities.iter_mut().zip(&self.base_capacities) {
+            *cap = if factor == 1.0 { base } else { base * factor };
+        }
     }
 
     /// The per-endpoint link model the fabric delegates to.
@@ -330,5 +364,28 @@ mod tests {
     #[should_panic(expected = "oversubscription")]
     fn rejects_sub_unit_oversubscription() {
         Topology::pooled(4, 2, 0.5);
+    }
+
+    #[test]
+    fn degrade_scales_every_link_and_restore_is_exact() {
+        let mut t = Topology::pooled(4, 2, 2.0);
+        let base: Vec<f64> = t.capacities().to_vec();
+        t.set_capacity_scale(0.25);
+        assert_eq!(t.capacity_scale(), 0.25);
+        for (c, b) in t.capacities().iter().zip(&base) {
+            assert_eq!(*c, b * 0.25);
+        }
+        // restore goes back to the as-built values bit-for-bit even
+        // after stacked degrades (recomputed from the base, not by
+        // inverse multiplication)
+        t.set_capacity_scale(0.3);
+        t.set_capacity_scale(1.0);
+        assert_eq!(t.capacities(), &base[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity scale")]
+    fn rejects_nonpositive_capacity_scale() {
+        Topology::pooled(4, 2, 1.0).set_capacity_scale(0.0);
     }
 }

@@ -30,14 +30,15 @@ pub mod table;
 
 pub use figures::{run_figure, FigureResult, FIGURES};
 pub use scenario::{
-    build_fabric_spec, build_fleet, Axes, CampaignConfig, CogCampaignConfig,
+    build_fabric_spec, build_fleet, Axes, CampaignConfig, CogCampaignConfig, ControlSpec,
     EventCampaignConfig, Fleet, Grid, Kind, Knobs, Scenario, Tiering, Topology,
 };
 pub use sweep::{
-    run_campaign, run_cell, run_cog_campaign, run_cog_scenario, run_event_campaign,
-    run_event_scenario, run_grid, run_grid_threads, run_scenario, run_scenario_at,
-    run_scenario_with_link,
+    run_campaign, run_cell, run_cell_ctl, run_cog_campaign, run_cog_scenario,
+    run_control_campaign, run_event_campaign, run_event_scenario, run_grid,
+    run_grid_threads, run_scenario, run_scenario_at, run_scenario_with_link,
     CampaignResult, CellResult, CellSummary, CogCampaignResult, CogScenarioResult,
+    ControlCampaignConfig, ControlCampaignResult, ControlCellResult,
     EventCampaignResult, EventScenarioResult, GridResult, ScenarioResult, WorkloadSummary,
 };
 pub use table::Table;

@@ -20,7 +20,8 @@ use crate::util::json::Value;
 use super::scenario::{Grid, Topology};
 use super::sweep::{
     AnalyticSummary, CampaignResult, CellSummary, CogCampaignResult, CogScenarioResult,
-    EventCampaignResult, EventScenarioResult, GridResult, ScenarioResult, WorkloadSummary,
+    ControlCampaignResult, ControlCellResult, EventCampaignResult, EventScenarioResult,
+    GridResult, ScenarioResult, WorkloadSummary,
 };
 use super::table::Table;
 
@@ -494,6 +495,106 @@ impl CogCampaignResult {
     }
 }
 
+// ------------------------------------------------ control-plane leafs
+
+fn control_cell_json(c: &ControlCellResult) -> Value {
+    let s = &c.summary;
+    let mut sm = BTreeMap::new();
+    sm.insert("tts_us".to_string(), us(s.time_to_solution_s));
+    sm.insert("requests".to_string(), count(s.requests));
+    sm.insert("submitted".to_string(), count(s.submitted));
+    sm.insert("retries".to_string(), count(s.retries));
+    sm.insert("failed".to_string(), count(s.failed));
+    sm.insert("rank_restarts".to_string(), count(s.rank_restarts));
+    sm.insert("mean_active_backends".to_string(), fixed3(s.mean_active_backends));
+    sm.insert("request_p50_us".to_string(), us(s.latency.p50_s));
+    sm.insert("request_p99_us".to_string(), us(s.latency.p99_s));
+    sm.insert("total_queue_us".to_string(), us(s.total_queue_s));
+    sm.insert("total_network_us".to_string(), us(s.total_network_s));
+    let mut m = BTreeMap::new();
+    m.insert("label".to_string(), Value::String(c.label.clone()));
+    m.insert("topology".to_string(), Value::String(c.topology.key().to_string()));
+    m.insert("control".to_string(), Value::String(c.control.key.clone()));
+    m.insert("summary".to_string(), Value::Object(sm));
+    Value::Object(m)
+}
+
+/// The autoscaler must hold TTS within this factor of the
+/// statically-provisioned optimum (the all-active pooled cell) —
+/// pinned in the control golden and asserted by the chaos suite.
+pub const AUTOSCALER_BOUND: f64 = 2.0;
+
+impl ControlCampaignResult {
+    /// Deterministic JSON document, golden-pinned by
+    /// `rust/tests/golden/control_summary.json`: the per-cell compact
+    /// summaries plus the headline — pooled absorbs a one-backend
+    /// loss more gracefully than node-local, and the reactive
+    /// autoscaler stays within [`AUTOSCALER_BOUND`] of the static
+    /// optimum.
+    pub fn to_json(&self) -> Value {
+        let cfg = &self.config;
+        let mut cm = BTreeMap::new();
+        cm.insert("ranks".to_string(), count(cfg.ranks as u64));
+        cm.insert("timesteps".to_string(), count(cfg.timesteps as u64));
+        cm.insert("policy".to_string(), Value::String(cfg.policy.key().to_string()));
+        cm.insert("oversub".to_string(), fixed3(cfg.oversub));
+        cm.insert("seed".to_string(), count(cfg.seed));
+
+        let loss_local = self.loss_ratio("local");
+        let loss_pooled = self.loss_ratio("pooled");
+        let auto_factor = self.autoscaler_factor();
+        let mut hm = BTreeMap::new();
+        hm.insert("loss_ratio_local".to_string(), fixed3(loss_local));
+        hm.insert("loss_ratio_pooled".to_string(), fixed3(loss_pooled));
+        hm.insert(
+            "pooled_degrades_more_gracefully".to_string(),
+            Value::Bool(loss_pooled < loss_local),
+        );
+        hm.insert("autoscaler_factor".to_string(), fixed3(auto_factor));
+        hm.insert("autoscaler_bound".to_string(), fixed3(AUTOSCALER_BOUND));
+        hm.insert(
+            "autoscaler_within_bound".to_string(),
+            Value::Bool(auto_factor <= AUTOSCALER_BOUND),
+        );
+
+        let mut root = BTreeMap::new();
+        root.insert("config".to_string(), Value::Object(cm));
+        root.insert(
+            "cells".to_string(),
+            Value::Array(self.cells.iter().map(control_cell_json).collect()),
+        );
+        root.insert("headline".to_string(), Value::Object(hm));
+        Value::Object(root)
+    }
+
+    /// One aligned table: a row per control cell.
+    pub fn tables(&self) -> Vec<Table> {
+        let mut t = Table::new("Control-plane study".to_string(), "cell");
+        t.set_x(self.cells.iter().map(|c| c.label.clone()));
+        t.add_series(
+            "tts_ms",
+            self.cells.iter().map(|c| c.summary.time_to_solution_s * 1e3).collect(),
+        );
+        t.add_series(
+            "retries",
+            self.cells.iter().map(|c| c.summary.retries as f64).collect(),
+        );
+        t.add_series(
+            "restarts",
+            self.cells.iter().map(|c| c.summary.rank_restarts as f64).collect(),
+        );
+        t.add_series(
+            "active",
+            self.cells.iter().map(|c| c.summary.mean_active_backends).collect(),
+        );
+        t.add_series(
+            "p99_us",
+            self.cells.iter().map(|c| c.summary.latency.p99_s * 1e6).collect(),
+        );
+        vec![t]
+    }
+}
+
 // ------------------------------------------------------ unified grid
 
 fn grid_config_json(grid: &Grid) -> Value {
@@ -523,6 +624,7 @@ fn grid_config_json(grid: &Grid) -> Value {
     );
     m.insert("overlaps".to_string(), num_array(&a.overlaps));
     m.insert("fabric_oversubs".to_string(), num_array(&a.fabric_oversubs));
+    m.insert("controls".to_string(), key_array(&a.controls, |c| c.key.clone()));
     let mut kn = BTreeMap::new();
     kn.insert("materials".to_string(), count(k.materials as u64));
     kn.insert(
@@ -571,6 +673,10 @@ impl GridResult {
                 m.insert("swap_us".to_string(), us(sc.swap_s));
                 m.insert("overlap".to_string(), fixed3(sc.overlap));
                 m.insert("oversub".to_string(), fixed3(sc.oversub));
+                m.insert(
+                    "control".to_string(),
+                    Value::String(self.grid.axes.control(sc.control).key),
+                );
                 let summary = match &c.summary {
                     CellSummary::Analytic(AnalyticSummary {
                         hydra,

@@ -35,7 +35,7 @@
 
 use crate::cluster::{Backend, GpuBackend, Policy, RduBackend};
 use crate::devices::{profiles, Api, Gpu, ModelProfile};
-use crate::eventsim::ArrivalProcess;
+use crate::eventsim::{ArrivalProcess, AutoscalerCfg, FleetAction, FleetEvent};
 use crate::fabric::{FabricSpec, Topology as NetTopology};
 use crate::netsim::Link;
 use crate::rdu::RduApi;
@@ -162,6 +162,106 @@ impl Kind {
     }
 }
 
+/// One control-plane schedule a cell runs under: a timed fleet-event
+/// trace plus an optional reactive autoscaler.  The `static` spec
+/// (empty trace, no autoscaler) is the legacy behaviour and is
+/// byte-identical to never installing a control plane at all — the
+/// differential suite in `rust/tests/control_plane_props.rs` pins
+/// that.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlSpec {
+    /// Stable key for JSON artifacts and the CLI (the parse syntax
+    /// round-trips: `static`, `leave:0@40000`, ...).
+    pub key: String,
+    /// Timed fleet events, as given (engines sort by time via the
+    /// event queue).
+    pub trace: Vec<FleetEvent>,
+    /// Reactive queue-depth autoscaler (cog kind only).
+    pub autoscaler: Option<AutoscalerCfg>,
+}
+
+impl ControlSpec {
+    /// The do-nothing legacy spec.
+    pub fn static_() -> ControlSpec {
+        ControlSpec { key: "static".to_string(), trace: Vec::new(), autoscaler: None }
+    }
+
+    /// True when this spec changes nothing (the differential anchor).
+    pub fn is_static(&self) -> bool {
+        self.trace.is_empty() && self.autoscaler.is_none()
+    }
+
+    /// Parse a CLI control spec: `+`-separated actions, times in µs.
+    ///
+    /// * `static` — no events (must stand alone)
+    /// * `leave:IDX@T` — backend `IDX` leaves at `T` µs
+    /// * `join:IDX@T` — backend `IDX` (re)joins at `T` µs
+    /// * `degrade:FACTOR@T` — all fabric links scale to `FACTOR`×
+    /// * `restore@T` — fabric capacities return to as-built
+    /// * `rankfail:R@T` — rank `R` fails and replays its timestep
+    /// * `auto:INIT:MIN-MAX:LO:HI` — autoscaler starting at `INIT`
+    ///   active backends, clamped to `[MIN, MAX]`, shrinking below
+    ///   `LO` µs mean backlog and growing above `HI` µs
+    ///
+    /// Example: `leave:0@30000+join:0@60000+auto:2:1-4:100:2000`.
+    pub fn parse(s: &str) -> Option<ControlSpec> {
+        if s.is_empty() {
+            return None;
+        }
+        if s == "static" {
+            return Some(ControlSpec::static_());
+        }
+        let mut trace = Vec::new();
+        let mut autoscaler = None;
+        for part in s.split('+') {
+            if let Some(spec) = part.strip_prefix("auto:") {
+                // INIT:MIN-MAX:LO:HI
+                let mut fields = spec.split(':');
+                let initial: usize = fields.next()?.parse().ok()?;
+                let (min_s, max_s) = fields.next()?.split_once('-')?;
+                let low_us: f64 = fields.next()?.parse().ok()?;
+                let high_us: f64 = fields.next()?.parse().ok()?;
+                if fields.next().is_some() || autoscaler.is_some() {
+                    return None;
+                }
+                autoscaler = Some(AutoscalerCfg {
+                    initial,
+                    min_active: min_s.parse().ok()?,
+                    max_active: max_s.parse().ok()?,
+                    low_s: low_us * 1e-6,
+                    high_s: high_us * 1e-6,
+                });
+                continue;
+            }
+            let (head, at_us) = part.split_once('@')?;
+            let at_us: f64 = at_us.parse().ok()?;
+            if !(at_us.is_finite() && at_us >= 0.0) {
+                return None;
+            }
+            let action = if head == "restore" {
+                FleetAction::LinkRestore
+            } else {
+                let (verb, arg) = head.split_once(':')?;
+                match verb {
+                    "leave" => FleetAction::BackendLeave(arg.parse().ok()?),
+                    "join" => FleetAction::BackendJoin(arg.parse().ok()?),
+                    "rankfail" => FleetAction::RankFail(arg.parse().ok()?),
+                    "degrade" => {
+                        let factor: f64 = arg.parse().ok()?;
+                        if !(factor > 0.0 && factor.is_finite()) {
+                            return None;
+                        }
+                        FleetAction::LinkDegrade(factor)
+                    }
+                    _ => return None,
+                }
+            };
+            trace.push(FleetEvent { at_s: at_us * 1e-6, action });
+        }
+        Some(ControlSpec { key: s.to_string(), trace, autoscaler })
+    }
+}
+
 /// The swept dimensions.  Axes that do not apply to a cell's kind or
 /// topology collapse to their first (or canonical) value instead of
 /// multiplying the grid.
@@ -189,6 +289,19 @@ pub struct Axes {
     /// Fabric oversubscription factors (collapses to 1:1 on the
     /// all-local topology).
     pub fabric_oversubs: Vec<f64>,
+    /// Control-plane schedules (event + cog kinds; the analytic
+    /// closed form has no clock for timed events, so the axis
+    /// collapses there).  Cells reference these by index
+    /// ([`Scenario::control`]) so [`Scenario`] stays `Copy`.
+    pub controls: Vec<ControlSpec>,
+}
+
+impl Axes {
+    /// The control spec a cell references (total: out-of-range —
+    /// which only a hand-built [`Scenario`] can produce — is static).
+    pub fn control(&self, idx: usize) -> ControlSpec {
+        self.controls.get(idx).cloned().unwrap_or_else(ControlSpec::static_)
+    }
 }
 
 impl Default for Axes {
@@ -205,6 +318,7 @@ impl Default for Axes {
             swap_costs_s: vec![0.0],
             overlaps: vec![0.0],
             fabric_oversubs: vec![1.0, 4.0],
+            controls: vec![ControlSpec::static_()],
         }
     }
 }
@@ -295,6 +409,9 @@ pub struct Scenario {
     pub overlap: f64,
     /// Fabric oversubscription (1.0 = non-blocking).
     pub oversub: f64,
+    /// Control-plane schedule: index into [`Axes::controls`]
+    /// (`0` = the first, `static` by default).
+    pub control: usize,
 }
 
 /// The oversubscription cells a topology actually sweeps: the
@@ -342,6 +459,14 @@ impl Grid {
     /// oversubscription axes collapse on the all-local topology.
     pub fn cells(&self) -> Vec<Scenario> {
         let a = &self.axes;
+        // the control axis sweeps by index so cells stay Copy; an
+        // empty list means the single static schedule (index 0 is
+        // static via `Axes::control`'s total lookup)
+        let control_ids: Vec<usize> = if a.controls.is_empty() {
+            vec![0]
+        } else {
+            (0..a.controls.len()).collect()
+        };
         let mut out = Vec::new();
         for &kind in &a.kinds {
             for &topology in &a.topologies {
@@ -364,19 +489,25 @@ impl Grid {
                                                 for oversub in
                                                     oversubs_for(topology, &a.fabric_oversubs)
                                                 {
-                                                    out.push(Scenario {
-                                                        kind,
-                                                        topology,
-                                                        fleet,
-                                                        policy,
-                                                        ranks,
-                                                        arrival,
-                                                        window_us,
-                                                        models,
-                                                        swap_s,
-                                                        overlap,
-                                                        oversub,
-                                                    });
+                                                    for control in axis_for(
+                                                        kind != Kind::Analytic,
+                                                        &control_ids,
+                                                    ) {
+                                                        out.push(Scenario {
+                                                            kind,
+                                                            topology,
+                                                            fleet,
+                                                            policy,
+                                                            ranks,
+                                                            arrival,
+                                                            window_us,
+                                                            models,
+                                                            swap_s,
+                                                            overlap,
+                                                            oversub,
+                                                            control,
+                                                        });
+                                                    }
                                                 }
                                             }
                                         }
@@ -420,6 +551,10 @@ impl Grid {
              "compute/inference overlap fraction (cog kind)"),
             ("oversubs", join(a.fabric_oversubs.iter().map(|o| o.to_string()).collect()),
              "fabric oversubscription factors; collapses to 1:1 on local"),
+            ("controls", join(a.controls.iter().map(|c| c.key.clone()).collect()),
+             "control-plane schedule (static, leave:I@T, join:I@T, degrade:F@T, \
+              restore@T, rankfail:R@T, auto:INIT:MIN-MAX:LO:HI; + to combine; \
+              T in us); event+cog kinds"),
         ]
     }
 }
@@ -608,6 +743,7 @@ impl CampaignConfig {
                 swap_costs_s: vec![0.0],
                 overlaps: vec![0.0],
                 fabric_oversubs: self.fabric_oversubs.clone(),
+                controls: vec![ControlSpec::static_()],
             },
             knobs: Knobs {
                 materials: self.materials,
@@ -701,6 +837,7 @@ impl EventCampaignConfig {
                 swap_costs_s: vec![0.0],
                 overlaps: vec![0.0],
                 fabric_oversubs: self.fabric_oversubs.clone(),
+                controls: vec![ControlSpec::static_()],
             },
             knobs: Knobs {
                 materials: self.materials,
@@ -806,6 +943,7 @@ impl CogCampaignConfig {
                 swap_costs_s: self.swap_costs_s.clone(),
                 overlaps: self.overlaps.clone(),
                 fabric_oversubs: self.fabric_oversubs.clone(),
+                controls: vec![ControlSpec::static_()],
             },
             knobs: Knobs {
                 samples_per_request: self.samples_per_request,
@@ -837,6 +975,71 @@ mod tests {
         assert_eq!(Fleet::parse("0g0r"), None, "empty pool rejected");
         assert_eq!(Fleet::parse("bogus"), None);
         assert_eq!(Fleet::Mixed { gpus: 4, rdus: 2 }.pool_size(), 6);
+    }
+
+    #[test]
+    fn control_spec_parses_every_verb() {
+        let st = ControlSpec::parse("static").unwrap();
+        assert!(st.is_static());
+        assert_eq!(st, ControlSpec::static_());
+
+        let c = ControlSpec::parse("leave:0@30000+join:0@60000").unwrap();
+        assert_eq!(c.key, "leave:0@30000+join:0@60000");
+        assert_eq!(c.trace.len(), 2);
+        assert_eq!(c.trace[0].action, FleetAction::BackendLeave(0));
+        assert!((c.trace[0].at_s - 30e-3).abs() < 1e-12);
+        assert_eq!(c.trace[1].action, FleetAction::BackendJoin(0));
+        assert!(c.autoscaler.is_none() && !c.is_static());
+
+        let c = ControlSpec::parse("degrade:0.25@20000+restore@60000").unwrap();
+        assert_eq!(c.trace[0].action, FleetAction::LinkDegrade(0.25));
+        assert_eq!(c.trace[1].action, FleetAction::LinkRestore);
+
+        let c = ControlSpec::parse("rankfail:3@40000").unwrap();
+        assert_eq!(c.trace[0].action, FleetAction::RankFail(3));
+
+        let c = ControlSpec::parse("auto:2:1-4:100:2000").unwrap();
+        assert!(c.trace.is_empty());
+        let a = c.autoscaler.unwrap();
+        assert_eq!((a.initial, a.min_active, a.max_active), (2, 1, 4));
+        assert!((a.low_s - 100e-6).abs() < 1e-15 && (a.high_s - 2e-3).abs() < 1e-12);
+
+        // combined trace + autoscaler
+        let c = ControlSpec::parse("leave:1@5000+auto:2:1-4:100:2000").unwrap();
+        assert_eq!(c.trace.len(), 1);
+        assert!(c.autoscaler.is_some());
+
+        for bad in [
+            "", "bogus", "leave:0", "leave@30000", "degrade:0@1000", "degrade:-1@1000",
+            "restore:1@1000", "leave:0@-5", "auto:2:1-4:100", "auto:2:1-4:100:2000+auto:1:1-2:1:2",
+        ] {
+            assert!(ControlSpec::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn control_axis_multiplies_event_and_cog_but_not_analytic() {
+        let grid = |kind: Kind| Grid {
+            axes: Axes {
+                kinds: vec![kind],
+                topologies: vec![Topology::Pooled],
+                policies: vec![Policy::RoundRobin],
+                rank_counts: vec![4],
+                fabric_oversubs: vec![1.0],
+                controls: vec![
+                    ControlSpec::static_(),
+                    ControlSpec::parse("leave:0@30000").unwrap(),
+                ],
+                ..Axes::default()
+            },
+            knobs: Knobs::default(),
+        };
+        assert_eq!(grid(Kind::Event).cells().len(), 2);
+        assert_eq!(grid(Kind::Cog).cells().len(), 2);
+        assert_eq!(grid(Kind::Cog).cells()[1].control, 1);
+        assert_eq!(grid(Kind::Analytic).cells().len(), 1, "no clock, no control axis");
+        // the index lookup is total
+        assert_eq!(grid(Kind::Cog).axes.control(7), ControlSpec::static_());
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::workload::{HydraWorkload, MirWorkload};
 
 use super::scenario::{
     build_fabric_spec, build_fleet, profile_for, CampaignConfig, CogCampaignConfig,
-    EventCampaignConfig, Fleet, Grid, Kind, Knobs, Scenario, Topology,
+    ControlSpec, EventCampaignConfig, Fleet, Grid, Kind, Knobs, Scenario, Topology,
 };
 
 // ------------------------------------------------------ cell results
@@ -198,8 +198,17 @@ fn run_analytic(
     }
 }
 
-/// Run one grid cell on its kind's engine.
+/// Run one grid cell on its kind's engine under the static (legacy)
+/// control plane.
 pub fn run_cell(sc: &Scenario, knobs: &Knobs) -> CellResult {
+    run_cell_ctl(sc, knobs, &ControlSpec::static_())
+}
+
+/// Run one grid cell on its kind's engine under an explicit
+/// control-plane schedule.  A static spec takes the exact legacy
+/// code path (no control hooks installed), which is what keeps the
+/// committed goldens byte-identical.
+pub fn run_cell_ctl(sc: &Scenario, knobs: &Knobs, ctl: &ControlSpec) -> CellResult {
     let summary = match sc.kind {
         Kind::Analytic => {
             let link = derated_link(&Link::infiniband_cx6(), sc.oversub);
@@ -235,6 +244,9 @@ pub fn run_cell(sc: &Scenario, knobs: &Knobs) -> CellResult {
                 }
                 None => EventSim::with_tiers(backends, sc.policy, sim_cfg, tier.hermit, tier.mir),
             };
+            if !ctl.trace.is_empty() {
+                sim.with_control(&ctl.trace);
+            }
             sim.run_to_completion();
             CellSummary::Event(sim.summary())
         }
@@ -270,6 +282,9 @@ pub fn run_cell(sc: &Scenario, knobs: &Knobs) -> CellResult {
                 }
                 None => CogSim::with_tiers(backends, sc.policy, sim_cfg, tier.hermit, tier.mir),
             };
+            if !ctl.is_static() {
+                sim.with_control(&ctl.trace, ctl.autoscaler);
+            }
             sim.run_to_completion();
             CellSummary::Cog(sim.summary())
         }
@@ -289,8 +304,9 @@ pub fn run_grid(grid: &Grid) -> GridResult {
 /// every JSON report derived from it — is byte-identical at any
 /// thread count.
 pub fn run_grid_threads(grid: &Grid, threads: usize) -> GridResult {
-    let cells =
-        workpool::Pool::new(threads).map(grid.cells(), |_, sc| run_cell(&sc, &grid.knobs));
+    let cells = workpool::Pool::new(threads).map(grid.cells(), |_, sc| {
+        run_cell_ctl(&sc, &grid.knobs, &grid.axes.control(sc.control))
+    });
     GridResult { grid: grid.clone(), cells }
 }
 
@@ -479,6 +495,7 @@ fn event_cell_scenario(
         swap_s: 0.0,
         overlap: 0.0,
         oversub,
+        control: 0,
     }
 }
 
@@ -614,6 +631,7 @@ pub fn run_cog_scenario(
         swap_s,
         overlap,
         oversub,
+        control: 0,
     };
     match run_cell(&sc, &cfg.grid().knobs).summary {
         CellSummary::Cog(summary) => cog_to_scenario_result(&sc, summary),
@@ -633,6 +651,146 @@ pub fn run_cog_campaign(cfg: &CogCampaignConfig) -> CogCampaignResult {
         })
         .collect();
     CogCampaignResult { config: cfg.clone(), scenarios }
+}
+
+// ------------------------------------------------- control campaign
+
+/// The control-plane study: a fixed list of coupled-engine cells that
+/// pins the paper's resilience story — how each coupling topology
+/// absorbs a mid-run backend loss, a fabric brown-out, a rank
+/// checkpoint/restart, and whether a reactive autoscaler can track
+/// the statically-provisioned optimum.
+#[derive(Debug, Clone)]
+pub struct ControlCampaignConfig {
+    /// MPI ranks (local topology gets one GPU per rank; the pooled
+    /// fleet gets the same accelerator count behind the fabric, so
+    /// the one-backend loss removes the same fraction of capacity
+    /// from both).
+    pub ranks: usize,
+    pub timesteps: usize,
+    pub policy: Policy,
+    /// Fabric oversubscription of the pooled cells.
+    pub oversub: f64,
+    pub seed: u64,
+}
+
+impl Default for ControlCampaignConfig {
+    fn default() -> Self {
+        ControlCampaignConfig {
+            ranks: 4,
+            timesteps: 8,
+            policy: Policy::LeastOutstanding,
+            oversub: 2.0,
+            seed: 42,
+        }
+    }
+}
+
+impl ControlCampaignConfig {
+    /// The fixed cell list: `(label, topology, control-spec key)`.
+    /// Event times sit mid-run (steps are a few ms each); the pooled
+    /// fleet is 4 remote A100s so local and pooled lose the same 1/4
+    /// of their devices in the `leave` cells.
+    pub fn cells(&self) -> Vec<(String, Topology, ControlSpec)> {
+        [
+            ("local/static", Topology::Local, "static"),
+            ("local/leave", Topology::Local, "leave:0@10300"),
+            ("pooled/static", Topology::Pooled, "static"),
+            ("pooled/leave", Topology::Pooled, "leave:0@10300"),
+            ("pooled/degrade", Topology::Pooled, "degrade:0.25@6000+restore@20000"),
+            ("pooled/rankfail", Topology::Pooled, "rankfail:1@10000"),
+            ("pooled/auto", Topology::Pooled, "auto:2:1-4:100:1000"),
+        ]
+        .into_iter()
+        .map(|(label, topology, key)| {
+            (label.to_string(), topology, ControlSpec::parse(key).expect("valid spec"))
+        })
+        .collect()
+    }
+
+    fn scenario(&self, topology: Topology) -> Scenario {
+        Scenario {
+            kind: Kind::Cog,
+            topology,
+            // same device count in and out of the pool: the loss cells
+            // compare like against like
+            fleet: Fleet::Mixed { gpus: self.ranks as u8, rdus: 0 },
+            policy: self.policy,
+            ranks: self.ranks,
+            arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+            window_us: 0.0,
+            models: 8,
+            swap_s: 0.0,
+            overlap: 0.0,
+            oversub: self.oversub,
+            control: 0,
+        }
+    }
+
+    fn knobs(&self) -> Knobs {
+        Knobs { timesteps: self.timesteps, seed: self.seed, ..Knobs::default() }
+    }
+}
+
+/// One executed control-campaign cell.
+#[derive(Debug, Clone)]
+pub struct ControlCellResult {
+    pub label: String,
+    pub topology: Topology,
+    pub control: ControlSpec,
+    pub summary: CogSummary,
+}
+
+/// The executed control campaign.
+#[derive(Debug, Clone)]
+pub struct ControlCampaignResult {
+    pub config: ControlCampaignConfig,
+    pub cells: Vec<ControlCellResult>,
+}
+
+impl ControlCampaignResult {
+    /// Look up one cell by label.
+    pub fn cell(&self, label: &str) -> &ControlCellResult {
+        self.cells
+            .iter()
+            .find(|c| c.label == label)
+            .unwrap_or_else(|| panic!("control campaign has no cell {label:?}"))
+    }
+
+    /// TTS under one-backend loss over the static TTS of the same
+    /// topology (1.0 = the loss was fully absorbed).
+    pub fn loss_ratio(&self, topology_key: &str) -> f64 {
+        let stat = self.cell(&format!("{topology_key}/static"));
+        let loss = self.cell(&format!("{topology_key}/leave"));
+        loss.summary.time_to_solution_s / stat.summary.time_to_solution_s
+    }
+
+    /// Autoscaled TTS over the statically-provisioned optimum (the
+    /// all-backends-active static pooled cell).
+    pub fn autoscaler_factor(&self) -> f64 {
+        self.cell("pooled/auto").summary.time_to_solution_s
+            / self.cell("pooled/static").summary.time_to_solution_s
+    }
+}
+
+/// Run the control-plane study (sequential: seven cells, milliseconds
+/// of wall time).
+pub fn run_control_campaign(cfg: &ControlCampaignConfig) -> ControlCampaignResult {
+    let knobs = cfg.knobs();
+    let cells = cfg
+        .cells()
+        .into_iter()
+        .map(|(label, topology, control)| {
+            let sc = cfg.scenario(topology);
+            match run_cell_ctl(&sc, &knobs, &control).summary {
+                CellSummary::Cog(summary) => {
+                    ControlCellResult { label, topology, control, summary }
+                }
+                _ => unreachable!("control campaign runs cog cells"),
+            }
+        })
+        .collect();
+    ControlCampaignResult { config: cfg.clone(), cells }
 }
 
 #[cfg(test)]
@@ -981,5 +1139,55 @@ mod tests {
         let cog = result.cells[2].cog().expect("kind order");
         assert!(cog.time_to_solution_s > 0.0);
         assert!(cog.total_network_s > 0.0, "mixed pool is remote");
+    }
+
+    // ------------------------------------------- control campaign
+
+    #[test]
+    fn control_campaign_cell_list_is_fixed() {
+        let cfg = ControlCampaignConfig::default();
+        let cells = cfg.cells();
+        let labels: Vec<&str> = cells.iter().map(|(l, _, _)| l.as_str()).collect();
+        assert_eq!(
+            labels,
+            [
+                "local/static",
+                "local/leave",
+                "pooled/static",
+                "pooled/leave",
+                "pooled/degrade",
+                "pooled/rankfail",
+                "pooled/auto",
+            ]
+        );
+        // topology is encoded in the label prefix
+        for (label, topology, _) in &cells {
+            let prefix = if *topology == Topology::Local { "local/" } else { "pooled/" };
+            assert!(label.starts_with(prefix), "{label}");
+        }
+        // the static cells carry an empty trace; every dynamic cell a
+        // non-static spec
+        for (label, _, control) in &cells {
+            assert_eq!(label.ends_with("/static"), control.is_static(), "{label}");
+        }
+    }
+
+    #[test]
+    fn control_campaign_lookups_cover_every_cell() {
+        let cfg = ControlCampaignConfig { timesteps: 2, ..Default::default() };
+        let result = run_control_campaign(&cfg);
+        assert_eq!(result.cells.len(), cfg.cells().len());
+        for (label, topology, _) in cfg.cells() {
+            let cell = result.cell(&label);
+            assert_eq!(cell.topology, topology, "{label}");
+            assert!(cell.summary.time_to_solution_s.is_finite(), "{label}");
+            assert!(cell.summary.submitted > 0, "{label}");
+        }
+        for key in ["local", "pooled"] {
+            let r = result.loss_ratio(key);
+            assert!(r.is_finite() && r > 0.0, "{key}: {r}");
+        }
+        let f = result.autoscaler_factor();
+        assert!(f.is_finite() && f > 0.0, "{f}");
     }
 }

@@ -18,8 +18,8 @@ use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
 use cogsim_disagg::eventsim::ArrivalProcess;
 use cogsim_disagg::harness::{
-    run_figure, run_grid_threads, Axes, CampaignConfig, CogCampaignConfig, EventCampaignConfig,
-    Fleet,
+    run_control_campaign, run_figure, run_grid_threads, Axes, CampaignConfig, CogCampaignConfig,
+    ControlCampaignConfig, ControlSpec, EventCampaignConfig, Fleet,
     Grid, GridResult, Kind, Knobs, Topology, FIGURES,
 };
 use cogsim_disagg::metrics::LatencyRecorder;
@@ -98,12 +98,12 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "12",
                help: "simulated timesteps", cmds: &["campaign"] },
     FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "8",
-               help: "bulk-synchronous timesteps", cmds: &["cogsim", "fabric", "scenario"] },
+               help: "bulk-synchronous timesteps", cmds: &["cogsim", "fabric", "scenario", "control"] },
     FlagSpec { name: "horizon-ms", kind: FlagKind::Usize, default: "200",
                help: "arrival horizon, ms", cmds: &["eventsim", "scenario"] },
     FlagSpec { name: "seed", kind: FlagKind::Usize, default: "42",
                help: "workload seed (fixed seed = byte-stable JSON)",
-               cmds: &["eventsim", "cogsim", "fabric", "scenario"] },
+               cmds: &["eventsim", "cogsim", "fabric", "scenario", "control"] },
     FlagSpec { name: "models", kind: FlagKind::Usize, default: "8",
                help: "target models per rank", cmds: &["cogsim"] },
     FlagSpec { name: "smoke", kind: FlagKind::Bool, default: "",
@@ -144,10 +144,20 @@ const FLAGS: &[FlagSpec] = &[
                help: "compute/inference overlap fractions (cog kind)", cmds: &["scenario"] },
     FlagSpec { name: "oversubs", kind: FlagKind::List, default: "1,4",
                help: "fabric oversubscription factors", cmds: &["scenario"] },
+    FlagSpec { name: "controls", kind: FlagKind::List, default: "static",
+               help: "control-plane traces (event/cog kinds): static or \
+                      `+`-joined leave:IDX@T|join:IDX@T|degrade:F@T|restore@T|\
+                      rankfail:R@T|auto:INIT:MIN-MAX:LO:HI (times/thresholds in us)",
+               cmds: &["scenario"] },
     FlagSpec { name: "list", kind: FlagKind::Bool, default: "",
                help: "print the grid's axes and defaults, then exit", cmds: &["scenario"] },
     FlagSpec { name: "out", kind: FlagKind::Str, default: "results/scenario.json",
                help: "JSON output path", cmds: &["scenario"] },
+    // the control-plane resilience study
+    FlagSpec { name: "ranks", kind: FlagKind::Usize, default: "4",
+               help: "MPI ranks (= devices per fleet)", cmds: &["control"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/control.json",
+               help: "JSON output path", cmds: &["control"] },
     // workload inspection
     FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "3",
                help: "timesteps to print", cmds: &["trace"] },
@@ -169,6 +179,7 @@ const COMMANDS: &[(&str, &str, &str)] = &[
     ("eventsim", "", "alias: event grid (arrival x batching x ranks)"),
     ("cogsim", "", "alias: coupled grid (time-to-solution)"),
     ("fabric", "", "alias: pooled-vs-local crossover on the cog grid"),
+    ("control", "", "control-plane resilience study (failures, degrade, autoscaler)"),
     ("trace", "", "print a Hydra-like request trace"),
     ("info", "", "show manifest/runtime info"),
 ];
@@ -316,6 +327,7 @@ fn run() -> Result<()> {
         "eventsim" => cmd_eventsim(&args),
         "cogsim" => cmd_cogsim(&args),
         "fabric" => cmd_fabric(&args),
+        "control" => cmd_control(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         _ => unreachable!("command list checked above"),
@@ -403,6 +415,14 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     axes.swap_costs_s = args.get_f64_list("swaps-us")?.iter().map(|us| us * 1e-6).collect();
     axes.overlaps = args.get_f64_list("overlaps")?;
     axes.fabric_oversubs = args.get_f64_list("oversubs")?;
+    axes.controls = args
+        .get_list("controls")
+        .iter()
+        .map(|c| {
+            ControlSpec::parse(c)
+                .ok_or_else(|| anyhow!("invalid control spec {c:?} (see `repro help`)"))
+        })
+        .collect::<Result<_>>()?;
 
     let mut knobs = Knobs::default();
     knobs.timesteps = args.get_usize("timesteps")?;
@@ -623,6 +643,46 @@ fn cmd_fabric(args: &Args) -> Result<()> {
         ),
         None => println!("pooled never falls behind node-local in this sweep"),
     }
+    Ok(())
+}
+
+/// The control-plane resilience study: a fixed seven-cell campaign
+/// (local/pooled × static/leave, plus pooled degrade / rank-failure /
+/// autoscaler cells) pinning the dynamic-fleet headline.
+fn cmd_control(args: &Args) -> Result<()> {
+    let cfg = ControlCampaignConfig {
+        ranks: args.get_usize("ranks")?,
+        timesteps: args.get_usize("timesteps")?,
+        seed: args.get_usize("seed")? as u64,
+        ..Default::default()
+    };
+    if cfg.ranks == 0 || cfg.timesteps == 0 {
+        bail!("--ranks and --timesteps must be positive");
+    }
+    let result = run_control_campaign(&cfg);
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+    write_json_out(&args.get("out"), &cogsim_disagg::util::json::write(&result.to_json()))?;
+
+    // The headline: the pooled fleet degrades more gracefully than
+    // node-local under one-backend loss, and the reactive autoscaler
+    // holds TTS within a bounded factor of static provisioning.
+    let loss_local = result.loss_ratio("local");
+    let loss_pooled = result.loss_ratio("pooled");
+    println!(
+        "one-backend loss TTS ratio: local x{loss_local:.3} vs pooled x{loss_pooled:.3} ({})",
+        if loss_pooled < loss_local {
+            "pooled degrades more gracefully"
+        } else {
+            "pooled does not win here"
+        }
+    );
+    let auto = result.autoscaler_factor();
+    println!(
+        "autoscaler TTS vs static provisioning: x{auto:.3} (bound x{:.1})",
+        cogsim_disagg::harness::report::AUTOSCALER_BOUND
+    );
     Ok(())
 }
 

@@ -45,7 +45,8 @@ use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, PendingRequest,
 use crate::fabric::{FabricEngine, FabricSpec};
 
 pub use pipeline::{
-    Completed, Dispatched, Effects, Outcome, PipeEvent, Pipeline, ResidencySpec, TransitTiming,
+    AutoscalerCfg, Completed, Dispatched, Effects, FleetAction, FleetEvent, Outcome, PipeEvent,
+    Pipeline, ResidencySpec, TransitTiming,
 };
 
 /// Router-level dynamic batching configuration.
@@ -206,6 +207,15 @@ pub(crate) enum FlowCont {
     Out { token: usize },
 }
 
+impl FlowCont {
+    /// The in-transit batch this flow belongs to.
+    pub(crate) fn token(&self) -> usize {
+        match *self {
+            FlowCont::In { token } | FlowCont::Swap { token } | FlowCont::Out { token } => token,
+        }
+    }
+}
+
 impl FabricLayer {
     pub(crate) fn new(spec: FabricSpec, n_backends: usize) -> FabricLayer {
         spec.validate(n_backends);
@@ -255,6 +265,42 @@ impl FabricLayer {
         Some((t.max(clock_s), self.wake_version))
     }
 
+    /// Control plane: degrade (or restore) every fabric link to
+    /// `factor` × its as-built capacity and re-solve the fair shares
+    /// over the surviving bandwidth.  The caller re-arms the wake-up
+    /// (completion times just moved).
+    pub(crate) fn set_capacity_scale(&mut self, clock_s: f64, factor: f64) {
+        self.engine.set_capacity_scale(clock_s, factor);
+    }
+
+    /// Control plane: cancel every in-flight flow whose transit token
+    /// satisfies `token_dead` (its destination backend left the
+    /// fleet).  Survivors immediately reclaim the cancelled shares;
+    /// the caller re-arms the wake-up.  Returns the cancelled count.
+    pub(crate) fn cancel_flows_of(
+        &mut self,
+        clock_s: f64,
+        token_dead: impl Fn(usize) -> bool,
+    ) -> usize {
+        let doomed: Vec<u64> = self
+            .cont
+            .iter()
+            .filter(|(_, c)| token_dead(c.token()))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &doomed {
+            self.cont.remove(id);
+            self.engine.cancel(clock_s, *id);
+        }
+        doomed.len()
+    }
+
+    /// Control plane: a backend left the fleet — forget its device
+    /// horizon so a later rejoin starts from an idle device.
+    pub(crate) fn reset_busy(&mut self, backend: usize) {
+        self.busy_until_s[backend] = 0.0;
+    }
+
     /// Does `backend` sit behind the shared fabric (vs in its node)?
     pub(crate) fn is_remote(&self, backend: usize) -> bool {
         self.spec.topology.is_pooled(self.spec.accel_of_backend[backend])
@@ -284,6 +330,13 @@ pub struct Residency {
 impl Residency {
     pub(crate) fn new(slots: usize) -> Residency {
         Residency { slots, held: Vec::new() }
+    }
+
+    /// Control plane: the backend's device memory is gone — forget
+    /// every resident model (the slot count is configuration and
+    /// survives).
+    pub(crate) fn clear(&mut self) {
+        self.held.clear();
     }
 
     /// Record a dispatch of `model`; returns true on a residency

@@ -32,8 +32,10 @@ use super::{BatchStage, Batching, FabricLayer, FlowCont, Residency};
 pub enum PipeEvent {
     /// Re-check the batcher's deadline-ready queues.
     BatchDeadline,
-    /// A direct-path batch finished; ids index the request metadata.
-    Completion { ids: Vec<usize> },
+    /// A direct-path batch finished; `token` indexes the live direct
+    /// batch table (stale — a no-op — when the batch was orphaned by
+    /// a backend leaving mid-flight).
+    Completion { token: usize },
     /// The fabric engine's earliest flow completion (stale when
     /// `version` is no longer current — see [`FabricLayer`]).
     FabricWake { version: u64 },
@@ -65,6 +67,10 @@ pub struct Dispatched {
     pub backend: usize,
     pub batch_samples: usize,
     pub outcome: Outcome,
+    /// True when this is a control-plane *re*-dispatch of work
+    /// orphaned by a backend failure: the engine updates the ids'
+    /// existing records in place instead of opening new ones.
+    pub retry: bool,
 }
 
 /// Measured phase timings of a fabric batch, filled when the result
@@ -97,6 +103,12 @@ pub struct Effects {
     pub scheduled: Vec<(f64, u8, PipeEvent)>,
     pub dispatched: Vec<Dispatched>,
     pub completed: Vec<Completed>,
+    /// Request ids whose in-flight batch died with its backend this
+    /// call (control plane only — always empty on a static run).  The
+    /// engine must void these records **before** applying
+    /// `dispatched`: every orphan is re-dispatched exactly once and
+    /// reappears there with `retry = true`.
+    pub orphaned: Vec<usize>,
 }
 
 /// The residency stage's knobs (engaged only when configured).
@@ -114,6 +126,77 @@ struct ReqMeta {
     rank: u32,
     model: u32,
     samples: u32,
+}
+
+/// One timed control-plane action: what happens to the fleet, and
+/// when.  Engines schedule these as ordinary events (arrival class)
+/// and forward the action to the pipeline's control hooks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetEvent {
+    pub at_s: f64,
+    pub action: FleetAction,
+}
+
+/// The control-plane vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetAction {
+    /// Backend leaves the fleet (failure or scale-down): queue
+    /// drained, residency and weights-ready gates invalidated, flows
+    /// cancelled, in-flight batches orphaned and re-dispatched once.
+    BackendLeave(usize),
+    /// Backend (re)joins cold; parked batches flush.
+    BackendJoin(usize),
+    /// Every fabric link degrades to `factor` × as-built capacity.
+    LinkDegrade(f64),
+    /// Capacities return to as-built (factor 1, drift-free).
+    LinkRestore,
+    /// Rank fails and restarts from checkpoint, replaying its
+    /// in-flight timestep (coupled engine; no-op for open/closed-loop
+    /// streams, which have no rank-owned state to lose).
+    RankFail(usize),
+}
+
+/// Reactive queue-depth autoscaler knobs: the engine samples the mean
+/// routing backlog over the *active* hermit-tier backends between
+/// steps and grows/shrinks the pool one backend at a time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalerCfg {
+    /// Backends active at t=0 (the rest start parked).
+    pub initial: usize,
+    /// Never shrink below this many active backends.
+    pub min_active: usize,
+    /// Never grow past this many active backends.
+    pub max_active: usize,
+    /// Shrink when mean backlog per active backend falls below this.
+    pub low_s: f64,
+    /// Grow when mean backlog per active backend exceeds this.
+    pub high_s: f64,
+}
+
+impl AutoscalerCfg {
+    pub fn validate(&self, tier: usize) {
+        assert!(self.min_active >= 1, "autoscaler must keep one backend");
+        assert!(
+            self.min_active <= self.initial && self.initial <= self.max_active,
+            "autoscaler bounds must satisfy min <= initial <= max"
+        );
+        assert!(self.max_active <= tier, "autoscaler max exceeds the tier size ({tier})");
+        assert!(
+            self.low_s >= 0.0 && self.high_s > self.low_s && self.high_s.is_finite(),
+            "autoscaler thresholds must satisfy 0 <= low < high < inf"
+        );
+    }
+}
+
+/// A direct-path batch whose completion event is still in flight.
+/// `dead` marks batches orphaned by a backend leave: the already
+/// scheduled [`PipeEvent::Completion`] becomes a no-op and the ids
+/// travel on through the orphan/retry path instead.
+#[derive(Debug)]
+struct DirectBatch {
+    ids: Vec<usize>,
+    backend: usize,
+    dead: bool,
 }
 
 /// One batch in flight through the fabric.  The weights-ready fields
@@ -137,6 +220,9 @@ struct Transit {
     /// Service already scheduled (guards double-starts when a parked
     /// batch is re-tried by the weights-ready drain).
     started: bool,
+    /// Orphaned by a backend leave: every later phase event for this
+    /// token is stale and must be dropped.
+    dead: bool,
     /// Swap time *not* hidden behind the payload transfer: the serial
     /// residency charge on the batch's critical chain.
     swap_excess_s: f64,
@@ -184,6 +270,28 @@ pub struct Pipeline {
     id_pool: Vec<Vec<usize>>,
     /// Drained [`Effects`] shell awaiting reuse by `take_effects`.
     spare: Option<Effects>,
+    // -------- control plane (inert on a static run) --------
+    /// Per-backend membership: control events flip these; routing
+    /// only ever considers the live tiers below.
+    active: Vec<bool>,
+    /// `hermit_tier` / `mir_tier` filtered to active backends,
+    /// order-preserving; rebuilt on every membership change.
+    live_hermit: Vec<usize>,
+    live_mir: Vec<usize>,
+    /// Direct-path batches in flight, indexed by completion token.
+    direct_live: Vec<DirectBatch>,
+    /// Free direct tokens (a token recycles only when its scheduled
+    /// completion event has popped, so stale events cannot alias).
+    direct_free: Vec<usize>,
+    /// Batches with no live backend in their tier, awaiting a join.
+    parked: Vec<(Vec<usize>, bool)>,
+    /// Batches in flight per backend (direct + fabric): the
+    /// autoscaler's is-it-idle check.
+    live_batches: Vec<u32>,
+    /// Requests re-dispatched after their backend died.
+    retries: u64,
+    /// Requests orphaned by backend leaves (each re-dispatched once).
+    orphaned: u64,
     submitted: u64,
     dispatched: u64,
     completed: u64,
@@ -212,7 +320,17 @@ impl Pipeline {
         let batcher = BatchStage::from_config(batching);
         let residency_state =
             residency.map(|spec| backends.iter().map(|_| Residency::new(spec.slots)).collect());
+        let n = backends.len();
         Pipeline {
+            active: vec![true; n],
+            live_hermit: hermit_tier.clone(),
+            live_mir: mir_tier.clone(),
+            direct_live: Vec::new(),
+            direct_free: Vec::new(),
+            parked: Vec::new(),
+            live_batches: vec![0; n],
+            retries: 0,
+            orphaned: 0,
             backends,
             policy,
             hermit_tier,
@@ -271,6 +389,7 @@ impl Pipeline {
             self.recycle_ids(c.ids);
         }
         effects.scheduled.clear();
+        effects.orphaned.clear();
         self.spare = Some(effects);
     }
 
@@ -327,6 +446,46 @@ impl Pipeline {
     /// Requests waiting in the batching window.
     pub fn batcher_pending(&self) -> u64 {
         self.batcher.as_ref().map_or(0, BatchStage::pending)
+    }
+
+    /// Requests re-dispatched after a backend leave orphaned them.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Requests orphaned by backend leaves so far.
+    pub fn orphaned(&self) -> u64 {
+        self.orphaned
+    }
+
+    /// Requests parked with no live backend in their tier.
+    pub fn parked_requests(&self) -> u64 {
+        self.parked.iter().map(|(ids, _)| ids.len() as u64).sum()
+    }
+
+    /// Is backend `idx` currently in the pool?
+    pub fn is_active(&self, idx: usize) -> bool {
+        self.active[idx]
+    }
+
+    /// Active backends across both tiers.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// The hermit (default) tier's backend indices, as configured.
+    pub fn hermit_tier(&self) -> &[usize] {
+        &self.hermit_tier
+    }
+
+    /// Routing backlog of backend `idx` in seconds.
+    pub fn backlog_s(&self, idx: usize) -> f64 {
+        self.backends[idx].queue_s()
+    }
+
+    /// Batches currently in flight on backend `idx`.
+    pub fn live_batches(&self, idx: usize) -> u32 {
+        self.live_batches[idx]
     }
 
     /// Metadata of request `id` as submitted: `(rank, model,
@@ -403,7 +562,7 @@ impl Pipeline {
     pub fn handle(&mut self, event: PipeEvent) {
         match event {
             PipeEvent::BatchDeadline => self.pump_batcher(),
-            PipeEvent::Completion { ids } => self.complete(ids, None, None),
+            PipeEvent::Completion { token } => self.on_direct_completion(token),
             PipeEvent::FabricWake { version } => self.on_fabric_wake(version),
             PipeEvent::XferInDone { token } => self.on_xfer_in_done(token),
             PipeEvent::ServiceDone { token } => self.on_service_done(token),
@@ -437,13 +596,25 @@ impl Pipeline {
     /// tier, the residency touch (when configured), then either the
     /// legacy fixed-charge path or the multi-phase fabric path.
     fn dispatch(&mut self, ids: Vec<usize>) {
+        self.dispatch_inner(ids, false);
+    }
+
+    fn dispatch_inner(&mut self, ids: Vec<usize>, retry: bool) {
         debug_assert!(!ids.is_empty());
         let meta0 = self.req_meta[ids[0]];
         let rank0 = meta0.rank as usize;
         let mid = meta0.model as usize;
         let total: usize = ids.iter().map(|&i| self.req_meta[i].samples as usize).sum();
         let is_mir = self.model_is_mir[mid];
-        let candidates: &[usize] = if is_mir { &self.mir_tier } else { &self.hermit_tier };
+        let candidates: &[usize] = if is_mir { &self.live_mir } else { &self.live_hermit };
+        if candidates.is_empty() {
+            // every backend in the tier has left: park until a join
+            self.parked.push((ids, retry));
+            return;
+        }
+        if retry {
+            self.retries += ids.len() as u64;
+        }
         let idx = policy::select_slot(
             self.policy,
             &self.backends,
@@ -461,7 +632,7 @@ impl Pipeline {
             self.swaps += 1;
         }
         if self.fabric.as_ref().is_some_and(|f| f.is_remote(idx)) {
-            self.dispatch_remote(ids, idx, total, miss, rank0, mid);
+            self.dispatch_remote(ids, idx, total, miss, rank0, mid, retry);
             return;
         }
         let swap_s = if miss { self.swap_cfg_s } else { 0.0 };
@@ -484,14 +655,46 @@ impl Pipeline {
             backend: idx,
             batch_samples: total,
             outcome: Outcome::Direct { wait_s, swap_s, link_s, exec_s, complete_s },
+            retry,
         });
         self.dispatched += ids.len() as u64;
         self.batches += 1;
+        self.live_batches[idx] += 1;
+        let token = match self.direct_free.pop() {
+            Some(t) => {
+                let slot = &mut self.direct_live[t];
+                slot.ids = ids;
+                slot.backend = idx;
+                slot.dead = false;
+                t
+            }
+            None => {
+                self.direct_live.push(DirectBatch { ids, backend: idx, dead: false });
+                self.direct_live.len() - 1
+            }
+        };
         self.effects.scheduled.push((
             complete_s,
             CLASS_COMPLETION,
-            PipeEvent::Completion { ids },
+            PipeEvent::Completion { token },
         ));
+    }
+
+    /// A direct-path completion event fired.  Stale for batches the
+    /// control plane orphaned (the ids were re-dispatched already);
+    /// either way the token is spent and returns to the free list.
+    fn on_direct_completion(&mut self, token: usize) {
+        let batch = &mut self.direct_live[token];
+        if batch.dead {
+            batch.dead = false;
+            self.direct_free.push(token);
+            return;
+        }
+        let ids = std::mem::take(&mut batch.ids);
+        let idx = batch.backend;
+        self.direct_free.push(token);
+        self.live_batches[idx] -= 1;
+        self.complete(ids, None, None);
     }
 
     // ----------------------------------------------- fabric phases
@@ -507,6 +710,7 @@ impl Pipeline {
     /// dispatch** (`queue_s` reflects committed work immediately), so
     /// the routing policies see exactly the feedback the legacy path
     /// gives them.
+    #[allow(clippy::too_many_arguments)]
     fn dispatch_remote(
         &mut self,
         ids: Vec<usize>,
@@ -515,6 +719,7 @@ impl Pipeline {
         miss: bool,
         rank0: usize,
         mid: usize,
+        retry: bool,
     ) {
         let is_mir = self.model_is_mir[mid];
         let profile = if is_mir { &self.mir_profile } else { &self.hermit_profile };
@@ -545,9 +750,11 @@ impl Pipeline {
             backend: idx,
             batch_samples: total,
             outcome: Outcome::InFlight { token },
+            retry,
         });
         self.dispatched += ids.len() as u64;
         self.batches += 1;
+        self.live_batches[idx] += 1;
 
         let needs_swap_flow = miss && swap_bytes > 0.0;
         if needs_swap_flow {
@@ -569,6 +776,7 @@ impl Pipeline {
             in_done: false,
             swap_done: !needs_swap_flow,
             started: false,
+            dead: false,
             swap_excess_s: 0.0,
             wait_s: 0.0,
             exec_s,
@@ -669,6 +877,9 @@ impl Pipeline {
     /// The request payload is at the accelerator.
     fn on_xfer_in_done(&mut self, token: usize) {
         let tr = &mut self.transits[token];
+        if tr.dead {
+            return;
+        }
         tr.net_in_s = self.clock_s - tr.dispatch_s;
         tr.in_done_s = self.clock_s;
         tr.in_done = true;
@@ -687,8 +898,8 @@ impl Pipeline {
         let clock = self.clock_s;
         let (ready, idx, exec_s, in_done_s, mid) = {
             let tr = &self.transits[token];
-            (!tr.started && tr.in_done && tr.swap_done, tr.backend, tr.exec_s, tr.in_done_s,
-             tr.model)
+            (!tr.dead && !tr.started && tr.in_done && tr.swap_done, tr.backend, tr.exec_s,
+             tr.in_done_s, tr.model)
         };
         if !ready {
             return;
@@ -725,6 +936,9 @@ impl Pipeline {
     fn on_service_done(&mut self, token: usize) {
         let (host, accel, bytes_out) = {
             let tr = &self.transits[token];
+            if tr.dead {
+                return;
+            }
             (tr.host, tr.accel, tr.bytes_out)
         };
         self.transits[token].out_start_s = self.clock_s;
@@ -741,6 +955,9 @@ impl Pipeline {
     fn on_xfer_out_done(&mut self, token: usize) {
         let timing = {
             let tr = &self.transits[token];
+            if tr.dead {
+                return;
+            }
             let net_out_s = self.clock_s - tr.out_start_s;
             let link_s = tr.net_in_s + net_out_s;
             TransitTiming {
@@ -754,11 +971,120 @@ impl Pipeline {
         // The transit is finished: move its id buffer out instead of
         // cloning it (the token keeps indexing the timing fields).
         let ids = std::mem::take(&mut self.transits[token].ids);
+        self.live_batches[self.transits[token].backend] -= 1;
         self.complete(ids, Some(token), Some(timing));
     }
 
     fn complete(&mut self, ids: Vec<usize>, token: Option<usize>, timing: Option<TransitTiming>) {
         self.completed += ids.len() as u64;
         self.effects.completed.push(Completed { ids, token, timing });
+    }
+
+    // ----------------------------------------------- control plane
+
+    /// Rebuild the live routing tiers from the configured tiers and
+    /// the membership flags (order-preserving, so routing decisions
+    /// over an unchanged membership are bit-identical).
+    fn rebuild_live_tiers(&mut self) {
+        let active = &self.active;
+        let hermit: Vec<usize> =
+            self.hermit_tier.iter().copied().filter(|&i| active[i]).collect();
+        let mir: Vec<usize> = self.mir_tier.iter().copied().filter(|&i| active[i]).collect();
+        self.live_hermit = hermit;
+        self.live_mir = mir;
+    }
+
+    /// Control plane: backend `idx` leaves the fleet (failure or
+    /// scale-down).  Its routing queue drains, its residency and
+    /// weights-ready gates invalidate, its in-flight flows cancel
+    /// (survivors re-solve the fair shares immediately), and every
+    /// batch it held is orphaned and re-dispatched exactly once onto
+    /// the surviving tier (or parked when the tier emptied).  No-op
+    /// when already inactive.
+    pub fn control_backend_leave(&mut self, idx: usize) {
+        assert!(idx < self.backends.len(), "unknown backend {idx}");
+        if !self.active[idx] {
+            return;
+        }
+        self.active[idx] = false;
+        self.rebuild_live_tiers();
+        // sticky affinity must not keep pointing at the dead slot
+        for slot in self.affinity.iter_mut() {
+            if *slot == Some(idx) {
+                *slot = None;
+            }
+        }
+        // drain the dead backend's routing queue: its committed work
+        // is exactly the in-flight set being orphaned below
+        let q = self.backends[idx].queue_s();
+        if q > 0.0 {
+            self.backends[idx].drain_queue_s(q);
+        }
+        // residency + weights-ready gates: device memory is gone
+        if let Some(residency) = self.residency.as_mut() {
+            residency[idx].clear();
+        }
+        for mid in 0..self.models.len() {
+            self.swap_ready_s[mid][idx] = f64::NEG_INFINITY;
+            self.swap_waiters[mid][idx].clear();
+        }
+        // orphan every batch the backend held, direct then fabric,
+        // ascending token order (deterministic re-dispatch order)
+        let mut orphans: Vec<Vec<usize>> = Vec::new();
+        for batch in self.direct_live.iter_mut() {
+            if batch.backend == idx && !batch.dead && !batch.ids.is_empty() {
+                batch.dead = true;
+                orphans.push(std::mem::take(&mut batch.ids));
+            }
+        }
+        for tr in self.transits.iter_mut() {
+            if tr.backend == idx && !tr.dead && !tr.ids.is_empty() {
+                tr.dead = true;
+                orphans.push(std::mem::take(&mut tr.ids));
+            }
+        }
+        let clock = self.clock_s;
+        if let Some(fab) = self.fabric.as_mut() {
+            let transits = &self.transits;
+            fab.cancel_flows_of(clock, |token| transits[token].dead);
+            fab.reset_busy(idx);
+        }
+        if self.fabric.is_some() {
+            self.arm_fabric();
+        }
+        self.live_batches[idx] = 0;
+        for ids in orphans {
+            self.orphaned += ids.len() as u64;
+            self.effects.orphaned.extend_from_slice(&ids);
+            self.dispatch_inner(ids, true);
+        }
+    }
+
+    /// Control plane: backend `idx` (re)joins the fleet — scale-up or
+    /// checkpoint/restart.  It returns cold (empty residency, no
+    /// resident weights) and any parked batches flush through the
+    /// router in arrival order.  No-op when already active.
+    pub fn control_backend_join(&mut self, idx: usize) {
+        assert!(idx < self.backends.len(), "unknown backend {idx}");
+        if self.active[idx] {
+            return;
+        }
+        self.active[idx] = true;
+        self.rebuild_live_tiers();
+        let parked = std::mem::take(&mut self.parked);
+        for (ids, retry) in parked {
+            self.dispatch_inner(ids, retry);
+        }
+    }
+
+    /// Control plane: scale every fabric link to `factor` × its
+    /// as-built capacity (degrade < 1, restore = 1) and re-solve the
+    /// fair shares.  No-op on the fixed-charge (fabric-less) path.
+    pub fn control_link_scale(&mut self, factor: f64) {
+        let clock = self.clock_s;
+        if let Some(fab) = self.fabric.as_mut() {
+            fab.set_capacity_scale(clock, factor);
+            self.arm_fabric();
+        }
     }
 }

@@ -1,0 +1,502 @@
+//! Control-plane property suite: the differential, chaos, and golden
+//! tests for dynamic fleets and failure injection.
+//!
+//! Three layers, mirroring `python/sim/verify.py`'s `control_plane`
+//! phase (every numeric expectation here was validated out-of-band
+//! against the line-faithful transliteration):
+//!
+//! * **Differential** — an armed-but-empty control plane must be
+//!   bit-identical to the legacy static run for every workload kind,
+//!   every arrival process, and every `--threads` value.  This is
+//!   what keeps the three committed campaign goldens stable while the
+//!   control plane exists in the code path.
+//! * **Chaos** — randomized seeded event traces (leaves, joins,
+//!   degrades, restores, rank failures at random times) must preserve
+//!   the conservation laws, produce finite summaries, and rerun
+//!   byte-identically at the same seed.
+//! * **Golden** — the seven-cell control campaign reproduces
+//!   `rust/tests/golden/control_summary.json` byte for byte and pins
+//!   the headline: pooled degrades more gracefully than node-local
+//!   under a one-backend loss, and the reactive autoscaler holds TTS
+//!   within [`AUTOSCALER_BOUND`] of the static optimum.
+
+use std::path::PathBuf;
+
+use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
+use cogsim_disagg::eventsim::{
+    ArrivalProcess, Batching, CogSim, CogSimConfig, CogSummary, EventSim, EventSimConfig,
+    EventSummary, FleetAction, FleetEvent,
+};
+use cogsim_disagg::fabric::{FabricSpec, Topology as FabricTopology};
+use cogsim_disagg::harness::report::AUTOSCALER_BOUND;
+use cogsim_disagg::harness::{
+    run_cell, run_cell_ctl, run_control_campaign, run_grid_threads, Axes,
+    ControlCampaignConfig, ControlSpec, Fleet, Grid, Kind, Knobs, Topology,
+};
+use cogsim_disagg::rdu::RduApi;
+use cogsim_disagg::util::json;
+use cogsim_disagg::util::rng::Rng;
+
+// ------------------------------------------------------- fixtures
+//
+// The same two-backend heterogeneous pool, tiers, and configs the
+// python/sim verifier uses — the expectations below are pinned
+// against those exact runs.
+
+fn pool() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(RduBackend::disaggregated("rdu/pool0", 4, RduApi::CppOptimized)),
+        Box::new(RduBackend::disaggregated("rdu/pool1", 2, RduApi::Python)),
+    ]
+}
+
+fn ccfg() -> CogSimConfig {
+    CogSimConfig {
+        ranks: 4,
+        timesteps: 8,
+        compute_s: 2e-3,
+        compute_jitter_s: 0.0,
+        requests_per_step: 6,
+        models: 8,
+        samples_per_request: (2, 3),
+        mir_every: 0,
+        mir_samples: 512,
+        overlap: 0.0,
+        swap_s: 0.0,
+        residency_slots: 4,
+        batching: Batching::Off,
+        seed: 42,
+    }
+}
+
+fn ecfg(arrival: ArrivalProcess, horizon_s: f64) -> EventSimConfig {
+    EventSimConfig {
+        ranks: 4,
+        materials: 8,
+        samples_per_request: (2, 3),
+        requests_per_burst: 6,
+        mir_every: 0,
+        mir_samples: 512,
+        arrival,
+        batching: Batching::Off,
+        horizon_s,
+        seed: 42,
+    }
+}
+
+/// Pooled fabric over the two-backend pool: 4 hosts share the uplink
+/// to 2 remote accels at the given oversubscription.
+fn fab(ranks: usize, oversub: f64) -> FabricSpec {
+    FabricSpec {
+        topology: FabricTopology::pooled(ranks, 2, oversub),
+        accel_of_backend: vec![0, 1],
+    }
+}
+
+fn cog(fabric: Option<FabricSpec>, cfg: CogSimConfig) -> CogSim {
+    match fabric {
+        Some(spec) => CogSim::with_fabric(
+            pool(),
+            Policy::LeastOutstanding,
+            cfg,
+            vec![0, 1],
+            vec![0, 1],
+            spec,
+        ),
+        None => CogSim::with_tiers(pool(), Policy::LeastOutstanding, cfg, vec![0, 1], vec![0, 1]),
+    }
+}
+
+fn esim(cfg: EventSimConfig) -> EventSim {
+    EventSim::with_tiers(pool(), Policy::LeastOutstanding, cfg, vec![0, 1], vec![0, 1])
+}
+
+fn ev(at_s: f64, action: FleetAction) -> FleetEvent {
+    FleetEvent { at_s, action }
+}
+
+fn assert_cog_finite(s: &CogSummary, ctx: &str) {
+    for (name, x) in [
+        ("tts", s.time_to_solution_s),
+        ("mean_step", s.mean_step_s),
+        ("compute", s.total_compute_s),
+        ("queue", s.total_queue_s),
+        ("swap", s.total_swap_s),
+        ("network", s.total_network_s),
+        ("contention", s.total_contention_s),
+        ("service", s.total_service_s),
+        ("swap_time", s.swap_time_s),
+        ("max_spread", s.max_spread_s),
+        ("mean_active", s.mean_active_backends),
+        ("lat_mean", s.latency.mean_s),
+        ("lat_p50", s.latency.p50_s),
+        ("lat_p99", s.latency.p99_s),
+        ("lat_p999", s.latency.p999_s),
+        ("lat_max", s.latency.max_s),
+    ] {
+        assert!(x.is_finite(), "{ctx}: {name} = {x} not finite");
+    }
+    for st in &s.steps {
+        assert!(st.duration_s().is_finite() && st.spread_s.is_finite(), "{ctx}: step");
+    }
+}
+
+fn assert_event_finite(s: &EventSummary, ctx: &str) {
+    for (name, x) in [
+        ("mean_batch_samples", s.mean_batch_samples),
+        ("link_overhead", s.mean_link_overhead_s),
+        ("contention", s.mean_contention_s),
+        ("samples_per_s", s.samples_per_s),
+        ("makespan", s.makespan_s),
+        ("slowdown", s.slowdown_max),
+        ("lat_mean", s.latency.mean_s),
+        ("lat_p50", s.latency.p50_s),
+        ("lat_p99", s.latency.p99_s),
+        ("lat_p999", s.latency.p999_s),
+        ("lat_max", s.latency.max_s),
+    ] {
+        assert!(x.is_finite(), "{ctx}: {name} = {x} not finite");
+    }
+}
+
+// --------------------------------------------------- differential
+
+#[test]
+fn armed_empty_trace_is_identical_to_static_run_every_arrival_process() {
+    // with_control(&[]) must add nothing: the control plane's mere
+    // presence cannot perturb the event stream.
+    for arrival in [
+        ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+        ArrivalProcess::Poisson { rate_per_rank: 800.0 },
+        ArrivalProcess::ClosedLoop { think_s: 2e-3 },
+    ] {
+        let mut a = esim(ecfg(arrival, 0.05));
+        a.run_to_completion();
+        let mut b = esim(ecfg(arrival, 0.05));
+        b.with_control(&[]);
+        b.run_to_completion();
+        assert_eq!(a.summary(), b.summary(), "{arrival:?}");
+        assert_eq!(a.records(), b.records(), "{arrival:?}");
+        assert_eq!(a.events_processed(), b.events_processed(), "{arrival:?}");
+    }
+}
+
+#[test]
+fn armed_empty_control_plane_is_identical_to_static_cog_run() {
+    let mut a = cog(None, ccfg());
+    a.run_to_completion();
+    let mut b = cog(None, ccfg());
+    b.with_control(&[], None);
+    b.run_to_completion();
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.records(), b.records());
+    assert_eq!(a.events_processed(), b.events_processed());
+}
+
+/// A compact three-kind grid: every workload kind, both topologies,
+/// the control axis carrying both a static and a dynamic schedule.
+fn mixed_grid() -> Grid {
+    Grid {
+        axes: Axes {
+            kinds: vec![Kind::Analytic, Kind::Event, Kind::Cog],
+            topologies: vec![Topology::Local, Topology::Pooled],
+            fleets: vec![Fleet::Mixed { gpus: 4, rdus: 0 }],
+            policies: vec![Policy::LeastOutstanding],
+            rank_counts: vec![4],
+            arrivals: vec![ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 }],
+            windows_us: vec![0.0],
+            models_per_rank: vec![8],
+            swap_costs_s: vec![0.0],
+            overlaps: vec![0.0],
+            fabric_oversubs: vec![2.0],
+            controls: vec![
+                ControlSpec::static_(),
+                ControlSpec::parse("leave:0@10300").unwrap(),
+            ],
+        },
+        knobs: Knobs { timesteps: 4, horizon_s: 0.05, ..Knobs::default() },
+    }
+}
+
+#[test]
+fn grid_json_is_byte_identical_at_every_thread_count() {
+    // Dynamic control cells are ordinary cells: individually
+    // deterministic and collected in expansion order, so the whole
+    // document — static and chaos cells alike — is byte-identical at
+    // any worker count.
+    let grid = mixed_grid();
+    let reference = json::write(&run_grid_threads(&grid, 1).to_json());
+    for threads in [2usize, 8, 0] {
+        let doc = json::write(&run_grid_threads(&grid, threads).to_json());
+        assert_eq!(doc, reference, "threads = {threads}");
+    }
+}
+
+#[test]
+fn static_cells_are_unaffected_by_a_dynamic_control_axis_in_the_grid() {
+    // The differential at the grid level: adding a dynamic schedule
+    // to the control axis must not move a single byte of the static
+    // cells' summaries — exactly the property that keeps the three
+    // committed campaign goldens (which run the static axis only)
+    // valid forever.
+    let with_dynamic = mixed_grid();
+    let mut static_only = mixed_grid();
+    static_only.axes.controls = vec![ControlSpec::static_()];
+
+    let a = run_grid_threads(&static_only, 0);
+    let b = run_grid_threads(&with_dynamic, 0);
+    let b_static: Vec<_> = b.cells.iter().filter(|c| c.scenario.control == 0).collect();
+    assert_eq!(a.cells.len(), b_static.len());
+    for (x, y) in a.cells.iter().zip(&b_static) {
+        assert_eq!(format!("{:?}", x.scenario), format!("{:?}", y.scenario));
+        assert_eq!(format!("{:?}", x.summary), format!("{:?}", y.summary));
+    }
+    // ... and the dynamic cells actually ran, on the kinds with a
+    // clock: the analytic closed form has no timeline for timed
+    // events, so its control axis collapses to the static schedule
+    let dynamic: Vec<_> = b.cells.iter().filter(|c| c.scenario.control == 1).collect();
+    assert!(!dynamic.is_empty(), "dynamic schedule must expand into cells");
+    assert!(
+        dynamic.iter().all(|c| c.scenario.kind != Kind::Analytic),
+        "analytic kind must collapse the control axis"
+    );
+    assert!(dynamic.iter().any(|c| c.scenario.kind == Kind::Event));
+    assert!(dynamic.iter().any(|c| c.scenario.kind == Kind::Cog));
+}
+
+#[test]
+fn run_cell_and_run_cell_ctl_static_are_the_same_path() {
+    let mut grid = mixed_grid();
+    grid.axes.controls = vec![ControlSpec::static_()];
+    for sc in grid.cells() {
+        let a = run_cell(&sc, &grid.knobs);
+        let b = run_cell_ctl(&sc, &grid.knobs, &ControlSpec::static_());
+        assert_eq!(format!("{:?}", a.summary), format!("{:?}", b.summary));
+    }
+}
+
+// --------------------------------------------------------- chaos
+
+/// Mirror of the python verifier's `chaos_trace`: same per-rank RNG
+/// stream derivation, same draw order, so the traces — and therefore
+/// every expectation — are identical across the two implementations.
+fn chaos_trace(seed: u64, horizon_s: f64, n_backends: usize, n_ranks: usize) -> Vec<FleetEvent> {
+    let mut rng = Rng::new(seed ^ 1u64.wrapping_mul(0x9E3779B97F4A7C15));
+    let n = rng.range(3, 8);
+    let mut trace = Vec::new();
+    for _ in 0..n {
+        let at_s = rng.uniform(0.0, horizon_s);
+        let action = match rng.below(5) {
+            0 => FleetAction::BackendLeave(rng.below(n_backends)),
+            1 => FleetAction::BackendJoin(rng.below(n_backends)),
+            2 => FleetAction::LinkDegrade(0.1 + 0.8 * rng.uniform(0.0, 1.0)),
+            3 => FleetAction::LinkRestore,
+            _ => FleetAction::RankFail(rng.below(n_ranks)),
+        };
+        trace.push(ev(at_s, action));
+    }
+    trace
+}
+
+#[test]
+fn cog_chaos_conserves_and_reruns_identically() {
+    for seed in [1u64, 7, 99] {
+        let trace = chaos_trace(seed, 20e-3, 2, 4);
+        let mut summaries: Vec<CogSummary> = Vec::new();
+        for _ in 0..2 {
+            let mut sim = cog(Some(fab(4, 2.0)), CogSimConfig { timesteps: 4, ..ccfg() });
+            sim.with_control(&trace, None);
+            sim.run_to_completion();
+            let s = sim.summary();
+            // conservation: every submitted request is either
+            // completed (finite record), parked with no live backend,
+            // or still coalescing — nothing is silently dropped
+            let finished =
+                sim.records().iter().filter(|r| r.complete_s.is_finite()).count() as u64;
+            assert_eq!(
+                sim.submitted(),
+                finished + sim.parked() + sim.batcher_pending(),
+                "seed {seed}"
+            );
+            // exactly-once re-dispatch: one retry per orphan, never more
+            assert_eq!(s.retries, sim.orphaned(), "seed {seed}");
+            assert_cog_finite(&s, &format!("cog chaos seed {seed}"));
+            summaries.push(s);
+        }
+        assert_eq!(summaries[0], summaries[1], "seed {seed}: rerun must be identical");
+    }
+}
+
+#[test]
+fn event_chaos_conserves_and_reruns_identically() {
+    for seed in [1u64, 7, 99] {
+        let trace = chaos_trace(seed + 1000, 40e-3, 2, 4);
+        let mut summaries: Vec<EventSummary> = Vec::new();
+        for _ in 0..2 {
+            let mut sim =
+                esim(ecfg(ArrivalProcess::Poisson { rate_per_rank: 800.0 }, 0.05));
+            sim.with_control(&trace);
+            sim.run_to_completion();
+            let s = sim.summary();
+            assert_eq!(
+                s.submitted,
+                s.requests + s.failed + sim.batcher_pending(),
+                "seed {seed}"
+            );
+            // at drain the only incomplete requests are the parked ones
+            assert_eq!(s.failed, sim.parked(), "seed {seed}");
+            assert_eq!(s.retries, sim.orphaned(), "seed {seed}");
+            assert_eq!(sim.in_flight(), 0, "seed {seed}");
+            assert_event_finite(&s, &format!("event chaos seed {seed}"));
+            summaries.push(s);
+        }
+        assert_eq!(summaries[0], summaries[1], "seed {seed}: rerun must be identical");
+    }
+}
+
+#[test]
+fn repeated_leave_join_of_the_same_backend_is_idempotent() {
+    // Doubled leaves and joins are no-ops, not state corruption: the
+    // run completes every step with nothing lost.
+    let mut sim = cog(None, ccfg());
+    sim.with_control(
+        &[
+            ev(2.2e-3, FleetAction::BackendLeave(0)),
+            ev(2.2e-3, FleetAction::BackendLeave(0)),
+            ev(6e-3, FleetAction::BackendJoin(0)),
+            ev(6e-3, FleetAction::BackendJoin(0)),
+            ev(9e-3, FleetAction::BackendLeave(0)),
+            ev(12e-3, FleetAction::BackendJoin(0)),
+        ],
+        None,
+    );
+    sim.run_to_completion();
+    let s = sim.summary();
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.requests, s.submitted);
+    assert_eq!(sim.steps().len(), 8);
+    assert_eq!(s.retries, sim.orphaned());
+    assert!(sim.backend_active(0) && sim.backend_active(1));
+}
+
+#[test]
+fn degrade_restore_roundtrip_completes_cleanly() {
+    let mut base = cog(Some(fab(4, 2.0)), ccfg());
+    base.run_to_completion();
+    let mut sim = cog(Some(fab(4, 2.0)), ccfg());
+    sim.with_control(
+        &[ev(6e-3, FleetAction::LinkDegrade(0.25)), ev(20e-3, FleetAction::LinkRestore)],
+        None,
+    );
+    sim.run_to_completion();
+    let s = sim.summary();
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.retries, 0, "a brown-out orphans nothing");
+    assert_eq!(sim.steps().len(), 8);
+    // a quartered fabric can only slow the run down
+    assert!(
+        s.time_to_solution_s >= base.summary().time_to_solution_s - 1e-12,
+        "degrade {} vs static {}",
+        s.time_to_solution_s,
+        base.summary().time_to_solution_s
+    );
+    assert_cog_finite(&s, "degrade/restore");
+}
+
+// ------------------------------------------------------- autoscaler
+
+#[test]
+fn autoscaler_respects_limits_and_loses_no_work() {
+    // the two-backend pool caps max_active at the tier size
+    let auto = ControlSpec::parse("auto:2:1-2:100:1000").unwrap();
+    let mut sim = cog(Some(fab(4, 2.0)), ccfg());
+    sim.with_control(&auto.trace, auto.autoscaler);
+    // backends past `initial` start parked
+    assert_eq!(sim.active_count(), 2);
+    sim.run_to_completion();
+    let s = sim.summary();
+    assert_eq!(s.failed, 0, "scaling must not lose work");
+    assert_eq!(sim.steps().len(), 8);
+    assert!(
+        s.mean_active_backends >= 1.0 && s.mean_active_backends <= 2.0,
+        "trajectory {} outside [min_active, initial]",
+        s.mean_active_backends
+    );
+}
+
+// ---------------------------------------------- campaign + golden
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+        .join("control_summary.json")
+}
+
+fn control_json() -> String {
+    json::write(&run_control_campaign(&ControlCampaignConfig::default()).to_json())
+}
+
+#[test]
+fn control_campaign_summary_matches_committed_golden() {
+    // Same protocol as `campaign_golden.rs`: byte-compare against the
+    // committed file; regeneration only under GOLDEN_BOOTSTRAP=1.
+    let actual = control_json();
+    assert_eq!(actual, control_json(), "two identical runs must serialise identically");
+    let path = golden_path();
+    if path.exists() {
+        let golden = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            actual, golden,
+            "control summary drifted from {path:?}; if intentional, delete the \
+             golden and rerun with GOLDEN_BOOTSTRAP=1"
+        );
+    } else {
+        assert!(
+            std::env::var("GOLDEN_BOOTSTRAP").as_deref() == Ok("1"),
+            "golden file {path:?} is missing; goldens are committed artifacts — \
+             rerun with GOLDEN_BOOTSTRAP=1 to bootstrap it deliberately"
+        );
+        std::fs::write(&path, &actual).unwrap();
+        assert_eq!(control_json(), std::fs::read_to_string(&path).unwrap());
+    }
+}
+
+#[test]
+fn control_campaign_headline_pins() {
+    let r = run_control_campaign(&ControlCampaignConfig::default());
+
+    // the resilience headline: losing 1 of 4 devices costs both
+    // topologies time, but the pooled fleet — where the survivors are
+    // a shared resource every rank can reach — absorbs it better
+    // than node-local GPUs
+    let ll = r.loss_ratio("local");
+    let lp = r.loss_ratio("pooled");
+    assert!(1.0 < lp && lp < ll, "loss ratios: pooled {lp} vs local {ll}");
+
+    // the loss cells exercise real machinery: in-flight work was
+    // orphaned and re-dispatched, not quietly dropped
+    assert!(r.cell("local/leave").summary.retries > 0);
+    assert!(r.cell("pooled/leave").summary.retries > 0);
+    assert_eq!(r.cell("pooled/rankfail").summary.rank_restarts, 1);
+
+    // the autoscaler sheds idle capacity yet holds the TTS bound
+    let auto = r.autoscaler_factor();
+    assert!(
+        auto <= AUTOSCALER_BOUND,
+        "autoscaler factor {auto} above bound {AUTOSCALER_BOUND}"
+    );
+    assert!(
+        r.cell("pooled/auto").summary.mean_active_backends
+            < r.cell("pooled/static").summary.mean_active_backends
+    );
+
+    // every cell finishes all its work — failures reroute, they
+    // don't lose requests
+    for c in &r.cells {
+        assert_eq!(c.summary.failed, 0, "{}", c.label);
+        assert_eq!(c.summary.timesteps, 8, "{}", c.label);
+        assert_cog_finite(&c.summary, &c.label);
+    }
+}
