@@ -1,5 +1,7 @@
 """harness::campaign transliteration: all three modes + JSON emit."""
 
+import math
+
 import devices
 import stats
 from cluster import (ALL_POLICIES, Cluster, GpuBackend, RduBackend, LATENCY_AWARE,
@@ -300,10 +302,16 @@ def run_cog_campaign(cfg):
 
 
 def us(seconds):
+    # non-finite -> 0 (mirrors report.rs): empty-population quantiles
+    # are NaN and a golden field must never carry NaN
+    if not math.isfinite(seconds):
+        return 0.0
     return rust_round(seconds * 1e9) / 1e3
 
 
 def fixed3(v):
+    if not math.isfinite(v):
+        return 0.0
     return rust_round(v * 1e3) / 1e3
 
 

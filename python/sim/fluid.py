@@ -1,0 +1,472 @@
+"""harness::fluid transliteration: the steady-state fluid tier.
+
+Mirrors rust/src/fluid/mod.rs op-for-op so the scale golden is
+byte-exact.  The fluid tier solves one cognitive-simulation timestep in
+closed form on top of the analytic backend service models and a
+max-min-fair burst abstraction of the pooled fabric:
+
+  * requests are aggregated into per-model batches (the batching-window
+    correction), split over homogeneous fleet *classes* by the routing
+    policy's steady-state weights;
+  * each backend serves its share of batches serially; LRU swap cost
+    enters as a steady-state miss rate (IRM: ``1 - slots/models`` per
+    backend, with the model-affinity exception);
+  * the request burst and the staggered response stream cross the
+    fabric at max-min burst rates; the response concurrency is a damped
+    fixed point (completions arrive at the pool's service rate, so the
+    number of in-flight response flows must be self-consistent with the
+    per-flow rate they imply).
+
+The fluid tier models the hermit (hydra) stream only; MIR traffic is
+out of scope (validation always runs with ``mir_every = 0``).
+"""
+
+import math
+
+import devices
+import rdu as rdu_mod
+from campaign import fixed3, us
+from cluster import MODEL_AFFINITY, ROUND_ROBIN, GpuBackend, RduBackend
+from netsim import Link
+from rustfloat import rust_round
+
+FIXED_POINT_MAX_ITERS = 64
+FIXED_POINT_TOL = 1e-9
+FIXED_POINT_DAMPING = 0.5
+
+
+def fleet_classes(topology, ranks, fleet, pool_link):
+    """Homogeneous (count, backend) classes of the hermit tier.
+
+    Local: every rank owns an identical A100/TRT-CG, so one class of
+    ``ranks`` members with a zero-cost link.  Pooled/hybrid: the pool
+    members grouped by identical shape — the default fleet is the
+    4-tile-C++ / 2-tile-Python pair; ("mixed", G, R) is G remote GPUs
+    plus ceil(R/2) 4-tile and floor(R/2) 2-tile groups (the alternating
+    pool_members construction collapsed to class counts).
+    """
+    if topology == "local":
+        return [(ranks, GpuBackend("gpu/local", devices.Gpu.a100(),
+                                   devices.TRT_CUDA_GRAPHS))]
+    if fleet == "default":
+        return [
+            (1, RduBackend("rdu/pool0", 4, rdu_mod.RDU_CPP_OPT, pool_link.clone())),
+            (1, RduBackend("rdu/pool1", 2, rdu_mod.RDU_PYTHON, pool_link.clone())),
+        ]
+    _, gpus, rdus = fleet
+    assert gpus + rdus >= 1
+    classes = []
+    if gpus > 0:
+        classes.append((gpus, GpuBackend("gpu/pool", devices.Gpu.a100(),
+                                         devices.TRT_CUDA_GRAPHS, pool_link.clone())))
+    four_tile = (rdus + 1) // 2
+    two_tile = rdus // 2
+    if four_tile > 0:
+        classes.append((four_tile, RduBackend("rdu/pool-4t", 4, rdu_mod.RDU_CPP_OPT,
+                                              pool_link.clone())))
+    if two_tile > 0:
+        classes.append((two_tile, RduBackend("rdu/pool-2t", 2, rdu_mod.RDU_PYTHON,
+                                             pool_link.clone())))
+    return classes
+
+
+def burst_rate(nic, oversub, flows, n_src, n_dst):
+    """Per-flow max-min rate for a symmetric burst of `flows` flows.
+
+    Mirrors the pooled/hybrid capacity layout: per-source NIC ports,
+    source aggregation at n_src*nic/oversub, destination aggregation at
+    n_dst*nic/oversub, per-destination NIC ports.  With the flows
+    spread evenly, each port carries flows/n of them.
+    """
+    per_src = nic / max(1.0, flows / float(n_src))
+    src_agg = float(n_src) * nic / oversub / flows
+    dst_agg = float(n_dst) * nic / oversub / flows
+    per_dst = nic / max(1.0, flows / float(n_dst))
+    return min(min(per_src, src_agg), min(dst_agg, per_dst))
+
+
+def solve_cell(topology, policy, ranks, models, swap_s, overlap, oversub, cfg,
+               fleet="default"):
+    """Solve one grid cell in closed form; returns a summary dict whose
+    keys mirror FluidSummary (seconds units, like cog summaries)."""
+    profile = devices.hermit()
+    pool_link = Link.infiniband_cx6()
+    classes = fleet_classes(topology, ranks, fleet, pool_link)
+    n_backends = sum(c for c, _ in classes)
+
+    lo, hi = cfg["samples_per_request"]
+    s_mean = (float(lo) + float(hi)) / 2.0
+    requests_per_step = float(ranks) * float(cfg["requests_per_step"])
+    window_s = cfg["window_us"] * 1e-6
+
+    # -- batching-window correction: per-model aggregation ------------
+    if window_s > 0.0:
+        samples_m = requests_per_step * s_mean / float(models)
+        batches_m = max(1.0, samples_m / float(cfg["max_batch"]))
+        window_wait = window_s if samples_m < float(cfg["max_batch"]) else 0.0
+        total_batches = float(models) * batches_m
+        batch_sizes = [max(1, int(rust_round(samples_m / batches_m)))]
+        mean_batch = float(batch_sizes[0])
+    else:
+        # window off: every request is its own batch; service values
+        # are expectations over the integer sample distribution
+        total_batches = requests_per_step
+        window_wait = 0.0
+        batch_sizes = list(range(int(lo), int(hi) + 1))
+        mean_batch = s_mean
+
+    # -- per-class service rates (averaged over batch sizes) ----------
+    def averaged(f):
+        total = 0.0
+        for b in batch_sizes:
+            total += f(b)
+        return total / float(len(batch_sizes))
+
+    execs = [averaged(lambda b, be=backend: be.execute_s(profile, b))
+             for _, backend in classes]
+    occs = [averaged(lambda b, be=backend: be.occupancy_s(profile, b))
+            for _, backend in classes]
+    link_ohs = [averaged(lambda b, be=backend: be.link_overhead_s(profile, b))
+                for _, backend in classes]
+
+    # -- routing-policy load split ------------------------------------
+    # The cursor policy deals batches evenly; queue/latency-aware
+    # policies equalise backlog, so class load goes with
+    # count/occupancy.  Model affinity assigns each model to the
+    # least-queued backend at first touch, which is also speed-biased,
+    # and concentrates the whole stream on at most `models` backends.
+    # Affinity assignment happens at first touch, when every request
+    # misses: the queue the assignment reads includes the swap charge,
+    # so the speed bias washes out as swap_s grows.
+    weights = []
+    for (count, _), occ in zip(classes, occs):
+        if policy == ROUND_ROBIN:
+            weights.append(float(count))
+        elif policy == MODEL_AFFINITY:
+            weights.append(float(count) / (occ + swap_s))
+        else:
+            weights.append(float(count) / occ)
+    wsum = 0.0
+    for w in weights:
+        wsum += w
+
+    slots = float(cfg["residency_slots"])
+    per_backend_batches = []
+    per_backend_models = []
+    loaded_per_class = []
+    for (count, _), w in zip(classes, weights):
+        share = w / wsum
+        if policy == MODEL_AFFINITY:
+            loaded = min(float(count), float(models) * share)
+        else:
+            loaded = float(count)
+        loaded_per_class.append(loaded)
+        per_backend_batches.append(total_batches * share / loaded)
+        per_backend_models.append(float(models) * share / loaded)
+    loaded_total = 0.0
+    for l in loaded_per_class:
+        loaded_total += l
+
+    # -- steady-state LRU miss rate (IRM) -----------------------------
+    # Under round-robin / least-outstanding / latency-aware routing a
+    # backend eventually sees the whole model population, so the LRU
+    # hit ratio is slots/models (uniform IRM); model affinity pins each
+    # model to one backend, leaving models/loaded distinct models per
+    # loaded backend.
+    # -- straggler corrections ----------------------------------------
+    # The barrier ends a step at the MAX over backends, so the
+    # bottleneck backend carries a Gumbel-style excess over the mean:
+    # miss counts fluctuate binomially under cursor routing (fully for
+    # round-robin, half-damped when backlog-aware policies reshuffle
+    # load away from unlucky backends), and affinity's first-touch
+    # assignment leaves a multinomial imbalance in both batches and
+    # models per backend.
+    ln_loaded = math.log(loaded_total) if loaded_total > 1.0 else 0.0
+
+    def multinomial_max(mean):
+        if ln_loaded == 0.0:
+            return mean
+        return mean + math.sqrt(mean * (1.0 - 1.0 / loaded_total) * ln_loaded)
+
+    def lru_miss(models_per_backend):
+        if models_per_backend <= slots:
+            return 0.0
+        return 1.0 - slots / models_per_backend
+
+    misses = []
+    misses_strag = []
+    for m_b in per_backend_models:
+        if policy == MODEL_AFFINITY:
+            misses.append(lru_miss(m_b))
+            misses_strag.append(lru_miss(multinomial_max(m_b)))
+        else:
+            misses.append(lru_miss(float(models)))
+            misses_strag.append(lru_miss(float(models)))
+    miss_mean = 0.0
+    for (count, _), loaded, m in zip(classes, loaded_per_class, misses):
+        miss_mean += m * loaded
+    miss_mean = miss_mean / loaded_total
+
+    def straggler_miss(i, b):
+        p = misses_strag[i]
+        if policy == MODEL_AFFINITY or p <= 0.0 or p >= 1.0 or ln_loaded == 0.0:
+            return p
+        damping = 1.0 if policy == ROUND_ROBIN else 0.5
+        return min(1.0, p + damping * math.sqrt(p * (1.0 - p) * ln_loaded / b))
+
+    def straggler_batches(b):
+        if policy != MODEL_AFFINITY:
+            return b
+        return multinomial_max(b)
+
+    # -- swap cost per miss -------------------------------------------
+    # Direct (local) dispatch charges swap_s on the backend.  Over the
+    # fabric a swap is a weight transfer of swap_s * nic bytes down the
+    # shared swap path, so its duration stretches with oversubscription
+    # and with the number of concurrently-swapping pool members.
+    if topology == "local" or swap_s <= 0.0:
+        swap_cost = swap_s
+    else:
+        concurrency = 1.0 + miss_mean * (float(n_backends) - 1.0)
+        swap_cost = swap_s * max(1.0, oversub * concurrency / float(n_backends))
+
+    # -- fabric burst phase (pooled / hybrid only) --------------------
+    fixed_point_iterations = 0
+    converged = True
+    if topology == "local":
+        t_in = 0.0
+        t_out = 0.0
+        dir_fixed = 0.0
+    else:
+        nic = pool_link.eff_bandwidth
+        in_bytes = 2.0 * float(profile.input_elems) * mean_batch
+        out_bytes = 2.0 * float(profile.output_elems) * mean_batch
+        rate_in = burst_rate(nic, oversub, total_batches, ranks, n_backends)
+        t_in = in_bytes / rate_in
+        # pool service rate in batches/s: completions leave at mu, so
+        # in-flight response flows F satisfy F = mu * out_bytes/rate(F)
+        mu = 0.0
+        for (count, _), ex, m in zip(classes, execs, misses):
+            mu += float(count) / (ex + m * swap_cost)
+        flows = 1.0
+        converged = False
+        for _ in range(FIXED_POINT_MAX_ITERS):
+            fixed_point_iterations += 1
+            rate = burst_rate(nic, oversub, flows, n_backends, ranks)
+            target = mu * out_bytes / rate
+            if target < 1.0:
+                target = 1.0
+            if target > total_batches:
+                target = total_batches
+            nxt = FIXED_POINT_DAMPING * flows + (1.0 - FIXED_POINT_DAMPING) * target
+            if abs(nxt - flows) < FIXED_POINT_TOL:
+                flows = nxt
+                converged = True
+                break
+            flows = nxt
+        t_out = out_bytes / burst_rate(nic, oversub, flows, n_backends, ranks)
+        dir_fixed = pool_link.dir_fixed_s()
+
+    # -- per-class inference phase (straggler backend) ----------------
+    phases = []
+    queues = []
+    nets = []
+    swaps = []
+    for i, ((count, backend), b_c) in enumerate(zip(classes, per_backend_batches)):
+        b_strag = straggler_batches(b_c)
+        p_strag = straggler_miss(i, max(b_c, 1.0))
+        if topology == "local":
+            gap = occs[i] + p_strag * swap_cost
+            net = link_ohs[i]
+        else:
+            gap = execs[i] + p_strag * swap_cost
+            net = t_in + dir_fixed + t_out + dir_fixed
+        queue = window_wait + max(0.0, b_strag - 1.0) * gap
+        phase = queue + p_strag * swap_cost + net + execs[i]
+        phases.append(phase)
+        queues.append(queue)
+        nets.append(net)
+        swaps.append(p_strag * swap_cost)
+
+    bottleneck_idx = 0
+    for i in range(1, len(phases)):
+        if phases[i] > phases[bottleneck_idx]:
+            bottleneck_idx = i
+    phase_max = phases[bottleneck_idx]
+
+    # -- step assembly (mirrors the cogsim emit model) ----------------
+    compute = cfg["compute_s"]
+    emit_offset = (1.0 - overlap) * compute
+    step = max(compute, emit_offset + phase_max)
+    timesteps = cfg["timesteps"]
+    tts = step * float(timesteps)
+
+    # -- request quantiles: weighted per-batch-position latencies -----
+    entries = []
+    for i, ((count, _), b_c) in enumerate(zip(classes, per_backend_batches)):
+        if topology == "local":
+            gap = occs[i] + misses[i] * swap_cost
+        else:
+            gap = execs[i] + misses[i] * swap_cost
+        base = window_wait + misses[i] * swap_cost + nets[i] + execs[i]
+        k = 0
+        while True:
+            weight = loaded_per_class[i] * min(1.0, b_c - float(k))
+            if weight <= 0.0:
+                break
+            entries.append((base + float(k) * gap, weight))
+            k += 1
+    entries.sort(key=lambda e: e[0])
+    total_weight = 0.0
+    for _, w in entries:
+        total_weight += w
+
+    def weighted_quantile(q):
+        thresh = q / 100.0 * total_weight
+        cum = 0.0
+        for latency, w in entries:
+            cum += w
+            if cum >= thresh:
+                return latency
+        return entries[-1][0]
+
+    p50 = weighted_quantile(50.0)
+    p99 = weighted_quantile(99.0)
+
+    return {
+        "ranks": ranks,
+        "timesteps": timesteps,
+        "requests": ranks * cfg["requests_per_step"] * timesteps,
+        "samples": int(rust_round(requests_per_step * s_mean)) * timesteps,
+        "batches": int(rust_round(total_batches)) * timesteps,
+        "time_to_solution_s": tts,
+        "mean_step_s": step,
+        "total_compute_s": emit_offset * float(timesteps),
+        "total_queue_s": queues[bottleneck_idx] * float(timesteps),
+        "total_swap_s": swaps[bottleneck_idx] * float(timesteps),
+        "total_network_s": nets[bottleneck_idx] * float(timesteps),
+        "total_service_s": execs[bottleneck_idx] * float(timesteps),
+        "p50_s": p50,
+        "p99_s": p99,
+        "fixed_point_iterations": fixed_point_iterations,
+        "converged": converged,
+        "bottleneck": classes[bottleneck_idx][1].name,
+    }
+
+
+# ------------------------------------------------------ scale campaign
+
+
+def default_scale_cfg():
+    return {
+        "rank_counts": [64, 256, 1024, 4096, 16384],
+        "pool_sizes": [8, 16, 32, 64, 128, 256, 512],
+        "policy": ROUND_ROBIN,
+        "oversub": 4.0,
+        "models_per_rank": 8,
+        "swap_s": 2e-3,
+        "overlap": 0.0,
+        "timesteps": 8,
+        "compute_s": 2e-3,
+        "requests_per_step": 6,
+        "samples_per_request": (2, 3),
+        "residency_slots": 4,
+        "window_us": 0.0,
+        "max_batch": 256,
+    }
+
+
+def smoke_scale_cfg():
+    cfg = default_scale_cfg()
+    cfg["rank_counts"] = [64, 1024]
+    cfg["pool_sizes"] = [8, 64]
+    return cfg
+
+
+def run_scale_campaign(cfg):
+    rows = []
+    for ranks in cfg["rank_counts"]:
+        local = solve_cell("local", cfg["policy"], ranks, cfg["models_per_rank"],
+                           cfg["swap_s"], cfg["overlap"], 1.0, cfg)
+        pools = []
+        crossover = None
+        for pool in cfg["pool_sizes"]:
+            s = solve_cell("pooled", cfg["policy"], ranks, cfg["models_per_rank"],
+                           cfg["swap_s"], cfg["overlap"], cfg["oversub"], cfg,
+                           fleet=("mixed", 0, pool))
+            pools.append((pool, s))
+            if crossover is None and s["time_to_solution_s"] <= local["time_to_solution_s"]:
+                crossover = pool
+        rows.append({"ranks": ranks, "local": local, "pools": pools,
+                     "crossover_pool": crossover})
+    return {"config": cfg, "rows": rows}
+
+
+# ------------------------------------------------------------- JSON
+
+
+def fluid_summary_json(s):
+    return {
+        "ranks": float(s["ranks"]),
+        "timesteps": float(s["timesteps"]),
+        "requests": float(s["requests"]),
+        "samples": float(s["samples"]),
+        "batches": float(s["batches"]),
+        "time_to_solution_us": us(s["time_to_solution_s"]),
+        "mean_step_us": us(s["mean_step_s"]),
+        "total_compute_us": us(s["total_compute_s"]),
+        "total_queue_us": us(s["total_queue_s"]),
+        "total_swap_us": us(s["total_swap_s"]),
+        "total_network_us": us(s["total_network_s"]),
+        "total_service_us": us(s["total_service_s"]),
+        "request_p50_us": us(s["p50_s"]),
+        "request_p99_us": us(s["p99_s"]),
+        "fixed_point_iterations": float(s["fixed_point_iterations"]),
+        "converged": bool(s["converged"]),
+        "bottleneck": s["bottleneck"],
+    }
+
+
+def scale_config_json(cfg):
+    return {
+        "rank_counts": [float(r) for r in cfg["rank_counts"]],
+        "pool_sizes": [float(p) for p in cfg["pool_sizes"]],
+        "policy": cfg["policy"],
+        "oversub": fixed3(cfg["oversub"]),
+        "models_per_rank": float(cfg["models_per_rank"]),
+        "swap_us": us(cfg["swap_s"]),
+        "overlap": fixed3(cfg["overlap"]),
+        "timesteps": float(cfg["timesteps"]),
+        "compute_us": us(cfg["compute_s"]),
+        "requests_per_step": float(cfg["requests_per_step"]),
+        "samples_per_request": [float(cfg["samples_per_request"][0]),
+                                float(cfg["samples_per_request"][1])],
+        "residency_slots": float(cfg["residency_slots"]),
+        "window_us": fixed3(cfg["window_us"]),
+        "max_batch": float(cfg["max_batch"]),
+    }
+
+
+def scale_row_json(row):
+    local_tts = row["local"]["time_to_solution_s"]
+    return {
+        "ranks": float(row["ranks"]),
+        "local": fluid_summary_json(row["local"]),
+        "pools": [
+            {
+                "pool": float(pool),
+                "speedup_vs_local": fixed3(local_tts / s["time_to_solution_s"]),
+                "summary": fluid_summary_json(s),
+            }
+            for pool, s in row["pools"]
+        ],
+        "crossover_pool": (float(row["crossover_pool"])
+                           if row["crossover_pool"] is not None else None),
+    }
+
+
+def scale_campaign_json(result):
+    return {
+        "config": scale_config_json(result["config"]),
+        "rows": [scale_row_json(r) for r in result["rows"]],
+    }

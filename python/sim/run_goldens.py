@@ -1,7 +1,7 @@
 """Generate the committed campaign goldens byte-exactly.
 
-Writes rust/tests/golden/{campaign,event,cogsim,control}_summary.json
-from the default configs — the same documents
+Writes rust/tests/golden/{campaign,event,cogsim,control,scale}_summary
+.json from the default configs — the same documents
 `cargo test --test campaign_golden` (and the control-plane suite)
 reproduces and compares.
 """
@@ -14,6 +14,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import campaign  # noqa: E402
 import control  # noqa: E402
+import fluid  # noqa: E402
 import jsonw  # noqa: E402
 
 REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -51,6 +52,14 @@ def main():
     doc = jsonw.write(control.control_campaign_json(control.run_control_campaign(
         control.default_control_cfg())))
     path = os.path.join(GOLDEN, "control_summary.json")
+    with open(path, "w") as f:
+        f.write(doc)
+    print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    doc = jsonw.write(fluid.scale_campaign_json(fluid.run_scale_campaign(
+        fluid.default_scale_cfg())))
+    path = os.path.join(GOLDEN, "scale_summary.json")
     with open(path, "w") as f:
         f.write(doc)
     print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")

@@ -12,8 +12,10 @@ def mean(xs):
 
 
 def percentile(xs, p):
+    # empty population -> NaN (mirrors util::stats): no observations,
+    # no quantile — the JSON writers render non-finite values as 0
     if not xs:
-        return 0.0
+        return float("nan")
     s = sorted(xs)
     rank = (p / 100.0) * float(len(s) - 1)
     import math

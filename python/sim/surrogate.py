@@ -1,0 +1,143 @@
+"""harness::surrogate transliteration: fitted grid interpolator.
+
+Mirrors rust/src/surrogate/mod.rs op-for-op.  The surrogate is fitted
+on event-engine (cog) grid results: cells sharing a categorical key
+(topology, fleet, policy, models, overlap, control) form a dense table
+over the numeric axes (ranks, oversub, swap_us, window_us), and
+predictions are clamped multilinear interpolations over that table —
+exact on training nodes, nearest-cell (clamp) outside the hull.
+
+Coordinates are raw linear values: TTS is near-affine in ranks (batch
+count scales with ranks at fixed pool) and in oversubscription (the
+swap-transfer cost scales with it), so linear beats log coordinates on
+held-out interior cells by an order of magnitude.
+"""
+
+
+def _axis_bracket(axis, x):
+    """Clamped bracketing: (lo_index, fraction in [0, 1])."""
+    n = len(axis)
+    if n == 1 or x <= axis[0]:
+        return 0, 0.0
+    if x >= axis[n - 1]:
+        return n - 2, 1.0
+    i = 0
+    while x > axis[i + 1]:
+        i += 1
+    return i, (x - axis[i]) / (axis[i + 1] - axis[i])
+
+
+class Table4:
+    """Dense 4-D table over (ranks, oversub, swap_us, window_us)."""
+
+    def __init__(self, ranks, oversubs, swaps, windows):
+        self.ranks = ranks
+        self.oversubs = oversubs
+        self.swaps = swaps
+        self.windows = windows
+        n = len(ranks) * len(oversubs) * len(swaps) * len(windows)
+        self.tts = [None] * n
+        self.p99 = [None] * n
+
+    def index(self, ir, io, isw, iw):
+        return ((ir * len(self.oversubs) + io) * len(self.swaps) + isw) \
+            * len(self.windows) + iw
+
+    def complete(self):
+        return all(v is not None for v in self.tts)
+
+    def interpolate(self, grid, ranks, oversub, swap_us, window_us):
+        ir, fr = _axis_bracket(self.ranks, ranks)
+        io, fo = _axis_bracket(self.oversubs, oversub)
+        isw, fs = _axis_bracket(self.swaps, swap_us)
+        iw, fw = _axis_bracket(self.windows, window_us)
+
+        def corner(dr, do, ds, dw):
+            jr = min(ir + dr, len(self.ranks) - 1)
+            jo = min(io + do, len(self.oversubs) - 1)
+            js = min(isw + ds, len(self.swaps) - 1)
+            jw = min(iw + dw, len(self.windows) - 1)
+            return grid[self.index(jr, jo, js, jw)]
+
+        total = 0.0
+        for dr in (0, 1):
+            wr = (1.0 - fr) if dr == 0 else fr
+            if wr == 0.0:
+                continue
+            for do in (0, 1):
+                wo = (1.0 - fo) if do == 0 else fo
+                if wo == 0.0:
+                    continue
+                for ds in (0, 1):
+                    ws = (1.0 - fs) if ds == 0 else fs
+                    if ws == 0.0:
+                        continue
+                    for dw in (0, 1):
+                        ww = (1.0 - fw) if dw == 0 else fw
+                        if ww == 0.0:
+                            continue
+                        total += wr * wo * ws * ww * corner(dr, do, ds, dw)
+        return total
+
+
+class Surrogate:
+    """Fitted interpolator over event-engine grid results."""
+
+    def __init__(self):
+        self.tables = {}
+
+    @staticmethod
+    def fit(rows):
+        """rows: iterables of dicts with keys topology, policy, models,
+        overlap, ranks, oversub, swap_us, window_us, tts_s, p99_s (plus
+        optional fleet/control keys folded into the categorical key).
+        Incomplete tables (missing grid corners) are dropped."""
+        by_key = {}
+        for row in rows:
+            key = (row["topology"], row.get("fleet", "default"), row["policy"],
+                   row["models"], row["overlap"], row.get("control", "static"))
+            by_key.setdefault(key, []).append(row)
+
+        sur = Surrogate()
+        for key, cells in by_key.items():
+            ranks = sorted({c["ranks"] for c in cells})
+            oversubs = sorted({c["oversub"] for c in cells})
+            swaps = sorted({c["swap_us"] for c in cells})
+            windows = sorted({c["window_us"] for c in cells})
+            table = Table4([float(r) for r in ranks], oversubs, swaps, windows)
+            for c in cells:
+                idx = table.index(ranks.index(c["ranks"]),
+                                  oversubs.index(c["oversub"]),
+                                  swaps.index(c["swap_us"]),
+                                  windows.index(c["window_us"]))
+                table.tts[idx] = c["tts_s"]
+                table.p99[idx] = c["p99_s"]
+            if table.complete():
+                sur.tables[key] = table
+        return sur
+
+    def predict(self, topology, policy, models, overlap, ranks, oversub,
+                swap_us, window_us, fleet="default", control="static"):
+        """(tts_s, p99_s) or None when no complete table covers the key."""
+        table = self.tables.get((topology, fleet, policy, models, overlap, control))
+        if table is None:
+            return None
+        tts = table.interpolate(table.tts, float(ranks), oversub, swap_us, window_us)
+        p99 = table.interpolate(table.p99, float(ranks), oversub, swap_us, window_us)
+        return tts, p99
+
+
+def fit_cog_campaign(result):
+    """Fit a surrogate from a run_cog_campaign result dict."""
+    rows = []
+    for s in result["scenarios"]:
+        rows.append({
+            "topology": s["topology"], "policy": s["policy"],
+            "models": s["models"], "overlap": s["overlap"],
+            "ranks": s["ranks"], "oversub": s["oversub"],
+            "swap_us": s["swap_s"] * 1e6,
+            "window_us": result["config"]["window_us"],
+            "tts_s": s["summary"]["time_to_solution_s"],
+            "p99_s": s["summary"]["latency"]["p99_s"],
+        })
+    return Surrogate.fit(rows)

@@ -10,6 +10,12 @@
 //! (open-loop EventSim) and `BENCH_cogsim.json` (coupled CogSim) at
 //! the repo root so runs can be diffed across commits.
 //!
+//! The fluid tier rides along in `BENCH_fluid.json` (cells/sec over
+//! the full 40-cell `repro scale` campaign — its reason to exist is
+//! being ~6 orders of magnitude cheaper per cell than the event
+//! engines, so a throughput regression there is a product bug, not a
+//! nicety).
+//!
 //! ```bash
 //! cargo bench --bench eventsim_bench            # full budget
 //! cargo bench --bench eventsim_bench -- --smoke # CI-sized
@@ -20,6 +26,7 @@ use std::collections::BTreeMap;
 use cogsim_disagg::cluster::{Backend, Policy, RduBackend};
 use cogsim_disagg::eventsim::{CogSim, CogSimConfig, EventSim, EventSimConfig};
 use cogsim_disagg::fabric::{FabricSpec, Topology};
+use cogsim_disagg::fluid::{run_scale_campaign, ScaleCampaignConfig};
 use cogsim_disagg::rdu::RduApi;
 use cogsim_disagg::util::bench::Bencher;
 use cogsim_disagg::util::json::{write as json_write, Value};
@@ -146,4 +153,28 @@ fn main() {
         });
     }
     write_doc("BENCH_cogsim.json", meta, results);
+
+    // --------------------------------------------------- fluid tier
+    // Always the full default campaign (40 cells, milliseconds):
+    // --smoke must not change the shape or the committed baseline
+    // stops being comparable.
+    let fluid_cfg = ScaleCampaignConfig::default();
+    let cells: u64 = fluid_cfg.rank_counts.len() as u64
+        * (1 + fluid_cfg.pool_sizes.len() as u64);
+    let r = bencher.run("fluid/scale_default", || {
+        std::hint::black_box(run_scale_campaign(&fluid_cfg));
+    });
+    let cells_per_s = cells as f64 / r.mean_secs();
+    println!("{r}");
+    println!("  -> {cells} cells/run, {cells_per_s:.0} cells/s");
+    let mut meta = BTreeMap::new();
+    meta.insert("cells".to_string(), Value::Number(cells as f64));
+    let mut m = BTreeMap::new();
+    m.insert("cells_per_run".to_string(), Value::Number(cells as f64));
+    m.insert("cells_per_s".to_string(), Value::Number(cells_per_s.round()));
+    m.insert("mean_run_us".to_string(), Value::Number((r.mean_secs() * 1e6).round()));
+    m.insert("iters".to_string(), Value::Number(r.iters as f64));
+    let mut results = BTreeMap::new();
+    results.insert("scale_default".to_string(), Value::Object(m));
+    write_doc("BENCH_fluid.json", meta, results);
 }

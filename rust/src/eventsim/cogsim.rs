@@ -333,7 +333,9 @@ impl CogSim {
         }
         if let Some(cfg) = autoscaler {
             let tier = self.core.hermit_tier().to_vec();
-            cfg.validate(tier.len());
+            // programmatic misuse panics here; user-supplied specs
+            // were already validated at the CLI/sweep boundary
+            cfg.assert_valid(tier.len());
             for &idx in tier.iter().skip(cfg.initial) {
                 self.core.control_backend_leave(idx);
             }

@@ -34,7 +34,9 @@ impl LatencyDist {
     /// entries — requests that never completed (failed, or truncated
     /// at the horizon) — are *excluded*, not recorded as 0-latency
     /// samples: quantiles describe completions only, and the caller
-    /// reports the never-completed count separately.
+    /// reports the never-completed count separately.  When nothing
+    /// completed the quantiles are NaN (`stats::percentile` on an
+    /// empty population) — the report writers render those as 0.
     pub fn from_latencies(xs: &[f64]) -> LatencyDist {
         let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
         let xs = &finite[..];
@@ -233,11 +235,21 @@ mod tests {
     }
 
     #[test]
-    fn empty_distribution_is_zeroed() {
+    fn empty_distribution_counts_zero_quantiles_nan() {
+        // no completions -> count/mean/max are honest zeros, but the
+        // quantiles are NaN (there is no p50 of nothing); the report
+        // writers render NaN fields as 0 so goldens stay finite
         let d = LatencyDist::from_latencies(&[]);
         assert_eq!(d.count, 0);
         assert_eq!(d.mean_s, 0.0);
         assert_eq!(d.max_s, 0.0);
         assert_eq!(d.overflow, 0);
+        assert!(d.p50_s.is_nan());
+        assert!(d.p99_s.is_nan());
+        // non-finite inputs are excluded, so an all-failed population
+        // behaves exactly like the empty one
+        let d = LatencyDist::from_latencies(&[f64::INFINITY, f64::NAN]);
+        assert_eq!(d.count, 0);
+        assert!(d.p999_s.is_nan());
     }
 }

@@ -1,0 +1,710 @@
+//! The steady-state **fluid tier**: closed-form queueing on the
+//! analytic backend service models plus a max-min burst abstraction of
+//! the pooled fabric — microseconds per cell instead of seconds, so a
+//! sweep reaches leadership-class rank/pool counts the event-for-event
+//! engines cannot.
+//!
+//! The fluid tier solves one cognitive-simulation timestep in closed
+//! form:
+//!
+//! * requests are aggregated into per-model batches (the
+//!   batching-window correction), split over homogeneous fleet
+//!   *classes* by the routing policy's steady-state weights;
+//! * each backend serves its share of batches serially; LRU swap cost
+//!   enters as a steady-state miss rate (IRM: `1 - slots/models` per
+//!   backend, with the model-affinity exception);
+//! * the request burst and the staggered response stream cross the
+//!   fabric at max-min burst rates; the response concurrency is a
+//!   damped fixed point (completions arrive at the pool's service
+//!   rate, so the number of in-flight response flows must be
+//!   self-consistent with the per-flow rate they imply).
+//!
+//! The fluid tier models the hermit (hydra) stream only; MIR traffic
+//! is out of scope (cross-validation always runs with `mir_every = 0`,
+//! the default).  `python/sim/fluid.py` is the op-for-op mirror; the
+//! committed scale golden (`rust/tests/golden/scale_summary.json`)
+//! pins that both produce byte-identical JSON.
+
+use crate::cluster::{Backend, GpuBackend, Policy, RduBackend};
+use crate::devices::{profiles, Api, Gpu};
+use crate::harness::scenario::{Fleet, Knobs, Topology};
+use crate::netsim::Link;
+use crate::rdu::RduApi;
+
+/// Response-flow fixed-point iteration cap.
+pub const FIXED_POINT_MAX_ITERS: usize = 64;
+/// Convergence tolerance on the in-flight flow count.
+pub const FIXED_POINT_TOL: f64 = 1e-9;
+/// Damping factor (new = d·old + (1−d)·target).
+pub const FIXED_POINT_DAMPING: f64 = 0.5;
+
+/// One solved fluid cell: the same figures the event-for-event cog
+/// summary reports, from the steady-state model.
+#[derive(Debug, Clone)]
+pub struct FluidSummary {
+    pub ranks: u64,
+    pub timesteps: u64,
+    pub requests: u64,
+    pub samples: u64,
+    pub batches: u64,
+    pub time_to_solution_s: f64,
+    pub mean_step_s: f64,
+    pub total_compute_s: f64,
+    pub total_queue_s: f64,
+    pub total_swap_s: f64,
+    pub total_network_s: f64,
+    pub total_service_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Iterations the response-flow fixed point took (0 on local).
+    pub fixed_point_iterations: u64,
+    /// Whether the fixed point met [`FIXED_POINT_TOL`] (always true
+    /// on local topologies, which have no fabric phase).
+    pub converged: bool,
+    /// Name of the bottleneck (straggler) backend class.
+    pub bottleneck: String,
+}
+
+/// Homogeneous `(count, backend)` classes of the hermit tier.
+///
+/// Local: every rank owns an identical A100/TRT-CG, so one class of
+/// `ranks` members with a zero-cost link.  Pooled/hybrid: the pool
+/// members grouped by identical shape — the default fleet is the
+/// 4-tile-C++ / 2-tile-Python pair; `Mixed { gpus, rdus }` is `gpus`
+/// remote GPUs plus `ceil(rdus/2)` 4-tile and `floor(rdus/2)` 2-tile
+/// groups (the alternating [`crate::harness::build_fleet`] pool
+/// construction collapsed to class counts).
+pub fn fleet_classes(
+    topology: Topology,
+    ranks: usize,
+    fleet: Fleet,
+    pool_link: &Link,
+) -> Vec<(usize, Box<dyn Backend>)> {
+    if topology == Topology::Local {
+        return vec![(
+            ranks,
+            Box::new(GpuBackend::node_local("gpu/local", Gpu::a100(), Api::TrtCudaGraphs)),
+        )];
+    }
+    let (gpus, rdus) = match fleet {
+        Fleet::DefaultPool => {
+            return vec![
+                (
+                    1,
+                    Box::new(RduBackend::with_link(
+                        "rdu/pool0",
+                        4,
+                        RduApi::CppOptimized,
+                        pool_link.clone(),
+                    )) as Box<dyn Backend>,
+                ),
+                (
+                    1,
+                    Box::new(RduBackend::with_link(
+                        "rdu/pool1",
+                        2,
+                        RduApi::Python,
+                        pool_link.clone(),
+                    )),
+                ),
+            ];
+        }
+        Fleet::Mixed { gpus, rdus } => (gpus as usize, rdus as usize),
+    };
+    assert!(gpus + rdus >= 1, "mixed fleet needs members");
+    let mut classes: Vec<(usize, Box<dyn Backend>)> = Vec::new();
+    if gpus > 0 {
+        classes.push((
+            gpus,
+            Box::new(GpuBackend::remote(
+                "gpu/pool",
+                Gpu::a100(),
+                Api::TrtCudaGraphs,
+                pool_link.clone(),
+            )),
+        ));
+    }
+    let four_tile = (rdus + 1) / 2;
+    let two_tile = rdus / 2;
+    if four_tile > 0 {
+        classes.push((
+            four_tile,
+            Box::new(RduBackend::with_link(
+                "rdu/pool-4t",
+                4,
+                RduApi::CppOptimized,
+                pool_link.clone(),
+            )),
+        ));
+    }
+    if two_tile > 0 {
+        classes.push((
+            two_tile,
+            Box::new(RduBackend::with_link(
+                "rdu/pool-2t",
+                2,
+                RduApi::Python,
+                pool_link.clone(),
+            )),
+        ));
+    }
+    classes
+}
+
+/// Per-flow max-min rate for a symmetric burst of `flows` flows.
+///
+/// Mirrors the pooled/hybrid capacity layout: per-source NIC ports,
+/// source aggregation at `n_src·nic/oversub`, destination aggregation
+/// at `n_dst·nic/oversub`, per-destination NIC ports.  With the flows
+/// spread evenly, each port carries `flows/n` of them.
+pub fn burst_rate(nic: f64, oversub: f64, flows: f64, n_src: usize, n_dst: usize) -> f64 {
+    let per_src = nic / (flows / n_src as f64).max(1.0);
+    let src_agg = n_src as f64 * nic / oversub / flows;
+    let dst_agg = n_dst as f64 * nic / oversub / flows;
+    let per_dst = nic / (flows / n_dst as f64).max(1.0);
+    f64::min(f64::min(per_src, src_agg), f64::min(dst_agg, per_dst))
+}
+
+fn averaged(batch_sizes: &[usize], f: impl Fn(usize) -> f64) -> f64 {
+    let mut total = 0.0;
+    for &b in batch_sizes {
+        total += f(b);
+    }
+    total / batch_sizes.len() as f64
+}
+
+/// Solve one grid cell in closed form.  The knobs consumed are
+/// `samples_per_request`, `requests_per_step`, `max_batch`,
+/// `residency_slots`, `timesteps` and `compute_s`; `window_us` rides
+/// in separately because it is a grid axis, not a knob.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_cell(
+    topology: Topology,
+    fleet: Fleet,
+    policy: Policy,
+    ranks: usize,
+    models: usize,
+    swap_s: f64,
+    overlap: f64,
+    oversub: f64,
+    window_us: f64,
+    knobs: &Knobs,
+) -> FluidSummary {
+    let profile = profiles::hermit();
+    let pool_link = Link::infiniband_cx6();
+    let classes = fleet_classes(topology, ranks, fleet, &pool_link);
+    let n_backends: usize = classes.iter().map(|(c, _)| c).sum();
+
+    let (lo, hi) = knobs.samples_per_request;
+    let s_mean = (lo as f64 + hi as f64) / 2.0;
+    let requests_per_step = ranks as f64 * knobs.requests_per_step as f64;
+    let window_s = window_us * 1e-6;
+
+    // -- batching-window correction: per-model aggregation ------------
+    let (total_batches, window_wait, batch_sizes, mean_batch) = if window_s > 0.0 {
+        let samples_m = requests_per_step * s_mean / models as f64;
+        let batches_m = (samples_m / knobs.max_batch as f64).max(1.0);
+        let wait = if samples_m < knobs.max_batch as f64 { window_s } else { 0.0 };
+        let sizes = vec![((samples_m / batches_m).round() as usize).max(1)];
+        let mean = sizes[0] as f64;
+        (models as f64 * batches_m, wait, sizes, mean)
+    } else {
+        // window off: every request is its own batch; service values
+        // are expectations over the integer sample distribution
+        (requests_per_step, 0.0, (lo..=hi).collect::<Vec<usize>>(), s_mean)
+    };
+
+    // -- per-class service rates (averaged over batch sizes) ----------
+    let execs: Vec<f64> = classes
+        .iter()
+        .map(|(_, be)| averaged(&batch_sizes, |b| be.execute_s(&profile, b)))
+        .collect();
+    let occs: Vec<f64> = classes
+        .iter()
+        .map(|(_, be)| averaged(&batch_sizes, |b| be.occupancy_s(&profile, b)))
+        .collect();
+    let link_ohs: Vec<f64> = classes
+        .iter()
+        .map(|(_, be)| averaged(&batch_sizes, |b| be.link_overhead_s(&profile, b)))
+        .collect();
+
+    // -- routing-policy load split ------------------------------------
+    // The cursor policy deals batches evenly; queue/latency-aware
+    // policies equalise backlog, so class load goes with
+    // count/occupancy.  Model affinity assigns each model to the
+    // least-queued backend at first touch, which is also speed-biased,
+    // and concentrates the whole stream on at most `models` backends.
+    // Affinity assignment happens at first touch, when every request
+    // misses: the queue the assignment reads includes the swap charge,
+    // so the speed bias washes out as swap_s grows.
+    let weights: Vec<f64> = classes
+        .iter()
+        .zip(&occs)
+        .map(|((count, _), occ)| match policy {
+            Policy::RoundRobin => *count as f64,
+            Policy::ModelAffinity => *count as f64 / (occ + swap_s),
+            _ => *count as f64 / occ,
+        })
+        .collect();
+    let mut wsum = 0.0;
+    for w in &weights {
+        wsum += w;
+    }
+
+    let slots = knobs.residency_slots as f64;
+    let mut per_backend_batches = Vec::new();
+    let mut per_backend_models = Vec::new();
+    let mut loaded_per_class = Vec::new();
+    for ((count, _), w) in classes.iter().zip(&weights) {
+        let share = w / wsum;
+        let loaded = if policy == Policy::ModelAffinity {
+            (*count as f64).min(models as f64 * share)
+        } else {
+            *count as f64
+        };
+        loaded_per_class.push(loaded);
+        per_backend_batches.push(total_batches * share / loaded);
+        per_backend_models.push(models as f64 * share / loaded);
+    }
+    let mut loaded_total = 0.0;
+    for l in &loaded_per_class {
+        loaded_total += l;
+    }
+
+    // -- steady-state LRU miss rate (IRM) -----------------------------
+    // Under round-robin / least-outstanding / latency-aware routing a
+    // backend eventually sees the whole model population, so the LRU
+    // hit ratio is slots/models (uniform IRM); model affinity pins
+    // each model to one backend, leaving models/loaded distinct models
+    // per loaded backend.
+    // -- straggler corrections ----------------------------------------
+    // The barrier ends a step at the MAX over backends, so the
+    // bottleneck backend carries a Gumbel-style excess over the mean:
+    // miss counts fluctuate binomially under cursor routing (fully for
+    // round-robin, half-damped when backlog-aware policies reshuffle
+    // load away from unlucky backends), and affinity's first-touch
+    // assignment leaves a multinomial imbalance in both batches and
+    // models per backend.
+    let ln_loaded = if loaded_total > 1.0 { loaded_total.ln() } else { 0.0 };
+
+    let multinomial_max = |mean: f64| {
+        if ln_loaded == 0.0 {
+            mean
+        } else {
+            mean + (mean * (1.0 - 1.0 / loaded_total) * ln_loaded).sqrt()
+        }
+    };
+
+    let lru_miss = |models_per_backend: f64| {
+        if models_per_backend <= slots {
+            0.0
+        } else {
+            1.0 - slots / models_per_backend
+        }
+    };
+
+    let mut misses = Vec::new();
+    let mut misses_strag = Vec::new();
+    for &m_b in &per_backend_models {
+        if policy == Policy::ModelAffinity {
+            misses.push(lru_miss(m_b));
+            misses_strag.push(lru_miss(multinomial_max(m_b)));
+        } else {
+            misses.push(lru_miss(models as f64));
+            misses_strag.push(lru_miss(models as f64));
+        }
+    }
+    let mut miss_mean = 0.0;
+    for (loaded, m) in loaded_per_class.iter().zip(&misses) {
+        miss_mean += m * loaded;
+    }
+    miss_mean /= loaded_total;
+
+    let straggler_miss = |i: usize, b: f64| {
+        let p = misses_strag[i];
+        if policy == Policy::ModelAffinity || p <= 0.0 || p >= 1.0 || ln_loaded == 0.0 {
+            return p;
+        }
+        let damping = if policy == Policy::RoundRobin { 1.0 } else { 0.5 };
+        (p + damping * (p * (1.0 - p) * ln_loaded / b).sqrt()).min(1.0)
+    };
+
+    let straggler_batches = |b: f64| {
+        if policy != Policy::ModelAffinity {
+            b
+        } else {
+            multinomial_max(b)
+        }
+    };
+
+    // -- swap cost per miss -------------------------------------------
+    // Direct (local) dispatch charges swap_s on the backend.  Over the
+    // fabric a swap is a weight transfer of swap_s * nic bytes down
+    // the shared swap path, so its duration stretches with
+    // oversubscription and with the number of concurrently-swapping
+    // pool members.
+    let swap_cost = if topology == Topology::Local || swap_s <= 0.0 {
+        swap_s
+    } else {
+        let concurrency = 1.0 + miss_mean * (n_backends as f64 - 1.0);
+        swap_s * (oversub * concurrency / n_backends as f64).max(1.0)
+    };
+
+    // -- fabric burst phase (pooled / hybrid only) --------------------
+    let mut fixed_point_iterations = 0u64;
+    let mut converged = true;
+    let (t_in, t_out, dir_fixed) = if topology == Topology::Local {
+        (0.0, 0.0, 0.0)
+    } else {
+        let nic = pool_link.eff_bandwidth;
+        let in_bytes = 2.0 * profile.input_elems as f64 * mean_batch;
+        let out_bytes = 2.0 * profile.output_elems as f64 * mean_batch;
+        let rate_in = burst_rate(nic, oversub, total_batches, ranks, n_backends);
+        // pool service rate in batches/s: completions leave at mu, so
+        // in-flight response flows F satisfy F = mu * out_bytes/rate(F)
+        let mut mu = 0.0;
+        for (((count, _), ex), m) in classes.iter().zip(&execs).zip(&misses) {
+            mu += *count as f64 / (ex + m * swap_cost);
+        }
+        let mut flows = 1.0;
+        converged = false;
+        for _ in 0..FIXED_POINT_MAX_ITERS {
+            fixed_point_iterations += 1;
+            let rate = burst_rate(nic, oversub, flows, n_backends, ranks);
+            let mut target = mu * out_bytes / rate;
+            if target < 1.0 {
+                target = 1.0;
+            }
+            if target > total_batches {
+                target = total_batches;
+            }
+            let nxt = FIXED_POINT_DAMPING * flows + (1.0 - FIXED_POINT_DAMPING) * target;
+            if (nxt - flows).abs() < FIXED_POINT_TOL {
+                flows = nxt;
+                converged = true;
+                break;
+            }
+            flows = nxt;
+        }
+        let t_out = out_bytes / burst_rate(nic, oversub, flows, n_backends, ranks);
+        (in_bytes / rate_in, t_out, pool_link.dir_fixed_s())
+    };
+
+    // -- per-class inference phase (straggler backend) ----------------
+    let mut phases = Vec::new();
+    let mut queues = Vec::new();
+    let mut nets = Vec::new();
+    let mut swaps = Vec::new();
+    for (i, b_c) in per_backend_batches.iter().enumerate() {
+        let b_strag = straggler_batches(*b_c);
+        let p_strag = straggler_miss(i, b_c.max(1.0));
+        let (gap, net) = if topology == Topology::Local {
+            (occs[i] + p_strag * swap_cost, link_ohs[i])
+        } else {
+            (execs[i] + p_strag * swap_cost, t_in + dir_fixed + t_out + dir_fixed)
+        };
+        let queue = window_wait + (b_strag - 1.0).max(0.0) * gap;
+        let phase = queue + p_strag * swap_cost + net + execs[i];
+        phases.push(phase);
+        queues.push(queue);
+        nets.push(net);
+        swaps.push(p_strag * swap_cost);
+    }
+
+    let mut bottleneck_idx = 0;
+    for i in 1..phases.len() {
+        if phases[i] > phases[bottleneck_idx] {
+            bottleneck_idx = i;
+        }
+    }
+    let phase_max = phases[bottleneck_idx];
+
+    // -- step assembly (mirrors the cogsim emit model) ----------------
+    let compute = knobs.compute_s;
+    let emit_offset = (1.0 - overlap) * compute;
+    let step = compute.max(emit_offset + phase_max);
+    let timesteps = knobs.timesteps;
+    let tts = step * timesteps as f64;
+
+    // -- request quantiles: weighted per-batch-position latencies -----
+    let mut entries: Vec<(f64, f64)> = Vec::new();
+    for (i, b_c) in per_backend_batches.iter().enumerate() {
+        let gap = if topology == Topology::Local {
+            occs[i] + misses[i] * swap_cost
+        } else {
+            execs[i] + misses[i] * swap_cost
+        };
+        let base = window_wait + misses[i] * swap_cost + nets[i] + execs[i];
+        let mut k = 0usize;
+        loop {
+            let weight = loaded_per_class[i] * (b_c - k as f64).min(1.0);
+            if weight <= 0.0 {
+                break;
+            }
+            entries.push((base + k as f64 * gap, weight));
+            k += 1;
+        }
+    }
+    entries.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite latencies"));
+    let mut total_weight = 0.0;
+    for (_, w) in &entries {
+        total_weight += w;
+    }
+
+    let weighted_quantile = |q: f64| {
+        let thresh = q / 100.0 * total_weight;
+        let mut cum = 0.0;
+        for &(latency, w) in &entries {
+            cum += w;
+            if cum >= thresh {
+                return latency;
+            }
+        }
+        entries[entries.len() - 1].0
+    };
+
+    let p50 = weighted_quantile(50.0);
+    let p99 = weighted_quantile(99.0);
+
+    FluidSummary {
+        ranks: ranks as u64,
+        timesteps: timesteps as u64,
+        requests: (ranks * knobs.requests_per_step * timesteps) as u64,
+        samples: (requests_per_step * s_mean).round() as u64 * timesteps as u64,
+        batches: total_batches.round() as u64 * timesteps as u64,
+        time_to_solution_s: tts,
+        mean_step_s: step,
+        total_compute_s: emit_offset * timesteps as f64,
+        total_queue_s: queues[bottleneck_idx] * timesteps as f64,
+        total_swap_s: swaps[bottleneck_idx] * timesteps as f64,
+        total_network_s: nets[bottleneck_idx] * timesteps as f64,
+        total_service_s: execs[bottleneck_idx] * timesteps as f64,
+        p50_s: p50,
+        p99_s: p99,
+        fixed_point_iterations,
+        converged,
+        bottleneck: classes[bottleneck_idx].1.name().to_string(),
+    }
+}
+
+// ------------------------------------------------------ scale campaign
+
+/// The scale-out study: pooled-vs-local crossover over leadership-class
+/// rank counts × pool sizes, on the fluid tier (the whole campaign
+/// runs in milliseconds).
+#[derive(Debug, Clone)]
+pub struct ScaleCampaignConfig {
+    pub rank_counts: Vec<usize>,
+    pub pool_sizes: Vec<usize>,
+    pub policy: Policy,
+    /// Fabric oversubscription of the pooled cells (local runs 1:1).
+    pub oversub: f64,
+    pub models_per_rank: usize,
+    pub swap_s: f64,
+    pub overlap: f64,
+    pub timesteps: usize,
+    pub compute_s: f64,
+    pub requests_per_step: usize,
+    pub samples_per_request: (usize, usize),
+    pub residency_slots: usize,
+    /// Batching window, µs (0 = off — the small-batch regime where
+    /// the RDU pool's small-batch latency advantage matters).
+    pub window_us: f64,
+    pub max_batch: usize,
+}
+
+impl Default for ScaleCampaignConfig {
+    fn default() -> Self {
+        ScaleCampaignConfig {
+            rank_counts: vec![64, 256, 1024, 4096, 16384],
+            pool_sizes: vec![8, 16, 32, 64, 128, 256, 512],
+            policy: Policy::RoundRobin,
+            oversub: 4.0,
+            models_per_rank: 8,
+            swap_s: 2e-3,
+            overlap: 0.0,
+            timesteps: 8,
+            compute_s: 2e-3,
+            requests_per_step: 6,
+            samples_per_request: (2, 3),
+            residency_slots: 4,
+            window_us: 0.0,
+            max_batch: 256,
+        }
+    }
+}
+
+impl ScaleCampaignConfig {
+    /// CI-sized: two rank counts, two pool sizes (8 cells).
+    pub fn smoke() -> Self {
+        ScaleCampaignConfig {
+            rank_counts: vec![64, 1024],
+            pool_sizes: vec![8, 64],
+            ..Default::default()
+        }
+    }
+
+    fn knobs(&self) -> Knobs {
+        Knobs {
+            samples_per_request: self.samples_per_request,
+            requests_per_step: self.requests_per_step,
+            max_batch: self.max_batch,
+            timesteps: self.timesteps,
+            compute_s: self.compute_s,
+            residency_slots: self.residency_slots,
+            ..Knobs::default()
+        }
+    }
+}
+
+/// One rank count's cells: the local baseline, every pooled pool size,
+/// and the crossover (smallest pool whose TTS matches local).
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub ranks: usize,
+    pub local: FluidSummary,
+    pub pools: Vec<(usize, FluidSummary)>,
+    /// Smallest swept pool with pooled TTS <= local TTS, if any.
+    pub crossover_pool: Option<usize>,
+}
+
+/// The executed scale campaign.
+#[derive(Debug, Clone)]
+pub struct ScaleCampaignResult {
+    pub config: ScaleCampaignConfig,
+    pub rows: Vec<ScaleRow>,
+}
+
+impl ScaleCampaignResult {
+    /// Row lookup by rank count.
+    pub fn row(&self, ranks: usize) -> Option<&ScaleRow> {
+        self.rows.iter().find(|r| r.ranks == ranks)
+    }
+}
+
+/// Run the scale campaign (sequential: tens of cells, microseconds
+/// each).
+pub fn run_scale_campaign(cfg: &ScaleCampaignConfig) -> ScaleCampaignResult {
+    let knobs = cfg.knobs();
+    let rows = cfg
+        .rank_counts
+        .iter()
+        .map(|&ranks| {
+            let local = solve_cell(
+                Topology::Local,
+                Fleet::DefaultPool,
+                cfg.policy,
+                ranks,
+                cfg.models_per_rank,
+                cfg.swap_s,
+                cfg.overlap,
+                1.0,
+                cfg.window_us,
+                &knobs,
+            );
+            let mut pools = Vec::new();
+            let mut crossover = None;
+            for &pool in &cfg.pool_sizes {
+                let s = solve_cell(
+                    Topology::Pooled,
+                    Fleet::Mixed { gpus: 0, rdus: pool as u16 },
+                    cfg.policy,
+                    ranks,
+                    cfg.models_per_rank,
+                    cfg.swap_s,
+                    cfg.overlap,
+                    cfg.oversub,
+                    cfg.window_us,
+                    &knobs,
+                );
+                if crossover.is_none() && s.time_to_solution_s <= local.time_to_solution_s {
+                    crossover = Some(pool);
+                }
+                pools.push((pool, s));
+            }
+            ScaleRow { ranks, local, pools, crossover_pool: crossover }
+        })
+        .collect();
+    ScaleCampaignResult { config: cfg.clone(), rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_rate_uncontended_single_flow_gets_the_nic() {
+        // one flow, plenty of ports on both sides, 1:1 fabric: the
+        // flow is NIC-limited
+        let nic = 2.1e9;
+        assert_eq!(burst_rate(nic, 1.0, 1.0, 4, 4), nic);
+        // oversubscription caps the aggregate
+        assert!(burst_rate(nic, 4.0, 8.0, 4, 4) < burst_rate(nic, 1.0, 8.0, 4, 4));
+    }
+
+    #[test]
+    fn local_cell_has_no_fabric_phase() {
+        let s = solve_cell(
+            Topology::Local,
+            Fleet::DefaultPool,
+            Policy::RoundRobin,
+            4,
+            8,
+            0.0,
+            0.0,
+            1.0,
+            0.0,
+            &Knobs::default(),
+        );
+        assert_eq!(s.total_network_s, 0.0);
+        assert_eq!(s.fixed_point_iterations, 0);
+        assert!(s.converged);
+        assert_eq!(s.bottleneck, "gpu/local");
+        assert!(s.time_to_solution_s > 0.0);
+    }
+
+    #[test]
+    fn pooled_cell_pays_the_fabric_and_converges() {
+        let s = solve_cell(
+            Topology::Pooled,
+            Fleet::DefaultPool,
+            Policy::RoundRobin,
+            4,
+            8,
+            0.0,
+            0.0,
+            1.0,
+            0.0,
+            &Knobs::default(),
+        );
+        assert!(s.total_network_s > 0.0);
+        assert!(s.converged, "fixed point must converge on the default cell");
+        assert!(s.fixed_point_iterations > 0);
+        assert!(s.p99_s >= s.p50_s);
+    }
+
+    #[test]
+    fn scale_campaign_covers_the_grid_and_orders_pools() {
+        let cfg = ScaleCampaignConfig::smoke();
+        let r = run_scale_campaign(&cfg);
+        assert_eq!(r.rows.len(), cfg.rank_counts.len());
+        for row in &r.rows {
+            assert_eq!(row.pools.len(), cfg.pool_sizes.len());
+            // bigger pools never hurt at fixed ranks
+            for w in row.pools.windows(2) {
+                assert!(
+                    w[1].1.time_to_solution_s <= w[0].1.time_to_solution_s + 1e-12,
+                    "ranks {}: pool {} slower than pool {}",
+                    row.ranks,
+                    w[1].0,
+                    w[0].0
+                );
+            }
+            // the crossover marker is consistent with the cells
+            if let Some(x) = row.crossover_pool {
+                let (_, s) = row.pools.iter().find(|(p, _)| *p == x).expect("swept pool");
+                assert!(s.time_to_solution_s <= row.local.time_to_solution_s);
+            }
+        }
+    }
+}

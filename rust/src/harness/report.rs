@@ -15,6 +15,7 @@
 use std::collections::BTreeMap;
 
 use crate::eventsim::{ArrivalProcess, CogSummary, EventSummary};
+use crate::fluid::{FluidSummary, ScaleCampaignConfig, ScaleCampaignResult, ScaleRow};
 use crate::util::json::Value;
 
 use super::scenario::{Grid, Topology};
@@ -28,13 +29,20 @@ use super::table::Table;
 // ------------------------------------------------ shared scaffolding
 
 /// Microseconds at fixed 3-decimal precision (byte-stable rendering).
+///
+/// Non-finite inputs render as 0: `stats::percentile` returns NaN for
+/// an empty population (e.g. the first-attempt latency set of a
+/// fully-lossy control cell), and a golden field must never carry NaN
+/// — 0 here is the explicit "no observations" rendering, matching the
+/// pre-NaN behaviour byte-for-byte.
 fn us(seconds: f64) -> Value {
-    Value::Number((seconds * 1e9).round() / 1e3)
+    Value::Number(if seconds.is_finite() { (seconds * 1e9).round() / 1e3 } else { 0.0 })
 }
 
-/// A plain number at fixed 3-decimal precision.
+/// A plain number at fixed 3-decimal precision (non-finite -> 0, same
+/// contract as [`us`]).
 fn fixed3(v: f64) -> Value {
-    Value::Number((v * 1e3).round() / 1e3)
+    Value::Number(if v.is_finite() { (v * 1e3).round() / 1e3 } else { 0.0 })
 }
 
 fn count(v: u64) -> Value {
@@ -651,6 +659,148 @@ fn grid_config_json(grid: &Grid) -> Value {
     Value::Object(m)
 }
 
+// ------------------------------------------------------ fluid leafs
+
+fn fluid_summary_json(s: &FluidSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ranks".to_string(), count(s.ranks));
+    m.insert("timesteps".to_string(), count(s.timesteps));
+    m.insert("requests".to_string(), count(s.requests));
+    m.insert("samples".to_string(), count(s.samples));
+    m.insert("batches".to_string(), count(s.batches));
+    m.insert("time_to_solution_us".to_string(), us(s.time_to_solution_s));
+    m.insert("mean_step_us".to_string(), us(s.mean_step_s));
+    m.insert("total_compute_us".to_string(), us(s.total_compute_s));
+    m.insert("total_queue_us".to_string(), us(s.total_queue_s));
+    m.insert("total_swap_us".to_string(), us(s.total_swap_s));
+    m.insert("total_network_us".to_string(), us(s.total_network_s));
+    m.insert("total_service_us".to_string(), us(s.total_service_s));
+    m.insert("request_p50_us".to_string(), us(s.p50_s));
+    m.insert("request_p99_us".to_string(), us(s.p99_s));
+    m.insert("fixed_point_iterations".to_string(), count(s.fixed_point_iterations));
+    m.insert("converged".to_string(), Value::Bool(s.converged));
+    m.insert("bottleneck".to_string(), Value::String(s.bottleneck.clone()));
+    Value::Object(m)
+}
+
+fn scale_config_json(cfg: &ScaleCampaignConfig) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "rank_counts".to_string(),
+        Value::Array(cfg.rank_counts.iter().map(|&r| count(r as u64)).collect()),
+    );
+    m.insert(
+        "pool_sizes".to_string(),
+        Value::Array(cfg.pool_sizes.iter().map(|&p| count(p as u64)).collect()),
+    );
+    m.insert("policy".to_string(), Value::String(cfg.policy.key().to_string()));
+    m.insert("oversub".to_string(), fixed3(cfg.oversub));
+    m.insert("models_per_rank".to_string(), count(cfg.models_per_rank as u64));
+    m.insert("swap_us".to_string(), us(cfg.swap_s));
+    m.insert("overlap".to_string(), fixed3(cfg.overlap));
+    m.insert("timesteps".to_string(), count(cfg.timesteps as u64));
+    m.insert("compute_us".to_string(), us(cfg.compute_s));
+    m.insert("requests_per_step".to_string(), count(cfg.requests_per_step as u64));
+    m.insert(
+        "samples_per_request".to_string(),
+        Value::Array(vec![
+            count(cfg.samples_per_request.0 as u64),
+            count(cfg.samples_per_request.1 as u64),
+        ]),
+    );
+    m.insert("residency_slots".to_string(), count(cfg.residency_slots as u64));
+    m.insert("window_us".to_string(), fixed3(cfg.window_us));
+    m.insert("max_batch".to_string(), count(cfg.max_batch as u64));
+    Value::Object(m)
+}
+
+fn scale_row_json(row: &ScaleRow) -> Value {
+    let local_tts = row.local.time_to_solution_s;
+    let mut m = BTreeMap::new();
+    m.insert("ranks".to_string(), count(row.ranks as u64));
+    m.insert("local".to_string(), fluid_summary_json(&row.local));
+    m.insert(
+        "pools".to_string(),
+        Value::Array(
+            row.pools
+                .iter()
+                .map(|(pool, s)| {
+                    let mut p = BTreeMap::new();
+                    p.insert("pool".to_string(), count(*pool as u64));
+                    p.insert(
+                        "speedup_vs_local".to_string(),
+                        fixed3(local_tts / s.time_to_solution_s),
+                    );
+                    p.insert("summary".to_string(), fluid_summary_json(s));
+                    Value::Object(p)
+                })
+                .collect(),
+        ),
+    );
+    m.insert(
+        "crossover_pool".to_string(),
+        match row.crossover_pool {
+            Some(p) => count(p as u64),
+            None => Value::Null,
+        },
+    );
+    Value::Object(m)
+}
+
+impl ScaleCampaignResult {
+    /// Deterministic JSON document (`{config, rows}`), byte-identical
+    /// to `python/sim/fluid.py`'s `scale_campaign_json` — the
+    /// committed `scale_summary.json` golden pins both.
+    pub fn to_json(&self) -> Value {
+        let mut root = BTreeMap::new();
+        root.insert("config".to_string(), scale_config_json(&self.config));
+        root.insert(
+            "rows".to_string(),
+            Value::Array(self.rows.iter().map(scale_row_json).collect()),
+        );
+        Value::Object(root)
+    }
+
+    /// One aligned table per rank count: pooled TTS and speedup over
+    /// the swept pool sizes, with the local baseline as the first
+    /// column.
+    pub fn tables(&self) -> Vec<Table> {
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut t = Table::new(
+                    format!(
+                        "Scale[{} ranks] — crossover {}",
+                        row.ranks,
+                        row.crossover_pool
+                            .map_or("none".to_string(), |p| format!("pool {p}")),
+                    ),
+                    "fleet",
+                );
+                t.set_x(
+                    std::iter::once("local".to_string())
+                        .chain(row.pools.iter().map(|(p, _)| format!("pool{p}"))),
+                );
+                t.add_series(
+                    "tts_ms",
+                    std::iter::once(row.local.time_to_solution_s * 1e3)
+                        .chain(row.pools.iter().map(|(_, s)| s.time_to_solution_s * 1e3))
+                        .collect(),
+                );
+                t.add_series(
+                    "speedup",
+                    std::iter::once(1.0)
+                        .chain(row.pools.iter().map(|(_, s)| {
+                            row.local.time_to_solution_s / s.time_to_solution_s
+                        }))
+                        .collect(),
+                );
+                t
+            })
+            .collect()
+    }
+}
+
 impl GridResult {
     /// Deterministic JSON document: one output schema for every
     /// workload kind — each cell carries its full axis coordinates
@@ -690,6 +840,7 @@ impl GridResult {
                     }
                     CellSummary::Event(s) => event_summary_json(s),
                     CellSummary::Cog(s) => cog_summary_json(s),
+                    CellSummary::Fluid(s) => fluid_summary_json(s),
                 };
                 m.insert("summary".to_string(), summary);
                 Value::Object(m)
@@ -803,10 +954,76 @@ impl GridResult {
                                 .collect(),
                         );
                     }
+                    super::scenario::Kind::Fluid => {
+                        t.add_series(
+                            "tts_ms",
+                            rows.iter()
+                                .map(|c| {
+                                    c.fluid().map_or(f64::NAN, |s| s.time_to_solution_s * 1e3)
+                                })
+                                .collect(),
+                        );
+                        t.add_series(
+                            "network_ms",
+                            rows.iter()
+                                .map(|c| {
+                                    c.fluid().map_or(f64::NAN, |s| s.total_network_s * 1e3)
+                                })
+                                .collect(),
+                        );
+                        t.add_series(
+                            "p99_us",
+                            rows.iter()
+                                .map(|c| c.fluid().map_or(f64::NAN, |s| s.p99_s * 1e6))
+                                .collect(),
+                        );
+                    }
                 }
                 tables.push(t);
             }
         }
         tables
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eventsim::LatencyDist;
+    use crate::util::json;
+
+    #[test]
+    fn writers_render_non_finite_as_zero() {
+        // the empty-population quantile contract: stats returns NaN,
+        // the writers must render it as the explicit 0 ("no
+        // observations"), never as a NaN token in a golden
+        assert_eq!(json::write(&us(f64::NAN)), "0");
+        assert_eq!(json::write(&us(f64::INFINITY)), "0");
+        assert_eq!(json::write(&us(f64::NEG_INFINITY)), "0");
+        assert_eq!(json::write(&fixed3(f64::NAN)), "0");
+        assert_eq!(json::write(&us(1.5e-6)), "1.5");
+    }
+
+    #[test]
+    fn empty_latency_set_emits_no_nan() {
+        // a fully-lossy control cell completes zero first-attempt
+        // requests; its distribution quantiles are NaN and every
+        // rendered field must still be finite
+        let d = LatencyDist::from_latencies(&[]);
+        assert!(d.p50_s.is_nan() && d.p99_s.is_nan());
+        for v in [
+            us(d.mean_s),
+            us(d.p50_s),
+            us(d.p90_s),
+            us(d.p99_s),
+            us(d.p999_s),
+            us(d.max_s),
+        ] {
+            let text = json::write(&v);
+            assert!(
+                !text.contains("nan") && !text.contains("inf"),
+                "non-finite leaked into a golden field: {text}"
+            );
+        }
     }
 }

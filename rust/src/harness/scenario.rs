@@ -18,8 +18,9 @@
 //! oversubscription axis collapses to the single 1:1 cell and the
 //! fleet axis to the default pool (there is no pool to compose); an
 //! axis a cell's *kind* cannot observe (arrivals outside the event
-//! kind; models/swap/overlap outside the cog kind; batching windows
-//! in the analytic kind) collapses to its first value rather than
+//! kind; models/swap/overlap outside the cog and fluid kinds;
+//! batching windows in the analytic kind; timed controls outside the
+//! event-driven kinds) collapses to its first value rather than
 //! re-running identical cells.
 //!
 //! The **fleet axis** is the grid's proof of life: heterogeneous
@@ -87,8 +88,9 @@ pub enum Fleet {
     /// A mixed pool: `gpus` A100/TRT-CudaGraphs members next to
     /// `rdus` RDU tile groups (alternating 4-tile C++ / 2-tile
     /// Python), all behind the same fabric — the heterogeneous fleet
-    /// the paper's §VI leaves open.
-    Mixed { gpus: u8, rdus: u8 },
+    /// the paper's §VI leaves open.  (u16: the fluid scale campaign
+    /// sweeps pools up to 512 members.)
+    Mixed { gpus: u16, rdus: u16 },
 }
 
 impl Fleet {
@@ -138,10 +140,15 @@ pub enum Kind {
     Event,
     /// Coupled timestep model (`eventsim::cogsim::CogSim`).
     Cog,
+    /// Steady-state fluid approximation of the coupled model
+    /// (`crate::fluid`): microseconds per cell instead of seconds, so
+    /// the grid reaches leadership-class rank/pool counts the
+    /// event-for-event engines cannot.
+    Fluid,
 }
 
 impl Kind {
-    pub const ALL: [Kind; 3] = [Kind::Analytic, Kind::Event, Kind::Cog];
+    pub const ALL: [Kind; 4] = [Kind::Analytic, Kind::Event, Kind::Cog, Kind::Fluid];
 
     /// Stable snake_case key for JSON artifacts and the CLI.
     pub fn key(&self) -> &'static str {
@@ -149,6 +156,7 @@ impl Kind {
             Kind::Analytic => "analytic",
             Kind::Event => "event",
             Kind::Cog => "cog",
+            Kind::Fluid => "fluid",
         }
     }
 
@@ -157,6 +165,7 @@ impl Kind {
             "analytic" => Some(Kind::Analytic),
             "event" | "eventsim" => Some(Kind::Event),
             "cog" | "cogsim" => Some(Kind::Cog),
+            "fluid" => Some(Kind::Fluid),
             _ => None,
         }
     }
@@ -204,62 +213,117 @@ impl ControlSpec {
     ///   `LO` µs mean backlog and growing above `HI` µs
     ///
     /// Example: `leave:0@30000+join:0@60000+auto:2:1-4:100:2000`.
-    pub fn parse(s: &str) -> Option<ControlSpec> {
+    ///
+    /// Errors name the offending clause and restate the grammar, so a
+    /// CLI caller can surface them verbatim — a malformed user spec
+    /// must exit with a named error, never a panic.
+    pub fn parse(s: &str) -> Result<ControlSpec, String> {
+        let err = |clause: &str, why: &str| {
+            format!("bad clause {clause:?}: {why}; grammar: {}", Self::GRAMMAR)
+        };
         if s.is_empty() {
-            return None;
+            return Err(format!("empty spec; grammar: {}", Self::GRAMMAR));
         }
         if s == "static" {
-            return Some(ControlSpec::static_());
+            return Ok(ControlSpec::static_());
         }
         let mut trace = Vec::new();
         let mut autoscaler = None;
+        let mut seen: Vec<&str> = Vec::new();
         for part in s.split('+') {
+            if part.is_empty() {
+                return Err(err(part, "empty clause (stray '+'?)"));
+            }
+            if seen.contains(&part) {
+                return Err(err(part, "duplicate clause"));
+            }
+            seen.push(part);
+            if part == "static" {
+                return Err(err(part, "'static' must stand alone"));
+            }
             if let Some(spec) = part.strip_prefix("auto:") {
-                // INIT:MIN-MAX:LO:HI
-                let mut fields = spec.split(':');
-                let initial: usize = fields.next()?.parse().ok()?;
-                let (min_s, max_s) = fields.next()?.split_once('-')?;
-                let low_us: f64 = fields.next()?.parse().ok()?;
-                let high_us: f64 = fields.next()?.parse().ok()?;
-                if fields.next().is_some() || autoscaler.is_some() {
-                    return None;
+                if autoscaler.is_some() {
+                    return Err(err(part, "at most one auto: clause per spec"));
                 }
-                autoscaler = Some(AutoscalerCfg {
-                    initial,
-                    min_active: min_s.parse().ok()?,
-                    max_active: max_s.parse().ok()?,
-                    low_s: low_us * 1e-6,
-                    high_s: high_us * 1e-6,
-                });
+                // INIT:MIN-MAX:LO:HI
+                let fields = (|| {
+                    let mut fields = spec.split(':');
+                    let initial: usize = fields.next()?.parse().ok()?;
+                    let (min_s, max_s) = fields.next()?.split_once('-')?;
+                    let low_us: f64 = fields.next()?.parse().ok()?;
+                    let high_us: f64 = fields.next()?.parse().ok()?;
+                    if fields.next().is_some() {
+                        return None;
+                    }
+                    Some(AutoscalerCfg {
+                        initial,
+                        min_active: min_s.parse().ok()?,
+                        max_active: max_s.parse().ok()?,
+                        low_s: low_us * 1e-6,
+                        high_s: high_us * 1e-6,
+                    })
+                })();
+                let cfg = match fields {
+                    Some(cfg) => cfg,
+                    None => return Err(err(part, "want auto:INIT:MIN-MAX:LO:HI")),
+                };
+                // tier-independent bound checks fail here, at the
+                // CLI boundary; the tier-size check happens where the
+                // fleet is known (`try_run_cell_ctl`)
+                if let Err(why) = cfg.validate(usize::MAX) {
+                    return Err(err(part, &why));
+                }
+                autoscaler = Some(cfg);
                 continue;
             }
-            let (head, at_us) = part.split_once('@')?;
-            let at_us: f64 = at_us.parse().ok()?;
+            let (head, at_us) = match part.split_once('@') {
+                Some(x) => x,
+                None => return Err(err(part, "missing '@T' event time")),
+            };
+            let at_us: f64 = match at_us.parse() {
+                Ok(v) => v,
+                Err(_) => return Err(err(part, "event time is not a number")),
+            };
             if !(at_us.is_finite() && at_us >= 0.0) {
-                return None;
+                return Err(err(part, "event time must be finite and >= 0 (us)"));
             }
             let action = if head == "restore" {
                 FleetAction::LinkRestore
             } else {
-                let (verb, arg) = head.split_once(':')?;
+                let (verb, arg) = match head.split_once(':') {
+                    Some(x) => x,
+                    None => return Err(err(part, "unknown verb (or missing ':ARG')")),
+                };
+                let index = |what: &str, arg: &str| {
+                    arg.parse::<usize>()
+                        .map_err(|_| err(part, &format!("{what} is not an integer")))
+                };
                 match verb {
-                    "leave" => FleetAction::BackendLeave(arg.parse().ok()?),
-                    "join" => FleetAction::BackendJoin(arg.parse().ok()?),
-                    "rankfail" => FleetAction::RankFail(arg.parse().ok()?),
+                    "leave" => FleetAction::BackendLeave(index("backend index", arg)?),
+                    "join" => FleetAction::BackendJoin(index("backend index", arg)?),
+                    "rankfail" => FleetAction::RankFail(index("rank index", arg)?),
                     "degrade" => {
-                        let factor: f64 = arg.parse().ok()?;
+                        let factor: f64 = arg
+                            .parse()
+                            .map_err(|_| err(part, "degrade factor is not a number"))?;
                         if !(factor > 0.0 && factor.is_finite()) {
-                            return None;
+                            return Err(err(part, "degrade factor must be finite and > 0"));
                         }
                         FleetAction::LinkDegrade(factor)
                     }
-                    _ => return None,
+                    _ => return Err(err(part, "unknown verb")),
                 }
             };
             trace.push(FleetEvent { at_s: at_us * 1e-6, action });
         }
-        Some(ControlSpec { key: s.to_string(), trace, autoscaler })
+        Ok(ControlSpec { key: s.to_string(), trace, autoscaler })
     }
+
+    /// The spec grammar, restated in every parse error (and by
+    /// `repro help`).
+    pub const GRAMMAR: &'static str = "static | leave:IDX@T | join:IDX@T | \
+         degrade:FACTOR@T | restore@T | rankfail:R@T | auto:INIT:MIN-MAX:LO:HI, \
+         joined with '+', times in us";
 }
 
 /// The swept dimensions.  Axes that do not apply to a cell's kind or
@@ -290,8 +354,9 @@ pub struct Axes {
     /// all-local topology).
     pub fabric_oversubs: Vec<f64>,
     /// Control-plane schedules (event + cog kinds; the analytic
-    /// closed form has no clock for timed events, so the axis
-    /// collapses there).  Cells reference these by index
+    /// closed form and the steady-state fluid kind have no clock for
+    /// timed events, so the axis collapses there).  Cells reference
+    /// these by index
     /// ([`Scenario::control`]) so [`Scenario`] stays `Copy`.
     pub controls: Vec<ControlSpec>,
 }
@@ -477,20 +542,23 @@ impl Grid {
                                 for window_us in
                                     axis_for(kind != Kind::Analytic, &a.windows_us)
                                 {
-                                    for models in
-                                        axis_for(kind == Kind::Cog, &a.models_per_rank)
-                                    {
-                                        for swap_s in
-                                            axis_for(kind == Kind::Cog, &a.swap_costs_s)
-                                        {
-                                            for overlap in
-                                                axis_for(kind == Kind::Cog, &a.overlaps)
-                                            {
+                                    for models in axis_for(
+                                        matches!(kind, Kind::Cog | Kind::Fluid),
+                                        &a.models_per_rank,
+                                    ) {
+                                        for swap_s in axis_for(
+                                            matches!(kind, Kind::Cog | Kind::Fluid),
+                                            &a.swap_costs_s,
+                                        ) {
+                                            for overlap in axis_for(
+                                                matches!(kind, Kind::Cog | Kind::Fluid),
+                                                &a.overlaps,
+                                            ) {
                                                 for oversub in
                                                     oversubs_for(topology, &a.fabric_oversubs)
                                                 {
                                                     for control in axis_for(
-                                                        kind != Kind::Analytic,
+                                                        matches!(kind, Kind::Event | Kind::Cog),
                                                         &control_ids,
                                                     ) {
                                                         out.push(Scenario {
@@ -529,7 +597,7 @@ impl Grid {
         let join = |v: Vec<String>| v.join(",");
         vec![
             ("kinds", join(a.kinds.iter().map(|k| k.key().to_string()).collect()),
-             "workload kind per cell (analytic|event|cog)"),
+             "workload kind per cell (analytic|event|cog|fluid)"),
             ("topologies", join(a.topologies.iter().map(|t| t.key().to_string()).collect()),
              "coupling topology (local|pooled|hybrid)"),
             ("fleets", join(a.fleets.iter().map(|f| f.key()).collect()),
@@ -543,12 +611,12 @@ impl Grid {
             ("windows-us", join(a.windows_us.iter().map(|w| w.to_string()).collect()),
              "batching window in us, 0 = off (event+cog kinds)"),
             ("models", join(a.models_per_rank.iter().map(|m| m.to_string()).collect()),
-             "models per rank (cog kind)"),
+             "models per rank (cog+fluid kinds)"),
             ("swaps-us",
              join(a.swap_costs_s.iter().map(|s| (s * 1e6).to_string()).collect()),
-             "residency swap cost in us (cog kind)"),
+             "residency swap cost in us (cog+fluid kinds)"),
             ("overlaps", join(a.overlaps.iter().map(|o| o.to_string()).collect()),
-             "compute/inference overlap fraction (cog kind)"),
+             "compute/inference overlap fraction (cog+fluid kinds)"),
             ("oversubs", join(a.fabric_oversubs.iter().map(|o| o.to_string()).collect()),
              "fabric oversubscription factors; collapses to 1:1 on local"),
             ("controls", join(a.controls.iter().map(|c| c.key.clone()).collect()),
@@ -1012,9 +1080,21 @@ mod tests {
         for bad in [
             "", "bogus", "leave:0", "leave@30000", "degrade:0@1000", "degrade:-1@1000",
             "restore:1@1000", "leave:0@-5", "auto:2:1-4:100", "auto:2:1-4:100:2000+auto:1:1-2:1:2",
+            // hardening pass: stray '+', duplicate clauses, 'static'
+            // in a combination, out-of-range autoscaler bounds
+            "leave:0@5000+", "+leave:0@5000", "leave:0@5000+leave:0@5000",
+            "static+leave:0@5000", "leave:0@5000+static", "auto:5:1-4:100:2000",
+            "auto:2:0-4:100:2000", "auto:2:1-4:2000:100", "leave:0@nan",
         ] {
-            assert!(ControlSpec::parse(bad).is_none(), "{bad:?} must not parse");
+            assert!(ControlSpec::parse(bad).is_err(), "{bad:?} must not parse");
         }
+        // errors are user-facing: they name the clause and the grammar
+        let e = ControlSpec::parse("frob:1@5000").unwrap_err();
+        assert!(e.contains("\"frob:1@5000\"") && e.contains("grammar"), "{e}");
+        let e = ControlSpec::parse("leave:0@5000+leave:0@5000").unwrap_err();
+        assert!(e.contains("duplicate clause"), "{e}");
+        let e = ControlSpec::parse("auto:5:1-4:100:2000").unwrap_err();
+        assert!(e.contains("min <= initial <= max"), "{e}");
     }
 
     #[test]

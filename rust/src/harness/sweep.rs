@@ -14,6 +14,7 @@ use crate::eventsim::{
     ArrivalProcess, Batching, CogSim, CogSimConfig, CogSummary, EventSim, EventSimConfig,
     EventSummary,
 };
+use crate::fluid::{self, FluidSummary};
 use crate::netsim::Link;
 use crate::util::stats;
 use crate::workload::{HydraWorkload, MirWorkload};
@@ -70,6 +71,7 @@ pub enum CellSummary {
     Analytic(AnalyticSummary),
     Event(EventSummary),
     Cog(CogSummary),
+    Fluid(FluidSummary),
 }
 
 /// One executed grid cell.
@@ -100,6 +102,14 @@ impl CellResult {
     pub fn analytic(&self) -> Option<&AnalyticSummary> {
         match &self.summary {
             CellSummary::Analytic(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The fluid summary, if this cell ran the fluid kind.
+    pub fn fluid(&self) -> Option<&FluidSummary> {
+        match &self.summary {
+            CellSummary::Fluid(s) => Some(s),
             _ => None,
         }
     }
@@ -208,7 +218,51 @@ pub fn run_cell(sc: &Scenario, knobs: &Knobs) -> CellResult {
 /// control-plane schedule.  A static spec takes the exact legacy
 /// code path (no control hooks installed), which is what keeps the
 /// committed goldens byte-identical.
+///
+/// Panics when the control spec is invalid for this cell (e.g. the
+/// autoscaler bounds exceed the hermit tier) — programmatic callers
+/// own their specs; user-supplied specs go through
+/// [`try_run_cell_ctl`], which surfaces the violation as an error.
 pub fn run_cell_ctl(sc: &Scenario, knobs: &Knobs, ctl: &ControlSpec) -> CellResult {
+    match try_run_cell_ctl(sc, knobs, ctl) {
+        Ok(cell) => cell,
+        Err(why) => panic!("{why}"),
+    }
+}
+
+/// Validate a control spec against one cell without running it: an
+/// autoscaler whose bounds don't fit the cell's hermit tier is a user
+/// error (the spec parses fine in isolation — only the cell knows the
+/// tier size), so the CLI boundary pre-flights the whole grid with
+/// this and reports a named error instead of aborting mid-sweep.
+pub fn validate_cell_ctl(sc: &Scenario, ctl: &ControlSpec) -> Result<(), String> {
+    if sc.kind == Kind::Cog {
+        if let Some(auto) = &ctl.autoscaler {
+            let tier = match sc.topology {
+                Topology::Local => sc.ranks,
+                Topology::Pooled | Topology::Hybrid => sc.fleet.pool_size(),
+            };
+            auto.validate(tier).map_err(|why| {
+                format!(
+                    "control spec {:?} on the {} topology at {} ranks: {why}",
+                    ctl.key,
+                    sc.topology.key(),
+                    sc.ranks
+                )
+            })?;
+        }
+    }
+    Ok(())
+}
+
+/// [`run_cell_ctl`] with the [`validate_cell_ctl`] check surfaced as
+/// a `Result` instead of a panic.
+pub fn try_run_cell_ctl(
+    sc: &Scenario,
+    knobs: &Knobs,
+    ctl: &ControlSpec,
+) -> Result<CellResult, String> {
+    validate_cell_ctl(sc, ctl)?;
     let summary = match sc.kind {
         Kind::Analytic => {
             let link = derated_link(&Link::infiniband_cx6(), sc.oversub);
@@ -288,8 +342,20 @@ pub fn run_cell_ctl(sc: &Scenario, knobs: &Knobs, ctl: &ControlSpec) -> CellResu
             sim.run_to_completion();
             CellSummary::Cog(sim.summary())
         }
+        Kind::Fluid => CellSummary::Fluid(fluid::solve_cell(
+            sc.topology,
+            sc.fleet,
+            sc.policy,
+            sc.ranks,
+            sc.models,
+            sc.swap_s,
+            sc.overlap,
+            sc.oversub,
+            sc.window_us,
+            knobs,
+        )),
     };
-    CellResult { scenario: *sc, summary }
+    Ok(CellResult { scenario: *sc, summary })
 }
 
 /// Run every cell of a grid, in expansion order, on all cores.
@@ -714,7 +780,7 @@ impl ControlCampaignConfig {
             topology,
             // same device count in and out of the pool: the loss cells
             // compare like against like
-            fleet: Fleet::Mixed { gpus: self.ranks as u8, rdus: 0 },
+            fleet: Fleet::Mixed { gpus: self.ranks as u16, rdus: 0 },
             policy: self.policy,
             ranks: self.ranks,
             arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
@@ -1130,7 +1196,7 @@ mod tests {
             knobs: Knobs { timesteps: 3, horizon_s: 0.05, ..Knobs::default() },
         };
         let result = run_grid(&grid);
-        assert_eq!(result.cells.len(), 3);
+        assert_eq!(result.cells.len(), 4);
         let analytic = result.cells[0].analytic().expect("kind order");
         assert!(analytic.hydra.requests > 0);
         assert_eq!(analytic.backends.len(), 3, "2 GPUs + 1 RDU in the pool");
@@ -1139,6 +1205,34 @@ mod tests {
         let cog = result.cells[2].cog().expect("kind order");
         assert!(cog.time_to_solution_s > 0.0);
         assert!(cog.total_network_s > 0.0, "mixed pool is remote");
+        let fluid = result.cells[3].fluid().expect("kind order");
+        assert!(fluid.time_to_solution_s > 0.0);
+        assert!(fluid.total_network_s > 0.0, "mixed pool is remote");
+        assert!(fluid.converged);
+    }
+
+    #[test]
+    fn try_run_cell_ctl_rejects_oversized_autoscaler() {
+        // auto:4:1-8:... on a 2-member pool: parses fine, but the
+        // cell's hermit tier can't satisfy max_active = 8
+        let ctl = ControlSpec::parse("auto:4:1-8:100:1000").expect("parses in isolation");
+        let sc = Scenario {
+            kind: Kind::Cog,
+            topology: Topology::Pooled,
+            fleet: Fleet::DefaultPool,
+            policy: Policy::RoundRobin,
+            ranks: 4,
+            arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+            window_us: 0.0,
+            models: 8,
+            swap_s: 0.0,
+            overlap: 0.0,
+            oversub: 1.0,
+            control: 0,
+        };
+        let err = try_run_cell_ctl(&sc, &Knobs::default(), &ctl).expect_err("tier is 2");
+        assert!(err.contains("auto:4:1-8"), "names the spec: {err}");
+        assert!(err.contains("tier size"), "names the constraint: {err}");
     }
 
     // ------------------------------------------- control campaign

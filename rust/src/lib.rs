@@ -77,6 +77,16 @@
 //!   ([`harness::sweep`]), one report layer ([`harness::report`]) —
 //!   with heterogeneous mixed GPU+RDU pool fleets as a first-class
 //!   axis).
+//! * [`fluid`] — the steady-state **fluid tier**: closed-form
+//!   queueing on the analytic service models + a max-min burst model
+//!   of the fabric, microseconds per cell — the scale-out study
+//!   (`repro scale`) sweeps leadership-class rank counts (64–16 384)
+//!   against pool sizes on it, cross-validated against the event
+//!   engine with pinned error bounds (`rust/tests/fluid_props.rs`).
+//! * [`surrogate`] — a fitted surrogate of the simulator itself:
+//!   clamped multilinear interpolation over event-engine grid
+//!   results, exact on training cells and ≤ 5 % on held-out interior
+//!   cells of the pinned validation slice.
 //! * [`util`] — in-tree substrates for the offline build environment:
 //!   JSON parsing, a PCG-family RNG, statistics, and a micro-bench
 //!   harness (no serde/rand/criterion available).
@@ -90,6 +100,7 @@ pub mod coordinator;
 pub mod devices;
 pub mod eventsim;
 pub mod fabric;
+pub mod fluid;
 pub mod harness;
 pub mod metrics;
 pub mod net;
@@ -97,6 +108,7 @@ pub mod netsim;
 pub mod rdu;
 pub mod runtime;
 pub mod simcore;
+pub mod surrogate;
 pub mod util;
 pub mod workload;
 

@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
 use cogsim_disagg::eventsim::ArrivalProcess;
+use cogsim_disagg::fluid::{run_scale_campaign, ScaleCampaignConfig};
 use cogsim_disagg::harness::{
     run_control_campaign, run_figure, run_grid_threads, Axes, CampaignConfig, CogCampaignConfig,
     ControlCampaignConfig, ControlSpec, EventCampaignConfig, Fleet,
@@ -121,7 +122,7 @@ const FLAGS: &[FlagSpec] = &[
                help: "JSON output path", cmds: &["fabric"] },
     // the unified scenario grid
     FlagSpec { name: "kinds", kind: FlagKind::List, default: "cog",
-               help: "workload kinds: analytic|event|cog", cmds: &["scenario"] },
+               help: "workload kinds: analytic|event|cog|fluid", cmds: &["scenario"] },
     FlagSpec { name: "topologies", kind: FlagKind::List, default: "local,pooled",
                help: "coupling topologies: local|pooled|hybrid", cmds: &["scenario"] },
     FlagSpec { name: "fleets", kind: FlagKind::List, default: "default",
@@ -158,6 +159,11 @@ const FLAGS: &[FlagSpec] = &[
                help: "MPI ranks (= devices per fleet)", cmds: &["control"] },
     FlagSpec { name: "out", kind: FlagKind::Str, default: "results/control.json",
                help: "JSON output path", cmds: &["control"] },
+    // the fluid-tier scale-out study
+    FlagSpec { name: "smoke", kind: FlagKind::Bool, default: "",
+               help: "CI-sized sweep (2 rank counts x 2 pool sizes)", cmds: &["scale"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/scale.json",
+               help: "JSON output path", cmds: &["scale"] },
     // workload inspection
     FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "3",
                help: "timesteps to print", cmds: &["trace"] },
@@ -180,6 +186,7 @@ const COMMANDS: &[(&str, &str, &str)] = &[
     ("cogsim", "", "alias: coupled grid (time-to-solution)"),
     ("fabric", "", "alias: pooled-vs-local crossover on the cog grid"),
     ("control", "", "control-plane resilience study (failures, degrade, autoscaler)"),
+    ("scale", "", "fluid-tier scale-out study: pooled-vs-local crossover at 64-16384 ranks"),
     ("trace", "", "print a Hydra-like request trace"),
     ("info", "", "show manifest/runtime info"),
 ];
@@ -328,6 +335,7 @@ fn run() -> Result<()> {
         "cogsim" => cmd_cogsim(&args),
         "fabric" => cmd_fabric(&args),
         "control" => cmd_control(&args),
+        "scale" => cmd_scale(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         _ => unreachable!("command list checked above"),
@@ -362,6 +370,13 @@ fn execute_grid(grid: &Grid, out: &str, threads: usize) -> Result<GridResult> {
 }
 
 // ---------------------------------------------------- grid commands
+
+/// Parse one `--controls` spec, prefixing parse errors with the flag
+/// name — [`ControlSpec::parse`] already restates the grammar, so the
+/// user sees flag, clause, and grammar in one line.
+fn parse_control_flag(c: &str) -> Result<ControlSpec> {
+    ControlSpec::parse(c).map_err(|why| anyhow!("flag --controls: {why}"))
+}
 
 /// The declarative scenario grid, straight from the axis flags.
 fn cmd_scenario(args: &Args) -> Result<()> {
@@ -418,10 +433,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     axes.controls = args
         .get_list("controls")
         .iter()
-        .map(|c| {
-            ControlSpec::parse(c)
-                .ok_or_else(|| anyhow!("invalid control spec {c:?} (see `repro help`)"))
-        })
+        .map(|c| parse_control_flag(c))
         .collect::<Result<_>>()?;
 
     let mut knobs = Knobs::default();
@@ -437,6 +449,14 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         grid.axes.rank_counts.truncate(1);
         grid.knobs.timesteps = grid.knobs.timesteps.min(3);
         grid.knobs.horizon_s = grid.knobs.horizon_s.min(0.05);
+    }
+
+    // pre-flight every (cell, control) pair: an autoscaler whose
+    // bounds don't fit a cell's hermit tier must surface as a named
+    // CLI error before the sweep starts, not a mid-run abort
+    for sc in grid.cells() {
+        cogsim_disagg::harness::validate_cell_ctl(&sc, &grid.axes.control(sc.control))
+            .map_err(|why| anyhow!("flag --controls: {why}"))?;
     }
 
     if args.get_bool("list") {
@@ -686,6 +706,43 @@ fn cmd_control(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The fluid-tier scale-out study: leadership-class rank counts
+/// against pool sizes, solved in closed form — the whole campaign is
+/// milliseconds of wall time, which is the point of the fluid tier.
+fn cmd_scale(args: &Args) -> Result<()> {
+    let cfg = if args.get_bool("smoke") {
+        ScaleCampaignConfig::smoke()
+    } else {
+        ScaleCampaignConfig::default()
+    };
+    let started = Instant::now();
+    let result = run_scale_campaign(&cfg);
+    let elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    for table in result.tables() {
+        println!("{}", table.render());
+    }
+    write_json_out(&args.get("out"), &cogsim_disagg::util::json::write(&result.to_json()))?;
+
+    // The headline: where does the pooled tier catch the node-local
+    // baseline as the machine grows?
+    let largest_pool = *cfg.pool_sizes.last().expect("pool sweep is non-empty");
+    for row in &result.rows {
+        match row.crossover_pool {
+            Some(p) => println!(
+                "{:>6} ranks: pooled matches node-local from pool size {p}",
+                row.ranks
+            ),
+            None => println!(
+                "{:>6} ranks: node-local wins up to pool size {largest_pool}",
+                row.ranks
+            ),
+        }
+    }
+    let cells = result.rows.len() * (1 + cfg.pool_sizes.len());
+    println!("{cells} cells in {elapsed_ms:.1} ms");
+    Ok(())
+}
+
 // --------------------------------------------------- serving + misc
 
 /// Start the disaggregated inference server.
@@ -930,6 +987,46 @@ mod tests {
         let err = args.get_usize_list("ranks").expect_err("'32x' is not an integer");
         let msg = format!("{err:#}");
         assert!(msg.contains("--ranks") && msg.contains("32x"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_control_spec_is_a_named_cli_error() {
+        for bad in ["leave:0", "wobble:1@3", "auto:9", "degrade:zero@100"] {
+            let err = parse_control_flag(bad).expect_err("malformed spec must error");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("--controls"), "error must name the flag: {msg}");
+            assert!(msg.contains("grammar"), "error must restate the grammar: {msg}");
+        }
+    }
+
+    #[test]
+    fn empty_control_spec_is_a_named_cli_error() {
+        let err = parse_control_flag("").expect_err("empty spec must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--controls") && msg.contains("empty spec"), "{msg}");
+        // a stray '+' leaves an empty clause
+        let err = parse_control_flag("leave:0@100+").expect_err("stray '+' must error");
+        assert!(format!("{err:#}").contains("empty clause"));
+    }
+
+    #[test]
+    fn duplicate_control_clause_is_a_named_cli_error() {
+        let err = parse_control_flag("leave:0@100+leave:0@100")
+            .expect_err("duplicate clause must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--controls") && msg.contains("duplicate"), "{msg}");
+        // two autoscalers cannot combine even when spelled differently
+        let err = parse_control_flag("auto:2:1-4:100:1000+auto:1:1-2:100:1000")
+            .expect_err("second auto: clause must error");
+        assert!(format!("{err:#}").contains("auto"), "names the clause");
+    }
+
+    #[test]
+    fn well_formed_control_spec_still_parses() {
+        let spec = parse_control_flag("leave:0@30000+join:0@60000+auto:2:1-4:100:2000")
+            .expect("valid combined spec");
+        assert_eq!(spec.trace.len(), 2);
+        assert!(spec.autoscaler.is_some());
     }
 
     #[test]

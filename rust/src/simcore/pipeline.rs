@@ -174,17 +174,34 @@ pub struct AutoscalerCfg {
 }
 
 impl AutoscalerCfg {
-    pub fn validate(&self, tier: usize) {
-        assert!(self.min_active >= 1, "autoscaler must keep one backend");
-        assert!(
-            self.min_active <= self.initial && self.initial <= self.max_active,
-            "autoscaler bounds must satisfy min <= initial <= max"
-        );
-        assert!(self.max_active <= tier, "autoscaler max exceeds the tier size ({tier})");
-        assert!(
-            self.low_s >= 0.0 && self.high_s > self.low_s && self.high_s.is_finite(),
-            "autoscaler thresholds must satisfy 0 <= low < high < inf"
-        );
+    /// Check the config against a hermit tier of `tier` backends.
+    /// Returns the human-readable constraint violated, if any — a
+    /// user-supplied `auto:` spec must surface as a named CLI error,
+    /// not an abort.  (Pass `usize::MAX` as `tier` to check only the
+    /// tier-independent constraints, e.g. at parse time.)
+    pub fn validate(&self, tier: usize) -> Result<(), String> {
+        if self.min_active < 1 {
+            return Err("autoscaler must keep one backend".to_string());
+        }
+        if !(self.min_active <= self.initial && self.initial <= self.max_active) {
+            return Err("autoscaler bounds must satisfy min <= initial <= max".to_string());
+        }
+        if self.max_active > tier {
+            return Err(format!("autoscaler max exceeds the tier size ({tier})"));
+        }
+        if !(self.low_s >= 0.0 && self.high_s > self.low_s && self.high_s.is_finite()) {
+            return Err("autoscaler thresholds must satisfy 0 <= low < high < inf".to_string());
+        }
+        Ok(())
+    }
+
+    /// Panicking [`Self::validate`] for programmatic construction
+    /// (tests, hand-built configs): misuse in code is a bug, not a
+    /// user error.
+    pub fn assert_valid(&self, tier: usize) {
+        if let Err(why) = self.validate(tier) {
+            panic!("{why}");
+        }
     }
 }
 

@@ -1,0 +1,322 @@
+//! Fitted **surrogate of the simulator**: a clamped multilinear
+//! interpolator over event-engine grid results.
+//!
+//! Cells sharing a categorical key — (topology, fleet, policy, models,
+//! overlap, control) — form a dense 4-D table over the numeric axes
+//! (ranks, oversub, swap_us, window_us).  Predictions are multilinear
+//! interpolations over that table: exact on training nodes,
+//! nearest-cell (clamped) outside the convex hull, and a few hundred
+//! nanoseconds per query — cheap enough to embed in an optimiser loop
+//! where even the fluid tier is too slow.
+//!
+//! Coordinates are raw **linear** values: TTS is near-affine in ranks
+//! (the per-step batch count scales with ranks at fixed pool) and in
+//! oversubscription (the swap-transfer cost scales with it), so linear
+//! interpolation beats log coordinates on held-out interior cells by
+//! an order of magnitude.  `python/sim/surrogate.py` is the op-for-op
+//! mirror.
+
+use std::collections::BTreeMap;
+
+use crate::harness::sweep::CogCampaignResult;
+
+/// Categorical table key: (topology, fleet, policy, models,
+/// overlap-bits, control).  Overlap enters via [`f64::to_bits`] so the
+/// key is hashable/ordered; fit and predict use the same encoding, so
+/// equal floats always collide.
+pub type TableKey = (String, String, String, usize, u64, String);
+
+/// One training cell for [`Surrogate::fit`].
+#[derive(Debug, Clone)]
+pub struct SurrogateRow {
+    pub topology: String,
+    pub fleet: String,
+    pub policy: String,
+    pub models: usize,
+    pub overlap: f64,
+    pub control: String,
+    pub ranks: f64,
+    pub oversub: f64,
+    pub swap_us: f64,
+    pub window_us: f64,
+    pub tts_s: f64,
+    pub p99_s: f64,
+}
+
+/// Clamped bracketing: `(lo_index, fraction in [0, 1])`.
+fn axis_bracket(axis: &[f64], x: f64) -> (usize, f64) {
+    let n = axis.len();
+    if n == 1 || x <= axis[0] {
+        return (0, 0.0);
+    }
+    if x >= axis[n - 1] {
+        return (n - 2, 1.0);
+    }
+    let mut i = 0;
+    while x > axis[i + 1] {
+        i += 1;
+    }
+    (i, (x - axis[i]) / (axis[i + 1] - axis[i]))
+}
+
+/// Dense 4-D table over (ranks, oversub, swap_us, window_us).
+#[derive(Debug, Clone)]
+pub struct Table4 {
+    ranks: Vec<f64>,
+    oversubs: Vec<f64>,
+    swaps: Vec<f64>,
+    windows: Vec<f64>,
+    tts: Vec<f64>,
+    p99: Vec<f64>,
+}
+
+impl Table4 {
+    fn index(&self, ir: usize, io: usize, isw: usize, iw: usize) -> usize {
+        ((ir * self.oversubs.len() + io) * self.swaps.len() + isw) * self.windows.len() + iw
+    }
+
+    fn interpolate(&self, grid: &[f64], ranks: f64, oversub: f64, swap_us: f64, window_us: f64) -> f64 {
+        let (ir, fr) = axis_bracket(&self.ranks, ranks);
+        let (io, fo) = axis_bracket(&self.oversubs, oversub);
+        let (isw, fs) = axis_bracket(&self.swaps, swap_us);
+        let (iw, fw) = axis_bracket(&self.windows, window_us);
+
+        let corner = |dr: usize, do_: usize, ds: usize, dw: usize| {
+            let jr = (ir + dr).min(self.ranks.len() - 1);
+            let jo = (io + do_).min(self.oversubs.len() - 1);
+            let js = (isw + ds).min(self.swaps.len() - 1);
+            let jw = (iw + dw).min(self.windows.len() - 1);
+            grid[self.index(jr, jo, js, jw)]
+        };
+
+        let mut total = 0.0;
+        for dr in 0..2usize {
+            let wr = if dr == 0 { 1.0 - fr } else { fr };
+            if wr == 0.0 {
+                continue;
+            }
+            for do_ in 0..2usize {
+                let wo = if do_ == 0 { 1.0 - fo } else { fo };
+                if wo == 0.0 {
+                    continue;
+                }
+                for ds in 0..2usize {
+                    let ws = if ds == 0 { 1.0 - fs } else { fs };
+                    if ws == 0.0 {
+                        continue;
+                    }
+                    for dw in 0..2usize {
+                        let ww = if dw == 0 { 1.0 - fw } else { fw };
+                        if ww == 0.0 {
+                            continue;
+                        }
+                        total += wr * wo * ws * ww * corner(dr, do_, ds, dw);
+                    }
+                }
+            }
+        }
+        total
+    }
+}
+
+fn sorted_distinct(values: impl Iterator<Item = f64>) -> Vec<f64> {
+    let mut out: Vec<f64> = values.collect();
+    out.sort_by(|a, b| a.partial_cmp(b).expect("finite axis values"));
+    out.dedup();
+    out
+}
+
+fn axis_index(axis: &[f64], x: f64) -> usize {
+    axis.iter().position(|&v| v == x).expect("cell on a fitted axis")
+}
+
+/// Fitted interpolator over event-engine grid results.
+#[derive(Debug, Clone, Default)]
+pub struct Surrogate {
+    tables: BTreeMap<TableKey, Table4>,
+}
+
+impl Surrogate {
+    /// Fit from training cells.  Rows sharing a categorical key form a
+    /// table over the distinct numeric coordinates they cover; tables
+    /// with missing grid corners are dropped (the surrogate answers
+    /// `None` for those keys rather than extrapolating from holes).
+    pub fn fit(rows: &[SurrogateRow]) -> Surrogate {
+        let mut by_key: BTreeMap<TableKey, Vec<&SurrogateRow>> = BTreeMap::new();
+        for row in rows {
+            let key = (
+                row.topology.clone(),
+                row.fleet.clone(),
+                row.policy.clone(),
+                row.models,
+                row.overlap.to_bits(),
+                row.control.clone(),
+            );
+            by_key.entry(key).or_default().push(row);
+        }
+
+        let mut sur = Surrogate::default();
+        for (key, cells) in by_key {
+            let ranks = sorted_distinct(cells.iter().map(|c| c.ranks));
+            let oversubs = sorted_distinct(cells.iter().map(|c| c.oversub));
+            let swaps = sorted_distinct(cells.iter().map(|c| c.swap_us));
+            let windows = sorted_distinct(cells.iter().map(|c| c.window_us));
+            let n = ranks.len() * oversubs.len() * swaps.len() * windows.len();
+            let mut tts: Vec<Option<f64>> = vec![None; n];
+            let mut p99: Vec<Option<f64>> = vec![None; n];
+            let table = Table4 {
+                ranks: ranks.clone(),
+                oversubs: oversubs.clone(),
+                swaps: swaps.clone(),
+                windows: windows.clone(),
+                tts: Vec::new(),
+                p99: Vec::new(),
+            };
+            for c in &cells {
+                let idx = table.index(
+                    axis_index(&ranks, c.ranks),
+                    axis_index(&oversubs, c.oversub),
+                    axis_index(&swaps, c.swap_us),
+                    axis_index(&windows, c.window_us),
+                );
+                tts[idx] = Some(c.tts_s);
+                p99[idx] = Some(c.p99_s);
+            }
+            if tts.iter().all(|v| v.is_some()) {
+                let table = Table4 {
+                    tts: tts.into_iter().map(|v| v.expect("checked complete")).collect(),
+                    p99: p99.into_iter().map(|v| v.unwrap_or(0.0)).collect(),
+                    ..table
+                };
+                sur.tables.insert(key, table);
+            }
+        }
+        sur
+    }
+
+    /// Number of complete fitted tables.
+    pub fn table_count(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// `(tts_s, p99_s)`, or `None` when no complete table covers the
+    /// categorical key.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict(
+        &self,
+        topology: &str,
+        policy: &str,
+        models: usize,
+        overlap: f64,
+        ranks: f64,
+        oversub: f64,
+        swap_us: f64,
+        window_us: f64,
+        fleet: &str,
+        control: &str,
+    ) -> Option<(f64, f64)> {
+        let key = (
+            topology.to_string(),
+            fleet.to_string(),
+            policy.to_string(),
+            models,
+            overlap.to_bits(),
+            control.to_string(),
+        );
+        let table = self.tables.get(&key)?;
+        let tts = table.interpolate(&table.tts, ranks, oversub, swap_us, window_us);
+        let p99 = table.interpolate(&table.p99, ranks, oversub, swap_us, window_us);
+        Some((tts, p99))
+    }
+}
+
+/// Fit a surrogate from a coupled-sweep ([`CogCampaignResult`]) run.
+pub fn fit_cog_campaign(result: &CogCampaignResult) -> Surrogate {
+    let rows: Vec<SurrogateRow> = result
+        .scenarios
+        .iter()
+        .map(|s| SurrogateRow {
+            topology: s.topology.key().to_string(),
+            fleet: "default".to_string(),
+            policy: s.policy.key().to_string(),
+            models: s.models,
+            overlap: s.overlap,
+            control: "static".to_string(),
+            ranks: s.ranks as f64,
+            oversub: s.oversub,
+            swap_us: s.swap_s * 1e6,
+            window_us: result.config.window_us,
+            tts_s: s.summary.time_to_solution_s,
+            p99_s: s.summary.latency.p99_s,
+        })
+        .collect();
+    Surrogate::fit(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_rows() -> Vec<SurrogateRow> {
+        let mut rows = Vec::new();
+        for &ranks in &[4.0, 32.0] {
+            for &oversub in &[1.0, 4.0] {
+                rows.push(SurrogateRow {
+                    topology: "pooled".into(),
+                    fleet: "default".into(),
+                    policy: "round_robin".into(),
+                    models: 8,
+                    overlap: 0.0,
+                    control: "static".into(),
+                    ranks,
+                    oversub,
+                    swap_us: 0.0,
+                    window_us: 0.0,
+                    // affine in both axes, so interpolation is exact
+                    tts_s: 1.0 + 0.5 * ranks + 2.0 * oversub,
+                    p99_s: 0.1 * ranks,
+                });
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn exact_on_training_nodes_and_affine_interiors() {
+        let sur = Surrogate::fit(&grid_rows());
+        assert_eq!(sur.table_count(), 1);
+        let (tts, p99) = sur
+            .predict("pooled", "round_robin", 8, 0.0, 4.0, 1.0, 0.0, 0.0, "default", "static")
+            .expect("fitted key");
+        assert!((tts - 5.0).abs() < 1e-12);
+        assert!((p99 - 0.4).abs() < 1e-12);
+        // interior of an affine surface is reproduced exactly
+        let (tts, _) = sur
+            .predict("pooled", "round_robin", 8, 0.0, 18.0, 2.5, 0.0, 0.0, "default", "static")
+            .expect("fitted key");
+        assert!((tts - (1.0 + 0.5 * 18.0 + 2.0 * 2.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_outside_the_hull() {
+        let sur = Surrogate::fit(&grid_rows());
+        let lo = sur
+            .predict("pooled", "round_robin", 8, 0.0, 1.0, 0.5, 0.0, 0.0, "default", "static")
+            .expect("fitted key");
+        let corner = sur
+            .predict("pooled", "round_robin", 8, 0.0, 4.0, 1.0, 0.0, 0.0, "default", "static")
+            .expect("fitted key");
+        assert_eq!(lo, corner);
+    }
+
+    #[test]
+    fn incomplete_tables_are_dropped_and_unknown_keys_answer_none() {
+        let mut rows = grid_rows();
+        rows.pop();
+        let sur = Surrogate::fit(&rows);
+        assert_eq!(sur.table_count(), 0);
+        assert!(sur
+            .predict("pooled", "round_robin", 8, 0.0, 4.0, 1.0, 0.0, 0.0, "default", "static")
+            .is_none());
+    }
+}

@@ -49,9 +49,15 @@ pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
 
 /// Percentile via linear interpolation on the sorted copy
 /// (p in [0, 100]).
+///
+/// The empty slice has **no** quantiles: this returns NaN rather than
+/// inventing a 0-latency observation.  Callers that can see an empty
+/// population (e.g. a fully-lossy control cell with zero first-attempt
+/// completions) must filter or map the NaN themselves — the report
+/// writers render non-finite summary values as 0 explicitly.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
-        return 0.0;
+        return f64::NAN;
     }
     let mut sorted: Vec<f64> = xs.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
@@ -77,9 +83,15 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// the observed maximum, which is the only defensible claim — and
 /// hands off to the interpolating estimate once n reaches 100, where
 /// the two agree to within a sample.
+///
+/// Boundary behaviour, pinned by the tests below: the empty slice
+/// returns NaN (same contract as [`percentile`] — no observations, no
+/// quantile), and the n == 100 hand-off is continuous with n == 99:
+/// nearest-rank at n = 99 and interpolation at n = 100 differ by at
+/// most one sample spacing for any p.
 pub fn tail_quantile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
-        return 0.0;
+        return f64::NAN;
     }
     let n = xs.len();
     if n >= 100 {
@@ -130,7 +142,9 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(stddev(&[3.0]), 0.0);
         assert_eq!(ci95_halfwidth(&[3.0]), 0.0);
-        assert_eq!(percentile(&[], 50.0), 0.0);
+        // no observations -> no quantile: NaN, never a phantom 0
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[], 99.0).is_nan());
     }
 
     #[test]
@@ -166,7 +180,7 @@ mod tests {
         assert_eq!(tail_quantile(&[1.0, 9.0], 99.9), 9.0);
         // bulk quantiles still pick sensible ranks at small n
         assert_eq!(tail_quantile(&[3.0, 1.0, 9.0], 50.0), 3.0);
-        assert_eq!(tail_quantile(&[], 99.0), 0.0);
+        assert!(tail_quantile(&[], 99.0).is_nan());
     }
 
     #[test]
@@ -177,6 +191,22 @@ mod tests {
         // at n=99 we are still nearest-rank: p99 = the 98th index (max)
         let xs: Vec<f64> = (1..=99).map(|i| i as f64).collect();
         assert_eq!(tail_quantile(&xs, 99.0), 99.0);
+    }
+
+    #[test]
+    fn tail_quantile_n_100_handoff_is_continuous() {
+        // the nearest-rank (n = 99) and interpolating (n = 100)
+        // estimates must agree to within one sample spacing at the
+        // hand-off, for tail and bulk quantiles alike
+        let n99: Vec<f64> = (1..=99).map(|i| i as f64).collect();
+        let n100: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            let jump = (tail_quantile(&n100, p) - tail_quantile(&n99, p)).abs();
+            assert!(jump <= 1.0 + 1e-9, "p{p}: discontinuous hand-off ({jump})");
+        }
+        // exactly at n = 100 the interpolating estimate is in force
+        assert_eq!(tail_quantile(&n100, 99.0), percentile(&n100, 99.0));
+        assert!((tail_quantile(&n100, 99.0) - 99.01).abs() < 1e-9);
     }
 
     #[test]

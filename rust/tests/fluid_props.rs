@@ -1,0 +1,302 @@
+//! Property and cross-validation suite for the fluid tier and the
+//! fitted surrogate.
+//!
+//! The fluid tier is only useful if its error against the
+//! event-for-event engine is *known and pinned*, so this suite is the
+//! contract:
+//!
+//! * **collapse** — in the contention-free single-rank limit the fluid
+//!   solution equals the analytic closed form to 1e-9;
+//! * **monotonicity** — TTS never improves when the fabric is starved
+//!   (oversubscription) or the machine grows (ranks, at window 0);
+//! * **fluid vs event** — ≤ 15 % TTS error on the uncongested half
+//!   (swap-free or ≤ 2:1 oversubscribed cells) of the default coupled
+//!   grid, every cell (measured worst case: 12.9 %);
+//! * **surrogate** — exact on training cells, ≤ 5 % on the pinned
+//!   held-out interior slice (measured worst case: 1.4 %; the
+//!   model-affinity policy is excluded — its first-touch multinomial
+//!   assignment makes TTS non-smooth between grid nodes).
+
+use cogsim_disagg::cluster::{Backend, GpuBackend, Policy};
+use cogsim_disagg::devices::{profiles, Api, Gpu};
+use cogsim_disagg::fluid::{run_scale_campaign, solve_cell, ScaleCampaignConfig};
+use cogsim_disagg::harness::{
+    run_cog_campaign, run_cog_scenario, CogCampaignConfig, Fleet, Knobs, Topology,
+};
+use cogsim_disagg::surrogate::fit_cog_campaign;
+
+/// The fluid knobs matching a [`CogCampaignConfig`] (the cross-checks
+/// must feed both engines identical parameters).
+fn knobs_of(cfg: &CogCampaignConfig) -> Knobs {
+    Knobs {
+        samples_per_request: cfg.samples_per_request,
+        requests_per_step: cfg.requests_per_step,
+        max_batch: cfg.max_batch,
+        timesteps: cfg.timesteps,
+        compute_s: cfg.compute_s,
+        residency_slots: cfg.residency_slots,
+        ..Knobs::default()
+    }
+}
+
+#[test]
+fn collapses_to_the_analytic_closed_form_in_the_contention_free_limit() {
+    // one rank, one model, one request per step, fixed batch size, no
+    // swaps, no overlap, no window: every steady-state correction
+    // vanishes and the step is exactly compute + backend latency
+    let knobs = Knobs {
+        samples_per_request: (3, 3),
+        requests_per_step: 1,
+        timesteps: 8,
+        compute_s: 2e-3,
+        residency_slots: 4,
+        ..Knobs::default()
+    };
+    let s = solve_cell(
+        Topology::Local,
+        Fleet::DefaultPool,
+        Policy::RoundRobin,
+        1,   // ranks
+        1,   // models
+        0.0, // swap
+        0.0, // overlap
+        1.0, // oversub
+        0.0, // window_us
+        &knobs,
+    );
+    let be = GpuBackend::node_local("gpu/local", Gpu::a100(), Api::TrtCudaGraphs);
+    let profile = profiles::hermit();
+    let step = knobs.compute_s.max(knobs.compute_s + be.latency_s(&profile, 3));
+    let expected = step * knobs.timesteps as f64;
+    assert!(
+        (s.time_to_solution_s - expected).abs() <= 1e-9,
+        "fluid {} vs analytic {}",
+        s.time_to_solution_s,
+        expected
+    );
+    assert_eq!(s.total_queue_s, 0.0);
+    assert_eq!(s.total_swap_s, 0.0);
+    assert!(s.converged);
+}
+
+#[test]
+fn tts_is_monotone_in_oversubscription() {
+    let knobs = knobs_of(&CogCampaignConfig::default());
+    for policy in Policy::ALL {
+        for swap_s in [0.0, 2e-3] {
+            let mut last = 0.0;
+            for oversub in [1.0, 2.0, 3.0, 4.0, 6.0, 8.0] {
+                let s = solve_cell(
+                    Topology::Pooled,
+                    Fleet::DefaultPool,
+                    policy,
+                    32,
+                    8,
+                    swap_s,
+                    0.0,
+                    oversub,
+                    0.0,
+                    &knobs,
+                );
+                assert!(
+                    s.time_to_solution_s >= last - 1e-12,
+                    "{policy:?} swap {swap_s}: TTS {} at {oversub}:1 beats {last}",
+                    s.time_to_solution_s
+                );
+                last = s.time_to_solution_s;
+            }
+        }
+    }
+}
+
+#[test]
+fn tts_is_monotone_in_ranks_at_window_zero() {
+    // more ranks on the same pool = more load; at window 0 there is
+    // no batching economy of scale to offset it
+    let knobs = knobs_of(&CogCampaignConfig::default());
+    for policy in [Policy::RoundRobin, Policy::LeastOutstanding, Policy::LatencyAware] {
+        let mut last = 0.0;
+        for ranks in [4, 8, 16, 32, 64, 256] {
+            let s = solve_cell(
+                Topology::Pooled,
+                Fleet::DefaultPool,
+                policy,
+                ranks,
+                8,
+                2e-3,
+                0.0,
+                4.0,
+                0.0,
+                &knobs,
+            );
+            assert!(
+                s.time_to_solution_s >= last - 1e-12,
+                "{policy:?}: TTS {} at {ranks} ranks beats {last}",
+                s.time_to_solution_s
+            );
+            last = s.time_to_solution_s;
+        }
+    }
+}
+
+#[test]
+fn fluid_tts_tracks_the_event_engine_on_the_uncongested_half() {
+    // The pinned cross-validation bound: on every cell of the default
+    // coupled grid that is swap-free or at most 2:1 oversubscribed,
+    // the fluid TTS is within 15 % of the event-for-event engine
+    // (measured worst case 12.9 %; the congested+swapping corner
+    // cells reach ~13.4 % and are deliberately not part of the
+    // contract — the fluid tier is a scale-out explorer, not a
+    // congestion-collapse model).
+    let cfg = CogCampaignConfig::default();
+    let knobs = knobs_of(&cfg);
+    let result = run_cog_campaign(&cfg);
+    let mut checked = 0;
+    for sc in &result.scenarios {
+        if !(sc.swap_s == 0.0 || sc.oversub <= 2.0) {
+            continue;
+        }
+        let fluid = solve_cell(
+            sc.topology,
+            Fleet::DefaultPool,
+            sc.policy,
+            sc.ranks,
+            sc.models,
+            sc.swap_s,
+            sc.overlap,
+            sc.oversub,
+            cfg.window_us,
+            &knobs,
+        );
+        let err = fluid.time_to_solution_s / sc.summary.time_to_solution_s - 1.0;
+        assert!(
+            err.abs() <= 0.15,
+            "{:?}/{:?}/r{}/ov{}/sw{}: fluid {:.3}ms vs event {:.3}ms ({:+.1}%)",
+            sc.topology,
+            sc.policy,
+            sc.ranks,
+            sc.oversub,
+            sc.swap_s,
+            fluid.time_to_solution_s * 1e3,
+            sc.summary.time_to_solution_s * 1e3,
+            err * 1e2
+        );
+        checked += 1;
+    }
+    assert!(checked >= 40, "the uncongested half must cover the grid ({checked} cells)");
+}
+
+#[test]
+fn surrogate_is_exact_on_training_cells() {
+    let cfg = CogCampaignConfig::default();
+    let result = run_cog_campaign(&cfg);
+    let sur = fit_cog_campaign(&result);
+    assert!(sur.table_count() > 0, "default grid must yield complete tables");
+    for sc in &result.scenarios {
+        let (tts, p99) = sur
+            .predict(
+                sc.topology.key(),
+                sc.policy.key(),
+                sc.models,
+                sc.overlap,
+                sc.ranks as f64,
+                sc.oversub,
+                sc.swap_s * 1e6,
+                cfg.window_us,
+                "default",
+                "static",
+            )
+            .expect("training cell must be covered");
+        let rel = |a: f64, b: f64| (a / b - 1.0).abs();
+        assert!(
+            rel(tts, sc.summary.time_to_solution_s) <= 1e-12,
+            "training node must reproduce exactly: {tts} vs {}",
+            sc.summary.time_to_solution_s
+        );
+        assert!(rel(p99, sc.summary.latency.p99_s) <= 1e-12);
+    }
+}
+
+#[test]
+fn surrogate_holds_the_pinned_heldout_interior_bound() {
+    // The pinned generalisation bound: ≤ 5 % TTS error on held-out
+    // interior cells (ranks/oversub/swap strictly inside the training
+    // hull; measured worst case 1.4 %).  Model-affinity is excluded:
+    // its first-touch multinomial assignment makes TTS jump between
+    // grid nodes (measured ~10 % — interpolation is the wrong tool
+    // there, and the table says so by exclusion).
+    let cfg = CogCampaignConfig::default();
+    let sur = fit_cog_campaign(&run_cog_campaign(&cfg));
+    let mut held_out = Vec::new();
+    for policy in [Policy::RoundRobin, Policy::LeastOutstanding, Policy::LatencyAware] {
+        for swap_s in [0.0, 2e-3] {
+            held_out.push((policy, 16usize, 3.0f64, swap_s));
+        }
+    }
+    held_out.push((Policy::RoundRobin, 32, 1.0, 1e-3));
+    for (policy, ranks, oversub, swap_s) in held_out {
+        let truth = run_cog_scenario(
+            Topology::Pooled,
+            policy,
+            ranks,
+            8,
+            swap_s,
+            0.0,
+            oversub,
+            &cfg,
+        );
+        let (tts, _) = sur
+            .predict(
+                "pooled",
+                policy.key(),
+                8,
+                0.0,
+                ranks as f64,
+                oversub,
+                swap_s * 1e6,
+                cfg.window_us,
+                "default",
+                "static",
+            )
+            .expect("pooled table is complete");
+        let err = tts / truth.summary.time_to_solution_s - 1.0;
+        assert!(
+            err.abs() <= 0.05,
+            "{policy:?}/r{ranks}/ov{oversub}/sw{swap_s}: surrogate {:.3}ms vs event {:.3}ms \
+             ({:+.1}%)",
+            tts * 1e3,
+            truth.summary.time_to_solution_s * 1e3,
+            err * 1e2
+        );
+    }
+}
+
+#[test]
+fn scale_campaign_pins_the_crossover_trajectory_and_stays_fast() {
+    // The committed scale golden's headline, asserted structurally:
+    // at 64 ranks a 256-member pool catches node-local GPUs, at 256
+    // ranks it takes 512, and from 1024 ranks node-local wins
+    // everywhere within the swept pool budget.  The whole
+    // leadership-class campaign (40 cells to 16384 ranks) must stay
+    // far under the 5 s acceptance budget — that speed is the fluid
+    // tier's reason to exist.
+    let started = std::time::Instant::now();
+    let result = run_scale_campaign(&ScaleCampaignConfig::default());
+    let elapsed = started.elapsed();
+    assert!(
+        elapsed.as_secs_f64() < 5.0,
+        "scale campaign took {:.2}s (budget 5s)",
+        elapsed.as_secs_f64()
+    );
+    let crossover = |ranks: usize| result.row(ranks).expect("swept rank count").crossover_pool;
+    assert_eq!(crossover(64), Some(256));
+    assert_eq!(crossover(256), Some(512));
+    for ranks in [1024, 4096, 16384] {
+        assert_eq!(crossover(ranks), None, "{ranks} ranks: node-local must win");
+    }
+    // the trajectory is monotone in the meaningful sense: the pool
+    // needed to match local never shrinks as the machine grows
+    let p64 = crossover(64).unwrap();
+    let p256 = crossover(256).unwrap();
+    assert!(p64 <= p256);
+}

@@ -4,11 +4,13 @@
 Usage:
     python3 scripts/bench_gate.py <baseline_dir> <fresh_dir>
 
-Compares the committed `BENCH_eventsim.json` / `BENCH_cogsim.json`
-baselines (copied to <baseline_dir> before the bench run overwrites
-them) against the files a fresh `cargo bench --bench eventsim_bench
--- --smoke` just wrote to <fresh_dir>.  For every benchmark key the
-fresh `events_per_s` must be at least 70 % of the baseline's.
+Compares the committed `BENCH_eventsim.json` / `BENCH_cogsim.json` /
+`BENCH_fluid.json` baselines (copied to <baseline_dir> before the
+bench run overwrites them) against the files a fresh `cargo bench
+--bench eventsim_bench -- --smoke` just wrote to <fresh_dir>.  For
+every benchmark key the fresh throughput (`events_per_s`, or
+`cells_per_s` for the fluid tier) must be at least 70 % of the
+baseline's.
 
 Baselines carrying `"baseline_floor": true` are conservative floors
 recorded without a local toolchain (deliberate underestimates so the
@@ -26,9 +28,17 @@ import json
 import os
 import sys
 
-FILES = ("BENCH_eventsim.json", "BENCH_cogsim.json")
-SHAPE_KEYS = ("smoke", "ranks", "horizon_us", "timesteps", "swap_us")
+FILES = ("BENCH_eventsim.json", "BENCH_cogsim.json", "BENCH_fluid.json")
+SHAPE_KEYS = ("smoke", "ranks", "horizon_us", "timesteps", "swap_us", "cells")
+RATE_KEYS = ("events_per_s", "cells_per_s")
 MAX_REGRESSION = 0.30
+
+
+def rate_of(entry, where):
+    for key in RATE_KEYS:
+        if key in entry:
+            return float(entry[key])
+    raise SystemExit(f"{where}: no throughput key ({'/'.join(RATE_KEYS)})")
 
 
 def load(path):
@@ -63,22 +73,23 @@ def main():
             if got is None:
                 failures.append(f"{name}:{key}: benchmark disappeared")
                 continue
-            base_eps = float(want["events_per_s"])
-            fresh_eps = float(got["events_per_s"])
+            base_eps = rate_of(want, f"{name}:{key} (baseline)")
+            fresh_eps = rate_of(got, f"{name}:{key} (fresh)")
+            unit = "cells/s" if "cells_per_s" in want else "events/s"
             limit = (1.0 - MAX_REGRESSION) * base_eps
             verdict = "ok" if fresh_eps >= limit else "REGRESSED"
-            print(f"{name}:{key}: {fresh_eps:.0f} events/s vs baseline "
+            print(f"{name}:{key}: {fresh_eps:.0f} {unit} vs baseline "
                   f"{base_eps:.0f}{floor} (limit {limit:.0f}) {verdict}")
             if fresh_eps < limit:
                 failures.append(
-                    f"{name}:{key}: {fresh_eps:.0f} events/s is more than "
+                    f"{name}:{key}: {fresh_eps:.0f} {unit} is more than "
                     f"{MAX_REGRESSION:.0%} below the baseline {base_eps:.0f}")
     if failures:
         print()
         for f in failures:
             print(f"FAIL {f}")
         sys.exit(1)
-    print("bench gate: no >30% events/s regression")
+    print("bench gate: no >30% throughput regression")
 
 
 if __name__ == "__main__":
