@@ -47,7 +47,10 @@ fn spec(ranks: usize) -> FabricSpec {
 
 /// One measured event-sim configuration: run to completion, report
 /// events processed so the bench can normalise to events/sec.
-fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool) -> u64 {
+/// `rec_off` attaches a disarmed flight recorder first — the
+/// `Option` checks on every hook are the recorder's entire cost when
+/// tracing is off, and this variant pins that cost at ~zero.
+fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool, rec_off: bool) -> u64 {
     let cfg = EventSimConfig { ranks, horizon_s, ..Default::default() };
     let mut sim = if fabric {
         EventSim::with_fabric(
@@ -61,6 +64,9 @@ fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool) -> u64 {
     } else {
         EventSim::new(pool(), Policy::LeastOutstanding, cfg)
     };
+    if rec_off {
+        sim.attach_disarmed_recorder();
+    }
     sim.run_to_completion();
     sim.events_processed()
 }
@@ -68,7 +74,7 @@ fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool) -> u64 {
 /// One measured coupled configuration: the CogSim path adds the
 /// timestep barrier, residency swaps, and (with the fabric) the
 /// weights-ready gate to every dispatch.
-fn run_cog_once(ranks: usize, timesteps: usize, fabric: bool) -> u64 {
+fn run_cog_once(ranks: usize, timesteps: usize, fabric: bool, rec_off: bool) -> u64 {
     let cfg = CogSimConfig {
         ranks,
         timesteps,
@@ -87,6 +93,9 @@ fn run_cog_once(ranks: usize, timesteps: usize, fabric: bool) -> u64 {
     } else {
         CogSim::new(pool(), Policy::LeastOutstanding, cfg)
     };
+    if rec_off {
+        sim.attach_disarmed_recorder();
+    }
     sim.run_to_completion();
     sim.events_processed()
 }
@@ -132,9 +141,13 @@ fn main() {
     meta.insert("horizon_us".to_string(), Value::Number(horizon_s * 1e6));
     meta.insert("smoke".to_string(), Value::Bool(smoke));
     let mut results = BTreeMap::new();
-    for (key, fabric) in [("legacy_link", false), ("fabric_4to1", true)] {
+    for (key, fabric, rec_off) in [
+        ("legacy_link", false, false),
+        ("fabric_4to1", true, false),
+        ("fabric_4to1_rec_off", true, true),
+    ] {
         bench_into(&bencher, &mut results, "eventsim", key, || {
-            run_event_once(ranks, horizon_s, fabric)
+            run_event_once(ranks, horizon_s, fabric, rec_off)
         });
     }
     write_doc("BENCH_eventsim.json", meta, results);
@@ -147,9 +160,13 @@ fn main() {
     meta.insert("swap_us".to_string(), Value::Number(200.0));
     meta.insert("smoke".to_string(), Value::Bool(smoke));
     let mut results = BTreeMap::new();
-    for (key, fabric) in [("legacy_link", false), ("fabric_4to1", true)] {
+    for (key, fabric, rec_off) in [
+        ("legacy_link", false, false),
+        ("fabric_4to1", true, false),
+        ("fabric_4to1_rec_off", true, true),
+    ] {
         bench_into(&bencher, &mut results, "cogsim", key, || {
-            run_cog_once(cog_ranks, timesteps, fabric)
+            run_cog_once(cog_ranks, timesteps, fabric, rec_off)
         });
     }
     write_doc("BENCH_cogsim.json", meta, results);

@@ -595,6 +595,10 @@ impl CogSim {
         }
         self.epoch[rank] += 1;
         self.rank_restarts += 1;
+        if self.core.trace_armed() {
+            let detail = format!("rank {rank} checkpoint restart");
+            self.core.trace_marker("rank_fail", &detail);
+        }
         self.emit_step(rank);
     }
 
@@ -611,6 +615,10 @@ impl CogSim {
         if active.is_empty() {
             if let Some(&idx) = tier.first() {
                 self.core.control_backend_join(idx);
+                if self.core.trace_armed() {
+                    let detail = format!("backend {idx} joins (pool empty)");
+                    self.core.trace_marker("autoscale_up", &detail);
+                }
                 self.apply_effects();
             }
             return;
@@ -620,6 +628,11 @@ impl CogSim {
         if mean_backlog > cfg.high_s && active.len() < cfg.max_active {
             if let Some(&idx) = tier.iter().find(|&&i| !self.core.is_active(i)) {
                 self.core.control_backend_join(idx);
+                if self.core.trace_armed() {
+                    let detail =
+                        format!("backend {idx} joins (mean backlog {mean_backlog:.6}s)");
+                    self.core.trace_marker("autoscale_up", &detail);
+                }
                 self.apply_effects();
             }
         } else if mean_backlog < cfg.low_s && active.len() > cfg.min_active {
@@ -629,6 +642,11 @@ impl CogSim {
                 .find(|&&i| self.core.live_batches(i) == 0 && self.core.backlog_s(i) <= 0.0);
             if let Some(&idx) = idle {
                 self.core.control_backend_leave(idx);
+                if self.core.trace_armed() {
+                    let detail =
+                        format!("backend {idx} parks (mean backlog {mean_backlog:.6}s)");
+                    self.core.trace_marker("autoscale_down", &detail);
+                }
                 self.apply_effects();
             }
         }
@@ -762,6 +780,34 @@ impl CogSim {
             st.last_record = record;
             self.try_finish(rank);
         }
+    }
+
+    // ------------------------------------------- flight recorder
+
+    /// Arm the flight recorder on the shared pipeline (see
+    /// [`crate::trace`]).  Call after construction, before any event
+    /// is processed.
+    pub fn arm_trace(&mut self) {
+        self.core.arm_trace();
+    }
+
+    /// Attach a recorder but leave it disarmed — compiles the hook
+    /// call sites into the hot path without recording anything (the
+    /// bench-gate overhead guard).
+    pub fn attach_disarmed_recorder(&mut self) {
+        self.core.attach_disarmed_recorder();
+    }
+
+    /// Detach the recorder, finalizing open tracks at the current
+    /// virtual clock.
+    pub fn take_recorder(&mut self) -> Option<Box<crate::trace::Recorder>> {
+        self.core.take_recorder()
+    }
+
+    /// Always-on per-device busy integral (seconds of service), the
+    /// recorder's reconciliation ground truth.
+    pub fn device_busy_s(&self) -> &[f64] {
+        self.core.device_busy_s()
     }
 
     // ----------------------------------------------------- accessors

@@ -492,6 +492,30 @@ impl EventSim {
         }
     }
 
+    // ----------------------------------------------- flight recorder
+
+    /// Arm the flight recorder ([`crate::trace`]): call before the
+    /// run; detach the finished trace with [`Self::take_recorder`].
+    pub fn arm_trace(&mut self) {
+        self.core.arm_trace();
+    }
+
+    /// Carry a recorder that records nothing (bench overhead probe).
+    pub fn attach_disarmed_recorder(&mut self) {
+        self.core.attach_disarmed_recorder();
+    }
+
+    /// Detach the recorder, finalized at the current virtual clock.
+    pub fn take_recorder(&mut self) -> Option<Box<crate::trace::Recorder>> {
+        self.core.take_recorder()
+    }
+
+    /// Per-backend service seconds (always on — the recorder's busy
+    /// integrals reconcile against this to 1e-9).
+    pub fn device_busy_s(&self) -> &[f64] {
+        self.core.device_busy_s()
+    }
+
     // ----------------------------------------------------- accessors
 
     pub fn clock_s(&self) -> f64 {

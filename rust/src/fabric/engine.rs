@@ -88,6 +88,30 @@ impl FabricEngine {
         self.flows.get(&id).map(|f| f.rate)
     }
 
+    /// Sum the current fair-share rates crossing each directed link
+    /// into `out` (cleared and resized to the topology's link count);
+    /// returns the constrained-flow count.  Free (infinite-rate)
+    /// flows never hold link capacity and are skipped.  This is the
+    /// flight recorder's sampling hook: rates only change on flow
+    /// mutations, so sampling at each mutation site yields an exact
+    /// piecewise-constant utilization series.
+    pub fn link_rates_into(&self, out: &mut Vec<f64>) -> usize {
+        let n = self.topo.n_links();
+        out.clear();
+        out.resize(n, 0.0);
+        for f in self.flows.values() {
+            if !f.rate.is_finite() {
+                continue;
+            }
+            for &l in &f.path {
+                if l < n {
+                    out[l] += f.rate;
+                }
+            }
+        }
+        self.constrained
+    }
+
     /// Start a transfer of `bytes` along `path` at `now_s`; returns
     /// the flow id.  Constrained flows trigger a fair-share re-solve;
     /// a free-path flow (empty path, or infinite capacity everywhere

@@ -270,6 +270,41 @@ impl Topology {
         }
     }
 
+    /// Human-readable label for directed link `i` (the flight
+    /// recorder's track names): per-endpoint NIC ports plus the four
+    /// leaf/spine uplinks.
+    pub fn link_label(&self, i: usize) -> String {
+        if let Some(h) = self.host_tx.iter().position(|&l| l == i) {
+            return format!("host{h}.tx");
+        }
+        if let Some(h) = self.host_rx.iter().position(|&l| l == i) {
+            return format!("host{h}.rx");
+        }
+        if i == self.host_up {
+            return "host_leaf.up".to_string();
+        }
+        if i == self.host_down {
+            return "host_leaf.down".to_string();
+        }
+        if i == self.accel_up {
+            return "accel_leaf.up".to_string();
+        }
+        if i == self.accel_down {
+            return "accel_leaf.down".to_string();
+        }
+        for (a, port) in self.accel_ports.iter().enumerate() {
+            if let Some(p) = port {
+                if p.tx == i {
+                    return format!("accel{a}.tx");
+                }
+                if p.rx == i {
+                    return format!("accel{a}.rx");
+                }
+            }
+        }
+        format!("link{i}")
+    }
+
     /// The rate one flow gets when nothing else is active: the
     /// minimum capacity along its path (`INFINITY` for an empty
     /// path).  On a 1:1 fabric this is the NIC = `eff_bandwidth`,

@@ -36,10 +36,12 @@ pub use scenario::{
 pub use sweep::{
     run_campaign, run_cell, run_cell_ctl, run_cog_campaign, run_cog_scenario,
     run_control_campaign, run_event_campaign, run_event_scenario, run_grid, try_run_cell_ctl,
-    validate_cell_ctl,
-    run_grid_threads, run_scenario, run_scenario_at, run_scenario_with_link,
-    CampaignResult, CellResult, CellSummary, CogCampaignResult, CogScenarioResult,
-    ControlCampaignConfig, ControlCampaignResult, ControlCellResult,
-    EventCampaignResult, EventScenarioResult, GridResult, ScenarioResult, WorkloadSummary,
+    try_run_cell_full, validate_cell_ctl,
+    run_grid_threads, run_grid_threads_full, run_scenario, run_scenario_at,
+    run_scenario_with_link,
+    CampaignResult, CellResult, CellRun, CellSummary, CellTiming, CogCampaignResult,
+    CogScenarioResult, ControlCampaignConfig, ControlCampaignResult, ControlCellResult,
+    EventCampaignResult, EventScenarioResult, GridResult, GridRun, ScenarioResult,
+    WorkloadSummary,
 };
 pub use table::Table;

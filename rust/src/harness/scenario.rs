@@ -479,6 +479,29 @@ pub struct Scenario {
     pub control: usize,
 }
 
+impl Scenario {
+    /// Compact deterministic cell label, unique within a grid (every
+    /// axis is in the key) — used by the `--timings` side-channel and
+    /// as the per-cell process name in merged flight-recorder traces.
+    pub fn cell_key(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/r{}/{}/w{}/m{}/s{}/v{}/x{}/c{}",
+            self.kind.key(),
+            self.topology.key(),
+            self.fleet.key(),
+            self.policy.key(),
+            self.ranks,
+            self.arrival.key(),
+            self.window_us,
+            self.models,
+            self.swap_s * 1e6,
+            self.overlap,
+            self.oversub,
+            self.control,
+        )
+    }
+}
+
 /// The oversubscription cells a topology actually sweeps: the
 /// configured list where the fabric exists, the single 1:1 cell on
 /// the all-local topology.

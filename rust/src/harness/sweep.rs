@@ -9,6 +9,8 @@
 //! so the committed goldens and every existing caller keep working
 //! byte-for-byte.
 
+use std::time::Instant;
+
 use crate::cluster::{BackendReport, Cluster, Policy};
 use crate::eventsim::{
     ArrivalProcess, Batching, CogSim, CogSimConfig, CogSummary, EventSim, EventSimConfig,
@@ -16,6 +18,7 @@ use crate::eventsim::{
 };
 use crate::fluid::{self, FluidSummary};
 use crate::netsim::Link;
+use crate::trace::Recorder;
 use crate::util::stats;
 use crate::workload::{HydraWorkload, MirWorkload};
 
@@ -113,6 +116,34 @@ impl CellResult {
             _ => None,
         }
     }
+}
+
+/// Wall-clock and event-volume side-channel for one executed cell.
+/// Wall time is the only place real time is allowed to appear — it
+/// never enters a golden-pinned summary, only the separate
+/// `--timings` output.
+#[derive(Debug, Clone)]
+pub struct CellTiming {
+    pub wall_ms: f64,
+    /// Events popped by the engine (`0` for the analytic and fluid
+    /// kinds, which have no event loop).
+    pub events: u64,
+    pub events_per_s: f64,
+}
+
+/// One executed cell plus its side-channels: the deterministic result
+/// (exactly what [`run_cell_ctl`] returns), the wall-clock timing,
+/// and — when the flight recorder was armed and the kind is
+/// engine-backed — the detached [`Recorder`].
+#[derive(Debug)]
+pub struct CellRun {
+    pub result: CellResult,
+    pub timing: CellTiming,
+    pub recorder: Option<Box<Recorder>>,
+    /// The engine's always-on per-device busy integral (seconds of
+    /// service) — the recorder's reconciliation ground truth; empty
+    /// for the analytic and fluid kinds.
+    pub device_busy_s: Vec<f64>,
 }
 
 /// An executed grid: the configuration plus every cell's result, in
@@ -262,7 +293,25 @@ pub fn try_run_cell_ctl(
     knobs: &Knobs,
     ctl: &ControlSpec,
 ) -> Result<CellResult, String> {
+    Ok(try_run_cell_full(sc, knobs, ctl, false)?.result)
+}
+
+/// [`try_run_cell_ctl`] plus the side-channels: wall-clock timing
+/// always, and — when `armed` and the cell's kind is engine-backed
+/// (event or cog) — the detached flight recorder.  The recorder only
+/// observes; with `armed = false` this is the exact legacy cell body,
+/// which is what keeps the committed goldens byte-identical.
+pub fn try_run_cell_full(
+    sc: &Scenario,
+    knobs: &Knobs,
+    ctl: &ControlSpec,
+    armed: bool,
+) -> Result<CellRun, String> {
     validate_cell_ctl(sc, ctl)?;
+    let wall0 = Instant::now();
+    let mut events = 0u64;
+    let mut recorder = None;
+    let mut device_busy_s = Vec::new();
     let summary = match sc.kind {
         Kind::Analytic => {
             let link = derated_link(&Link::infiniband_cx6(), sc.oversub);
@@ -298,10 +347,16 @@ pub fn try_run_cell_ctl(
                 }
                 None => EventSim::with_tiers(backends, sc.policy, sim_cfg, tier.hermit, tier.mir),
             };
+            if armed {
+                sim.arm_trace();
+            }
             if !ctl.trace.is_empty() {
                 sim.with_control(&ctl.trace);
             }
             sim.run_to_completion();
+            events = sim.events_processed();
+            device_busy_s = sim.device_busy_s().to_vec();
+            recorder = sim.take_recorder();
             CellSummary::Event(sim.summary())
         }
         Kind::Cog => {
@@ -336,10 +391,16 @@ pub fn try_run_cell_ctl(
                 }
                 None => CogSim::with_tiers(backends, sc.policy, sim_cfg, tier.hermit, tier.mir),
             };
+            if armed {
+                sim.arm_trace();
+            }
             if !ctl.is_static() {
                 sim.with_control(&ctl.trace, ctl.autoscaler);
             }
             sim.run_to_completion();
+            events = sim.events_processed();
+            device_busy_s = sim.device_busy_s().to_vec();
+            recorder = sim.take_recorder();
             CellSummary::Cog(sim.summary())
         }
         Kind::Fluid => CellSummary::Fluid(fluid::solve_cell(
@@ -355,7 +416,13 @@ pub fn try_run_cell_ctl(
             knobs,
         )),
     };
-    Ok(CellResult { scenario: *sc, summary })
+    let wall_s = wall0.elapsed().as_secs_f64();
+    let timing = CellTiming {
+        wall_ms: wall_s * 1e3,
+        events,
+        events_per_s: if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 },
+    };
+    Ok(CellRun { result: CellResult { scenario: *sc, summary }, timing, recorder, device_busy_s })
 }
 
 /// Run every cell of a grid, in expansion order, on all cores.
@@ -370,10 +437,47 @@ pub fn run_grid(grid: &Grid) -> GridResult {
 /// every JSON report derived from it — is byte-identical at any
 /// thread count.
 pub fn run_grid_threads(grid: &Grid, threads: usize) -> GridResult {
-    let cells = workpool::Pool::new(threads).map(grid.cells(), |_, sc| {
-        run_cell_ctl(&sc, &grid.knobs, &grid.axes.control(sc.control))
+    run_grid_threads_full(grid, threads, false).split().0
+}
+
+/// An executed grid with the per-cell side-channels kept: timings
+/// always, recorders when the run was armed.
+#[derive(Debug)]
+pub struct GridRun {
+    pub grid: Grid,
+    pub runs: Vec<CellRun>,
+}
+
+impl GridRun {
+    /// Split into the classic [`GridResult`] (what every report layer
+    /// consumes) plus the per-cell timings and recorders, all in
+    /// expansion order.
+    #[allow(clippy::type_complexity)]
+    pub fn split(self) -> (GridResult, Vec<CellTiming>, Vec<Option<Box<Recorder>>>) {
+        let mut cells = Vec::with_capacity(self.runs.len());
+        let mut timings = Vec::with_capacity(self.runs.len());
+        let mut recorders = Vec::with_capacity(self.runs.len());
+        for run in self.runs {
+            cells.push(run.result);
+            timings.push(run.timing);
+            recorders.push(run.recorder);
+        }
+        (GridResult { grid: self.grid, cells }, timings, recorders)
+    }
+}
+
+/// As [`run_grid_threads`], keeping the per-cell side-channels.
+/// Cells stay independent and individually deterministic, and the
+/// pool's map preserves input order, so armed traces are
+/// byte-identical at any thread count (`rust/tests/trace_props.rs`).
+pub fn run_grid_threads_full(grid: &Grid, threads: usize, armed: bool) -> GridRun {
+    let runs = workpool::Pool::new(threads).map(grid.cells(), |_, sc| {
+        match try_run_cell_full(&sc, &grid.knobs, &grid.axes.control(sc.control), armed) {
+            Ok(run) => run,
+            Err(why) => panic!("{why}"),
+        }
     });
-    GridResult { grid: grid.clone(), cells }
+    GridRun { grid: grid.clone(), runs }
 }
 
 // ------------------------------------------------ legacy: analytic

@@ -87,6 +87,14 @@
 //!   clamped multilinear interpolation over event-engine grid
 //!   results, exact on training cells and ≤ 5 % on held-out interior
 //!   cells of the pinned validation slice.
+//! * [`trace`] — the flight recorder: off-by-default, virtual-time
+//!   -only tracing of the shared pipeline (per-request span
+//!   lifecycles, device occupancy tracks, fabric link-utilization
+//!   series, control-plane markers), exported as Chrome trace-event
+//!   JSON (Perfetto-loadable) plus an aggregated attribution summary
+//!   (`repro trace`, `--trace`); byte-identical across thread counts
+//!   and output-unobservable when disarmed
+//!   (`rust/tests/trace_props.rs`).
 //! * [`util`] — in-tree substrates for the offline build environment:
 //!   JSON parsing, a PCG-family RNG, statistics, and a micro-bench
 //!   harness (no serde/rand/criterion available).
@@ -109,6 +117,7 @@ pub mod rdu;
 pub mod runtime;
 pub mod simcore;
 pub mod surrogate;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

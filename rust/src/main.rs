@@ -19,15 +19,15 @@ use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
 use cogsim_disagg::eventsim::ArrivalProcess;
 use cogsim_disagg::fluid::{run_scale_campaign, ScaleCampaignConfig};
 use cogsim_disagg::harness::{
-    run_control_campaign, run_figure, run_grid_threads, Axes, CampaignConfig, CogCampaignConfig,
-    ControlCampaignConfig, ControlSpec, EventCampaignConfig, Fleet,
-    Grid, GridResult, Kind, Knobs, Topology, FIGURES,
+    run_control_campaign, run_figure, run_grid_threads_full, try_run_cell_full, Axes,
+    CampaignConfig, CellTiming, CogCampaignConfig, ControlCampaignConfig, ControlSpec,
+    EventCampaignConfig, Fleet, Grid, GridResult, Kind, Knobs, Scenario, Topology, FIGURES,
 };
 use cogsim_disagg::metrics::LatencyRecorder;
 use cogsim_disagg::net::{Client, Server};
 use cogsim_disagg::runtime::Engine;
+use cogsim_disagg::util::json::{self, Value};
 use cogsim_disagg::util::rng::Rng;
-use cogsim_disagg::workload::HydraWorkload;
 
 fn main() {
     if let Err(e) = run() {
@@ -164,13 +164,28 @@ const FLAGS: &[FlagSpec] = &[
                help: "CI-sized sweep (2 rank counts x 2 pool sizes)", cmds: &["scale"] },
     FlagSpec { name: "out", kind: FlagKind::Str, default: "results/scale.json",
                help: "JSON output path", cmds: &["scale"] },
-    // workload inspection
-    FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "3",
-               help: "timesteps to print", cmds: &["trace"] },
-    FlagSpec { name: "ranks", kind: FlagKind::Usize, default: "4",
+    // the flight recorder
+    FlagSpec { name: "timesteps", kind: FlagKind::Usize, default: "8",
+               help: "bulk-synchronous timesteps", cmds: &["trace"] },
+    FlagSpec { name: "ranks", kind: FlagKind::Usize, default: "32",
                help: "MPI ranks", cmds: &["trace"] },
-    FlagSpec { name: "zones", kind: FlagKind::Usize, default: "1000",
-               help: "zones per rank", cmds: &["trace"] },
+    FlagSpec { name: "swap-us", kind: FlagKind::Usize, default: "200",
+               help: "residency swap cost, us", cmds: &["trace"] },
+    FlagSpec { name: "seed", kind: FlagKind::Usize, default: "42",
+               help: "workload seed (fixed seed = byte-stable trace)", cmds: &["trace"] },
+    FlagSpec { name: "smoke", kind: FlagKind::Bool, default: "",
+               help: "CI-sized cell", cmds: &["trace"] },
+    FlagSpec { name: "out", kind: FlagKind::Str, default: "results/trace.json",
+               help: "attribution JSON path (timeline goes to <stem>.trace.json)",
+               cmds: &["trace"] },
+    // flight-recorder side-channels on the grid commands
+    FlagSpec { name: "trace", kind: FlagKind::Str, default: "",
+               help: "arm the flight recorder and write a merged Perfetto timeline to PATH",
+               cmds: &["scenario", "campaign", "eventsim", "cogsim", "fabric"] },
+    FlagSpec { name: "timings", kind: FlagKind::Str, default: "",
+               help: "write per-cell wall-clock timings JSON to PATH (kept out of the \
+                      deterministic summary)",
+               cmds: &["scenario", "campaign", "eventsim", "cogsim", "fabric"] },
 ];
 
 /// `(command, positional synopsis, one-line description)` — the
@@ -187,7 +202,7 @@ const COMMANDS: &[(&str, &str, &str)] = &[
     ("fabric", "", "alias: pooled-vs-local crossover on the cog grid"),
     ("control", "", "control-plane resilience study (failures, degrade, autoscaler)"),
     ("scale", "", "fluid-tier scale-out study: pooled-vs-local crossover at 64-16384 ranks"),
-    ("trace", "", "print a Hydra-like request trace"),
+    ("trace", "", "run one pooled cog cell with the flight recorder armed"),
     ("info", "", "show manifest/runtime info"),
 ];
 
@@ -355,16 +370,77 @@ fn write_json_out(out: &str, json: &str) -> Result<()> {
     Ok(())
 }
 
+/// Wrap a trace-event array into the Chrome/Perfetto document shape.
+fn chrome_doc(events: Vec<Value>) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("traceEvents".to_string(), Value::Array(events));
+    Value::Object(m)
+}
+
+/// The `--timings` side-channel: per-cell wall-clock and event-volume
+/// JSON, deliberately separate from the golden-pinned summary (wall
+/// time is the one thing that may never enter it).
+fn timings_json(result: &GridResult, timings: &[CellTiming], threads: usize) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("threads".to_string(), Value::Number(threads as f64));
+    let cells: Vec<Value> = result
+        .cells
+        .iter()
+        .zip(timings)
+        .map(|(c, t)| {
+            let mut cm = BTreeMap::new();
+            cm.insert("cell".to_string(), Value::String(c.scenario.cell_key()));
+            cm.insert("wall_ms".to_string(), Value::Number(t.wall_ms));
+            cm.insert("events".to_string(), Value::Number(t.events as f64));
+            cm.insert("events_per_s".to_string(), Value::Number(t.events_per_s));
+            Value::Object(cm)
+        })
+        .collect();
+    m.insert("cells".to_string(), Value::Array(cells));
+    m.insert(
+        "total_wall_ms".to_string(),
+        Value::Number(timings.iter().map(|t| t.wall_ms).sum()),
+    );
+    Value::Object(m)
+}
+
 /// Run a grid, print its tables, write its JSON — the single
 /// execution path behind `repro scenario` and every alias.  Cells run
 /// on a work-stealing pool of `threads` workers (0 = all cores,
 /// 1 = sequential); the output is byte-identical at any width.
-fn execute_grid(grid: &Grid, out: &str, threads: usize) -> Result<GridResult> {
-    let result = run_grid_threads(grid, threads);
+/// `trace_out` non-empty arms the flight recorder on every
+/// engine-backed cell and writes one merged Perfetto timeline (cells
+/// at disjoint pid blocks); `timings_out` non-empty writes the
+/// wall-clock side-channel.
+fn execute_grid(
+    grid: &Grid,
+    out: &str,
+    threads: usize,
+    trace_out: &str,
+    timings_out: &str,
+) -> Result<GridResult> {
+    let armed = !trace_out.is_empty();
+    let (result, timings, recorders) = run_grid_threads_full(grid, threads, armed).split();
     for table in result.tables() {
         println!("{}", table.render());
     }
-    write_json_out(out, &cogsim_disagg::util::json::write(&result.to_json()))?;
+    write_json_out(out, &json::write(&result.to_json()))?;
+    if !timings_out.is_empty() {
+        write_json_out(timings_out, &json::write(&timings_json(&result, &timings, threads)))?;
+    }
+    if armed {
+        let mut events = Vec::new();
+        for (i, rec) in recorders.iter().enumerate() {
+            if let Some(rec) = rec {
+                // 4 pids per cell (requests/devices/fabric/control);
+                // block-of-8 keeps cells disjoint and leaves room
+                events.extend(
+                    rec.chrome_trace(&result.cells[i].scenario.cell_key(), i as u64 * 8),
+                );
+            }
+        }
+        write_json_out(trace_out, &json::write(&chrome_doc(events)))?;
+    }
     println!("{} cells", result.cells.len());
     Ok(result)
 }
@@ -474,7 +550,13 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    execute_grid(&grid, &args.get("out"), args.get_usize("threads")?)?;
+    execute_grid(
+        &grid,
+        &args.get("out"),
+        args.get_usize("threads")?,
+        &args.get("trace"),
+        &args.get("timings"),
+    )?;
     Ok(())
 }
 
@@ -486,7 +568,13 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         timesteps: args.get_usize("timesteps")?,
         ..Default::default()
     };
-    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
+    let result = execute_grid(
+        &cfg.grid(),
+        &args.get("out"),
+        args.get_usize("threads")?,
+        &args.get("trace"),
+        &args.get("timings"),
+    )?;
 
     // The headline comparison: does state-aware routing beat blind
     // round-robin on tail latency in the hybrid topology?
@@ -516,7 +604,13 @@ fn cmd_eventsim(args: &Args) -> Result<()> {
     }
     cfg.horizon_s = horizon_ms as f64 / 1e3;
     cfg.seed = args.get_usize("seed")? as u64;
-    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
+    let result = execute_grid(
+        &cfg.grid(),
+        &args.get("out"),
+        args.get_usize("threads")?,
+        &args.get("trace"),
+        &args.get("timings"),
+    )?;
 
     // The headline: under bursty 64-rank arrivals on the pooled
     // topology, does the dynamic-batching window shrink tail latency?
@@ -566,7 +660,13 @@ fn cmd_cogsim(args: &Args) -> Result<()> {
     if cfg.timesteps == 0 {
         bail!("--timesteps must be positive");
     }
-    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
+    let result = execute_grid(
+        &cfg.grid(),
+        &args.get("out"),
+        args.get_usize("threads")?,
+        &args.get("trace"),
+        &args.get("timings"),
+    )?;
 
     // The headline: once swapping weights costs more than serving a
     // request, sticky model-affinity routing must beat blind
@@ -621,7 +721,13 @@ fn cmd_fabric(args: &Args) -> Result<()> {
     if cfg.timesteps == 0 {
         bail!("--timesteps must be positive");
     }
-    let result = execute_grid(&cfg.grid(), &args.get("out"), args.get_usize("threads")?)?;
+    let result = execute_grid(
+        &cfg.grid(),
+        &args.get("out"),
+        args.get_usize("threads")?,
+        &args.get("trace"),
+        &args.get("timings"),
+    )?;
 
     // The headline: at what (rank count, oversubscription) does the
     // shared pool lose to per-rank local GPUs on time-to-solution?
@@ -906,28 +1012,83 @@ fn cmd_scaling(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Print a Hydra-like request trace (workload inspection).
+/// Run one pooled cog cell with the flight recorder armed: write the
+/// Perfetto timeline + attribution JSON, print the attribution table,
+/// and hard-fail unless the recorder's per-device busy integrals
+/// reconcile with the engine's own service accounting to 1e-9 s.
 fn cmd_trace(args: &Args) -> Result<()> {
-    let timesteps = args.get_usize("timesteps")?;
-    let ranks = args.get_usize("ranks")?;
-    let zones = args.get_usize("zones")?;
-    let w = HydraWorkload { ranks, zones_per_rank: zones, ..Default::default() };
-    println!(
-        "hydra workload: {ranks} ranks x {zones} zones, {} materials, ~{} inferences/timestep",
-        w.materials,
-        w.expected_inferences_per_timestep()
-    );
-    for t in 0..timesteps {
-        let reqs = w.timestep(t);
-        let total: usize = reqs.iter().map(|r| r.samples).sum();
-        println!("timestep {t}: {} requests, {total} samples", reqs.len());
-        for r in reqs.iter().take(6) {
-            println!("  rank {} -> {:<14} {} samples", r.rank, r.model, r.samples);
-        }
-        if reqs.len() > 6 {
-            println!("  ... {} more", reqs.len() - 6);
-        }
+    let smoke = args.get_bool("smoke");
+    let mut ranks = args.get_usize("ranks")?;
+    let mut timesteps = args.get_usize("timesteps")?;
+    if smoke {
+        ranks = ranks.min(8);
+        timesteps = timesteps.min(3);
     }
+    if ranks == 0 || timesteps == 0 {
+        bail!("--ranks and --timesteps must be positive");
+    }
+    let sc = Scenario {
+        kind: Kind::Cog,
+        topology: Topology::Pooled,
+        fleet: Fleet::DefaultPool,
+        policy: Policy::LeastOutstanding,
+        ranks,
+        arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+        window_us: 0.0,
+        models: 8,
+        swap_s: args.get_usize("swap-us")? as f64 * 1e-6,
+        overlap: 0.0,
+        oversub: 2.0,
+        control: 0,
+    };
+    let knobs = Knobs { timesteps, seed: args.get_usize("seed")? as u64, ..Knobs::default() };
+    let run = try_run_cell_full(&sc, &knobs, &ControlSpec::static_(), true)
+        .map_err(|why| anyhow!(why))?;
+    let rec = run.recorder.expect("armed cog cells carry the recorder");
+
+    let mut max_err = 0.0f64;
+    for d in 0..rec.devices() {
+        let engine = run.device_busy_s.get(d).copied().unwrap_or(0.0);
+        max_err = max_err.max((rec.busy_integral_s(d) - engine).abs());
+    }
+    if max_err > 1e-9 {
+        bail!("flight-recorder busy integrals diverge from the engine by {max_err:.3e} s");
+    }
+
+    let out = args.get("out");
+    let stem = out.strip_suffix(".json").unwrap_or(&out);
+    let trace_path = format!("{stem}.trace.json");
+    write_json_out(&trace_path, &json::write(&chrome_doc(rec.chrome_trace(&sc.cell_key(), 0))))?;
+    write_json_out(&out, &json::write(&rec.attribution()))?;
+
+    let horizon_s = rec.horizon_s();
+    println!(
+        "flight recorder: {} — {} spans, {} markers, busy reconciled to {max_err:.1e} s",
+        sc.cell_key(),
+        rec.spans().len(),
+        rec.markers().len()
+    );
+    println!("  {:<24} {:>10} {:>8} {:>7}", "device", "busy_ms", "batches", "util");
+    for d in 0..rec.devices() {
+        let busy_s = rec.busy_integral_s(d);
+        println!(
+            "  {:<24} {:>10.3} {:>8} {:>6.1}%",
+            rec.device_name(d),
+            busy_s * 1e3,
+            rec.busy_intervals(d).len(),
+            if horizon_s > 0.0 { busy_s / horizon_s * 100.0 } else { 0.0 }
+        );
+    }
+    println!(
+        "  gate wait {:.3} ms over {} residency misses; horizon {:.3} ms",
+        rec.gate_wait_total_s() * 1e3,
+        rec.swap_misses(),
+        horizon_s * 1e3
+    );
+    if let Some(cog) = run.result.cog() {
+        println!("  time-to-solution {:.3} ms", cog.time_to_solution_s * 1e3);
+    }
+    println!("open {trace_path} in ui.perfetto.dev (or chrome://tracing) for the timeline");
     Ok(())
 }
 

@@ -44,14 +44,16 @@ impl LatencyRecorder {
         stats::percentile(&self.samples_s, 50.0)
     }
 
+    /// Tail percentile, honest at small n: with fewer than 100
+    /// samples this is the nearest-rank quantile (the p95 of 2
+    /// samples is the observed max, not an interpolated value no
+    /// request experienced).  p95/p99/p99.9 all route through the
+    /// same estimator — mixing interpolation into one of them made
+    /// p95 > p99 possible at small n.
     pub fn p95_s(&self) -> f64 {
-        stats::percentile(&self.samples_s, 95.0)
+        stats::tail_quantile(&self.samples_s, 95.0)
     }
 
-    /// Tail percentile, honest at small n: with fewer than 100
-    /// samples this is the nearest-rank quantile (the p99 of 2
-    /// samples is the observed max, not an interpolated value no
-    /// request experienced).
     pub fn p99_s(&self) -> f64 {
         stats::tail_quantile(&self.samples_s, 99.0)
     }
@@ -215,6 +217,37 @@ mod tests {
         let mut one = LatencyRecorder::new();
         one.record_secs(0.042);
         assert_eq!(one.p99_s(), 0.042);
+    }
+
+    #[test]
+    fn p95_uses_the_same_tail_estimator_as_p99() {
+        // regression: p95 interpolated while p99 was nearest-rank, so
+        // at small n the recorder could report p95 above p99.  All
+        // three tails now share `stats::tail_quantile`.
+        let mut one = LatencyRecorder::new();
+        one.record_secs(0.042);
+        assert_eq!(one.p95_s(), 0.042); // n = 1: the only observation
+
+        let mut two = LatencyRecorder::new();
+        two.record_secs(0.001);
+        two.record_secs(0.100);
+        assert_eq!(two.p95_s(), 0.100); // n = 2: the observed max
+        assert!(two.p95_s() <= two.p99_s());
+
+        let mut three = LatencyRecorder::new();
+        for s in [0.001, 0.002, 0.300] {
+            three.record_secs(s);
+        }
+        assert_eq!(three.p95_s(), 0.300); // n = 3: still the max
+        assert!(three.p95_s() <= three.p99_s());
+
+        // n = 100: the estimator hands off to interpolation
+        let mut hundred = LatencyRecorder::new();
+        for i in 1..=100 {
+            hundred.record_secs(i as f64);
+        }
+        assert!((hundred.p95_s() - 95.05).abs() < 1e-9);
+        assert!(hundred.p95_s() <= hundred.p99_s());
     }
 
     #[test]

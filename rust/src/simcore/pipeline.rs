@@ -21,6 +21,7 @@ use crate::cluster::{policy, Backend, Policy};
 use crate::devices::{profiles, ModelProfile};
 use crate::fabric::FabricSpec;
 use crate::netsim::dir_payload_bytes;
+use crate::trace::Recorder;
 
 use crate::eventsim::equeue::{CLASS_COMPLETION, CLASS_DEADLINE};
 
@@ -316,6 +317,15 @@ pub struct Pipeline {
     swaps: u64,
     swap_time_s: f64,
     effects: Effects,
+    /// The flight recorder ([`crate::trace`]).  `None` on every
+    /// default-constructed pipeline: each hook below is a single
+    /// `Option` check when tracing is off, and the differential tests
+    /// pin that the disarmed path is output-unobservable.
+    rec: Option<Box<Recorder>>,
+    /// Always-on per-backend service-seconds counter (one add per
+    /// batch): the ground truth the recorder's per-device busy
+    /// integrals must reconcile against to 1e-9.
+    device_busy_s: Vec<f64>,
 }
 
 impl Pipeline {
@@ -376,6 +386,8 @@ impl Pipeline {
             swaps: 0,
             swap_time_s: 0.0,
             effects: Effects::default(),
+            rec: None,
+            device_busy_s: vec![0.0; n],
         }
     }
 
@@ -383,6 +395,74 @@ impl Pipeline {
     /// flow events instead of the fixed link charge.
     pub fn attach_fabric(&mut self, spec: FabricSpec) {
         self.fabric = Some(FabricLayer::new(spec, self.backends.len()));
+    }
+
+    // ----------------------------------------------- flight recorder
+
+    /// Arm the flight recorder: device tracks register from the
+    /// backend names, link tracks (when a fabric is attached) from
+    /// the topology's as-built capacities.  Call before the run
+    /// starts; every timestamp recorded from here on is virtual time.
+    pub fn arm_trace(&mut self) {
+        let mut rec = Box::new(Recorder::new());
+        rec.register_devices(self.backends.iter().map(|b| b.name().to_string()));
+        if let Some(fab) = self.fabric.as_ref() {
+            let topo = &fab.spec.topology;
+            let labels = (0..topo.n_links()).map(|l| topo.link_label(l)).collect();
+            rec.register_links(labels, topo.capacities().to_vec());
+        }
+        self.rec = Some(rec);
+        // seed the series with the idle t=0 state
+        self.trace_fabric_sample();
+    }
+
+    /// Carry a recorder that records nothing — the bench's probe for
+    /// the disarmed hooks' hot-path cost.
+    pub fn attach_disarmed_recorder(&mut self) {
+        self.rec = Some(Box::new(Recorder::disarmed()));
+    }
+
+    /// Detach the recorder, closing its books at the current clock.
+    pub fn take_recorder(&mut self) -> Option<Box<Recorder>> {
+        let clock = self.clock_s;
+        let mut rec = self.rec.take()?;
+        if rec.armed() {
+            rec.finalize(clock);
+        }
+        Some(rec)
+    }
+
+    /// Is an armed recorder attached?
+    pub fn trace_armed(&self) -> bool {
+        self.rec.as_deref().is_some_and(Recorder::armed)
+    }
+
+    /// Record a control-plane marker at the current virtual clock
+    /// (no-op unless armed — guard any costly `detail` formatting
+    /// with [`Self::trace_armed`]).
+    pub fn trace_marker(&mut self, name: &'static str, detail: &str) {
+        let t = self.clock_s;
+        if let Some(rec) = self.rec.as_deref_mut() {
+            if rec.armed() {
+                rec.marker(name, detail.to_string(), t);
+            }
+        }
+    }
+
+    /// Per-backend service seconds accumulated so far (always on).
+    pub fn device_busy_s(&self) -> &[f64] {
+        &self.device_busy_s
+    }
+
+    /// Sample the fabric's per-link rates into the recorder; called
+    /// at every flow mutation site (start/finish/cancel/degrade).
+    fn trace_fabric_sample(&mut self) {
+        let clock = self.clock_s;
+        if let (Some(rec), Some(fab)) = (self.rec.as_deref_mut(), self.fabric.as_ref()) {
+            if rec.armed() {
+                rec.fabric_sample(clock, &fab.engine);
+            }
+        }
     }
 
     // ----------------------------------------------------- effects
@@ -555,6 +635,11 @@ impl Pipeline {
             model: mid as u32,
             samples: samples as u32,
         });
+        if let Some(rec) = self.rec.as_deref_mut() {
+            if rec.armed() {
+                rec.on_submit(id, rank as u32, mid as u32, &self.models[mid], self.clock_s);
+            }
+        }
         if self.batcher.is_some() {
             let stage = self.batcher.as_mut().unwrap();
             stage.enqueue(model, id as u64, samples, self.clock_s);
@@ -665,6 +750,14 @@ impl Pipeline {
         let occupancy = backend.occupancy_s(profile, total) + swap_s;
         backend.add_queue_s(occupancy);
         let complete_s = self.clock_s + latency_s;
+        self.device_busy_s[idx] += exec_s;
+        if let Some(rec) = self.rec.as_deref_mut() {
+            if rec.armed() {
+                rec.on_direct(
+                    &ids, idx, self.clock_s, wait_s, swap_s, link_s, exec_s, complete_s, miss,
+                );
+            }
+        }
         let mut rec_ids = self.pooled_ids();
         rec_ids.extend_from_slice(&ids);
         self.effects.dispatched.push(Dispatched {
@@ -772,6 +865,11 @@ impl Pipeline {
         self.dispatched += ids.len() as u64;
         self.batches += 1;
         self.live_batches[idx] += 1;
+        if let Some(rec) = self.rec.as_deref_mut() {
+            if rec.armed() {
+                rec.on_remote_dispatch(&ids, idx, self.clock_s, miss);
+            }
+        }
 
         let needs_swap_flow = miss && swap_bytes > 0.0;
         if needs_swap_flow {
@@ -811,6 +909,7 @@ impl Pipeline {
             let flow = fab.engine.start(clock, path, swap_bytes);
             fab.cont.insert(flow, FlowCont::Swap { token });
         }
+        self.trace_fabric_sample();
         self.arm_fabric();
     }
 
@@ -882,6 +981,8 @@ impl Pipeline {
             }
         }
         if self.fabric.is_some() {
+            // the drained completions changed the active flow set
+            self.trace_fabric_sample();
             self.arm_fabric();
         }
     }
@@ -938,10 +1039,19 @@ impl Pipeline {
         if deficit > 0.0 {
             backend.add_queue_s(deficit);
         }
-        let tr = &mut self.transits[token];
-        tr.started = true;
-        tr.swap_excess_s = clock - in_done_s;
-        tr.wait_s = wait_s;
+        let requests = {
+            let tr = &mut self.transits[token];
+            tr.started = true;
+            tr.swap_excess_s = clock - in_done_s;
+            tr.wait_s = wait_s;
+            tr.ids.len()
+        };
+        self.device_busy_s[idx] += exec_s;
+        if let Some(rec) = self.rec.as_deref_mut() {
+            if rec.armed() {
+                rec.on_occupy(idx, done_s - exec_s, done_s, requests);
+            }
+        }
         self.effects.scheduled.push((
             done_s,
             CLASS_COMPLETION,
@@ -964,6 +1074,7 @@ impl Pipeline {
         let path = fab.spec.topology.response_path(host, accel);
         let flow = fab.engine.start(clock, path, bytes_out);
         fab.cont.insert(flow, FlowCont::Out { token });
+        self.trace_fabric_sample();
         self.arm_fabric();
     }
 
@@ -989,6 +1100,27 @@ impl Pipeline {
         // cloning it (the token keeps indexing the timing fields).
         let ids = std::mem::take(&mut self.transits[token].ids);
         self.live_batches[self.transits[token].backend] -= 1;
+        if let Some(rec) = self.rec.as_deref_mut() {
+            if rec.armed() {
+                let tr = &self.transits[token];
+                let req_meta = &self.req_meta;
+                rec.on_transit_done(
+                    &ids,
+                    |id| {
+                        let m = &req_meta[id];
+                        (m.rank, m.model)
+                    },
+                    tr.backend,
+                    tr.dispatch_s,
+                    tr.in_done_s,
+                    tr.swap_excess_s,
+                    tr.wait_s,
+                    tr.exec_s,
+                    tr.out_start_s,
+                    self.clock_s,
+                );
+            }
+        }
         self.complete(ids, Some(token), Some(timing));
     }
 
@@ -1022,6 +1154,10 @@ impl Pipeline {
         assert!(idx < self.backends.len(), "unknown backend {idx}");
         if !self.active[idx] {
             return;
+        }
+        if self.trace_armed() {
+            let detail = format!("{} leaves", self.backends[idx].name());
+            self.trace_marker("backend_leave", &detail);
         }
         self.active[idx] = false;
         self.rebuild_live_tiers();
@@ -1067,6 +1203,8 @@ impl Pipeline {
             fab.reset_busy(idx);
         }
         if self.fabric.is_some() {
+            // cancelled flows returned their shares to the survivors
+            self.trace_fabric_sample();
             self.arm_fabric();
         }
         self.live_batches[idx] = 0;
@@ -1086,6 +1224,10 @@ impl Pipeline {
         if self.active[idx] {
             return;
         }
+        if self.trace_armed() {
+            let detail = format!("{} joins", self.backends[idx].name());
+            self.trace_marker("backend_join", &detail);
+        }
         self.active[idx] = true;
         self.rebuild_live_tiers();
         let parked = std::mem::take(&mut self.parked);
@@ -1098,9 +1240,18 @@ impl Pipeline {
     /// as-built capacity (degrade < 1, restore = 1) and re-solve the
     /// fair shares.  No-op on the fixed-charge (fabric-less) path.
     pub fn control_link_scale(&mut self, factor: f64) {
+        if self.trace_armed() {
+            if factor == 1.0 {
+                self.trace_marker("link_restore", "capacity restored");
+            } else {
+                let detail = format!("capacity x{factor}");
+                self.trace_marker("link_degrade", &detail);
+            }
+        }
         let clock = self.clock_s;
         if let Some(fab) = self.fabric.as_mut() {
             fab.set_capacity_scale(clock, factor);
+            self.trace_fabric_sample();
             self.arm_fabric();
         }
     }

@@ -1,0 +1,895 @@
+//! The flight recorder: deterministic, virtual-time-only tracing of
+//! the shared request pipeline.
+//!
+//! Off by default.  When armed (via `Pipeline::arm_trace`, surfaced
+//! as `repro trace` and the `--trace` flag on the scenario
+//! subcommands) the [`Recorder`] captures, entirely in **virtual
+//! time**:
+//!
+//! * per-request span lifecycles — queued → batched → payload flow →
+//!   weights gate → device busy → result flow ([`Span`]/[`Phase`]);
+//! * per-device occupancy tracks ([`BusyInterval`] — one interval per
+//!   served batch, so the per-device busy integral is exactly the sum
+//!   of service durations, which the property tests reconcile against
+//!   the pipeline's own always-on counter to 1e-9);
+//! * fabric per-link utilization and constrained-flow-count time
+//!   series, sampled at every flow start/finish/cancel/degrade (the
+//!   only instants rates can change — the series is exact, not
+//!   polled);
+//! * control-plane markers (leave/join, degrade/restore, rank fail,
+//!   autoscaler steps).
+//!
+//! Exports: [`Recorder::chrome_trace`] renders a Chrome trace-event
+//! JSON array (load the emitted file in <https://ui.perfetto.dev>),
+//! and [`Recorder::attribution`] a compact aggregated summary
+//! (per-device utilization integrals, gate-wait totals, the
+//! batch-occupancy histogram, per-link busy fractions).
+//!
+//! Determinism contract — enforced by `rust/tests/trace_props.rs`:
+//!
+//! * every timestamp in an emitted record is virtual time (no
+//!   `Instant`, no wall clock — the only wall-clock figure anywhere
+//!   near this layer is the `--timings` side-channel, which is a
+//!   separate file precisely so it can be honest about being
+//!   non-deterministic);
+//! * armed traces are byte-identical across `--threads` values (cells
+//!   record single-threaded; the sweep merges in input order);
+//! * disarmed, the recorder is output-unobservable: every hook is an
+//!   `Option` check on the pipeline's hot path and no golden or
+//!   `BENCH_*` floor moves.
+
+use std::collections::BTreeMap;
+
+use crate::fabric::FabricEngine;
+use crate::util::json::Value;
+
+/// One phase of a request's lifecycle.  The legacy fixed-charge path
+/// tiles `Queued → Wait → Swap → Link → Exec`; the fabric path tiles
+/// `Queued → XferIn → Gate → Wait → Exec → XferOut`.  Both partitions
+/// cover `[emit, complete]` exactly (the same identity the breakdown
+/// tests pin to 1e-9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Submitted, waiting in the batching window / router.
+    Queued,
+    /// Backend routing-queue wait (legacy) or device-busy wait
+    /// (fabric: after the gate, before execution).
+    Wait,
+    /// Residency swap charge on the critical chain (legacy path).
+    Swap,
+    /// Fixed link charge, both directions (legacy path).
+    Link,
+    /// Device execution.
+    Exec,
+    /// Request payload on the wire, host → accelerator.
+    XferIn,
+    /// Parked on the weights-ready gate (swap excess not hidden
+    /// behind the payload transfer).
+    Gate,
+    /// Result payload on the wire, accelerator → host.
+    XferOut,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Wait => "wait",
+            Phase::Swap => "swap",
+            Phase::Link => "link",
+            Phase::Exec => "exec",
+            Phase::XferIn => "xfer_in",
+            Phase::Gate => "gate",
+            Phase::XferOut => "xfer_out",
+        }
+    }
+}
+
+/// One closed per-request span, timestamps in virtual seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub id: usize,
+    pub rank: u32,
+    /// Dense model id; resolve via [`Recorder::model_name`].
+    pub model: u32,
+    pub backend: usize,
+    pub phase: Phase,
+    pub t0_s: f64,
+    pub t1_s: f64,
+}
+
+/// One batch's exclusive occupancy of a device.
+#[derive(Debug, Clone, Copy)]
+pub struct BusyInterval {
+    pub t0_s: f64,
+    pub t1_s: f64,
+    /// Requests in the batch (the occupancy histogram's unit).
+    pub requests: usize,
+}
+
+/// A control-plane instant.
+#[derive(Debug, Clone)]
+pub struct Marker {
+    pub t_s: f64,
+    pub name: &'static str,
+    pub detail: String,
+}
+
+/// A point on the fabric time series: per-link utilization (current
+/// fair-share rate / as-built capacity) plus the constrained-flow
+/// count.  Consecutive identical samples are coalesced.
+#[derive(Debug, Clone)]
+struct FabricSample {
+    t_s: f64,
+    util: Vec<f64>,
+    constrained: usize,
+}
+
+/// A request submitted but not yet dispatched.
+#[derive(Debug, Clone, Copy)]
+struct PendingReq {
+    submit_s: f64,
+    rank: u32,
+    model: u32,
+}
+
+/// The flight recorder.  Created armed by `Pipeline::arm_trace`;
+/// [`Recorder::disarmed`] exists only for the bench's
+/// compiled-but-disarmed overhead probe.
+#[derive(Debug)]
+pub struct Recorder {
+    armed: bool,
+    /// Mirrors the pipeline's dense model intern table (grown at
+    /// submit, so ids match by construction).
+    models: Vec<String>,
+    devices: Vec<String>,
+    links: Vec<String>,
+    link_caps: Vec<f64>,
+    /// Submit metadata per request id (dense; ids are submit-ordered).
+    pending: Vec<Option<PendingReq>>,
+    spans: Vec<Span>,
+    busy: Vec<Vec<BusyInterval>>,
+    markers: Vec<Marker>,
+    fabric_samples: Vec<FabricSample>,
+    /// Integrals under the piecewise-constant utilization series.
+    link_busy_s: Vec<f64>,
+    link_util_s: Vec<f64>,
+    /// Scratch for [`FabricEngine::link_rates_into`].
+    scratch: Vec<f64>,
+    batch_hist: BTreeMap<usize, u64>,
+    gate_wait_s: f64,
+    gate_wait_by_model: BTreeMap<u32, f64>,
+    swap_misses: u64,
+    /// Latest virtual timestamp seen anywhere (the trace horizon).
+    horizon_s: f64,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            armed: true,
+            models: Vec::new(),
+            devices: Vec::new(),
+            links: Vec::new(),
+            link_caps: Vec::new(),
+            pending: Vec::new(),
+            spans: Vec::new(),
+            busy: Vec::new(),
+            markers: Vec::new(),
+            fabric_samples: Vec::new(),
+            link_busy_s: Vec::new(),
+            link_util_s: Vec::new(),
+            scratch: Vec::new(),
+            batch_hist: BTreeMap::new(),
+            gate_wait_s: 0.0,
+            gate_wait_by_model: BTreeMap::new(),
+            swap_misses: 0,
+            horizon_s: 0.0,
+        }
+    }
+
+    /// A recorder that records nothing: the bench's probe for the
+    /// cost of carrying the hooks on the hot path.
+    pub fn disarmed() -> Recorder {
+        let mut r = Recorder::new();
+        r.armed = false;
+        r
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    // ------------------------------------------------- registration
+
+    pub fn register_devices(&mut self, names: impl Iterator<Item = String>) {
+        self.devices = names.collect();
+        self.busy = self.devices.iter().map(|_| Vec::new()).collect();
+    }
+
+    pub fn register_links(&mut self, labels: Vec<String>, caps: Vec<f64>) {
+        assert_eq!(labels.len(), caps.len());
+        self.link_busy_s = vec![0.0; labels.len()];
+        self.link_util_s = vec![0.0; labels.len()];
+        self.links = labels;
+        self.link_caps = caps;
+    }
+
+    pub fn model_name(&self, mid: u32) -> &str {
+        &self.models[mid as usize]
+    }
+
+    pub fn device_name(&self, idx: usize) -> &str {
+        &self.devices[idx]
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    // ------------------------------------------------------- hooks
+
+    fn touch(&mut self, t_s: f64) {
+        if t_s > self.horizon_s {
+            self.horizon_s = t_s;
+        }
+    }
+
+    pub fn on_submit(&mut self, id: usize, rank: u32, model: u32, name: &str, t_s: f64) {
+        if self.models.len() <= model as usize {
+            self.models.push(name.to_string());
+        }
+        if self.pending.len() <= id {
+            self.pending.resize(id + 1, None);
+        }
+        self.pending[id] = Some(PendingReq { submit_s: t_s, rank, model });
+        self.touch(t_s);
+    }
+
+    /// Close the queued span for each id in a dispatching batch and
+    /// count the batch in the occupancy histogram.  Returns nothing;
+    /// later phases are recorded by the path-specific hooks.  On a
+    /// control-plane *re*-dispatch the pending entry is already
+    /// spent — the queued span was emitted by the first dispatch and
+    /// is not duplicated.
+    fn close_queued(&mut self, ids: &[usize], backend: usize, t_s: f64) {
+        for &id in ids {
+            if let Some(p) = self.pending.get_mut(id).and_then(Option::take) {
+                self.spans.push(Span {
+                    id,
+                    rank: p.rank,
+                    model: p.model,
+                    backend,
+                    phase: Phase::Queued,
+                    t0_s: p.submit_s,
+                    t1_s: t_s,
+                });
+            }
+        }
+        *self.batch_hist.entry(ids.len()).or_insert(0) += 1;
+    }
+
+    /// Legacy fixed-charge dispatch: every phase share is known at
+    /// dispatch time, so the whole lifecycle lands at once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_direct(
+        &mut self,
+        ids: &[usize],
+        backend: usize,
+        dispatch_s: f64,
+        wait_s: f64,
+        swap_s: f64,
+        link_s: f64,
+        exec_s: f64,
+        complete_s: f64,
+        miss: bool,
+    ) {
+        *self.batch_hist.entry(ids.len()).or_insert(0) += 1;
+        if miss {
+            self.swap_misses += 1;
+        }
+        for &id in ids {
+            let (rank, model) = match self.pending.get_mut(id).and_then(Option::take) {
+                Some(p) => {
+                    self.spans.push(Span {
+                        id,
+                        rank: p.rank,
+                        model: p.model,
+                        backend,
+                        phase: Phase::Queued,
+                        t0_s: p.submit_s,
+                        t1_s: dispatch_s,
+                    });
+                    (p.rank, p.model)
+                }
+                // control-plane retry: the queued span was emitted by
+                // the first dispatch; recover the metadata from it
+                None => self.meta_of(id),
+            };
+            let mut t = dispatch_s;
+            for (phase, dt) in [
+                (Phase::Wait, wait_s),
+                (Phase::Swap, swap_s),
+                (Phase::Link, link_s),
+                (Phase::Exec, exec_s),
+            ] {
+                self.spans.push(Span {
+                    id,
+                    rank,
+                    model,
+                    backend,
+                    phase,
+                    t0_s: t,
+                    t1_s: t + dt,
+                });
+                t += dt;
+            }
+        }
+        self.on_occupy(backend, complete_s - exec_s, complete_s, ids.len());
+        self.touch(complete_s);
+    }
+
+    /// Fabric dispatch: only the queued span closes here; the
+    /// measured phases land at [`Self::on_transit_done`].
+    pub fn on_remote_dispatch(&mut self, ids: &[usize], backend: usize, t_s: f64, miss: bool) {
+        self.close_queued(ids, backend, t_s);
+        if miss {
+            self.swap_misses += 1;
+        }
+        self.touch(t_s);
+    }
+
+    /// The result landed: tile the transit's measured phases over
+    /// `[dispatch, done]` for every rider.  `meta` pairs each id with
+    /// its `(rank, model)` (the recorder's pending entry was spent by
+    /// the queued span at dispatch).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_transit_done(
+        &mut self,
+        ids: &[usize],
+        meta: impl Fn(usize) -> (u32, u32),
+        backend: usize,
+        dispatch_s: f64,
+        in_done_s: f64,
+        gate_s: f64,
+        wait_s: f64,
+        exec_s: f64,
+        out_start_s: f64,
+        done_s: f64,
+    ) {
+        for &id in ids {
+            let (rank, model) = meta(id);
+            for (phase, t0, t1) in [
+                (Phase::XferIn, dispatch_s, in_done_s),
+                (Phase::Gate, in_done_s, in_done_s + gate_s),
+                (Phase::Wait, in_done_s + gate_s, in_done_s + gate_s + wait_s),
+                (Phase::Exec, out_start_s - exec_s, out_start_s),
+                (Phase::XferOut, out_start_s, done_s),
+            ] {
+                self.spans.push(Span { id, rank, model, backend, phase, t0_s: t0, t1_s: t1 });
+            }
+            if gate_s > 0.0 {
+                self.gate_wait_s += gate_s;
+                *self.gate_wait_by_model.entry(model).or_insert(0.0) += gate_s;
+            }
+        }
+        self.touch(done_s);
+    }
+
+    /// One batch occupied a device for `[t0, t1]` (the fabric path's
+    /// `occupy` is exclusive by construction; the legacy path's exec
+    /// windows follow the queue-seconds model).
+    pub fn on_occupy(&mut self, backend: usize, t0_s: f64, t1_s: f64, requests: usize) {
+        if backend < self.busy.len() {
+            self.busy[backend].push(BusyInterval { t0_s, t1_s, requests });
+        }
+        self.touch(t1_s);
+    }
+
+    pub fn marker(&mut self, name: &'static str, detail: String, t_s: f64) {
+        self.markers.push(Marker { t_s, name, detail });
+        self.touch(t_s);
+    }
+
+    /// Sample the fabric's per-link rates (the only instants rates
+    /// change are flow mutations, so calling this at each mutation
+    /// site yields an exact piecewise-constant series).
+    pub fn fabric_sample(&mut self, t_s: f64, engine: &FabricEngine) {
+        let mut buf = std::mem::take(&mut self.scratch);
+        let constrained = engine.link_rates_into(&mut buf);
+        self.integrate_to(t_s);
+        let util: Vec<f64> = buf
+            .iter()
+            .zip(&self.link_caps)
+            .map(|(&r, &c)| if c.is_finite() && c > 0.0 { r / c } else { 0.0 })
+            .collect();
+        let same = self
+            .fabric_samples
+            .last()
+            .is_some_and(|s| s.util == util && s.constrained == constrained);
+        if !same {
+            self.fabric_samples.push(FabricSample { t_s, util, constrained });
+        }
+        self.scratch = buf;
+        self.touch(t_s);
+    }
+
+    /// Advance the link integrals to `t_s` under the last sample's
+    /// piecewise-constant utilization.
+    fn integrate_to(&mut self, t_s: f64) {
+        if let Some(last) = self.fabric_samples.last() {
+            let dt = t_s - last.t_s;
+            if dt > 0.0 {
+                for (l, &u) in last.util.iter().enumerate() {
+                    self.link_util_s[l] += u * dt;
+                    if u > 0.0 {
+                        self.link_busy_s[l] += dt;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Close the books at the run's end (integrate the fabric series
+    /// out to the final virtual clock).
+    pub fn finalize(&mut self, t_s: f64) {
+        self.touch(t_s);
+        self.integrate_to(self.horizon_s);
+        if let Some(last) = self.fabric_samples.last_mut() {
+            if last.t_s < self.horizon_s {
+                last.t_s = self.horizon_s;
+            }
+        }
+    }
+
+    /// Recover `(rank, model)` for a control-plane retry (the pending
+    /// entry was spent by the first dispatch).  Linear scan — retries
+    /// are rare by construction (each orphan re-dispatches once).
+    fn meta_of(&self, id: usize) -> (u32, u32) {
+        self.spans
+            .iter()
+            .rev()
+            .find(|s| s.id == id)
+            .map(|s| (s.rank, s.model))
+            .unwrap_or((0, 0))
+    }
+
+    // --------------------------------------------------- accessors
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn busy_intervals(&self, backend: usize) -> &[BusyInterval] {
+        &self.busy[backend]
+    }
+
+    /// Total device-busy seconds of `backend` (Σ interval lengths).
+    pub fn busy_integral_s(&self, backend: usize) -> f64 {
+        self.busy[backend].iter().map(|b| b.t1_s - b.t0_s).sum()
+    }
+
+    pub fn markers(&self) -> &[Marker] {
+        &self.markers
+    }
+
+    pub fn gate_wait_total_s(&self) -> f64 {
+        self.gate_wait_s
+    }
+
+    pub fn swap_misses(&self) -> u64 {
+        self.swap_misses
+    }
+
+    pub fn horizon_s(&self) -> f64 {
+        self.horizon_s
+    }
+
+    pub fn batch_histogram(&self) -> &BTreeMap<usize, u64> {
+        &self.batch_hist
+    }
+
+    // ----------------------------------------------------- exports
+
+    /// Render the Chrome trace-event array for this recorder's run.
+    /// `label` prefixes the process names (the sweep merges several
+    /// cells into one file); `pid_base` offsets the four process ids
+    /// so merged cells stay disjoint.  Events are sorted by
+    /// `(pid, tid, ts)` — the validator's monotone-per-track
+    /// invariant holds by construction.
+    pub fn chrome_trace(&self, label: &str, pid_base: u64) -> Vec<Value> {
+        let pid_req = pid_base + 1;
+        let pid_dev = pid_base + 2;
+        let pid_fab = pid_base + 3;
+        let pid_ctl = pid_base + 4;
+        let us = |t: f64| t * 1e6;
+        let mut meta_events: Vec<Value> = Vec::new();
+        let mut meta_event = |pid: u64, tid: u64, which: &str, name: String| {
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Value::String(name));
+            let mut e = BTreeMap::new();
+            e.insert("ph".to_string(), Value::String("M".to_string()));
+            e.insert("pid".to_string(), Value::Number(pid as f64));
+            e.insert("tid".to_string(), Value::Number(tid as f64));
+            e.insert("name".to_string(), Value::String(which.to_string()));
+            e.insert("args".to_string(), Value::Object(args));
+            meta_events.push(Value::Object(e));
+        };
+        let procname = |what: &str| {
+            if label.is_empty() {
+                what.to_string()
+            } else {
+                format!("{label} {what}")
+            }
+        };
+
+        // (pid, tid, ts_us, seq) -> event; stable sort keeps the
+        // recorder's push order for equal timestamps.
+        let mut timed: Vec<(u64, u64, f64, Value)> = Vec::new();
+        let event = |ph: &str, name: String, pid: u64, tid: u64, ts: f64,
+                     extra: Vec<(&str, Value)>| {
+            let mut e = BTreeMap::new();
+            e.insert("ph".to_string(), Value::String(ph.to_string()));
+            e.insert("name".to_string(), Value::String(name));
+            e.insert("pid".to_string(), Value::Number(pid as f64));
+            e.insert("tid".to_string(), Value::Number(tid as f64));
+            e.insert("ts".to_string(), Value::Number(ts));
+            for (k, v) in extra {
+                e.insert(k.to_string(), v);
+            }
+            Value::Object(e)
+        };
+
+        // ---- requests: one thread per rank, X span per phase
+        meta_event(pid_req, 0, "process_name", procname("requests"));
+        let mut ranks: Vec<u32> = self.spans.iter().map(|s| s.rank).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        for &r in &ranks {
+            meta_event(pid_req, r as u64 + 1, "thread_name", format!("rank{r}"));
+        }
+        for s in &self.spans {
+            let mut args = BTreeMap::new();
+            args.insert("id".to_string(), Value::Number(s.id as f64));
+            args.insert(
+                "model".to_string(),
+                Value::String(self.models[s.model as usize].clone()),
+            );
+            args.insert(
+                "backend".to_string(),
+                Value::String(self.devices.get(s.backend).cloned().unwrap_or_default()),
+            );
+            timed.push((
+                pid_req,
+                s.rank as u64 + 1,
+                us(s.t0_s),
+                event(
+                    "X",
+                    s.phase.name().to_string(),
+                    pid_req,
+                    s.rank as u64 + 1,
+                    us(s.t0_s),
+                    vec![
+                        ("dur", Value::Number(us(s.t1_s - s.t0_s))),
+                        ("args", Value::Object(args)),
+                    ],
+                ),
+            ));
+        }
+
+        // ---- devices: one thread per backend, B/E busy pairs
+        meta_event(pid_dev, 0, "process_name", procname("devices"));
+        for (d, name) in self.devices.iter().enumerate() {
+            meta_event(pid_dev, d as u64 + 1, "thread_name", name.clone());
+        }
+        for (d, intervals) in self.busy.iter().enumerate() {
+            let tid = d as u64 + 1;
+            let mut sorted: Vec<&BusyInterval> = intervals.iter().collect();
+            sorted.sort_by(|a, b| a.t0_s.total_cmp(&b.t0_s));
+            for b in sorted {
+                let mut args = BTreeMap::new();
+                args.insert("requests".to_string(), Value::Number(b.requests as f64));
+                timed.push((
+                    pid_dev,
+                    tid,
+                    us(b.t0_s),
+                    event(
+                        "B",
+                        "busy".to_string(),
+                        pid_dev,
+                        tid,
+                        us(b.t0_s),
+                        vec![("args", Value::Object(args))],
+                    ),
+                ));
+                timed.push((
+                    pid_dev,
+                    tid,
+                    us(b.t1_s),
+                    event("E", "busy".to_string(), pid_dev, tid, us(b.t1_s), vec![]),
+                ));
+            }
+        }
+
+        // ---- fabric: counter tracks (per-link utilization +
+        // constrained flows), one C event pair per sample
+        if !self.links.is_empty() {
+            meta_event(pid_fab, 0, "process_name", procname("fabric"));
+            meta_event(pid_fab, 1, "thread_name", "links".to_string());
+            for s in &self.fabric_samples {
+                let mut args = BTreeMap::new();
+                for (l, &u) in s.util.iter().enumerate() {
+                    args.insert(self.links[l].clone(), Value::Number(u));
+                }
+                timed.push((
+                    pid_fab,
+                    1,
+                    us(s.t_s),
+                    event(
+                        "C",
+                        "link_util".to_string(),
+                        pid_fab,
+                        1,
+                        us(s.t_s),
+                        vec![("args", Value::Object(args))],
+                    ),
+                ));
+                let mut args = BTreeMap::new();
+                args.insert(
+                    "count".to_string(),
+                    Value::Number(s.constrained as f64),
+                );
+                timed.push((
+                    pid_fab,
+                    1,
+                    us(s.t_s),
+                    event(
+                        "C",
+                        "constrained_flows".to_string(),
+                        pid_fab,
+                        1,
+                        us(s.t_s),
+                        vec![("args", Value::Object(args))],
+                    ),
+                ));
+            }
+        }
+
+        // ---- control plane: instant events
+        if !self.markers.is_empty() {
+            meta_event(pid_ctl, 0, "process_name", procname("control"));
+            meta_event(pid_ctl, 1, "thread_name", "events".to_string());
+            for m in &self.markers {
+                let mut args = BTreeMap::new();
+                args.insert("detail".to_string(), Value::String(m.detail.clone()));
+                timed.push((
+                    pid_ctl,
+                    1,
+                    us(m.t_s),
+                    event(
+                        "i",
+                        m.name.to_string(),
+                        pid_ctl,
+                        1,
+                        us(m.t_s),
+                        vec![
+                            ("s", Value::String("t".to_string())),
+                            ("args", Value::Object(args)),
+                        ],
+                    ),
+                ));
+            }
+        }
+
+        timed.sort_by(|a, b| {
+            a.0.cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.total_cmp(&b.2))
+        });
+        meta_events.extend(timed.into_iter().map(|(_, _, _, e)| e));
+        meta_events
+    }
+
+    /// The compact aggregated attribution summary.
+    pub fn attribution(&self) -> Value {
+        let horizon = self.horizon_s;
+        let mut doc = BTreeMap::new();
+        doc.insert("horizon_us".to_string(), Value::Number(horizon * 1e6));
+
+        let devices: Vec<Value> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(d, name)| {
+                let busy = self.busy_integral_s(d);
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Value::String(name.clone()));
+                m.insert("busy_us".to_string(), Value::Number(busy * 1e6));
+                m.insert(
+                    "batches".to_string(),
+                    Value::Number(self.busy[d].len() as f64),
+                );
+                m.insert(
+                    "utilization".to_string(),
+                    Value::Number(if horizon > 0.0 { busy / horizon } else { 0.0 }),
+                );
+                Value::Object(m)
+            })
+            .collect();
+        doc.insert("devices".to_string(), Value::Array(devices));
+
+        let mut gate = BTreeMap::new();
+        gate.insert("total_us".to_string(), Value::Number(self.gate_wait_s * 1e6));
+        let by_model: BTreeMap<String, Value> = self
+            .gate_wait_by_model
+            .iter()
+            .map(|(&mid, &s)| (self.models[mid as usize].clone(), Value::Number(s * 1e6)))
+            .collect();
+        gate.insert("by_model_us".to_string(), Value::Object(by_model));
+        doc.insert("gate_wait".to_string(), Value::Object(gate));
+
+        let hist: BTreeMap<String, Value> = self
+            .batch_hist
+            .iter()
+            .map(|(&k, &v)| (format!("{k:04}"), Value::Number(v as f64)))
+            .collect();
+        doc.insert("batch_occupancy".to_string(), Value::Object(hist));
+
+        let links: Vec<Value> = self
+            .links
+            .iter()
+            .enumerate()
+            .map(|(l, name)| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Value::String(name.clone()));
+                m.insert(
+                    "busy_frac".to_string(),
+                    Value::Number(if horizon > 0.0 {
+                        self.link_busy_s[l] / horizon
+                    } else {
+                        0.0
+                    }),
+                );
+                m.insert(
+                    "mean_util".to_string(),
+                    Value::Number(if horizon > 0.0 {
+                        self.link_util_s[l] / horizon
+                    } else {
+                        0.0
+                    }),
+                );
+                Value::Object(m)
+            })
+            .collect();
+        doc.insert("links".to_string(), Value::Array(links));
+
+        doc.insert("swaps".to_string(), Value::Number(self.swap_misses as f64));
+        doc.insert("markers".to_string(), Value::Number(self.markers.len() as f64));
+        doc.insert("spans".to_string(), Value::Number(self.spans.len() as f64));
+        Value::Object(doc)
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed_with_device() -> Recorder {
+        let mut r = Recorder::new();
+        r.register_devices(["dev0".to_string()].into_iter());
+        r
+    }
+
+    #[test]
+    fn queued_span_closes_once_per_id() {
+        let mut r = armed_with_device();
+        r.on_submit(0, 2, 0, "hermit", 0.5);
+        r.on_direct(&[0], 0, 1.0, 0.1, 0.0, 0.2, 0.3, 1.6, false);
+        let q: Vec<&Span> =
+            r.spans().iter().filter(|s| s.phase == Phase::Queued).collect();
+        assert_eq!(q.len(), 1);
+        assert_eq!((q[0].t0_s, q[0].t1_s), (0.5, 1.0));
+        assert_eq!(q[0].rank, 2);
+        // a second dispatch of the same id (control-plane retry)
+        // must not duplicate the queued span
+        r.on_direct(&[0], 0, 2.0, 0.0, 0.0, 0.2, 0.3, 2.5, false);
+        let q2 = r.spans().iter().filter(|s| s.phase == Phase::Queued).count();
+        assert_eq!(q2, 1);
+    }
+
+    #[test]
+    fn direct_phases_tile_dispatch_to_complete() {
+        let mut r = armed_with_device();
+        r.on_submit(0, 0, 0, "hermit", 0.0);
+        r.on_direct(&[0], 0, 1.0, 0.25, 0.5, 0.125, 0.125, 2.0, true);
+        let mut t = 1.0;
+        for phase in [Phase::Wait, Phase::Swap, Phase::Link, Phase::Exec] {
+            let s = r.spans().iter().find(|s| s.phase == phase).unwrap();
+            assert_eq!(s.t0_s, t, "{phase:?} start");
+            t = s.t1_s;
+        }
+        assert_eq!(t, 2.0);
+        assert_eq!(r.swap_misses(), 1);
+        assert!((r.busy_integral_s(0) - 0.125).abs() < 1e-12);
+        assert_eq!(r.batch_histogram().get(&1), Some(&1));
+    }
+
+    #[test]
+    fn transit_phases_tile_and_gate_accumulates() {
+        let mut r = armed_with_device();
+        r.on_submit(0, 1, 0, "hermit", 0.0);
+        r.on_remote_dispatch(&[0], 0, 0.5, true);
+        r.on_transit_done(
+            &[0],
+            |_| (1, 0),
+            0,
+            0.5,  // dispatch
+            1.0,  // in_done
+            0.25, // gate
+            0.25, // wait
+            0.5,  // exec
+            2.0,  // out_start (= 1.0 + .25 + .25 + .5)
+            2.25, // done
+        );
+        let phases: Vec<(Phase, f64, f64)> = r
+            .spans()
+            .iter()
+            .filter(|s| s.phase != Phase::Queued)
+            .map(|s| (s.phase, s.t0_s, s.t1_s))
+            .collect();
+        assert_eq!(
+            phases,
+            vec![
+                (Phase::XferIn, 0.5, 1.0),
+                (Phase::Gate, 1.0, 1.25),
+                (Phase::Wait, 1.25, 1.5),
+                (Phase::Exec, 1.5, 2.0),
+                (Phase::XferOut, 2.0, 2.25),
+            ]
+        );
+        assert!((r.gate_wait_total_s() - 0.25).abs() < 1e-12);
+        assert_eq!(r.horizon_s(), 2.25);
+    }
+
+    #[test]
+    fn chrome_trace_is_sorted_and_declares_tracks() {
+        let mut r = armed_with_device();
+        r.on_submit(0, 0, 0, "hermit", 0.0);
+        r.on_direct(&[0], 0, 1.0, 0.1, 0.0, 0.1, 0.3, 1.5, false);
+        r.marker("backend_leave", "backend 0".to_string(), 1.7);
+        r.finalize(2.0);
+        let events = r.chrome_trace("cell", 0);
+        // every non-metadata event's (pid, tid, ts) is sorted
+        let mut last: Option<(f64, f64, f64)> = None;
+        let mut metas = 0;
+        for e in &events {
+            let ph = e.get("ph").and_then(Value::as_str).unwrap();
+            if ph == "M" {
+                metas += 1;
+                continue;
+            }
+            let key = (
+                e.get("pid").and_then(Value::as_f64).unwrap(),
+                e.get("tid").and_then(Value::as_f64).unwrap(),
+                e.get("ts").and_then(Value::as_f64).unwrap(),
+            );
+            if let Some(prev) = last {
+                assert!(prev <= key, "events out of order: {prev:?} then {key:?}");
+            }
+            last = Some(key);
+        }
+        // process names for requests/devices/control + thread names
+        assert!(metas >= 5, "expected track metadata, got {metas}");
+    }
+
+    #[test]
+    fn disarmed_recorder_reports_disarmed() {
+        assert!(!Recorder::disarmed().armed());
+        assert!(Recorder::new().armed());
+    }
+}

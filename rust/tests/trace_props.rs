@@ -1,0 +1,289 @@
+//! Property tests for the flight recorder: the invariants the trace
+//! is allowed to claim — device busy intervals never overlap and
+//! integrate to the engine's own busy accumulator, per-request spans
+//! tile the queued→completion interval with no gaps, the armed merged
+//! timeline is byte-identical at every thread count, and a recorder
+//! (armed or disarmed) never perturbs the simulated results.
+
+use std::collections::BTreeMap;
+
+use cogsim_disagg::cluster::Policy;
+use cogsim_disagg::eventsim::{
+    ArrivalProcess, Batching, CogSim, CogSimConfig, EventSim, EventSimConfig,
+};
+use cogsim_disagg::harness::{
+    build_fabric_spec, build_fleet, run_grid_threads_full, try_run_cell_full, Axes, ControlSpec,
+    Fleet, Grid, Kind, Knobs, Scenario, Topology,
+};
+use cogsim_disagg::netsim::Link;
+use cogsim_disagg::trace::Phase;
+use cogsim_disagg::util::json::{self, Value};
+
+/// The `repro trace` shape: a pooled cog cell whose every dispatch
+/// crosses the fabric (so device occupancy comes from the exclusive
+/// `occupy` path) with a real residency swap cost.
+fn pooled_cog(ranks: usize) -> Scenario {
+    Scenario {
+        kind: Kind::Cog,
+        topology: Topology::Pooled,
+        fleet: Fleet::DefaultPool,
+        policy: Policy::LeastOutstanding,
+        ranks,
+        arrival: ArrivalProcess::Synchronized { period_s: 0.02, jitter_s: 0.0 },
+        window_us: 0.0,
+        models: 8,
+        swap_s: 200e-6,
+        overlap: 0.0,
+        oversub: 2.0,
+        control: 0,
+    }
+}
+
+#[test]
+fn busy_intervals_never_overlap_and_integrate_to_device_busy() {
+    let run = try_run_cell_full(&pooled_cog(16), &Knobs::default(), &ControlSpec::static_(), true)
+        .expect("pooled cog cell runs");
+    let rec = run.recorder.as_ref().expect("armed run keeps its recorder");
+    assert!(rec.devices() > 0);
+    assert_eq!(
+        rec.devices(),
+        run.device_busy_s.len(),
+        "recorder and engine disagree on device count"
+    );
+    let mut total = 0.0;
+    for d in 0..rec.devices() {
+        let busy = rec.busy_intervals(d);
+        let mut integral = 0.0;
+        for b in busy {
+            assert!(b.t1_s >= b.t0_s, "negative busy interval on device {d}");
+            assert!(b.requests > 0, "empty batch occupied device {d}");
+            integral += b.t1_s - b.t0_s;
+        }
+        for w in busy.windows(2) {
+            assert!(
+                w[1].t0_s >= w[0].t1_s - 1e-12,
+                "device {d} double-booked: [{:.9}, {:.9}] begins before [{:.9}, {:.9}] ends",
+                w[1].t0_s,
+                w[1].t1_s,
+                w[0].t0_s,
+                w[0].t1_s,
+            );
+        }
+        assert!(
+            (integral - rec.busy_integral_s(d)).abs() < 1e-9,
+            "device {d}: interval sum {integral} vs recorder integral {}",
+            rec.busy_integral_s(d),
+        );
+        assert!(
+            (rec.busy_integral_s(d) - run.device_busy_s[d]).abs() < 1e-9,
+            "device {d}: recorder integral {} vs engine busy accumulator {}",
+            rec.busy_integral_s(d),
+            run.device_busy_s[d],
+        );
+        total += integral;
+    }
+    assert!(total > 0.0, "a 16-rank cog cell never occupied a device");
+}
+
+#[test]
+fn request_spans_tile_the_queued_to_completion_interval() {
+    let run = try_run_cell_full(&pooled_cog(8), &Knobs::default(), &ControlSpec::static_(), true)
+        .expect("pooled cog cell runs");
+    let rec = run.recorder.as_ref().expect("armed run keeps its recorder");
+
+    // group per request, preserving emit order (chronological per id)
+    let mut by_id: BTreeMap<usize, Vec<_>> = BTreeMap::new();
+    for s in rec.spans() {
+        by_id.entry(s.id).or_default().push(*s);
+    }
+    assert!(!by_id.is_empty(), "no request spans recorded");
+
+    let mut gate_total = 0.0;
+    for (id, spans) in &by_id {
+        // the fabric path emits the full six-phase lifecycle
+        let phases: Vec<Phase> = spans.iter().map(|s| s.phase).collect();
+        assert_eq!(
+            phases,
+            [
+                Phase::Queued,
+                Phase::XferIn,
+                Phase::Gate,
+                Phase::Wait,
+                Phase::Exec,
+                Phase::XferOut,
+            ],
+            "request {id}: unexpected phase sequence"
+        );
+        for s in spans {
+            assert!(s.t1_s >= s.t0_s - 1e-12, "request {id}: negative {:?} span", s.phase);
+            assert!(s.t0_s >= 0.0 && s.t1_s <= rec.horizon_s() + 1e-9);
+            if s.phase == Phase::Gate {
+                gate_total += s.t1_s - s.t0_s;
+            }
+        }
+        for w in spans.windows(2) {
+            assert!(
+                (w[1].t0_s - w[0].t1_s).abs() < 1e-9,
+                "request {id}: gap between {:?} (ends {:.9}) and {:?} (starts {:.9})",
+                w[0].phase,
+                w[0].t1_s,
+                w[1].phase,
+                w[1].t0_s,
+            );
+        }
+    }
+    assert!(
+        (gate_total - rec.gate_wait_total_s()).abs() < 1e-9,
+        "gate spans sum to {gate_total}, recorder says {}",
+        rec.gate_wait_total_s(),
+    );
+
+    // ... and the recorder's books reconcile with the summary the
+    // goldens pin: same request count, one occupancy interval and one
+    // histogram entry per dispatched batch, same residency misses.
+    let cog = run.result.cog().expect("cog cell yields a cog summary");
+    assert_eq!(by_id.len() as u64, cog.requests, "span ids vs completed requests");
+    assert_eq!(rec.swap_misses(), cog.swaps, "recorder misses vs summary swaps");
+    let hist_batches: u64 = rec.batch_histogram().values().sum();
+    assert_eq!(hist_batches, cog.batches, "occupancy histogram vs dispatched batches");
+    let occupies: u64 = (0..rec.devices()).map(|d| rec.busy_intervals(d).len() as u64).sum();
+    assert_eq!(occupies, cog.batches, "busy intervals vs dispatched batches");
+}
+
+/// A small mixed grid (event + cog, two policies, two rank counts)
+/// whose cells take visibly different wall times, so a parallel run
+/// genuinely interleaves completions.
+fn small_grid() -> Grid {
+    let mut axes = Axes::default();
+    axes.kinds = vec![Kind::Event, Kind::Cog];
+    axes.topologies = vec![Topology::Pooled];
+    axes.policies = vec![Policy::RoundRobin, Policy::LeastOutstanding];
+    axes.rank_counts = vec![4, 8];
+    axes.fabric_oversubs = vec![4.0];
+    axes.swap_costs_s = vec![200e-6];
+    let mut knobs = Knobs::default();
+    knobs.timesteps = 4;
+    knobs.horizon_s = 0.05;
+    Grid { axes, knobs }
+}
+
+fn merged_trace_json(grid: &Grid, threads: usize) -> String {
+    let (result, _timings, recorders) = run_grid_threads_full(grid, threads, true).split();
+    assert_eq!(recorders.len(), result.cells.len());
+    let mut events = Vec::new();
+    for (i, rec) in recorders.iter().enumerate() {
+        let rec = rec.as_ref().expect("every engine-backed cell returns a recorder when armed");
+        events.extend(rec.chrome_trace(&result.cells[i].scenario.cell_key(), i as u64 * 8));
+    }
+    assert!(!events.is_empty());
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Value::Array(events));
+    json::write(&Value::Object(doc))
+}
+
+#[test]
+fn armed_merged_trace_is_byte_identical_at_every_thread_count() {
+    let grid = small_grid();
+    let sequential = merged_trace_json(&grid, 1);
+    for threads in [2, 8, 0] {
+        let parallel = merged_trace_json(&grid, threads);
+        assert_eq!(
+            sequential, parallel,
+            "merged trace differs between 1 worker and {threads} workers"
+        );
+    }
+}
+
+#[test]
+fn arming_the_recorder_never_changes_the_summary_document() {
+    let grid = small_grid();
+    let disarmed = json::write(&run_grid_threads_full(&grid, 2, false).split().0.to_json());
+    let armed = json::write(&run_grid_threads_full(&grid, 2, true).split().0.to_json());
+    assert_eq!(disarmed, armed, "an armed recorder perturbed the golden-pinned document");
+}
+
+// ------------------------------------------- engine-level differential
+
+/// 0 = no recorder (the exact legacy path), 1 = recorder attached but
+/// disarmed, 2 = armed.
+fn event_summary(fabric: bool, mode: u8) -> String {
+    let (backends, tier) = build_fleet(Topology::Pooled, 6, Fleet::DefaultPool, &Link::infiniband_cx6());
+    let cfg = EventSimConfig {
+        ranks: 6,
+        materials: 8,
+        samples_per_request: (2, 3),
+        requests_per_burst: 4,
+        mir_every: 2,
+        mir_samples: 64,
+        arrival: ArrivalProcess::Poisson { rate_per_rank: 900.0 },
+        batching: Batching::Window { window_s: 100e-6, max_batch: 64 },
+        horizon_s: 0.05,
+        seed: 7,
+    };
+    let mut sim = if fabric {
+        let spec = build_fabric_spec(Topology::Pooled, 6, Fleet::DefaultPool, 4.0)
+            .expect("pooled topology has a fabric");
+        EventSim::with_fabric(backends, Policy::LeastOutstanding, cfg, tier.hermit, tier.mir, spec)
+    } else {
+        // same remote fleet, fixed-charge link model: the legacy path
+        EventSim::with_tiers(backends, Policy::LeastOutstanding, cfg, tier.hermit, tier.mir)
+    };
+    match mode {
+        1 => sim.attach_disarmed_recorder(),
+        2 => sim.arm_trace(),
+        _ => {}
+    }
+    sim.run_to_completion();
+    format!("{:?}", sim.summary())
+}
+
+fn cog_summary(mode: u8) -> String {
+    let (backends, tier) = build_fleet(Topology::Pooled, 6, Fleet::DefaultPool, &Link::infiniband_cx6());
+    let cfg = CogSimConfig {
+        ranks: 6,
+        timesteps: 4,
+        compute_s: 2e-3,
+        compute_jitter_s: 0.0,
+        requests_per_step: 4,
+        models: 8,
+        samples_per_request: (2, 3),
+        mir_every: 2,
+        mir_samples: 64,
+        overlap: 0.25,
+        swap_s: 200e-6,
+        residency_slots: 4,
+        batching: Batching::Off,
+        seed: 7,
+    };
+    let spec = build_fabric_spec(Topology::Pooled, 6, Fleet::DefaultPool, 4.0)
+        .expect("pooled topology has a fabric");
+    let mut sim =
+        CogSim::with_fabric(backends, Policy::LeastOutstanding, cfg, tier.hermit, tier.mir, spec);
+    match mode {
+        1 => sim.attach_disarmed_recorder(),
+        2 => sim.arm_trace(),
+        _ => {}
+    }
+    sim.run_to_completion();
+    format!("{:?}", sim.summary())
+}
+
+#[test]
+fn disarmed_recorder_is_byte_identical_to_the_legacy_path() {
+    for fabric in [true, false] {
+        let legacy = event_summary(fabric, 0);
+        assert_eq!(
+            legacy,
+            event_summary(fabric, 1),
+            "disarmed recorder changed the event summary (fabric: {fabric})"
+        );
+        assert_eq!(
+            legacy,
+            event_summary(fabric, 2),
+            "armed recorder changed the event summary (fabric: {fabric})"
+        );
+    }
+    let legacy = cog_summary(0);
+    assert_eq!(legacy, cog_summary(1), "disarmed recorder changed the cog summary");
+    assert_eq!(legacy, cog_summary(2), "armed recorder changed the cog summary");
+}

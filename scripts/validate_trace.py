@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Structural validator for flight-recorder Chrome trace files.
+
+Usage:
+    python3 scripts/validate_trace.py <trace.json> [more.json ...]
+
+Checks the invariants Perfetto / chrome://tracing rely on, so CI
+catches a malformed export before a human ever loads one:
+
+  * the document is a JSON object with a ``traceEvents`` array (a
+    bare array is also accepted);
+  * every event is an object carrying a string ``ph``;
+  * every timed event (anything but metadata ``M``) carries numeric
+    ``pid``/``tid``/``ts`` with ``ts >= 0``;
+  * within each (pid, tid) track, ``ts`` is non-decreasing in file
+    order (the exporter sorts; an unsorted file breaks counters);
+  * duration events pair up: each ``E`` closes the innermost open
+    ``B`` of the same name on its track, and no track ends with an
+    open ``B``;
+  * complete events (``X``) carry a numeric ``dur >= 0``;
+  * every pid referenced by a timed event has a ``process_name``
+    metadata record, and every (pid, tid) a ``thread_name`` record.
+
+Stdlib only — no third-party imports.  Exits non-zero on the first
+malformed file, after listing every violation found in it.
+"""
+
+import json
+import sys
+
+
+def load_events(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            raise ValueError("object document has no 'traceEvents' array")
+        return events
+    if isinstance(doc, list):
+        return doc
+    raise ValueError("document is neither an object nor an array")
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def validate(events):
+    """Return a list of violation strings (empty = valid)."""
+    errors = []
+    last_ts = {}  # (pid, tid) -> last seen ts
+    stacks = {}  # (pid, tid) -> open B-event name stack
+    named_pids = set()  # pids with a process_name metadata record
+    named_tids = set()  # (pid, tid) with a thread_name record
+    used_pids = {}  # pid -> first event index referencing it
+    used_tids = {}  # (pid, tid) -> first event index referencing it
+
+    for i, e in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if not isinstance(ph, str) or not ph:
+            errors.append(f"{where}: missing or non-string 'ph'")
+            continue
+        pid, tid = e.get("pid"), e.get("tid")
+        if not is_num(pid) or not is_num(tid):
+            errors.append(f"{where} (ph={ph}): missing numeric 'pid'/'tid'")
+            continue
+
+        if ph == "M":
+            which = e.get("name")
+            name = (e.get("args") or {}).get("name")
+            if which == "process_name" and isinstance(name, str):
+                named_pids.add(pid)
+            elif which == "thread_name" and isinstance(name, str):
+                named_tids.add((pid, tid))
+            continue
+
+        track = (pid, tid)
+        used_pids.setdefault(pid, i)
+        used_tids.setdefault(track, i)
+
+        ts = e.get("ts")
+        if not is_num(ts):
+            errors.append(f"{where} (ph={ph}): missing numeric 'ts'")
+            continue
+        if ts < 0:
+            errors.append(f"{where} (ph={ph}): negative ts {ts}")
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            errors.append(
+                f"{where} (ph={ph}): ts {ts} goes backwards on track "
+                f"pid={pid} tid={tid} (previous {prev})"
+            )
+        last_ts[track] = ts
+
+        name = e.get("name")
+        if ph == "B":
+            stacks.setdefault(track, []).append(name)
+        elif ph == "E":
+            stack = stacks.get(track) or []
+            if not stack:
+                errors.append(
+                    f"{where}: 'E' with no open 'B' on track pid={pid} tid={tid}"
+                )
+            elif stack[-1] != name:
+                errors.append(
+                    f"{where}: 'E' named {name!r} closes open 'B' named "
+                    f"{stack[-1]!r} on track pid={pid} tid={tid}"
+                )
+            else:
+                stack.pop()
+        elif ph == "X":
+            dur = e.get("dur")
+            if not is_num(dur):
+                errors.append(f"{where}: 'X' without numeric 'dur'")
+            elif dur < 0:
+                errors.append(f"{where}: 'X' with negative dur {dur}")
+
+    for track, stack in sorted(stacks.items()):
+        if stack:
+            errors.append(
+                f"track pid={track[0]} tid={track[1]} ends with "
+                f"{len(stack)} unclosed 'B' event(s): {stack}"
+            )
+    for pid, i in sorted(used_pids.items()):
+        if pid not in named_pids:
+            errors.append(
+                f"pid {pid} (first used by event {i}) has no "
+                "process_name metadata"
+            )
+    for (pid, tid), i in sorted(used_tids.items()):
+        if (pid, tid) not in named_tids:
+            errors.append(
+                f"track pid={pid} tid={tid} (first used by event {i}) "
+                "has no thread_name metadata"
+            )
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip().splitlines()[0])
+        print(f"usage: {argv[0]} <trace.json> [more.json ...]")
+        return 2
+    for path in argv[1:]:
+        try:
+            events = load_events(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable trace: {e}")
+            return 1
+        errors = validate(events)
+        if errors:
+            for err in errors:
+                print(f"{path}: {err}")
+            print(f"{path}: INVALID ({len(errors)} violation(s), "
+                  f"{len(events)} events)")
+            return 1
+        timed = sum(1 for e in events
+                    if isinstance(e, dict) and e.get("ph") != "M")
+        print(f"{path}: ok ({len(events)} events, {timed} timed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
