@@ -34,6 +34,11 @@ FIXED_POINT_MAX_ITERS = 64
 FIXED_POINT_TOL = 1e-9
 FIXED_POINT_DAMPING = 0.5
 
+# The fluid-vs-event TTS bound the anchor cells re-validate at
+# scale-out rank counts (the same 15 % contract fluid_props pins on
+# the 32-rank campaign grid; measured ~0.1 % on the swap-free anchors).
+ANCHOR_TTS_BOUND = 0.15
+
 
 def fleet_classes(topology, ranks, fleet, pool_link):
     """Homogeneous (count, backend) classes of the hermit tier.
@@ -373,6 +378,7 @@ def default_scale_cfg():
         "residency_slots": 4,
         "window_us": 0.0,
         "max_batch": 256,
+        "anchor_rank_counts": [64, 256],
     }
 
 
@@ -380,6 +386,7 @@ def smoke_scale_cfg():
     cfg = default_scale_cfg()
     cfg["rank_counts"] = [64, 1024]
     cfg["pool_sizes"] = [8, 64]
+    cfg["anchor_rank_counts"] = [64]
     return cfg
 
 
@@ -399,7 +406,42 @@ def run_scale_campaign(cfg):
                 crossover = pool
         rows.append({"ranks": ranks, "local": local, "pools": pools,
                      "crossover_pool": crossover})
-    return {"config": cfg, "rows": rows}
+    return {"config": cfg, "rows": rows, "anchors": []}
+
+
+def run_scale_anchors(cfg):
+    """Mirrors fluid::run_scale_anchors: for each anchor rank count the
+    coupled event-for-event engine and the fluid tier solve the same
+    swap-free pooled cell (default pool fleet, the campaign's
+    oversubscription and knobs) and the TTS pair is recorded."""
+    import campaign as cp
+    cog = cp.default_cog_cfg()
+    cog.update(timesteps=cfg["timesteps"], compute_s=cfg["compute_s"],
+               requests_per_step=cfg["requests_per_step"],
+               samples_per_request=cfg["samples_per_request"],
+               residency_slots=cfg["residency_slots"],
+               window_us=cfg["window_us"], max_batch=cfg["max_batch"])
+    anchors = []
+    for ranks in cfg["anchor_rank_counts"]:
+        ev = cp.run_cog_scenario("pooled", cfg["policy"], ranks,
+                                 cfg["models_per_rank"], 0.0, cfg["overlap"],
+                                 cfg["oversub"], cog)
+        fl = solve_cell("pooled", cfg["policy"], ranks, cfg["models_per_rank"],
+                        0.0, cfg["overlap"], cfg["oversub"], cfg)
+        anchors.append({
+            "ranks": ranks,
+            "oversub": cfg["oversub"],
+            "swap_s": 0.0,
+            "event_tts_s": ev["summary"]["time_to_solution_s"],
+            "fluid_tts_s": fl["time_to_solution_s"],
+        })
+    return anchors
+
+
+def run_scale_campaign_with_anchors(cfg):
+    result = run_scale_campaign(cfg)
+    result["anchors"] = run_scale_anchors(cfg)
+    return result
 
 
 # ------------------------------------------------------------- JSON
@@ -444,6 +486,20 @@ def scale_config_json(cfg):
         "residency_slots": float(cfg["residency_slots"]),
         "window_us": fixed3(cfg["window_us"]),
         "max_batch": float(cfg["max_batch"]),
+        "anchor_rank_counts": [float(r) for r in cfg["anchor_rank_counts"]],
+    }
+
+
+def scale_anchor_json(a):
+    err = a["fluid_tts_s"] / a["event_tts_s"] - 1.0
+    return {
+        "ranks": float(a["ranks"]),
+        "oversub": fixed3(a["oversub"]),
+        "swap_us": us(a["swap_s"]),
+        "event_tts_us": us(a["event_tts_s"]),
+        "fluid_tts_us": us(a["fluid_tts_s"]),
+        "tts_error": fixed3(err),
+        "within_bound": abs(err) <= ANCHOR_TTS_BOUND,
     }
 
 
@@ -469,4 +525,5 @@ def scale_campaign_json(result):
     return {
         "config": scale_config_json(result["config"]),
         "rows": [scale_row_json(r) for r in result["rows"]],
+        "anchors": [scale_anchor_json(a) for a in result["anchors"]],
     }

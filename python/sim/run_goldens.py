@@ -57,7 +57,7 @@ def main():
     print(f"wrote {path} ({len(doc)} bytes, {time.time() - t0:.1f}s)")
 
     t0 = time.time()
-    doc = jsonw.write(fluid.scale_campaign_json(fluid.run_scale_campaign(
+    doc = jsonw.write(fluid.scale_campaign_json(fluid.run_scale_campaign_with_anchors(
         fluid.default_scale_cfg())))
     path = os.path.join(GOLDEN, "scale_summary.json")
     with open(path, "w") as f:

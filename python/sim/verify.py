@@ -491,9 +491,12 @@ def fluid_tier():
     """The fluid tier and fitted surrogate (rust/tests/fluid_props.rs):
     the contention-free collapse, oversub/ranks monotonicity, the
     surrogate's exact/affine/clamp interpolation contract, and the
-    committed scale golden with its crossover trajectory.  The slow
-    event-engine cross-validations (the 15 %/5 % pinned bounds) ride
-    behind --full with the other cogsim-scale work."""
+    committed scale golden with its crossover trajectory and its
+    event-engine anchor cells (the golden pins the anchors, so the 64-
+    and 256-rank coupled cells run here in the fast path too).  The
+    slow grid-wide cross-validations (the 15 %/5 % pinned bounds over
+    the whole campaign) ride behind --full with the other
+    cogsim-scale work."""
     import fluid
     import surrogate as surro
 
@@ -555,11 +558,20 @@ def fluid_tier():
     ok(len(surro.Surrogate.fit(rows[:-1]).tables) == 0, "incomplete table dropped")
 
     # the scale campaign: the crossover trajectory the golden pins
-    r = fluid.run_scale_campaign(fluid.default_scale_cfg())
+    r = fluid.run_scale_campaign_with_anchors(fluid.default_scale_cfg())
     x = {row["ranks"]: row["crossover_pool"] for row in r["rows"]}
     ok(x[64] == 256 and x[256] == 512, "crossover trajectory (small machines)")
     ok(all(x[n] is None for n in (1024, 4096, 16384)),
        "node-local wins at leadership scale")
+    # the event-engine anchors: swap-free pooled cells at 64/256 ranks
+    # must hold the pinned fluid-vs-event bound beyond the 32-rank grid
+    ok([a["ranks"] for a in r["anchors"]] == [64, 256], "anchor cells present")
+    for a in r["anchors"]:
+        err = a["fluid_tts_s"] / a["event_tts_s"] - 1.0
+        ok(abs(err) <= fluid.ANCHOR_TTS_BOUND,
+           f"scale anchor r{a['ranks']}: {err:+.2%} within the 15% contract")
+        ok(abs(err) <= 0.02,
+           f"scale anchor r{a['ranks']}: {err:+.2%} near the measured ~0.1%")
     golden = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__)))), "rust", "tests", "golden")
     doc = jsonw.write(fluid.scale_campaign_json(r))

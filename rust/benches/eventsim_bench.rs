@@ -50,7 +50,13 @@ fn spec(ranks: usize) -> FabricSpec {
 /// `rec_off` attaches a disarmed flight recorder first — the
 /// `Option` checks on every hook are the recorder's entire cost when
 /// tracing is off, and this variant pins that cost at ~zero.
-fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool, rec_off: bool) -> u64 {
+fn run_event_once(
+    ranks: usize,
+    horizon_s: f64,
+    fabric: bool,
+    rec_off: bool,
+    heapq: bool,
+) -> u64 {
     let cfg = EventSimConfig { ranks, horizon_s, ..Default::default() };
     let mut sim = if fabric {
         EventSim::with_fabric(
@@ -64,6 +70,9 @@ fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool, rec_off: bool) -> 
     } else {
         EventSim::new(pool(), Policy::LeastOutstanding, cfg)
     };
+    if heapq {
+        sim.use_binary_heap_queue();
+    }
     if rec_off {
         sim.attach_disarmed_recorder();
     }
@@ -74,7 +83,13 @@ fn run_event_once(ranks: usize, horizon_s: f64, fabric: bool, rec_off: bool) -> 
 /// One measured coupled configuration: the CogSim path adds the
 /// timestep barrier, residency swaps, and (with the fabric) the
 /// weights-ready gate to every dispatch.
-fn run_cog_once(ranks: usize, timesteps: usize, fabric: bool, rec_off: bool) -> u64 {
+fn run_cog_once(
+    ranks: usize,
+    timesteps: usize,
+    fabric: bool,
+    rec_off: bool,
+    heapq: bool,
+) -> u64 {
     let cfg = CogSimConfig {
         ranks,
         timesteps,
@@ -93,6 +108,9 @@ fn run_cog_once(ranks: usize, timesteps: usize, fabric: bool, rec_off: bool) -> 
     } else {
         CogSim::new(pool(), Policy::LeastOutstanding, cfg)
     };
+    if heapq {
+        sim.use_binary_heap_queue();
+    }
     if rec_off {
         sim.attach_disarmed_recorder();
     }
@@ -132,6 +150,22 @@ fn write_doc(out: &str, meta: BTreeMap<String, Value>, results: BTreeMap<String,
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // CI "Scale smoke": one 1024-rank coupled cell under the step's
+    // wall-clock budget (the shell `timeout` is the budget; the run
+    // just has to finish).  No BENCH files are written in this mode.
+    if std::env::args().any(|a| a == "--scale-smoke") {
+        let t0 = std::time::Instant::now();
+        let events = run_cog_once(1024, 2, true, false, false);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "scale-smoke: 1024-rank cog cell, {events} events in {dt:.2}s \
+             ({:.0} events/s)",
+            events as f64 / dt
+        );
+        return;
+    }
+
     let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
 
     // ------------------------------------------------ EventSim path
@@ -147,7 +181,15 @@ fn main() {
         ("fabric_4to1_rec_off", true, true),
     ] {
         bench_into(&bencher, &mut results, "eventsim", key, || {
-            run_event_once(ranks, horizon_s, fabric, rec_off)
+            run_event_once(ranks, horizon_s, fabric, rec_off, false)
+        });
+    }
+    // 256-rank scale-out cell, ladder vs reference-heap A/B.  Fixed
+    // shape in smoke and full runs so the committed floors stay
+    // comparable; the `_heapq` twin pins the ladder's speedup.
+    for (key, heapq) in [("fabric_4to1_r256", false), ("fabric_4to1_r256_heapq", true)] {
+        bench_into(&bencher, &mut results, "eventsim", key, || {
+            run_event_once(256, 0.02, true, false, heapq)
         });
     }
     write_doc("BENCH_eventsim.json", meta, results);
@@ -166,7 +208,7 @@ fn main() {
         ("fabric_4to1_rec_off", true, true),
     ] {
         bench_into(&bencher, &mut results, "cogsim", key, || {
-            run_cog_once(cog_ranks, timesteps, fabric, rec_off)
+            run_cog_once(cog_ranks, timesteps, fabric, rec_off, false)
         });
     }
     write_doc("BENCH_cogsim.json", meta, results);

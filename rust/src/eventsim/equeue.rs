@@ -1,10 +1,10 @@
-//! The deterministic event queue: a binary heap of `(time, class,
-//! seq)` keys.  Virtual time is `f64` seconds ordered by `total_cmp`;
-//! the event *class* defines the semantics of simultaneity (at one
-//! instant: completions land, then arrivals enter, then batching
-//! windows close); the insertion sequence number breaks the remaining
-//! ties, so two runs that push the same events in the same order
-//! always pop them in the same order — the foundation of the engine's
+//! The deterministic event queue, keyed by `(time, class, seq)`.
+//! Virtual time is `f64` seconds ordered by `total_cmp`; the event
+//! *class* defines the semantics of simultaneity (at one instant:
+//! completions land, then arrivals enter, then batching windows
+//! close); the insertion sequence number breaks the remaining ties,
+//! so two runs that push the same events in the same order always pop
+//! them in the same order — the foundation of the engine's
 //! byte-stable summaries.
 //!
 //! The class tier exists for one reason: a batch-close deadline and a
@@ -15,9 +15,37 @@
 //! to be scheduled; ordering arrivals before deadlines pins the
 //! semantics — a request arriving the instant a window expires rides
 //! the closing batch (`rust/tests/eventsim_props.rs`).
+//!
+//! # Backing stores
+//!
+//! Two interchangeable backings produce the *identical* pop order:
+//!
+//! * **Ladder** (the default): a two-tier structure — an unsorted
+//!   spill (`top`) plus a sorted run (`bottom`) served from its back.
+//!   Pushes to the future are an O(1) append; pops are an O(1)
+//!   `Vec::pop`; sorting happens band-by-band only when the run
+//!   drains, so the amortized cost per event is O(1) for the
+//!   time-advancing streams a simulation produces, instead of the
+//!   heap's O(log n) sift per operation with n = every event queued
+//!   at a barrier.
+//! * **BinaryHeap** (via [`EventQueue::binary_heap`]): the reference
+//!   implementation, kept for differential testing
+//!   (`rust/tests/equeue_props.rs`) and A/B benchmarking.
+//!
+//! Because [`EventKey`]s are *strictly* totally ordered (`seq` is
+//! unique), "same pop order" is not a tie-break convention but an
+//! exact property: any backing that returns keys in ascending key
+//! order is byte-equivalent.  The ladder guarantees it through one
+//! invariant — every key in `bottom` orders before every key in
+//! `top` — maintained by routing on time alone with the boundary
+//! *inclusive* on the bottom side (`time <= bottom_max_t`): two keys
+//! can only disagree with their time ordering (via class/seq) when
+//! their times are equal, and equal times always land in the same
+//! tier, where full-key sorting settles them.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::mem;
 
 /// Same-instant tier: completions first (capacity frees before new
 /// work observes it).
@@ -28,7 +56,7 @@ pub const CLASS_ARRIVAL: u8 = 1;
 /// same-instant arrival has had the chance to join the batch.
 pub const CLASS_DEADLINE: u8 = 2;
 
-/// Heap key: event time, then same-instant class, then insertion
+/// Queue key: event time, then same-instant class, then insertion
 /// order.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EventKey {
@@ -83,9 +111,165 @@ impl<E> PartialOrd for Entry<E> {
     }
 }
 
-/// A min-heap of timestamped events with deterministic tie-breaking.
+/// Target size of one sorted bottom band.  Refill carves the earliest
+/// time band of roughly this many entries out of the spill; bands
+/// that cannot be narrowed by time (a same-instant barrier burst) are
+/// sorted wholesale — correctness never depends on the estimate.
+const SORT_CHUNK: usize = 32;
+
+/// How many drained scratch buffers to keep for reuse: refill
+/// alternates between at most two live partitions, so a small pool
+/// makes steady-state refills allocation-free.
+const SPARE_BUFFERS: usize = 4;
+
+/// The default backing: a two-tier ladder.
+///
+/// Invariant (checked in debug refills): every key in `bottom` orders
+/// strictly before every key in `top`, because `bottom` holds only
+/// times `<= bottom_max_t` and `top` only times `> bottom_max_t`.
+/// `bottom` is sorted *descending* by full key so the next event is a
+/// `Vec::pop` from the back, and a same-instant push (the common
+/// in-band case: an effect scheduled at the current instant) inserts
+/// near the back with a short memmove.
+struct Ladder<E> {
+    /// Sorted run, descending by key; pop serves from the back.
+    bottom: Vec<Entry<E>>,
+    /// Unsorted spill of strictly-later events.
+    top: Vec<Entry<E>>,
+    /// Inclusive upper time bound of the bottom tier.  Only refill
+    /// moves it (monotonically forward): it must not shrink while
+    /// `bottom` is non-empty, or an equal-time push could land in
+    /// `top` and pop after a later-class equal-time entry in
+    /// `bottom`.
+    bottom_max_t: f64,
+    /// Minimum time in `top` (`+inf` when empty); lets `peek_time`
+    /// answer without sorting.
+    top_min_t: f64,
+    /// Entry free-list: drained partition buffers, kept so refills
+    /// reuse capacity across timesteps instead of reallocating.
+    spare: Vec<Vec<Entry<E>>>,
+}
+
+impl<E> Ladder<E> {
+    fn new() -> Self {
+        Ladder {
+            bottom: Vec::new(),
+            top: Vec::new(),
+            bottom_max_t: f64::NEG_INFINITY,
+            top_min_t: f64::INFINITY,
+            spare: Vec::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.bottom.len() + self.top.len()
+    }
+
+    fn push(&mut self, key: EventKey, event: E) {
+        if key.time_s <= self.bottom_max_t {
+            // In-band: keep the sorted run sorted by full key.
+            let idx = self.bottom.partition_point(|e| e.key > key);
+            self.bottom.insert(idx, Entry { key, event });
+        } else {
+            self.top_min_t = self.top_min_t.min(key.time_s);
+            self.top.push(Entry { key, event });
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, E)> {
+        if self.bottom.is_empty() {
+            if self.top.is_empty() {
+                return None;
+            }
+            self.refill();
+        }
+        self.bottom.pop().map(|e| (e.key.time_s, e.event))
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        if let Some(e) = self.bottom.last() {
+            return Some(e.key.time_s);
+        }
+        if !self.top.is_empty() {
+            return Some(self.top_min_t);
+        }
+        None
+    }
+
+    fn grab(&mut self) -> Vec<Entry<E>> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    fn stash(&mut self, v: Vec<Entry<E>>) {
+        debug_assert!(v.is_empty());
+        if self.spare.len() < SPARE_BUFFERS {
+            self.spare.push(v);
+        }
+    }
+
+    /// Carve the earliest time band out of `top`, sort it by full
+    /// key, and serve it from `bottom`.  Splits are by *time only*;
+    /// a band that cannot be narrowed (all one instant — a barrier
+    /// burst) is sorted wholesale, so class/seq ordering within an
+    /// instant is always settled by the sort, never by a split.
+    fn refill(&mut self) {
+        debug_assert!(self.bottom.is_empty() && !self.top.is_empty());
+        let fresh = self.grab();
+        let mut chunk = mem::replace(&mut self.top, fresh);
+        self.top_min_t = f64::INFINITY;
+        while chunk.len() > SORT_CHUNK {
+            let mut min_t = f64::INFINITY;
+            let mut max_t = f64::NEG_INFINITY;
+            for e in &chunk {
+                min_t = min_t.min(e.key.time_s);
+                max_t = max_t.max(e.key.time_s);
+            }
+            if min_t == max_t {
+                // One instant: time cannot split it; sort it whole.
+                break;
+            }
+            // Aim the band at ~SORT_CHUNK entries assuming a roughly
+            // uniform spread.  If the span is so narrow the division
+            // rounds back onto min_t, keep the earliest instant only
+            // — progress is guaranteed either way because max_t
+            // always lands above the split.
+            let bands = (chunk.len() / SORT_CHUNK).max(2) as f64;
+            let split = min_t + (max_t - min_t) / bands;
+            let instant_only = !(split > min_t);
+            let mut below = self.grab();
+            for e in chunk.drain(..) {
+                let t = e.key.time_s;
+                let in_band = if instant_only { t == min_t } else { t < split };
+                if in_band {
+                    below.push(e);
+                } else {
+                    self.top_min_t = self.top_min_t.min(t);
+                    self.top.push(e);
+                }
+            }
+            self.stash(chunk);
+            chunk = below;
+        }
+        chunk.sort_unstable_by(|a, b| b.key.cmp(&a.key));
+        if let Some(first) = chunk.first() {
+            // Descending order: the first entry carries the band's
+            // latest time.  Monotone: every carved time exceeds the
+            // previous bound, so the boundary only moves forward.
+            self.bottom_max_t = first.key.time_s;
+        }
+        self.bottom.append(&mut chunk);
+        self.stash(chunk);
+    }
+}
+
+enum Backing<E> {
+    Heap(BinaryHeap<Entry<E>>),
+    Ladder(Ladder<E>),
+}
+
+/// A min-queue of timestamped events with deterministic tie-breaking.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    backing: Backing<E>,
     seq: u64,
 }
 
@@ -96,8 +280,40 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// The default ladder backing (O(1) amortized push/pop).
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        EventQueue { backing: Backing::Ladder(Ladder::new()), seq: 0 }
+    }
+
+    /// The reference `BinaryHeap` backing, kept for differential
+    /// testing and A/B benchmarking against the ladder.
+    pub fn binary_heap() -> Self {
+        EventQueue { backing: Backing::Heap(BinaryHeap::new()), seq: 0 }
+    }
+
+    /// Whether this queue runs on the reference heap backing.
+    pub fn is_binary_heap(&self) -> bool {
+        matches!(self.backing, Backing::Heap(_))
+    }
+
+    /// Swap a ladder-backed queue onto the reference heap, preserving
+    /// every queued entry's key — the pop order (and therefore every
+    /// engine output) is unchanged.  No-op on a heap-backed queue.
+    pub fn convert_to_binary_heap(&mut self) {
+        if self.is_binary_heap() {
+            return;
+        }
+        let old = mem::replace(&mut self.backing, Backing::Heap(BinaryHeap::new()));
+        if let Backing::Ladder(mut l) = old {
+            let mut heap = BinaryHeap::with_capacity(l.len());
+            for e in l.bottom.drain(..) {
+                heap.push(e);
+            }
+            for e in l.top.drain(..) {
+                heap.push(e);
+            }
+            self.backing = Backing::Heap(heap);
+        }
     }
 
     /// Schedule `event` at `time_s` (must be finite and >= 0) in the
@@ -113,25 +329,60 @@ impl<E> EventQueue<E> {
         assert!(time_s.is_finite() && time_s >= 0.0, "bad event time {time_s}");
         let key = EventKey { time_s, class, seq: self.seq };
         self.seq += 1;
-        self.heap.push(Entry { key, event });
+        match &mut self.backing {
+            Backing::Heap(h) => h.push(Entry { key, event }),
+            Backing::Ladder(l) => l.push(key, event),
+        }
     }
 
-    /// Pop the earliest event (ties in insertion order).
+    /// Pop the earliest event (ties by class, then insertion order).
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.heap.pop().map(|e| (e.key.time_s, e.event))
+        match &mut self.backing {
+            Backing::Heap(h) => h.pop().map(|e| (e.key.time_s, e.event)),
+            Backing::Ladder(l) => l.pop(),
+        }
     }
 
     /// Time of the next event without popping it.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.key.time_s)
+        match &self.backing {
+            Backing::Heap(h) => h.peek().map(|e| e.key.time_s),
+            Backing::Ladder(l) => l.peek_time(),
+        }
+    }
+
+    /// Pre-size the queue for `additional` more events (a timestep's
+    /// worth), so barrier-scale pushes never reallocate mid-burst.
+    pub fn reserve(&mut self, additional: usize) {
+        match &mut self.backing {
+            Backing::Heap(h) => h.reserve(additional),
+            Backing::Ladder(l) => l.top.reserve(additional),
+        }
+    }
+
+    /// Total entry capacity across all internal buffers, including
+    /// the refill free-list.  Exposed so tests can pin capacity reuse
+    /// across drain/refill cycles.
+    pub fn capacity(&self) -> usize {
+        match &self.backing {
+            Backing::Heap(h) => h.capacity(),
+            Backing::Ladder(l) => {
+                l.bottom.capacity()
+                    + l.top.capacity()
+                    + l.spare.iter().map(|v| v.capacity()).sum::<usize>()
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backing {
+            Backing::Heap(h) => h.len(),
+            Backing::Ladder(l) => l.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
@@ -139,41 +390,52 @@ impl<E> EventQueue<E> {
 mod tests {
     use super::*;
 
+    /// Run `case` against both backings — every ordering property
+    /// must hold identically on the ladder and the reference heap.
+    fn both(case: impl Fn(EventQueue<usize>)) {
+        case(EventQueue::new());
+        case(EventQueue::binary_heap());
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(3.0, "c");
-        q.push(1.0, "a");
-        q.push(2.0, "b");
-        assert_eq!(q.peek_time(), Some(1.0));
-        assert_eq!(q.pop(), Some((1.0, "a")));
-        assert_eq!(q.pop(), Some((2.0, "b")));
-        assert_eq!(q.pop(), Some((3.0, "c")));
-        assert_eq!(q.pop(), None);
+        for mut q in [EventQueue::new(), EventQueue::binary_heap()] {
+            q.push(3.0, "c");
+            q.push(1.0, "a");
+            q.push(2.0, "b");
+            assert_eq!(q.peek_time(), Some(1.0));
+            assert_eq!(q.pop(), Some((1.0, "a")));
+            assert_eq!(q.pop(), Some((2.0, "b")));
+            assert_eq!(q.pop(), Some((3.0, "c")));
+            assert_eq!(q.pop(), None);
+        }
     }
 
     #[test]
     fn ties_break_in_insertion_order() {
-        let mut q = EventQueue::new();
-        for i in 0..16 {
-            q.push(0.5, i);
-        }
-        let popped: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(popped, (0..16).collect::<Vec<_>>());
+        both(|mut q| {
+            for i in 0..16 {
+                q.push(0.5, i);
+            }
+            let popped: Vec<usize> =
+                std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(popped, (0..16).collect::<Vec<_>>());
+        });
     }
 
     #[test]
     fn interleaved_push_pop_stays_sorted() {
-        let mut q = EventQueue::new();
-        q.push(5.0, 5);
-        q.push(1.0, 1);
-        assert_eq!(q.pop(), Some((1.0, 1)));
-        q.push(3.0, 3);
-        q.push(2.0, 2);
-        assert_eq!(q.pop(), Some((2.0, 2)));
-        assert_eq!(q.pop(), Some((3.0, 3)));
-        assert_eq!(q.pop(), Some((5.0, 5)));
-        assert!(q.is_empty());
+        both(|mut q| {
+            q.push(5.0, 5);
+            q.push(1.0, 1);
+            assert_eq!(q.pop(), Some((1.0, 1)));
+            q.push(3.0, 3);
+            q.push(2.0, 2);
+            assert_eq!(q.pop(), Some((2.0, 2)));
+            assert_eq!(q.pop(), Some((3.0, 3)));
+            assert_eq!(q.pop(), Some((5.0, 5)));
+            assert!(q.is_empty());
+        });
     }
 
     #[test]
@@ -188,27 +450,151 @@ mod tests {
         // Adversarial insertion order: deadline first, then arrival,
         // then completion, all at t = 1.0 — they must pop by class
         // (completion, arrival, deadline), not by insertion.
-        let mut q = EventQueue::new();
-        q.push_class(1.0, CLASS_DEADLINE, "deadline");
-        q.push_class(1.0, CLASS_ARRIVAL, "arrival");
-        q.push_class(1.0, CLASS_COMPLETION, "completion");
-        q.push(0.5, "early");
-        let popped: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(popped, vec!["early", "completion", "arrival", "deadline"]);
+        for mut q in [EventQueue::new(), EventQueue::binary_heap()] {
+            q.push_class(1.0, CLASS_DEADLINE, "deadline");
+            q.push_class(1.0, CLASS_ARRIVAL, "arrival");
+            q.push_class(1.0, CLASS_COMPLETION, "completion");
+            q.push(0.5, "early");
+            let popped: Vec<&str> =
+                std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(popped, vec!["early", "completion", "arrival", "deadline"]);
+        }
     }
 
     #[test]
     fn classes_tie_break_by_seq_within_a_class() {
+        both(|mut q| {
+            for i in 0..8 {
+                q.push_class(2.0, CLASS_DEADLINE, i);
+            }
+            for i in 8..16 {
+                q.push_class(2.0, CLASS_ARRIVAL, i);
+            }
+            let popped: Vec<usize> =
+                std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            // arrivals (8..16) before deadlines (0..8), each in
+            // insertion order
+            assert_eq!(popped, (8..16).chain(0..8).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn equal_time_lower_class_push_lands_in_the_sorted_band() {
+        // The routing hazard the inclusive boundary exists for: pop
+        // once so a sorted band exists, then push a *completion* at a
+        // time already present in the band — it must pop before the
+        // band's same-instant arrivals despite its larger seq.
+        both(|mut q| {
+            for i in 0..8 {
+                q.push_class(1.0, CLASS_ARRIVAL, i);
+            }
+            q.push_class(2.0, CLASS_ARRIVAL, 100);
+            assert_eq!(q.pop(), Some((1.0, 0)));
+            q.push_class(1.0, CLASS_COMPLETION, 99);
+            assert_eq!(q.pop(), Some((1.0, 99)));
+            let rest: Vec<usize> =
+                std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(rest, vec![1, 2, 3, 4, 5, 6, 7, 100]);
+        });
+    }
+
+    #[test]
+    fn ladder_matches_heap_on_a_seeded_adversarial_stream() {
+        // Same push sequence into both backings; interleave pops so
+        // refills happen mid-stream.  Times are ns-quantised to force
+        // heavy tie traffic across all three classes.
+        let mut lad = EventQueue::new();
+        let mut heap = EventQueue::binary_heap();
+        let mut state: u64 = 0x9E3779B97F4A7C15;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut pushed = 0usize;
+        for round in 0..64 {
+            for _ in 0..(1 + (next() as usize % 48)) {
+                let t = (next() % 1_000) as f64 * 1e-9 + round as f64 * 1e-7;
+                let class = (next() % 3) as u8;
+                lad.push_class(t, class, pushed);
+                heap.push_class(t, class, pushed);
+                pushed += 1;
+            }
+            for _ in 0..(next() as usize % 24) {
+                assert_eq!(lad.peek_time(), heap.peek_time());
+                assert_eq!(lad.pop(), heap.pop());
+            }
+        }
+        loop {
+            let (a, b) = (lad.pop(), heap.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn reserve_prevents_growth_and_capacity_is_reused_across_refills() {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        q.reserve(512);
+        let cap0 = q.capacity();
+        assert!(cap0 >= 512);
+        for i in 0..512 {
+            q.push(i as f64 * 1e-6, i);
+        }
+        assert_eq!(q.capacity(), cap0, "reserved capacity must absorb the fill");
+        while q.pop().is_some() {}
+        let cap1 = q.capacity();
+        // Second cycle: the drained buffers (including the refill
+        // free-list) are reused, so an identical fill/drain cycle
+        // allocates nothing new.
+        for i in 0..512 {
+            q.push(i as f64 * 1e-6, i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.capacity(), cap1, "drain-then-refill must reuse capacity");
+    }
+
+    #[test]
+    fn drain_then_refill_keeps_exact_order() {
+        // Drain to empty, then refill with earlier times than the
+        // retired band: the ladder must still serve exact order (the
+        // in-band sorted insert path).
+        both(|mut q| {
+            for i in 0..64 {
+                q.push(1.0 + i as f64, i);
+            }
+            let first: Vec<usize> =
+                std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(first, (0..64).collect::<Vec<_>>());
+            for i in 0..64 {
+                q.push(64.0 - i as f64, i);
+            }
+            let second: Vec<usize> =
+                std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(second, (0..64).rev().collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn convert_to_binary_heap_preserves_queued_keys() {
         let mut q = EventQueue::new();
-        for i in 0..8 {
-            q.push_class(2.0, CLASS_DEADLINE, i);
+        for i in 0..40 {
+            q.push_class(((i * 7) % 10) as f64, (i % 3) as u8, i);
         }
-        for i in 8..16 {
-            q.push_class(2.0, CLASS_ARRIVAL, i);
+        // Pop a few so a sorted band exists, then convert mid-life.
+        let mut popped = vec![q.pop().unwrap(), q.pop().unwrap()];
+        q.convert_to_binary_heap();
+        assert!(q.is_binary_heap());
+        while let Some(e) = q.pop() {
+            popped.push(e);
         }
-        let popped: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        // arrivals (8..16) before deadlines (0..8), each in insertion
-        // order
-        assert_eq!(popped, (8..16).chain(0..8).collect::<Vec<_>>());
+        let mut reference = EventQueue::binary_heap();
+        for i in 0..40 {
+            reference.push_class(((i * 7) % 10) as f64, (i % 3) as u8, i);
+        }
+        let expect: Vec<(f64, usize)> =
+            std::iter::from_fn(|| reference.pop()).collect();
+        assert_eq!(popped, expect);
     }
 }

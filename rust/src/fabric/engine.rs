@@ -26,6 +26,19 @@
 //! that set actually changes.  A node-local dispatch burst of free
 //! flows starts and drains without touching the allocator at all,
 //! and the solver's scratch buffers are reused across re-solves.
+//!
+//! Re-solves are additionally *coalesced*: a mutation only marks the
+//! rate table dirty, and the actual fair-share solve runs at the next
+//! observation point (a rate query, a wake-time query, or the first
+//! progress integration over dt > 0).  A same-instant burst of N
+//! starts or cancellations with no observation in between therefore
+//! costs one solve, not N — and because the solver is a deterministic
+//! function of the final flow set, the rates any observer sees are
+//! bit-identical to the eager schedule's.  The last computed
+//! next-completion time is cached and reused only while nothing (flow
+//! set, capacities, clock) has changed; any advance over dt > 0
+//! invalidates it, since `remaining - rate·dt` re-derives the ETA in
+//! floats rather than preserving the old absolute value.
 
 use std::collections::BTreeMap;
 
@@ -56,6 +69,13 @@ pub struct FabricEngine {
     now_s: f64,
     /// Count of constrained active flows (recompute trigger).
     constrained: usize,
+    /// The rate table is stale: a constrained flow joined or left (or
+    /// capacities changed) since the last solve.  Cleared by
+    /// [`Self::ensure_rates`] at the next observation point.
+    dirty: bool,
+    /// Memoized [`Self::next_completion_s`] answer; `None` when it
+    /// must be recomputed (any mutation or any dt > 0 advance).
+    eta_cache: Option<Option<f64>>,
     /// Solver scratch, reused across recomputes.
     ws: Workspace,
     rates: Vec<f64>,
@@ -69,6 +89,8 @@ impl FabricEngine {
             next_id: 0,
             now_s: 0.0,
             constrained: 0,
+            dirty: false,
+            eta_cache: None,
             ws: Workspace::default(),
             rates: Vec::new(),
         }
@@ -84,7 +106,8 @@ impl FabricEngine {
     }
 
     /// Current fair-share rate of a flow, bytes/s.
-    pub fn rate_of(&self, id: u64) -> Option<f64> {
+    pub fn rate_of(&mut self, id: u64) -> Option<f64> {
+        self.ensure_rates();
         self.flows.get(&id).map(|f| f.rate)
     }
 
@@ -95,7 +118,8 @@ impl FabricEngine {
     /// flight recorder's sampling hook: rates only change on flow
     /// mutations, so sampling at each mutation site yields an exact
     /// piecewise-constant utilization series.
-    pub fn link_rates_into(&self, out: &mut Vec<f64>) -> usize {
+    pub fn link_rates_into(&mut self, out: &mut Vec<f64>) -> usize {
+        self.ensure_rates();
         let n = self.topo.n_links();
         out.clear();
         out.resize(n, 0.0);
@@ -113,8 +137,10 @@ impl FabricEngine {
     }
 
     /// Start a transfer of `bytes` along `path` at `now_s`; returns
-    /// the flow id.  Constrained flows trigger a fair-share re-solve;
-    /// a free-path flow (empty path, or infinite capacity everywhere
+    /// the flow id.  Constrained flows mark the rate table dirty (the
+    /// fair-share re-solve is coalesced into the next observation
+    /// point, so a same-instant dispatch burst solves once); a
+    /// free-path flow (empty path, or infinite capacity everywhere
     /// it goes) rates at infinity directly, leaving every other
     /// flow's share untouched.  A zero-byte or free-path flow
     /// completes at the very next [`Self::take_completed`].
@@ -130,19 +156,24 @@ impl FabricEngine {
         let rate = if free { f64::INFINITY } else { 0.0 };
         self.flows
             .insert(id, Flow { path, remaining: bytes, rate, constrained: !free });
+        self.eta_cache = None;
         if free {
             return id;
         }
         self.constrained += 1;
-        self.recompute();
+        self.dirty = true;
         id
     }
 
     /// Credit progress up to `t_s` at the current rates (monotone;
-    /// earlier times are a no-op).
+    /// earlier times are a no-op).  A pending re-solve is flushed
+    /// first: flows accrue progress over `[now, t_s]` at the rates
+    /// the final flow set of the previous instant solves to — the
+    /// same rates the eager schedule integrated at.
     pub fn advance_to(&mut self, t_s: f64) {
         let dt = t_s - self.now_s;
         if dt > 0.0 {
+            self.ensure_rates();
             for f in self.flows.values_mut() {
                 if f.rate.is_infinite() {
                     f.remaining = 0.0;
@@ -150,8 +181,18 @@ impl FabricEngine {
                     f.remaining = (f.remaining - f.rate * dt).max(0.0);
                 }
             }
+            self.eta_cache = None;
         }
         self.now_s = self.now_s.max(t_s);
+    }
+
+    /// Flush a deferred fair-share solve (the coalescing point: any
+    /// number of same-instant mutations collapse into this one call).
+    fn ensure_rates(&mut self) {
+        if self.dirty {
+            self.recompute();
+            self.dirty = false;
+        }
     }
 
     fn recompute(&mut self) {
@@ -161,17 +202,28 @@ impl FabricEngine {
         for (f, &r) in self.flows.values_mut().zip(&self.rates) {
             f.rate = r;
         }
+        self.eta_cache = None;
     }
 
     /// Virtual time at which the earliest active flow finishes under
     /// the current rates; `None` when idle (or when every remaining
     /// flow is stalled at a guarded 0 rate and will never finish).
-    pub fn next_completion_s(&self) -> Option<f64> {
-        self.flows
+    /// The answer is memoized: repeated queries with no intervening
+    /// mutation or advance skip the full-flow scan.
+    pub fn next_completion_s(&mut self) -> Option<f64> {
+        self.ensure_rates();
+        if let Some(cached) = self.eta_cache {
+            return cached;
+        }
+        let now = self.now_s;
+        let eta = self
+            .flows
             .values()
-            .map(|f| self.now_s + Self::eta_s(f))
+            .map(|f| now + Self::eta_s(f))
             .filter(|t| t.is_finite())
-            .min_by(f64::total_cmp)
+            .min_by(f64::total_cmp);
+        self.eta_cache = Some(eta);
+        eta
     }
 
     fn eta_s(f: &Flow) -> f64 {
@@ -192,7 +244,8 @@ impl FabricEngine {
         self.advance_to(now_s);
         self.topo.set_capacity_scale(factor);
         if self.constrained > 0 {
-            self.recompute();
+            self.dirty = true;
+            self.eta_cache = None;
         }
     }
 
@@ -205,9 +258,10 @@ impl FabricEngine {
         self.advance_to(now_s);
         match self.flows.remove(&id) {
             Some(f) => {
+                self.eta_cache = None;
                 if f.constrained {
                     self.constrained -= 1;
-                    self.recompute();
+                    self.dirty = true;
                 }
                 true
             }
@@ -218,7 +272,13 @@ impl FabricEngine {
     /// Advance to `now_s` and drain every finished flow (in id
     /// order); remaining flows' shares are re-solved only when a
     /// *constrained* flow left (free flows never held link capacity,
-    /// so their departure cannot change anyone's rate).
+    /// so their departure cannot change anyone's rate).  The re-solve
+    /// itself is deferred to the next observation, so a same-instant
+    /// completion burst costs one solve no matter how many flows
+    /// drain.  The done filter is solve-insensitive: `remaining`
+    /// depends only on (ensured) integration, and the infinite-rate
+    /// test only ever matches free flows, whose rate is set at
+    /// insertion, never by the solver.
     pub fn take_completed(&mut self, now_s: f64) -> Vec<u64> {
         self.advance_to(now_s);
         let done: Vec<u64> = self
@@ -235,8 +295,11 @@ impl FabricEngine {
             }
         }
         self.constrained -= constrained_left;
+        if !done.is_empty() {
+            self.eta_cache = None;
+        }
         if constrained_left > 0 {
-            self.recompute();
+            self.dirty = true;
         }
         done
     }
@@ -429,6 +492,33 @@ mod tests {
         let done = eng.next_completion_s().unwrap();
         assert!((done - (t + 0.75e6 / nic)).abs() < 1e-9, "{done}");
         assert_eq!(eng.take_completed(done), vec![a]);
+    }
+
+    #[test]
+    fn coalesced_burst_solves_once_and_matches_incremental_rates() {
+        // A same-instant start burst with no observation in between
+        // collapses into one deferred solve; the rates and wake time
+        // seen afterwards equal the eager per-mutation schedule's
+        // (the solver is a pure function of the final flow set).
+        let topo = pooled(4, 1, 1.0);
+        let nic = topo.link().eff_bandwidth;
+        let mut eng = FabricEngine::new(topo);
+        let ids: Vec<u64> = (0..4)
+            .map(|h| {
+                let p = eng.topology().request_path(h, 0);
+                eng.start(0.0, p, 1e6)
+            })
+            .collect();
+        for &id in &ids {
+            assert_eq!(eng.rate_of(id), Some(nic / 4.0));
+        }
+        let t = eng.next_completion_s().unwrap();
+        assert!((t - 4e6 / nic).abs() < 1e-9, "{t}");
+        // the memoized wake answer is identical on a repeated query
+        assert_eq!(eng.next_completion_s(), Some(t));
+        // all four finish together, popped in id order
+        assert_eq!(eng.take_completed(t), ids);
+        assert_eq!(eng.active(), 0);
     }
 
     #[test]

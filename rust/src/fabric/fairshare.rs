@@ -35,6 +35,13 @@ pub struct Workspace {
     frozen: Vec<bool>,
     remaining: Vec<f64>,
     users: Vec<usize>,
+    /// CSR inverted index, link -> flows crossing it, rebuilt per
+    /// solve.  Buckets list flows in flow order (one entry per path
+    /// occurrence), so the freeze pass walks only the bottleneck's
+    /// users while keeping the exact flow-order freeze contract.
+    idx_off: Vec<usize>,
+    idx_flow: Vec<usize>,
+    idx_cursor: Vec<usize>,
 }
 
 /// Max-min fair rates for `flows` over `capacities`.
@@ -91,6 +98,39 @@ pub fn max_min_rates_into<P: AsRef<[usize]>>(
         }
     }
 
+    // Inverted index over the participating flows: each filling round
+    // below freezes only the bottleneck link's users, so a burst of F
+    // flows costs O(total path incidences) per round instead of a
+    // full O(F · path) rescan.  Bucket order is flow order, which is
+    // exactly the order the old `for f in 0..n` scan froze flows in —
+    // the allocation stays bit-identical.
+    ws.idx_off.clear();
+    ws.idx_off.resize(capacities.len() + 1, 0);
+    for f in 0..n {
+        if ws.frozen[f] {
+            continue;
+        }
+        for &l in flows[f].as_ref() {
+            ws.idx_off[l + 1] += 1;
+        }
+    }
+    for l in 0..capacities.len() {
+        ws.idx_off[l + 1] += ws.idx_off[l];
+    }
+    ws.idx_flow.clear();
+    ws.idx_flow.resize(*ws.idx_off.last().unwrap_or(&0), 0);
+    ws.idx_cursor.clear();
+    ws.idx_cursor.extend_from_slice(&ws.idx_off[..capacities.len()]);
+    for f in 0..n {
+        if ws.frozen[f] {
+            continue;
+        }
+        for &l in flows[f].as_ref() {
+            ws.idx_flow[ws.idx_cursor[l]] = f;
+            ws.idx_cursor[l] += 1;
+        }
+    }
+
     let mut left = ws.frozen.iter().filter(|&&fz| !fz).count();
     while left > 0 {
         // the bottleneck: smallest fair share among loaded finite links
@@ -116,9 +156,12 @@ pub fn max_min_rates_into<P: AsRef<[usize]>>(
             }
             break;
         };
-        // freeze every unfrozen flow crossing the bottleneck
-        for f in 0..n {
-            if ws.frozen[f] || !flows[f].as_ref().contains(&link) {
+        // freeze every unfrozen flow crossing the bottleneck (bucket
+        // order == flow order; duplicate path entries revisit a flow
+        // already frozen this round and fall through the guard)
+        for i in ws.idx_off[link]..ws.idx_off[link + 1] {
+            let f = ws.idx_flow[i];
+            if ws.frozen[f] {
                 continue;
             }
             rates[f] = share;
@@ -340,5 +383,15 @@ mod tests {
     #[test]
     fn no_flows_is_fine() {
         assert!(max_min_rates(&[5.0], &[]).is_empty());
+    }
+
+    #[test]
+    fn duplicate_path_entries_keep_per_occurrence_user_counts() {
+        // a path listing the same link twice counts as two users of
+        // it (pre-index behavior the CSR freeze pass must preserve):
+        // link 0 of 12 carries occurrences [0,0] and [0] -> share
+        // 12/3 = 4 for both flows.
+        let rates = max_min_rates(&[12.0], &[vec![0, 0], vec![0]]);
+        assert_eq!(rates, vec![4.0, 4.0]);
     }
 }

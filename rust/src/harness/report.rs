@@ -15,7 +15,7 @@
 use std::collections::BTreeMap;
 
 use crate::eventsim::{ArrivalProcess, CogSummary, EventSummary};
-use crate::fluid::{FluidSummary, ScaleCampaignConfig, ScaleCampaignResult, ScaleRow};
+use crate::fluid::{FluidSummary, ScaleAnchor, ScaleCampaignConfig, ScaleCampaignResult, ScaleRow};
 use crate::util::json::Value;
 
 use super::scenario::{Grid, Topology};
@@ -711,6 +711,22 @@ fn scale_config_json(cfg: &ScaleCampaignConfig) -> Value {
     m.insert("residency_slots".to_string(), count(cfg.residency_slots as u64));
     m.insert("window_us".to_string(), fixed3(cfg.window_us));
     m.insert("max_batch".to_string(), count(cfg.max_batch as u64));
+    m.insert(
+        "anchor_rank_counts".to_string(),
+        Value::Array(cfg.anchor_rank_counts.iter().map(|&r| count(r as u64)).collect()),
+    );
+    Value::Object(m)
+}
+
+fn scale_anchor_json(a: &ScaleAnchor) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ranks".to_string(), count(a.ranks as u64));
+    m.insert("oversub".to_string(), fixed3(a.oversub));
+    m.insert("swap_us".to_string(), us(a.swap_s));
+    m.insert("event_tts_us".to_string(), us(a.event_tts_s));
+    m.insert("fluid_tts_us".to_string(), us(a.fluid_tts_s));
+    m.insert("tts_error".to_string(), fixed3(a.tts_error()));
+    m.insert("within_bound".to_string(), Value::Bool(a.within_bound()));
     Value::Object(m)
 }
 
@@ -758,14 +774,20 @@ impl ScaleCampaignResult {
             "rows".to_string(),
             Value::Array(self.rows.iter().map(scale_row_json).collect()),
         );
+        root.insert(
+            "anchors".to_string(),
+            Value::Array(self.anchors.iter().map(scale_anchor_json).collect()),
+        );
         Value::Object(root)
     }
 
     /// One aligned table per rank count: pooled TTS and speedup over
     /// the swept pool sizes, with the local baseline as the first
-    /// column.
+    /// column — plus, when the campaign ran with anchors, the
+    /// event-engine cross-check table.
     pub fn tables(&self) -> Vec<Table> {
-        self.rows
+        let mut tables: Vec<Table> = self
+            .rows
             .iter()
             .map(|row| {
                 let mut t = Table::new(
@@ -797,7 +819,28 @@ impl ScaleCampaignResult {
                 );
                 t
             })
-            .collect()
+            .collect();
+        if !self.anchors.is_empty() {
+            let mut t = Table::new(
+                "Scale anchors — event-engine cross-check (swap-free pooled cells)".to_string(),
+                "ranks",
+            );
+            t.set_x(self.anchors.iter().map(|a| a.ranks.to_string()));
+            t.add_series(
+                "event_tts_ms",
+                self.anchors.iter().map(|a| a.event_tts_s * 1e3).collect(),
+            );
+            t.add_series(
+                "fluid_tts_ms",
+                self.anchors.iter().map(|a| a.fluid_tts_s * 1e3).collect(),
+            );
+            t.add_series(
+                "error_pct",
+                self.anchors.iter().map(|a| a.tts_error() * 1e2).collect(),
+            );
+            tables.push(t);
+        }
+        tables
     }
 }
 

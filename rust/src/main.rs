@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::coordinator::{Coordinator, CoordinatorConfig, Registry};
 use cogsim_disagg::eventsim::ArrivalProcess;
-use cogsim_disagg::fluid::{run_scale_campaign, ScaleCampaignConfig};
+use cogsim_disagg::fluid::{run_scale_campaign_with_anchors, ScaleCampaignConfig};
 use cogsim_disagg::harness::{
     run_control_campaign, run_figure, run_grid_threads_full, try_run_cell_full, Axes,
     CampaignConfig, CellTiming, CogCampaignConfig, ControlCampaignConfig, ControlSpec,
@@ -822,7 +822,10 @@ fn cmd_scale(args: &Args) -> Result<()> {
         ScaleCampaignConfig::default()
     };
     let started = Instant::now();
-    let result = run_scale_campaign(&cfg);
+    // Anchors included: the event engine re-runs the swap-free pooled
+    // cells at the anchor rank counts next to the fluid solutions
+    // (seconds, not the milliseconds the fluid sweep itself takes).
+    let result = run_scale_campaign_with_anchors(&cfg);
     let elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
     for table in result.tables() {
         println!("{}", table.render());
@@ -844,7 +847,15 @@ fn cmd_scale(args: &Args) -> Result<()> {
             ),
         }
     }
-    let cells = result.rows.len() * (1 + cfg.pool_sizes.len());
+    for a in &result.anchors {
+        println!(
+            "{:>6} ranks: event-engine anchor, fluid TTS {:+.2}% vs event (bound ±{:.0}%)",
+            a.ranks,
+            a.tts_error() * 1e2,
+            cogsim_disagg::fluid::ANCHOR_TTS_BOUND * 1e2
+        );
+    }
+    let cells = result.rows.len() * (1 + cfg.pool_sizes.len()) + result.anchors.len();
     println!("{cells} cells in {elapsed_ms:.1} ms");
     Ok(())
 }

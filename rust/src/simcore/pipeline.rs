@@ -458,9 +458,9 @@ impl Pipeline {
     /// at every flow mutation site (start/finish/cancel/degrade).
     fn trace_fabric_sample(&mut self) {
         let clock = self.clock_s;
-        if let (Some(rec), Some(fab)) = (self.rec.as_deref_mut(), self.fabric.as_ref()) {
+        if let (Some(rec), Some(fab)) = (self.rec.as_deref_mut(), self.fabric.as_mut()) {
             if rec.armed() {
-                rec.fabric_sample(clock, &fab.engine);
+                rec.fabric_sample(clock, &mut fab.engine);
             }
         }
     }

@@ -395,7 +395,7 @@ impl Recorder {
     /// Sample the fabric's per-link rates (the only instants rates
     /// change are flow mutations, so calling this at each mutation
     /// site yields an exact piecewise-constant series).
-    pub fn fabric_sample(&mut self, t_s: f64, engine: &FabricEngine) {
+    pub fn fabric_sample(&mut self, t_s: f64, engine: &mut FabricEngine) {
         let mut buf = std::mem::take(&mut self.scratch);
         let constrained = engine.link_rates_into(&mut buf);
         self.integrate_to(t_s);

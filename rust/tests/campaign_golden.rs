@@ -32,7 +32,7 @@ use std::path::PathBuf;
 
 use cogsim_disagg::cluster::Policy;
 use cogsim_disagg::eventsim::ArrivalProcess;
-use cogsim_disagg::fluid::{run_scale_campaign, ScaleCampaignConfig};
+use cogsim_disagg::fluid::{run_scale_campaign_with_anchors, ScaleCampaignConfig};
 use cogsim_disagg::harness::{
     run_campaign, run_cog_campaign, run_cog_scenario, run_event_campaign, run_event_scenario,
     run_scenario_with_link, CampaignConfig, CogCampaignConfig, EventCampaignConfig, Topology,
@@ -76,7 +76,7 @@ fn cogsim_campaign_json() -> String {
 }
 
 fn scale_campaign_json() -> String {
-    json::write(&run_scale_campaign(&ScaleCampaignConfig::default()).to_json())
+    json::write(&run_scale_campaign_with_anchors(&ScaleCampaignConfig::default()).to_json())
 }
 
 /// Shared golden-file protocol: byte-compare against the committed
@@ -132,7 +132,8 @@ fn fixed_seed_cogsim_summary_is_byte_stable() {
 #[test]
 fn fixed_scale_summary_is_byte_stable() {
     // The fluid-tier scale-out golden: 40 closed-form cells to 16384
-    // ranks, regenerated byte-exactly by python/sim/run_goldens.py.
+    // ranks plus the event-engine anchor cells at 64/256 ranks,
+    // regenerated byte-exactly by python/sim/run_goldens.py.
     let a = scale_campaign_json();
     let b = scale_campaign_json();
     assert_eq!(a, b, "two identical scale runs must serialise identically");

@@ -1,0 +1,176 @@
+//! Differential properties of the ladder event queue.
+//!
+//! The ladder backing is a performance structure only: for any push
+//! stream, its pop stream must be identical — same times, same
+//! payloads, in the same order — to the reference `BinaryHeap` kept
+//! behind `EventQueue::binary_heap()`.  The adversarial streams here
+//! lean on every rule of the `(time, class, seq)` key: timestamp ties
+//! across all three same-instant classes, ns-quantised deadline grids
+//! that collide exactly, and randomized seeded pushes interleaved
+//! with pops so the ladder's bottom/top routing, band refills, and
+//! free-list reuse all get exercised against the heap.
+//!
+//! The grid test then pins the end-to-end consequence: with the
+//! ladder on the hot path of every engine, the campaign JSON is
+//! byte-identical for every workload kind at any `--threads` count.
+
+use cogsim_disagg::cluster::Policy;
+use cogsim_disagg::eventsim::equeue::{
+    EventQueue, CLASS_ARRIVAL, CLASS_COMPLETION, CLASS_DEADLINE,
+};
+use cogsim_disagg::harness::{run_grid_threads, Axes, Fleet, Grid, Kind, Knobs, Topology};
+use cogsim_disagg::util::json;
+use cogsim_disagg::util::rng::Rng;
+
+const CLASSES: [u8; 3] = [CLASS_COMPLETION, CLASS_ARRIVAL, CLASS_DEADLINE];
+
+/// Drain both queues in lockstep; every pop must agree exactly
+/// (`total_cmp` keys mean the times are bitwise-equal, so plain
+/// tuple equality is the right check).
+fn drain_lockstep(lad: &mut EventQueue<u64>, heap: &mut EventQueue<u64>, label: &str) {
+    loop {
+        let a = lad.pop();
+        let b = heap.pop();
+        assert_eq!(a, b, "{label}: ladder and heap pop streams diverged");
+        if a.is_none() {
+            return;
+        }
+    }
+}
+
+#[test]
+fn same_instant_ties_across_all_classes_pop_identically() {
+    // A barrier burst: many events share a handful of instants, with
+    // classes pushed in adversarial (reversed and shuffled) order.
+    // The ladder settles ties by sorting whole instants; the heap by
+    // sift order — both must degrade to the same (time, class, seq)
+    // total order.
+    let mut lad = EventQueue::new();
+    let mut heap = EventQueue::binary_heap();
+    let mut payload = 0u64;
+    for &t in &[0.0, 1e-9, 2.5e-3, 2.5e-3, 0.045] {
+        for &class in &[CLASS_DEADLINE, CLASS_COMPLETION, CLASS_ARRIVAL, CLASS_COMPLETION] {
+            for _ in 0..7 {
+                lad.push_class(t, class, payload);
+                heap.push_class(t, class, payload);
+                payload += 1;
+            }
+        }
+    }
+    drain_lockstep(&mut lad, &mut heap, "same-instant burst");
+}
+
+#[test]
+fn ns_quantised_deadline_grids_collide_identically() {
+    // Batch-close deadlines quantised to a 1 ns grid collide exactly
+    // with completions and arrivals quantised the same way; the pop
+    // order within each colliding nanosecond is class-then-seq.
+    let mut lad = EventQueue::new();
+    let mut heap = EventQueue::binary_heap();
+    let mut rng = Rng::new(0xde_ad11);
+    for i in 0..600u64 {
+        let ns = rng.below(50) as f64;
+        let t = ns * 1e-9;
+        let class = CLASSES[rng.below(3)];
+        lad.push_class(t, class, i);
+        heap.push_class(t, class, i);
+        // deadline exactly on the grid point of a future nanosecond
+        let d = (ns + rng.below(5) as f64) * 1e-9;
+        lad.push_class(d, CLASS_DEADLINE, 1_000_000 + i);
+        heap.push_class(d, CLASS_DEADLINE, 1_000_000 + i);
+    }
+    drain_lockstep(&mut lad, &mut heap, "ns-quantised deadlines");
+}
+
+#[test]
+fn randomized_seeded_streams_with_interleaved_pops_match() {
+    // Push/pop interleavings drive the ladder through every regime:
+    // in-band sorted inserts, top spills, multi-band refills, and
+    // drain-then-refill cycles on the spare free-list.  Times are a
+    // mix of uniform spread, quantised collisions, and same-instant
+    // re-pushes at the last popped time (an effect scheduling more
+    // work "now", the common engine pattern).
+    for seed in [1u64, 0xbeef, 0xfab5_1c3e, 42_4242] {
+        let mut lad = EventQueue::new();
+        let mut heap = EventQueue::binary_heap();
+        let mut rng = Rng::new(seed);
+        let mut now = 0.0f64;
+        let mut payload = 0u64;
+        for _ in 0..2_000 {
+            match rng.below(4) {
+                // spread push
+                0 | 1 => {
+                    let t = now + rng.uniform(0.0, 1e-3);
+                    let class = CLASSES[rng.below(3)];
+                    lad.push_class(t, class, payload);
+                    heap.push_class(t, class, payload);
+                    payload += 1;
+                }
+                // quantised push (forced ties)
+                2 => {
+                    let t = now + rng.below(8) as f64 * 1e-6;
+                    let class = CLASSES[rng.below(3)];
+                    lad.push_class(t, class, payload);
+                    heap.push_class(t, class, payload);
+                    payload += 1;
+                }
+                // pop, then schedule a same-instant follow-up
+                _ => {
+                    let a = lad.pop();
+                    let b = heap.pop();
+                    assert_eq!(a, b, "seed {seed:#x}: interleaved pop diverged");
+                    if let Some((t, _)) = a {
+                        now = t;
+                        if rng.below(2) == 0 {
+                            lad.push_class(now, CLASS_COMPLETION, payload);
+                            heap.push_class(now, CLASS_COMPLETION, payload);
+                            payload += 1;
+                        }
+                    }
+                }
+            }
+            assert_eq!(lad.len(), heap.len(), "seed {seed:#x}: lengths diverged");
+            assert_eq!(
+                lad.peek_time(),
+                heap.peek_time(),
+                "seed {seed:#x}: peek_time diverged"
+            );
+        }
+        drain_lockstep(&mut lad, &mut heap, "randomized stream tail");
+    }
+}
+
+/// One grid covering every engine kind on a mixed fleet behind a
+/// pooled fabric — the same shape the default campaign sweeps, with
+/// the ladder queue on every hot path.
+fn every_kind_grid() -> Grid {
+    Grid {
+        axes: Axes {
+            kinds: Kind::ALL.to_vec(),
+            topologies: vec![Topology::Pooled],
+            fleets: vec![Fleet::Mixed { gpus: 2, rdus: 1 }],
+            policies: vec![Policy::LatencyAware],
+            rank_counts: vec![4, 8],
+            fabric_oversubs: vec![1.0],
+            ..Axes::default()
+        },
+        knobs: Knobs { timesteps: 3, horizon_s: 0.05, ..Knobs::default() },
+    }
+}
+
+#[test]
+fn full_grid_byte_identity_across_thread_counts() {
+    // --threads is a performance knob, never a results knob: the
+    // campaign JSON for all workload kinds must be byte-identical at
+    // 1, 2, 8, and 0 (all cores) workers with the ladder queue in
+    // every engine.
+    let grid = every_kind_grid();
+    let reference = json::write(&run_grid_threads(&grid, 1).to_json());
+    for threads in [2, 8, 0] {
+        let candidate = json::write(&run_grid_threads(&grid, threads).to_json());
+        assert_eq!(
+            reference, candidate,
+            "--threads {threads} changed the campaign JSON"
+        );
+    }
+}

@@ -73,7 +73,7 @@ fn incremental_fabric_matches_from_scratch_solves() {
     let mut live: Vec<(u64, Vec<usize>)> = Vec::new();
     let mut now = 0.0_f64;
 
-    let check = |eng: &FabricEngine, live: &[(u64, Vec<usize>)]| {
+    let check = |eng: &mut FabricEngine, live: &[(u64, Vec<usize>)]| {
         let paths: Vec<&[usize]> = live.iter().map(|(_, p)| p.as_slice()).collect();
         let scratch = max_min_rates(&caps, &paths);
         for ((id, path), want) in live.iter().zip(&scratch) {
@@ -109,7 +109,7 @@ fn incremental_fabric_matches_from_scratch_solves() {
                 live.remove(pos);
             }
         }
-        check(&eng, &live);
+        check(&mut eng, &live);
         // the armed wake-up time must be reproducible too
         if let Some(t) = eng.next_completion_s() {
             assert!(t.is_finite() && t >= now, "step {step}: bad wake {t}");
